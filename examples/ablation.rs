@@ -1,0 +1,102 @@
+//! Ablation study (DESIGN.md A1/A2): which parts of Algorithm 1's score
+//! actually matter, on every paper experiment plus a synthetic pool.
+//!
+//! Varies one score component at a time and reports the simulated
+//! makespan and its percentile in the full permutation space.
+//!
+//! Run with: `cargo run --release --example ablation`
+
+use kreorder::gpu::GpuSpec;
+use kreorder::perm::sweep;
+use kreorder::sched::{reorder_with, RoundOrder, ScoreConfig};
+use kreorder::sim::simulate_order;
+use kreorder::workloads::{all_experiments, synthetic_workload};
+
+fn configs() -> Vec<(&'static str, ScoreConfig)> {
+    vec![
+        ("full (default)", ScoreConfig::default()),
+        ("paper-strict", ScoreConfig::paper_strict()),
+        (
+            "resources-only",
+            ScoreConfig {
+                ratio_balance: false,
+                ..ScoreConfig::default()
+            },
+        ),
+        (
+            "ratio-only",
+            ScoreConfig {
+                resource_balance: false,
+                ..ScoreConfig::default()
+            },
+        ),
+        (
+            "no-opposing-gate",
+            ScoreConfig {
+                opposing_gate: false,
+                ..ScoreConfig::default()
+            },
+        ),
+        (
+            "no-shm-sort",
+            ScoreConfig {
+                shm_sort: false,
+                ..ScoreConfig::default()
+            },
+        ),
+        (
+            "rounds-shm-desc",
+            ScoreConfig {
+                round_order: RoundOrder::ShmDesc,
+                ..ScoreConfig::default()
+            },
+        ),
+    ]
+}
+
+fn main() {
+    let gpu = GpuSpec::gtx580();
+    let cfgs = configs();
+
+    // Header.
+    print!("| Workload |");
+    for (name, _) in &cfgs {
+        print!(" {name} |");
+    }
+    println!();
+    print!("|---|");
+    for _ in &cfgs {
+        print!("---|");
+    }
+    println!();
+
+    // Paper experiments: report makespan + percentile (sweep once each).
+    for e in all_experiments() {
+        let sw = sweep(&gpu, &e.kernels);
+        print!("| {} |", e.name);
+        for (_, cfg) in &cfgs {
+            let order = reorder_with(&gpu, &e.kernels, cfg).order;
+            let t = simulate_order(&gpu, &e.kernels, &order).makespan_ms;
+            print!(" {:.1} ({:.0}%) |", t, sw.percentile_rank(t));
+        }
+        println!();
+    }
+
+    // Synthetic pool: mean makespan over many seeds (no sweep — 8! each
+    // would be slow across 50 seeds; makespan comparison suffices).
+    let seeds: Vec<u64> = (0..50).collect();
+    print!("| synthetic-8 (mean of {} seeds) |", seeds.len());
+    for (_, cfg) in &cfgs {
+        let mean: f64 = seeds
+            .iter()
+            .map(|&s| {
+                let ks = synthetic_workload(&gpu, 8, s);
+                let order = reorder_with(&gpu, &ks, cfg).order;
+                simulate_order(&gpu, &ks, &order).makespan_ms
+            })
+            .sum::<f64>()
+            / seeds.len() as f64;
+        print!(" {mean:.1} |");
+    }
+    println!();
+}

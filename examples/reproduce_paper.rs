@@ -1,0 +1,95 @@
+//! End-to-end reproduction of the paper's evaluation: regenerates every
+//! row of Table 3 and both panels of Fig. 1, writing the CSV artifacts
+//! alongside a markdown report.
+//!
+//! Run with: `cargo run --release --example reproduce_paper [out_dir]`
+//!
+//! Outputs (in `out_dir`, default `.`):
+//!   * `table3.md` / `table3.csv` — the six-experiment comparison table
+//!   * `fig1_ranking.csv`         — sorted makespans of all 40 320
+//!     EpBsEsSw-8 launch orders (Fig. 1 top panel)
+//!   * `fig1_distribution.csv`    — histogram of the same (bottom panel)
+
+use kreorder::gpu::GpuSpec;
+use kreorder::metrics::{ExperimentRow, Histogram, Table3};
+use kreorder::perm::sweep;
+use kreorder::sched::reorder;
+use kreorder::sim::simulate_order;
+use kreorder::workloads::all_experiments;
+
+/// Paper values for side-by-side comparison (Table 3 of the paper):
+/// (name, optimal, worst, algorithm, percentile, speedup, deviation%).
+const PAPER: [(&str, f64, f64, f64, f64, f64, f64); 6] = [
+    ("EP-6-shm", 140.46, 249.15, 146.38, 91.5, 1.702, 4.21),
+    ("EP-6-grid", 123.39, 156.03, 123.45, 96.3, 1.264, 0.049),
+    ("BS-6-blk", 699.29, 1699.04, 702.29, 96.5, 2.419, 0.43),
+    ("EpBs-6", 100.03, 167.47, 100.20, 96.1, 1.671, 0.17),
+    ("EpBs-6-shm", 251.90, 311.79, 251.95, 99.4, 1.238, 0.02),
+    ("EpBsEsSw-8", 109.21, 597.43, 115.23, 94.8, 5.185, 5.51),
+];
+
+fn main() {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| ".".into());
+    std::fs::create_dir_all(&out_dir).expect("create out_dir");
+    let gpu = GpuSpec::gtx580();
+    let mut table = Table3::default();
+
+    println!("== Table 3 ==");
+    for e in all_experiments() {
+        let n_perms: usize = (1..=e.kernels.len()).product();
+        eprintln!("  {} ({} permutations)…", e.name, n_perms);
+        let sw = sweep(&gpu, &e.kernels);
+        let sched = reorder(&gpu, &e.kernels);
+        let t_alg = simulate_order(&gpu, &e.kernels, &sched.order).makespan_ms;
+        let row = ExperimentRow {
+            name: e.name.to_string(),
+            optimal_ms: sw.best_ms,
+            worst_ms: sw.worst_ms,
+            algorithm_ms: t_alg,
+            percentile: sw.percentile_rank(t_alg),
+            n_perms: sw.n_perms,
+        };
+        let paper = PAPER.iter().find(|p| p.0 == e.name).unwrap();
+        println!(
+            "  {:<12} ours: pct {:>5.1}% spdup {:>5.3} dev {:>6.2}%   paper: pct {:>5.1}% spdup {:>5.3} dev {:>5.2}%",
+            e.name,
+            row.percentile,
+            row.speedup_over_worst(),
+            row.deviation_from_optimal_pct(),
+            paper.4,
+            paper.5,
+            paper.6,
+        );
+        table.push(row);
+
+        // Fig. 1 comes from the EpBsEsSw-8 sweep we just ran.
+        if e.id == "epbsessw-8" {
+            let sorted = sw.sorted_times();
+            let mut ranking = String::from("rank,makespan_ms\n");
+            for (i, t) in sorted.iter().enumerate() {
+                ranking.push_str(&format!("{},{:.6}\n", i + 1, t));
+            }
+            std::fs::write(format!("{out_dir}/fig1_ranking.csv"), ranking).unwrap();
+            let hist = Histogram::build(&sw.times, 60);
+            std::fs::write(format!("{out_dir}/fig1_distribution.csv"), hist.to_csv()).unwrap();
+
+            let median = sw.median_ms();
+            println!("\n== Fig. 1 (EpBsEsSw-8) ==");
+            println!("  permutations: {}", sw.n_perms);
+            println!("  algorithm percentile: {:.1}%", sw.percentile_rank(t_alg));
+            println!(
+                "  gain over median random choice: {:.1}% (paper: 16.1%)",
+                (median - t_alg) / median * 100.0
+            );
+            println!(
+                "  speedup over worst: {:.3}x (paper: 5.185x)",
+                sw.worst_ms / t_alg
+            );
+        }
+    }
+
+    std::fs::write(format!("{out_dir}/table3.md"), table.to_markdown()).unwrap();
+    std::fs::write(format!("{out_dir}/table3.csv"), table.to_csv()).unwrap();
+    println!("\nwrote {out_dir}/table3.md, table3.csv, fig1_ranking.csv, fig1_distribution.csv");
+    println!("\n{}", table.to_markdown());
+}

@@ -1,0 +1,98 @@
+"""AOT compile path: lower every L2 variant to HLO *text* + profiles.json.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo and README.md gotchas.
+
+profiles.json plays the role of the paper's CUDA-profiler pass: per kernel it
+records flops, bytes accessed, and the instructions/bytes ratio R_i that
+Algorithm 1 consumes, derived from XLA's HLO cost analysis of the lowered
+module (our stand-in for `#inst / 4*(stores + L1 global-load misses)`).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import variants
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def cost_profile(lowered) -> dict:
+    """XLA cost analysis -> the paper's per-kernel profile quantities."""
+    ca = lowered.compile().cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    transcendentals = float(ca.get("transcendentals", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    # Weight transcendentals like the SFU-heavy instructions they are on real
+    # hardware (a GTX580 SFU op retires ~4x slower than an FMA).
+    inst = flops + 4.0 * transcendentals
+    # Paper: R_i = #inst / (4 * (#global stores + #L1 global-load misses)).
+    # XLA reports bytes, i.e. 4 bytes per 32-bit transaction -> the paper's
+    # denominator is exactly `bytes accessed` for f32 data.
+    ratio = inst / byts if byts > 0 else 0.0
+    return {
+        "flops": flops,
+        "transcendentals": transcendentals,
+        "bytes_accessed": byts,
+        "instructions": inst,
+        "ratio": ratio,
+    }
+
+
+def build(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"format": 1, "variants": {}}
+    for v in variants():
+        lowered = jax.jit(v.fn).lower(*v.in_specs)
+        text = to_hlo_text(lowered)
+        hlo_path = out_dir / f"{v.name}.hlo.txt"
+        hlo_path.write_text(text)
+        prof = cost_profile(lowered)
+        manifest["variants"][v.name] = {
+            "app": v.app,
+            "description": v.description,
+            "hlo": hlo_path.name,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": s.dtype.name} for s in v.in_specs
+            ],
+            "profile": prof,
+        }
+        print(
+            f"  {v.name}: {len(text)} chars, "
+            f"inst={prof['instructions']:.3g} bytes={prof['bytes_accessed']:.3g} "
+            f"R={prof['ratio']:.3f}"
+        )
+    (out_dir / "profiles.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    print(f"AOT-compiling {len(variants())} variants -> {out_dir}")
+    build(out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

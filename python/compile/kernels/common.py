@@ -1,0 +1,63 @@
+"""Shared numerical helpers used by both the Pallas kernels and the pure-jnp
+reference oracles.
+
+Everything here is plain jnp so it can be called from inside a Pallas kernel
+body (interpret=True executes kernel bodies with regular JAX ops) as well as
+from ref implementations.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Cumulative normal distribution (Abramowitz & Stegun 26.2.17), the classic
+# polynomial approximation used by the CUDA SDK BlackScholes sample the paper
+# benchmarks. Max absolute error ~7.5e-8 — comfortably inside our test rtol.
+# ---------------------------------------------------------------------------
+
+_A1 = 0.31938153
+_A2 = -0.356563782
+_A3 = 1.781477937
+_A4 = -1.821255978
+_A5 = 1.330274429
+_RSQRT2PI = 0.39894228040143267794  # 1/sqrt(2*pi)
+
+
+def cnd(d: jnp.ndarray) -> jnp.ndarray:
+    """Cumulative normal distribution Phi(d) for float32 arrays."""
+    k = 1.0 / (1.0 + 0.2316419 * jnp.abs(d))
+    poly = k * (_A1 + k * (_A2 + k * (_A3 + k * (_A4 + k * _A5))))
+    w = _RSQRT2PI * jnp.exp(-0.5 * d * d) * poly
+    return jnp.where(d > 0, 1.0 - w, w)
+
+
+# ---------------------------------------------------------------------------
+# NPB-EP style pseudo-random uniforms. The real NPB uses a 48-bit linear
+# congruential generator; we reproduce the same structure with a 32-bit-safe
+# split LCG that is deterministic and identical between kernel and oracle.
+# ---------------------------------------------------------------------------
+
+# numpy scalars (not jnp arrays): Pallas kernel bodies may not close over
+# jnp constant arrays, but np scalar operands fold into the computation.
+
+
+def lcg_uniform(seed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Deterministic uniforms in (-1, 1), shape (n,), from integer seeds.
+
+    seed: uint32 array broadcastable to (n,) — callers pass
+    ``seed0 + arange(n)`` so every element gets an independent stream.
+    Uses the murmur3 finalizer so consecutive seeds are decorrelated (a raw
+    LCG leaves x/y streams linearly dependent and skews the EP acceptance
+    rate away from pi/4).
+    """
+    s = seed.astype(jnp.uint32)
+    s = s ^ (s >> np.uint32(16))
+    s = s * np.uint32(0x85EBCA6B)
+    s = s ^ (s >> np.uint32(13))
+    s = s * np.uint32(0xC2B2AE35)
+    s = s ^ (s >> np.uint32(16))
+    # Map the top 24 bits to (0,1) then to (-1,1).
+    u = (s >> np.uint32(8)).astype(jnp.float32) * np.float32(1.0 / 16777216.0)
+    return 2.0 * u - 1.0

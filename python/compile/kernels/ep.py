@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: NPB EP (Embarrassingly Parallel) core.
+
+The paper uses NAS Parallel Benchmarks EP (M=24) as its memory-bound exemplar
+(R_ep = 3.11 < R_B). EP generates pairs of uniform deviates, applies the
+Marsaglia polar acceptance test, produces Gaussian pairs, and tallies them
+into ten square annuli while accumulating the coordinate sums.
+
+Hardware adaptation (CUDA -> Pallas/TPU): the CUDA version assigns one
+thread per sample and reduces per-block partial tallies in shared memory.
+Here the grid iterates over contiguous sample tiles (BlockSpec carries the
+HBM->VMEM schedule that threadblock tiling provided), each tile is processed
+as a vector on the lane dimension, and the partial tallies are accumulated
+into a single output block across grid steps — the Pallas idiom for a
+shared-memory tree reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import lcg_uniform
+
+N_BINS = 10
+# Output layout: [0:N_BINS] annulus counts, [N_BINS] = sum X, [N_BINS+1] = sum Y,
+# [N_BINS+2] = number of accepted pairs.
+OUT_LEN = N_BINS + 3
+
+
+def _ep_kernel(seed_ref, o_ref, *, tile: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros((OUT_LEN,), jnp.float32)
+
+    seeds = seed_ref[...]
+    x = lcg_uniform(seeds, tile)
+    y = lcg_uniform(seeds + np.uint32(0x9E3779B9), tile)
+
+    t = x * x + y * y
+    accept = (t <= 1.0) & (t > 0.0)
+    # Guard the log against t==0 / rejected lanes.
+    t_safe = jnp.where(accept, t, 0.5)
+    factor = jnp.sqrt(-2.0 * jnp.log(t_safe) / t_safe)
+    gx = jnp.where(accept, x * factor, 0.0)
+    gy = jnp.where(accept, y * factor, 0.0)
+
+    mag = jnp.maximum(jnp.abs(gx), jnp.abs(gy))
+    annulus = jnp.clip(mag.astype(jnp.int32), 0, N_BINS - 1)
+    onehot = (annulus[:, None] == jnp.arange(N_BINS)[None, :]) & accept[:, None]
+    counts = jnp.sum(onehot.astype(jnp.float32), axis=0)
+
+    partial = jnp.concatenate(
+        [
+            counts,
+            jnp.sum(gx, keepdims=True),
+            jnp.sum(gy, keepdims=True),
+            jnp.sum(accept.astype(jnp.float32), keepdims=True),
+        ]
+    )
+    o_ref[...] = o_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def ep(seeds: jnp.ndarray, *, tile: int = 2048) -> jnp.ndarray:
+    """Run the EP tally over ``seeds`` (uint32, shape (n,), n % tile == 0).
+
+    Returns float32[OUT_LEN]: ten annulus counts, sum of Gaussian Xs, sum of
+    Gaussian Ys, and the accepted-pair count.
+    """
+    n = seeds.shape[0]
+    assert n % tile == 0, f"n={n} must be a multiple of tile={tile}"
+    grid = n // tile
+    return pl.pallas_call(
+        functools.partial(_ep_kernel, tile=tile),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((OUT_LEN,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((OUT_LEN,), jnp.float32),
+        interpret=True,
+    )(seeds)

@@ -1,0 +1,87 @@
+"""Pure-jnp / numpy reference oracles for every L1 Pallas kernel.
+
+These are written independently of the kernels (no pallas, no tiling, plain
+dense math; the Smith-Waterman oracle is a literal python-loop DP) and serve
+as the CORE correctness signal: pytest asserts allclose between each kernel
+and its oracle across hypothesis-generated shapes and seeds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import cnd, lcg_uniform
+from .blackscholes import RISKFREE, VOLATILITY
+from .electrostatics import SOFTENING
+from .ep import N_BINS
+from . import smith_waterman as sw_mod
+
+
+def ep_ref(seeds: jnp.ndarray) -> jnp.ndarray:
+    """Dense (untiled) EP tally — same math as kernels.ep, no pallas."""
+    n = seeds.shape[0]
+    x = lcg_uniform(seeds, n)
+    y = lcg_uniform(seeds + jnp.uint32(0x9E3779B9), n)
+    t = x * x + y * y
+    accept = (t <= 1.0) & (t > 0.0)
+    t_safe = jnp.where(accept, t, 0.5)
+    factor = jnp.sqrt(-2.0 * jnp.log(t_safe) / t_safe)
+    gx = jnp.where(accept, x * factor, 0.0)
+    gy = jnp.where(accept, y * factor, 0.0)
+    mag = jnp.maximum(jnp.abs(gx), jnp.abs(gy))
+    annulus = np.clip(np.asarray(mag, dtype=np.int64), 0, N_BINS - 1)
+    acc_np = np.asarray(accept)
+    counts = np.bincount(annulus[acc_np], minlength=N_BINS).astype(np.float32)
+    return jnp.concatenate(
+        [
+            jnp.asarray(counts),
+            jnp.sum(gx, keepdims=True),
+            jnp.sum(gy, keepdims=True),
+            jnp.sum(accept.astype(jnp.float32), keepdims=True),
+        ]
+    )
+
+
+def blackscholes_ref(s, x, t):
+    """Dense Black-Scholes call/put prices."""
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / x) + (RISKFREE + 0.5 * VOLATILITY**2) * t) / (
+        VOLATILITY * sqrt_t
+    )
+    d2 = d1 - VOLATILITY * sqrt_t
+    exp_rt = jnp.exp(-RISKFREE * t)
+    call = s * cnd(d1) - x * exp_rt * cnd(d2)
+    put = x * exp_rt * (1.0 - cnd(d2)) - s * (1.0 - cnd(d1))
+    return call, put
+
+
+def electrostatics_ref(points, atoms):
+    """O(n_points * n_atoms) dense Coulomb sum."""
+    d = points[:, None, :] - atoms[None, :, :3]
+    r2 = jnp.sum(d * d, axis=-1) + SOFTENING
+    return jnp.sum(atoms[None, :, 3] / jnp.sqrt(r2), axis=1)
+
+
+def smith_waterman_ref(q: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """Literal python-loop Smith-Waterman DP (the textbook recurrence)."""
+    q = np.asarray(q)
+    d = np.asarray(d)
+    batch, lq = q.shape
+    ld = d.shape[1]
+    out = np.zeros(batch, dtype=np.float32)
+    for b in range(batch):
+        h = np.zeros((lq + 1, ld + 1), dtype=np.float32)
+        best = 0.0
+        for i in range(1, lq + 1):
+            for j in range(1, ld + 1):
+                s = sw_mod.MATCH if q[b, i - 1] == d[b, j - 1] else sw_mod.MISMATCH
+                h[i, j] = max(
+                    0.0,
+                    h[i - 1, j - 1] + s,
+                    h[i - 1, j] - sw_mod.GAP,
+                    h[i, j - 1] - sw_mod.GAP,
+                )
+                best = max(best, h[i, j])
+        out[b] = best
+    return out

@@ -1,0 +1,168 @@
+"""L2: JAX workload graphs over the L1 Pallas kernels, plus the variant
+registry consumed by aot.py.
+
+Each *variant* is one AOT artifact: a jitted function at a fixed problem
+size, lowered once to HLO text and executed from the Rust coordinator via
+PJRT. The four applications are the ones the paper benchmarks (NPB EP,
+BlackScholes, VMD Electrostatics, Smith-Waterman); sizes are scaled to be
+CPU-friendly (the GTX580-scale occupancy parameters live in the Rust
+workload definitions, see DESIGN.md §2).
+
+Input conventions (mirrored by rust/src/runtime/inputs.rs — keep in sync):
+every variant takes deterministic inputs derived from a single uint32 seed
+so the Rust side can generate bit-identical literals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.blackscholes import blackscholes
+from .kernels.electrostatics import electrostatics
+from .kernels.ep import ep
+from .kernels.smith_waterman import smith_waterman
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT artifact: name, callable, and its example input specs."""
+
+    name: str
+    app: str  # ep | blackscholes | electrostatics | smith_waterman
+    fn: Callable
+    in_specs: Sequence[jax.ShapeDtypeStruct]
+    # Human description recorded into profiles.json.
+    description: str
+
+
+# ---------------------------------------------------------------------------
+# Workload graphs. Each takes raw integer seeds / index arrays so that both
+# python tests and the rust runtime can construct inputs trivially.
+# ---------------------------------------------------------------------------
+
+
+def ep_workload(seeds: jnp.ndarray) -> jnp.ndarray:
+    """NPB-EP tally over a seed vector."""
+    return ep(seeds)
+
+
+def blackscholes_workload(idx: jnp.ndarray):
+    """Price n options with deterministically generated market parameters.
+
+    idx: uint32[n] (element index + seed); parameters are synthesized
+    in-graph so the artifact needs only one tiny input.
+    """
+    u = (idx.astype(jnp.float32) * 0.6180339887) % 1.0  # golden-ratio hash
+    v = (idx.astype(jnp.float32) * 0.7548776662) % 1.0
+    w = (idx.astype(jnp.float32) * 0.5698402910) % 1.0
+    s = 5.0 + 25.0 * u  # spot in [5, 30)
+    x = 1.0 + 99.0 * v  # strike in [1, 100)
+    t = 0.25 + 9.75 * w  # expiry in [0.25, 10)
+    call, put = blackscholes(s, x, t)
+    return call, put
+
+
+def electrostatics_workload(point_seed: jnp.ndarray, atom_seed: jnp.ndarray):
+    """Potential lattice from synthesized atom cloud.
+
+    point_seed: uint32[n_points], atom_seed: uint32[n_atoms]; coordinates
+    are hashed from the seeds in-graph.
+    """
+
+    def coords(seed, scale):
+        f = seed.astype(jnp.float32)
+        return jnp.stack(
+            [
+                (f * 0.6180339887) % 1.0 * scale,
+                (f * 0.7548776662) % 1.0 * scale,
+                (f * 0.5698402910) % 1.0 * scale,
+            ],
+            axis=1,
+        )
+
+    points = coords(point_seed, 16.0)
+    axyz = coords(atom_seed * jnp.uint32(2654435761), 16.0)
+    q = ((atom_seed.astype(jnp.float32) * 0.3819660113) % 1.0) * 2.0 - 1.0
+    atoms = jnp.concatenate([axyz, q[:, None]], axis=1)
+    return electrostatics(points, atoms)
+
+
+def smith_waterman_workload(q_tok: jnp.ndarray, d_tok: jnp.ndarray):
+    """Batched local-alignment scores over token-id matrices."""
+    return smith_waterman(q_tok, d_tok)
+
+
+# ---------------------------------------------------------------------------
+# Variant registry: the set of artifacts `make artifacts` builds. Sizes are
+# chosen so a single execution is ~0.5-5 ms on CPU — large enough that the
+# serving example measures real compute, small enough for fast test cycles.
+# ---------------------------------------------------------------------------
+
+U32 = jnp.uint32
+I32 = jnp.int32
+SW_LQ = 48
+SW_LD = 48
+
+
+def variants() -> list[Variant]:
+    return [
+        Variant(
+            name="ep_16k",
+            app="ep",
+            fn=ep_workload,
+            in_specs=[jax.ShapeDtypeStruct((16384,), U32)],
+            description="NPB EP tally, 16384 Gaussian-pair candidates",
+        ),
+        Variant(
+            name="ep_64k",
+            app="ep",
+            fn=ep_workload,
+            in_specs=[jax.ShapeDtypeStruct((65536,), U32)],
+            description="NPB EP tally, 65536 Gaussian-pair candidates",
+        ),
+        Variant(
+            name="blackscholes_16k",
+            app="blackscholes",
+            fn=blackscholes_workload,
+            in_specs=[jax.ShapeDtypeStruct((16384,), U32)],
+            description="BlackScholes, 16384 European options",
+        ),
+        Variant(
+            name="blackscholes_64k",
+            app="blackscholes",
+            fn=blackscholes_workload,
+            in_specs=[jax.ShapeDtypeStruct((65536,), U32)],
+            description="BlackScholes, 65536 European options",
+        ),
+        Variant(
+            name="electrostatics_1kx512",
+            app="electrostatics",
+            fn=electrostatics_workload,
+            in_specs=[
+                jax.ShapeDtypeStruct((1024,), U32),
+                jax.ShapeDtypeStruct((512,), U32),
+            ],
+            description="Direct Coulomb sum, 1024 grid points x 512 atoms",
+        ),
+        Variant(
+            name="smith_waterman_64x48",
+            app="smith_waterman",
+            fn=smith_waterman_workload,
+            in_specs=[
+                jax.ShapeDtypeStruct((64, SW_LQ), I32),
+                jax.ShapeDtypeStruct((64, SW_LD), I32),
+            ],
+            description="Smith-Waterman scoring, 64 pairs of length 48",
+        ),
+    ]
+
+
+def variant_by_name(name: str) -> Variant:
+    for v in variants():
+        if v.name == name:
+            return v
+    raise KeyError(name)

@@ -1,0 +1,139 @@
+"""AOT path tests: artifacts build, HLO text parses, profiles are sane,
+and the L2 workload graphs match direct kernel composition.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.fixture(scope="module")
+def manifest(tmp_path_factory):
+    """Build all artifacts once into a temp dir (keeps the real artifacts/
+    directory owned by `make artifacts`)."""
+    out = tmp_path_factory.mktemp("artifacts")
+    return aot.build(out), out
+
+
+class TestRegistry:
+    def test_variant_names_unique(self):
+        names = [v.name for v in model.variants()]
+        assert len(names) == len(set(names))
+
+    def test_all_apps_covered(self):
+        apps = {v.app for v in model.variants()}
+        assert apps == {"ep", "blackscholes", "electrostatics", "smith_waterman"}
+
+    def test_variant_by_name(self):
+        v = model.variant_by_name("ep_16k")
+        assert v.app == "ep"
+        with pytest.raises(KeyError):
+            model.variant_by_name("nope")
+
+
+class TestAotBuild:
+    def test_every_variant_has_artifact(self, manifest):
+        m, out = manifest
+        for name, entry in m["variants"].items():
+            hlo = out / entry["hlo"]
+            assert hlo.exists(), name
+            text = hlo.read_text()
+            assert text.startswith("HloModule"), f"{name} not HLO text"
+            assert "ENTRY" in text
+
+    def test_profiles_json_written(self, manifest):
+        m, out = manifest
+        on_disk = json.loads((out / "profiles.json").read_text())
+        assert on_disk == m
+
+    def test_profile_quantities_positive(self, manifest):
+        m, _ = manifest
+        for name, entry in m["variants"].items():
+            p = entry["profile"]
+            assert p["instructions"] > 0, name
+            assert p["bytes_accessed"] > 0, name
+            assert p["ratio"] > 0, name
+
+    def test_compute_vs_memory_bound_ordering(self, manifest):
+        """BlackScholes must profile as more compute-bound than EP — the
+        paper's central workload contrast (R_bs=11.1 > R_B > R_ep=3.11)."""
+        m, _ = manifest
+        r = {e["app"]: e["profile"]["ratio"] for e in m["variants"].values()}
+        assert r["blackscholes"] > r["ep"]
+        # ES (n^2 compute over n data) is the most compute-bound of all.
+        assert r["electrostatics"] > r["blackscholes"]
+
+    def test_input_specs_recorded(self, manifest):
+        m, _ = manifest
+        ep_entry = m["variants"]["ep_16k"]
+        assert ep_entry["inputs"] == [{"shape": [16384], "dtype": "uint32"}]
+
+
+class TestWorkloadGraphs:
+    """The L2 graphs (what actually lowers to HLO) vs oracle math."""
+
+    def test_ep_workload(self):
+        seeds = jnp.arange(2048, dtype=jnp.uint32)
+        np.testing.assert_allclose(
+            model.ep_workload(seeds), ref.ep_ref(seeds), rtol=1e-5, atol=1e-3
+        )
+
+    def test_blackscholes_workload_finite(self):
+        idx = jnp.arange(2048, dtype=jnp.uint32)
+        call, put = model.blackscholes_workload(idx)
+        assert np.isfinite(np.asarray(call)).all()
+        assert np.isfinite(np.asarray(put)).all()
+        assert (np.asarray(call) >= -1e-3).all()
+
+    def test_electrostatics_workload_matches_ref(self):
+        ps = jnp.arange(256, dtype=jnp.uint32)
+        as_ = jnp.arange(128, dtype=jnp.uint32)
+        got = model.electrostatics_workload(ps, as_)
+
+        # Rebuild the same synthesized geometry and check against the oracle.
+        def coords(seed, scale):
+            f = np.asarray(seed, np.float32)
+            return np.stack(
+                [
+                    (f * 0.6180339887) % 1.0 * scale,
+                    (f * 0.7548776662) % 1.0 * scale,
+                    (f * 0.5698402910) % 1.0 * scale,
+                ],
+                axis=1,
+            )
+
+        points = coords(ps, 16.0)
+        axyz = coords(np.asarray(as_) * np.uint32(2654435761), 16.0)
+        q = ((np.asarray(as_, np.float32) * 0.3819660113) % 1.0) * 2.0 - 1.0
+        atoms = np.concatenate([axyz, q[:, None]], axis=1).astype(np.float32)
+        want = ref.electrostatics_ref(jnp.asarray(points), jnp.asarray(atoms))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_sw_workload_roundtrip(self):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.integers(0, 4, (32, 12)).astype(np.int32))
+        d = jnp.asarray(rng.integers(0, 4, (32, 12)).astype(np.int32))
+        got = model.smith_waterman_workload(q, d)
+        np.testing.assert_allclose(got, ref.smith_waterman_ref(q, d))
+
+
+class TestHloTextInterchange:
+    def test_hlo_text_reparses_via_xla_client(self, manifest):
+        """The text we ship must be accepted by an HLO parser (the same
+        grammar the rust side's HloModuleProto::from_text_file uses)."""
+        _, out = manifest
+        from jax._src.lib import xla_client as xc
+
+        for hlo in out.glob("*.hlo.txt"):
+            # mlir->computation->text->computation roundtrip: re-parse text.
+            comp = xc._xla.hlo_module_from_text(hlo.read_text())
+            assert comp is not None

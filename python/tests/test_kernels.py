@@ -1,0 +1,234 @@
+"""L1 correctness: every Pallas kernel vs its pure ref.py oracle.
+
+Hypothesis sweeps shapes and seeds; fixed-size smoke tests pin the exact
+variant sizes that aot.py ships.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.blackscholes import blackscholes
+from compile.kernels.electrostatics import electrostatics
+from compile.kernels.ep import ep, OUT_LEN, N_BINS
+from compile.kernels.smith_waterman import smith_waterman
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# EP
+# ---------------------------------------------------------------------------
+
+
+class TestEp:
+    def test_matches_ref_fixed(self):
+        seeds = jnp.arange(16384, dtype=jnp.uint32)
+        got = ep(seeds)
+        want = ref.ep_ref(seeds)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        ntiles=st.integers(1, 8),
+        tile=st.sampled_from([128, 256, 512]),
+        seed0=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, ntiles, tile, seed0):
+        n = ntiles * tile
+        seeds = jnp.uint32(seed0) + jnp.arange(n, dtype=jnp.uint32)
+        got = ep(seeds, tile=tile)
+        want = ref.ep_ref(seeds)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+    def test_output_shape_and_invariants(self):
+        seeds = jnp.arange(2048, dtype=jnp.uint32)
+        out = ep(seeds)
+        assert out.shape == (OUT_LEN,)
+        counts, accepted = out[:N_BINS], out[N_BINS + 2]
+        # Every accepted pair lands in exactly one annulus.
+        assert float(jnp.sum(counts)) == pytest.approx(float(accepted))
+        # Marsaglia acceptance rate is ~pi/4.
+        assert 0.7 < float(accepted) / 2048 < 0.87
+
+    def test_tile_decomposition_invariance(self):
+        seeds = jnp.arange(4096, dtype=jnp.uint32)
+        a = ep(seeds, tile=512)
+        b = ep(seeds, tile=2048)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-2)
+
+    def test_deterministic(self):
+        seeds = jnp.arange(2048, dtype=jnp.uint32) + jnp.uint32(7)
+        np.testing.assert_array_equal(ep(seeds), ep(seeds))
+
+
+# ---------------------------------------------------------------------------
+# BlackScholes
+# ---------------------------------------------------------------------------
+
+
+def _bs_inputs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.uniform(5.0, 30.0, n).astype(np.float32))
+    x = jnp.asarray(rng.uniform(1.0, 100.0, n).astype(np.float32))
+    t = jnp.asarray(rng.uniform(0.25, 10.0, n).astype(np.float32))
+    return s, x, t
+
+
+class TestBlackScholes:
+    def test_matches_ref_fixed(self):
+        s, x, t = _bs_inputs(16384)
+        call, put = blackscholes(s, x, t)
+        call_w, put_w = ref.blackscholes_ref(s, x, t)
+        np.testing.assert_allclose(call, call_w, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(put, put_w, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        ntiles=st.integers(1, 6),
+        tile=st.sampled_from([128, 512, 1024]),
+        seed=st.integers(0, 1000),
+    )
+    def test_matches_ref_hypothesis(self, ntiles, tile, seed):
+        s, x, t = _bs_inputs(ntiles * tile, seed)
+        call, put = blackscholes(s, x, t, tile=tile)
+        call_w, put_w = ref.blackscholes_ref(s, x, t)
+        np.testing.assert_allclose(call, call_w, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(put, put_w, rtol=1e-5, atol=1e-5)
+
+    def test_put_call_parity(self):
+        from compile.kernels.blackscholes import RISKFREE
+
+        s, x, t = _bs_inputs(4096, seed=3)
+        call, put = blackscholes(s, x, t)
+        parity = np.asarray(call) - np.asarray(put)
+        want = np.asarray(s) - np.asarray(x) * np.exp(-RISKFREE * np.asarray(t))
+        np.testing.assert_allclose(parity, want, rtol=2e-4, atol=2e-3)
+
+    def test_call_price_bounds(self):
+        s, x, t = _bs_inputs(4096, seed=5)
+        call, _ = blackscholes(s, x, t)
+        c = np.asarray(call)
+        assert (c >= -1e-3).all()
+        assert (c <= np.asarray(s) + 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# Electrostatics
+# ---------------------------------------------------------------------------
+
+
+def _es_inputs(n_points, n_atoms, seed=0):
+    rng = np.random.default_rng(seed)
+    points = jnp.asarray(rng.uniform(0, 16, (n_points, 3)).astype(np.float32))
+    atoms = jnp.asarray(
+        np.concatenate(
+            [
+                rng.uniform(0, 16, (n_atoms, 3)),
+                rng.uniform(-1, 1, (n_atoms, 1)),
+            ],
+            axis=1,
+        ).astype(np.float32)
+    )
+    return points, atoms
+
+
+class TestElectrostatics:
+    def test_matches_ref_fixed(self):
+        points, atoms = _es_inputs(1024, 512)
+        got = electrostatics(points, atoms)
+        want = ref.electrostatics_ref(points, atoms)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        pt=st.sampled_from([64, 128, 256]),
+        np_tiles=st.integers(1, 4),
+        at=st.sampled_from([32, 64, 128]),
+        na_tiles=st.integers(1, 4),
+        seed=st.integers(0, 1000),
+    )
+    def test_matches_ref_hypothesis(self, pt, np_tiles, at, na_tiles, seed):
+        points, atoms = _es_inputs(pt * np_tiles, at * na_tiles, seed)
+        got = electrostatics(points, atoms, tile_points=pt, tile_atoms=at)
+        want = ref.electrostatics_ref(points, atoms)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_superposition_linearity(self):
+        """Potential of union == sum of potentials (atom-tile accumulation)."""
+        points, atoms = _es_inputs(128, 128, seed=9)
+        a1, a2 = atoms[:64], atoms[64:]
+        whole = electrostatics(points, atoms, tile_points=128, tile_atoms=64)
+        parts = ref.electrostatics_ref(points, a1) + ref.electrostatics_ref(
+            points, a2
+        )
+        np.testing.assert_allclose(whole, parts, rtol=1e-4, atol=1e-3)
+
+    def test_charge_sign(self):
+        """A single positive charge yields positive potential everywhere."""
+        points, _ = _es_inputs(64, 1, seed=1)
+        atom = jnp.asarray([[8.0, 8.0, 8.0, 1.0]], dtype=jnp.float32)
+        pot = ref.electrostatics_ref(points, atom)
+        assert (np.asarray(pot) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Smith-Waterman
+# ---------------------------------------------------------------------------
+
+
+def _sw_inputs(batch, lq, ld, seed=0, alphabet=4):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, alphabet, (batch, lq)).astype(np.int32))
+    d = jnp.asarray(rng.integers(0, alphabet, (batch, ld)).astype(np.int32))
+    return q, d
+
+
+class TestSmithWaterman:
+    def test_matches_ref_fixed(self):
+        q, d = _sw_inputs(32, 24, 24)
+        got = smith_waterman(q, d, tile=32)
+        want = ref.smith_waterman_ref(q, d)
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        tiles=st.integers(1, 2),
+        tile=st.sampled_from([8, 16]),
+        lq=st.integers(1, 20),
+        ld=st.integers(1, 20),
+        seed=st.integers(0, 1000),
+    )
+    def test_matches_ref_hypothesis(self, tiles, tile, lq, ld, seed):
+        q, d = _sw_inputs(tiles * tile, lq, ld, seed)
+        got = smith_waterman(q, d, tile=tile)
+        want = ref.smith_waterman_ref(q, d)
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    def test_identical_sequences_score(self):
+        """Aligning a sequence against itself scores len * MATCH."""
+        from compile.kernels.smith_waterman import MATCH
+
+        q = jnp.asarray(np.tile(np.arange(16, dtype=np.int32), (8, 1)))
+        got = smith_waterman(q, q, tile=8)
+        np.testing.assert_allclose(got, np.full(8, 16 * MATCH, np.float32))
+
+    def test_disjoint_alphabets_score_zero(self):
+        q = jnp.zeros((8, 12), jnp.int32)
+        d = jnp.ones((8, 12), jnp.int32)
+        got = smith_waterman(q, d, tile=8)
+        np.testing.assert_allclose(got, np.zeros(8, np.float32))
+
+    def test_substring_found(self):
+        """A planted exact substring is recovered with full score."""
+        from compile.kernels.smith_waterman import MATCH
+
+        rng = np.random.default_rng(4)
+        q = rng.integers(10, 20, (8, 10)).astype(np.int32)  # alphabet 10..19
+        d = rng.integers(20, 30, (8, 30)).astype(np.int32)  # alphabet 20..29
+        d[:, 7:17] = q  # plant the query
+        got = smith_waterman(jnp.asarray(q), jnp.asarray(d), tile=8)
+        np.testing.assert_allclose(got, np.full(8, 10 * MATCH, np.float32))

@@ -1,0 +1,127 @@
+//! Bench: ablation studies for the design choices DESIGN.md calls out.
+//!
+//! * A1 — score components (resource leftover / ratio balance / opposing
+//!   gate) toggled one at a time.
+//! * A2 — intra-round shm-descending sort on/off, and across-round
+//!   sequencing policies.
+//! * A3 — fluid simulator vs the paper's analytic round model: how well
+//!   does round count predict simulated makespan?
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use kreorder::gpu::GpuSpec;
+use kreorder::perm::sweep;
+use kreorder::sched::{reorder_with, RoundOrder, ScoreConfig};
+use kreorder::sim::{rounds::pack_rounds, simulate_order};
+use kreorder::workloads::{all_experiments, synthetic_workload};
+
+fn main() {
+    let gpu = GpuSpec::gtx580();
+
+    let configs: Vec<(&str, ScoreConfig)> = vec![
+        ("full", ScoreConfig::default()),
+        ("paper-strict", ScoreConfig::paper_strict()),
+        ("resources-only", ScoreConfig { ratio_balance: false, ..ScoreConfig::default() }),
+        ("ratio-only", ScoreConfig { resource_balance: false, ..ScoreConfig::default() }),
+        ("no-opposing-gate", ScoreConfig { opposing_gate: false, ..ScoreConfig::default() }),
+        ("no-shm-sort", ScoreConfig { shm_sort: false, ..ScoreConfig::default() }),
+        ("rounds-shm-desc", ScoreConfig { round_order: RoundOrder::ShmDesc, ..ScoreConfig::default() }),
+    ];
+
+    harness::section("A1/A2: score-component ablation (makespan ms, percentile in sweep)");
+    print!("{:<14}", "experiment");
+    for (name, _) in &configs {
+        print!(" | {name:>16}");
+    }
+    println!();
+    for e in all_experiments() {
+        let sw = sweep(&gpu, &e.kernels);
+        print!("{:<14}", e.id);
+        for (_, cfg) in &configs {
+            let order = reorder_with(&gpu, &e.kernels, cfg).order;
+            let t = simulate_order(&gpu, &e.kernels, &order).makespan_ms;
+            print!(" | {:>8.1} {:>5.1}%", t, sw.percentile_rank(t));
+        }
+        println!();
+    }
+
+    harness::section("A1 aggregate over 100 synthetic 8-kernel workloads (mean makespan)");
+    for (name, cfg) in &configs {
+        let mean: f64 = (0..100)
+            .map(|s| {
+                let ks = synthetic_workload(&gpu, 8, s);
+                let order = reorder_with(&gpu, &ks, cfg).order;
+                simulate_order(&gpu, &ks, &order).makespan_ms
+            })
+            .sum::<f64>()
+            / 100.0;
+        println!("  {name:<18} {mean:>9.2} ms");
+    }
+
+    harness::section("A3: analytic round model vs fluid simulator (rank correlation)");
+    // For each experiment, Spearman correlation between analytic round
+    // count and simulated makespan across 200 random orders.
+    for e in all_experiments() {
+        let n = e.kernels.len();
+        let mut rng = kreorder::util::SplitMix64::new(42);
+        let mut pairs: Vec<(f64, f64)> = Vec::new();
+        for _ in 0..200 {
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            let rounds = pack_rounds(&gpu, &e.kernels, &order).len() as f64;
+            let t = simulate_order(&gpu, &e.kernels, &order).makespan_ms;
+            pairs.push((rounds, t));
+        }
+        println!(
+            "  {:<14} spearman(rounds, makespan) = {:+.3}",
+            e.id,
+            spearman(&pairs)
+        );
+    }
+
+    harness::section("ablation config cost (reorder latency)");
+    let ks = synthetic_workload(&gpu, 8, 11);
+    let samples = harness::sample_count(50);
+    for (name, cfg) in &configs {
+        harness::bench(&format!("ablate/{name}"), 10, samples, || {
+            std::hint::black_box(reorder_with(&gpu, &ks, cfg));
+        });
+    }
+}
+
+/// Spearman rank correlation of (x, y) pairs.
+fn spearman(pairs: &[(f64, f64)]) -> f64 {
+    let n = pairs.len();
+    let rank = |vals: Vec<f64>| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+        let mut r = vec![0.0; n];
+        let mut i = 0;
+        while i < n {
+            // average ranks over ties
+            let mut j = i;
+            while j + 1 < n && vals[idx[j + 1]] == vals[idx[i]] {
+                j += 1;
+            }
+            let avg = (i + j) as f64 / 2.0;
+            for k in i..=j {
+                r[idx[k]] = avg;
+            }
+            i = j + 1;
+        }
+        r
+    };
+    let rx = rank(pairs.iter().map(|p| p.0).collect());
+    let ry = rank(pairs.iter().map(|p| p.1).collect());
+    let mx = rx.iter().sum::<f64>() / n as f64;
+    let my = ry.iter().sum::<f64>() / n as f64;
+    let cov: f64 = rx.iter().zip(&ry).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let vx: f64 = rx.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let vy: f64 = ry.iter().map(|b| (b - my) * (b - my)).sum();
+    if vx == 0.0 || vy == 0.0 {
+        0.0
+    } else {
+        cov / (vx * vy).sqrt()
+    }
+}

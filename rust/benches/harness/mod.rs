@@ -1,0 +1,50 @@
+//! Minimal criterion-style bench harness (the offline environment ships
+//! no criterion): warmup, fixed sample count, mean/median/stddev/min
+//! report lines, and a `--quick` mode for CI.
+//!
+//! Each bench target is `harness = false` and drives this module from
+//! `main()`.
+
+use std::time::Instant;
+
+/// Samples per measurement (halved by `--quick`).
+pub fn sample_count(default: usize) -> usize {
+    if std::env::args().any(|a| a == "--quick") {
+        (default / 4).max(3)
+    } else {
+        default
+    }
+}
+
+/// Measure `f` `samples` times after `warmup` unmeasured runs; print a
+/// criterion-like summary line and return the per-run mean in ms.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times_ms = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    times_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times_ms.iter().sum::<f64>() / samples as f64;
+    let median = times_ms[samples / 2];
+    let min = times_ms[0];
+    let var = times_ms
+        .iter()
+        .map(|t| (t - mean) * (t - mean))
+        .sum::<f64>()
+        / samples.max(2).saturating_sub(1) as f64;
+    println!(
+        "bench {name:<44} mean {mean:>10.3} ms  median {median:>10.3} ms  min {min:>10.3} ms  stddev {:>8.3} ms  (n={samples})",
+        var.sqrt()
+    );
+    mean
+}
+
+/// Pretty section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,38 @@
+//! Bench: Algorithm 1 latency — the coordinator runs this per batch on
+//! the request path, so it must stay well under a millisecond at serving
+//! window sizes (target: < 100 µs for 8 kernels).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use kreorder::gpu::GpuSpec;
+use kreorder::sched::{reorder, Policy};
+use kreorder::workloads::{all_experiments, synthetic_workload};
+
+fn main() {
+    let gpu = GpuSpec::gtx580();
+    let samples = harness::sample_count(50);
+
+    harness::section("Algorithm 1 on the paper experiments");
+    for e in all_experiments() {
+        harness::bench(&format!("sched/{}", e.id), 10, samples, || {
+            std::hint::black_box(reorder(&gpu, &e.kernels));
+        });
+    }
+
+    harness::section("Algorithm 1 scaling (synthetic workloads)");
+    for n in [4usize, 8, 16, 32, 64, 128] {
+        let ks = synthetic_workload(&gpu, n, 3);
+        harness::bench(&format!("sched/synthetic_{n}"), 5, samples, || {
+            std::hint::black_box(reorder(&gpu, &ks));
+        });
+    }
+
+    harness::section("baseline policies (8 kernels)");
+    let ks = synthetic_workload(&gpu, 8, 5);
+    for p in [Policy::Fifo, Policy::Reverse, Policy::Random(1), Policy::Algorithm1] {
+        harness::bench(&format!("policy/{p}"), 10, samples, || {
+            std::hint::black_box(p.order(&gpu, &ks));
+        });
+    }
+}

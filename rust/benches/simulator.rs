@@ -1,0 +1,48 @@
+//! Bench: the event-driven simulator micro-benchmarks — the inner loop
+//! of every permutation sweep, and the primary optimization target of
+//! the perf pass (EXPERIMENTS.md §Perf).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use kreorder::gpu::GpuSpec;
+use kreorder::sim::simulate_order;
+use kreorder::workloads::{all_experiments, synthetic_workload};
+
+fn main() {
+    let gpu = GpuSpec::gtx580();
+    let samples = harness::sample_count(40);
+
+    harness::section("simulator: single-order makespan evaluation");
+    for e in all_experiments() {
+        let order: Vec<usize> = (0..e.kernels.len()).collect();
+        let blocks: u32 = e.kernels.iter().map(|k| k.n_blocks).sum();
+        let mean = harness::bench(
+            &format!("sim/{} ({} blocks)", e.id, blocks),
+            5,
+            samples,
+            || {
+                std::hint::black_box(simulate_order(&gpu, &e.kernels, &order));
+            },
+        );
+        println!(
+            "    -> {:.2} Msim-blocks/s",
+            blocks as f64 / mean / 1e3
+        );
+    }
+
+    harness::section("simulator: scaling with workload size (synthetic)");
+    for n in [4usize, 8, 16, 32, 64] {
+        let ks = synthetic_workload(&gpu, n, 7);
+        let order: Vec<usize> = (0..n).collect();
+        let blocks: u32 = ks.iter().map(|k| k.n_blocks).sum();
+        harness::bench(
+            &format!("sim/synthetic_{n} kernels ({blocks} blocks)"),
+            3,
+            samples,
+            || {
+                std::hint::black_box(simulate_order(&gpu, &ks, &order));
+            },
+        );
+    }
+}

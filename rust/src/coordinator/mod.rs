@@ -1,0 +1,27 @@
+//! The launch coordinator — the deployable system around Algorithm 1.
+//!
+//! A CUDA application (or, here, a request stream) submits kernel launches
+//! in arrival order. The coordinator batches them in a *reorder window*,
+//! derives a launch order with the configured [`crate::sched::Policy`]
+//! (Algorithm 1 by default), and dispatches the batch:
+//!
+//! * **simulated GPU** — every batch is timed on the [`crate::sim`]
+//!   GTX580 model under both FIFO and the chosen order (the paper's
+//!   before/after comparison, reported per batch);
+//! * **real payloads** — when constructed with artifacts, each kernel's
+//!   AOT-compiled HLO is actually executed on the PJRT CPU client in the
+//!   reordered sequence, so the service produces real numerics end to end
+//!   (Python never runs on this path).
+//!
+//! Threading: one worker thread owns the PJRT runtime (the underlying C
+//! handles are not `Send`), fed by an MPSC submission queue; responses
+//! travel over per-request channels. This is the std-library analogue of
+//! the usual tokio actor shape.
+
+mod service;
+mod stats;
+
+pub use service::{
+    BatchReport, Coordinator, CoordinatorConfig, LaunchHandle, LaunchRequest, LaunchResponse,
+};
+pub use stats::ServiceStats;

@@ -1,0 +1,464 @@
+//! Coordinator service: submission queue, reorder window, dual dispatch.
+
+use super::stats::ServiceStats;
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::runtime::Runtime;
+use crate::sched::Policy;
+use crate::sim;
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Simulated GPU model (defaults to the paper's GTX580).
+    pub gpu: GpuSpec,
+    /// Launch-order policy applied to each batch.
+    pub policy: Policy,
+    /// Reorder window: max launches batched together.
+    pub window: usize,
+    /// How long the batcher waits for more work once a batch has started
+    /// filling (the "linger", as in serving systems).
+    pub linger: Duration,
+    /// Artifacts directory for real PJRT execution; `None` = simulate
+    /// timing only (no payload execution).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            gpu: GpuSpec::gtx580(),
+            policy: Policy::Algorithm1,
+            window: 8,
+            linger: Duration::from_millis(2),
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// One kernel-launch request.
+#[derive(Debug, Clone)]
+pub struct LaunchRequest {
+    /// Caller-assigned id, echoed in the response.
+    pub id: u64,
+    /// Static profile (occupancy + ratio) used for scheduling and
+    /// simulation.
+    pub profile: KernelProfile,
+    /// Seed for deterministic input synthesis of the real payload.
+    pub seed: u64,
+}
+
+/// The coordinator's answer to one launch.
+#[derive(Debug, Clone)]
+pub struct LaunchResponse {
+    pub id: u64,
+    /// Numeric fingerprint of the real output (`NaN` when running
+    /// simulation-only).
+    pub checksum: f64,
+    /// Wall-clock PJRT execution time of this kernel (0 when
+    /// simulation-only).
+    pub exec_wall_ms: f64,
+    /// Time from submission to response.
+    pub latency_ms: f64,
+    /// Which batch served this request and at what position of the
+    /// reordered launch sequence.
+    pub batch_id: u64,
+    pub position: usize,
+}
+
+/// Per-batch accounting (the serving example prints these).
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub batch_id: u64,
+    pub n: usize,
+    /// Positions into the batch, in reordered launch order.
+    pub order: Vec<usize>,
+    /// Simulated GTX580 makespan under FIFO (arrival) order.
+    pub sim_fifo_ms: f64,
+    /// Simulated makespan under the applied policy order.
+    pub sim_policy_ms: f64,
+    /// Wall-clock time to execute the whole batch's real payloads.
+    pub exec_wall_ms: f64,
+}
+
+/// Handle for one submitted launch; resolves to the response.
+pub struct LaunchHandle {
+    rx: Receiver<LaunchResponse>,
+}
+
+impl LaunchHandle {
+    /// Block until the coordinator answers.
+    pub fn wait(self) -> Result<LaunchResponse> {
+        Ok(self.rx.recv()?)
+    }
+
+    /// Block with a timeout.
+    pub fn wait_timeout(self, d: Duration) -> Result<LaunchResponse> {
+        Ok(self.rx.recv_timeout(d)?)
+    }
+}
+
+enum Msg {
+    Launch(LaunchRequest, Sender<LaunchResponse>, Instant),
+    /// Close the current batch immediately.
+    Flush,
+    Shutdown,
+}
+
+/// The coordinator service. See module docs.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<(Vec<BatchReport>, ServiceStats)>>,
+}
+
+impl Coordinator {
+    /// Start the service. When `cfg.artifacts_dir` is set, the worker
+    /// thread loads the PJRT runtime before accepting work (an error at
+    /// first use surfaces through the response channel).
+    pub fn start(cfg: CoordinatorConfig) -> Coordinator {
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::spawn(move || worker_loop(cfg, rx));
+        Coordinator {
+            tx,
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit a launch; returns a handle resolving to its response.
+    pub fn submit(&self, req: LaunchRequest) -> LaunchHandle {
+        let (tx, rx) = channel();
+        // Worker outlives all submissions (it only exits on Shutdown).
+        let _ = self.tx.send(Msg::Launch(req, tx, Instant::now()));
+        LaunchHandle { rx }
+    }
+
+    /// Force the current batch to close regardless of the window.
+    pub fn flush(&self) {
+        let _ = self.tx.send(Msg::Flush);
+    }
+
+    /// Stop the service, returning every batch report and the aggregate
+    /// service statistics.
+    pub fn shutdown(mut self) -> (Vec<BatchReport>, ServiceStats) {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.worker
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .expect("worker panicked")
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = self.tx.send(Msg::Shutdown);
+            let _ = w.join();
+        }
+    }
+}
+
+struct Pending {
+    req: LaunchRequest,
+    reply: Sender<LaunchResponse>,
+    submitted: Instant,
+}
+
+fn worker_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>) -> (Vec<BatchReport>, ServiceStats) {
+    // The PJRT runtime must live on this thread (its handles are !Send).
+    let runtime: Option<Runtime> = cfg.artifacts_dir.as_ref().map(|dir| {
+        Runtime::new(
+            crate::profile::ArtifactStore::load(dir).expect("artifacts load"),
+        )
+        .expect("PJRT client")
+    });
+
+    let mut reports = Vec::new();
+    let mut stats = ServiceStats::default();
+    let mut batch_id = 0u64;
+
+    'outer: loop {
+        // Block for the first request of the next batch.
+        let first = match rx.recv() {
+            Ok(Msg::Launch(r, tx, t)) => Pending {
+                req: r,
+                reply: tx,
+                submitted: t,
+            },
+            Ok(Msg::Flush) => continue,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        let mut batch = vec![first];
+
+        // Fill the window, lingering for stragglers.
+        let deadline = Instant::now() + cfg.linger;
+        while batch.len() < cfg.window {
+            let now = Instant::now();
+            let Some(remaining) = deadline.checked_duration_since(now) else {
+                break;
+            };
+            match rx.recv_timeout(remaining) {
+                Ok(Msg::Launch(r, tx, t)) => batch.push(Pending {
+                    req: r,
+                    reply: tx,
+                    submitted: t,
+                }),
+                Ok(Msg::Flush) => break,
+                Ok(Msg::Shutdown) => {
+                    process_batch(&cfg, runtime.as_ref(), batch, batch_id, &mut reports, &mut stats);
+                    break 'outer;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    process_batch(&cfg, runtime.as_ref(), batch, batch_id, &mut reports, &mut stats);
+                    break 'outer;
+                }
+            }
+        }
+
+        process_batch(&cfg, runtime.as_ref(), batch, batch_id, &mut reports, &mut stats);
+        batch_id += 1;
+    }
+
+    (reports, stats)
+}
+
+fn process_batch(
+    cfg: &CoordinatorConfig,
+    runtime: Option<&Runtime>,
+    batch: Vec<Pending>,
+    batch_id: u64,
+    reports: &mut Vec<BatchReport>,
+    stats: &mut ServiceStats,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let profiles: Vec<KernelProfile> = batch.iter().map(|p| p.req.profile.clone()).collect();
+
+    // Reorder. Fall back to FIFO if the workload fails validation (the
+    // simulator cannot time it, and reordering guarantees nothing).
+    let order = if sim::validate_workload(&cfg.gpu, &profiles).is_ok() {
+        cfg.policy.order(&cfg.gpu, &profiles)
+    } else {
+        (0..profiles.len()).collect()
+    };
+
+    // Simulated GPU comparison (only meaningful for valid workloads).
+    let (sim_fifo_ms, sim_policy_ms) = if sim::validate_workload(&cfg.gpu, &profiles).is_ok() {
+        (
+            sim::simulate_fifo(&cfg.gpu, &profiles).makespan_ms,
+            sim::simulate_order(&cfg.gpu, &profiles, &order).makespan_ms,
+        )
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+
+    // Execute real payloads in the reordered sequence.
+    let t_batch = Instant::now();
+    for (position, &bi) in order.iter().enumerate() {
+        let pending = &batch[bi];
+        let (checksum, exec_wall_ms) = match runtime {
+            None => (f64::NAN, 0.0),
+            Some(rt) => match rt.execute(&pending.req.profile.artifact, pending.req.seed) {
+                Ok(out) => (out.checksum(), out.wall_ms),
+                Err(e) => {
+                    // Failure injection path: report the error through the
+                    // response (checksum = -inf sentinel) and keep serving.
+                    eprintln!("kernel {} failed: {e:#}", pending.req.profile.name);
+                    (f64::NEG_INFINITY, 0.0)
+                }
+            },
+        };
+        let resp = LaunchResponse {
+            id: pending.req.id,
+            checksum,
+            exec_wall_ms,
+            latency_ms: pending.submitted.elapsed().as_secs_f64() * 1e3,
+            batch_id,
+            position,
+        };
+        stats.record_response(&resp);
+        let _ = pending.reply.send(resp);
+    }
+    let exec_wall_ms = t_batch.elapsed().as_secs_f64() * 1e3;
+
+    let report = BatchReport {
+        batch_id,
+        n: batch.len(),
+        order,
+        sim_fifo_ms,
+        sim_policy_ms,
+        exec_wall_ms,
+    };
+    stats.record_batch(&report);
+    reports.push(report);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::AppKind;
+
+    fn profile(name: &str, warps: u32, ratio: f64) -> KernelProfile {
+        KernelProfile {
+            name: name.into(),
+            app: AppKind::Synthetic,
+            n_blocks: 16,
+            regs_per_block: 512,
+            shmem_per_block: 0,
+            warps_per_block: warps,
+            ratio,
+            work_per_block: 500.0,
+            artifact: "unused".into(),
+        }
+    }
+
+    fn sim_only_cfg(window: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            window,
+            linger: Duration::from_millis(20),
+            artifacts_dir: None,
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn every_request_answered_exactly_once() {
+        let c = Coordinator::start(sim_only_cfg(4));
+        let handles: Vec<_> = (0..10)
+            .map(|i| {
+                c.submit(LaunchRequest {
+                    id: i,
+                    profile: profile(&format!("k{i}"), 4 + (i % 3) as u32 * 8, 1.0 + i as f64),
+                    seed: i,
+                })
+            })
+            .collect();
+        let mut ids: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.wait().unwrap().id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 10);
+        assert_eq!(reports.iter().map(|r| r.n).sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn window_bounds_batch_size() {
+        let c = Coordinator::start(sim_only_cfg(3));
+        let handles: Vec<_> = (0..9)
+            .map(|i| {
+                c.submit(LaunchRequest {
+                    id: i,
+                    profile: profile("k", 4, 3.0),
+                    seed: 0,
+                })
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let (reports, _) = c.shutdown();
+        assert!(reports.iter().all(|r| r.n <= 3), "{reports:?}");
+    }
+
+    #[test]
+    fn policy_improves_or_matches_fifo_in_simulation() {
+        // A window of opposing-type kernels: Algorithm 1's simulated
+        // makespan must not exceed FIFO's.
+        let c = Coordinator::start(sim_only_cfg(4));
+        let profs = [
+            profile("m1", 24, 1.0),
+            profile("m2", 24, 1.0),
+            profile("c1", 24, 40.0),
+            profile("c2", 24, 40.0),
+        ];
+        let handles: Vec<_> = profs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                c.submit(LaunchRequest {
+                    id: i as u64,
+                    profile: p.clone(),
+                    seed: 0,
+                })
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let (reports, _) = c.shutdown();
+        for r in reports.iter().filter(|r| r.n == 4) {
+            assert!(r.sim_policy_ms <= r.sim_fifo_ms + 1e-9, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn sim_only_responses_have_nan_checksum() {
+        let c = Coordinator::start(sim_only_cfg(1));
+        let r = c
+            .submit(LaunchRequest {
+                id: 7,
+                profile: profile("k", 8, 2.0),
+                seed: 1,
+            })
+            .wait()
+            .unwrap();
+        assert!(r.checksum.is_nan());
+        assert_eq!(r.exec_wall_ms, 0.0);
+        assert_eq!(r.id, 7);
+    }
+
+    #[test]
+    fn invalid_profile_falls_back_to_fifo() {
+        // 64 warps/block exceeds SM capacity: unsimulable -> FIFO + NaN sims.
+        let c = Coordinator::start(sim_only_cfg(2));
+        let bad = KernelProfile {
+            warps_per_block: 64,
+            ..profile("bad", 4, 2.0)
+        };
+        let h1 = c.submit(LaunchRequest {
+            id: 0,
+            profile: bad,
+            seed: 0,
+        });
+        let h2 = c.submit(LaunchRequest {
+            id: 1,
+            profile: profile("ok", 4, 2.0),
+            seed: 0,
+        });
+        assert_eq!(h1.wait().unwrap().position, 0);
+        assert_eq!(h2.wait().unwrap().position, 1);
+        let (reports, _) = c.shutdown();
+        let r = &reports[0];
+        assert!(r.sim_fifo_ms.is_nan());
+    }
+
+    #[test]
+    fn flush_closes_partial_batch() {
+        let mut cfg = sim_only_cfg(100);
+        cfg.linger = Duration::from_secs(10); // would stall without flush
+        let c = Coordinator::start(cfg);
+        let h = c.submit(LaunchRequest {
+            id: 0,
+            profile: profile("k", 8, 2.0),
+            seed: 0,
+        });
+        c.flush();
+        let r = h.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.batch_id, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn drop_without_shutdown_does_not_hang() {
+        let c = Coordinator::start(sim_only_cfg(2));
+        drop(c);
+    }
+}

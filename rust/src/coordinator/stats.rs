@@ -1,0 +1,157 @@
+//! Aggregate service statistics for the coordinator.
+
+use super::service::{BatchReport, LaunchResponse};
+
+/// Running totals over the life of a coordinator.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub n_batches: usize,
+    pub n_responses: usize,
+    /// Sum of per-request latencies (ms).
+    pub total_latency_ms: f64,
+    /// Max per-request latency (ms).
+    pub max_latency_ms: f64,
+    /// Sum of simulated FIFO / policy makespans over valid batches.
+    pub total_sim_fifo_ms: f64,
+    pub total_sim_policy_ms: f64,
+    /// Batches whose workload could not be simulated.
+    pub n_unsimulated: usize,
+    /// Sum of wall-clock batch execution times (ms).
+    pub total_exec_wall_ms: f64,
+    /// Responses carrying a failed-execution sentinel.
+    pub n_failures: usize,
+}
+
+impl ServiceStats {
+    pub(crate) fn record_response(&mut self, r: &LaunchResponse) {
+        self.n_responses += 1;
+        self.total_latency_ms += r.latency_ms;
+        if r.latency_ms > self.max_latency_ms {
+            self.max_latency_ms = r.latency_ms;
+        }
+        if r.checksum == f64::NEG_INFINITY {
+            self.n_failures += 1;
+        }
+    }
+
+    pub(crate) fn record_batch(&mut self, b: &BatchReport) {
+        self.n_batches += 1;
+        self.total_exec_wall_ms += b.exec_wall_ms;
+        if b.sim_fifo_ms.is_nan() {
+            self.n_unsimulated += 1;
+        } else {
+            self.total_sim_fifo_ms += b.sim_fifo_ms;
+            self.total_sim_policy_ms += b.sim_policy_ms;
+        }
+    }
+
+    /// Mean request latency (ms).
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.n_responses == 0 {
+            0.0
+        } else {
+            self.total_latency_ms / self.n_responses as f64
+        }
+    }
+
+    /// Aggregate simulated speedup of the policy over FIFO arrival order.
+    pub fn sim_speedup(&self) -> f64 {
+        if self.total_sim_policy_ms <= 0.0 {
+            0.0
+        } else {
+            self.total_sim_fifo_ms / self.total_sim_policy_ms
+        }
+    }
+
+    /// Requests served per wall-clock second of batch execution.
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.total_exec_wall_ms <= 0.0 {
+            0.0
+        } else {
+            self.n_responses as f64 / (self.total_exec_wall_ms / 1e3)
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} batches / {} responses | mean latency {:.2} ms (max {:.2}) | \
+             sim speedup vs FIFO {:.3}x | exec wall {:.1} ms | {} failures",
+            self.n_batches,
+            self.n_responses,
+            self.mean_latency_ms(),
+            self.max_latency_ms,
+            self.sim_speedup(),
+            self.total_exec_wall_ms,
+            self.n_failures,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(latency: f64, checksum: f64) -> LaunchResponse {
+        LaunchResponse {
+            id: 0,
+            checksum,
+            exec_wall_ms: 1.0,
+            latency_ms: latency,
+            batch_id: 0,
+            position: 0,
+        }
+    }
+
+    #[test]
+    fn latency_aggregation() {
+        let mut s = ServiceStats::default();
+        s.record_response(&resp(10.0, 1.0));
+        s.record_response(&resp(30.0, 1.0));
+        assert_eq!(s.n_responses, 2);
+        assert_eq!(s.mean_latency_ms(), 20.0);
+        assert_eq!(s.max_latency_ms, 30.0);
+        assert_eq!(s.n_failures, 0);
+    }
+
+    #[test]
+    fn failure_sentinel_counted() {
+        let mut s = ServiceStats::default();
+        s.record_response(&resp(1.0, f64::NEG_INFINITY));
+        assert_eq!(s.n_failures, 1);
+    }
+
+    #[test]
+    fn batch_aggregation_and_speedup() {
+        let mut s = ServiceStats::default();
+        s.record_batch(&BatchReport {
+            batch_id: 0,
+            n: 4,
+            order: vec![0, 1, 2, 3],
+            sim_fifo_ms: 200.0,
+            sim_policy_ms: 100.0,
+            exec_wall_ms: 50.0,
+        });
+        s.record_batch(&BatchReport {
+            batch_id: 1,
+            n: 2,
+            order: vec![0, 1],
+            sim_fifo_ms: f64::NAN,
+            sim_policy_ms: f64::NAN,
+            exec_wall_ms: 10.0,
+        });
+        assert_eq!(s.n_batches, 2);
+        assert_eq!(s.n_unsimulated, 1);
+        assert_eq!(s.sim_speedup(), 2.0);
+        assert!((s.total_exec_wall_ms - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = ServiceStats::default();
+        assert_eq!(s.mean_latency_ms(), 0.0);
+        assert_eq!(s.sim_speedup(), 0.0);
+        assert_eq!(s.throughput_per_s(), 0.0);
+        assert!(s.summary().contains("0 batches"));
+    }
+}

@@ -1,0 +1,236 @@
+//! GPU and kernel parameter model — Table 1 of the paper.
+//!
+//! The first three rows of Table 1 are GPU constants ([`GpuSpec`]); the
+//! remainder are per-kernel quantities obtained from a profiling pass
+//! ([`KernelProfile`]). Resource arithmetic is factored into
+//! [`ResourceVec`] so occupancy math, the scheduler's fit tests, and the
+//! simulator all share one implementation.
+
+mod resources;
+mod spec;
+
+pub use resources::ResourceVec;
+pub use spec::GpuSpec;
+
+/// Which benchmark application a kernel instance comes from.
+///
+/// The paper uses NPB EP (memory-bound, R=3.11), BlackScholes
+/// (compute-bound, R=11.1), VMD Electrostatics and Smith-Waterman.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AppKind {
+    Ep,
+    BlackScholes,
+    Electrostatics,
+    SmithWaterman,
+    /// Synthetic / generated kernels (workload generator, tests).
+    Synthetic,
+}
+
+impl AppKind {
+    /// Short display tag, matching the paper's experiment names.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            AppKind::Ep => "EP",
+            AppKind::BlackScholes => "BS",
+            AppKind::Electrostatics => "ES",
+            AppKind::SmithWaterman => "SW",
+            AppKind::Synthetic => "SYN",
+        }
+    }
+}
+
+/// Static profile of one kernel launch — the per-kernel rows of Table 1.
+///
+/// `regs_per_block`, `shmem_per_block` and `warps_per_block` are *per thread
+/// block*; the paper's per-kernel aggregates (`N_reg_i`, `N_shm_i`,
+/// `N_warp_i`) are the per-SM footprints these induce when the grid spreads
+/// round-robin over the SMs — see [`KernelProfile::per_sm_footprint`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelProfile {
+    /// Human-readable instance name, e.g. `"EP#3(shm=24K)"`.
+    pub name: String,
+    /// Source application.
+    pub app: AppKind,
+    /// Grid size: number of thread blocks (`N_tblk_i`).
+    pub n_blocks: u32,
+    /// Registers consumed by one block (threads/block × regs/thread).
+    pub regs_per_block: u32,
+    /// Shared-memory bytes consumed by one block.
+    pub shmem_per_block: u32,
+    /// Warps per block (threads/block ÷ 32).
+    pub warps_per_block: u32,
+    /// Instructions/bytes ratio `R_i` from the profiler.
+    pub ratio: f64,
+    /// Compute work per block, in abstract instruction units. Sets the
+    /// kernel's standalone runtime in the simulator.
+    pub work_per_block: f64,
+    /// Which AOT artifact executes this kernel's real payload (empty for
+    /// purely simulated kernels).
+    pub artifact: String,
+}
+
+impl KernelProfile {
+    /// Memory traffic per block implied by the instruction/byte ratio:
+    /// `R_i = instructions / bytes` ⇒ `bytes = instructions / R_i`.
+    pub fn mem_per_block(&self) -> f64 {
+        if self.ratio <= 0.0 {
+            0.0
+        } else {
+            self.work_per_block / self.ratio
+        }
+    }
+
+    /// Total compute work of the whole grid.
+    pub fn total_work(&self) -> f64 {
+        self.work_per_block * self.n_blocks as f64
+    }
+
+    /// Total memory traffic of the whole grid.
+    pub fn total_mem(&self) -> f64 {
+        self.mem_per_block() * self.n_blocks as f64
+    }
+
+    /// Resource demand of a single block.
+    pub fn block_resources(&self) -> ResourceVec {
+        ResourceVec {
+            regs: self.regs_per_block as f64,
+            shmem: self.shmem_per_block as f64,
+            warps: self.warps_per_block as f64,
+            blocks: 1.0,
+        }
+    }
+
+    /// The paper's per-kernel aggregate (`N_reg_i`, `N_shm_i`, `N_warp_i`):
+    /// the footprint this kernel leaves **on one SM** when its grid is
+    /// distributed round-robin over `gpu.n_sm` multiprocessors.
+    ///
+    /// E.g. EP with grid 32 on a 16-SM GPU places 2 blocks per SM, so its
+    /// per-SM warp footprint is `2 × warps_per_block`.
+    pub fn per_sm_footprint(&self, gpu: &GpuSpec) -> ResourceVec {
+        let blocks_per_sm = (self.n_blocks as f64 / gpu.n_sm as f64).ceil();
+        self.block_resources() * blocks_per_sm
+    }
+
+    /// Can a single block of this kernel ever fit on an SM of `gpu`?
+    pub fn block_fits(&self, gpu: &GpuSpec) -> bool {
+        self.block_resources().fits_within(&gpu.sm_capacity())
+    }
+
+    /// Max resident blocks of this kernel alone on one SM (classic CUDA
+    /// occupancy calculation: the binding resource decides).
+    pub fn max_blocks_per_sm(&self, gpu: &GpuSpec) -> u32 {
+        let cap = gpu.sm_capacity();
+        let b = self.block_resources();
+        let mut m = gpu.blocks_per_sm;
+        if b.regs > 0.0 {
+            m = m.min((cap.regs / b.regs) as u32);
+        }
+        if b.shmem > 0.0 {
+            m = m.min((cap.shmem / b.shmem) as u32);
+        }
+        if b.warps > 0.0 {
+            m = m.min((cap.warps / b.warps) as u32);
+        }
+        m
+    }
+
+    /// Is this kernel memory-bound relative to the GPU's balanced ratio?
+    pub fn memory_bound(&self, gpu: &GpuSpec) -> bool {
+        self.ratio < gpu.balanced_ratio
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep() -> KernelProfile {
+        KernelProfile {
+            name: "EP".into(),
+            app: AppKind::Ep,
+            n_blocks: 32,
+            regs_per_block: 2560,
+            shmem_per_block: 8192,
+            warps_per_block: 4,
+            ratio: 3.11,
+            work_per_block: 1000.0,
+            artifact: String::new(),
+        }
+    }
+
+    #[test]
+    fn mem_per_block_from_ratio() {
+        let k = ep();
+        assert!((k.mem_per_block() - 1000.0 / 3.11).abs() < 1e-9);
+        assert!((k.total_mem() - 32.0 * 1000.0 / 3.11).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_ratio_means_no_memory() {
+        let mut k = ep();
+        k.ratio = 0.0;
+        assert_eq!(k.mem_per_block(), 0.0);
+    }
+
+    #[test]
+    fn per_sm_footprint_round_robin() {
+        let gpu = GpuSpec::gtx580();
+        let k = ep(); // 32 blocks on 16 SMs -> 2 blocks/SM
+        let f = k.per_sm_footprint(&gpu);
+        assert_eq!(f.warps, 8.0);
+        assert_eq!(f.shmem, 16384.0);
+        assert_eq!(f.blocks, 2.0);
+    }
+
+    #[test]
+    fn per_sm_footprint_rounds_up() {
+        let gpu = GpuSpec::gtx580();
+        let mut k = ep();
+        k.n_blocks = 17; // 17 blocks on 16 SMs -> ceil = 2 per SM
+        assert_eq!(k.per_sm_footprint(&gpu).blocks, 2.0);
+    }
+
+    #[test]
+    fn occupancy_limited_by_shmem() {
+        let gpu = GpuSpec::gtx580();
+        let mut k = ep();
+        k.shmem_per_block = 24 * 1024; // 48K/24K = 2 blocks
+        assert_eq!(k.max_blocks_per_sm(&gpu), 2);
+    }
+
+    #[test]
+    fn occupancy_limited_by_warps() {
+        let gpu = GpuSpec::gtx580();
+        let mut k = ep();
+        k.shmem_per_block = 0;
+        k.warps_per_block = 24; // 48/24 = 2
+        assert_eq!(k.max_blocks_per_sm(&gpu), 2);
+    }
+
+    #[test]
+    fn occupancy_limited_by_block_slots() {
+        let gpu = GpuSpec::gtx580();
+        let mut k = ep();
+        k.shmem_per_block = 0;
+        k.regs_per_block = 1;
+        k.warps_per_block = 1;
+        assert_eq!(k.max_blocks_per_sm(&gpu), gpu.blocks_per_sm);
+    }
+
+    #[test]
+    fn memory_bound_classification() {
+        let gpu = GpuSpec::gtx580();
+        let mut k = ep();
+        assert!(k.memory_bound(&gpu)); // 3.11 < 4.11
+        k.ratio = 11.1;
+        assert!(!k.memory_bound(&gpu));
+    }
+
+    #[test]
+    fn oversized_block_does_not_fit(){
+        let gpu = GpuSpec::gtx580();
+        let mut k = ep();
+        k.shmem_per_block = 49 * 1024;
+        assert!(!k.block_fits(&gpu));
+    }
+}

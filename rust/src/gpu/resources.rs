@@ -1,0 +1,185 @@
+//! Four-dimensional SM resource vectors: registers, shared memory, warps,
+//! resident-block slots. One shared implementation of the arithmetic used by
+//! occupancy math, the scheduler's fit tests, and the simulator's
+//! per-SM accounting.
+
+use std::ops::{Add, AddAssign, Mul, Sub, SubAssign};
+
+/// A point in SM resource space.
+///
+/// Stored as `f64` because the scheduler treats combined profiles as
+/// continuous quantities (fractions of capacity) — see Algorithm 1's
+/// normalized leftover terms.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec {
+    pub regs: f64,
+    pub shmem: f64,
+    pub warps: f64,
+    pub blocks: f64,
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec = ResourceVec {
+        regs: 0.0,
+        shmem: 0.0,
+        warps: 0.0,
+        blocks: 0.0,
+    };
+
+    /// `self` fits inside `cap` on every dimension (with a tiny epsilon so
+    /// exact-capacity packs — the common case in the paper's experiments —
+    /// are accepted despite float arithmetic).
+    pub fn fits_within(&self, cap: &ResourceVec) -> bool {
+        const EPS: f64 = 1e-9;
+        self.regs <= cap.regs + EPS
+            && self.shmem <= cap.shmem + EPS
+            && self.warps <= cap.warps + EPS
+            && self.blocks <= cap.blocks + EPS
+    }
+
+    /// Component-wise max.
+    pub fn max(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec {
+            regs: self.regs.max(other.regs),
+            shmem: self.shmem.max(other.shmem),
+            warps: self.warps.max(other.warps),
+            blocks: self.blocks.max(other.blocks),
+        }
+    }
+
+    /// Largest utilization fraction across dimensions, `self` relative to
+    /// `cap`: the *binding* resource. 1.0 = some resource exhausted.
+    pub fn max_utilization(&self, cap: &ResourceVec) -> f64 {
+        let mut u: f64 = 0.0;
+        if cap.regs > 0.0 {
+            u = u.max(self.regs / cap.regs);
+        }
+        if cap.shmem > 0.0 {
+            u = u.max(self.shmem / cap.shmem);
+        }
+        if cap.warps > 0.0 {
+            u = u.max(self.warps / cap.warps);
+        }
+        if cap.blocks > 0.0 {
+            u = u.max(self.blocks / cap.blocks);
+        }
+        u
+    }
+
+    /// All components are ≥ 0 (used by debug assertions in the simulator).
+    pub fn non_negative(&self) -> bool {
+        const EPS: f64 = -1e-9;
+        self.regs >= EPS && self.shmem >= EPS && self.warps >= EPS && self.blocks >= EPS
+    }
+}
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            regs: self.regs + o.regs,
+            shmem: self.shmem + o.shmem,
+            warps: self.warps + o.warps,
+            blocks: self.blocks + o.blocks,
+        }
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, o: ResourceVec) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for ResourceVec {
+    type Output = ResourceVec;
+    fn sub(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            regs: self.regs - o.regs,
+            shmem: self.shmem - o.shmem,
+            warps: self.warps - o.warps,
+            blocks: self.blocks - o.blocks,
+        }
+    }
+}
+
+impl SubAssign for ResourceVec {
+    fn sub_assign(&mut self, o: ResourceVec) {
+        *self = *self - o;
+    }
+}
+
+impl Mul<f64> for ResourceVec {
+    type Output = ResourceVec;
+    fn mul(self, s: f64) -> ResourceVec {
+        ResourceVec {
+            regs: self.regs * s,
+            shmem: self.shmem * s,
+            warps: self.warps * s,
+            blocks: self.blocks * s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(regs: f64, shmem: f64, warps: f64, blocks: f64) -> ResourceVec {
+        ResourceVec {
+            regs,
+            shmem,
+            warps,
+            blocks,
+        }
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = v(1.0, 2.0, 3.0, 4.0);
+        let b = v(0.5, 0.5, 0.5, 0.5);
+        assert_eq!(a + b - b, a);
+    }
+
+    #[test]
+    fn fits_within_each_dimension_binds() {
+        let cap = v(10.0, 10.0, 10.0, 10.0);
+        assert!(v(10.0, 10.0, 10.0, 10.0).fits_within(&cap));
+        assert!(!v(10.1, 0.0, 0.0, 0.0).fits_within(&cap));
+        assert!(!v(0.0, 10.1, 0.0, 0.0).fits_within(&cap));
+        assert!(!v(0.0, 0.0, 10.1, 0.0).fits_within(&cap));
+        assert!(!v(0.0, 0.0, 0.0, 10.1).fits_within(&cap));
+    }
+
+    #[test]
+    fn fits_within_tolerates_float_noise() {
+        let cap = v(48.0, 48.0, 48.0, 8.0);
+        let x = v(16.0, 16.0, 16.0, 2.0) + v(32.0, 32.0, 32.0, 6.0);
+        assert!(x.fits_within(&cap));
+    }
+
+    #[test]
+    fn max_utilization_picks_binding_resource() {
+        let cap = v(100.0, 100.0, 100.0, 10.0);
+        let x = v(50.0, 80.0, 20.0, 1.0);
+        assert!((x.max_utilization(&cap) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_utilization_ignores_zero_capacity() {
+        let cap = v(100.0, 0.0, 0.0, 0.0);
+        assert_eq!(v(25.0, 5.0, 5.0, 5.0).max_utilization(&cap), 0.25);
+    }
+
+    #[test]
+    fn scale() {
+        assert_eq!(v(1.0, 2.0, 3.0, 4.0) * 2.0, v(2.0, 4.0, 6.0, 8.0));
+    }
+
+    #[test]
+    fn componentwise_max() {
+        let a = v(1.0, 5.0, 2.0, 8.0);
+        let b = v(3.0, 1.0, 4.0, 6.0);
+        assert_eq!(a.max(&b), v(3.0, 5.0, 4.0, 8.0));
+    }
+}

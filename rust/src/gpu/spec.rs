@@ -1,0 +1,134 @@
+//! GPU hardware constants — the first three rows of the paper's Table 1,
+//! plus the fluid-timing calibration constants used by the simulator.
+
+use super::ResourceVec;
+
+/// Architectural description of the simulated GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// `N_SM` — number of streaming multiprocessors.
+    pub n_sm: u32,
+    /// `N_reg_SM` — registers per SM.
+    pub regs_per_sm: u32,
+    /// `N_shm_SM` — shared-memory bytes per SM.
+    pub shmem_per_sm: u32,
+    /// `N_warp_SM` — max resident warps per SM.
+    pub warps_per_sm: u32,
+    /// `N_blk_SM` — max resident blocks per SM.
+    pub blocks_per_sm: u32,
+    /// `R_B` — the balanced instructions/bytes ratio for this GPU.
+    pub balanced_ratio: f64,
+    /// Peak per-SM compute throughput, abstract instruction units per ms,
+    /// reached when at least [`GpuSpec::warps_to_saturate`] warps are
+    /// resident (below that, latency is not hidden and throughput scales
+    /// with warp count).
+    pub compute_rate_per_sm: f64,
+    /// Warps needed to saturate one SM's issue pipeline. On Fermi the
+    /// full warp complement is needed to hide DRAM latency, which is why
+    /// launch orders that strand SMs at low occupancy are so expensive.
+    pub warps_to_saturate: u32,
+    /// Relative per-block execution-time variation (branch divergence,
+    /// DRAM row locality, …): block work is scaled by a deterministic
+    /// per-(kernel, block) factor in `1 ± block_jitter`. This is what
+    /// makes the permutation-time distribution continuous, as measured on
+    /// hardware, rather than collapsing into a handful of round-count
+    /// ties.
+    pub block_jitter: f64,
+}
+
+impl GpuSpec {
+    /// The paper's experimental platform: NVIDIA GTX580
+    /// (16 SMs, R_B = 4.11, 32K regs, 48 warps, 48 KiB shmem, 8 blocks).
+    pub fn gtx580() -> Self {
+        GpuSpec {
+            n_sm: 16,
+            regs_per_sm: 32 * 1024,
+            shmem_per_sm: 48 * 1024,
+            warps_per_sm: 48,
+            blocks_per_sm: 8,
+            balanced_ratio: 4.11,
+            // Calibrated so the simulated EpBs-6 optimum lands near the
+            // paper's ~100 ms scale (see workloads::tests and
+            // EXPERIMENTS.md). All Table-3 comparisons are scale-free.
+            compute_rate_per_sm: 1000.0,
+            // ~16 resident warps hide ALU/issue latency on Fermi; this is
+            // also the value that makes the paper's cross-experiment
+            // timings mutually consistent (EP ≈ 35 ms inside EP-6-shm's
+            // low-occupancy rounds vs ≈ 100 ms inside EpBs-6's fully
+            // packed rounds — exactly the paper's optima).
+            warps_to_saturate: 16,
+            block_jitter: 0.10,
+        }
+    }
+
+    /// The same machine with deterministic timing (no per-block jitter):
+    /// used by tests that assert exact makespans.
+    pub fn deterministic(mut self) -> Self {
+        self.block_jitter = 0.0;
+        self
+    }
+
+    /// Resource capacity of a single SM.
+    pub fn sm_capacity(&self) -> ResourceVec {
+        ResourceVec {
+            regs: self.regs_per_sm as f64,
+            shmem: self.shmem_per_sm as f64,
+            warps: self.warps_per_sm as f64,
+            blocks: self.blocks_per_sm as f64,
+        }
+    }
+
+    /// Aggregate GPU-wide compute throughput (instruction units / ms).
+    pub fn peak_compute(&self) -> f64 {
+        self.compute_rate_per_sm * self.n_sm as f64
+    }
+
+    /// Global memory bandwidth in bytes/ms, derived from the balanced
+    /// ratio: a kernel with `R_i = R_B` at full occupancy is exactly
+    /// compute- and bandwidth-limited at the same time.
+    pub fn memory_bandwidth(&self) -> f64 {
+        self.peak_compute() / self.balanced_ratio
+    }
+
+    /// A lower bound on the makespan of any schedule of the given total
+    /// compute work and memory traffic: no order can beat peak rates.
+    pub fn makespan_lower_bound(&self, total_work: f64, total_mem: f64) -> f64 {
+        (total_work / self.peak_compute()).max(total_mem / self.memory_bandwidth())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gtx580_constants_match_paper() {
+        let g = GpuSpec::gtx580();
+        assert_eq!(g.n_sm, 16);
+        assert_eq!(g.regs_per_sm, 32768);
+        assert_eq!(g.shmem_per_sm, 49152);
+        assert_eq!(g.warps_per_sm, 48);
+        assert_eq!(g.blocks_per_sm, 8);
+        assert!((g.balanced_ratio - 4.11).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_balances_at_rb() {
+        let g = GpuSpec::gtx580();
+        // total_work / peak == total_mem / bandwidth when work/mem == R_B.
+        let work = 1.0e6;
+        let mem = work / g.balanced_ratio;
+        let t_c = work / g.peak_compute();
+        let t_m = mem / g.memory_bandwidth();
+        assert!((t_c - t_m).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lower_bound_is_max_of_both_limits() {
+        let g = GpuSpec::gtx580();
+        let lb = g.makespan_lower_bound(1.0e6, 1.0);
+        assert!((lb - 1.0e6 / g.peak_compute()).abs() < 1e-12);
+        let lb2 = g.makespan_lower_bound(1.0, 1.0e6);
+        assert!((lb2 - 1.0e6 / g.memory_bandwidth()).abs() < 1e-12);
+    }
+}

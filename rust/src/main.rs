@@ -1,0 +1,426 @@
+//! `kreorder` — CLI for the kernel-launch-reordering reproduction.
+//!
+//! Subcommands (see `kreorder help`):
+//!
+//! * `table3`  — regenerate the paper's Table 3 (all six experiments).
+//! * `fig1`    — regenerate Fig. 1 (EpBsEsSw-8 ranking + distribution CSVs).
+//! * `sweep`   — permutation sweep of one experiment.
+//! * `sched`   — show Algorithm 1's order/rounds vs baselines for a workload.
+//! * `serve`   — run the launch-coordinator service on real PJRT payloads.
+//! * `ablate`  — score-component ablation across experiments.
+//! * `artifacts` — list AOT artifacts and their measured profiles.
+
+use anyhow::{bail, Context, Result};
+use kreorder::coordinator::{Coordinator, CoordinatorConfig, LaunchRequest};
+use kreorder::gpu::GpuSpec;
+use kreorder::metrics::{ExperimentRow, Histogram, Table3};
+use kreorder::perm::sweep;
+use kreorder::profile::ArtifactStore;
+use kreorder::sched::{reorder, reorder_with, Policy, ScoreConfig};
+use kreorder::sim;
+use kreorder::util::SplitMix64;
+use kreorder::workloads::{all_experiments, by_id, synthetic_workload};
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "table3" => cmd_table3(rest),
+        "fig1" => cmd_fig1(rest),
+        "sweep" => cmd_sweep(rest),
+        "sched" => cmd_sched(rest),
+        "serve" => cmd_serve(rest),
+        "ablate" => cmd_ablate(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `kreorder help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "kreorder — Reordering GPU Kernel Launches (Li, Narayana, El-Ghazawi 2015)
+
+USAGE: kreorder <COMMAND> [OPTIONS]
+
+COMMANDS:
+  table3 [--exp ID] [--csv FILE]       reproduce Table 3 (default: all experiments)
+  fig1 [--out-dir DIR] [--bins N]      reproduce Fig. 1 for EpBsEsSw-8
+  sweep --exp ID                       permutation-space stats for one experiment
+  sched (--exp ID | --synthetic N [--seed S])
+                                       show Algorithm 1 order/rounds vs baselines
+  serve [--batches N] [--window K] [--policy P] [--seed S] [--artifacts DIR] [--sim-only]
+                                       run the launch coordinator on real PJRT payloads
+  ablate [--exp ID]                    score-component ablation
+  artifacts [--dir DIR]                list AOT artifacts + measured profiles
+
+EXPERIMENT IDS: ep-6-shm ep-6-grid bs-6-blk epbs-6 epbs-6-shm epbsessw-8
+POLICIES: fifo reverse random:<seed> algorithm1"
+    );
+}
+
+/// Tiny flag parser: `--key value` pairs plus boolean flags.
+fn opt<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+// ---------------------------------------------------------------------------
+// table3
+// ---------------------------------------------------------------------------
+
+fn cmd_table3(args: &[String]) -> Result<()> {
+    let gpu = GpuSpec::gtx580();
+    let experiments = match opt(args, "--exp") {
+        Some(id) => vec![by_id(id).with_context(|| format!("unknown experiment `{id}`"))?],
+        None => all_experiments(),
+    };
+
+    let mut table = Table3::default();
+    for e in &experiments {
+        eprintln!(
+            "sweeping {} ({} kernels, {} permutations)…",
+            e.name,
+            e.kernels.len(),
+            (1..=e.kernels.len()).product::<usize>()
+        );
+        let row = run_experiment(&gpu, e.name, &e.kernels)?;
+        table.push(row);
+    }
+    println!("\n{}", table.to_markdown());
+    if let Some(path) = opt(args, "--csv") {
+        std::fs::write(path, table.to_csv())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn run_experiment(
+    gpu: &GpuSpec,
+    name: &str,
+    kernels: &[kreorder::gpu::KernelProfile],
+) -> Result<ExperimentRow> {
+    sim::validate_workload(gpu, kernels).map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+    let sw = sweep(gpu, kernels);
+    let sched = reorder(gpu, kernels);
+    let t_alg = sim::simulate_order(gpu, kernels, &sched.order).makespan_ms;
+    Ok(ExperimentRow {
+        name: name.to_string(),
+        optimal_ms: sw.best_ms,
+        worst_ms: sw.worst_ms,
+        algorithm_ms: t_alg,
+        percentile: sw.percentile_rank(t_alg),
+        n_perms: sw.n_perms,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// fig1
+// ---------------------------------------------------------------------------
+
+fn cmd_fig1(args: &[String]) -> Result<()> {
+    let gpu = GpuSpec::gtx580();
+    let e = by_id("epbsessw-8").unwrap();
+    let bins: usize = opt(args, "--bins").map_or(60, |s| s.parse().unwrap_or(60));
+    let out_dir = opt(args, "--out-dir").unwrap_or(".");
+
+    eprintln!("sweeping EpBsEsSw-8 (40320 permutations)…");
+    let sw = sweep(&gpu, &e.kernels);
+    let sched = reorder(&gpu, &e.kernels);
+    let t_alg = sim::simulate_order(&gpu, &e.kernels, &sched.order).makespan_ms;
+    let median = sw.median_ms();
+
+    // Ranking curve: sorted times, ascending (Fig. 1 top panel).
+    let sorted = sw.sorted_times();
+    let mut ranking = String::from("rank,makespan_ms\n");
+    for (i, t) in sorted.iter().enumerate() {
+        ranking.push_str(&format!("{},{:.6}\n", i + 1, t));
+    }
+    let ranking_path = format!("{out_dir}/fig1_ranking.csv");
+    std::fs::write(&ranking_path, ranking)?;
+
+    // Distribution histogram (Fig. 1 bottom panel).
+    let hist = Histogram::build(&sw.times, bins);
+    let dist_path = format!("{out_dir}/fig1_distribution.csv");
+    std::fs::write(&dist_path, hist.to_csv())?;
+
+    println!("EpBsEsSw-8 permutation space (n = {}):", sw.n_perms);
+    println!("  optimal   : {:>10.2} ms  (order {:?})", sw.best_ms, sw.best_order);
+    println!("  worst     : {:>10.2} ms  (order {:?})", sw.worst_ms, sw.worst_order);
+    println!("  median    : {:>10.2} ms", median);
+    println!(
+        "  algorithm : {:>10.2} ms  (order {:?}, rounds {:?})",
+        t_alg, sched.order, sched.rounds
+    );
+    println!("  percentile rank     : {:.1}%", sw.percentile_rank(t_alg));
+    println!("  speedup over worst  : {:.3}x", sw.worst_ms / t_alg);
+    println!(
+        "  deviation from opt  : {:.2}%",
+        (t_alg - sw.best_ms) / sw.best_ms * 100.0
+    );
+    println!(
+        "  gain over median (50% of random choices): {:.1}%",
+        (median - t_alg) / median * 100.0
+    );
+    println!("wrote {ranking_path}, {dist_path}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// sweep
+// ---------------------------------------------------------------------------
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let gpu = GpuSpec::gtx580();
+    let id = opt(args, "--exp").context("--exp required")?;
+    let e = by_id(id).with_context(|| format!("unknown experiment `{id}`"))?;
+    let sw = sweep(&gpu, &e.kernels);
+    let sorted = sw.sorted_times();
+    println!("{}: {} permutations", e.name, sw.n_perms);
+    println!("  best   {:.2} ms  {:?}", sw.best_ms, sw.best_order);
+    println!("  p25    {:.2} ms", kreorder::metrics::percentile(&sorted, 25.0));
+    println!("  median {:.2} ms", sw.median_ms());
+    println!("  p75    {:.2} ms", kreorder::metrics::percentile(&sorted, 75.0));
+    println!("  worst  {:.2} ms  {:?}", sw.worst_ms, sw.worst_order);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// sched
+// ---------------------------------------------------------------------------
+
+fn cmd_sched(args: &[String]) -> Result<()> {
+    let gpu = GpuSpec::gtx580();
+    let kernels = if let Some(id) = opt(args, "--exp") {
+        by_id(id)
+            .with_context(|| format!("unknown experiment `{id}`"))?
+            .kernels
+    } else if let Some(n) = opt(args, "--synthetic") {
+        let n: usize = n.parse().context("bad --synthetic")?;
+        let seed: u64 = opt(args, "--seed").map_or(0, |s| s.parse().unwrap_or(0));
+        synthetic_workload(&gpu, n, seed)
+    } else {
+        bail!("need --exp ID or --synthetic N");
+    };
+    sim::validate_workload(&gpu, &kernels).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!("kernels:");
+    for (i, k) in kernels.iter().enumerate() {
+        let f = k.per_sm_footprint(&gpu);
+        println!(
+            "  [{i}] {:<18} grid {:>3}  warps/SM {:>4}  shm/SM {:>6}  regs/SM {:>6}  R {:>6.2}",
+            k.name, k.n_blocks, f.warps, f.shmem, f.regs, k.ratio
+        );
+    }
+
+    let sched = reorder(&gpu, &kernels);
+    println!("\nAlgorithm 1 order: {:?}", sched.order);
+    for (r, round) in sched.rounds.iter().enumerate() {
+        let names: Vec<&str> = round.iter().map(|&i| kernels[i].name.as_str()).collect();
+        let ratio = sim::rounds::combined_ratio(&kernels, round);
+        println!("  round {r}: {names:?}  R_comb {ratio:.2}");
+    }
+
+    println!("\nsimulated makespan:");
+    for policy in [
+        Policy::Fifo,
+        Policy::Reverse,
+        Policy::Random(0),
+        Policy::Algorithm1,
+    ] {
+        let order = policy.order(&gpu, &kernels);
+        let r = sim::simulate_order(&gpu, &kernels, &order);
+        println!(
+            "  {:<12} {:>10.2} ms   occupancy {:>5.1}%  stalls {}",
+            policy.to_string(),
+            r.makespan_ms,
+            r.avg_warp_occupancy * 100.0,
+            r.dispatch_stalls
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let batches: usize = opt(args, "--batches").map_or(8, |s| s.parse().unwrap_or(8));
+    let window: usize = opt(args, "--window").map_or(8, |s| s.parse().unwrap_or(8));
+    let seed: u64 = opt(args, "--seed").map_or(0, |s| s.parse().unwrap_or(0));
+    let policy = opt(args, "--policy")
+        .map(|p| Policy::parse(p).with_context(|| format!("bad policy `{p}`")))
+        .transpose()?
+        .unwrap_or(Policy::Algorithm1);
+    let artifacts = opt(args, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(ArtifactStore::default_dir);
+    let sim_only = flag(args, "--sim-only");
+
+    let gpu = GpuSpec::gtx580();
+    let cfg = CoordinatorConfig {
+        gpu: gpu.clone(),
+        policy,
+        window,
+        linger: Duration::from_millis(5),
+        artifacts_dir: if sim_only { None } else { Some(artifacts) },
+    };
+    println!("coordinator: policy={policy} window={window} sim_only={sim_only}");
+    let coord = Coordinator::start(cfg);
+
+    let mut rng = SplitMix64::new(seed);
+    let mut handles = Vec::new();
+    let mut next_id = 0u64;
+    for b in 0..batches {
+        let kernels = synthetic_workload(&gpu, window, seed.wrapping_add(b as u64));
+        for k in kernels {
+            handles.push(coord.submit(LaunchRequest {
+                id: next_id,
+                profile: k,
+                seed: rng.next_u64(),
+            }));
+            next_id += 1;
+        }
+        coord.flush();
+    }
+
+    for h in handles {
+        let r = h.wait()?;
+        if r.checksum == f64::NEG_INFINITY {
+            eprintln!("request {} FAILED", r.id);
+        }
+    }
+    let (reports, stats) = coord.shutdown();
+
+    println!("\nper-batch (simulated GTX580 makespan):");
+    println!("  batch   n   fifo(ms)   policy(ms)  speedup   exec-wall(ms)");
+    for r in &reports {
+        println!(
+            "  {:>5} {:>3} {:>10.2} {:>11.2} {:>8.3}x {:>12.2}",
+            r.batch_id,
+            r.n,
+            r.sim_fifo_ms,
+            r.sim_policy_ms,
+            r.sim_fifo_ms / r.sim_policy_ms,
+            r.exec_wall_ms
+        );
+    }
+    println!("\n{}", stats.summary());
+    println!("throughput: {:.1} kernels/s", stats.throughput_per_s());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// ablate
+// ---------------------------------------------------------------------------
+
+fn cmd_ablate(args: &[String]) -> Result<()> {
+    let gpu = GpuSpec::gtx580();
+    let experiments = match opt(args, "--exp") {
+        Some(id) => vec![by_id(id).with_context(|| format!("unknown experiment `{id}`"))?],
+        None => all_experiments(),
+    };
+
+    let configs: [(&str, ScoreConfig); 5] = [
+        ("full", ScoreConfig::default()),
+        (
+            "resources-only",
+            ScoreConfig {
+                ratio_balance: false,
+                ..ScoreConfig::default()
+            },
+        ),
+        (
+            "ratio-only",
+            ScoreConfig {
+                resource_balance: false,
+                ..ScoreConfig::default()
+            },
+        ),
+        (
+            "no-opposing-gate",
+            ScoreConfig {
+                opposing_gate: false,
+                ..ScoreConfig::default()
+            },
+        ),
+        (
+            "no-shm-sort",
+            ScoreConfig {
+                shm_sort: false,
+                ..ScoreConfig::default()
+            },
+        ),
+    ];
+
+    println!(
+        "| Experiment | {} |",
+        configs
+            .iter()
+            .map(|(n, _)| format!("{n} (ms)"))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    );
+    println!("|---|{}|", "---|".repeat(configs.len()));
+    for e in &experiments {
+        let mut cells = Vec::new();
+        for (_, cfg) in &configs {
+            let sched = reorder_with(&gpu, &e.kernels, cfg);
+            let t = sim::simulate_order(&gpu, &e.kernels, &sched.order).makespan_ms;
+            cells.push(format!("{t:.2}"));
+        }
+        println!("| {} | {} |", e.name, cells.join(" | "));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// artifacts
+// ---------------------------------------------------------------------------
+
+fn cmd_artifacts(args: &[String]) -> Result<()> {
+    let dir = opt(args, "--dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(ArtifactStore::default_dir);
+    let store = ArtifactStore::load(&dir)?;
+    println!("artifacts in {}:", store.dir.display());
+    for name in store.variant_names() {
+        let v = store.variant(&name)?;
+        println!(
+            "  {:<24} app={:<15} inst={:>10.3e} bytes={:>10.3e} R={:>7.3}  {}",
+            name,
+            v.app,
+            v.profile.instructions,
+            v.profile.bytes_accessed,
+            v.profile.ratio,
+            v.description
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Fixed-bin histogram for the Fig-1 "time distribution of all
+//! permutations" panel.
+
+/// Equal-width histogram over `[min, max]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    pub min: f64,
+    pub max: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    /// Build a histogram with `n_bins` equal-width bins spanning the data.
+    /// Degenerate data (all equal) lands in the first bin.
+    pub fn build(samples: &[f64], n_bins: usize) -> Histogram {
+        assert!(n_bins > 0);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in samples {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if samples.is_empty() {
+            return Histogram {
+                min: 0.0,
+                max: 0.0,
+                counts: vec![0; n_bins],
+            };
+        }
+        let width = hi - lo;
+        let mut counts = vec![0u64; n_bins];
+        for &x in samples {
+            let idx = if width <= 0.0 {
+                0
+            } else {
+                (((x - lo) / width) * n_bins as f64).min(n_bins as f64 - 1.0) as usize
+            };
+            counts[idx] += 1;
+        }
+        Histogram {
+            min: lo,
+            max: hi,
+            counts,
+        }
+    }
+
+    /// Bin center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.max - self.min) / self.counts.len() as f64;
+        self.min + (i as f64 + 0.5) * w
+    }
+
+    /// Total count.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// CSV rows: `bin_center,count`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("bin_center_ms,count\n");
+        for (i, c) in self.counts.iter().enumerate() {
+            s.push_str(&format!("{:.6},{}\n", self.bin_center(i), c));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_all_samples() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let h = Histogram::build(&xs, 10);
+        assert_eq!(h.total(), 100);
+        assert_eq!(h.counts, vec![10; 10]);
+    }
+
+    #[test]
+    fn max_value_lands_in_last_bin() {
+        let xs = vec![0.0, 1.0];
+        let h = Histogram::build(&xs, 4);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[3], 1);
+    }
+
+    #[test]
+    fn degenerate_all_equal() {
+        let xs = vec![5.0; 7];
+        let h = Histogram::build(&xs, 3);
+        assert_eq!(h.counts[0], 7);
+        assert_eq!(h.total(), 7);
+    }
+
+    #[test]
+    fn empty_input() {
+        let h = Histogram::build(&[], 3);
+        assert_eq!(h.total(), 0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let h = Histogram::build(&[1.0, 2.0, 3.0], 3);
+        let csv = h.to_csv();
+        assert!(csv.starts_with("bin_center_ms,count\n"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+}

@@ -1,0 +1,130 @@
+//! Table-3 style experiment reporting: per-experiment rows with the
+//! paper's comparison columns (optimal, worst, algorithm, percentile rank,
+//! speedup over worst, deviation from optimal).
+
+use crate::util::{deviation_pct, ratio_or_zero};
+
+/// One row of the reproduction of the paper's Table 3.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentRow {
+    pub name: String,
+    pub optimal_ms: f64,
+    pub worst_ms: f64,
+    pub algorithm_ms: f64,
+    /// Percentile rank of the algorithm's order in the permutation space.
+    pub percentile: f64,
+    pub n_perms: usize,
+}
+
+impl ExperimentRow {
+    /// Speedup of the algorithm's order over the worst order.
+    pub fn speedup_over_worst(&self) -> f64 {
+        ratio_or_zero(self.worst_ms, self.algorithm_ms)
+    }
+
+    /// Deviation of the algorithm's order from the optimal, in percent.
+    pub fn deviation_from_optimal_pct(&self) -> f64 {
+        deviation_pct(self.algorithm_ms, self.optimal_ms)
+    }
+}
+
+/// A full Table 3: rows plus render helpers.
+#[derive(Debug, Clone, Default)]
+pub struct Table3 {
+    pub rows: Vec<ExperimentRow>,
+}
+
+impl Table3 {
+    pub fn push(&mut self, row: ExperimentRow) {
+        self.rows.push(row);
+    }
+
+    /// Render as a GitHub-flavored markdown table mirroring the paper's
+    /// column layout.
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "| Experiment | Optimal (ms) | Worst (ms) | Algorithm (ms) | Percentile rank | Speedup over worst | Deviation from optimal |\n",
+        );
+        s.push_str("|---|---|---|---|---|---|---|\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "| {} | {:.2} | {:.2} | {:.2} | {:.1}% | {:.3} | {:.2}% |\n",
+                r.name,
+                r.optimal_ms,
+                r.worst_ms,
+                r.algorithm_ms,
+                r.percentile,
+                r.speedup_over_worst(),
+                r.deviation_from_optimal_pct(),
+            ));
+        }
+        s
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "experiment,optimal_ms,worst_ms,algorithm_ms,percentile_rank,speedup_over_worst,deviation_from_optimal_pct,n_perms\n",
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.3},{:.4},{:.4},{}\n",
+                r.name,
+                r.optimal_ms,
+                r.worst_ms,
+                r.algorithm_ms,
+                r.percentile,
+                r.speedup_over_worst(),
+                r.deviation_from_optimal_pct(),
+                r.n_perms,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> ExperimentRow {
+        ExperimentRow {
+            name: "EpBs-6".into(),
+            optimal_ms: 100.0,
+            worst_ms: 167.0,
+            algorithm_ms: 100.2,
+            percentile: 96.1,
+            n_perms: 720,
+        }
+    }
+
+    #[test]
+    fn derived_columns() {
+        let r = row();
+        assert!((r.speedup_over_worst() - 167.0 / 100.2).abs() < 1e-12);
+        assert!((r.deviation_from_optimal_pct() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markdown_contains_rows() {
+        let mut t = Table3::default();
+        t.push(row());
+        let md = t.to_markdown();
+        assert!(md.contains("| EpBs-6 |"));
+        assert!(md.contains("96.1%"));
+        assert_eq!(md.lines().count(), 3);
+    }
+
+    #[test]
+    fn csv_roundtrips_fields() {
+        let mut t = Table3::default();
+        t.push(row());
+        let csv = t.to_csv();
+        assert!(csv.lines().count() == 2);
+        let fields: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(fields.len(), 8);
+        assert_eq!(fields[0], "EpBs-6");
+        assert_eq!(fields[7], "720");
+    }
+}

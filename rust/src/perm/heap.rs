@@ -1,0 +1,79 @@
+//! Heap's algorithm: iterate all permutations of a slice in place, one swap
+//! per step (the fastest way to enumerate a permutation space).
+
+/// Call `f` with every permutation of `xs`. `xs` is permuted in place and
+/// restored only up to permutation (its final state is some permutation of
+/// the input). The first call sees `xs` unchanged.
+pub fn for_each_permutation<T, F: FnMut(&[T])>(xs: &mut [T], f: &mut F) {
+    let n = xs.len();
+    if n == 0 {
+        return;
+    }
+    // Non-recursive Heap's algorithm.
+    let mut c = vec![0usize; n];
+    f(xs);
+    let mut i = 0;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                xs.swap(0, i);
+            } else {
+                xs.swap(c[i], i);
+            }
+            f(xs);
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn factorial(n: usize) -> usize {
+        (1..=n).product::<usize>().max(1)
+    }
+
+    #[test]
+    fn visits_exactly_n_factorial_distinct_permutations() {
+        for n in 0..=6 {
+            let mut xs: Vec<usize> = (0..n).collect();
+            let mut seen: HashSet<Vec<usize>> = HashSet::new();
+            let mut count = 0usize;
+            for_each_permutation(&mut xs, &mut |p| {
+                seen.insert(p.to_vec());
+                count += 1;
+            });
+            let want = if n == 0 { 0 } else { factorial(n) };
+            assert_eq!(count, want, "n={n}");
+            assert_eq!(seen.len(), want, "n={n} distinct");
+        }
+    }
+
+    #[test]
+    fn first_call_is_input_order() {
+        let mut xs = vec![3, 1, 4, 1, 5];
+        let mut first: Option<Vec<i32>> = None;
+        for_each_permutation(&mut xs, &mut |p| {
+            if first.is_none() {
+                first = Some(p.to_vec());
+            }
+        });
+        assert_eq!(first.unwrap(), vec![3, 1, 4, 1, 5]);
+    }
+
+    #[test]
+    fn each_step_is_a_permutation_of_input() {
+        let mut xs = vec![10, 20, 30, 40];
+        for_each_permutation(&mut xs, &mut |p| {
+            let mut s = p.to_vec();
+            s.sort_unstable();
+            assert_eq!(s, vec![10, 20, 30, 40]);
+        });
+    }
+}

@@ -1,0 +1,273 @@
+//! Permutation-space evaluation — the paper's methodology: "our experiments
+//! evaluate the concurrent execution time of all possible kernel orderings
+//! (all permutations) and compare the performance of the kernel ordering
+//! given by the algorithm with the optimal (best) result."
+//!
+//! [`sweep`] simulates every permutation of the launch order (rayon-parallel
+//! across first-position prefixes, Heap's algorithm within each worker) and
+//! returns the full time distribution plus best/worst orders, from which
+//! [`SweepResult::percentile_rank`], speedup-over-worst, and
+//! deviation-from-optimal (the Table 3 columns) are computed.
+
+mod heap;
+
+pub use heap::for_each_permutation;
+
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::sim::simulate_order;
+use crate::util::{default_threads, parallel_map};
+
+/// Distribution of simulated makespans across all launch-order
+/// permutations of one workload.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    /// Number of permutations evaluated (`n!`).
+    pub n_perms: usize,
+    /// Best (minimum) makespan and the order achieving it.
+    pub best_ms: f64,
+    pub best_order: Vec<usize>,
+    /// Worst (maximum) makespan and the order achieving it.
+    pub worst_ms: f64,
+    pub worst_order: Vec<usize>,
+    /// Every permutation's makespan (unsorted; ~n! entries).
+    pub times: Vec<f64>,
+}
+
+impl SweepResult {
+    /// The paper's *percentile rank* of a candidate time within the
+    /// permutation space: the percentage of permutations the candidate is
+    /// at least as good as, with ties counted half (mid-rank). Higher is
+    /// better; the paper reports 91.5–99.4% for Algorithm 1.
+    pub fn percentile_rank(&self, t_ms: f64) -> f64 {
+        if self.times.is_empty() {
+            return 0.0;
+        }
+        let eps = 1e-9 * t_ms.abs().max(1e-300);
+        let mut worse = 0usize;
+        let mut equal = 0usize;
+        for &t in &self.times {
+            if t > t_ms + eps {
+                worse += 1;
+            } else if (t - t_ms).abs() <= eps {
+                equal += 1;
+            }
+        }
+        (worse as f64 + 0.5 * equal as f64) / self.times.len() as f64 * 100.0
+    }
+
+    /// Median makespan of the permutation space (the paper's "random
+    /// order choice" reference point).
+    pub fn median_ms(&self) -> f64 {
+        let mut ts = self.times.clone();
+        ts.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ts.len();
+        if n == 0 {
+            return 0.0;
+        }
+        if n % 2 == 1 {
+            ts[n / 2]
+        } else {
+            0.5 * (ts[n / 2 - 1] + ts[n / 2])
+        }
+    }
+
+    /// Sorted copy of the distribution (ascending), for ranking plots.
+    pub fn sorted_times(&self) -> Vec<f64> {
+        let mut ts = self.times.clone();
+        ts.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        ts
+    }
+}
+
+/// Exhaustively simulate all `n!` launch orders of `kernels`.
+///
+/// Parallelized over the choice of the first two positions (`n·(n-1)`
+/// prefixes, each enumerating `(n-2)!` suffixes with Heap's algorithm) so
+/// work spreads evenly across cores. n ≤ 12 or so is practical (the
+/// paper's largest space is 8! = 40 320).
+pub fn sweep(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SweepResult {
+    let n = kernels.len();
+    assert!(n >= 1, "empty workload");
+
+    // Prefixes of length min(2, n).
+    let mut prefixes: Vec<Vec<usize>> = Vec::new();
+    if n == 1 {
+        prefixes.push(vec![0]);
+    } else {
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    prefixes.push(vec![a, b]);
+                }
+            }
+        }
+    }
+
+    let partials: Vec<Partial> = parallel_map(prefixes.len(), default_threads(), |pi| {
+        let prefix = &prefixes[pi];
+        let mut rest: Vec<usize> = (0..n).filter(|i| !prefix.contains(i)).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut p = Partial::new();
+        if rest.is_empty() {
+            let t = simulate_order(gpu, kernels, prefix).makespan_ms;
+            p.record(t, prefix);
+            return p;
+        }
+        for_each_permutation(&mut rest, &mut |suffix| {
+            order.clear();
+            order.extend_from_slice(prefix);
+            order.extend_from_slice(suffix);
+            let t = simulate_order(gpu, kernels, &order).makespan_ms;
+            p.record(t, &order);
+        });
+        p
+    });
+
+    let mut result = SweepResult {
+        n_perms: 0,
+        best_ms: f64::INFINITY,
+        best_order: Vec::new(),
+        worst_ms: f64::NEG_INFINITY,
+        worst_order: Vec::new(),
+        times: Vec::new(),
+    };
+    for p in partials {
+        result.n_perms += p.times.len();
+        if p.best_ms < result.best_ms {
+            result.best_ms = p.best_ms;
+            result.best_order = p.best_order;
+        }
+        if p.worst_ms > result.worst_ms {
+            result.worst_ms = p.worst_ms;
+            result.worst_order = p.worst_order;
+        }
+        result.times.extend(p.times);
+    }
+    result
+}
+
+struct Partial {
+    best_ms: f64,
+    best_order: Vec<usize>,
+    worst_ms: f64,
+    worst_order: Vec<usize>,
+    times: Vec<f64>,
+}
+
+impl Partial {
+    fn new() -> Self {
+        Partial {
+            best_ms: f64::INFINITY,
+            best_order: Vec::new(),
+            worst_ms: f64::NEG_INFINITY,
+            worst_order: Vec::new(),
+            times: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn record(&mut self, t: f64, order: &[usize]) {
+        if t < self.best_ms {
+            self.best_ms = t;
+            self.best_order = order.to_vec();
+        }
+        if t > self.worst_ms {
+            self.worst_ms = t;
+            self.worst_order = order.to_vec();
+        }
+        self.times.push(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::AppKind;
+
+    fn kernel(n_blocks: u32, warps: u32, shmem: u32, ratio: f64, work: f64) -> KernelProfile {
+        KernelProfile {
+            name: format!("k{warps}w{shmem}s"),
+            app: AppKind::Synthetic,
+            n_blocks,
+            regs_per_block: 512,
+            shmem_per_block: shmem,
+            warps_per_block: warps,
+            ratio,
+            work_per_block: work,
+            artifact: String::new(),
+        }
+    }
+
+    #[test]
+    fn sweep_counts_factorial() {
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..4)
+            .map(|i| kernel(16, 4 + i * 4, 0, 2.0 + i as f64, 500.0))
+            .collect();
+        let r = sweep(&gpu, &ks);
+        assert_eq!(r.n_perms, 24);
+        assert_eq!(r.times.len(), 24);
+        assert!(r.best_ms <= r.worst_ms);
+    }
+
+    #[test]
+    fn sweep_single_kernel() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![kernel(16, 8, 0, 3.0, 500.0)];
+        let r = sweep(&gpu, &ks);
+        assert_eq!(r.n_perms, 1);
+        assert_eq!(r.best_ms, r.worst_ms);
+        assert_eq!(r.best_order, vec![0]);
+    }
+
+    #[test]
+    fn best_and_worst_orders_reproduce_their_times() {
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..5)
+            .map(|i| kernel(16, 4 + (i % 3) * 10, ((i % 2) as u32) * 16384, 1.0 + 2.0 * i as f64, 400.0))
+            .collect();
+        let r = sweep(&gpu, &ks);
+        let tb = simulate_order(&gpu, &ks, &r.best_order).makespan_ms;
+        let tw = simulate_order(&gpu, &ks, &r.worst_order).makespan_ms;
+        assert!((tb - r.best_ms).abs() < 1e-9);
+        assert!((tw - r.worst_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_rank_extremes() {
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..4)
+            .map(|i| kernel(16, 4 + i * 8, 0, 1.0 + 3.0 * i as f64, 400.0))
+            .collect();
+        let r = sweep(&gpu, &ks);
+        // The best time beats (or ties) everything.
+        assert!(r.percentile_rank(r.best_ms) > 50.0);
+        // The worst time beats nothing (up to ties).
+        assert!(r.percentile_rank(r.worst_ms) < 50.0);
+        // A hypothetical time faster than best outranks everything.
+        assert!((r.percentile_rank(r.best_ms * 0.5) - 100.0).abs() < 1e-9);
+        assert!(r.percentile_rank(r.worst_ms * 2.0) == 0.0);
+    }
+
+    #[test]
+    fn median_between_best_and_worst() {
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..4)
+            .map(|i| kernel(16, 4 + i * 8, 8192 * (i % 2) as u32, 1.0 + 3.0 * i as f64, 400.0))
+            .collect();
+        let r = sweep(&gpu, &ks);
+        let m = r.median_ms();
+        assert!(r.best_ms <= m && m <= r.worst_ms);
+    }
+
+    #[test]
+    fn identical_kernels_flat_distribution() {
+        // Scope check (paper): identical kernels -> every permutation
+        // takes the same time.
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![kernel(16, 8, 8192, 3.0, 500.0); 4];
+        let r = sweep(&gpu, &ks);
+        let spread = (r.worst_ms - r.best_ms) / r.best_ms;
+        assert!(spread < 1e-9, "spread {spread}");
+    }
+}

@@ -1,0 +1,251 @@
+//! Artifact profile loading — the consumer side of the "CUDA profiler"
+//! stand-in. `python/compile/aot.py` runs XLA HLO cost analysis on every
+//! lowered kernel variant and emits `artifacts/profiles.json`; this module
+//! parses it (with the in-tree JSON parser) and exposes per-variant
+//! instruction/byte profiles, which the serving path uses to derive `R_i`
+//! for kernels that are not in the paper's tables.
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The whole `profiles.json` manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: u32,
+    pub variants: BTreeMap<String, VariantEntry>,
+}
+
+/// One AOT-compiled kernel variant.
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub app: String,
+    pub description: String,
+    /// HLO text filename, relative to the artifacts directory.
+    pub hlo: String,
+    pub inputs: Vec<InputSpec>,
+    pub profile: CostProfile,
+}
+
+/// Shape/dtype of one runtime input (kept in sync with
+/// `python/compile/model.py` input conventions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// XLA cost-analysis quantities for one variant — the stand-in for the
+/// paper's `N_inst_i` and memory-transaction counts.
+#[derive(Debug, Clone)]
+pub struct CostProfile {
+    pub flops: f64,
+    pub transcendentals: f64,
+    pub bytes_accessed: f64,
+    pub instructions: f64,
+    /// `R_i` = instructions / bytes accessed.
+    pub ratio: f64,
+}
+
+/// A loaded artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactStore {
+    /// Load `profiles.json` from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("profiles.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` first)",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = parse_manifest(&text).context("parsing profiles.json")?;
+        Ok(ArtifactStore { dir, manifest })
+    }
+
+    /// Default artifacts location: `$KREORDER_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("KREORDER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Variant metadata by name.
+    pub fn variant(&self, name: &str) -> Result<&VariantEntry> {
+        self.manifest
+            .variants
+            .get(name)
+            .with_context(|| format!("unknown artifact variant `{name}`"))
+    }
+
+    /// Absolute path of a variant's HLO text file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.variant(name)?.hlo))
+    }
+
+    /// All variant names, sorted (deterministic iteration for reports).
+    pub fn variant_names(&self) -> Vec<String> {
+        self.manifest.variants.keys().cloned().collect()
+    }
+}
+
+fn parse_manifest(text: &str) -> Result<Manifest> {
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let format = field_f64(&doc, "format")? as u32;
+    anyhow::ensure!(format == 1, "unsupported manifest format {format}");
+    let mut variants = BTreeMap::new();
+    let vmap = doc
+        .get("variants")
+        .and_then(Json::as_obj)
+        .context("missing `variants` object")?;
+    for (name, v) in vmap {
+        variants.insert(name.clone(), parse_variant(v).with_context(|| name.clone())?);
+    }
+    Ok(Manifest { format, variants })
+}
+
+fn parse_variant(v: &Json) -> Result<VariantEntry> {
+    let inputs = v
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .context("missing `inputs`")?
+        .iter()
+        .map(parse_input)
+        .collect::<Result<Vec<_>>>()?;
+    let p = v.get("profile").context("missing `profile`")?;
+    Ok(VariantEntry {
+        app: field_str(v, "app")?,
+        description: field_str(v, "description").unwrap_or_default(),
+        hlo: field_str(v, "hlo")?,
+        inputs,
+        profile: CostProfile {
+            flops: field_f64(p, "flops")?,
+            transcendentals: field_f64(p, "transcendentals").unwrap_or(0.0),
+            bytes_accessed: field_f64(p, "bytes_accessed")?,
+            instructions: field_f64(p, "instructions")?,
+            ratio: field_f64(p, "ratio")?,
+        },
+    })
+}
+
+fn parse_input(v: &Json) -> Result<InputSpec> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("input missing `shape`")?
+        .iter()
+        .map(|d| d.as_f64().map(|x| x as usize).context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(InputSpec {
+        shape,
+        dtype: field_str(v, "dtype")?,
+    })
+}
+
+fn field_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing numeric field `{key}`"))
+}
+
+fn field_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing string field `{key}`"))?
+        .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": 1,
+        "variants": {
+            "ep_16k": {
+                "app": "ep",
+                "description": "EP tally",
+                "hlo": "ep_16k.hlo.txt",
+                "inputs": [{"shape": [16384], "dtype": "uint32"}],
+                "profile": {
+                    "flops": 1000.0,
+                    "transcendentals": 10.0,
+                    "bytes_accessed": 500.0,
+                    "instructions": 1040.0,
+                    "ratio": 2.08
+                }
+            }
+        }
+    }"#;
+
+    fn store_in(name: &str, body: &str) -> Result<ArtifactStore> {
+        let dir = std::env::temp_dir().join(format!("kreorder_profile_{name}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("profiles.json"), body).unwrap();
+        ArtifactStore::load(&dir)
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let s = store_in("t1", SAMPLE).unwrap();
+        let v = s.variant("ep_16k").unwrap();
+        assert_eq!(v.app, "ep");
+        assert_eq!(v.inputs[0].numel(), 16384);
+        assert_eq!(v.inputs[0].dtype, "uint32");
+        assert!((v.profile.ratio - 2.08).abs() < 1e-12);
+        assert!((v.profile.instructions - 1040.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hlo_path_joins_dir() {
+        let s = store_in("t2", SAMPLE).unwrap();
+        assert!(s
+            .hlo_path("ep_16k")
+            .unwrap()
+            .ends_with("ep_16k.hlo.txt"));
+        assert!(s.hlo_path("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(ArtifactStore::load("/definitely/not/here").is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 99");
+        assert!(store_in("t3", &bad).is_err());
+    }
+
+    #[test]
+    fn missing_profile_field_rejected() {
+        let bad = SAMPLE.replace("\"flops\": 1000.0,", "");
+        assert!(store_in("t4", &bad).is_err());
+    }
+
+    #[test]
+    fn variant_names_sorted() {
+        let two = SAMPLE.replace(
+            "\"ep_16k\": {",
+            "\"zz\": {\"app\":\"ep\",\"hlo\":\"z.hlo.txt\",\"inputs\":[],
+              \"profile\":{\"flops\":1,\"bytes_accessed\":1,\"instructions\":1,\"ratio\":1}},
+             \"ep_16k\": {",
+        );
+        let s = store_in("t5", &two).unwrap();
+        assert_eq!(s.variant_names(), vec!["ep_16k".to_string(), "zz".to_string()]);
+    }
+}

@@ -1,0 +1,110 @@
+//! Deterministic input synthesis for AOT artifacts.
+//!
+//! Conventions (mirrors `python/compile/model.py` — keep in sync):
+//!
+//! * `uint32[n]` inputs are seed-offset index vectors: `seed + arange(n)`.
+//!   (EP seeds, BlackScholes option indices, ES point/atom seeds — the
+//!   graphs hash these in-graph, so the u32 stream fully determines the
+//!   numerics.)
+//! * `int32[...]` inputs are token-id tensors: SplitMix64 stream mod 4
+//!   (the Smith-Waterman alphabet).
+
+use crate::profile::InputSpec;
+use crate::util::SplitMix64;
+use anyhow::{bail, Result};
+
+/// Build one literal per input spec.
+pub fn synthesize_inputs(specs: &[InputSpec], seed: u64) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(specs.len());
+    for (arg_idx, spec) in specs.iter().enumerate() {
+        // Each argument gets a decorrelated stream.
+        let arg_seed = seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(arg_idx as u64 + 1));
+        out.push(synthesize_one(spec, arg_seed)?);
+    }
+    Ok(out)
+}
+
+fn synthesize_one(spec: &InputSpec, seed: u64) -> Result<xla::Literal> {
+    let n = spec.numel();
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match spec.dtype.as_str() {
+        "uint32" => {
+            let base = (seed & 0xFFFF_FFFF) as u32;
+            let data: Vec<u32> = (0..n as u32).map(|i| base.wrapping_add(i)).collect();
+            xla::Literal::vec1(&data)
+        }
+        "int32" => {
+            let mut rng = SplitMix64::new(seed);
+            let data: Vec<i32> = (0..n).map(|_| (rng.next_u32() % 4) as i32).collect();
+            xla::Literal::vec1(&data)
+        }
+        "float32" => {
+            let mut rng = SplitMix64::new(seed);
+            let data: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32).collect();
+            xla::Literal::vec1(&data)
+        }
+        other => bail!("unsupported input dtype `{other}`"),
+    };
+    if spec.shape.len() == 1 {
+        Ok(lit)
+    } else {
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: &str) -> InputSpec {
+        InputSpec {
+            shape: shape.to_vec(),
+            dtype: dtype.into(),
+        }
+    }
+
+    #[test]
+    fn u32_is_seeded_arange() {
+        let l = synthesize_one(&spec(&[8], "uint32"), 100).unwrap();
+        let v = l.to_vec::<u32>().unwrap();
+        assert_eq!(v, (100u32..108).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn i32_tokens_in_alphabet() {
+        let l = synthesize_one(&spec(&[4, 6], "int32"), 7).unwrap();
+        let v = l.to_vec::<i32>().unwrap();
+        assert_eq!(v.len(), 24);
+        assert!(v.iter().all(|&t| (0..4).contains(&t)));
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = synthesize_one(&spec(&[16], "int32"), 1).unwrap();
+        let b = synthesize_one(&spec(&[16], "int32"), 1).unwrap();
+        let c = synthesize_one(&spec(&[16], "int32"), 2).unwrap();
+        assert_eq!(a.to_vec::<i32>().unwrap(), b.to_vec::<i32>().unwrap());
+        assert_ne!(a.to_vec::<i32>().unwrap(), c.to_vec::<i32>().unwrap());
+    }
+
+    #[test]
+    fn shape_is_respected() {
+        let l = synthesize_one(&spec(&[3, 5], "uint32"), 0).unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3, 5]);
+    }
+
+    #[test]
+    fn unknown_dtype_rejected() {
+        assert!(synthesize_one(&spec(&[4], "complex64"), 0).is_err());
+    }
+
+    #[test]
+    fn per_argument_streams_differ() {
+        let ls = synthesize_inputs(&[spec(&[8], "int32"), spec(&[8], "int32")], 5).unwrap();
+        assert_ne!(
+            ls[0].to_vec::<i32>().unwrap(),
+            ls[1].to_vec::<i32>().unwrap()
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT runtime — loads AOT-compiled HLO artifacts and executes them on
+//! the CPU PJRT client from the Rust request path (Python is never
+//! involved at runtime; see DESIGN.md §3).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`).
+
+mod inputs;
+
+pub use inputs::synthesize_inputs;
+
+use crate::profile::ArtifactStore;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Output of one kernel execution.
+#[derive(Debug, Clone)]
+pub struct ExecutionOutput {
+    /// Flattened f32 view of each output leaf (our kernels all produce
+    /// f32 leaves; lowering uses `return_tuple=True`).
+    pub outputs: Vec<Vec<f32>>,
+    /// Wall-clock execution time on the CPU PJRT client.
+    pub wall_ms: f64,
+}
+
+impl ExecutionOutput {
+    /// A small stable fingerprint of the numeric output (sum of leaves),
+    /// used by integration tests and the serving example's sanity checks.
+    pub fn checksum(&self) -> f64 {
+        self.outputs
+            .iter()
+            .map(|leaf| leaf.iter().map(|&x| x as f64).sum::<f64>())
+            .sum()
+    }
+}
+
+/// A PJRT client plus a cache of compiled executables, keyed by variant
+/// name. Compilation happens once per variant (at first use or via
+/// [`Runtime::preload`]); execution is cheap thereafter.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    store: ArtifactStore,
+    // Mutex (not RwLock): compilation is rare, execution takes &self on
+    // the executable handle which is not Sync-shareable across the C API.
+    executables: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over an artifact store.
+    pub fn new(store: ArtifactStore) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            store,
+            executables: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: load the default artifacts directory.
+    pub fn from_default_artifacts() -> Result<Self> {
+        Runtime::new(ArtifactStore::load(ArtifactStore::default_dir())?)
+    }
+
+    /// PJRT platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The artifact store backing this runtime.
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Compile a variant ahead of time (no-op if already cached).
+    pub fn preload(&self, variant: &str) -> Result<()> {
+        self.ensure_compiled(variant)
+    }
+
+    /// Compile every variant in the manifest.
+    pub fn preload_all(&self) -> Result<()> {
+        for name in self.store.variant_names() {
+            self.preload(&name)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&self, variant: &str) -> Result<()> {
+        {
+            let cache = self.executables.lock().unwrap();
+            if cache.contains_key(variant) {
+                return Ok(());
+            }
+        }
+        let path = self.store.hlo_path(variant)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling variant `{variant}`"))?;
+        self.executables.lock().unwrap().insert(variant.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a variant with deterministic inputs derived from `seed`.
+    ///
+    /// Inputs are synthesized from the manifest's shape/dtype specs using
+    /// the same conventions as `python/compile/model.py`, so numerics are
+    /// reproducible given (variant, seed).
+    pub fn execute(&self, variant: &str, seed: u64) -> Result<ExecutionOutput> {
+        self.ensure_compiled(variant)?;
+        let entry = self.store.variant(variant)?;
+        let literals = synthesize_inputs(&entry.inputs, seed)?;
+
+        let t0 = Instant::now();
+        let cache = self.executables.lock().unwrap();
+        let exe = cache.get(variant).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing `{variant}`"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        drop(cache);
+
+        // Lowered with return_tuple=True: the root is always a tuple.
+        let leaves = root.to_tuple().context("decomposing result tuple")?;
+        let mut outputs = Vec::with_capacity(leaves.len());
+        for leaf in leaves {
+            outputs.push(leaf.to_vec::<f32>().context("reading f32 leaf")?);
+        }
+        Ok(ExecutionOutput { outputs, wall_ms })
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.store.dir)
+            .finish()
+    }
+}

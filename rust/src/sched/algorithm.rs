@@ -1,0 +1,299 @@
+//! Algorithm 1 — the greedy concurrent-kernel launch-order algorithm.
+//!
+//! ```text
+//! while K != ∅:
+//!     (K_a, K_b) = argmax ScoreMatrix over K×K          # open round r
+//!     push K_a, K_b into Rd_r sorted by decreasing N_shm; remove from K
+//!     K_comb = ProfileCombine(K_a, K_b)
+//!     while ∃ kernels in K that fit within Rd_r:
+//!         K_c = argmax ScoreGen(K_comb, ·)
+//!         push K_c into Rd_r (keep shm-descending order); remove from K
+//!         K_comb = ProfileCombine(K_comb, K_c)
+//! output: concatenation Rd_0, Rd_1, …
+//! ```
+
+use super::score::{score, CombinedProfile, ScoreConfig};
+use crate::gpu::{GpuSpec, KernelProfile};
+
+/// Output of Algorithm 1: the launch order and its round structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// Kernel indices in the derived launch order.
+    pub order: Vec<usize>,
+    /// The same order, split into the execution rounds the algorithm
+    /// constructed (`Rd_0`, `Rd_1`, …).
+    pub rounds: Vec<Vec<usize>>,
+}
+
+/// Run Algorithm 1 with the default score configuration.
+pub fn reorder(gpu: &GpuSpec, kernels: &[KernelProfile]) -> Schedule {
+    reorder_with(gpu, kernels, &ScoreConfig::default())
+}
+
+/// Run Algorithm 1 with an explicit [`ScoreConfig`] (ablation hook).
+pub fn reorder_with(gpu: &GpuSpec, kernels: &[KernelProfile], cfg: &ScoreConfig) -> Schedule {
+    let profiles: Vec<CombinedProfile> =
+        kernels.iter().map(|k| CombinedProfile::of(gpu, k)).collect();
+    let mut remaining: Vec<usize> = (0..kernels.len()).collect();
+    let mut rounds: Vec<Vec<usize>> = Vec::new();
+
+    while !remaining.is_empty() {
+        if remaining.len() == 1 {
+            rounds.push(vec![remaining.pop().unwrap()]);
+            break;
+        }
+
+        // --- open the round with the best-scoring pair ---
+        let mut best: Option<(usize, usize, f64)> = None; // positions in `remaining`
+        for i in 0..remaining.len() {
+            for j in (i + 1)..remaining.len() {
+                let (a, b) = (remaining[i], remaining[j]);
+                if !profiles[a].fits_with(gpu, &profiles[b]) {
+                    continue;
+                }
+                let s = score(gpu, &profiles[a], &profiles[b], cfg);
+                match best {
+                    None => best = Some((i, j, s)),
+                    Some((_, _, bs)) if s > bs => best = Some((i, j, s)),
+                    _ => {}
+                }
+            }
+        }
+
+        let mut round: Vec<usize>;
+        let mut comb: CombinedProfile;
+        match best {
+            None => {
+                // No pair fits together: this round is a single kernel.
+                // (Paper scope note: when every kernel fills an SM alone,
+                // ordering is immaterial; we emit FIFO-stable singles.)
+                let k = remaining.remove(0);
+                rounds.push(vec![k]);
+                continue;
+            }
+            Some((i, j, _)) => {
+                let (a, b) = (remaining[i], remaining[j]);
+                // Remove higher position first to keep indices valid.
+                remaining.remove(j);
+                remaining.remove(i);
+                round = vec![a, b];
+                comb = profiles[a].combine(&profiles[b]);
+            }
+        }
+
+        // --- grow the round greedily ---
+        loop {
+            let mut best_c: Option<(usize, f64)> = None; // position in `remaining`
+            for (pos, &c) in remaining.iter().enumerate() {
+                if !comb.fits_with(gpu, &profiles[c]) {
+                    continue;
+                }
+                let s = score(gpu, &comb, &profiles[c], cfg);
+                match best_c {
+                    None => best_c = Some((pos, s)),
+                    Some((_, bs)) if s > bs => best_c = Some((pos, s)),
+                    _ => {}
+                }
+            }
+            let Some((pos, _)) = best_c else { break };
+            let c = remaining.remove(pos);
+            comb = comb.combine(&profiles[c]);
+            round.push(c);
+        }
+
+        // --- intra-round order: decreasing shared-memory usage ---
+        // "this allows kernels with more N_shm to finish faster, and thus
+        // release N_shm sooner". Stable sort keeps insertion order on ties.
+        if cfg.shm_sort {
+            round.sort_by(|&x, &y| {
+                profiles[y]
+                    .footprint
+                    .shmem
+                    .partial_cmp(&profiles[x].footprint.shmem)
+                    .unwrap()
+            });
+        }
+        rounds.push(round);
+    }
+
+    // Across-round sequencing (see RoundOrder). Stable sorts keep the
+    // construction order on ties.
+    match cfg.round_order {
+        super::score::RoundOrder::Construction => {}
+        super::score::RoundOrder::ShmDesc => {
+            rounds.sort_by(|a, b| {
+                let shm =
+                    |r: &Vec<usize>| -> f64 { r.iter().map(|&k| profiles[k].footprint.shmem).sum() };
+                shm(b).partial_cmp(&shm(a)).unwrap()
+            });
+        }
+        super::score::RoundOrder::DurationDesc => {
+            let dur = |r: &Vec<usize>| -> f64 {
+                let round_warps: f64 = r.iter().map(|&k| profiles[k].footprint.warps).sum();
+                r.iter()
+                    .map(|&k| estimate_duration(gpu, &kernels[k], round_warps))
+                    .fold(0.0, f64::max)
+            };
+            rounds.sort_by(|a, b| dur(b).partial_cmp(&dur(a)).unwrap());
+        }
+    }
+
+    let order: Vec<usize> = rounds.iter().flatten().copied().collect();
+    Schedule { order, rounds }
+}
+
+/// Estimated duration of kernel `k` inside a round whose SMs hold
+/// `round_warps` resident warps: all of the kernel's blocks are
+/// co-resident, each progressing at the processor-sharing compute rate
+/// `C · w_b / max(round_warps, warps_to_saturate)`.
+fn estimate_duration(gpu: &GpuSpec, k: &KernelProfile, round_warps: f64) -> f64 {
+    let denom = round_warps.max(gpu.warps_to_saturate as f64);
+    let rate = gpu.compute_rate_per_sm * k.warps_per_block as f64 / denom;
+    k.work_per_block / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::kernel;
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::gtx580()
+    }
+
+    fn assert_is_permutation(order: &[usize], n: usize) {
+        let mut seen = vec![false; n];
+        for &i in order {
+            assert!(i < n && !seen[i], "bad order {order:?}");
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "incomplete order {order:?}");
+    }
+
+    #[test]
+    fn output_is_a_permutation() {
+        let ks: Vec<_> = (0..8)
+            .map(|i| kernel(&format!("k{i}"), 16, 4 + (i % 4) * 8, (i as u32 % 3) * 8192, 1.0 + i as f64))
+            .collect();
+        let s = reorder(&gpu(), &ks);
+        assert_is_permutation(&s.order, ks.len());
+        // Rounds partition the order.
+        let flat: Vec<usize> = s.rounds.iter().flatten().copied().collect();
+        assert_eq!(flat, s.order);
+    }
+
+    #[test]
+    fn single_kernel() {
+        let ks = vec![kernel("k", 16, 4, 0, 3.0)];
+        let s = reorder(&gpu(), &ks);
+        assert_eq!(s.order, vec![0]);
+        assert_eq!(s.rounds, vec![vec![0]]);
+    }
+
+    #[test]
+    fn two_kernels_that_fit_share_a_round() {
+        let ks = vec![kernel("a", 16, 4, 0, 2.0), kernel("b", 16, 4, 0, 8.0)];
+        let s = reorder(&gpu(), &ks);
+        assert_eq!(s.rounds.len(), 1);
+        assert_eq!(s.rounds[0].len(), 2);
+    }
+
+    #[test]
+    fn pairs_opposing_ratio_types() {
+        // 2 memory-bound + 2 compute-bound, warps sized two-per-round:
+        // each round must contain one of each type.
+        let ks = vec![
+            kernel("m1", 16, 24, 0, 1.0),
+            kernel("m2", 16, 24, 0, 1.0),
+            kernel("c1", 16, 24, 0, 40.0),
+            kernel("c2", 16, 24, 0, 40.0),
+        ];
+        let s = reorder(&gpu(), &ks);
+        assert_eq!(s.rounds.len(), 2);
+        for r in &s.rounds {
+            let has_mem = r.iter().any(|&i| ks[i].ratio < 4.11);
+            let has_cmp = r.iter().any(|&i| ks[i].ratio > 4.11);
+            assert!(has_mem && has_cmp, "round {r:?} not mixed");
+        }
+    }
+
+    #[test]
+    fn round_members_sorted_by_shm_desc() {
+        let ks = vec![
+            kernel("a", 16, 4, 8 * 1024, 3.0),
+            kernel("b", 16, 4, 24 * 1024, 3.0),
+            kernel("c", 16, 4, 16 * 1024, 3.0),
+        ];
+        let s = reorder(&gpu(), &ks);
+        assert_eq!(s.rounds.len(), 1);
+        let shms: Vec<u32> = s.rounds[0]
+            .iter()
+            .map(|&i| ks[i].shmem_per_block)
+            .collect();
+        assert_eq!(shms, vec![24 * 1024, 16 * 1024, 8 * 1024]);
+    }
+
+    #[test]
+    fn shm_sort_can_be_disabled() {
+        let ks = vec![
+            kernel("a", 16, 4, 8 * 1024, 3.0),
+            kernel("b", 16, 4, 24 * 1024, 3.0),
+        ];
+        let cfg = ScoreConfig {
+            shm_sort: false,
+            ..ScoreConfig::default()
+        };
+        let s = reorder_with(&gpu(), &ks, &cfg);
+        assert_is_permutation(&s.order, 2);
+    }
+
+    #[test]
+    fn sm_filling_kernels_get_single_rounds() {
+        // Each kernel alone exhausts SM warps: no pair ever fits.
+        let ks = vec![
+            kernel("a", 16, 48, 0, 3.0),
+            kernel("b", 16, 48, 0, 5.0),
+            kernel("c", 16, 48, 0, 7.0),
+        ];
+        let s = reorder(&gpu(), &ks);
+        assert_eq!(s.rounds.len(), 3);
+        for r in &s.rounds {
+            assert_eq!(r.len(), 1);
+        }
+    }
+
+    #[test]
+    fn rounds_respect_capacity() {
+        use crate::sim::rounds::fits_in_round;
+        let ks: Vec<_> = (0..10)
+            .map(|i| {
+                kernel(
+                    &format!("k{i}"),
+                    16,
+                    4 + (i % 5) * 4,
+                    ((i % 4) as u32) * 8192,
+                    1.0 + (i as f64) * 1.3,
+                )
+            })
+            .collect();
+        let s = reorder(&gpu(), &ks);
+        for round in &s.rounds {
+            let mut used = crate::gpu::ResourceVec::ZERO;
+            for &k in round {
+                assert!(
+                    fits_in_round(&gpu(), &ks, &used, k),
+                    "round {round:?} violates capacity"
+                );
+                used += ks[k].per_sm_footprint(&gpu());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let ks: Vec<_> = (0..8)
+            .map(|i| kernel(&format!("k{i}"), 16, 4 + (i % 4) * 8, 0, 1.0 + i as f64))
+            .collect();
+        assert_eq!(reorder(&gpu(), &ks), reorder(&gpu(), &ks));
+    }
+}

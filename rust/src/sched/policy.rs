@@ -1,0 +1,123 @@
+//! Launch-order policies: the baselines the paper's evaluation compares
+//! against, plus Algorithm 1 behind the same interface (used by the
+//! coordinator and the experiment harness).
+
+use super::algorithm::reorder;
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::util::SplitMix64;
+
+/// How to choose a launch order for a batch of kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Submission order (what a CUDA app does by default).
+    Fifo,
+    /// Reversed submission order (a simple adversarial baseline).
+    Reverse,
+    /// A uniformly random permutation from the given seed (the paper's
+    /// "random order choice" comparison).
+    Random(u64),
+    /// The paper's Algorithm 1.
+    Algorithm1,
+}
+
+impl Policy {
+    /// Produce a launch order (a permutation of `0..kernels.len()`).
+    pub fn order(&self, gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+        let n = kernels.len();
+        match self {
+            Policy::Fifo => (0..n).collect(),
+            Policy::Reverse => (0..n).rev().collect(),
+            Policy::Random(seed) => {
+                let mut order: Vec<usize> = (0..n).collect();
+                SplitMix64::new(*seed).shuffle(&mut order);
+                order
+            }
+            Policy::Algorithm1 => reorder(gpu, kernels).order,
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(Policy::Fifo),
+            "reverse" => Some(Policy::Reverse),
+            "algorithm" | "algorithm1" | "alg" => Some(Policy::Algorithm1),
+            other => other
+                .strip_prefix("random:")
+                .and_then(|seed| seed.parse().ok().map(Policy::Random)),
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Policy::Fifo => write!(f, "fifo"),
+            Policy::Reverse => write!(f, "reverse"),
+            Policy::Random(s) => write!(f, "random:{s}"),
+            Policy::Algorithm1 => write!(f, "algorithm1"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::kernel;
+    use super::*;
+
+    fn ks() -> Vec<KernelProfile> {
+        (0..6)
+            .map(|i| kernel(&format!("k{i}"), 16, 4 + (i % 3) * 8, 0, 1.0 + i as f64))
+            .collect()
+    }
+
+    fn assert_perm(order: &[usize], n: usize) {
+        let mut s: Vec<usize> = order.to_vec();
+        s.sort_unstable();
+        assert_eq!(s, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fifo_is_identity() {
+        let gpu = GpuSpec::gtx580();
+        assert_eq!(Policy::Fifo.order(&gpu, &ks()), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn reverse_reverses() {
+        let gpu = GpuSpec::gtx580();
+        assert_eq!(Policy::Reverse.order(&gpu, &ks()), vec![5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn random_is_seeded_permutation() {
+        let gpu = GpuSpec::gtx580();
+        let a = Policy::Random(7).order(&gpu, &ks());
+        let b = Policy::Random(7).order(&gpu, &ks());
+        let c = Policy::Random(8).order(&gpu, &ks());
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_perm(&a, 6);
+        assert_perm(&c, 6);
+    }
+
+    #[test]
+    fn algorithm_produces_permutation() {
+        let gpu = GpuSpec::gtx580();
+        assert_perm(&Policy::Algorithm1.order(&gpu, &ks()), 6);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [
+            Policy::Fifo,
+            Policy::Reverse,
+            Policy::Random(42),
+            Policy::Algorithm1,
+        ] {
+            assert_eq!(Policy::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(Policy::parse("nope"), None);
+        assert_eq!(Policy::parse("random:x"), None);
+    }
+}

@@ -1,0 +1,266 @@
+//! ScoreGen and ProfileCombine — lines 15–28 of Algorithm 1.
+
+use crate::gpu::{GpuSpec, KernelProfile, ResourceVec};
+
+/// Which score terms are active. All on by default; the ablation bench
+/// (DESIGN.md A1) toggles them individually.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScoreConfig {
+    /// Lines 18–20: normalized leftover of shmem / registers / warps.
+    pub resource_balance: bool,
+    /// Lines 21–22: the `R_comb` vs `R_B` balance term.
+    pub ratio_balance: bool,
+    /// Line 21's gate: only add the ratio term when the two profiles sit on
+    /// opposite sides of `R_B` (compute-bound vs memory-bound).
+    pub opposing_gate: bool,
+    /// Sort round members by decreasing shared-memory usage (the paper's
+    /// intra-round order rule: "kernels with more N_shm finish faster and
+    /// release N_shm sooner").
+    pub shm_sort: bool,
+    /// How the constructed rounds are sequenced in the final launch order
+    /// (ablation A2b).
+    pub round_order: RoundOrder,
+}
+
+/// Across-round sequencing policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundOrder {
+    /// Construction order `Rd_0, Rd_1, …` — the paper as written.
+    Construction,
+    /// Heaviest shared-memory round first.
+    ShmDesc,
+    /// Longest estimated round first (LPT). The paper profiles
+    /// `N_inst_i` (Table 1) and argues within a round that kernels which
+    /// finish sooner should release resources sooner; LPT across rounds
+    /// is the same argument at round granularity: launching long rounds
+    /// first lets the short, resource-light rounds back-fill the
+    /// stragglers' SM slots instead of extending the makespan tail.
+    DurationDesc,
+}
+
+impl Default for ScoreConfig {
+    fn default() -> Self {
+        ScoreConfig {
+            resource_balance: true,
+            ratio_balance: true,
+            opposing_gate: true,
+            shm_sort: true,
+            round_order: RoundOrder::DurationDesc,
+        }
+    }
+}
+
+impl ScoreConfig {
+    /// Algorithm 1 exactly as printed in the paper (rounds emitted in
+    /// construction order).
+    pub fn paper_strict() -> Self {
+        ScoreConfig {
+            round_order: RoundOrder::Construction,
+            ..ScoreConfig::default()
+        }
+    }
+}
+
+/// ProfileCombine's *virtual kernel*: the aggregate profile of one or more
+/// kernels, carried as per-SM footprint plus total work and memory traffic
+/// (so `R_comb` is work-weighted exactly as in the paper:
+/// `R_comb(a,b) = (inst_a + inst_b) / (mem_a + mem_b)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CombinedProfile {
+    /// Summed per-SM footprint (`N_shm`, `N_reg`, `N_warp`, blocks).
+    pub footprint: ResourceVec,
+    /// Total compute work (instruction units) across all grids.
+    pub work: f64,
+    /// Total memory traffic (bytes) across all grids.
+    pub mem: f64,
+}
+
+impl CombinedProfile {
+    /// Profile of a single kernel.
+    pub fn of(gpu: &GpuSpec, k: &KernelProfile) -> Self {
+        CombinedProfile {
+            footprint: k.per_sm_footprint(gpu),
+            work: k.total_work(),
+            mem: k.total_mem(),
+        }
+    }
+
+    /// ProfileCombine: merge two profiles into one virtual kernel.
+    pub fn combine(&self, other: &CombinedProfile) -> CombinedProfile {
+        CombinedProfile {
+            footprint: self.footprint + other.footprint,
+            work: self.work + other.work,
+            mem: self.mem + other.mem,
+        }
+    }
+
+    /// Instructions/bytes ratio of the virtual kernel.
+    pub fn ratio(&self) -> f64 {
+        if self.mem <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.work / self.mem
+        }
+    }
+
+    /// Do `self` and `other` fit together within one execution round?
+    pub fn fits_with(&self, gpu: &GpuSpec, other: &CombinedProfile) -> bool {
+        (self.footprint + other.footprint).fits_within(&gpu.sm_capacity())
+    }
+}
+
+/// ScoreGen for one pair of (possibly virtual) kernel profiles.
+///
+/// Returns 0 when the pair cannot share an execution round (line 17).
+/// Otherwise sums the normalized leftover of shared memory, registers and
+/// warps (lines 18–20) and, when the profiles are of opposing type
+/// (`R_i ≤ R_B ≤ R_j` or vice versa, line 21), a term rewarding a combined
+/// ratio close to `R_B` (line 22).
+pub fn score(
+    gpu: &GpuSpec,
+    a: &CombinedProfile,
+    b: &CombinedProfile,
+    cfg: &ScoreConfig,
+) -> f64 {
+    if !a.fits_with(gpu, b) {
+        return 0.0;
+    }
+    let cap = gpu.sm_capacity();
+    let mut s = 0.0;
+
+    if cfg.resource_balance {
+        let left_shm = (cap.shmem - a.footprint.shmem - b.footprint.shmem) / cap.shmem;
+        let left_reg = (cap.regs - a.footprint.regs - b.footprint.regs) / cap.regs;
+        let left_warp = (cap.warps - a.footprint.warps - b.footprint.warps) / cap.warps;
+        s += left_shm.max(0.0) + left_reg.max(0.0) + left_warp.max(0.0);
+    }
+
+    if cfg.ratio_balance {
+        let rb = gpu.balanced_ratio;
+        let (ra, rbb) = (a.ratio(), b.ratio());
+        let opposing = (ra <= rb && rb <= rbb) || (rbb <= rb && rb <= ra);
+        if opposing || !cfg.opposing_gate {
+            let comb = a.combine(b);
+            let rc = comb.ratio();
+            if rc.is_finite() {
+                s += (1.0 - (rc - rb).abs() / rb).max(0.0);
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::kernel;
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::gtx580()
+    }
+
+    fn prof(k: &KernelProfile) -> CombinedProfile {
+        CombinedProfile::of(&gpu(), k)
+    }
+
+    #[test]
+    fn combine_is_commutative_and_sums() {
+        let a = prof(&kernel("a", 16, 4, 8192, 2.0));
+        let b = prof(&kernel("b", 32, 8, 4096, 8.0));
+        let ab = a.combine(&b);
+        let ba = b.combine(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.footprint.warps, a.footprint.warps + b.footprint.warps);
+        assert_eq!(ab.work, a.work + b.work);
+    }
+
+    #[test]
+    fn combined_ratio_is_work_weighted() {
+        // Equal work, R 2 and 8 -> mem W/2 + W/8 -> R_comb = 3.2.
+        let a = prof(&kernel("a", 16, 4, 0, 2.0));
+        let b = prof(&kernel("b", 16, 4, 0, 8.0));
+        assert!((a.combine(&b).ratio() - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_fitting_pair_scores_zero() {
+        let a = prof(&kernel("a", 16, 32, 0, 3.0));
+        let b = prof(&kernel("b", 16, 32, 0, 5.0)); // 64 warps > 48
+        assert_eq!(score(&gpu(), &a, &b, &ScoreConfig::default()), 0.0);
+    }
+
+    #[test]
+    fn lighter_pairs_score_higher() {
+        let cfg = ScoreConfig::default();
+        let small = prof(&kernel("s", 16, 4, 4096, 3.0));
+        let big = prof(&kernel("b", 16, 16, 16384, 3.0));
+        let other = prof(&kernel("o", 16, 4, 4096, 3.0));
+        assert!(score(&gpu(), &small, &other, &cfg) > score(&gpu(), &big, &other, &cfg));
+    }
+
+    #[test]
+    fn opposing_types_get_ratio_bonus() {
+        let cfg = ScoreConfig::default();
+        // mem (R=1) + cmp (R=8): opposing, R_comb near R_B scores extra.
+        let mem = prof(&kernel("m", 16, 4, 0, 1.0));
+        let cmp = prof(&kernel("c", 16, 4, 0, 8.0));
+        let mem2 = prof(&kernel("m2", 16, 4, 0, 1.0));
+        assert!(score(&gpu(), &mem, &cmp, &cfg) > score(&gpu(), &mem, &mem2, &cfg));
+    }
+
+    #[test]
+    fn same_side_pairs_get_no_ratio_bonus() {
+        let g = gpu();
+        let cfg = ScoreConfig::default();
+        let no_ratio = ScoreConfig {
+            ratio_balance: false,
+            ..cfg
+        };
+        // Both memory-bound: ratio term must not fire.
+        let a = prof(&kernel("a", 16, 4, 0, 1.0));
+        let b = prof(&kernel("b", 16, 4, 0, 2.0));
+        assert_eq!(score(&g, &a, &b, &cfg), score(&g, &a, &b, &no_ratio));
+    }
+
+    #[test]
+    fn opposing_gate_off_always_adds_ratio_term() {
+        let g = gpu();
+        let cfg = ScoreConfig {
+            opposing_gate: false,
+            ..ScoreConfig::default()
+        };
+        let a = prof(&kernel("a", 16, 4, 0, 3.0));
+        let b = prof(&kernel("b", 16, 4, 0, 3.5));
+        // Same side of R_B, but gate off: score includes a ratio term.
+        let with_gate = score(&g, &a, &b, &ScoreConfig::default());
+        let without = score(&g, &a, &b, &cfg);
+        assert!(without > with_gate);
+    }
+
+    #[test]
+    fn ratio_term_peaks_at_rb() {
+        let g = gpu();
+        let cfg = ScoreConfig {
+            resource_balance: false,
+            ..ScoreConfig::default()
+        };
+        // Pair straddling R_B with combined exactly R_B scores the full 1.0.
+        // work a = work b, R_a = 2.74, R_b chosen so R_comb = R_B = 4.11:
+        // 2W / (W/ra + W/rbb) = 4.11 -> 1/ra + 1/rbb = 2/4.11.
+        let ra = 2.74f64;
+        let rbb = 1.0 / (2.0 / 4.11 - 1.0 / ra);
+        let a = prof(&kernel("a", 16, 4, 0, ra));
+        let b = prof(&kernel("b", 16, 4, 0, rbb));
+        let s = score(&g, &a, &b, &cfg);
+        assert!((s - 1.0).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn score_is_symmetric() {
+        let g = gpu();
+        let cfg = ScoreConfig::default();
+        let a = prof(&kernel("a", 16, 8, 8192, 2.0));
+        let b = prof(&kernel("b", 32, 4, 4096, 9.0));
+        assert_eq!(score(&g, &a, &b, &cfg), score(&g, &b, &a, &cfg));
+    }
+}

@@ -1,0 +1,579 @@
+//! The event-driven fluid simulation engine.
+//!
+//! Model summary (DESIGN.md §5):
+//!
+//! * **Dispatch** — the block queue is the concatenation of each kernel's
+//!   blocks in launch order. Dispatch is strictly in order: the head block
+//!   is placed on the least-loaded SM on which its resource vector fits;
+//!   if it fits nowhere, dispatch stalls until a completion frees space
+//!   (head-of-line blocking — the mechanism that makes launch order
+//!   matter on Fermi-class hardware).
+//! * **Compute** — each SM is a processor-sharing server: its issue
+//!   throughput (`compute_rate_per_sm`, reached at `warps_to_saturate`
+//!   resident warps) is divided among resident blocks in proportion to
+//!   their warp counts. Below saturation, throughput scales with resident
+//!   warps — this is what rewards co-residency (higher occupancy = more
+//!   latency hiding).
+//! * **Memory** — one global bandwidth pool `B = peak_compute / R_B`.
+//!   Each block demands `c_b / R_b` bytes/ms; bandwidth is allocated
+//!   **max-min fairly** (water-filling), and a block's progress rate is
+//!   `min(compute share, granted bandwidth × R_b)`. Co-scheduling only
+//!   memory-bound kernels oversubscribes the pool and collapses progress;
+//!   mixing in compute-bound kernels (combined ratio near `R_B`) does not
+//!   — the paper's balance argument.
+//! * **Events** — rates are piecewise constant between block completions;
+//!   at each event the engine advances time to the earliest projected
+//!   finish, retires finished blocks, refills from the queue, and
+//!   recomputes rates.
+
+use crate::gpu::{GpuSpec, KernelProfile, ResourceVec};
+
+/// Simulation failure modes (returned by [`super::validate_workload`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// Kernel has a zero-size grid.
+    EmptyKernel { kernel: usize },
+    /// Kernel has non-positive per-block work.
+    NonPositiveWork { kernel: usize },
+    /// A single block exceeds SM capacity: the dispatcher would deadlock.
+    BlockNeverFits { kernel: usize },
+    /// `order` is not a permutation of `0..kernels.len()`.
+    BadOrder,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::EmptyKernel { kernel } => write!(f, "kernel {kernel} has an empty grid"),
+            SimError::NonPositiveWork { kernel } => {
+                write!(f, "kernel {kernel} has non-positive work per block")
+            }
+            SimError::BlockNeverFits { kernel } => {
+                write!(f, "kernel {kernel} has a block larger than one SM")
+            }
+            SimError::BadOrder => write!(f, "order is not a permutation of the kernel set"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// One traced simulator event (only recorded by [`simulate_order_traced`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockEvent {
+    pub t_ms: f64,
+    pub kernel: usize,
+    pub sm: u32,
+    pub kind: BlockEventKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockEventKind {
+    Placed,
+    Finished,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Total time until the last block completes (the paper's
+    /// "GPU execution time").
+    pub makespan_ms: f64,
+    /// Completion time of each kernel, indexed like the *input* kernel
+    /// slice (not the order).
+    pub kernel_finish_ms: Vec<f64>,
+    /// Number of completion events processed.
+    pub n_events: usize,
+    /// Times the dispatcher hit head-of-line blocking with free SM slots
+    /// elsewhere in the machine.
+    pub dispatch_stalls: usize,
+    /// Time-weighted mean of resident warps / total warp capacity.
+    pub avg_warp_occupancy: f64,
+    /// Optional event trace.
+    pub trace: Vec<BlockEvent>,
+}
+
+#[derive(Debug, Clone)]
+struct Block {
+    kernel: u32,
+    sm: u32,
+    rem_work: f64,
+}
+
+/// Per-kernel constants hoisted out of the hot loop.
+struct KernelConsts {
+    res: ResourceVec,
+    /// bytes of memory traffic per unit of compute work (1/R_i); 0 for
+    /// pure-compute kernels.
+    mem_per_work: f64,
+    warps: f64,
+}
+
+/// Deterministic per-block execution-time factor in `1 ± jitter`
+/// (SplitMix64 finalizer over the block index within its kernel).
+///
+/// Depends on the block index only — NOT on the kernel — so two identical
+/// kernels present exactly the same block multiset and the paper's scope
+/// property (identical kernels ⇒ order-invariant makespan) holds exactly.
+#[inline]
+fn block_jitter_factor(jitter: f64, block: u64) -> f64 {
+    if jitter == 0.0 {
+        return 1.0;
+    }
+    let mut z = block.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64); // [0,1)
+    1.0 + jitter * (2.0 * u - 1.0)
+}
+
+/// Simulate the given launch `order` (a permutation of kernel indices).
+///
+/// Call [`super::validate_workload`] first; this function `debug_assert`s
+/// validity and produces meaningless results on invalid input in release
+/// builds (it is the innermost loop of the permutation sweeps).
+pub fn simulate_order(gpu: &GpuSpec, kernels: &[KernelProfile], order: &[usize]) -> SimResult {
+    run(gpu, kernels, order, false)
+}
+
+/// As [`simulate_order`], but records a full placement/completion trace.
+pub fn simulate_order_traced(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    order: &[usize],
+) -> SimResult {
+    run(gpu, kernels, order, true)
+}
+
+fn run(gpu: &GpuSpec, kernels: &[KernelProfile], order: &[usize], traced: bool) -> SimResult {
+    debug_assert_eq!(order.len(), kernels.len());
+    debug_assert!({
+        let mut seen = vec![false; kernels.len()];
+        order.iter().all(|&i| {
+            let ok = i < kernels.len() && !seen[i];
+            if ok {
+                seen[i] = true;
+            }
+            ok
+        })
+    });
+
+    let consts: Vec<KernelConsts> = kernels
+        .iter()
+        .map(|k| KernelConsts {
+            res: k.block_resources(),
+            mem_per_work: if k.ratio > 0.0 { 1.0 / k.ratio } else { 0.0 },
+            warps: k.warps_per_block as f64,
+        })
+        .collect();
+
+    // Block queue in launch order: (kernel index, per-block work with the
+    // deterministic jitter factor applied). The factor depends only on
+    // (kernel, block index), never on the order, so permutations see the
+    // same physical workload.
+    let total_blocks: usize = kernels.iter().map(|k| k.n_blocks as usize).sum();
+    let mut queue: Vec<(u32, f64)> = Vec::with_capacity(total_blocks);
+    for &ki in order {
+        let k = &kernels[ki];
+        for b in 0..k.n_blocks {
+            let jitter = block_jitter_factor(gpu.block_jitter, b as u64);
+            queue.push((ki as u32, k.work_per_block * jitter));
+        }
+    }
+    let mut queue_head = 0usize;
+
+    let n_sm = gpu.n_sm as usize;
+    let sm_cap = gpu.sm_capacity();
+    let mut sm_used = vec![ResourceVec::ZERO; n_sm];
+    let mut resident: Vec<Block> = Vec::with_capacity(n_sm * gpu.blocks_per_sm as usize);
+
+    let mut blocks_left: Vec<u32> = kernels.iter().map(|k| k.n_blocks).collect();
+    let mut kernel_finish = vec![0.0f64; kernels.len()];
+
+    let bandwidth = gpu.memory_bandwidth();
+    let warp_capacity = (gpu.warps_per_sm * gpu.n_sm) as f64;
+    let saturate = gpu.warps_to_saturate as f64;
+
+    let mut t = 0.0f64;
+    let mut n_events = 0usize;
+    let mut dispatch_stalls = 0usize;
+    let mut occupancy_integral = 0.0f64;
+    let mut trace = Vec::new();
+
+    // Scratch buffers reused across events (hot loop: zero allocations
+    // per event after warm-up — see EXPERIMENTS.md §Perf).
+    let mut rates: Vec<f64> = Vec::new();
+    let mut demands: Vec<f64> = Vec::new();
+    let mut sorted_scratch: Vec<f64> = Vec::new();
+
+    loop {
+        // ---- dispatch: place head blocks while they fit somewhere ----
+        while queue_head < queue.len() {
+            let (ki, block_work) = queue[queue_head];
+            let ki = ki as usize;
+            let need = &consts[ki].res;
+            // Least-loaded-by-warps SM that fits; ties to lowest index.
+            let mut best: Option<usize> = None;
+            for s in 0..n_sm {
+                if (sm_used[s] + *need).fits_within(&sm_cap) {
+                    match best {
+                        None => best = Some(s),
+                        Some(b) if sm_used[s].warps < sm_used[b].warps => best = Some(s),
+                        _ => {}
+                    }
+                }
+            }
+            let Some(s) = best else {
+                if resident.len() < n_sm * gpu.blocks_per_sm as usize {
+                    dispatch_stalls += 1;
+                }
+                break;
+            };
+            sm_used[s] += *need;
+            resident.push(Block {
+                kernel: ki as u32,
+                sm: s as u32,
+                rem_work: block_work,
+            });
+            if traced {
+                trace.push(BlockEvent {
+                    t_ms: t,
+                    kernel: ki,
+                    sm: s as u32,
+                    kind: BlockEventKind::Placed,
+                });
+            }
+            queue_head += 1;
+        }
+
+        if resident.is_empty() {
+            debug_assert_eq!(queue_head, queue.len(), "dispatcher deadlocked");
+            break;
+        }
+
+        // ---- rates: processor-sharing compute + max-min-fair memory ----
+        rates.clear();
+        rates.reserve(resident.len());
+        // Per-SM warp totals.
+        let mut sm_warps = [0.0f64; 64];
+        debug_assert!(n_sm <= 64);
+        for b in &resident {
+            sm_warps[b.sm as usize] += consts[b.kernel as usize].warps;
+        }
+        let mut resident_warps = 0.0;
+        for s in 0..n_sm {
+            resident_warps += sm_warps[s];
+        }
+        for b in &resident {
+            let kc = &consts[b.kernel as usize];
+            let denom = sm_warps[b.sm as usize].max(saturate);
+            rates.push(gpu.compute_rate_per_sm * kc.warps / denom);
+        }
+
+        // Max-min fair bandwidth: find the water level L with
+        // sum(min(d_b, L)) = B, then p_b = min(c_b, grant_b * R_b).
+        demands.clear();
+        demands.reserve(resident.len());
+        let mut total_demand = 0.0;
+        for (i, b) in resident.iter().enumerate() {
+            let d = rates[i] * consts[b.kernel as usize].mem_per_work;
+            demands.push(d);
+            total_demand += d;
+        }
+        if total_demand > bandwidth {
+            // Water-filling over the sorted demands (reused scratch).
+            sorted_scratch.clear();
+            sorted_scratch.extend_from_slice(&demands);
+            sorted_scratch.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut rem = bandwidth;
+            let mut level = f64::INFINITY;
+            let mut m = sorted_scratch.len();
+            for d in &sorted_scratch {
+                let fair = rem / m as f64;
+                if *d <= fair {
+                    rem -= d;
+                    m -= 1;
+                } else {
+                    level = fair;
+                    break;
+                }
+            }
+            for (i, b) in resident.iter().enumerate() {
+                let kc = &consts[b.kernel as usize];
+                if demands[i] > level && kc.mem_per_work > 0.0 {
+                    // Memory-throttled: granted `level` bytes/ms.
+                    rates[i] = rates[i].min(level / kc.mem_per_work);
+                }
+            }
+        }
+
+        // ---- advance to earliest completion ----
+        let mut dt = f64::INFINITY;
+        for (i, b) in resident.iter().enumerate() {
+            let ti = b.rem_work / rates[i];
+            if ti < dt {
+                dt = ti;
+            }
+        }
+        debug_assert!(dt.is_finite() && dt > 0.0);
+        t += dt;
+        occupancy_integral += resident_warps / warp_capacity * dt;
+        n_events += 1;
+
+        // Retire finished blocks (everything within float noise of done).
+        let eps = dt * 1e-9;
+        let mut i = 0;
+        while i < resident.len() {
+            let finished = {
+                let b = &mut resident[i];
+                b.rem_work -= rates[i] * dt;
+                b.rem_work <= rates[i] * eps
+            };
+            if finished {
+                let b = resident.swap_remove(i);
+                let r = rates.swap_remove(i);
+                let _ = r;
+                sm_used[b.sm as usize] -= consts[b.kernel as usize].res;
+                debug_assert!(sm_used[b.sm as usize].non_negative());
+                let k = b.kernel as usize;
+                blocks_left[k] -= 1;
+                if blocks_left[k] == 0 {
+                    kernel_finish[k] = t;
+                }
+                if traced {
+                    trace.push(BlockEvent {
+                        t_ms: t,
+                        kernel: k,
+                        sm: b.sm,
+                        kind: BlockEventKind::Finished,
+                    });
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    SimResult {
+        makespan_ms: t,
+        kernel_finish_ms: kernel_finish,
+        n_events,
+        dispatch_stalls,
+        avg_warp_occupancy: if t > 0.0 { occupancy_integral / t } else { 0.0 },
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::kernel;
+    use super::*;
+    use crate::gpu::GpuSpec;
+
+    /// Deterministic test GPU with a low saturation point so the exact
+    /// arithmetic below is easy to verify by hand.
+    fn tgpu() -> GpuSpec {
+        let mut g = GpuSpec::gtx580().deterministic();
+        g.warps_to_saturate = 16;
+        g
+    }
+
+    #[test]
+    fn single_kernel_single_block_time() {
+        let gpu = tgpu();
+        // One block, 16 warps (saturating), pure compute (huge ratio).
+        let ks = vec![kernel("k", 1, 16, 0, 1e9, 1000.0)];
+        let r = simulate_order(&gpu, &ks, &[0]);
+        // Saturated single block: rate = compute_rate_per_sm.
+        assert!((r.makespan_ms - 1.0).abs() < 1e-9, "{}", r.makespan_ms);
+        assert_eq!(r.n_events, 1);
+    }
+
+    #[test]
+    fn undersaturated_block_runs_slower() {
+        let gpu = tgpu();
+        // 4 warps < warps_to_saturate=16 -> rate = C * 4/16.
+        let ks = vec![kernel("k", 1, 4, 0, 1e9, 1000.0)];
+        let r = simulate_order(&gpu, &ks, &[0]);
+        assert!((r.makespan_ms - 4.0).abs() < 1e-9, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn jitter_spreads_block_times() {
+        let mut gpu = tgpu();
+        gpu.block_jitter = 0.10;
+        // Two blocks of the same kernel on different SMs: their finish
+        // times differ by the jitter factors but stay within ±10%.
+        let ks = vec![kernel("k", 2, 16, 0, 1e9, 1000.0)];
+        let r = simulate_order_traced(&gpu, &ks, &[0]);
+        let finishes: Vec<f64> = r
+            .trace
+            .iter()
+            .filter(|e| e.kind == BlockEventKind::Finished)
+            .map(|e| e.t_ms)
+            .collect();
+        assert_eq!(finishes.len(), 2);
+        for t in &finishes {
+            assert!((0.9..=1.1).contains(t), "{t}");
+        }
+        assert!((finishes[0] - finishes[1]).abs() > 1e-6);
+    }
+
+    #[test]
+    fn two_identical_blocks_one_sm_share_compute() {
+        // Force both blocks onto one SM: a 1-SM GPU variant.
+        let mut gpu1 = tgpu();
+        gpu1.n_sm = 1;
+        let ks = vec![kernel("k", 2, 16, 0, 1e9, 1000.0)];
+        let r = simulate_order(&gpu1, &ks, &[0]);
+        // 32 resident warps, each block gets C/2 -> both finish at 2 ms.
+        assert!((r.makespan_ms - 2.0).abs() < 1e-9, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn blocks_spread_across_sms() {
+        let gpu = tgpu();
+        // 16 blocks on 16 SMs: each alone, saturating -> 1 ms total.
+        let ks = vec![kernel("k", 16, 16, 0, 1e9, 1000.0)];
+        let r = simulate_order(&gpu, &ks, &[0]);
+        assert!((r.makespan_ms - 1.0).abs() < 1e-9, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn memory_bound_kernel_is_bandwidth_limited() {
+        let gpu = tgpu();
+        // Fill the GPU with saturating, very memory-bound blocks (R = 1
+        // << R_B = 4.11). 16 blocks x 16 warps, work 1000 each.
+        let ks = vec![kernel("k", 16, 16, 0, 1.0, 1000.0)];
+        let r = simulate_order(&gpu, &ks, &[0]);
+        // Total mem = 16 * 1000 / 1.0 = 16000 bytes; B = 16000/4.11 -> t =
+        // 16000/(16*1000/4.11) = 4.11 ms (bandwidth-limited).
+        assert!((r.makespan_ms - 4.11).abs() < 1e-6, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn balanced_kernel_hits_lower_bound() {
+        let gpu = tgpu();
+        let ks = vec![kernel("k", 16, 16, 0, gpu.balanced_ratio, 1000.0)];
+        let r = simulate_order(&gpu, &ks, &[0]);
+        let lb = gpu.makespan_lower_bound(ks[0].total_work(), ks[0].total_mem());
+        assert!((r.makespan_ms - lb).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mixing_compute_and_memory_bound_beats_segregation() {
+        // The paper's core claim: co-residency of opposing kernel types
+        // outperforms same-type clustering. Build 2 memory-bound + 2
+        // compute-bound kernels, each sized at half the SM warp budget so
+        // exactly two kernels co-reside per round.
+        let gpu = tgpu();
+        let mem = || kernel("mem", 16, 24, 0, 1.0, 3000.0);
+        let cmp = || kernel("cmp", 16, 24, 0, 1e9, 3000.0);
+        let ks = vec![mem(), mem(), cmp(), cmp()];
+        let segregated = simulate_order(&gpu, &ks, &[0, 1, 2, 3]).makespan_ms;
+        let interleaved = simulate_order(&gpu, &ks, &[0, 2, 1, 3]).makespan_ms;
+        assert!(
+            interleaved < segregated * 0.999,
+            "interleaved {interleaved} !< segregated {segregated}"
+        );
+    }
+
+    #[test]
+    fn head_of_line_blocking_penalizes_bad_order() {
+        // A shared-memory hog (48K/block) blocks everything behind it on
+        // the same SM; launching hogs first then small kernels lets the
+        // small ones pack around them, while alternating strands capacity.
+        let gpu = tgpu();
+        let hog = || kernel("hog", 16, 4, 48 * 1024, 1e9, 4000.0);
+        let tiny = || kernel("tiny", 16, 4, 0, 1e9, 1000.0);
+        let ks = vec![hog(), hog(), tiny(), tiny()];
+        let good = simulate_order(&gpu, &ks, &[0, 2, 1, 3]).makespan_ms;
+        let bad = simulate_order(&gpu, &ks, &[0, 1, 2, 3]).makespan_ms;
+        assert!(good <= bad, "good {good} > bad {bad}");
+    }
+
+    #[test]
+    fn identical_kernels_order_invariant() {
+        // Paper, Scope & Applicability: identical kernels differing only
+        // in block count -> order does not matter. Holds with jitter ON
+        // because the jitter factor depends only on the block index.
+        let gpu = GpuSpec::gtx580();
+        assert!(gpu.block_jitter > 0.0);
+        let ks = vec![
+            kernel("a", 8, 8, 4096, 3.0, 500.0),
+            kernel("b", 24, 8, 4096, 3.0, 500.0),
+            kernel("c", 16, 8, 4096, 3.0, 500.0),
+        ];
+        let t0 = simulate_order(&gpu, &ks, &[0, 1, 2]).makespan_ms;
+        for order in [[0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+            let t = simulate_order(&gpu, &ks, &order).makespan_ms;
+            assert!(
+                (t - t0).abs() < 1e-6 * t0,
+                "order {order:?}: {t} vs {t0}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_blocks_complete_and_finish_times_recorded() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 20, 8, 8192, 2.0, 700.0),
+            kernel("b", 40, 12, 0, 9.0, 300.0),
+        ];
+        let r = simulate_order(&gpu, &ks, &[1, 0]);
+        assert_eq!(r.n_events as u32 >= 1, true);
+        for (i, &f) in r.kernel_finish_ms.iter().enumerate() {
+            assert!(f > 0.0, "kernel {i} never finished");
+            assert!(f <= r.makespan_ms + 1e-12);
+        }
+        assert!((r.kernel_finish_ms.iter().cloned().fold(0.0, f64::max)
+            - r.makespan_ms)
+            .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn trace_is_balanced_and_ordered() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 10, 8, 0, 3.0, 500.0),
+            kernel("b", 10, 8, 0, 9.0, 500.0),
+        ];
+        let r = simulate_order_traced(&gpu, &ks, &[0, 1]);
+        let placed = r.trace.iter().filter(|e| e.kind == BlockEventKind::Placed).count();
+        let finished = r.trace.iter().filter(|e| e.kind == BlockEventKind::Finished).count();
+        assert_eq!(placed, 20);
+        assert_eq!(finished, 20);
+        // Timestamps non-decreasing.
+        for w in r.trace.windows(2) {
+            assert!(w[0].t_ms <= w[1].t_ms + 1e-12);
+        }
+    }
+
+    #[test]
+    fn makespan_never_beats_lower_bound() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 16, 4, 8192, 3.11, 800.0),
+            kernel("b", 32, 8, 0, 11.1, 400.0),
+            kernel("c", 48, 6, 16384, 2.0, 300.0),
+        ];
+        let total_work: f64 = ks.iter().map(|k| k.total_work()).sum();
+        let total_mem: f64 = ks.iter().map(|k| k.total_mem()).sum();
+        let lb = gpu.makespan_lower_bound(total_work, total_mem);
+        for order in [[0, 1, 2], [2, 1, 0], [1, 0, 2]] {
+            let r = simulate_order(&gpu, &ks, &order);
+            assert!(r.makespan_ms >= lb * (1.0 - 1e-9));
+        }
+    }
+
+    #[test]
+    fn occupancy_fraction_sane() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![kernel("a", 64, 8, 0, 4.0, 500.0)];
+        let r = simulate_order(&gpu, &ks, &[0]);
+        assert!(r.avg_warp_occupancy > 0.0 && r.avg_warp_occupancy <= 1.0);
+    }
+}

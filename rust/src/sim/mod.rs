@@ -1,0 +1,118 @@
+//! Concurrent-kernel GPU execution simulator — the hardware substrate that
+//! replaces the paper's GTX580 testbed (see DESIGN.md §2, §5).
+//!
+//! Two models are provided:
+//!
+//! * [`simulate_order`] — the **event-driven fluid simulator**: thread
+//!   blocks are dispatched strictly in launch order (head-of-line, the
+//!   Fermi behaviour the paper and Pai et al. describe), occupy per-SM
+//!   resources (registers / shared memory / warps / block slots), and
+//!   drain their compute and memory work under processor-sharing rates
+//!   with max-min-fair global memory bandwidth. This is what every
+//!   experiment times.
+//! * [`rounds::pack_rounds`] — the paper's **analytic round model**:
+//!   kernels greedily pack into *execution rounds* by per-SM footprint.
+//!   Algorithm 1 uses it as its fit test; reports use it to show round
+//!   composition.
+//!
+//! Why ordering matters in this simulator, exactly as in the paper:
+//! the in-order dispatcher stalls on the first block that does not fit
+//! (head-of-line blocking), so a launch order that packs resource-
+//! imbalanced kernels together strands SM capacity; and the memory system
+//! is a shared bandwidth pool, so co-scheduling only memory-bound kernels
+//! (combined ratio far below `R_B`) collapses everyone's progress rate.
+
+mod engine;
+pub mod rounds;
+
+pub use engine::{
+    simulate_order, simulate_order_traced, BlockEvent, BlockEventKind, SimError, SimResult,
+};
+
+use crate::gpu::{GpuSpec, KernelProfile};
+
+/// Simulate the identity (FIFO) order.
+pub fn simulate_fifo(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SimResult {
+    let order: Vec<usize> = (0..kernels.len()).collect();
+    simulate_order(gpu, kernels, &order)
+}
+
+/// Validate that a workload is simulable: every kernel has blocks and every
+/// block individually fits on an empty SM (otherwise the in-order
+/// dispatcher would deadlock — and no launch order could help).
+pub fn validate_workload(gpu: &GpuSpec, kernels: &[KernelProfile]) -> Result<(), SimError> {
+    for (i, k) in kernels.iter().enumerate() {
+        if k.n_blocks == 0 {
+            return Err(SimError::EmptyKernel { kernel: i });
+        }
+        if k.work_per_block <= 0.0 {
+            return Err(SimError::NonPositiveWork { kernel: i });
+        }
+        if !k.block_fits(gpu) {
+            return Err(SimError::BlockNeverFits { kernel: i });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::AppKind;
+
+    pub(crate) fn kernel(name: &str, n_blocks: u32, warps: u32, shmem: u32, ratio: f64, work: f64) -> KernelProfile {
+        KernelProfile {
+            name: name.into(),
+            app: AppKind::Synthetic,
+            n_blocks,
+            regs_per_block: 1024,
+            shmem_per_block: shmem,
+            warps_per_block: warps,
+            ratio,
+            work_per_block: work,
+            artifact: String::new(),
+        }
+    }
+
+    #[test]
+    fn validate_rejects_empty_kernel() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![kernel("k", 0, 4, 0, 4.0, 100.0)];
+        assert!(matches!(
+            validate_workload(&gpu, &ks),
+            Err(SimError::EmptyKernel { kernel: 0 })
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_oversized_block() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![kernel("k", 1, 64, 0, 4.0, 100.0)]; // 64 warps > 48
+        assert!(matches!(
+            validate_workload(&gpu, &ks),
+            Err(SimError::BlockNeverFits { kernel: 0 })
+        ));
+    }
+
+    #[test]
+    fn validate_accepts_paper_scale() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("ep", 16, 4, 8192, 3.11, 100.0),
+            kernel("bs", 32, 8, 0, 11.1, 400.0),
+        ];
+        assert!(validate_workload(&gpu, &ks).is_ok());
+    }
+
+    #[test]
+    fn fifo_equals_identity_order() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 16, 4, 8192, 3.11, 100.0),
+            kernel("b", 32, 8, 0, 11.1, 400.0),
+        ];
+        let a = simulate_fifo(&gpu, &ks);
+        let b = simulate_order(&gpu, &ks, &[0, 1]);
+        assert_eq!(a.makespan_ms, b.makespan_ms);
+    }
+}

@@ -1,0 +1,59 @@
+//! Small shared utilities: a deterministic PRNG (so the crate needs no
+//! external randomness dependency and every experiment is reproducible from
+//! a seed) and misc numeric helpers.
+
+pub mod json;
+mod parallel;
+mod prng;
+
+pub use json::Json;
+pub use parallel::{default_threads, parallel_map};
+pub use prng::SplitMix64;
+
+/// Relative deviation `(x - reference) / reference`, in percent.
+///
+/// Used for the paper's "deviation from optimal" column (Table 3).
+pub fn deviation_pct(x: f64, reference: f64) -> f64 {
+    if reference == 0.0 {
+        return 0.0;
+    }
+    (x - reference) / reference * 100.0
+}
+
+/// `a / b` with a zero-guard; used for speedup columns.
+pub fn ratio_or_zero(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        0.0
+    } else {
+        a / b
+    }
+}
+
+/// Approximate float equality for tests.
+pub fn approx_eq(a: f64, b: f64, eps: f64) -> bool {
+    (a - b).abs() <= eps * a.abs().max(b.abs()).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deviation_pct_basic() {
+        assert!((deviation_pct(110.0, 100.0) - 10.0).abs() < 1e-12);
+        assert!((deviation_pct(100.0, 100.0)).abs() < 1e-12);
+        assert_eq!(deviation_pct(5.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ratio_or_zero_basic() {
+        assert_eq!(ratio_or_zero(10.0, 2.0), 5.0);
+        assert_eq!(ratio_or_zero(10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn approx_eq_scales() {
+        assert!(approx_eq(1000.0, 1000.1, 1e-3));
+        assert!(!approx_eq(1000.0, 1010.0, 1e-3));
+    }
+}

@@ -1,0 +1,87 @@
+//! Dependency-free data parallelism over `std::thread::scope` — the
+//! offline environment ships no rayon, so the permutation sweeps use this
+//! static work partitioner.
+
+/// Map `f` over `0..n` tasks on up to `threads` OS threads, collecting the
+/// results in task order. `f` must be `Sync` (it is shared by reference).
+///
+/// Tasks are partitioned into contiguous chunks, one per thread — the right
+/// shape for the permutation sweep, where every task (a first-position
+/// prefix) has near-identical cost.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, slot_chunk) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * chunk;
+                for (i, slot) in slot_chunk.iter_mut().enumerate() {
+                    *slot = Some(f(base + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("task completed")).collect()
+}
+
+/// Number of worker threads to use by default: the machine's parallelism,
+/// overridable with `KREORDER_THREADS`.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("KREORDER_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = parallel_map(1000, 16, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+        assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+        assert_eq!(parallel_map(3, 100, |i| i), vec![0, 1, 2]);
+        assert_eq!(parallel_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! The six experiments of Table 2 / Table 3.
+
+use super::apps::{blackscholes, electrostatics, ep, smith_waterman, BS_TOTAL_WORK_4M, BS_TOTAL_WORK_MIXED};
+use crate::gpu::KernelProfile;
+
+/// A named paper experiment: id (CLI / bench key), display name, kernels.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub kernels: Vec<KernelProfile>,
+}
+
+/// `EP-6-shm`: six EP kernels, grid 16 × block 128, varying only the
+/// shared memory per block: 8K…48K.
+pub fn ep_6_shm() -> Vec<KernelProfile> {
+    [8u32, 16, 24, 32, 40, 48]
+        .iter()
+        .map(|kb| ep(&format!("-shm{kb}K"), 16, kb * 1024))
+        .collect()
+}
+
+/// `EP-6-grid`: six EP kernels, block 128, no shared memory, varying only
+/// the grid size 16…96 (per-SM warp footprint 4…24).
+pub fn ep_6_grid() -> Vec<KernelProfile> {
+    [16u32, 32, 48, 64, 80, 96]
+        .iter()
+        .map(|g| ep(&format!("-grid{g}"), *g, 0))
+        .collect()
+}
+
+/// `BS-6-blk`: six BlackScholes kernels, grid 32, varying only the block
+/// size 64…1024 (warps per block 2…32).
+pub fn bs_6_blk() -> Vec<KernelProfile> {
+    [64u32, 128, 256, 512, 768, 1024]
+        .iter()
+        .map(|b| blackscholes(&format!("-blk{b}"), 32, *b, 0, BS_TOTAL_WORK_4M))
+        .collect()
+}
+
+/// `EpBs-6`: three EP kernels (per-SM warps 4) + three BlackScholes
+/// kernels (per-SM warps 12: grid 32 × block 192, two blocks per SM).
+pub fn epbs_6() -> Vec<KernelProfile> {
+    let mut ks = Vec::new();
+    for i in 1..=3 {
+        ks.push(ep(&format!("#{i}"), 16, 0));
+    }
+    for i in 1..=3 {
+        ks.push(blackscholes(&format!("#{i}"), 32, 192, 0, BS_TOTAL_WORK_MIXED));
+    }
+    ks
+}
+
+/// `EpBs-6-shm`: `EpBs-6` plus per-SM shared-memory footprints of
+/// 16K / 24K / 48K for each application triple (BS runs two blocks per
+/// SM, so its per-block figures are half the footprint).
+pub fn epbs_6_shm() -> Vec<KernelProfile> {
+    let mut ks = Vec::new();
+    for (i, kb) in [16u32, 24, 48].iter().enumerate() {
+        ks.push(ep(&format!("#{}-shm{kb}K", i + 1), 16, kb * 1024));
+    }
+    for (i, kb) in [16u32, 24, 48].iter().enumerate() {
+        ks.push(blackscholes(
+            &format!("#{}-shm{kb}K", i + 1),
+            32,
+            192,
+            kb * 1024 / 2,
+            BS_TOTAL_WORK_MIXED,
+        ));
+    }
+    ks
+}
+
+/// `EpBsEsSw-8`: two kernels each from EP, BS, ES and SW, varying every
+/// metric (`N_tblk`, `N_reg`, `N_shm`, `N_warp`, `R`) across kernels.
+pub fn epbsessw_8() -> Vec<KernelProfile> {
+    vec![
+        ep("#1", 16, 0),
+        ep("#2-shm16K", 32, 16 * 1024),
+        blackscholes("#1", 32, 256, 0, BS_TOTAL_WORK_MIXED),
+        blackscholes("#2", 16, 512, 0, BS_TOTAL_WORK_MIXED),
+        electrostatics("#1", 32, 128, 0),
+        electrostatics("#2-shm8K", 32, 256, 8 * 1024),
+        smith_waterman("#1-shm24K", 16, 192, 24 * 1024),
+        smith_waterman("#2-shm40K", 16, 192, 40 * 1024),
+    ]
+}
+
+/// All six Table-2/Table-3 experiments, in the paper's row order.
+pub fn all_experiments() -> Vec<Experiment> {
+    vec![
+        Experiment {
+            id: "ep-6-shm",
+            name: "EP-6-shm",
+            kernels: ep_6_shm(),
+        },
+        Experiment {
+            id: "ep-6-grid",
+            name: "EP-6-grid",
+            kernels: ep_6_grid(),
+        },
+        Experiment {
+            id: "bs-6-blk",
+            name: "BS-6-blk",
+            kernels: bs_6_blk(),
+        },
+        Experiment {
+            id: "epbs-6",
+            name: "EpBs-6",
+            kernels: epbs_6(),
+        },
+        Experiment {
+            id: "epbs-6-shm",
+            name: "EpBs-6-shm",
+            kernels: epbs_6_shm(),
+        },
+        Experiment {
+            id: "epbsessw-8",
+            name: "EpBsEsSw-8",
+            kernels: epbsessw_8(),
+        },
+    ]
+}
+
+/// Resolve an experiment by CLI id (case-insensitive).
+pub fn by_id(id: &str) -> Option<Experiment> {
+    let id = id.to_ascii_lowercase();
+    all_experiments().into_iter().find(|e| e.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+
+    #[test]
+    fn ep_6_shm_varies_only_shmem() {
+        let ks = ep_6_shm();
+        for k in &ks {
+            assert_eq!(k.n_blocks, 16);
+            assert_eq!(k.warps_per_block, 4);
+            assert!((k.ratio - 3.11).abs() < 1e-12);
+        }
+        let shms: Vec<u32> = ks.iter().map(|k| k.shmem_per_block / 1024).collect();
+        assert_eq!(shms, vec![8, 16, 24, 32, 40, 48]);
+    }
+
+    #[test]
+    fn ep_6_grid_warp_footprints_match_table2() {
+        // Table 2: N_warp_i = 4, 8, 12, 16, 20, 24 per SM.
+        let gpu = GpuSpec::gtx580();
+        let fps: Vec<f64> = ep_6_grid()
+            .iter()
+            .map(|k| k.per_sm_footprint(&gpu).warps)
+            .collect();
+        assert_eq!(fps, vec![4.0, 8.0, 12.0, 16.0, 20.0, 24.0]);
+    }
+
+    #[test]
+    fn bs_6_blk_warps_match_table2() {
+        let ws: Vec<u32> = bs_6_blk().iter().map(|k| k.warps_per_block).collect();
+        assert_eq!(ws, vec![2, 4, 8, 16, 24, 32]);
+    }
+
+    #[test]
+    fn epbs_6_fills_one_round_exactly() {
+        // 3×4 + 3×12 = 48 warps/SM — exactly the GTX580 capacity, the
+        // design point of the paper's EpBs-6.
+        let gpu = GpuSpec::gtx580();
+        let total: f64 = epbs_6()
+            .iter()
+            .map(|k| k.per_sm_footprint(&gpu).warps)
+            .sum();
+        assert_eq!(total, 48.0);
+    }
+
+    #[test]
+    fn epbs_6_shm_footprints() {
+        let gpu = GpuSpec::gtx580();
+        let ks = epbs_6_shm();
+        let fps: Vec<f64> = ks.iter().map(|k| k.per_sm_footprint(&gpu).shmem / 1024.0).collect();
+        assert_eq!(fps, vec![16.0, 24.0, 48.0, 16.0, 24.0, 48.0]);
+    }
+
+    #[test]
+    fn epbsessw_8_varies_everything() {
+        let ks = epbsessw_8();
+        assert_eq!(ks.len(), 8);
+        let distinct = |f: &dyn Fn(&KernelProfile) -> u64| {
+            let mut v: Vec<u64> = ks.iter().map(f).collect();
+            v.sort_unstable();
+            v.dedup();
+            v.len()
+        };
+        assert!(distinct(&|k| k.n_blocks as u64) >= 2);
+        assert!(distinct(&|k| k.regs_per_block as u64) >= 4);
+        assert!(distinct(&|k| k.shmem_per_block as u64) >= 4);
+        assert!(distinct(&|k| k.warps_per_block as u64) >= 3);
+        assert!(distinct(&|k| (k.ratio * 100.0) as u64) == 4);
+    }
+}

@@ -1,0 +1,69 @@
+//! The paper's experiment workloads (Table 2) and a seeded synthetic
+//! workload generator.
+//!
+//! Parameter notes (Table 2, GTX580):
+//!
+//! * The paper's per-kernel quantities `N_shm_i` / `N_warp_i` are **per-SM
+//!   footprints** under even round-robin block distribution: e.g.
+//!   `EP-6-grid` lists `N_warp_i = 4…24` for grid sizes 16…96 at block
+//!   size 128 — (grid/16 SMs) blocks per SM × 4 warps per block.
+//! * Each application instance has a fixed **total** amount of work (EP is
+//!   M=24 samples; BS is a fixed option count), so `work_per_block`
+//!   scales inversely with grid size: more blocks = less work per block.
+//! * Absolute work constants are calibrated so simulated optima land near
+//!   the paper's millisecond scale (EXPERIMENTS.md §Calibration); all
+//!   Table-3 comparison columns are scale-free.
+
+mod apps;
+mod experiments;
+mod synthetic;
+
+pub use apps::{blackscholes, electrostatics, ep, smith_waterman};
+pub use experiments::{
+    all_experiments, bs_6_blk, by_id, ep_6_grid, ep_6_shm, epbs_6, epbs_6_shm, epbsessw_8,
+    Experiment,
+};
+pub use synthetic::synthetic_workload;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+    use crate::sim::validate_workload;
+
+    #[test]
+    fn all_experiments_are_simulable() {
+        let gpu = GpuSpec::gtx580();
+        for e in all_experiments() {
+            validate_workload(&gpu, &e.kernels)
+                .unwrap_or_else(|err| panic!("{}: {err}", e.id));
+        }
+    }
+
+    #[test]
+    fn experiment_ids_unique_and_resolvable() {
+        let all = all_experiments();
+        for e in &all {
+            let found = by_id(e.id).expect("by_id");
+            assert_eq!(found.kernels.len(), e.kernels.len());
+        }
+        let mut ids: Vec<&str> = all.iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), all.len());
+    }
+
+    #[test]
+    fn six_experiments_match_paper_sizes() {
+        // Table 2: five 6-kernel experiments + one 8-kernel experiment.
+        let all = all_experiments();
+        assert_eq!(all.len(), 6);
+        let sizes: Vec<usize> = all.iter().map(|e| e.kernels.len()).collect();
+        assert_eq!(sizes, vec![6, 6, 6, 6, 6, 8]);
+    }
+
+    #[test]
+    fn by_id_unknown_is_none() {
+        assert!(by_id("nonsense").is_none());
+    }
+}

@@ -1,0 +1,99 @@
+//! Seeded synthetic workload generator — used by property tests, the
+//! serving example's request stream, and scaling studies beyond the
+//! paper's fixed experiments.
+
+use crate::gpu::{AppKind, GpuSpec, KernelProfile};
+use crate::util::SplitMix64;
+
+/// Generate `n` random-but-plausible kernels. Every kernel is guaranteed
+/// to pass [`crate::sim::validate_workload`] against `gpu`.
+///
+/// The distribution deliberately mixes memory-bound and compute-bound
+/// kernels (ratio log-uniform in [0.5, 10·R_B]) and spans the occupancy
+/// range from tiny (2 warps) to SM-filling.
+pub fn synthetic_workload(gpu: &GpuSpec, n: usize, seed: u64) -> Vec<KernelProfile> {
+    let mut rng = SplitMix64::new(seed);
+    let apps = [
+        AppKind::Ep,
+        AppKind::BlackScholes,
+        AppKind::Electrostatics,
+        AppKind::SmithWaterman,
+    ];
+    let artifacts = [
+        "ep_16k",
+        "blackscholes_16k",
+        "electrostatics_1kx512",
+        "smith_waterman_64x48",
+    ];
+    (0..n)
+        .map(|i| {
+            let app_i = rng.below(apps.len());
+            // Warps per block: 2..=min(16, capacity).
+            let warps = 2 + rng.below(15.min(gpu.warps_per_sm as usize / 2)) as u32;
+            // Shared memory: 0 or a multiple of 4K up to half the SM.
+            let shmem = if rng.next_f64() < 0.5 {
+                0
+            } else {
+                (1 + rng.below((gpu.shmem_per_sm / 2 / 4096) as usize) as u32) * 4096
+            };
+            // Registers per thread 16..40.
+            let regs = (16 + rng.below(25) as u32) * warps * 32;
+            // Grid: 1–6 blocks per SM.
+            let grid = gpu.n_sm * (1 + rng.below(6) as u32);
+            // Ratio log-uniform across the memory/compute divide.
+            let log_lo = (0.5f64).ln();
+            let log_hi = (gpu.balanced_ratio * 10.0).ln();
+            let ratio = (log_lo + (log_hi - log_lo) * rng.next_f64()).exp();
+            let work = rng.range_f64(2_000.0, 20_000.0);
+            KernelProfile {
+                name: format!("SYN#{i}"),
+                app: apps[app_i],
+                n_blocks: grid,
+                regs_per_block: regs.min(gpu.regs_per_sm),
+                shmem_per_block: shmem.min(gpu.shmem_per_sm),
+                warps_per_block: warps,
+                ratio,
+                work_per_block: work,
+                artifact: artifacts[app_i].into(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::validate_workload;
+
+    #[test]
+    fn generated_workloads_always_valid() {
+        let gpu = GpuSpec::gtx580();
+        for seed in 0..50 {
+            let ks = synthetic_workload(&gpu, 8, seed);
+            assert_eq!(ks.len(), 8);
+            validate_workload(&gpu, &ks).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let gpu = GpuSpec::gtx580();
+        assert_eq!(
+            synthetic_workload(&gpu, 6, 9),
+            synthetic_workload(&gpu, 6, 9)
+        );
+        assert_ne!(
+            synthetic_workload(&gpu, 6, 9),
+            synthetic_workload(&gpu, 6, 10)
+        );
+    }
+
+    #[test]
+    fn mixes_bound_types() {
+        let gpu = GpuSpec::gtx580();
+        let ks = synthetic_workload(&gpu, 64, 1234);
+        let mem = ks.iter().filter(|k| k.memory_bound(&gpu)).count();
+        assert!(mem > 8, "too few memory-bound: {mem}");
+        assert!(mem < 56, "too few compute-bound: {}", 64 - mem);
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration across the scheduling stack: workloads → Algorithm 1 →
+//! simulator → permutation sweeps → metrics, on reduced problem sizes.
+
+use kreorder::gpu::GpuSpec;
+use kreorder::metrics::{ExperimentRow, Table3};
+use kreorder::perm::sweep;
+use kreorder::sched::{reorder, Policy};
+use kreorder::sim::{self, rounds::pack_rounds};
+use kreorder::workloads::{all_experiments, by_id, synthetic_workload};
+
+#[test]
+fn every_paper_experiment_end_to_end() {
+    // Full sweep for the 6-kernel experiments (720 perms each, fast);
+    // spot-simulation only for the 8-kernel one (its full sweep is the
+    // fig1 bench's job).
+    let gpu = GpuSpec::gtx580();
+    let mut table = Table3::default();
+    for e in all_experiments() {
+        let sched = reorder(&gpu, &e.kernels);
+        let t_alg = sim::simulate_order(&gpu, &e.kernels, &sched.order).makespan_ms;
+        assert!(t_alg > 0.0);
+        if e.kernels.len() > 6 {
+            continue;
+        }
+        let sw = sweep(&gpu, &e.kernels);
+        assert_eq!(sw.n_perms, 720);
+        // The paper's headline shape: the algorithm must beat the median
+        // of the permutation space in every experiment.
+        let pct = sw.percentile_rank(t_alg);
+        assert!(pct > 50.0, "{}: percentile {pct}", e.name);
+        // And must lie within the permutation range.
+        assert!(t_alg >= sw.best_ms * (1.0 - 1e-9), "{}", e.name);
+        assert!(t_alg <= sw.worst_ms * (1.0 + 1e-9), "{}", e.name);
+        table.push(ExperimentRow {
+            name: e.name.to_string(),
+            optimal_ms: sw.best_ms,
+            worst_ms: sw.worst_ms,
+            algorithm_ms: t_alg,
+            percentile: pct,
+            n_perms: sw.n_perms,
+        });
+    }
+    // Table renders with all experiments.
+    let md = table.to_markdown();
+    assert!(md.contains("EP-6-shm"));
+    assert!(md.contains("EpBs-6-shm"));
+}
+
+#[test]
+fn worst_case_speedup_exceeds_spread_floor() {
+    // Shape check vs the paper: every experiment shows a real spread
+    // between best and worst orders (the phenomenon under study).
+    let gpu = GpuSpec::gtx580();
+    for id in ["ep-6-shm", "bs-6-blk", "epbs-6"] {
+        let e = by_id(id).unwrap();
+        let sw = sweep(&gpu, &e.kernels);
+        let spread = sw.worst_ms / sw.best_ms;
+        assert!(spread > 1.15, "{id}: spread only {spread}");
+    }
+}
+
+#[test]
+fn algorithm_round_structure_respects_capacity() {
+    let gpu = GpuSpec::gtx580();
+    for e in all_experiments() {
+        let sched = reorder(&gpu, &e.kernels);
+        // Re-deriving rounds from the final order with the analytic
+        // model must never violate SM capacity — except singleton
+        // rounds, where a single kernel legitimately runs in multiple
+        // waves (e.g. BS-6-blk's register-bound 768/1024-thread blocks).
+        let rounds = pack_rounds(&gpu, &e.kernels, &sched.order);
+        for r in &rounds {
+            if r.kernels.len() < 2 {
+                continue;
+            }
+            assert!(
+                r.footprint.fits_within(&gpu.sm_capacity()),
+                "{}: round {:?} overflows",
+                e.name,
+                r.kernels
+            );
+        }
+    }
+}
+
+#[test]
+fn policies_disagree_where_order_matters() {
+    let gpu = GpuSpec::gtx580();
+    let e = by_id("epbsessw-8").unwrap();
+    let t_fifo = sim::simulate_order(&gpu, &e.kernels, &Policy::Fifo.order(&gpu, &e.kernels));
+    let t_rev = sim::simulate_order(&gpu, &e.kernels, &Policy::Reverse.order(&gpu, &e.kernels));
+    assert!((t_fifo.makespan_ms - t_rev.makespan_ms).abs() > 1e-6);
+}
+
+#[test]
+fn mixed_experiments_produce_mixed_rounds() {
+    // EpBs-6: the algorithm must put memory-bound and compute-bound
+    // kernels in the same opening round (the paper's central heuristic).
+    let gpu = GpuSpec::gtx580();
+    let e = by_id("epbs-6").unwrap();
+    let sched = reorder(&gpu, &e.kernels);
+    let first = &sched.rounds[0];
+    let has_mem = first.iter().any(|&i| e.kernels[i].memory_bound(&gpu));
+    let has_cmp = first.iter().any(|&i| !e.kernels[i].memory_bound(&gpu));
+    assert!(has_mem && has_cmp, "round 0 = {first:?} not mixed");
+}
+
+#[test]
+fn synthetic_workloads_schedule_and_simulate() {
+    let gpu = GpuSpec::gtx580();
+    for seed in 0..20 {
+        let ks = synthetic_workload(&gpu, 10, seed);
+        let sched = reorder(&gpu, &ks);
+        let mut sorted = sched.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>(), "seed {seed}");
+        let r = sim::simulate_order(&gpu, &ks, &sched.order);
+        assert!(r.makespan_ms.is_finite() && r.makespan_ms > 0.0);
+        // Work conservation: makespan >= aggregate lower bound.
+        let work: f64 = ks.iter().map(|k| k.total_work()).sum();
+        let mem: f64 = ks.iter().map(|k| k.total_mem()).sum();
+        // Jitter can reduce total work by at most `block_jitter`.
+        let lb = gpu.makespan_lower_bound(work, mem) * (1.0 - gpu.block_jitter);
+        assert!(r.makespan_ms >= lb, "seed {seed}: {} < {lb}", r.makespan_ms);
+    }
+}
+
+#[test]
+fn cli_binary_smoke() {
+    // The CLI is part of the public surface; run the cheap subcommands.
+    let bin = env!("CARGO_BIN_EXE_kreorder");
+    let out = std::process::Command::new(bin).arg("help").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("table3"));
+
+    let out = std::process::Command::new(bin)
+        .args(["sweep", "--exp", "epbs-6"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("720 permutations"), "{text}");
+
+    let out = std::process::Command::new(bin)
+        .args(["sched", "--exp", "ep-6-shm"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Algorithm 1 order"));
+
+    let out = std::process::Command::new(bin).arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,132 @@
+//! Integration: AOT artifacts → PJRT runtime → correct numerics.
+//!
+//! Requires `make artifacts` (the Makefile's `test-rust` target
+//! guarantees this). These tests exercise the same path the coordinator's
+//! hot loop uses.
+
+use kreorder::profile::ArtifactStore;
+use kreorder::runtime::Runtime;
+use std::cell::OnceCell;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    // Tests run from the crate root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+thread_local! {
+    // The PJRT handles are !Send, so each test thread owns a runtime
+    // (mirroring the coordinator's worker-owns-runtime design).
+    static RT: OnceCell<Runtime> = const { OnceCell::new() };
+}
+
+fn with_runtime<T>(f: impl FnOnce(&Runtime) -> T) -> T {
+    RT.with(|cell| {
+        let rt = cell.get_or_init(|| {
+            let store = ArtifactStore::load(artifacts_dir()).expect("run `make artifacts` first");
+            Runtime::new(store).expect("PJRT CPU client")
+        });
+        f(rt)
+    })
+}
+
+#[test]
+fn manifest_lists_all_four_apps() {
+    let store = ArtifactStore::load(artifacts_dir()).unwrap();
+    let mut apps: Vec<String> = store
+        .manifest
+        .variants
+        .values()
+        .map(|v| v.app.clone())
+        .collect();
+    apps.sort();
+    apps.dedup();
+    assert_eq!(
+        apps,
+        vec!["blackscholes", "electrostatics", "ep", "smith_waterman"]
+    );
+}
+
+#[test]
+fn ep_executes_with_sane_tally() {
+    let out = with_runtime(|rt| rt.execute("ep_16k", 0).unwrap());
+    // Output: one leaf of 13 floats (10 annulus counts, sumx, sumy, accepted).
+    assert_eq!(out.outputs.len(), 1);
+    let leaf = &out.outputs[0];
+    assert_eq!(leaf.len(), 13);
+    let counts_sum: f32 = leaf[..10].iter().sum();
+    let accepted = leaf[12];
+    assert!((counts_sum - accepted).abs() < 1.0, "{counts_sum} vs {accepted}");
+    // Marsaglia acceptance ratio ~ pi/4 of 16384.
+    let ratio = accepted / 16384.0;
+    assert!((0.75..0.82).contains(&ratio), "acceptance {ratio}");
+}
+
+#[test]
+fn blackscholes_prices_are_positive_and_bounded() {
+    let out = with_runtime(|rt| rt.execute("blackscholes_16k", 7).unwrap());
+    assert_eq!(out.outputs.len(), 2); // call, put
+    for leaf in &out.outputs {
+        assert_eq!(leaf.len(), 16384);
+        assert!(leaf.iter().all(|x| x.is_finite()));
+    }
+    // Calls are non-negative and below the max spot (30).
+    assert!(out.outputs[0].iter().all(|&c| (-1e-3..30.5).contains(&c)));
+}
+
+#[test]
+fn electrostatics_potential_finite() {
+    let out = with_runtime(|rt| rt.execute("electrostatics_1kx512", 3).unwrap());
+    assert_eq!(out.outputs.len(), 1);
+    assert_eq!(out.outputs[0].len(), 1024);
+    assert!(out.outputs[0].iter().all(|x| x.is_finite()));
+    // Potentials can't all be zero for random charges.
+    assert!(out.outputs[0].iter().any(|&x| x.abs() > 1e-3));
+}
+
+#[test]
+fn smith_waterman_scores_in_range() {
+    let out = with_runtime(|rt| rt.execute("smith_waterman_64x48", 11).unwrap());
+    assert_eq!(out.outputs.len(), 1);
+    let scores = &out.outputs[0];
+    assert_eq!(scores.len(), 64);
+    // Local alignment scores: 0 <= s <= len * MATCH = 48 * 3.
+    assert!(scores.iter().all(|&s| (0.0..=144.0).contains(&s)));
+    // Random 4-letter sequences of length 48 essentially always align
+    // somewhere with positive score.
+    assert!(scores.iter().all(|&s| s > 0.0));
+}
+
+#[test]
+fn execution_is_deterministic_per_seed() {
+    let a = with_runtime(|rt| rt.execute("ep_16k", 42).unwrap());
+    let b = with_runtime(|rt| rt.execute("ep_16k", 42).unwrap());
+    assert_eq!(a.outputs, b.outputs);
+    let c = with_runtime(|rt| rt.execute("ep_16k", 43).unwrap());
+    assert_ne!(a.outputs, c.outputs);
+}
+
+#[test]
+fn unknown_variant_is_an_error() {
+    assert!(with_runtime(|rt| rt.execute("not_a_variant", 0).is_err()));
+}
+
+#[test]
+fn preload_all_compiles_every_variant() {
+    with_runtime(|rt| rt.preload_all().unwrap());
+    // After preloading, executions should be fast (cache hits) — just
+    // verify they still work.
+    let names = with_runtime(|rt| rt.store().variant_names());
+    for name in names {
+        let out = with_runtime(|rt| rt.execute(&name, 1).unwrap());
+        assert!(!out.outputs.is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn checksum_is_stable_fingerprint() {
+    let a = with_runtime(|rt| rt.execute("blackscholes_16k", 5).unwrap());
+    let b = with_runtime(|rt| rt.execute("blackscholes_16k", 5).unwrap());
+    assert_eq!(a.checksum(), b.checksum());
+    assert!(a.checksum().is_finite());
+}

@@ -1,0 +1,285 @@
+//! Property-based tests over randomized workloads.
+//!
+//! The offline environment ships no proptest crate, so these use the
+//! in-tree deterministic generator (`synthetic_workload` + `SplitMix64`):
+//! every case reports its seed on failure, making reproduction a
+//! one-liner. Each property runs across hundreds of seeded cases.
+
+use kreorder::gpu::{GpuSpec, KernelProfile, ResourceVec};
+use kreorder::perm::for_each_permutation;
+use kreorder::sched::{reorder, reorder_with, CombinedProfile, ScoreConfig};
+use kreorder::sim::{
+    self, rounds::pack_rounds, simulate_order, simulate_order_traced, BlockEvent,
+};
+use kreorder::util::SplitMix64;
+use kreorder::workloads::synthetic_workload;
+
+const CASES: u64 = 150;
+
+fn gpu() -> GpuSpec {
+    GpuSpec::gtx580()
+}
+
+fn workload(seed: u64) -> Vec<KernelProfile> {
+    let n = 2 + (seed % 7) as usize; // 2..=8 kernels
+    synthetic_workload(&gpu(), n, seed)
+}
+
+/// Any permutation of the workload must simulate to a finite, positive
+/// makespan that is at least the roofline lower bound (work conservation)
+/// and every kernel must finish by the makespan.
+#[test]
+fn prop_simulation_work_conservation() {
+    for seed in 0..CASES {
+        let g = gpu();
+        let ks = workload(seed);
+        let mut order: Vec<usize> = (0..ks.len()).collect();
+        SplitMix64::new(seed).shuffle(&mut order);
+        let r = simulate_order(&g, &ks, &order);
+        assert!(r.makespan_ms.is_finite() && r.makespan_ms > 0.0, "seed {seed}");
+        let work: f64 = ks.iter().map(|k| k.total_work()).sum();
+        let mem: f64 = ks.iter().map(|k| k.total_mem()).sum();
+        let lb = g.makespan_lower_bound(work, mem) * (1.0 - g.block_jitter);
+        assert!(
+            r.makespan_ms >= lb * (1.0 - 1e-9),
+            "seed {seed}: makespan {} < lower bound {lb}",
+            r.makespan_ms
+        );
+        for (i, &f) in r.kernel_finish_ms.iter().enumerate() {
+            assert!(f > 0.0 && f <= r.makespan_ms * (1.0 + 1e-12), "seed {seed} kernel {i}");
+        }
+    }
+}
+
+/// The traced simulation places and finishes every block exactly once,
+/// with monotone timestamps, and never exceeds SM resources at any
+/// instant (replayed from the trace).
+#[test]
+fn prop_trace_resource_safety() {
+    for seed in 0..CASES / 3 {
+        let g = gpu();
+        let ks = workload(seed);
+        let order: Vec<usize> = (0..ks.len()).collect();
+        let r = simulate_order_traced(&g, &ks, &order);
+        let total_blocks: u32 = ks.iter().map(|k| k.n_blocks).sum();
+
+        let mut placed = 0u32;
+        let mut finished = 0u32;
+        let mut last_t = 0.0f64;
+        let cap = g.sm_capacity();
+        let mut used: Vec<ResourceVec> = vec![ResourceVec::ZERO; g.n_sm as usize];
+        for ev in &r.trace {
+            assert!(ev.t_ms >= last_t - 1e-12, "seed {seed}: time went backwards");
+            last_t = ev.t_ms;
+            let res = ks[ev.kernel].block_resources();
+            match ev.kind {
+                sim::BlockEventKind::Placed => {
+                    placed += 1;
+                    used[ev.sm as usize] += res;
+                    assert!(
+                        used[ev.sm as usize].fits_within(&cap),
+                        "seed {seed}: SM {} over capacity at t={}",
+                        ev.sm,
+                        ev.t_ms
+                    );
+                }
+                sim::BlockEventKind::Finished => {
+                    finished += 1;
+                    used[ev.sm as usize] -= res;
+                    assert!(used[ev.sm as usize].non_negative(), "seed {seed}");
+                }
+            }
+        }
+        assert_eq!(placed, total_blocks, "seed {seed}");
+        assert_eq!(finished, total_blocks, "seed {seed}");
+    }
+}
+
+/// Algorithm 1 always emits a permutation, for every score configuration.
+#[test]
+fn prop_scheduler_emits_permutation() {
+    let configs = [
+        ScoreConfig::default(),
+        ScoreConfig::paper_strict(),
+        ScoreConfig {
+            resource_balance: false,
+            ..ScoreConfig::default()
+        },
+        ScoreConfig {
+            ratio_balance: false,
+            ..ScoreConfig::default()
+        },
+        ScoreConfig {
+            shm_sort: false,
+            ..ScoreConfig::default()
+        },
+    ];
+    for seed in 0..CASES {
+        let g = gpu();
+        let ks = workload(seed);
+        for (ci, cfg) in configs.iter().enumerate() {
+            let s = reorder_with(&g, &ks, cfg);
+            let mut sorted = s.order.clone();
+            sorted.sort_unstable();
+            assert_eq!(
+                sorted,
+                (0..ks.len()).collect::<Vec<_>>(),
+                "seed {seed} config {ci}"
+            );
+            // Rounds partition the order.
+            let flat: Vec<usize> = s.rounds.iter().flatten().copied().collect();
+            assert_eq!(flat, s.order, "seed {seed} config {ci}");
+        }
+    }
+}
+
+/// The algorithm's analytic rounds never violate per-SM capacity.
+#[test]
+fn prop_rounds_respect_capacity() {
+    for seed in 0..CASES {
+        let g = gpu();
+        let ks = workload(seed);
+        let s = reorder(&g, &ks);
+        for round in &s.rounds {
+            // Singleton rounds may exceed capacity (multi-wave kernels).
+            if round.len() < 2 {
+                continue;
+            }
+            let mut used = ResourceVec::ZERO;
+            for &k in round {
+                used += ks[k].per_sm_footprint(&g);
+            }
+            assert!(
+                used.fits_within(&g.sm_capacity()),
+                "seed {seed}: round {round:?}"
+            );
+        }
+    }
+}
+
+/// ProfileCombine is commutative and associative (in resources, work and
+/// memory), matching the paper's virtual-kernel construction.
+#[test]
+fn prop_profile_combine_algebra() {
+    for seed in 0..CASES {
+        let g = gpu();
+        let ks = synthetic_workload(&g, 3, seed);
+        let (a, b, c) = (
+            CombinedProfile::of(&g, &ks[0]),
+            CombinedProfile::of(&g, &ks[1]),
+            CombinedProfile::of(&g, &ks[2]),
+        );
+        let ab = a.combine(&b);
+        let ba = b.combine(&a);
+        assert_eq!(ab, ba, "seed {seed}");
+        let abc1 = ab.combine(&c);
+        let abc2 = a.combine(&b.combine(&c));
+        assert!(
+            (abc1.work - abc2.work).abs() < 1e-9
+                && (abc1.mem - abc2.mem).abs() < 1e-9
+                && (abc1.footprint.warps - abc2.footprint.warps).abs() < 1e-9,
+            "seed {seed}"
+        );
+    }
+}
+
+/// Identical kernels (same profile, any multiplicity) are order-invariant
+/// — the paper's scope claim, exactly, even with jitter enabled.
+#[test]
+fn prop_identical_kernels_order_invariant() {
+    for seed in 0..40 {
+        let g = gpu();
+        let mut rng = SplitMix64::new(seed);
+        let base = &synthetic_workload(&g, 1, seed)[0];
+        let n = 3 + rng.below(2); // 3..=4 kernels (n! sims each)
+        let ks: Vec<KernelProfile> = (0..n).map(|_| base.clone()).collect();
+        let mut idx: Vec<usize> = (0..n).collect();
+        let reference = simulate_order(&g, &ks, &idx);
+        let mut worst_dev = 0.0f64;
+        for_each_permutation(&mut idx, &mut |p| {
+            let t = simulate_order(&g, &ks, p).makespan_ms;
+            worst_dev = worst_dev.max((t - reference.makespan_ms).abs() / reference.makespan_ms);
+        });
+        assert!(worst_dev < 1e-9, "seed {seed}: deviation {worst_dev}");
+    }
+}
+
+/// The exhaustive best order is at least as good as the algorithm's, and
+/// the algorithm's at least as good as the exhaustive worst (sanity of
+/// the Table-3 columns) — on small workloads where the sweep is cheap.
+#[test]
+fn prop_algorithm_within_sweep_bounds() {
+    for seed in 0..40 {
+        let g = gpu();
+        let ks = synthetic_workload(&g, 5, seed);
+        let sw = kreorder::perm::sweep(&g, &ks);
+        let t_alg = simulate_order(&g, &ks, &reorder(&g, &ks).order).makespan_ms;
+        assert!(t_alg >= sw.best_ms * (1.0 - 1e-9), "seed {seed}");
+        assert!(t_alg <= sw.worst_ms * (1.0 + 1e-9), "seed {seed}");
+    }
+}
+
+/// Percentile rank is antitone: a faster time never ranks lower.
+#[test]
+fn prop_percentile_antitone() {
+    for seed in 0..30 {
+        let g = gpu();
+        let ks = synthetic_workload(&g, 4, seed);
+        let sw = kreorder::perm::sweep(&g, &ks);
+        let probes = [sw.best_ms, sw.median_ms(), sw.worst_ms, sw.best_ms * 0.9];
+        for a in &probes {
+            for b in &probes {
+                if a < b {
+                    assert!(
+                        sw.percentile_rank(*a) >= sw.percentile_rank(*b) - 1e-9,
+                        "seed {seed}: rank({a}) < rank({b})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Round packing (analytic model) partitions the kernels for any order.
+#[test]
+fn prop_pack_rounds_partitions() {
+    for seed in 0..CASES {
+        let g = gpu();
+        let ks = workload(seed);
+        let mut order: Vec<usize> = (0..ks.len()).collect();
+        SplitMix64::new(seed ^ 0xABCD).shuffle(&mut order);
+        let rounds = pack_rounds(&g, &ks, &order);
+        let flat: Vec<usize> = rounds.iter().flat_map(|r| r.kernels.clone()).collect();
+        assert_eq!(flat, order, "seed {seed}");
+    }
+}
+
+/// Dispatch is head-of-line in kernel-launch order: a kernel's first
+/// block is never placed before an earlier kernel's first block.
+#[test]
+fn prop_dispatch_respects_launch_order() {
+    for seed in 0..CASES / 3 {
+        let g = gpu();
+        let ks = workload(seed);
+        let mut order: Vec<usize> = (0..ks.len()).collect();
+        SplitMix64::new(seed ^ 0x1234).shuffle(&mut order);
+        let r = simulate_order_traced(&g, &ks, &order);
+        let placements: Vec<&BlockEvent> = r
+            .trace
+            .iter()
+            .filter(|e| e.kind == sim::BlockEventKind::Placed)
+            .collect();
+        // Record the position of each kernel's first placement; it must
+        // follow the launch order.
+        let mut first_seen: Vec<Option<usize>> = vec![None; ks.len()];
+        for (pos, ev) in placements.iter().enumerate() {
+            if first_seen[ev.kernel].is_none() {
+                first_seen[ev.kernel] = Some(pos);
+            }
+        }
+        let firsts: Vec<usize> = order.iter().map(|&k| first_seen[k].unwrap()).collect();
+        for w in firsts.windows(2) {
+            assert!(w[0] < w[1], "seed {seed}: launch order violated");
+        }
+    }
+}
