@@ -6,10 +6,10 @@
 //!
 //! Run with: `cargo run --release --example ablation`
 
+use kreorder::exec::{ExecutionBackend, SimulatorBackend};
 use kreorder::gpu::GpuSpec;
 use kreorder::perm::sweep;
 use kreorder::sched::{reorder_with, RoundOrder, ScoreConfig};
-use kreorder::sim::simulate_order;
 use kreorder::workloads::{all_experiments, synthetic_workload};
 
 fn configs() -> Vec<(&'static str, ScoreConfig)> {
@@ -57,6 +57,7 @@ fn configs() -> Vec<(&'static str, ScoreConfig)> {
 fn main() {
     let gpu = GpuSpec::gtx580();
     let cfgs = configs();
+    let mut backend = SimulatorBackend::new();
 
     // Header.
     print!("| Workload |");
@@ -76,7 +77,7 @@ fn main() {
         print!("| {} |", e.name);
         for (_, cfg) in &cfgs {
             let order = reorder_with(&gpu, &e.kernels, cfg).order;
-            let t = simulate_order(&gpu, &e.kernels, &order).makespan_ms;
+            let t = backend.execute(&gpu, &e.kernels, &order).makespan_ms;
             print!(" {:.1} ({:.0}%) |", t, sw.percentile_rank(t));
         }
         println!();
@@ -92,7 +93,7 @@ fn main() {
             .map(|&s| {
                 let ks = synthetic_workload(&gpu, 8, s);
                 let order = reorder_with(&gpu, &ks, cfg).order;
-                simulate_order(&gpu, &ks, &order).makespan_ms
+                backend.execute(&gpu, &ks, &order).makespan_ms
             })
             .sum::<f64>()
             / seeds.len() as f64;

@@ -4,8 +4,9 @@
 //!
 //! Run with: `cargo run --release --example quickstart`
 
+use kreorder::exec::{ExecutionBackend, SimulatorBackend};
 use kreorder::gpu::GpuSpec;
-use kreorder::sched::{reorder, Policy};
+use kreorder::sched::{registry, reorder};
 use kreorder::sim::{self, rounds::pack_rounds};
 use kreorder::workloads::{blackscholes, electrostatics, ep, smith_waterman};
 
@@ -53,22 +54,21 @@ fn main() {
         );
     }
 
-    // Compare against the baselines on the simulated GPU.
-    println!("\nsimulated GTX580 makespan:");
+    // Compare every registered policy on the simulator backend — the
+    // same trait seams the coordinator and benches dispatch through.
+    let mut backend = SimulatorBackend::new();
+    println!("\n{} GTX580 makespan per registered policy:", backend.name());
     let mut fifo_ms = 0.0;
-    for policy in [Policy::Fifo, Policy::Reverse, Policy::Algorithm1] {
+    let mut alg_ms = 0.0;
+    for policy in registry::all_policies() {
         let order = policy.order(&gpu, &kernels);
-        let result = sim::simulate_order(&gpu, &kernels, &order);
-        if policy == Policy::Fifo {
-            fifo_ms = result.makespan_ms;
+        let t = backend.execute(&gpu, &kernels, &order).makespan_ms;
+        match policy.name().as_str() {
+            "fifo" => fifo_ms = t,
+            "algorithm1" => alg_ms = t,
+            _ => {}
         }
-        println!(
-            "  {:<12} {:>8.2} ms   (avg warp occupancy {:>4.1}%)",
-            policy.to_string(),
-            result.makespan_ms,
-            result.avg_warp_occupancy * 100.0
-        );
+        println!("  {:<18} {:>8.2} ms", policy.name(), t);
     }
-    let alg = sim::simulate_order(&gpu, &kernels, &schedule.order).makespan_ms;
-    println!("\nreordering speedup vs FIFO: {:.3}x", fifo_ms / alg);
+    println!("\nreordering speedup vs FIFO: {:.3}x", fifo_ms / alg_ms);
 }

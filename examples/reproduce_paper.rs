@@ -10,11 +10,11 @@
 //!     EpBsEsSw-8 launch orders (Fig. 1 top panel)
 //!   * `fig1_distribution.csv`    — histogram of the same (bottom panel)
 
+use kreorder::exec::{ExecutionBackend, SimulatorBackend};
 use kreorder::gpu::GpuSpec;
 use kreorder::metrics::{ExperimentRow, Histogram, Table3};
 use kreorder::perm::sweep;
-use kreorder::sched::reorder;
-use kreorder::sim::simulate_order;
+use kreorder::sched::{registry, LaunchPolicy};
 use kreorder::workloads::all_experiments;
 
 /// Paper values for side-by-side comparison (Table 3 of the paper):
@@ -33,14 +33,16 @@ fn main() {
     std::fs::create_dir_all(&out_dir).expect("create out_dir");
     let gpu = GpuSpec::gtx580();
     let mut table = Table3::default();
+    let policy: Box<dyn LaunchPolicy> = registry::parse("algorithm1").unwrap();
+    let mut backend: Box<dyn ExecutionBackend> = Box::new(SimulatorBackend::new());
 
     println!("== Table 3 ==");
     for e in all_experiments() {
         let n_perms: usize = (1..=e.kernels.len()).product();
         eprintln!("  {} ({} permutations)…", e.name, n_perms);
         let sw = sweep(&gpu, &e.kernels);
-        let sched = reorder(&gpu, &e.kernels);
-        let t_alg = simulate_order(&gpu, &e.kernels, &sched.order).makespan_ms;
+        let order = policy.order(&gpu, &e.kernels);
+        let t_alg = backend.execute(&gpu, &e.kernels, &order).makespan_ms;
         let row = ExperimentRow {
             name: e.name.to_string(),
             optimal_ms: sw.best_ms,

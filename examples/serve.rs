@@ -14,11 +14,10 @@
 //! speedup of reordering vs arrival order. The run is recorded in
 //! EXPERIMENTS.md §End-to-end.
 
-use kreorder::coordinator::{Coordinator, CoordinatorConfig, LaunchRequest};
+use kreorder::coordinator::{CoordinatorBuilder, LaunchRequest};
 use kreorder::gpu::GpuSpec;
 use kreorder::metrics::percentile;
 use kreorder::profile::ArtifactStore;
-use kreorder::sched::Policy;
 use kreorder::util::SplitMix64;
 use kreorder::workloads::synthetic_workload;
 use std::time::{Duration, Instant};
@@ -35,6 +34,7 @@ fn arg(key: &str, default: usize) -> usize {
 fn main() -> anyhow::Result<()> {
     let n_requests = arg("--requests", 64);
     let window = arg("--window", 8);
+    let devices = arg("--devices", 1);
     let seed = arg("--seed", 0) as u64;
 
     let artifacts = ArtifactStore::default_dir();
@@ -45,15 +45,18 @@ fn main() -> anyhow::Result<()> {
     );
 
     let gpu = GpuSpec::gtx580();
-    let coord = Coordinator::start(CoordinatorConfig {
-        gpu: gpu.clone(),
-        policy: Policy::Algorithm1,
-        window,
-        linger: Duration::from_millis(5),
-        artifacts_dir: Some(artifacts),
-    });
+    let coord = CoordinatorBuilder::new()
+        .gpu(gpu.clone())
+        .policy_named("algorithm1")?
+        .pjrt_backend(artifacts)
+        .devices(devices)
+        .window(window)
+        .linger(Duration::from_millis(5))
+        .start();
 
-    println!("serving {n_requests} kernel launches (window {window}, policy algorithm1)…");
+    println!(
+        "serving {n_requests} kernel launches (window {window}, devices {devices}, policy algorithm1)…"
+    );
     let t0 = Instant::now();
     let mut rng = SplitMix64::new(seed);
     let mut latencies = Vec::with_capacity(n_requests);
@@ -86,11 +89,12 @@ fn main() -> anyhow::Result<()> {
     let (reports, stats) = coord.shutdown();
 
     println!("\nper-batch simulated GTX580 comparison:");
-    println!("  batch   n   fifo(ms)  reordered(ms)  speedup");
+    println!("  batch  dev   n   fifo(ms)  reordered(ms)  speedup");
     for r in &reports {
         println!(
-            "  {:>5} {:>3} {:>10.2} {:>13.2} {:>8.3}x",
+            "  {:>5} {:>4} {:>3} {:>10.2} {:>13.2} {:>8.3}x",
             r.batch_id,
+            r.device,
             r.n,
             r.sim_fifo_ms,
             r.sim_policy_ms,

@@ -10,14 +10,16 @@
 #[path = "harness/mod.rs"]
 mod harness;
 
+use kreorder::exec::{ExecutionBackend, SimulatorBackend};
 use kreorder::gpu::GpuSpec;
 use kreorder::perm::sweep;
 use kreorder::sched::{reorder_with, RoundOrder, ScoreConfig};
-use kreorder::sim::{rounds::pack_rounds, simulate_order};
+use kreorder::sim::rounds::pack_rounds;
 use kreorder::workloads::{all_experiments, synthetic_workload};
 
 fn main() {
     let gpu = GpuSpec::gtx580();
+    let mut backend: Box<dyn ExecutionBackend> = Box::new(SimulatorBackend::new());
 
     let configs: Vec<(&str, ScoreConfig)> = vec![
         ("full", ScoreConfig::default()),
@@ -40,7 +42,7 @@ fn main() {
         print!("{:<14}", e.id);
         for (_, cfg) in &configs {
             let order = reorder_with(&gpu, &e.kernels, cfg).order;
-            let t = simulate_order(&gpu, &e.kernels, &order).makespan_ms;
+            let t = backend.execute(&gpu, &e.kernels, &order).makespan_ms;
             print!(" | {:>8.1} {:>5.1}%", t, sw.percentile_rank(t));
         }
         println!();
@@ -52,7 +54,7 @@ fn main() {
             .map(|s| {
                 let ks = synthetic_workload(&gpu, 8, s);
                 let order = reorder_with(&gpu, &ks, cfg).order;
-                simulate_order(&gpu, &ks, &order).makespan_ms
+                backend.execute(&gpu, &ks, &order).makespan_ms
             })
             .sum::<f64>()
             / 100.0;
@@ -70,7 +72,7 @@ fn main() {
             let mut order: Vec<usize> = (0..n).collect();
             rng.shuffle(&mut order);
             let rounds = pack_rounds(&gpu, &e.kernels, &order).len() as f64;
-            let t = simulate_order(&gpu, &e.kernels, &order).makespan_ms;
+            let t = backend.execute(&gpu, &e.kernels, &order).makespan_ms;
             pairs.push((rounds, t));
         }
         println!(

@@ -1,0 +1,56 @@
+//! Bench: what does the trait redesign cost? Dynamic dispatch
+//! (`Box<dyn LaunchPolicy>`) vs the legacy closed-enum path, on the
+//! coordinator-relevant batch sizes (8–64 kernels).
+//!
+//! The coordinator invokes the policy once per *batch*, so even a large
+//! relative overhead would be irrelevant in absolute terms — but the
+//! redesign's cost should be measured, not assumed. FIFO isolates the
+//! pure dispatch overhead (the policy body is a trivial collect);
+//! Algorithm 1 shows how completely real scheduling work amortizes it.
+
+#![allow(deprecated)]
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use kreorder::gpu::GpuSpec;
+use kreorder::sched::{registry, LaunchPolicy, Policy};
+use kreorder::workloads::synthetic_workload;
+
+fn main() {
+    let gpu = GpuSpec::gtx580();
+    let samples = harness::sample_count(200);
+
+    for n in [8usize, 16, 32, 64] {
+        let ks = synthetic_workload(&gpu, n, 42);
+        harness::section(&format!("{n}-kernel batch"));
+
+        // --- FIFO: the policy body is trivial, so this pair isolates the
+        // enum-match vs vtable-call difference.
+        let enum_fifo = Policy::Fifo;
+        harness::bench(&format!("enum/fifo/{n}"), 20, samples, || {
+            std::hint::black_box(enum_fifo.order(&gpu, &ks));
+        });
+        let dyn_fifo: Box<dyn LaunchPolicy> = registry::parse("fifo").unwrap();
+        harness::bench(&format!("dyn/fifo/{n}"), 20, samples, || {
+            std::hint::black_box(dyn_fifo.order(&gpu, &ks));
+        });
+
+        // --- Algorithm 1: real scheduling work (O(n^2) scoring) on both
+        // paths; the dispatch difference should vanish in the noise.
+        let enum_alg = Policy::Algorithm1;
+        harness::bench(&format!("enum/algorithm1/{n}"), 5, samples, || {
+            std::hint::black_box(enum_alg.order(&gpu, &ks));
+        });
+        let dyn_alg: Box<dyn LaunchPolicy> = registry::parse("algorithm1").unwrap();
+        harness::bench(&format!("dyn/algorithm1/{n}"), 5, samples, || {
+            std::hint::black_box(dyn_alg.order(&gpu, &ks));
+        });
+
+        // --- Registry parse cost (done once per service start, shown for
+        // completeness).
+        harness::bench(&format!("registry/parse/{n}"), 20, samples, || {
+            std::hint::black_box(registry::parse("algorithm1").unwrap());
+        });
+    }
+}

@@ -6,7 +6,7 @@
 mod harness;
 
 use kreorder::gpu::GpuSpec;
-use kreorder::sched::{reorder, Policy};
+use kreorder::sched::{registry, reorder};
 use kreorder::workloads::{all_experiments, synthetic_workload};
 
 fn main() {
@@ -28,10 +28,10 @@ fn main() {
         });
     }
 
-    harness::section("baseline policies (8 kernels)");
+    harness::section("registered policies (8 kernels, trait dispatch)");
     let ks = synthetic_workload(&gpu, 8, 5);
-    for p in [Policy::Fifo, Policy::Reverse, Policy::Random(1), Policy::Algorithm1] {
-        harness::bench(&format!("policy/{p}"), 10, samples, || {
+    for p in registry::all_policies() {
+        harness::bench(&format!("policy/{}", p.name()), 10, samples, || {
             std::hint::black_box(p.order(&gpu, &ks));
         });
     }

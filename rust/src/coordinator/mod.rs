@@ -1,27 +1,46 @@
-//! The launch coordinator — the deployable system around Algorithm 1.
+//! The launch coordinator — the deployable system around the scheduling
+//! policies.
 //!
 //! A CUDA application (or, here, a request stream) submits kernel launches
 //! in arrival order. The coordinator batches them in a *reorder window*,
-//! derives a launch order with the configured [`crate::sched::Policy`]
-//! (Algorithm 1 by default), and dispatches the batch:
+//! derives a launch order with the configured [`crate::sched::LaunchPolicy`]
+//! (Algorithm 1 by default), and round-robins complete batches across N
+//! *device workers*, each of which dispatches through its own
+//! [`crate::exec::ExecutionBackend`]:
 //!
-//! * **simulated GPU** — every batch is timed on the [`crate::sim`]
+//! * **simulator / analytic backends** — every batch is timed on the
 //!   GTX580 model under both FIFO and the chosen order (the paper's
 //!   before/after comparison, reported per batch);
-//! * **real payloads** — when constructed with artifacts, each kernel's
-//!   AOT-compiled HLO is actually executed on the PJRT CPU client in the
-//!   reordered sequence, so the service produces real numerics end to end
-//!   (Python never runs on this path).
+//! * **PJRT backend** (`--features pjrt`) — each kernel's AOT-compiled
+//!   HLO is actually executed on the PJRT CPU client in the reordered
+//!   sequence, so the service produces real numerics end to end (Python
+//!   never runs on this path).
 //!
-//! Threading: one worker thread owns the PJRT runtime (the underlying C
-//! handles are not `Send`), fed by an MPSC submission queue; responses
-//! travel over per-request channels. This is the std-library analogue of
-//! the usual tokio actor shape.
+//! Threading: a dispatcher thread owns batching (window + linger) and
+//! feeds per-device worker threads over MPSC channels; each worker builds
+//! its backend on its own thread via the configured factory (the PJRT C
+//! handles are not `Send`). Responses travel over per-request channels.
+//! This is the std-library analogue of the usual tokio actor shape.
+//!
+//! Construct with [`CoordinatorBuilder`]:
+//!
+//! ```no_run
+//! use kreorder::coordinator::CoordinatorBuilder;
+//!
+//! let coord = CoordinatorBuilder::new()
+//!     .policy_named("algorithm1").unwrap()
+//!     .devices(2)
+//!     .window(8)
+//!     .start();
+//! ```
 
 mod service;
 mod stats;
 
+#[allow(deprecated)]
+pub use service::CoordinatorConfig;
 pub use service::{
-    BatchReport, Coordinator, CoordinatorConfig, LaunchHandle, LaunchRequest, LaunchResponse,
+    BackendFactory, BatchReport, Coordinator, CoordinatorBuilder, LaunchHandle, LaunchRequest,
+    LaunchResponse,
 };
 pub use stats::ServiceStats;

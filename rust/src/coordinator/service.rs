@@ -1,43 +1,36 @@
-//! Coordinator service: submission queue, reorder window, dual dispatch.
+//! Coordinator service: submission queue, reorder window, multi-device
+//! dispatch through [`LaunchPolicy`] + [`ExecutionBackend`] trait objects.
+//!
+//! Thread shape:
+//!
+//! ```text
+//! submitters --MPSC--> dispatcher (batching: window + linger)
+//!                          |  round-robin by batch id
+//!                          +--> device worker 0 (own ExecutionBackend)
+//!                          +--> device worker 1
+//!                          +--> …
+//! ```
+//!
+//! The dispatcher owns batching only; each *device worker* owns a backend
+//! instance built on its own thread by the configured factory (the PJRT
+//! handles are `!Send`, so backends must be born where they run) plus a
+//! [`SimulatorBackend`] used for the per-batch FIFO-vs-policy comparison.
 
 use super::stats::ServiceStats;
+use crate::exec::{ExecutionBackend, SimulatorBackend};
 use crate::gpu::{GpuSpec, KernelProfile};
-use crate::runtime::Runtime;
-use crate::sched::Policy;
+use crate::sched::{registry, Algorithm1Policy, LaunchPolicy, PolicyParseError};
 use crate::sim;
 use anyhow::Result;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Coordinator configuration.
-#[derive(Debug, Clone)]
-pub struct CoordinatorConfig {
-    /// Simulated GPU model (defaults to the paper's GTX580).
-    pub gpu: GpuSpec,
-    /// Launch-order policy applied to each batch.
-    pub policy: Policy,
-    /// Reorder window: max launches batched together.
-    pub window: usize,
-    /// How long the batcher waits for more work once a batch has started
-    /// filling (the "linger", as in serving systems).
-    pub linger: Duration,
-    /// Artifacts directory for real PJRT execution; `None` = simulate
-    /// timing only (no payload execution).
-    pub artifacts_dir: Option<std::path::PathBuf>,
-}
-
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        CoordinatorConfig {
-            gpu: GpuSpec::gtx580(),
-            policy: Policy::Algorithm1,
-            window: 8,
-            linger: Duration::from_millis(2),
-            artifacts_dir: None,
-        }
-    }
-}
+/// Factory producing one [`ExecutionBackend`] per device worker thread.
+/// Called on the worker's own thread, so the backend itself need not be
+/// `Send`.
+pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn ExecutionBackend>> + Send + Sync>;
 
 /// One kernel-launch request.
 #[derive(Debug, Clone)]
@@ -55,11 +48,10 @@ pub struct LaunchRequest {
 #[derive(Debug, Clone)]
 pub struct LaunchResponse {
     pub id: u64,
-    /// Numeric fingerprint of the real output (`NaN` when running
-    /// simulation-only).
+    /// Numeric fingerprint of the real output (`NaN` when running a model
+    /// backend, `-inf` when the payload failed).
     pub checksum: f64,
-    /// Wall-clock PJRT execution time of this kernel (0 when
-    /// simulation-only).
+    /// Wall-clock execution time of this kernel (0 for model backends).
     pub exec_wall_ms: f64,
     /// Time from submission to response.
     pub latency_ms: f64,
@@ -67,20 +59,28 @@ pub struct LaunchResponse {
     /// reordered launch sequence.
     pub batch_id: u64,
     pub position: usize,
+    /// Which device worker executed the batch.
+    pub device: usize,
 }
 
 /// Per-batch accounting (the serving example prints these).
 #[derive(Debug, Clone)]
 pub struct BatchReport {
     pub batch_id: u64,
+    /// Device worker that executed the batch.
+    pub device: usize,
     pub n: usize,
     /// Positions into the batch, in reordered launch order.
     pub order: Vec<usize>,
+    /// Name of the policy that produced `order`.
+    pub policy: String,
+    /// Name of the backend that executed the batch.
+    pub backend: String,
     /// Simulated GTX580 makespan under FIFO (arrival) order.
     pub sim_fifo_ms: f64,
     /// Simulated makespan under the applied policy order.
     pub sim_policy_ms: f64,
-    /// Wall-clock time to execute the whole batch's real payloads.
+    /// Wall-clock time to execute the whole batch's payloads.
     pub exec_wall_ms: f64,
 }
 
@@ -101,6 +101,144 @@ impl LaunchHandle {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Builder for the coordinator service.
+///
+/// Defaults: GTX580 model, Algorithm 1 policy, simulator backend, one
+/// device, window 8, linger 2 ms.
+///
+/// ```no_run
+/// use kreorder::coordinator::CoordinatorBuilder;
+/// use kreorder::sched::SjfPolicy;
+///
+/// let coord = CoordinatorBuilder::new()
+///     .policy(SjfPolicy)
+///     .devices(2)
+///     .window(16)
+///     .start();
+/// ```
+pub struct CoordinatorBuilder {
+    gpu: GpuSpec,
+    policy: Arc<dyn LaunchPolicy>,
+    backend: BackendFactory,
+    devices: usize,
+    window: usize,
+    linger: Duration,
+}
+
+impl Default for CoordinatorBuilder {
+    fn default() -> Self {
+        CoordinatorBuilder {
+            gpu: GpuSpec::gtx580(),
+            policy: Arc::new(Algorithm1Policy::new()),
+            backend: Arc::new(|| Ok(Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)),
+            devices: 1,
+            window: 8,
+            linger: Duration::from_millis(2),
+        }
+    }
+}
+
+impl CoordinatorBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Simulated GPU model (defaults to the paper's GTX580).
+    pub fn gpu(mut self, gpu: GpuSpec) -> Self {
+        self.gpu = gpu;
+        self
+    }
+
+    /// Launch-order policy applied to each batch.
+    pub fn policy<P: LaunchPolicy + 'static>(mut self, policy: P) -> Self {
+        self.policy = Arc::new(policy);
+        self
+    }
+
+    /// Launch-order policy as a shared trait object.
+    pub fn policy_arc(mut self, policy: Arc<dyn LaunchPolicy>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Launch-order policy by registry spelling (`"fifo"`,
+    /// `"random:42"`, …).
+    pub fn policy_named(self, name: &str) -> Result<Self, PolicyParseError> {
+        let p = registry::parse(name)?;
+        Ok(self.policy_arc(Arc::from(p)))
+    }
+
+    /// Execution-backend factory, called once per device worker on the
+    /// worker's own thread.
+    pub fn backend<F>(mut self, factory: F) -> Self
+    where
+        F: Fn() -> Result<Box<dyn ExecutionBackend>> + Send + Sync + 'static,
+    {
+        self.backend = Arc::new(factory);
+        self
+    }
+
+    /// Convenience: the fluid-simulator backend (the default).
+    pub fn simulator_backend(self) -> Self {
+        self.backend(|| Ok(Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>))
+    }
+
+    /// Convenience: the analytic round-model backend.
+    pub fn analytic_backend(self) -> Self {
+        self.backend(|| {
+            Ok(Box::new(crate::exec::AnalyticBackend::new()) as Box<dyn ExecutionBackend>)
+        })
+    }
+
+    /// Convenience: real PJRT payload execution from an artifacts
+    /// directory (one runtime per device worker).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt_backend(self, artifacts_dir: impl Into<std::path::PathBuf>) -> Self {
+        let dir = artifacts_dir.into();
+        self.backend(move || {
+            Ok(Box::new(crate::exec::PjrtBackend::new(&dir)?) as Box<dyn ExecutionBackend>)
+        })
+    }
+
+    /// Number of device workers batches are round-robined across
+    /// (clamped to ≥ 1).
+    pub fn devices(mut self, n: usize) -> Self {
+        self.devices = n.max(1);
+        self
+    }
+
+    /// Reorder window: max launches batched together (clamped to ≥ 1).
+    pub fn window(mut self, n: usize) -> Self {
+        self.window = n.max(1);
+        self
+    }
+
+    /// How long the batcher waits for more work once a batch has started
+    /// filling.
+    pub fn linger(mut self, d: Duration) -> Self {
+        self.linger = d;
+        self
+    }
+
+    /// Start the service.
+    pub fn start(self) -> Coordinator {
+        let (tx, rx) = channel::<Msg>();
+        let dispatcher = std::thread::spawn(move || dispatcher_loop(self, rx));
+        Coordinator {
+            tx,
+            dispatcher: Some(dispatcher),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service
+// ---------------------------------------------------------------------------
+
 enum Msg {
     Launch(LaunchRequest, Sender<LaunchResponse>, Instant),
     /// Close the current batch immediately.
@@ -108,29 +246,23 @@ enum Msg {
     Shutdown,
 }
 
-/// The coordinator service. See module docs.
+/// The coordinator service. See module docs; construct with
+/// [`CoordinatorBuilder`].
 pub struct Coordinator {
     tx: Sender<Msg>,
-    worker: Option<JoinHandle<(Vec<BatchReport>, ServiceStats)>>,
+    dispatcher: Option<JoinHandle<(Vec<BatchReport>, ServiceStats)>>,
 }
 
 impl Coordinator {
-    /// Start the service. When `cfg.artifacts_dir` is set, the worker
-    /// thread loads the PJRT runtime before accepting work (an error at
-    /// first use surfaces through the response channel).
-    pub fn start(cfg: CoordinatorConfig) -> Coordinator {
-        let (tx, rx) = channel::<Msg>();
-        let worker = std::thread::spawn(move || worker_loop(cfg, rx));
-        Coordinator {
-            tx,
-            worker: Some(worker),
-        }
+    /// Shorthand for `CoordinatorBuilder::new()`.
+    pub fn builder() -> CoordinatorBuilder {
+        CoordinatorBuilder::new()
     }
 
     /// Submit a launch; returns a handle resolving to its response.
     pub fn submit(&self, req: LaunchRequest) -> LaunchHandle {
         let (tx, rx) = channel();
-        // Worker outlives all submissions (it only exits on Shutdown).
+        // Dispatcher outlives all submissions (it only exits on Shutdown).
         let _ = self.tx.send(Msg::Launch(req, tx, Instant::now()));
         LaunchHandle { rx }
     }
@@ -140,23 +272,23 @@ impl Coordinator {
         let _ = self.tx.send(Msg::Flush);
     }
 
-    /// Stop the service, returning every batch report and the aggregate
-    /// service statistics.
+    /// Stop the service, returning every batch report (ordered by batch
+    /// id) and the aggregate service statistics across all devices.
     pub fn shutdown(mut self) -> (Vec<BatchReport>, ServiceStats) {
         let _ = self.tx.send(Msg::Shutdown);
-        self.worker
+        self.dispatcher
             .take()
             .expect("shutdown called once")
             .join()
-            .expect("worker panicked")
+            .expect("dispatcher panicked")
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
+        if let Some(d) = self.dispatcher.take() {
             let _ = self.tx.send(Msg::Shutdown);
-            let _ = w.join();
+            let _ = d.join();
         }
     }
 }
@@ -167,18 +299,44 @@ struct Pending {
     submitted: Instant,
 }
 
-fn worker_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>) -> (Vec<BatchReport>, ServiceStats) {
-    // The PJRT runtime must live on this thread (its handles are !Send).
-    let runtime: Option<Runtime> = cfg.artifacts_dir.as_ref().map(|dir| {
-        Runtime::new(
-            crate::profile::ArtifactStore::load(dir).expect("artifacts load"),
-        )
-        .expect("PJRT client")
-    });
+struct Batch {
+    id: u64,
+    pending: Vec<Pending>,
+}
 
-    let mut reports = Vec::new();
-    let mut stats = ServiceStats::default();
+/// Batching loop: fills reorder windows and round-robins complete batches
+/// across the device workers.
+fn dispatcher_loop(
+    cfg: CoordinatorBuilder,
+    rx: Receiver<Msg>,
+) -> (Vec<BatchReport>, ServiceStats) {
+    // Spawn the device workers first; each builds its backend on its own
+    // thread via the factory.
+    let mut worker_txs: Vec<Sender<Batch>> = Vec::with_capacity(cfg.devices);
+    let mut worker_handles: Vec<JoinHandle<(Vec<BatchReport>, ServiceStats)>> =
+        Vec::with_capacity(cfg.devices);
+    for device in 0..cfg.devices {
+        let (btx, brx) = channel::<Batch>();
+        let gpu = cfg.gpu.clone();
+        let policy = Arc::clone(&cfg.policy);
+        let factory = Arc::clone(&cfg.backend);
+        worker_txs.push(btx);
+        worker_handles.push(std::thread::spawn(move || {
+            device_loop(device, gpu, policy, factory, brx)
+        }));
+    }
+
     let mut batch_id = 0u64;
+    let dispatch = |batch: Vec<Pending>, id: u64| {
+        if batch.is_empty() {
+            return;
+        }
+        let device = (id as usize) % worker_txs.len();
+        // A worker can only be gone if it panicked; dropping the batch
+        // here drops the reply senders, which surfaces as recv errors at
+        // the submitters rather than a hang.
+        let _ = worker_txs[device].send(Batch { id, pending: batch });
+    };
 
     'outer: loop {
         // Block for the first request of the next batch.
@@ -208,94 +366,226 @@ fn worker_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>) -> (Vec<BatchReport>, 
                 }),
                 Ok(Msg::Flush) => break,
                 Ok(Msg::Shutdown) => {
-                    process_batch(&cfg, runtime.as_ref(), batch, batch_id, &mut reports, &mut stats);
+                    dispatch(batch, batch_id);
                     break 'outer;
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
-                    process_batch(&cfg, runtime.as_ref(), batch, batch_id, &mut reports, &mut stats);
+                    dispatch(batch, batch_id);
                     break 'outer;
                 }
             }
         }
 
-        process_batch(&cfg, runtime.as_ref(), batch, batch_id, &mut reports, &mut stats);
+        dispatch(batch, batch_id);
         batch_id += 1;
     }
 
+    // Close the worker queues and collect their reports/stats.
+    drop(worker_txs);
+    let mut reports = Vec::new();
+    let mut stats = ServiceStats::default();
+    for handle in worker_handles {
+        let (mut r, s) = handle.join().expect("device worker panicked");
+        reports.append(&mut r);
+        stats.merge(&s);
+    }
+    reports.sort_by_key(|r| r.batch_id);
     (reports, stats)
 }
 
+/// One device worker: owns its backend (plus a simulator for the
+/// FIFO-vs-policy comparison) and processes batches until the queue
+/// closes.
+fn device_loop(
+    device: usize,
+    gpu: GpuSpec,
+    policy: Arc<dyn LaunchPolicy>,
+    factory: BackendFactory,
+    rx: Receiver<Batch>,
+) -> (Vec<BatchReport>, ServiceStats) {
+    // Backend construction failure (e.g. PJRT client unavailable) is not
+    // fatal to the service: the worker keeps serving with the failure
+    // sentinel so submitters always get answers.
+    let mut backend: Option<Box<dyn ExecutionBackend>> = match factory() {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("device {device}: backend construction failed: {e:#}");
+            None
+        }
+    };
+    let mut compare = SimulatorBackend::new();
+
+    let mut reports = Vec::new();
+    let mut stats = ServiceStats::default();
+    while let Ok(batch) = rx.recv() {
+        process_batch(
+            device,
+            &gpu,
+            policy.as_ref(),
+            backend.as_deref_mut(),
+            &mut compare,
+            batch,
+            &mut reports,
+            &mut stats,
+        );
+    }
+    (reports, stats)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn process_batch(
-    cfg: &CoordinatorConfig,
-    runtime: Option<&Runtime>,
-    batch: Vec<Pending>,
-    batch_id: u64,
+    device: usize,
+    gpu: &GpuSpec,
+    policy: &dyn LaunchPolicy,
+    backend: Option<&mut dyn ExecutionBackend>,
+    compare: &mut SimulatorBackend,
+    batch: Batch,
     reports: &mut Vec<BatchReport>,
     stats: &mut ServiceStats,
 ) {
-    if batch.is_empty() {
+    let Batch { id: batch_id, pending } = batch;
+    if pending.is_empty() {
         return;
     }
-    let profiles: Vec<KernelProfile> = batch.iter().map(|p| p.req.profile.clone()).collect();
+    let profiles: Vec<KernelProfile> = pending.iter().map(|p| p.req.profile.clone()).collect();
+    let seeds: Vec<u64> = pending.iter().map(|p| p.req.seed).collect();
+    let fifo: Vec<usize> = (0..profiles.len()).collect();
 
     // Reorder. Fall back to FIFO if the workload fails validation (the
     // simulator cannot time it, and reordering guarantees nothing).
-    let order = if sim::validate_workload(&cfg.gpu, &profiles).is_ok() {
-        cfg.policy.order(&cfg.gpu, &profiles)
+    let valid = sim::validate_workload(gpu, &profiles).is_ok();
+    let order = if valid {
+        policy.order(gpu, &profiles)
     } else {
-        (0..profiles.len()).collect()
+        fifo.clone()
     };
 
-    // Simulated GPU comparison (only meaningful for valid workloads).
-    let (sim_fifo_ms, sim_policy_ms) = if sim::validate_workload(&cfg.gpu, &profiles).is_ok() {
+    // Simulated GTX580 comparison (only meaningful for valid workloads).
+    let (sim_fifo_ms, sim_policy_ms) = if valid {
         (
-            sim::simulate_fifo(&cfg.gpu, &profiles).makespan_ms,
-            sim::simulate_order(&cfg.gpu, &profiles, &order).makespan_ms,
+            compare.execute(gpu, &profiles, &fifo).makespan_ms,
+            compare.execute(gpu, &profiles, &order).makespan_ms,
         )
     } else {
         (f64::NAN, f64::NAN)
     };
 
-    // Execute real payloads in the reordered sequence.
-    let t_batch = Instant::now();
+    // Execute payloads in the reordered sequence through the backend.
+    let (backend_name, exec_wall_ms, outcome_of) = match backend {
+        Some(b) => {
+            let report = b.execute_seeded(gpu, &profiles, &order, &seeds);
+            let mut by_index: Vec<(f64, f64)> = vec![(f64::NAN, 0.0); profiles.len()];
+            for o in &report.outcomes {
+                by_index[o.index] = (o.checksum, o.wall_ms);
+            }
+            (report.backend, report.wall_ms, by_index)
+        }
+        // No backend: every payload reports the failure sentinel.
+        None => (
+            "unavailable".to_string(),
+            0.0,
+            vec![(f64::NEG_INFINITY, 0.0); profiles.len()],
+        ),
+    };
+
     for (position, &bi) in order.iter().enumerate() {
-        let pending = &batch[bi];
-        let (checksum, exec_wall_ms) = match runtime {
-            None => (f64::NAN, 0.0),
-            Some(rt) => match rt.execute(&pending.req.profile.artifact, pending.req.seed) {
-                Ok(out) => (out.checksum(), out.wall_ms),
-                Err(e) => {
-                    // Failure injection path: report the error through the
-                    // response (checksum = -inf sentinel) and keep serving.
-                    eprintln!("kernel {} failed: {e:#}", pending.req.profile.name);
-                    (f64::NEG_INFINITY, 0.0)
-                }
-            },
-        };
+        let p = &pending[bi];
+        let (checksum, wall) = outcome_of[bi];
         let resp = LaunchResponse {
-            id: pending.req.id,
+            id: p.req.id,
             checksum,
-            exec_wall_ms,
-            latency_ms: pending.submitted.elapsed().as_secs_f64() * 1e3,
+            exec_wall_ms: wall,
+            latency_ms: p.submitted.elapsed().as_secs_f64() * 1e3,
             batch_id,
             position,
+            device,
         };
         stats.record_response(&resp);
-        let _ = pending.reply.send(resp);
+        let _ = p.reply.send(resp);
     }
-    let exec_wall_ms = t_batch.elapsed().as_secs_f64() * 1e3;
 
     let report = BatchReport {
         batch_id,
-        n: batch.len(),
+        device,
+        n: pending.len(),
         order,
+        policy: policy.name(),
+        backend: backend_name,
         sim_fifo_ms,
         sim_policy_ms,
         exec_wall_ms,
     };
     stats.record_batch(&report);
     reports.push(report);
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated config shim
+// ---------------------------------------------------------------------------
+
+/// Coordinator configuration (deprecated shim over
+/// [`CoordinatorBuilder`]).
+#[deprecated(since = "0.2.0", note = "use CoordinatorBuilder")]
+#[allow(deprecated)]
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Simulated GPU model (defaults to the paper's GTX580).
+    pub gpu: GpuSpec,
+    /// Launch-order policy applied to each batch.
+    pub policy: crate::sched::Policy,
+    /// Reorder window: max launches batched together.
+    pub window: usize,
+    /// How long the batcher waits for more work once a batch has started
+    /// filling (the "linger", as in serving systems).
+    pub linger: Duration,
+    /// Artifacts directory for real PJRT execution; `None` = simulate
+    /// timing only (no payload execution). Requires the `pjrt` feature
+    /// when `Some`.
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+#[allow(deprecated)]
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            gpu: GpuSpec::gtx580(),
+            policy: crate::sched::Policy::Algorithm1,
+            window: 8,
+            linger: Duration::from_millis(2),
+            artifacts_dir: None,
+        }
+    }
+}
+
+#[allow(deprecated)]
+impl Coordinator {
+    /// Start the service from a legacy [`CoordinatorConfig`].
+    #[deprecated(since = "0.2.0", note = "use CoordinatorBuilder::start")]
+    pub fn start(cfg: CoordinatorConfig) -> Coordinator {
+        let mut b = CoordinatorBuilder::new()
+            .gpu(cfg.gpu)
+            .policy_arc(Arc::from(cfg.policy.to_launch_policy()))
+            .window(cfg.window)
+            .linger(cfg.linger);
+        if let Some(dir) = cfg.artifacts_dir {
+            #[cfg(feature = "pjrt")]
+            {
+                b = b.pjrt_backend(dir);
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let dir: std::path::PathBuf = dir;
+                b = b.backend(move || {
+                    anyhow::bail!(
+                        "artifacts_dir {} set but the `pjrt` feature is not enabled",
+                        dir.display()
+                    )
+                });
+            }
+        }
+        b.start()
+    }
 }
 
 #[cfg(test)]
@@ -317,18 +607,16 @@ mod tests {
         }
     }
 
-    fn sim_only_cfg(window: usize) -> CoordinatorConfig {
-        CoordinatorConfig {
-            window,
-            linger: Duration::from_millis(20),
-            artifacts_dir: None,
-            ..CoordinatorConfig::default()
-        }
+    fn sim_only(window: usize) -> Coordinator {
+        CoordinatorBuilder::new()
+            .window(window)
+            .linger(Duration::from_millis(20))
+            .start()
     }
 
     #[test]
     fn every_request_answered_exactly_once() {
-        let c = Coordinator::start(sim_only_cfg(4));
+        let c = sim_only(4);
         let handles: Vec<_> = (0..10)
             .map(|i| {
                 c.submit(LaunchRequest {
@@ -351,7 +639,7 @@ mod tests {
 
     #[test]
     fn window_bounds_batch_size() {
-        let c = Coordinator::start(sim_only_cfg(3));
+        let c = sim_only(3);
         let handles: Vec<_> = (0..9)
             .map(|i| {
                 c.submit(LaunchRequest {
@@ -372,7 +660,7 @@ mod tests {
     fn policy_improves_or_matches_fifo_in_simulation() {
         // A window of opposing-type kernels: Algorithm 1's simulated
         // makespan must not exceed FIFO's.
-        let c = Coordinator::start(sim_only_cfg(4));
+        let c = sim_only(4);
         let profs = [
             profile("m1", 24, 1.0),
             profile("m2", 24, 1.0),
@@ -396,12 +684,14 @@ mod tests {
         let (reports, _) = c.shutdown();
         for r in reports.iter().filter(|r| r.n == 4) {
             assert!(r.sim_policy_ms <= r.sim_fifo_ms + 1e-9, "{r:?}");
+            assert_eq!(r.policy, "algorithm1");
+            assert_eq!(r.backend, "sim");
         }
     }
 
     #[test]
     fn sim_only_responses_have_nan_checksum() {
-        let c = Coordinator::start(sim_only_cfg(1));
+        let c = sim_only(1);
         let r = c
             .submit(LaunchRequest {
                 id: 7,
@@ -413,12 +703,13 @@ mod tests {
         assert!(r.checksum.is_nan());
         assert_eq!(r.exec_wall_ms, 0.0);
         assert_eq!(r.id, 7);
+        assert_eq!(r.device, 0);
     }
 
     #[test]
     fn invalid_profile_falls_back_to_fifo() {
         // 64 warps/block exceeds SM capacity: unsimulable -> FIFO + NaN sims.
-        let c = Coordinator::start(sim_only_cfg(2));
+        let c = sim_only(2);
         let bad = KernelProfile {
             warps_per_block: 64,
             ..profile("bad", 4, 2.0)
@@ -442,9 +733,10 @@ mod tests {
 
     #[test]
     fn flush_closes_partial_batch() {
-        let mut cfg = sim_only_cfg(100);
-        cfg.linger = Duration::from_secs(10); // would stall without flush
-        let c = Coordinator::start(cfg);
+        let c = CoordinatorBuilder::new()
+            .window(100)
+            .linger(Duration::from_secs(10)) // would stall without flush
+            .start();
         let h = c.submit(LaunchRequest {
             id: 0,
             profile: profile("k", 8, 2.0),
@@ -458,7 +750,77 @@ mod tests {
 
     #[test]
     fn drop_without_shutdown_does_not_hang() {
-        let c = Coordinator::start(sim_only_cfg(2));
+        let c = sim_only(2);
         drop(c);
+    }
+
+    #[test]
+    fn builder_swaps_policy_and_backend() {
+        let c = CoordinatorBuilder::new()
+            .policy_named("reverse")
+            .unwrap()
+            .analytic_backend()
+            .window(4)
+            .linger(Duration::from_millis(20))
+            .start();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                c.submit(LaunchRequest {
+                    id: i,
+                    profile: profile(&format!("k{i}"), 4 + (i % 3) as u32 * 8, 1.0 + i as f64),
+                    seed: i,
+                })
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let (reports, _) = c.shutdown();
+        for r in reports.iter().filter(|r| r.n == 4) {
+            assert_eq!(r.policy, "reverse");
+            assert_eq!(r.backend, "analytic");
+            // Reverse policy: order is the reversed arrival order.
+            assert_eq!(r.order, vec![3, 2, 1, 0]);
+        }
+    }
+
+    #[test]
+    fn failing_backend_factory_serves_failure_sentinels() {
+        let c = CoordinatorBuilder::new()
+            .backend(|| anyhow::bail!("no device"))
+            .window(2)
+            .linger(Duration::from_millis(10))
+            .start();
+        let h = c.submit(LaunchRequest {
+            id: 0,
+            profile: profile("k", 8, 2.0),
+            seed: 0,
+        });
+        c.flush();
+        let r = h.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.checksum, f64::NEG_INFINITY);
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_failures, 1);
+        assert_eq!(reports[0].backend, "unavailable");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_config_shim_still_serves() {
+        let cfg = CoordinatorConfig {
+            window: 2,
+            linger: Duration::from_millis(10),
+            ..CoordinatorConfig::default()
+        };
+        let c = Coordinator::start(cfg);
+        let h = c.submit(LaunchRequest {
+            id: 3,
+            profile: profile("k", 8, 2.0),
+            seed: 0,
+        });
+        c.flush();
+        assert_eq!(h.wait().unwrap().id, 3);
+        let (_, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 1);
     }
 }

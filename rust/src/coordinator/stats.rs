@@ -45,6 +45,20 @@ impl ServiceStats {
         }
     }
 
+    /// Fold another worker's totals into this one (multi-device merge at
+    /// shutdown).
+    pub fn merge(&mut self, other: &ServiceStats) {
+        self.n_batches += other.n_batches;
+        self.n_responses += other.n_responses;
+        self.total_latency_ms += other.total_latency_ms;
+        self.max_latency_ms = self.max_latency_ms.max(other.max_latency_ms);
+        self.total_sim_fifo_ms += other.total_sim_fifo_ms;
+        self.total_sim_policy_ms += other.total_sim_policy_ms;
+        self.n_unsimulated += other.n_unsimulated;
+        self.total_exec_wall_ms += other.total_exec_wall_ms;
+        self.n_failures += other.n_failures;
+    }
+
     /// Mean request latency (ms).
     pub fn mean_latency_ms(&self) -> f64 {
         if self.n_responses == 0 {
@@ -100,6 +114,21 @@ mod tests {
             latency_ms: latency,
             batch_id: 0,
             position: 0,
+            device: 0,
+        }
+    }
+
+    fn batch(batch_id: u64, n: usize, fifo: f64, policy: f64, wall: f64) -> BatchReport {
+        BatchReport {
+            batch_id,
+            device: 0,
+            n,
+            order: (0..n).collect(),
+            policy: "algorithm1".into(),
+            backend: "sim".into(),
+            sim_fifo_ms: fifo,
+            sim_policy_ms: policy,
+            exec_wall_ms: wall,
         }
     }
 
@@ -124,26 +153,29 @@ mod tests {
     #[test]
     fn batch_aggregation_and_speedup() {
         let mut s = ServiceStats::default();
-        s.record_batch(&BatchReport {
-            batch_id: 0,
-            n: 4,
-            order: vec![0, 1, 2, 3],
-            sim_fifo_ms: 200.0,
-            sim_policy_ms: 100.0,
-            exec_wall_ms: 50.0,
-        });
-        s.record_batch(&BatchReport {
-            batch_id: 1,
-            n: 2,
-            order: vec![0, 1],
-            sim_fifo_ms: f64::NAN,
-            sim_policy_ms: f64::NAN,
-            exec_wall_ms: 10.0,
-        });
+        s.record_batch(&batch(0, 4, 200.0, 100.0, 50.0));
+        s.record_batch(&batch(1, 2, f64::NAN, f64::NAN, 10.0));
         assert_eq!(s.n_batches, 2);
         assert_eq!(s.n_unsimulated, 1);
         assert_eq!(s.sim_speedup(), 2.0);
         assert!((s.total_exec_wall_ms - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_folds_worker_totals() {
+        let mut a = ServiceStats::default();
+        a.record_response(&resp(10.0, 1.0));
+        a.record_batch(&batch(0, 1, 100.0, 50.0, 5.0));
+        let mut b = ServiceStats::default();
+        b.record_response(&resp(40.0, f64::NEG_INFINITY));
+        b.record_batch(&batch(1, 1, 300.0, 150.0, 7.0));
+        a.merge(&b);
+        assert_eq!(a.n_responses, 2);
+        assert_eq!(a.n_batches, 2);
+        assert_eq!(a.max_latency_ms, 40.0);
+        assert_eq!(a.n_failures, 1);
+        assert_eq!(a.sim_speedup(), 2.0);
+        assert!((a.total_exec_wall_ms - 12.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! [`AnalyticBackend`] — the paper's analytic round model as an execution
+//! substrate: kernels pack into execution rounds by per-SM footprint, each
+//! round's duration is estimated from processor-sharing compute rates and
+//! the shared bandwidth pool, and rounds execute strictly in sequence.
+//!
+//! Orders of magnitude cheaper than the fluid simulator (no event loop),
+//! at the cost of ignoring intra-round dynamics — the A3 ablation bench
+//! measures how well its round counts track simulated makespans.
+
+use super::{BackendReport, ExecutionBackend};
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::sim::{self, rounds::pack_rounds};
+use std::time::Instant;
+
+/// Round-model backend. Stateless.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticBackend;
+
+impl AnalyticBackend {
+    pub fn new() -> Self {
+        AnalyticBackend
+    }
+}
+
+/// Estimated duration of one execution round: every member kernel's
+/// blocks are co-resident and drain at the processor-sharing compute rate
+/// `C · w_b / max(round_warps, warps_to_saturate)`; the round additionally
+/// cannot beat the global memory bandwidth on its combined traffic.
+fn round_duration_ms(gpu: &GpuSpec, kernels: &[KernelProfile], members: &[usize]) -> f64 {
+    let round_warps: f64 = members
+        .iter()
+        .map(|&k| kernels[k].per_sm_footprint(gpu).warps)
+        .sum();
+    let denom = round_warps.max(gpu.warps_to_saturate as f64);
+    let compute_ms = members
+        .iter()
+        .map(|&k| {
+            let rate = gpu.compute_rate_per_sm * kernels[k].warps_per_block as f64 / denom;
+            kernels[k].work_per_block / rate
+        })
+        .fold(0.0f64, f64::max);
+    let mem_total: f64 = members.iter().map(|&k| kernels[k].total_mem()).sum();
+    compute_ms.max(mem_total / gpu.memory_bandwidth())
+}
+
+impl ExecutionBackend for AnalyticBackend {
+    fn name(&self) -> &str {
+        "analytic"
+    }
+
+    fn execute(
+        &mut self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        order: &[usize],
+    ) -> BackendReport {
+        let t0 = Instant::now();
+        if sim::validate_workload(gpu, kernels).is_err() {
+            return BackendReport::unsimulable(
+                "analytic",
+                t0.elapsed().as_secs_f64() * 1e3,
+                order,
+            );
+        }
+
+        let rounds = pack_rounds(gpu, kernels, order);
+        let mut finish_by_kernel = vec![f64::NAN; kernels.len()];
+        let mut elapsed = 0.0f64;
+        for round in &rounds {
+            elapsed += round_duration_ms(gpu, kernels, &round.kernels);
+            for &k in &round.kernels {
+                // Round granularity: every member finishes with its round.
+                finish_by_kernel[k] = elapsed;
+            }
+        }
+        BackendReport::from_finish_times(
+            "analytic",
+            elapsed,
+            t0.elapsed().as_secs_f64() * 1e3,
+            order,
+            &finish_by_kernel,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{by_id, epbsessw_8};
+
+    #[test]
+    fn analytic_makespan_positive_and_orders_matter() {
+        let gpu = GpuSpec::gtx580();
+        let ks = epbsessw_8();
+        let mut b = AnalyticBackend::new();
+        let fifo: Vec<usize> = (0..ks.len()).collect();
+        let rev: Vec<usize> = (0..ks.len()).rev().collect();
+        let t_fifo = b.execute(&gpu, &ks, &fifo).makespan_ms;
+        let t_rev = b.execute(&gpu, &ks, &rev).makespan_ms;
+        assert!(t_fifo.is_finite() && t_fifo > 0.0);
+        assert!(t_rev.is_finite() && t_rev > 0.0);
+        // EpBsEsSw-8 is highly order-sensitive; the round model must see
+        // at least *some* difference between opposite orders.
+        assert!((t_fifo - t_rev).abs() > 1e-9);
+    }
+
+    #[test]
+    fn kernels_finish_with_their_round_cumulatively() {
+        let gpu = GpuSpec::gtx580();
+        // EP-6-shm: shmem footprints force multiple rounds under FIFO.
+        let ks = by_id("ep-6-shm").unwrap().kernels;
+        let order: Vec<usize> = (0..ks.len()).collect();
+        let report = AnalyticBackend::new().execute(&gpu, &ks, &order);
+        let rounds = pack_rounds(&gpu, &ks, &order);
+        assert!(rounds.len() > 1, "expected multi-round packing");
+        // Finish times are non-decreasing along the launch order and the
+        // last kernel finishes at the makespan.
+        let finishes: Vec<f64> = report.outcomes.iter().map(|o| o.finish_ms).collect();
+        for w in finishes.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+        assert!((finishes.last().unwrap() - report.makespan_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analytic_is_bounded_below_by_bandwidth_roofline() {
+        let gpu = GpuSpec::gtx580();
+        let ks = epbsessw_8();
+        let order: Vec<usize> = (0..ks.len()).collect();
+        let t = AnalyticBackend::new().execute(&gpu, &ks, &order).makespan_ms;
+        let mem: f64 = ks.iter().map(|k| k.total_mem()).sum();
+        assert!(t >= mem / gpu.memory_bandwidth() - 1e-9);
+    }
+}

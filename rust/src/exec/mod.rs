@@ -1,0 +1,208 @@
+//! Execution backends — the substrate seam of the redesigned API.
+//!
+//! The paper evaluates one policy on one substrate (a GTX580 model). This
+//! crate has three ways to "run" an ordered batch of kernels — the
+//! event-driven fluid simulator, the paper's analytic round model, and
+//! real PJRT execution of AOT-compiled HLO — and production use implies
+//! more (other GPU models, remote executors). [`ExecutionBackend`]
+//! abstracts them: the coordinator, the CLI subcommands and the
+//! `table3`/`fig1`/`ablation` benches all time batches through a trait
+//! object, so a new substrate plugs in without touching any of them.
+//!
+//! | backend | returns | feature |
+//! |---|---|---|
+//! | [`SimulatorBackend`] | fluid-simulated makespan + per-kernel finish times | always |
+//! | [`AnalyticBackend`]  | round-model makespan estimate + round structure | always |
+//! | `PjrtBackend`        | real per-kernel checksums + wall times | `pjrt` |
+
+mod analytic;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+mod simulator;
+
+pub use analytic::AnalyticBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use simulator::SimulatorBackend;
+
+use crate::gpu::{GpuSpec, KernelProfile};
+
+/// Per-kernel outcome of one batch execution.
+#[derive(Debug, Clone)]
+pub struct KernelOutcome {
+    /// Index into the submitted `kernels` slice.
+    pub index: usize,
+    /// Position in the launch order (0 = launched first).
+    pub position: usize,
+    /// Numeric fingerprint of the real output (`NaN` for model backends).
+    pub checksum: f64,
+    /// Wall-clock execution time of this kernel (0 for model backends).
+    pub wall_ms: f64,
+    /// Model time at which the kernel finished (`NaN` when the backend
+    /// has no timing model).
+    pub finish_ms: f64,
+    /// Whether the payload failed (real backends only; model backends
+    /// never fail a kernel).
+    pub failed: bool,
+}
+
+/// What a backend reports for one executed batch.
+#[derive(Debug, Clone)]
+pub struct BackendReport {
+    /// The backend's registry name (e.g. `"sim"`).
+    pub backend: String,
+    /// Model makespan of the batch under the given order (`NaN` when the
+    /// backend measures wall time only, or the workload is unsimulable).
+    pub makespan_ms: f64,
+    /// Wall-clock time of the whole `execute` call.
+    pub wall_ms: f64,
+    /// One entry per kernel, in launch-order sequence.
+    pub outcomes: Vec<KernelOutcome>,
+}
+
+impl BackendReport {
+    /// Report of a *model* backend run: per-kernel model finish times
+    /// (`finish_by_kernel[i]` belongs to `kernels[i]`), no payloads, no
+    /// failures.
+    pub fn from_finish_times(
+        backend: &str,
+        makespan_ms: f64,
+        wall_ms: f64,
+        order: &[usize],
+        finish_by_kernel: &[f64],
+    ) -> Self {
+        let outcomes = order
+            .iter()
+            .enumerate()
+            .map(|(position, &index)| KernelOutcome {
+                index,
+                position,
+                checksum: f64::NAN,
+                wall_ms: 0.0,
+                finish_ms: finish_by_kernel[index],
+                failed: false,
+            })
+            .collect();
+        BackendReport {
+            backend: backend.into(),
+            makespan_ms,
+            wall_ms,
+            outcomes,
+        }
+    }
+
+    /// Report for a workload the backend's model cannot time (e.g. a
+    /// block that never fits an SM would deadlock the in-order
+    /// dispatcher): all-NaN timings, no failures.
+    pub fn unsimulable(backend: &str, wall_ms: f64, order: &[usize]) -> Self {
+        let nan_finishes = vec![f64::NAN; order.len()];
+        BackendReport::from_finish_times(backend, f64::NAN, wall_ms, order, &nan_finishes)
+    }
+
+    /// Outcomes re-indexed by batch position (`outcomes[i]` is the result
+    /// of `kernels[i]`), for callers that answer per-submission.
+    pub fn by_index(&self) -> Vec<&KernelOutcome> {
+        let mut v: Vec<&KernelOutcome> = self.outcomes.iter().collect();
+        v.sort_by_key(|o| o.index);
+        v
+    }
+
+    /// Number of failed kernels.
+    pub fn n_failures(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.failed).count()
+    }
+}
+
+/// An execution substrate: takes a workload and a launch order, runs (or
+/// models) it, and reports per-kernel and whole-batch results.
+///
+/// `&mut self` so real backends can keep warm state (compiled-executable
+/// caches, device handles). Backends need not be `Send` — the coordinator
+/// constructs one per worker thread through a factory, which is how the
+/// PJRT backend's thread-pinned client handles are accommodated.
+pub trait ExecutionBackend {
+    /// The backend's registry spelling (e.g. `"sim"`, `"analytic"`,
+    /// `"pjrt"`).
+    fn name(&self) -> &str;
+
+    /// Execute `kernels` in the given launch `order` (a permutation of
+    /// `0..kernels.len()`).
+    fn execute(
+        &mut self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        order: &[usize],
+    ) -> BackendReport;
+
+    /// Like [`ExecutionBackend::execute`], with a per-kernel payload seed
+    /// (`seeds[i]` belongs to `kernels[i]`). Model backends ignore seeds;
+    /// real backends use them for deterministic input synthesis. The
+    /// default forwards to `execute`.
+    fn execute_seeded(
+        &mut self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        order: &[usize],
+        seeds: &[u64],
+    ) -> BackendReport {
+        let _ = seeds;
+        self.execute(gpu, kernels, order)
+    }
+}
+
+/// Error returned for unknown backend spellings; `Display` lists the
+/// valid names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendParseError {
+    pub input: String,
+}
+
+impl std::fmt::Display for BackendParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown backend `{}` — valid backends: sim, analytic{}",
+            self.input,
+            if cfg!(feature = "pjrt") {
+                ", pjrt (via --artifacts)"
+            } else {
+                " (pjrt requires building with --features pjrt)"
+            }
+        )
+    }
+}
+
+impl std::error::Error for BackendParseError {}
+
+/// Parse a *model* backend spelling (`"sim"` / `"analytic"`). The PJRT
+/// backend is constructed explicitly with an artifacts directory
+/// (`PjrtBackend::new`, feature `pjrt`) since it needs more than a name.
+pub fn parse_model_backend(s: &str) -> Result<Box<dyn ExecutionBackend>, BackendParseError> {
+    match s.to_ascii_lowercase().as_str() {
+        "sim" | "simulator" | "fluid" => Ok(Box::new(SimulatorBackend::new())),
+        "analytic" | "rounds" => Ok(Box::new(AnalyticBackend::new())),
+        _ => Err(BackendParseError { input: s.into() }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_backends_parse() {
+        for s in ["sim", "simulator", "fluid", "analytic", "rounds", "SIM"] {
+            assert!(parse_model_backend(s).is_ok(), "{s}");
+        }
+        let err = parse_model_backend("quantum").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("quantum") && msg.contains("sim") && msg.contains("analytic"));
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        for s in ["sim", "analytic"] {
+            assert_eq!(parse_model_backend(s).unwrap().name(), s);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! [`SimulatorBackend`] — the event-driven fluid simulator behind the
+//! [`ExecutionBackend`] interface. This is the substrate every experiment
+//! times; its makespans are bit-identical to calling
+//! [`crate::sim::simulate_order`] directly (a unit test below pins that).
+
+use super::{BackendReport, ExecutionBackend};
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::sim;
+use std::time::Instant;
+
+/// Fluid-simulation backend (the GTX580 model). Stateless; cheap to
+/// construct per worker thread.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimulatorBackend;
+
+impl SimulatorBackend {
+    pub fn new() -> Self {
+        SimulatorBackend
+    }
+}
+
+impl ExecutionBackend for SimulatorBackend {
+    fn name(&self) -> &str {
+        "sim"
+    }
+
+    fn execute(
+        &mut self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        order: &[usize],
+    ) -> BackendReport {
+        let t0 = Instant::now();
+        // An unsimulable workload (oversized block, empty grid) would
+        // deadlock the in-order dispatcher; report NaN rather than hang.
+        if sim::validate_workload(gpu, kernels).is_err() {
+            return BackendReport::unsimulable("sim", t0.elapsed().as_secs_f64() * 1e3, order);
+        }
+
+        let r = sim::simulate_order(gpu, kernels, order);
+        BackendReport::from_finish_times(
+            "sim",
+            r.makespan_ms,
+            t0.elapsed().as_secs_f64() * 1e3,
+            order,
+            &r.kernel_finish_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::AppKind;
+    use crate::util::SplitMix64;
+    use crate::workloads::epbsessw_8;
+
+    /// Refactor-equivalence pin: the simulator backend's makespan must be
+    /// identical to the pre-redesign direct `sim::simulate_order` call on
+    /// the paper's EpBsEsSw-8 workload, for FIFO and shuffled orders.
+    #[test]
+    fn makespans_identical_to_direct_simulation_on_epbsessw_8() {
+        let gpu = GpuSpec::gtx580();
+        let ks = epbsessw_8();
+        let mut backend = SimulatorBackend::new();
+
+        let fifo: Vec<usize> = (0..ks.len()).collect();
+        let mut orders = vec![fifo.clone()];
+        for seed in 0..10u64 {
+            let mut o = fifo.clone();
+            SplitMix64::new(seed).shuffle(&mut o);
+            orders.push(o);
+        }
+        for order in &orders {
+            let direct = sim::simulate_order(&gpu, &ks, order).makespan_ms;
+            let via_trait = backend.execute(&gpu, &ks, order).makespan_ms;
+            assert_eq!(direct, via_trait, "order {order:?}");
+        }
+    }
+
+    #[test]
+    fn outcomes_carry_finish_times_in_launch_order() {
+        let gpu = GpuSpec::gtx580();
+        let ks = epbsessw_8();
+        let order: Vec<usize> = (0..ks.len()).rev().collect();
+        let report = SimulatorBackend::new().execute(&gpu, &ks, &order);
+        assert_eq!(report.outcomes.len(), ks.len());
+        let max_finish = report
+            .outcomes
+            .iter()
+            .map(|o| o.finish_ms)
+            .fold(0.0f64, f64::max);
+        assert!((max_finish - report.makespan_ms).abs() < 1e-9);
+        for (pos, o) in report.outcomes.iter().enumerate() {
+            assert_eq!(o.position, pos);
+            assert_eq!(o.index, order[pos]);
+            assert!(o.checksum.is_nan());
+            assert!(!o.failed);
+        }
+        assert_eq!(report.n_failures(), 0);
+        // by_index inverts the order mapping.
+        let by_index = report.by_index();
+        for (i, o) in by_index.iter().enumerate() {
+            assert_eq!(o.index, i);
+        }
+    }
+
+    #[test]
+    fn unsimulable_workload_reports_nan_not_hang() {
+        let gpu = GpuSpec::gtx580();
+        let bad = KernelProfile {
+            name: "bad".into(),
+            app: AppKind::Synthetic,
+            n_blocks: 1,
+            regs_per_block: 512,
+            shmem_per_block: 0,
+            warps_per_block: 64, // > 48 warps/SM: never fits
+            ratio: 2.0,
+            work_per_block: 100.0,
+            artifact: String::new(),
+        };
+        let report = SimulatorBackend::new().execute(&gpu, &[bad], &[0]);
+        assert!(report.makespan_ms.is_nan());
+        assert_eq!(report.outcomes.len(), 1);
+    }
+}

@@ -12,37 +12,131 @@
 //! memory-bound ones. Its contribution is a greedy scheduler (Algorithm 1)
 //! that derives a near-optimal launch order from static per-kernel profiles.
 //!
+//! This crate generalizes that single policy/single substrate design into
+//! two pluggable seams:
+//!
+//! * [`sched::LaunchPolicy`] — *how to order* a batch. Algorithm 1 and
+//!   the paper's baselines (FIFO / reverse / random) plus shortest-job-
+//!   first and a Kernelet-style greedy co-schedule, all behind one trait
+//!   with a string registry ([`sched::registry::parse`]).
+//! * [`exec::ExecutionBackend`] — *how to run* an ordered batch. The
+//!   event-driven fluid simulator, the paper's analytic round model, and
+//!   (with `--features pjrt`) real PJRT execution of AOT-compiled HLO.
+//!
+//! The coordinator, the CLI, the benches and the experiment harness all
+//! dispatch through these trait objects, so new policies and substrates
+//! plug in without touching any of them.
+//!
 //! ## Crate layout
 //!
 //! | module | role |
 //! |---|---|
 //! | [`gpu`] | GPU & kernel parameter model (Table 1 of the paper) |
 //! | [`sim`] | event-driven concurrent-execution simulator (the hardware substrate) |
-//! | [`sched`] | Algorithm 1 + baseline launch-order policies |
+//! | [`sched`] | [`sched::LaunchPolicy`] trait, Algorithm 1 + baselines, string registry |
+//! | [`exec`] | [`exec::ExecutionBackend`] trait: simulator / analytic / PJRT substrates |
 //! | [`perm`] | permutation-space sweeps (Table 3 / Fig. 1 evaluation) |
 //! | [`profile`] | artifact profile loading (the "CUDA profiler" stand-in) |
-//! | [`runtime`] | PJRT execution of AOT-compiled HLO kernels |
-//! | [`coordinator`] | the deployable launch coordinator (batching + reordering service) |
+//! | `runtime` | PJRT execution of AOT-compiled HLO kernels (feature `pjrt`) |
+//! | [`coordinator`] | [`coordinator::CoordinatorBuilder`]: batching + reordering + multi-device dispatch |
 //! | [`workloads`] | the paper's six experiments (Table 2) + synthetic generators |
 //! | [`metrics`] | percentiles, histograms, report tables |
 //!
 //! ## Quickstart
 //!
 //! ```no_run
-//! use kreorder::{gpu::GpuSpec, sched, sim, workloads};
+//! use kreorder::exec::{ExecutionBackend, SimulatorBackend};
+//! use kreorder::gpu::GpuSpec;
+//! use kreorder::sched::registry;
+//! use kreorder::workloads;
 //!
 //! let gpu = GpuSpec::gtx580();
 //! let kernels = workloads::epbsessw_8();
-//! let order = sched::reorder(&gpu, &kernels);
-//! let t = sim::simulate_order(&gpu, &kernels, &order.order).makespan_ms;
-//! println!("reordered makespan: {t:.2} ms");
+//!
+//! // Pick a policy by name (any registry spelling works: "fifo",
+//! // "random:42", "algorithm1", "sjf", "coschedule", …).
+//! let policy = registry::parse("algorithm1").unwrap();
+//! let order = policy.order(&gpu, &kernels);
+//!
+//! // Time it on an execution backend.
+//! let mut backend = SimulatorBackend::new();
+//! let t = backend.execute(&gpu, &kernels, &order).makespan_ms;
+//! println!("{} makespan: {t:.2} ms", policy.name());
+//! ```
+//!
+//! ## Writing your own policy or backend
+//!
+//! A policy is one `impl`; it immediately works everywhere a registry
+//! policy does (pass it to [`coordinator::CoordinatorBuilder::policy`],
+//! compare it in the benches, …). Same for a backend:
+//!
+//! ```
+//! use kreorder::exec::{BackendReport, ExecutionBackend, KernelOutcome};
+//! use kreorder::gpu::{GpuSpec, KernelProfile};
+//! use kreorder::sched::LaunchPolicy;
+//!
+//! /// Launch the widest (most warps per block) kernels first.
+//! struct WidestFirst;
+//!
+//! impl LaunchPolicy for WidestFirst {
+//!     fn name(&self) -> String {
+//!         "widest-first".into()
+//!     }
+//!     fn order(&self, _gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+//!         let mut idx: Vec<usize> = (0..kernels.len()).collect();
+//!         idx.sort_by_key(|&i| std::cmp::Reverse(kernels[i].warps_per_block));
+//!         idx
+//!     }
+//! }
+//!
+//! /// A backend that "runs" each kernel in zero time (dry-run probe).
+//! struct NullBackend;
+//!
+//! impl ExecutionBackend for NullBackend {
+//!     fn name(&self) -> &str {
+//!         "null"
+//!     }
+//!     fn execute(
+//!         &mut self,
+//!         _gpu: &GpuSpec,
+//!         _kernels: &[KernelProfile],
+//!         order: &[usize],
+//!     ) -> BackendReport {
+//!         let outcomes = order
+//!             .iter()
+//!             .enumerate()
+//!             .map(|(position, &index)| KernelOutcome {
+//!                 index,
+//!                 position,
+//!                 checksum: f64::NAN,
+//!                 wall_ms: 0.0,
+//!                 finish_ms: 0.0,
+//!                 failed: false,
+//!             })
+//!             .collect();
+//!         BackendReport {
+//!             backend: "null".into(),
+//!             makespan_ms: 0.0,
+//!             wall_ms: 0.0,
+//!             outcomes,
+//!         }
+//!     }
+//! }
+//!
+//! let gpu = GpuSpec::gtx580();
+//! let kernels = kreorder::workloads::epbsessw_8();
+//! let order = WidestFirst.order(&gpu, &kernels);
+//! let report = NullBackend.execute(&gpu, &kernels, &order);
+//! assert_eq!(report.outcomes.len(), kernels.len());
 //! ```
 
 pub mod coordinator;
+pub mod exec;
 pub mod gpu;
 pub mod metrics;
 pub mod perm;
 pub mod profile;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;
 pub mod sim;

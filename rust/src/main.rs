@@ -5,18 +5,24 @@
 //! * `table3`  — regenerate the paper's Table 3 (all six experiments).
 //! * `fig1`    — regenerate Fig. 1 (EpBsEsSw-8 ranking + distribution CSVs).
 //! * `sweep`   — permutation sweep of one experiment.
-//! * `sched`   — show Algorithm 1's order/rounds vs baselines for a workload.
-//! * `serve`   — run the launch-coordinator service on real PJRT payloads.
+//! * `sched`   — show every registered policy's order/rounds for a workload.
+//! * `serve`   — run the launch-coordinator service (simulated or real PJRT payloads).
 //! * `ablate`  — score-component ablation across experiments.
+//! * `policies`— list the launch-policy registry.
 //! * `artifacts` — list AOT artifacts and their measured profiles.
+//!
+//! Every subcommand dispatches ordering through `sched::LaunchPolicy` and
+//! timing through `exec::ExecutionBackend` trait objects, so registry
+//! additions show up here with no CLI changes.
 
 use anyhow::{bail, Context, Result};
-use kreorder::coordinator::{Coordinator, CoordinatorConfig, LaunchRequest};
+use kreorder::coordinator::{CoordinatorBuilder, LaunchRequest};
+use kreorder::exec::{self, ExecutionBackend};
 use kreorder::gpu::GpuSpec;
 use kreorder::metrics::{ExperimentRow, Histogram, Table3};
-use kreorder::perm::sweep;
+use kreorder::perm::sweep_with;
 use kreorder::profile::ArtifactStore;
-use kreorder::sched::{reorder, reorder_with, Policy, ScoreConfig};
+use kreorder::sched::{registry, reorder, reorder_with, ScoreConfig};
 use kreorder::sim;
 use kreorder::util::SplitMix64;
 use kreorder::workloads::{all_experiments, by_id, synthetic_workload};
@@ -47,6 +53,7 @@ fn run(args: &[String]) -> Result<()> {
         "sched" => cmd_sched(rest),
         "serve" => cmd_serve(rest),
         "ablate" => cmd_ablate(rest),
+        "policies" => cmd_policies(rest),
         "artifacts" => cmd_artifacts(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -63,18 +70,28 @@ fn print_help() {
 USAGE: kreorder <COMMAND> [OPTIONS]
 
 COMMANDS:
-  table3 [--exp ID] [--csv FILE]       reproduce Table 3 (default: all experiments)
+  table3 [--exp ID] [--csv FILE] [--backend B]
+                                       reproduce Table 3 (default: all experiments)
   fig1 [--out-dir DIR] [--bins N]      reproduce Fig. 1 for EpBsEsSw-8
-  sweep --exp ID                       permutation-space stats for one experiment
-  sched (--exp ID | --synthetic N [--seed S])
-                                       show Algorithm 1 order/rounds vs baselines
-  serve [--batches N] [--window K] [--policy P] [--seed S] [--artifacts DIR] [--sim-only]
-                                       run the launch coordinator on real PJRT payloads
-  ablate [--exp ID]                    score-component ablation
+  sweep --exp ID [--backend B]         permutation-space stats for one experiment
+  sched (--exp ID | --synthetic N [--seed S]) [--backend B]
+                                       show every registered policy's order vs makespan
+  serve [--batches N] [--window K] [--policy P] [--devices D] [--seed S]
+        [--artifacts DIR] [--sim-only] [--backend B]
+                                       run the launch coordinator service
+  ablate [--exp ID] [--backend B]      score-component ablation
+  policies                             list the launch-policy registry
   artifacts [--dir DIR]                list AOT artifacts + measured profiles
 
 EXPERIMENT IDS: ep-6-shm ep-6-grid bs-6-blk epbs-6 epbs-6-shm epbsessw-8
-POLICIES: fifo reverse random:<seed> algorithm1"
+POLICIES: fifo reverse random:<seed> algorithm1 algorithm1:strict sjf coschedule
+          (see `kreorder policies`)
+BACKENDS: sim (fluid simulator, default), analytic (round model){}",
+        if cfg!(feature = "pjrt") {
+            ", pjrt (serve only)"
+        } else {
+            "; pjrt needs --features pjrt"
+        }
     );
 }
 
@@ -90,12 +107,32 @@ fn flag(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
 }
 
+/// The model backend selected by `--backend` (default: fluid simulator).
+fn model_backend(args: &[String]) -> Result<Box<dyn ExecutionBackend>> {
+    let name = opt(args, "--backend").unwrap_or("sim");
+    exec::parse_model_backend(name).map_err(anyhow::Error::from)
+}
+
+/// Same selection as a factory, for the permutation sweeps (one backend
+/// per sweep worker). Ensures a command's sweep statistics and algorithm
+/// makespans come from the *same* timing model.
+fn model_backend_factory(
+    args: &[String],
+) -> Result<Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync>> {
+    let name = opt(args, "--backend").unwrap_or("sim").to_string();
+    exec::parse_model_backend(&name).map_err(anyhow::Error::from)?;
+    Ok(Box::new(move || {
+        exec::parse_model_backend(&name).expect("spelling validated above")
+    }))
+}
+
 // ---------------------------------------------------------------------------
 // table3
 // ---------------------------------------------------------------------------
 
 fn cmd_table3(args: &[String]) -> Result<()> {
     let gpu = GpuSpec::gtx580();
+    let make_backend = model_backend_factory(args)?;
     let experiments = match opt(args, "--exp") {
         Some(id) => vec![by_id(id).with_context(|| format!("unknown experiment `{id}`"))?],
         None => all_experiments(),
@@ -109,7 +146,7 @@ fn cmd_table3(args: &[String]) -> Result<()> {
             e.kernels.len(),
             (1..=e.kernels.len()).product::<usize>()
         );
-        let row = run_experiment(&gpu, e.name, &e.kernels)?;
+        let row = run_experiment(&gpu, e.name, &e.kernels, make_backend.as_ref())?;
         table.push(row);
     }
     println!("\n{}", table.to_markdown());
@@ -124,11 +161,14 @@ fn run_experiment(
     gpu: &GpuSpec,
     name: &str,
     kernels: &[kreorder::gpu::KernelProfile],
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
 ) -> Result<ExperimentRow> {
     sim::validate_workload(gpu, kernels).map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
-    let sw = sweep(gpu, kernels);
+    // Sweep and algorithm makespan must share one timing model, or the
+    // percentile column is meaningless.
+    let sw = sweep_with(gpu, kernels, make_backend);
     let sched = reorder(gpu, kernels);
-    let t_alg = sim::simulate_order(gpu, kernels, &sched.order).makespan_ms;
+    let t_alg = make_backend().execute(gpu, kernels, &sched.order).makespan_ms;
     Ok(ExperimentRow {
         name: name.to_string(),
         optimal_ms: sw.best_ms,
@@ -146,13 +186,17 @@ fn run_experiment(
 fn cmd_fig1(args: &[String]) -> Result<()> {
     let gpu = GpuSpec::gtx580();
     let e = by_id("epbsessw-8").unwrap();
+    let make_backend = model_backend_factory(args)?;
     let bins: usize = opt(args, "--bins").map_or(60, |s| s.parse().unwrap_or(60));
     let out_dir = opt(args, "--out-dir").unwrap_or(".");
 
     eprintln!("sweeping EpBsEsSw-8 (40320 permutations)…");
-    let sw = sweep(&gpu, &e.kernels);
+    // Sweep distribution and the algorithm marker share one timing model.
+    let sw = sweep_with(&gpu, &e.kernels, make_backend.as_ref());
     let sched = reorder(&gpu, &e.kernels);
-    let t_alg = sim::simulate_order(&gpu, &e.kernels, &sched.order).makespan_ms;
+    let t_alg = make_backend()
+        .execute(&gpu, &e.kernels, &sched.order)
+        .makespan_ms;
     let median = sw.median_ms();
 
     // Ranking curve: sorted times, ascending (Fig. 1 top panel).
@@ -199,9 +243,14 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let gpu = GpuSpec::gtx580();
     let id = opt(args, "--exp").context("--exp required")?;
     let e = by_id(id).with_context(|| format!("unknown experiment `{id}`"))?;
-    let sw = sweep(&gpu, &e.kernels);
+    let make_backend = model_backend_factory(args)?;
+    let backend_name = opt(args, "--backend").unwrap_or("sim");
+    let sw = sweep_with(&gpu, &e.kernels, make_backend.as_ref());
     let sorted = sw.sorted_times();
-    println!("{}: {} permutations", e.name, sw.n_perms);
+    println!(
+        "{}: {} permutations ({backend_name} backend)",
+        e.name, sw.n_perms
+    );
     println!("  best   {:.2} ms  {:?}", sw.best_ms, sw.best_order);
     println!("  p25    {:.2} ms", kreorder::metrics::percentile(&sorted, 25.0));
     println!("  median {:.2} ms", sw.median_ms());
@@ -216,6 +265,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 
 fn cmd_sched(args: &[String]) -> Result<()> {
     let gpu = GpuSpec::gtx580();
+    let mut backend = model_backend(args)?;
     let kernels = if let Some(id) = opt(args, "--exp") {
         by_id(id)
             .with_context(|| format!("unknown experiment `{id}`"))?
@@ -246,21 +296,14 @@ fn cmd_sched(args: &[String]) -> Result<()> {
         println!("  round {r}: {names:?}  R_comb {ratio:.2}");
     }
 
-    println!("\nsimulated makespan:");
-    for policy in [
-        Policy::Fifo,
-        Policy::Reverse,
-        Policy::Random(0),
-        Policy::Algorithm1,
-    ] {
+    println!("\n{} makespan per registered policy:", backend.name());
+    for policy in registry::all_policies() {
         let order = policy.order(&gpu, &kernels);
-        let r = sim::simulate_order(&gpu, &kernels, &order);
+        let r = backend.execute(&gpu, &kernels, &order);
         println!(
-            "  {:<12} {:>10.2} ms   occupancy {:>5.1}%  stalls {}",
-            policy.to_string(),
-            r.makespan_ms,
-            r.avg_warp_occupancy * 100.0,
-            r.dispatch_stalls
+            "  {:<18} {:>10.2} ms",
+            policy.name(),
+            r.makespan_ms
         );
     }
     Ok(())
@@ -273,26 +316,65 @@ fn cmd_sched(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let batches: usize = opt(args, "--batches").map_or(8, |s| s.parse().unwrap_or(8));
     let window: usize = opt(args, "--window").map_or(8, |s| s.parse().unwrap_or(8));
+    let devices: usize = opt(args, "--devices").map_or(1, |s| s.parse().unwrap_or(1));
     let seed: u64 = opt(args, "--seed").map_or(0, |s| s.parse().unwrap_or(0));
-    let policy = opt(args, "--policy")
-        .map(|p| Policy::parse(p).with_context(|| format!("bad policy `{p}`")))
-        .transpose()?
-        .unwrap_or(Policy::Algorithm1);
-    let artifacts = opt(args, "--artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(ArtifactStore::default_dir);
+    let policy_name = opt(args, "--policy").unwrap_or("algorithm1");
     let sim_only = flag(args, "--sim-only");
+    let backend_name = opt(args, "--backend");
 
     let gpu = GpuSpec::gtx580();
-    let cfg = CoordinatorConfig {
-        gpu: gpu.clone(),
-        policy,
-        window,
-        linger: Duration::from_millis(5),
-        artifacts_dir: if sim_only { None } else { Some(artifacts) },
-    };
-    println!("coordinator: policy={policy} window={window} sim_only={sim_only}");
-    let coord = Coordinator::start(cfg);
+    let mut builder = CoordinatorBuilder::new()
+        .gpu(gpu.clone())
+        .policy_named(policy_name)
+        .map_err(anyhow::Error::from)?
+        .devices(devices)
+        .window(window)
+        .linger(Duration::from_millis(5));
+
+    // Backend selection: explicit --backend wins; otherwise PJRT payloads
+    // when compiled in and not --sim-only; otherwise the simulator.
+    if backend_name == Some("pjrt") && sim_only {
+        bail!("--backend pjrt and --sim-only are contradictory; pick one");
+    }
+    match backend_name {
+        Some("pjrt") | None if !sim_only => {
+            let artifacts = opt(args, "--artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(ArtifactStore::default_dir);
+            #[cfg(feature = "pjrt")]
+            {
+                builder = builder.pjrt_backend(artifacts);
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                if backend_name == Some("pjrt") {
+                    bail!(
+                        "--backend pjrt needs a build with --features pjrt \
+                         (artifacts at {})",
+                        artifacts.display()
+                    );
+                }
+                eprintln!(
+                    "note: built without the `pjrt` feature — serving simulation-only"
+                );
+            }
+        }
+        Some(name) => {
+            // Validate the spelling, then install a fresh instance per
+            // device worker.
+            let _ = exec::parse_model_backend(name).map_err(anyhow::Error::from)?;
+            let name = name.to_string();
+            builder = builder.backend(move || {
+                exec::parse_model_backend(&name).map_err(anyhow::Error::from)
+            });
+        }
+        None => {} // --sim-only with no --backend: simulator default
+    }
+
+    println!(
+        "coordinator: policy={policy_name} window={window} devices={devices} sim_only={sim_only}"
+    );
+    let coord = builder.start();
 
     let mut rng = SplitMix64::new(seed);
     let mut handles = Vec::new();
@@ -319,11 +401,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let (reports, stats) = coord.shutdown();
 
     println!("\nper-batch (simulated GTX580 makespan):");
-    println!("  batch   n   fifo(ms)   policy(ms)  speedup   exec-wall(ms)");
+    println!("  batch  dev   n   fifo(ms)   policy(ms)  speedup   exec-wall(ms)");
     for r in &reports {
         println!(
-            "  {:>5} {:>3} {:>10.2} {:>11.2} {:>8.3}x {:>12.2}",
+            "  {:>5} {:>4} {:>3} {:>10.2} {:>11.2} {:>8.3}x {:>12.2}",
             r.batch_id,
+            r.device,
             r.n,
             r.sim_fifo_ms,
             r.sim_policy_ms,
@@ -342,6 +425,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 
 fn cmd_ablate(args: &[String]) -> Result<()> {
     let gpu = GpuSpec::gtx580();
+    let mut backend = model_backend(args)?;
     let experiments = match opt(args, "--exp") {
         Some(id) => vec![by_id(id).with_context(|| format!("unknown experiment `{id}`"))?],
         None => all_experiments(),
@@ -392,11 +476,25 @@ fn cmd_ablate(args: &[String]) -> Result<()> {
         let mut cells = Vec::new();
         for (_, cfg) in &configs {
             let sched = reorder_with(&gpu, &e.kernels, cfg);
-            let t = sim::simulate_order(&gpu, &e.kernels, &sched.order).makespan_ms;
+            let t = backend.execute(&gpu, &e.kernels, &sched.order).makespan_ms;
             cells.push(format!("{t:.2}"));
         }
         println!("| {} | {} |", e.name, cells.join(" | "));
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// policies
+// ---------------------------------------------------------------------------
+
+fn cmd_policies(_args: &[String]) -> Result<()> {
+    println!("registered launch policies:");
+    print!("{}", registry::help_table());
+    println!(
+        "\nAny spelling above is accepted by `serve --policy`, \
+         `CoordinatorBuilder::policy_named`, and `sched::registry::parse`."
+    );
     Ok(())
 }
 

@@ -13,8 +13,8 @@ mod heap;
 
 pub use heap::for_each_permutation;
 
+use crate::exec::{ExecutionBackend, SimulatorBackend};
 use crate::gpu::{GpuSpec, KernelProfile};
-use crate::sim::simulate_order;
 use crate::util::{default_threads, parallel_map};
 
 /// Distribution of simulated makespans across all launch-order
@@ -79,13 +79,29 @@ impl SweepResult {
     }
 }
 
-/// Exhaustively simulate all `n!` launch orders of `kernels`.
+/// Exhaustively simulate all `n!` launch orders of `kernels` on the fluid
+/// simulator (the paper's methodology). See [`sweep_with`] for other
+/// execution backends.
+pub fn sweep(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SweepResult {
+    sweep_with(gpu, kernels, &|| Box::new(SimulatorBackend::new()))
+}
+
+/// Exhaustively evaluate all `n!` launch orders of `kernels` on an
+/// [`ExecutionBackend`] built by `make_backend` (backends are not
+/// required to be `Sync`).
 ///
 /// Parallelized over the choice of the first two positions (`n·(n-1)`
 /// prefixes, each enumerating `(n-2)!` suffixes with Heap's algorithm) so
-/// work spreads evenly across cores. n ≤ 12 or so is practical (the
-/// paper's largest space is 8! = 40 320).
-pub fn sweep(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SweepResult {
+/// work spreads evenly across cores. `make_backend` is invoked once per
+/// *prefix* — `n·(n-1)` times, not once per thread — so keep the factory
+/// cheap (the zero-sized model backends are; an expensive backend like
+/// PJRT is the wrong substrate for a 40 320-permutation sweep anyway).
+/// n ≤ 12 or so is practical (the paper's largest space is 8! = 40 320).
+pub fn sweep_with(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+) -> SweepResult {
     let n = kernels.len();
     assert!(n >= 1, "empty workload");
 
@@ -104,12 +120,13 @@ pub fn sweep(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SweepResult {
     }
 
     let partials: Vec<Partial> = parallel_map(prefixes.len(), default_threads(), |pi| {
+        let mut backend = make_backend();
         let prefix = &prefixes[pi];
         let mut rest: Vec<usize> = (0..n).filter(|i| !prefix.contains(i)).collect();
         let mut order = Vec::with_capacity(n);
         let mut p = Partial::new();
         if rest.is_empty() {
-            let t = simulate_order(gpu, kernels, prefix).makespan_ms;
+            let t = backend.execute(gpu, kernels, prefix).makespan_ms;
             p.record(t, prefix);
             return p;
         }
@@ -117,7 +134,7 @@ pub fn sweep(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SweepResult {
             order.clear();
             order.extend_from_slice(prefix);
             order.extend_from_slice(suffix);
-            let t = simulate_order(gpu, kernels, &order).makespan_ms;
+            let t = backend.execute(gpu, kernels, &order).makespan_ms;
             p.record(t, &order);
         });
         p
@@ -182,7 +199,9 @@ impl Partial {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::AnalyticBackend;
     use crate::gpu::AppKind;
+    use crate::sim::simulate_order;
 
     fn kernel(n_blocks: u32, warps: u32, shmem: u32, ratio: f64, work: f64) -> KernelProfile {
         KernelProfile {
@@ -258,6 +277,18 @@ mod tests {
         let r = sweep(&gpu, &ks);
         let m = r.median_ms();
         assert!(r.best_ms <= m && m <= r.worst_ms);
+    }
+
+    #[test]
+    fn sweep_with_accepts_other_backends() {
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..4)
+            .map(|i| kernel(16, 4 + i * 8, ((i % 2) as u32) * 24576, 2.0 + i as f64, 400.0))
+            .collect();
+        let r = sweep_with(&gpu, &ks, &|| Box::new(AnalyticBackend::new()));
+        assert_eq!(r.n_perms, 24);
+        assert!(r.best_ms.is_finite() && r.best_ms > 0.0);
+        assert!(r.best_ms <= r.worst_ms);
     }
 
     #[test]

@@ -1,0 +1,379 @@
+//! The [`LaunchPolicy`] trait — the open extension seam for launch-order
+//! selection — plus every built-in implementation.
+//!
+//! The paper contributes one policy (Algorithm 1) and evaluates it against
+//! FIFO / reverse / random baselines. Related systems explore the same
+//! design space with different selectors (Kernelet's greedy co-schedule
+//! pairing, ACS's dynamic-graph scheduling), so the coordinator, CLI,
+//! benches and experiment harness all dispatch through this trait: a new
+//! policy is one `impl` plus one registry line, with no changes anywhere
+//! else.
+
+use super::algorithm::reorder_with;
+use super::score::{CombinedProfile, ScoreConfig};
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::util::SplitMix64;
+
+/// How to choose a launch order for a batch of kernels.
+///
+/// Implementations must return a permutation of `0..kernels.len()`
+/// (every index exactly once). `Send + Sync` so one policy instance can be
+/// shared across the coordinator's per-device worker threads.
+pub trait LaunchPolicy: Send + Sync {
+    /// The policy's registry spelling (e.g. `"fifo"`, `"random:42"`),
+    /// which [`crate::sched::registry::parse`] accepts back — or, for
+    /// configurations the registry cannot express (e.g. bespoke ablation
+    /// `ScoreConfig`s), a distinct label that never impersonates a
+    /// registry spelling.
+    fn name(&self) -> String;
+
+    /// Produce a launch order: a permutation of `0..kernels.len()`.
+    fn order(&self, gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize>;
+}
+
+/// Submission order (what a CUDA app does by default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FifoPolicy;
+
+impl LaunchPolicy for FifoPolicy {
+    fn name(&self) -> String {
+        "fifo".into()
+    }
+
+    fn order(&self, _gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+        (0..kernels.len()).collect()
+    }
+}
+
+/// Reversed submission order (a simple adversarial baseline).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReversePolicy;
+
+impl LaunchPolicy for ReversePolicy {
+    fn name(&self) -> String {
+        "reverse".into()
+    }
+
+    fn order(&self, _gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+        (0..kernels.len()).rev().collect()
+    }
+}
+
+/// A uniformly random permutation from a fixed seed (the paper's "random
+/// order choice" comparison). Deterministic per seed.
+#[derive(Debug, Clone, Copy)]
+pub struct RandomPolicy {
+    pub seed: u64,
+}
+
+impl RandomPolicy {
+    pub fn new(seed: u64) -> Self {
+        RandomPolicy { seed }
+    }
+}
+
+impl LaunchPolicy for RandomPolicy {
+    fn name(&self) -> String {
+        format!("random:{}", self.seed)
+    }
+
+    fn order(&self, _gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..kernels.len()).collect();
+        SplitMix64::new(self.seed).shuffle(&mut order);
+        order
+    }
+}
+
+/// The paper's Algorithm 1 (greedy round construction), with a
+/// configurable [`ScoreConfig`] for the ablation studies.
+#[derive(Debug, Clone, Copy)]
+pub struct Algorithm1Policy {
+    pub cfg: ScoreConfig,
+}
+
+impl Algorithm1Policy {
+    /// The default (tuned) configuration.
+    pub fn new() -> Self {
+        Algorithm1Policy {
+            cfg: ScoreConfig::default(),
+        }
+    }
+
+    /// Algorithm 1 exactly as printed in the paper.
+    pub fn strict() -> Self {
+        Algorithm1Policy {
+            cfg: ScoreConfig::paper_strict(),
+        }
+    }
+
+    pub fn with_config(cfg: ScoreConfig) -> Self {
+        Algorithm1Policy { cfg }
+    }
+}
+
+impl Default for Algorithm1Policy {
+    fn default() -> Self {
+        Algorithm1Policy::new()
+    }
+}
+
+impl LaunchPolicy for Algorithm1Policy {
+    fn name(&self) -> String {
+        // The two registry spellings round-trip through the registry;
+        // bespoke ScoreConfigs (ablation studies) are labelled distinctly
+        // so logs and batch reports never pass them off as the default.
+        if self.cfg == ScoreConfig::default() {
+            "algorithm1".into()
+        } else if self.cfg == ScoreConfig::paper_strict() {
+            "algorithm1:strict".into()
+        } else {
+            "algorithm1:custom".into()
+        }
+    }
+
+    fn order(&self, gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+        reorder_with(gpu, kernels, &self.cfg).order
+    }
+}
+
+/// Shortest-job-first by estimated total work (`N_tblk · work_per_block`).
+///
+/// A classic serving baseline: small kernels drain first, which minimizes
+/// mean *completion* time but ignores resource packing entirely — exactly
+/// the blind spot the paper's Algorithm 1 exists to fix, which makes SJF a
+/// useful foil in the policy comparison.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SjfPolicy;
+
+impl LaunchPolicy for SjfPolicy {
+    fn name(&self) -> String {
+        "sjf".into()
+    }
+
+    fn order(&self, _gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..kernels.len()).collect();
+        idx.sort_by(|&a, &b| {
+            kernels[a]
+                .total_work()
+                .partial_cmp(&kernels[b].total_work())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+}
+
+/// Kernelet-style greedy co-schedule (Zhong & He): repeatedly emit the
+/// *pair* of remaining kernels whose work-weighted combined
+/// instructions/bytes ratio lands closest to the GPU's balanced ratio
+/// `R_B`, among pairs that fit together in one execution round.
+///
+/// Unlike Algorithm 1 this never grows a round past two kernels and scores
+/// only the compute/memory balance (no resource-leftover terms) — it is
+/// the "co-schedule two complementary slices" heuristic transplanted to
+/// whole-kernel launch ordering. Within each pair the heavier
+/// shared-memory kernel launches first (same release-early argument as the
+/// paper's intra-round rule); kernels that pair with nothing are emitted
+/// in submission order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GreedyCoschedulePolicy;
+
+impl LaunchPolicy for GreedyCoschedulePolicy {
+    fn name(&self) -> String {
+        "coschedule".into()
+    }
+
+    fn order(&self, gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+        let profiles: Vec<CombinedProfile> =
+            kernels.iter().map(|k| CombinedProfile::of(gpu, k)).collect();
+        let mut remaining: Vec<usize> = (0..kernels.len()).collect();
+        let mut order = Vec::with_capacity(kernels.len());
+
+        while remaining.len() >= 2 {
+            // Best-pairing pass: positions into `remaining` plus the
+            // distance |R_comb - R_B| (lower is better).
+            let mut best: Option<(usize, usize, f64)> = None;
+            for i in 0..remaining.len() {
+                for j in (i + 1)..remaining.len() {
+                    let (a, b) = (remaining[i], remaining[j]);
+                    if !profiles[a].fits_with(gpu, &profiles[b]) {
+                        continue;
+                    }
+                    let rc = profiles[a].combine(&profiles[b]).ratio();
+                    let d = if rc.is_finite() {
+                        (rc - gpu.balanced_ratio).abs()
+                    } else {
+                        f64::MAX
+                    };
+                    match best {
+                        None => best = Some((i, j, d)),
+                        Some((_, _, bd)) if d < bd => best = Some((i, j, d)),
+                        _ => {}
+                    }
+                }
+            }
+            match best {
+                Some((i, j, _)) => {
+                    let (a, b) = (remaining[i], remaining[j]);
+                    // Remove the higher position first to keep `i` valid.
+                    remaining.remove(j);
+                    remaining.remove(i);
+                    if kernels[b].shmem_per_block > kernels[a].shmem_per_block {
+                        order.push(b);
+                        order.push(a);
+                    } else {
+                        order.push(a);
+                        order.push(b);
+                    }
+                }
+                // No two remaining kernels fit together: emit FIFO-stable.
+                None => order.push(remaining.remove(0)),
+            }
+        }
+        order.append(&mut remaining);
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::kernel;
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::gtx580()
+    }
+
+    fn ks() -> Vec<KernelProfile> {
+        (0..6)
+            .map(|i| kernel(&format!("k{i}"), 16, 4 + (i % 3) * 8, 0, 1.0 + i as f64))
+            .collect()
+    }
+
+    fn assert_perm(order: &[usize], n: usize) {
+        let mut s: Vec<usize> = order.to_vec();
+        s.sort_unstable();
+        assert_eq!(s, (0..n).collect::<Vec<_>>(), "not a permutation");
+    }
+
+    #[test]
+    fn builtin_policies_emit_permutations() {
+        let g = gpu();
+        let ks = ks();
+        let policies: Vec<Box<dyn LaunchPolicy>> = vec![
+            Box::new(FifoPolicy),
+            Box::new(ReversePolicy),
+            Box::new(RandomPolicy::new(7)),
+            Box::new(Algorithm1Policy::new()),
+            Box::new(Algorithm1Policy::strict()),
+            Box::new(SjfPolicy),
+            Box::new(GreedyCoschedulePolicy),
+        ];
+        for p in &policies {
+            assert_perm(&p.order(&g, &ks), ks.len());
+        }
+    }
+
+    #[test]
+    fn trait_fifo_matches_identity() {
+        assert_eq!(FifoPolicy.order(&gpu(), &ks()), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(ReversePolicy.order(&gpu(), &ks()), vec![5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let g = gpu();
+        let ks = ks();
+        assert_eq!(
+            RandomPolicy::new(3).order(&g, &ks),
+            RandomPolicy::new(3).order(&g, &ks)
+        );
+        assert_ne!(
+            RandomPolicy::new(3).order(&g, &ks),
+            RandomPolicy::new(4).order(&g, &ks)
+        );
+    }
+
+    #[test]
+    fn sjf_orders_by_total_work() {
+        let g = gpu();
+        // kernel() fixes work_per_block = 100, so total work is driven by
+        // the grid size alone; scramble it so SJF cannot be identity by
+        // accident.
+        let mut ks: Vec<KernelProfile> = (0..4)
+            .map(|i| kernel(&format!("k{i}"), 16, 4, 0, 2.0 + i as f64))
+            .collect();
+        ks[0].n_blocks = 64;
+        ks[1].n_blocks = 16;
+        ks[2].n_blocks = 48;
+        ks[3].n_blocks = 32;
+        assert_eq!(SjfPolicy.order(&g, &ks), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn sjf_is_stable_on_ties() {
+        let g = gpu();
+        let ks: Vec<KernelProfile> =
+            (0..4).map(|i| kernel(&format!("k{i}"), 16, 4, 0, 2.0)).collect();
+        assert_eq!(SjfPolicy.order(&g, &ks), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn coschedule_pairs_opposing_types() {
+        let g = gpu();
+        // Two memory-bound (R=1) and two compute-bound (R=40) kernels:
+        // each emitted pair must mix the types (combined ratio closest to
+        // R_B comes from opposite sides).
+        let ks = vec![
+            kernel("m1", 16, 24, 0, 1.0),
+            kernel("m2", 16, 24, 0, 1.0),
+            kernel("c1", 16, 24, 0, 40.0),
+            kernel("c2", 16, 24, 0, 40.0),
+        ];
+        let order = GreedyCoschedulePolicy.order(&g, &ks);
+        assert_perm(&order, 4);
+        for pair in order.chunks(2) {
+            let mixed = (ks[pair[0]].ratio < g.balanced_ratio)
+                != (ks[pair[1]].ratio < g.balanced_ratio);
+            assert!(mixed, "pair {pair:?} not mixed in {order:?}");
+        }
+    }
+
+    #[test]
+    fn coschedule_puts_heavier_shmem_first_in_pair() {
+        let g = gpu();
+        let ks = vec![
+            kernel("light", 16, 4, 8 * 1024, 1.0),
+            kernel("heavy", 16, 4, 24 * 1024, 40.0),
+        ];
+        assert_eq!(GreedyCoschedulePolicy.order(&g, &ks), vec![1, 0]);
+    }
+
+    #[test]
+    fn coschedule_handles_unpairable_kernels() {
+        let g = gpu();
+        // Each kernel alone exhausts SM warps: no pair fits, FIFO emitted.
+        let ks = vec![
+            kernel("a", 16, 48, 0, 3.0),
+            kernel("b", 16, 48, 0, 5.0),
+            kernel("c", 16, 48, 0, 7.0),
+        ];
+        assert_eq!(GreedyCoschedulePolicy.order(&g, &ks), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn names_are_registry_spellings() {
+        assert_eq!(FifoPolicy.name(), "fifo");
+        assert_eq!(ReversePolicy.name(), "reverse");
+        assert_eq!(RandomPolicy::new(42).name(), "random:42");
+        assert_eq!(Algorithm1Policy::new().name(), "algorithm1");
+        assert_eq!(Algorithm1Policy::strict().name(), "algorithm1:strict");
+        let custom = Algorithm1Policy::with_config(ScoreConfig {
+            resource_balance: false,
+            ..ScoreConfig::default()
+        });
+        assert_eq!(custom.name(), "algorithm1:custom");
+        assert_eq!(SjfPolicy.name(), "sjf");
+        assert_eq!(GreedyCoschedulePolicy.name(), "coschedule");
+    }
+}

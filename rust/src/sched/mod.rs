@@ -10,15 +10,30 @@
 //!   plus the compute/memory balance term gated on opposing kernel types.
 //! * [`CombinedProfile`] — ProfileCombine: the virtual kernel that stands
 //!   in for everything already packed into a round.
-//! * [`Policy`] — FIFO / Reverse / Random / Algorithm-1 order selection
-//!   for experiments and the coordinator.
+//! * [`LaunchPolicy`] — the open policy trait: FIFO / Reverse / Random /
+//!   Algorithm-1 plus SJF and a Kernelet-style greedy co-schedule, behind
+//!   one interface the coordinator, CLI, benches and experiment harness
+//!   all dispatch through. New policies are one `impl` + one
+//!   [`registry`] line.
+//! * [`registry`] — string spellings (`"fifo"`, `"random:42"`, …) to
+//!   trait objects, with error messages that list every valid name.
+//! * [`Policy`] — deprecated closed-enum shim over the same policies,
+//!   kept one release for migration.
 
 mod algorithm;
+mod launch_policy;
 mod policy;
+pub mod registry;
 mod score;
 
 pub use algorithm::{reorder, reorder_with, Schedule};
+pub use launch_policy::{
+    Algorithm1Policy, FifoPolicy, GreedyCoschedulePolicy, LaunchPolicy, RandomPolicy,
+    ReversePolicy, SjfPolicy,
+};
+#[allow(deprecated)]
 pub use policy::Policy;
+pub use registry::PolicyParseError;
 pub use score::{score, CombinedProfile, RoundOrder, ScoreConfig};
 
 #[cfg(test)]

@@ -1,12 +1,20 @@
-//! Launch-order policies: the baselines the paper's evaluation compares
-//! against, plus Algorithm 1 behind the same interface (used by the
-//! coordinator and the experiment harness).
+//! Deprecated closed-enum policy selection, kept one release as a
+//! migration shim for the open [`LaunchPolicy`] trait
+//! (`sched::launch_policy`) and the string registry (`sched::registry`).
 
-use super::algorithm::reorder;
+#![allow(deprecated)]
+
+use super::launch_policy::{
+    Algorithm1Policy, FifoPolicy, LaunchPolicy, RandomPolicy, ReversePolicy,
+};
 use crate::gpu::{GpuSpec, KernelProfile};
-use crate::util::SplitMix64;
 
 /// How to choose a launch order for a batch of kernels.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `sched::registry::parse` or a `sched::LaunchPolicy` implementation; \
+            this closed enum cannot express out-of-tree policies"
+)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     /// Submission order (what a CUDA app does by default).
@@ -22,6 +30,10 @@ pub enum Policy {
 
 impl Policy {
     /// Produce a launch order (a permutation of `0..kernels.len()`).
+    ///
+    /// Kept as the original direct implementation (no boxing) so the
+    /// `policy_overhead` bench compares the genuine pre-redesign path
+    /// against trait-object dispatch.
     pub fn order(&self, gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
         let n = kernels.len();
         match self {
@@ -29,14 +41,15 @@ impl Policy {
             Policy::Reverse => (0..n).rev().collect(),
             Policy::Random(seed) => {
                 let mut order: Vec<usize> = (0..n).collect();
-                SplitMix64::new(*seed).shuffle(&mut order);
+                crate::util::SplitMix64::new(*seed).shuffle(&mut order);
                 order
             }
-            Policy::Algorithm1 => reorder(gpu, kernels).order,
+            Policy::Algorithm1 => super::algorithm::reorder(gpu, kernels).order,
         }
     }
 
-    /// Parse from a CLI string.
+    /// Parse from a CLI string. Prefer [`super::registry::parse`], which
+    /// knows the full registry and reports helpful errors.
     pub fn parse(s: &str) -> Option<Policy> {
         match s.to_ascii_lowercase().as_str() {
             "fifo" => Some(Policy::Fifo),
@@ -45,6 +58,16 @@ impl Policy {
             other => other
                 .strip_prefix("random:")
                 .and_then(|seed| seed.parse().ok().map(Policy::Random)),
+        }
+    }
+
+    /// Bridge into the trait world: the equivalent [`LaunchPolicy`].
+    pub fn to_launch_policy(&self) -> Box<dyn LaunchPolicy> {
+        match self {
+            Policy::Fifo => Box::new(FifoPolicy),
+            Policy::Reverse => Box::new(ReversePolicy),
+            Policy::Random(seed) => Box::new(RandomPolicy::new(*seed)),
+            Policy::Algorithm1 => Box::new(Algorithm1Policy::new()),
         }
     }
 }
@@ -119,5 +142,25 @@ mod tests {
         }
         assert_eq!(Policy::parse("nope"), None);
         assert_eq!(Policy::parse("random:x"), None);
+    }
+
+    #[test]
+    fn enum_shim_matches_trait_policies() {
+        // The shim must stay behaviour-identical to the trait impls it
+        // bridges to, for every workload shape.
+        let gpu = GpuSpec::gtx580();
+        let ks = ks();
+        for p in [
+            Policy::Fifo,
+            Policy::Reverse,
+            Policy::Random(11),
+            Policy::Algorithm1,
+        ] {
+            let via_enum = p.order(&gpu, &ks);
+            let via_trait = super::super::registry::parse(&p.to_string())
+                .unwrap()
+                .order(&gpu, &ks);
+            assert_eq!(via_enum, via_trait, "{p}");
+        }
     }
 }

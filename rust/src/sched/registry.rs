@@ -1,0 +1,228 @@
+//! String registry for launch policies — the single place that maps CLI /
+//! config spellings onto [`LaunchPolicy`] trait objects.
+//!
+//! Every spelling the seed CLI accepted keeps working (`fifo`, `reverse`,
+//! `random:<seed>`, `algorithm1` with its `algorithm` / `alg` aliases),
+//! plus the policies added with the trait redesign (`sjf`, `coschedule`,
+//! `algorithm1:strict`). Unknown spellings return a [`PolicyParseError`]
+//! whose message lists every valid name, so the CLI can fail helpfully.
+//!
+//! [`parse`], [`all_policies`] and [`help_table`] all derive from the one
+//! [`REGISTRY`] table below, so adding a policy really is one `impl` plus
+//! one table row — the three views cannot drift.
+
+use super::launch_policy::{
+    Algorithm1Policy, FifoPolicy, GreedyCoschedulePolicy, LaunchPolicy, RandomPolicy,
+    ReversePolicy, SjfPolicy,
+};
+
+/// One registered policy: canonical spelling, accepted aliases, a
+/// description, and the constructor. `random:<seed>` is the only
+/// parameterized spelling and is handled by [`parse`] directly (its
+/// constructor here uses seed 0, for [`all_policies`]).
+pub struct RegistryEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub description: &'static str,
+    make: fn() -> Box<dyn LaunchPolicy>,
+}
+
+/// The policy registry — the single source of truth for spellings.
+pub static REGISTRY: &[RegistryEntry] = &[
+    RegistryEntry {
+        name: "fifo",
+        aliases: &[],
+        description: "submission (arrival) order — the CUDA default",
+        make: || Box::new(FifoPolicy),
+    },
+    RegistryEntry {
+        name: "reverse",
+        aliases: &[],
+        description: "reversed submission order (adversarial baseline)",
+        make: || Box::new(ReversePolicy),
+    },
+    RegistryEntry {
+        name: "random:<seed>",
+        aliases: &[],
+        description: "seeded uniform-random permutation (the paper's random-choice reference)",
+        make: || Box::new(RandomPolicy::new(0)),
+    },
+    RegistryEntry {
+        name: "algorithm1",
+        aliases: &["algorithm", "alg"],
+        description: "the paper's greedy round-construction scheduler (Algorithm 1)",
+        make: || Box::new(Algorithm1Policy::new()),
+    },
+    RegistryEntry {
+        name: "algorithm1:strict",
+        aliases: &[],
+        description: "Algorithm 1 exactly as printed (rounds in construction order)",
+        make: || Box::new(Algorithm1Policy::strict()),
+    },
+    RegistryEntry {
+        name: "sjf",
+        aliases: &[],
+        description: "shortest-job-first by estimated total work (packing-blind baseline)",
+        make: || Box::new(SjfPolicy),
+    },
+    RegistryEntry {
+        name: "coschedule",
+        aliases: &["greedy-coschedule", "kernelet"],
+        description: "Kernelet-style greedy pairing by combined-ratio distance to R_B",
+        make: || Box::new(GreedyCoschedulePolicy),
+    },
+];
+
+/// Error returned for unknown policy spellings; its `Display` lists every
+/// valid name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PolicyParseError {
+    pub input: String,
+}
+
+impl std::fmt::Display for PolicyParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names: Vec<&str> = REGISTRY.iter().map(|e| e.name).collect();
+        write!(
+            f,
+            "unknown policy `{}` — valid policies: {}",
+            self.input,
+            names.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for PolicyParseError {}
+
+/// Parse a policy spelling into a trait object.
+///
+/// ```
+/// let p = kreorder::sched::registry::parse("random:42").unwrap();
+/// assert_eq!(p.name(), "random:42");
+/// assert!(kreorder::sched::registry::parse("nope").is_err());
+/// ```
+pub fn parse(s: &str) -> Result<Box<dyn LaunchPolicy>, PolicyParseError> {
+    let lower = s.to_ascii_lowercase();
+    if let Some(seed) = lower.strip_prefix("random:") {
+        return seed
+            .parse()
+            .ok()
+            .map(|seed| Box::new(RandomPolicy::new(seed)) as Box<dyn LaunchPolicy>)
+            .ok_or_else(|| PolicyParseError { input: s.into() });
+    }
+    REGISTRY
+        .iter()
+        .find(|e| e.name == lower || e.aliases.contains(&lower.as_str()))
+        .map(|e| (e.make)())
+        .ok_or_else(|| PolicyParseError { input: s.into() })
+}
+
+/// One representative instance of every registered policy (seeded
+/// policies use seed 0) — what property tests and the `sched` subcommand
+/// iterate over.
+pub fn all_policies() -> Vec<Box<dyn LaunchPolicy>> {
+    REGISTRY.iter().map(|e| (e.make)()).collect()
+}
+
+/// Human-readable registry table (one line per policy, with aliases).
+pub fn help_table() -> String {
+    let mut out = String::new();
+    for e in REGISTRY {
+        let alias_note = if e.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", e.aliases.join(", "))
+        };
+        out.push_str(&format!("  {:<20} {}{alias_note}\n", e.name, e.description));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+    use crate::workloads::synthetic_workload;
+
+    #[test]
+    fn every_seed_spelling_still_parses() {
+        for s in ["fifo", "reverse", "algorithm", "algorithm1", "alg", "random:42"] {
+            assert!(parse(s).is_ok(), "{s}");
+        }
+    }
+
+    #[test]
+    fn new_policies_parse() {
+        for s in [
+            "sjf",
+            "coschedule",
+            "greedy-coschedule",
+            "kernelet",
+            "algorithm1:strict",
+        ] {
+            assert!(parse(s).is_ok(), "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(parse("FIFO").unwrap().name(), "fifo");
+        assert_eq!(parse("Random:7").unwrap().name(), "random:7");
+    }
+
+    /// Every table row's canonical spelling and every alias must parse,
+    /// and parse to the same behaviour as the row's constructor — the
+    /// anti-drift guarantee.
+    #[test]
+    fn every_registry_row_parses_to_its_constructor() {
+        let gpu = GpuSpec::gtx580();
+        let ks = synthetic_workload(&gpu, 6, 4);
+        for e in REGISTRY {
+            let reference = (e.make)();
+            let spelling = e.name.replace("<seed>", "0");
+            let mut spellings = vec![spelling];
+            spellings.extend(e.aliases.iter().map(|a| a.to_string()));
+            for s in spellings {
+                let p = parse(&s).unwrap_or_else(|err| panic!("{err}"));
+                assert_eq!(
+                    p.order(&gpu, &ks),
+                    reference.order(&gpu, &ks),
+                    "spelling {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for p in all_policies() {
+            let name = p.name();
+            let reparsed = parse(&name).unwrap_or_else(|e| panic!("{e}"));
+            // Same spelling and same behaviour on a probe workload.
+            assert_eq!(reparsed.name(), name);
+            let gpu = GpuSpec::gtx580();
+            let ks = synthetic_workload(&gpu, 6, 9);
+            assert_eq!(reparsed.order(&gpu, &ks), p.order(&gpu, &ks), "{name}");
+        }
+    }
+
+    #[test]
+    fn bad_input_error_lists_valid_names() {
+        let err = parse("nope").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("nope"));
+        for name in ["fifo", "reverse", "algorithm1", "sjf", "coschedule"] {
+            assert!(msg.contains(name), "missing {name} in: {msg}");
+        }
+        assert!(parse("random:x").is_err());
+        assert!(parse("random:").is_err());
+    }
+
+    #[test]
+    fn help_table_covers_registry() {
+        let t = help_table();
+        for e in REGISTRY {
+            assert!(t.contains(e.name));
+        }
+    }
+}

@@ -1,10 +1,16 @@
 //! Integration: the coordinator service executing REAL AOT payloads via
-//! PJRT while reordering batches with Algorithm 1 — the full three-layer
-//! request path.
+//! the PJRT execution backend while reordering batches with Algorithm 1 —
+//! the full three-layer request path, through the trait seams.
+//!
+//! Compiled only with `--features pjrt` and `#[ignore]`d by default: the
+//! payloads are AOT artifacts produced outside cargo (`make artifacts`),
+//! which offline/CI environments don't have. Run with
+//! `make artifacts && cargo test --features pjrt -- --ignored`.
 
-use kreorder::coordinator::{Coordinator, CoordinatorConfig, LaunchRequest};
+#![cfg(feature = "pjrt")]
+
+use kreorder::coordinator::{Coordinator, CoordinatorBuilder, LaunchRequest};
 use kreorder::gpu::GpuSpec;
-use kreorder::sched::Policy;
 use kreorder::workloads::{by_id, synthetic_workload};
 use std::path::PathBuf;
 use std::time::Duration;
@@ -13,21 +19,21 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn cfg(window: usize) -> CoordinatorConfig {
-    CoordinatorConfig {
-        gpu: GpuSpec::gtx580(),
-        policy: Policy::Algorithm1,
-        window,
-        linger: Duration::from_millis(10),
-        artifacts_dir: Some(artifacts_dir()),
-    }
+fn coordinator(window: usize) -> Coordinator {
+    CoordinatorBuilder::new()
+        .policy_named("algorithm1")
+        .unwrap()
+        .pjrt_backend(artifacts_dir())
+        .window(window)
+        .linger(Duration::from_millis(10))
+        .start()
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
 fn serves_real_payloads_for_every_app() {
-    let gpu = GpuSpec::gtx580();
     let e = by_id("epbsessw-8").unwrap(); // 2 kernels per app
-    let coord = Coordinator::start(cfg(8));
+    let coord = coordinator(8);
     let handles: Vec<_> = e
         .kernels
         .iter()
@@ -53,17 +59,20 @@ fn serves_real_payloads_for_every_app() {
     let (reports, stats) = coord.shutdown();
     assert_eq!(stats.n_failures, 0);
     assert_eq!(stats.n_responses, 8);
-    // The batch must have been reordered by Algorithm 1 and simulated.
+    // The batch must have been reordered by Algorithm 1 (trait dispatch),
+    // simulated, and executed by the PJRT backend.
     let batch = &reports[0];
     assert_eq!(batch.n, 8);
+    assert_eq!(batch.policy, "algorithm1");
+    assert_eq!(batch.backend, "pjrt");
     assert!(batch.sim_policy_ms <= batch.sim_fifo_ms + 1e-9);
-    let _ = gpu;
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
 fn sustained_stream_multiple_batches() {
     let gpu = GpuSpec::gtx580();
-    let coord = Coordinator::start(cfg(4));
+    let coord = coordinator(4);
     let mut handles = Vec::new();
     for b in 0..4u64 {
         for (i, k) in synthetic_workload(&gpu, 4, b).into_iter().enumerate() {
@@ -90,9 +99,10 @@ fn sustained_stream_multiple_batches() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
 fn bad_artifact_name_is_failure_injected_not_fatal() {
     let gpu = GpuSpec::gtx580();
-    let coord = Coordinator::start(cfg(2));
+    let coord = coordinator(2);
     let mut good = synthetic_workload(&gpu, 2, 99);
     good[1].artifact = "no_such_artifact".into();
     let h0 = coord.submit(LaunchRequest {
@@ -115,4 +125,39 @@ fn bad_artifact_name_is_failure_injected_not_fatal() {
     assert_eq!(b.checksum, f64::NEG_INFINITY);
     let (_, stats) = coord.shutdown();
     assert_eq!(stats.n_failures, 1);
+}
+
+#[test]
+#[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
+fn multi_device_pjrt_builds_one_runtime_per_worker() {
+    // Two device workers, each constructing its own PJRT backend via the
+    // factory (the handles are !Send): both must serve real payloads.
+    let gpu = GpuSpec::gtx580();
+    let coord = CoordinatorBuilder::new()
+        .policy_named("algorithm1")
+        .unwrap()
+        .pjrt_backend(artifacts_dir())
+        .devices(2)
+        .window(4)
+        .linger(Duration::from_millis(10))
+        .start();
+    let mut handles = Vec::new();
+    for b in 0..4u64 {
+        for (i, k) in synthetic_workload(&gpu, 4, b).into_iter().enumerate() {
+            handles.push(coord.submit(LaunchRequest {
+                id: b * 4 + i as u64,
+                profile: k,
+                seed: i as u64,
+            }));
+        }
+        coord.flush();
+    }
+    for h in handles {
+        assert!(h.wait().unwrap().checksum.is_finite());
+    }
+    let (reports, _) = coord.shutdown();
+    let mut devices: Vec<usize> = reports.iter().map(|r| r.device).collect();
+    devices.sort_unstable();
+    devices.dedup();
+    assert_eq!(devices, vec![0, 1]);
 }

@@ -1,12 +1,13 @@
 //! Integration across the scheduling stack: workloads → Algorithm 1 →
 //! simulator → permutation sweeps → metrics, on reduced problem sizes.
 
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
 use kreorder::gpu::GpuSpec;
 use kreorder::metrics::{ExperimentRow, Table3};
-use kreorder::perm::sweep;
-use kreorder::sched::{reorder, Policy};
+use kreorder::perm::{sweep, sweep_with};
+use kreorder::sched::{registry, reorder};
 use kreorder::sim::{self, rounds::pack_rounds};
-use kreorder::workloads::{all_experiments, by_id, synthetic_workload};
+use kreorder::workloads::{all_experiments, by_id, epbsessw_8, synthetic_workload};
 
 #[test]
 fn every_paper_experiment_end_to_end() {
@@ -87,9 +88,45 @@ fn algorithm_round_structure_respects_capacity() {
 fn policies_disagree_where_order_matters() {
     let gpu = GpuSpec::gtx580();
     let e = by_id("epbsessw-8").unwrap();
-    let t_fifo = sim::simulate_order(&gpu, &e.kernels, &Policy::Fifo.order(&gpu, &e.kernels));
-    let t_rev = sim::simulate_order(&gpu, &e.kernels, &Policy::Reverse.order(&gpu, &e.kernels));
-    assert!((t_fifo.makespan_ms - t_rev.makespan_ms).abs() > 1e-6);
+    let mut backend = SimulatorBackend::new();
+    let fifo = registry::parse("fifo").unwrap().order(&gpu, &e.kernels);
+    let rev = registry::parse("reverse").unwrap().order(&gpu, &e.kernels);
+    let t_fifo = backend.execute(&gpu, &e.kernels, &fifo).makespan_ms;
+    let t_rev = backend.execute(&gpu, &e.kernels, &rev).makespan_ms;
+    assert!((t_fifo - t_rev).abs() > 1e-6);
+}
+
+/// Refactor pin: the trait-object pipeline (registry policy + simulator
+/// backend) produces exactly the same Table-3 numbers as the direct
+/// function calls, on the paper's 8-kernel experiment.
+#[test]
+fn trait_pipeline_matches_direct_calls_on_epbsessw_8() {
+    let gpu = GpuSpec::gtx580();
+    let ks = epbsessw_8();
+    let direct_order = reorder(&gpu, &ks).order;
+    let trait_order = registry::parse("algorithm1").unwrap().order(&gpu, &ks);
+    assert_eq!(direct_order, trait_order);
+
+    let direct_ms = sim::simulate_order(&gpu, &ks, &direct_order).makespan_ms;
+    let trait_ms = SimulatorBackend::new()
+        .execute(&gpu, &ks, &trait_order)
+        .makespan_ms;
+    assert_eq!(direct_ms, trait_ms);
+}
+
+/// The backend seam also carries the sweep: an analytic-backend sweep
+/// evaluates the same permutation space (count, partition) as the
+/// simulator sweep, just under a different timing model.
+#[test]
+fn sweep_runs_on_both_model_backends() {
+    let gpu = GpuSpec::gtx580();
+    let ks = synthetic_workload(&gpu, 5, 13);
+    let sim_sweep = sweep(&gpu, &ks);
+    let analytic_sweep = sweep_with(&gpu, &ks, &|| Box::new(AnalyticBackend::new()));
+    assert_eq!(sim_sweep.n_perms, 120);
+    assert_eq!(analytic_sweep.n_perms, 120);
+    assert!(analytic_sweep.best_ms.is_finite());
+    assert!(analytic_sweep.best_ms <= analytic_sweep.worst_ms);
 }
 
 #[test]
@@ -146,7 +183,29 @@ fn cli_binary_smoke() {
         .output()
         .unwrap();
     assert!(out.status.success());
-    assert!(String::from_utf8_lossy(&out.stdout).contains("Algorithm 1 order"));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Algorithm 1 order"));
+    // The sched table now iterates the whole registry.
+    assert!(text.contains("sjf"), "{text}");
+    assert!(text.contains("coschedule"), "{text}");
+
+    // The registry listing subcommand.
+    let out = std::process::Command::new(bin).arg("policies").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["fifo", "reverse", "random:<seed>", "algorithm1", "sjf", "coschedule"] {
+        assert!(text.contains(name), "missing {name} in: {text}");
+    }
+
+    // Unknown policies fail with the full list of valid names.
+    let out = std::process::Command::new(bin)
+        .args(["serve", "--policy", "bogus", "--sim-only", "--batches", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("valid policies"), "{err}");
+    assert!(err.contains("coschedule"), "{err}");
 
     let out = std::process::Command::new(bin).arg("bogus").output().unwrap();
     assert!(!out.status.success());

@@ -5,9 +5,10 @@
 //! every case reports its seed on failure, making reproduction a
 //! one-liner. Each property runs across hundreds of seeded cases.
 
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
 use kreorder::gpu::{GpuSpec, KernelProfile, ResourceVec};
 use kreorder::perm::for_each_permutation;
-use kreorder::sched::{reorder, reorder_with, CombinedProfile, ScoreConfig};
+use kreorder::sched::{registry, reorder, reorder_with, CombinedProfile, ScoreConfig};
 use kreorder::sim::{
     self, rounds::pack_rounds, simulate_order, simulate_order_traced, BlockEvent,
 };
@@ -129,6 +130,56 @@ fn prop_scheduler_emits_permutation() {
             // Rounds partition the order.
             let flat: Vec<usize> = s.rounds.iter().flatten().copied().collect();
             assert_eq!(flat, s.order, "seed {seed} config {ci}");
+        }
+    }
+}
+
+/// Every registered policy — including seeded `random:<s>` instances —
+/// emits a valid permutation of `0..n` for arbitrary workloads. This is
+/// the contract the coordinator and every backend rely on.
+#[test]
+fn prop_every_registered_policy_emits_permutation() {
+    for seed in 0..CASES {
+        let g = gpu();
+        let ks = workload(seed);
+        let mut policies = registry::all_policies();
+        policies.push(registry::parse(&format!("random:{seed}")).unwrap());
+        for p in &policies {
+            let order = p.order(&g, &ks);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(
+                sorted,
+                (0..ks.len()).collect::<Vec<_>>(),
+                "seed {seed} policy {} order {order:?}",
+                p.name()
+            );
+        }
+    }
+}
+
+/// Both model backends report a finite positive makespan for every
+/// registered policy's order, and the simulator backend agrees exactly
+/// with the direct simulation call (the refactor-equivalence property,
+/// generalized across random workloads).
+#[test]
+fn prop_model_backends_time_every_policy() {
+    for seed in 0..CASES / 3 {
+        let g = gpu();
+        let ks = workload(seed);
+        let mut sim_backend = SimulatorBackend::new();
+        let mut analytic = AnalyticBackend::new();
+        for p in registry::all_policies() {
+            let order = p.order(&g, &ks);
+            let t_sim = sim_backend.execute(&g, &ks, &order).makespan_ms;
+            let t_direct = simulate_order(&g, &ks, &order).makespan_ms;
+            assert_eq!(t_sim, t_direct, "seed {seed} policy {}", p.name());
+            let t_analytic = analytic.execute(&g, &ks, &order).makespan_ms;
+            assert!(
+                t_analytic.is_finite() && t_analytic > 0.0,
+                "seed {seed} policy {} analytic {t_analytic}",
+                p.name()
+            );
         }
     }
 }
