@@ -1,0 +1,101 @@
+//! Bench: permutation-sweep throughput (permutations/second) across the
+//! three sweep modes — naive per-call `execute`, prepared-flat
+//! (`PreparedWorkload::execute_order`), and prefix-checkpointed — for
+//! n ∈ {6, 7, 8} synthetic workloads. Writes `BENCH_sweep.json` so the
+//! perf trajectory is tracked from this PR onward.
+//!
+//! `--quick` (the CI smoke step) runs n = 6 only with few samples.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use kreorder::exec::{ExecutionBackend, SimulatorBackend};
+use kreorder::gpu::GpuSpec;
+use kreorder::perm::{sweep_with_mode, SweepMode};
+use kreorder::workloads::synthetic_workload;
+
+fn factorial(n: usize) -> usize {
+    (1..=n).product::<usize>().max(1)
+}
+
+struct Row {
+    n: usize,
+    n_perms: usize,
+    naive_pps: f64,
+    prepared_pps: f64,
+    checkpointed_pps: f64,
+}
+
+fn main() {
+    let gpu = GpuSpec::gtx580();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[usize] = if quick { &[6] } else { &[6, 7, 8] };
+    let factory: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync) =
+        &|| Box::new(SimulatorBackend::new());
+
+    harness::section("permutation sweep throughput (fluid simulator)");
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let ks = synthetic_workload(&gpu, n, 7);
+        let n_perms = factorial(n);
+        let samples = harness::sample_count(if n >= 8 { 4 } else { 8 });
+        let modes = [
+            ("naive", SweepMode::NaiveExecute),
+            ("prepared", SweepMode::PreparedFlat),
+            ("checkpointed", SweepMode::Checkpointed),
+        ];
+        let mut pps = [0.0f64; 3];
+        for (mi, (label, mode)) in modes.iter().enumerate() {
+            let mean_ms = harness::bench(
+                &format!("sweep/{label} n={n} ({n_perms} perms)"),
+                1,
+                samples,
+                || {
+                    std::hint::black_box(sweep_with_mode(&gpu, &ks, factory, *mode));
+                },
+            );
+            pps[mi] = n_perms as f64 / (mean_ms / 1e3);
+            println!("    -> {:.0} perms/s", pps[mi]);
+        }
+        println!(
+            "    prepared speedup {:.2}x, checkpointed speedup {:.2}x over naive",
+            pps[1] / pps[0],
+            pps[2] / pps[0]
+        );
+        rows.push(Row {
+            n,
+            n_perms,
+            naive_pps: pps[0],
+            prepared_pps: pps[1],
+            checkpointed_pps: pps[2],
+        });
+    }
+
+    // Machine-readable trajectory record (no serde in the offline env:
+    // hand-rolled JSON, readable back via util::Json).
+    let mut json = String::from(
+        "{\n  \"bench\": \"sweep_throughput\",\n  \"gpu\": \"gtx580\",\n  \"results\": [\n",
+    );
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"n\": {}, \"n_perms\": {}, \
+             \"perms_per_s\": {{\"naive\": {:.1}, \"prepared_flat\": {:.1}, \
+             \"checkpointed\": {:.1}}}, \
+             \"speedup_prepared\": {:.3}, \"speedup_checkpointed\": {:.3}}}{}\n",
+            r.n,
+            r.n_perms,
+            r.naive_pps,
+            r.prepared_pps,
+            r.checkpointed_pps,
+            r.prepared_pps / r.naive_pps,
+            r.checkpointed_pps / r.naive_pps,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = "BENCH_sweep.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

@@ -7,8 +7,8 @@
 //! at the cost of ignoring intra-round dynamics — the A3 ablation bench
 //! measures how well its round counts track simulated makespans.
 
-use super::{BackendReport, ExecutionBackend};
-use crate::gpu::{GpuSpec, KernelProfile};
+use super::{BackendReport, ExecutionBackend, PreparedWorkload};
+use crate::gpu::{GpuSpec, KernelProfile, ResourceVec};
 use crate::sim::{self, rounds::pack_rounds};
 use std::time::Instant;
 
@@ -81,6 +81,185 @@ impl ExecutionBackend for AnalyticBackend {
             &finish_by_kernel,
         )
     }
+
+    fn prepare<'a>(
+        &'a mut self,
+        gpu: &'a GpuSpec,
+        kernels: &'a [KernelProfile],
+    ) -> Box<dyn PreparedWorkload + 'a> {
+        Box::new(PreparedAnalytic::new(gpu, kernels))
+    }
+}
+
+/// Per-kernel constants hoisted out of the round-packing loop.
+#[derive(Debug, Clone)]
+struct AKernel {
+    footprint: ResourceVec,
+    /// `footprint.warps`, cached separately for the duration sum.
+    warps_footprint: f64,
+    warps_per_block: f64,
+    work_per_block: f64,
+    total_mem: f64,
+}
+
+/// Snapshot of the incremental packing state after a prefix of kernels.
+#[derive(Debug, Clone, Default)]
+struct ASnap {
+    elapsed: f64,
+    used: ResourceVec,
+    cur: Vec<usize>,
+}
+
+/// Prepared round-model workload. Round packing is *prefix-incremental*
+/// (a kernel joins or closes the current round based only on what came
+/// before it), so the handle supports exact prefix checkpointing; the
+/// makespan of any completed order is bit-identical to
+/// [`AnalyticBackend::execute`] (same member order, same summation
+/// order).
+pub struct PreparedAnalytic {
+    valid: bool,
+    sm_cap: ResourceVec,
+    saturate: f64,
+    compute_rate: f64,
+    bandwidth: f64,
+    ks: Vec<AKernel>,
+    // Working packing state.
+    elapsed: f64,
+    used: ResourceVec,
+    cur: Vec<usize>,
+    // Checkpoint stack: `snaps[d]` = state after `d` prefix kernels.
+    snaps: Vec<ASnap>,
+    depth: usize,
+}
+
+impl PreparedAnalytic {
+    pub fn new(gpu: &GpuSpec, kernels: &[KernelProfile]) -> Self {
+        let ks = kernels
+            .iter()
+            .map(|k| {
+                let footprint = k.per_sm_footprint(gpu);
+                AKernel {
+                    footprint,
+                    warps_footprint: footprint.warps,
+                    warps_per_block: k.warps_per_block as f64,
+                    work_per_block: k.work_per_block,
+                    total_mem: k.total_mem(),
+                }
+            })
+            .collect();
+        let mut p = PreparedAnalytic {
+            valid: sim::validate_workload(gpu, kernels).is_ok(),
+            sm_cap: gpu.sm_capacity(),
+            saturate: gpu.warps_to_saturate as f64,
+            compute_rate: gpu.compute_rate_per_sm,
+            bandwidth: gpu.memory_bandwidth(),
+            ks,
+            elapsed: 0.0,
+            used: ResourceVec::ZERO,
+            cur: Vec::with_capacity(kernels.len()),
+            snaps: Vec::with_capacity(kernels.len() + 1),
+            depth: 0,
+        };
+        p.save_snapshot(); // snaps[0] = empty prefix
+        p
+    }
+
+    /// Same arithmetic as the free `round_duration_ms`, reading cached
+    /// constants (identical values, identical fold order → identical
+    /// bits; pinned by `prepared_matches_execute_bitwise`).
+    fn round_duration(&self, members: &[usize]) -> f64 {
+        let round_warps: f64 = members.iter().map(|&k| self.ks[k].warps_footprint).sum();
+        let denom = round_warps.max(self.saturate);
+        let compute_ms = members
+            .iter()
+            .map(|&k| {
+                let rate = self.compute_rate * self.ks[k].warps_per_block / denom;
+                self.ks[k].work_per_block / rate
+            })
+            .fold(0.0f64, f64::max);
+        let mem_total: f64 = members.iter().map(|&k| self.ks[k].total_mem).sum();
+        compute_ms.max(mem_total / self.bandwidth)
+    }
+
+    /// Append one kernel to the packing: close the open round if it no
+    /// longer fits, then join.
+    fn apply(&mut self, k: usize) {
+        let f = self.ks[k].footprint;
+        if !self.cur.is_empty() && !(self.used + f).fits_within(&self.sm_cap) {
+            self.elapsed += self.round_duration(&self.cur);
+            self.cur.clear();
+            self.used = ResourceVec::ZERO;
+        }
+        self.used += f;
+        self.cur.push(k);
+    }
+
+    /// Makespan of the current packing with the open round closed.
+    fn total(&self) -> f64 {
+        if self.cur.is_empty() {
+            self.elapsed
+        } else {
+            self.elapsed + self.round_duration(&self.cur)
+        }
+    }
+
+    fn save_snapshot(&mut self) {
+        if self.snaps.len() == self.depth {
+            self.snaps.push(ASnap::default());
+        }
+        let s = &mut self.snaps[self.depth];
+        s.elapsed = self.elapsed;
+        s.used = self.used;
+        s.cur.clear();
+        s.cur.extend_from_slice(&self.cur);
+        self.depth += 1;
+    }
+
+    fn restore_top(&mut self) {
+        let s = &self.snaps[self.depth - 1];
+        self.elapsed = s.elapsed;
+        self.used = s.used;
+        self.cur.clear();
+        self.cur.extend_from_slice(&s.cur);
+    }
+}
+
+impl PreparedWorkload for PreparedAnalytic {
+    fn execute_order(&mut self, order: &[usize]) -> f64 {
+        if !self.valid {
+            return f64::NAN;
+        }
+        self.elapsed = 0.0;
+        self.used = ResourceVec::ZERO;
+        self.cur.clear();
+        for &k in order {
+            self.apply(k);
+        }
+        self.total()
+    }
+
+    fn supports_checkpoints(&self) -> bool {
+        self.valid
+    }
+
+    fn checkpoint_push(&mut self, kernel: usize) {
+        self.restore_top();
+        self.apply(kernel);
+        self.save_snapshot();
+    }
+
+    fn checkpoint_pop(&mut self) {
+        debug_assert!(self.depth > 1, "no prefix kernel to pop");
+        self.depth -= 1;
+    }
+
+    fn execute_suffix(&mut self, suffix: &[usize]) -> f64 {
+        self.restore_top();
+        for &k in suffix {
+            self.apply(k);
+        }
+        self.total()
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +299,37 @@ mod tests {
             assert!(w[1] >= w[0] - 1e-12);
         }
         assert!((finishes.last().unwrap() - report.makespan_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prepared_matches_execute_bitwise() {
+        let gpu = GpuSpec::gtx580();
+        let ks = epbsessw_8();
+        let mut backend = AnalyticBackend::new();
+        let orders: Vec<Vec<usize>> = vec![
+            (0..ks.len()).collect(),
+            (0..ks.len()).rev().collect(),
+            vec![3, 0, 6, 2, 7, 1, 5, 4],
+        ];
+        let direct: Vec<f64> = orders
+            .iter()
+            .map(|o| backend.execute(&gpu, &ks, o).makespan_ms)
+            .collect();
+        let mut prepared = backend.prepare(&gpu, &ks);
+        assert!(prepared.supports_checkpoints());
+        for (o, d) in orders.iter().zip(&direct) {
+            assert_eq!(prepared.execute_order(o).to_bits(), d.to_bits(), "{o:?}");
+        }
+        // Checkpointed evaluation of the last order agrees too.
+        let o = &orders[2];
+        prepared.checkpoint_push(o[0]);
+        prepared.checkpoint_push(o[1]);
+        assert_eq!(
+            prepared.execute_suffix(&o[2..]).to_bits(),
+            direct[2].to_bits()
+        );
+        prepared.checkpoint_pop();
+        prepared.checkpoint_pop();
     }
 
     #[test]

@@ -14,6 +14,12 @@
 //! | [`SimulatorBackend`] | fluid-simulated makespan + per-kernel finish times | always |
 //! | [`AnalyticBackend`]  | round-model makespan estimate + round structure | always |
 //! | `PjrtBackend`        | real per-kernel checksums + wall times | `pjrt` |
+//!
+//! For hot paths that evaluate *many orders of one workload* (the
+//! permutation sweeps), [`ExecutionBackend::prepare`] returns a
+//! [`PreparedWorkload`] handle that hoists per-workload setup out of the
+//! loop; the model backends' handles additionally support exact
+//! **prefix checkpointing** (see the trait docs).
 
 mod analytic;
 #[cfg(feature = "pjrt")]
@@ -113,6 +119,78 @@ impl BackendReport {
     }
 }
 
+/// A workload prepared once so that many launch orders can be evaluated
+/// cheaply — the hot-path seam of the permutation sweeps.
+///
+/// Obtained from [`ExecutionBackend::prepare`]. A prepared handle hoists
+/// everything order-independent (kernel constants, work tables, scratch
+/// buffers, validation) out of the per-order loop; after warm-up,
+/// [`PreparedWorkload::execute_order`] performs no heap allocation for
+/// the model backends (asserted by `tests/zero_alloc.rs`).
+///
+/// # Prefix checkpointing
+///
+/// Backends whose timing model is *prefix-incremental* — the state after
+/// launching a prefix of the order does not depend on the suffix — can
+/// additionally support prefix checkpoints ([`supports_checkpoints`]
+/// returns `true`): [`checkpoint_push`] extends the current prefix by one
+/// kernel and snapshots the model state, [`execute_suffix`] completes the
+/// prefix with the remaining kernels, and [`checkpoint_pop`] backtracks.
+/// Results are bit-identical to [`execute_order`] on the concatenated
+/// order; the sweeps use this to share the cost of a prefix across every
+/// permutation of its suffix. Both model backends (simulator and
+/// analytic) support it; the default implementation does not.
+///
+/// [`supports_checkpoints`]: PreparedWorkload::supports_checkpoints
+/// [`checkpoint_push`]: PreparedWorkload::checkpoint_push
+/// [`checkpoint_pop`]: PreparedWorkload::checkpoint_pop
+/// [`execute_suffix`]: PreparedWorkload::execute_suffix
+/// [`execute_order`]: PreparedWorkload::execute_order
+pub trait PreparedWorkload {
+    /// Model makespan of one complete launch `order` (a permutation of
+    /// `0..kernels.len()`); `NaN` when the backend cannot time the
+    /// workload (see [`BackendReport::unsimulable`]).
+    fn execute_order(&mut self, order: &[usize]) -> f64;
+
+    /// Whether the checkpoint methods below may be called.
+    fn supports_checkpoints(&self) -> bool {
+        false
+    }
+
+    /// Extend the checkpointed prefix with `kernel` and snapshot the
+    /// model state at that point.
+    fn checkpoint_push(&mut self, kernel: usize) {
+        let _ = kernel;
+        panic!("prefix checkpointing unsupported (check supports_checkpoints())");
+    }
+
+    /// Drop the most recent prefix checkpoint.
+    fn checkpoint_pop(&mut self) {
+        panic!("prefix checkpointing unsupported (check supports_checkpoints())");
+    }
+
+    /// Complete the checkpointed prefix with `suffix` (possibly empty)
+    /// and return the makespan; the checkpoint stack is left intact.
+    fn execute_suffix(&mut self, suffix: &[usize]) -> f64 {
+        let _ = suffix;
+        panic!("prefix checkpointing unsupported (check supports_checkpoints())");
+    }
+}
+
+/// Default [`PreparedWorkload`]: no hoisting, every order round-trips
+/// through [`ExecutionBackend::execute`].
+struct FallbackPrepared<'a, B: ?Sized> {
+    backend: &'a mut B,
+    gpu: &'a GpuSpec,
+    kernels: &'a [KernelProfile],
+}
+
+impl<B: ExecutionBackend + ?Sized> PreparedWorkload for FallbackPrepared<'_, B> {
+    fn execute_order(&mut self, order: &[usize]) -> f64 {
+        self.backend.execute(self.gpu, self.kernels, order).makespan_ms
+    }
+}
+
 /// An execution substrate: takes a workload and a launch order, runs (or
 /// models) it, and reports per-kernel and whole-batch results.
 ///
@@ -147,6 +225,23 @@ pub trait ExecutionBackend {
     ) -> BackendReport {
         let _ = seeds;
         self.execute(gpu, kernels, order)
+    }
+
+    /// Prepare a workload for repeated order evaluation (the permutation-
+    /// sweep hot path): hoist order-independent setup out of the loop and
+    /// return a [`PreparedWorkload`] handle. The default falls back to
+    /// calling [`ExecutionBackend::execute`] per order; the model backends
+    /// override it with allocation-free, checkpoint-capable handles.
+    fn prepare<'a>(
+        &'a mut self,
+        gpu: &'a GpuSpec,
+        kernels: &'a [KernelProfile],
+    ) -> Box<dyn PreparedWorkload + 'a> {
+        Box::new(FallbackPrepared {
+            backend: self,
+            gpu,
+            kernels,
+        })
     }
 }
 
@@ -204,5 +299,39 @@ mod tests {
         for s in ["sim", "analytic"] {
             assert_eq!(parse_model_backend(s).unwrap().name(), s);
         }
+    }
+
+    #[test]
+    fn fallback_prepare_matches_execute() {
+        // A backend that relies on the default `prepare` must evaluate
+        // orders identically to its `execute`.
+        struct Doubling;
+        impl ExecutionBackend for Doubling {
+            fn name(&self) -> &str {
+                "doubling"
+            }
+            fn execute(
+                &mut self,
+                _gpu: &GpuSpec,
+                _kernels: &[KernelProfile],
+                order: &[usize],
+            ) -> BackendReport {
+                let finishes = vec![0.0; order.len()];
+                BackendReport::from_finish_times(
+                    "doubling",
+                    2.0 * order[0] as f64 + order.len() as f64,
+                    0.0,
+                    order,
+                    &finishes,
+                )
+            }
+        }
+        let gpu = crate::gpu::GpuSpec::gtx580();
+        let kernels: Vec<KernelProfile> = Vec::new();
+        let mut b = Doubling;
+        let direct = b.execute(&gpu, &kernels, &[3, 1, 2]).makespan_ms;
+        let mut prepared = b.prepare(&gpu, &kernels);
+        assert!(!prepared.supports_checkpoints());
+        assert_eq!(prepared.execute_order(&[3, 1, 2]), direct);
     }
 }

@@ -3,9 +3,9 @@
 //! times; its makespans are bit-identical to calling
 //! [`crate::sim::simulate_order`] directly (a unit test below pins that).
 
-use super::{BackendReport, ExecutionBackend};
+use super::{BackendReport, ExecutionBackend, PreparedWorkload};
 use crate::gpu::{GpuSpec, KernelProfile};
-use crate::sim;
+use crate::sim::{self, SimState};
 use std::time::Instant;
 
 /// Fluid-simulation backend (the GTX580 model). Stateless; cheap to
@@ -45,6 +45,57 @@ impl ExecutionBackend for SimulatorBackend {
             order,
             &r.kernel_finish_ms,
         )
+    }
+
+    fn prepare<'a>(
+        &'a mut self,
+        gpu: &'a GpuSpec,
+        kernels: &'a [KernelProfile],
+    ) -> Box<dyn PreparedWorkload + 'a> {
+        Box::new(PreparedSim::new(gpu, kernels))
+    }
+}
+
+/// Prepared fluid-simulation workload: one reusable [`SimState`]
+/// (validation, kernel constants, the jittered block-work table and all
+/// scratch hoisted out of the per-order loop) with full prefix-checkpoint
+/// support. Makespans are bit-identical to [`SimulatorBackend::execute`].
+pub struct PreparedSim {
+    state: SimState,
+    valid: bool,
+}
+
+impl PreparedSim {
+    pub fn new(gpu: &GpuSpec, kernels: &[KernelProfile]) -> Self {
+        PreparedSim {
+            state: SimState::new(gpu, kernels),
+            valid: sim::validate_workload(gpu, kernels).is_ok(),
+        }
+    }
+}
+
+impl PreparedWorkload for PreparedSim {
+    fn execute_order(&mut self, order: &[usize]) -> f64 {
+        if !self.valid {
+            return f64::NAN;
+        }
+        self.state.makespan_of(order)
+    }
+
+    fn supports_checkpoints(&self) -> bool {
+        self.valid
+    }
+
+    fn checkpoint_push(&mut self, kernel: usize) {
+        self.state.push_prefix_kernel(kernel);
+    }
+
+    fn checkpoint_pop(&mut self) {
+        self.state.pop_prefix_kernel();
+    }
+
+    fn execute_suffix(&mut self, suffix: &[usize]) -> f64 {
+        self.state.finish_with(suffix)
     }
 }
 
@@ -106,6 +157,44 @@ mod tests {
     }
 
     #[test]
+    fn prepared_matches_execute_bitwise() {
+        let gpu = GpuSpec::gtx580();
+        let ks = epbsessw_8();
+        let mut backend = SimulatorBackend::new();
+        let mut orders = Vec::new();
+        for seed in 0..8u64 {
+            let mut o: Vec<usize> = (0..ks.len()).collect();
+            SplitMix64::new(seed).shuffle(&mut o);
+            orders.push(o);
+        }
+        let direct: Vec<f64> = orders
+            .iter()
+            .map(|o| backend.execute(&gpu, &ks, o).makespan_ms)
+            .collect();
+        let mut prepared = backend.prepare(&gpu, &ks);
+        assert!(prepared.supports_checkpoints());
+        for (o, d) in orders.iter().zip(&direct) {
+            assert_eq!(prepared.execute_order(o).to_bits(), d.to_bits(), "{o:?}");
+        }
+    }
+
+    #[test]
+    fn prepared_checkpoints_match_flat_orders() {
+        let gpu = GpuSpec::gtx580();
+        let ks = epbsessw_8();
+        let mut backend = SimulatorBackend::new();
+        let mut prepared = backend.prepare(&gpu, &ks);
+        let order: Vec<usize> = vec![5, 2, 7, 0, 3, 6, 1, 4];
+        let flat = prepared.execute_order(&order);
+        prepared.checkpoint_push(5);
+        prepared.checkpoint_push(2);
+        let ck = prepared.execute_suffix(&order[2..]);
+        assert_eq!(ck.to_bits(), flat.to_bits());
+        prepared.checkpoint_pop();
+        prepared.checkpoint_pop();
+    }
+
+    #[test]
     fn unsimulable_workload_reports_nan_not_hang() {
         let gpu = GpuSpec::gtx580();
         let bad = KernelProfile {
@@ -119,8 +208,14 @@ mod tests {
             work_per_block: 100.0,
             artifact: String::new(),
         };
-        let report = SimulatorBackend::new().execute(&gpu, &[bad], &[0]);
+        let ks = [bad];
+        let report = SimulatorBackend::new().execute(&gpu, &ks, &[0]);
         assert!(report.makespan_ms.is_nan());
         assert_eq!(report.outcomes.len(), 1);
+        // The prepared path agrees and refuses checkpointing.
+        let mut backend = SimulatorBackend::new();
+        let mut prepared = backend.prepare(&gpu, &ks);
+        assert!(!prepared.supports_checkpoints());
+        assert!(prepared.execute_order(&[0]).is_nan());
     }
 }

@@ -27,6 +27,37 @@
 //! dispatch through these trait objects, so new policies and substrates
 //! plug in without touching any of them.
 //!
+//! ## The sweep hot path: prepared workloads + prefix checkpoints
+//!
+//! The paper's methodology is an exhaustive sweep of all `n!` launch
+//! orders, so evaluating *one order of a fixed workload* is the hot path
+//! of the whole system. Two layers make it fast without changing any
+//! result bit:
+//!
+//! * [`exec::ExecutionBackend::prepare`] returns an
+//!   [`exec::PreparedWorkload`]: kernel constants, the jittered
+//!   block-work table, validation and every scratch buffer are hoisted
+//!   out of the per-order loop (the simulator's reusable state is
+//!   [`sim::SimState`], with an explicit `reset()` instead of per-call
+//!   construction). After warm-up, evaluating an order performs **no
+//!   heap allocation** (pinned by `tests/zero_alloc.rs`).
+//! * Model backends additionally support **prefix checkpointing**: the
+//!   state at the instant a shared prefix's last block is dispatched is
+//!   snapshotted once and restored per sibling suffix. [`perm::sweep`]
+//!   enumerates suffixes as a lexicographic prefix tree to maximize that
+//!   sharing, with results bit-identical to the naive per-permutation
+//!   path (`tests/sweep_equivalence.rs` is the golden suite).
+//!
+//! ## Sweeping large n: memory
+//!
+//! [`perm::SweepResult`] stores every permutation's makespan: `n! × 8`
+//! bytes — fine through n = 10 (~29 MB), marginal at n = 11 (~320 MB),
+//! prohibitive at n = 12 (~3.8 GB). [`perm::sweep_stats`] runs the same
+//! checkpointed sweep in streaming mode: [`perm::SweepStats`] keeps
+//! exact best/worst makespans *and orders*, count and mean, plus a
+//! fixed-resolution histogram (default 4096 bins ≈ 32 KB) for percentile
+//! ranks — constant memory in `n`, so n = 11–12 sweeps fit comfortably.
+//!
 //! ## Crate layout
 //!
 //! | module | role |
@@ -35,7 +66,7 @@
 //! | [`sim`] | event-driven concurrent-execution simulator (the hardware substrate) |
 //! | [`sched`] | [`sched::LaunchPolicy`] trait, Algorithm 1 + baselines, string registry |
 //! | [`exec`] | [`exec::ExecutionBackend`] trait: simulator / analytic / PJRT substrates |
-//! | [`perm`] | permutation-space sweeps (Table 3 / Fig. 1 evaluation) |
+//! | [`perm`] | permutation-space sweeps, checkpointed + streaming (Table 3 / Fig. 1) |
 //! | [`profile`] | artifact profile loading (the "CUDA profiler" stand-in) |
 //! | `runtime` | PJRT execution of AOT-compiled HLO kernels (feature `pjrt`) |
 //! | [`coordinator`] | [`coordinator::CoordinatorBuilder`]: batching + reordering + multi-device dispatch |

@@ -252,9 +252,9 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         e.name, sw.n_perms
     );
     println!("  best   {:.2} ms  {:?}", sw.best_ms, sw.best_order);
-    println!("  p25    {:.2} ms", kreorder::metrics::percentile(&sorted, 25.0));
+    println!("  p25    {:.2} ms", kreorder::metrics::percentile(sorted, 25.0));
     println!("  median {:.2} ms", sw.median_ms());
-    println!("  p75    {:.2} ms", kreorder::metrics::percentile(&sorted, 75.0));
+    println!("  p75    {:.2} ms", kreorder::metrics::percentile(sorted, 75.0));
     println!("  worst  {:.2} ms  {:?}", sw.worst_ms, sw.worst_order);
     Ok(())
 }

@@ -1,5 +1,9 @@
 //! Heap's algorithm: iterate all permutations of a slice in place, one swap
-//! per step (the fastest way to enumerate a permutation space).
+//! per step (the fastest way to enumerate a permutation space when each
+//! visit costs the same). The flat sweep modes use it; the checkpointed
+//! sweep instead walks a lexicographic prefix tree (see `perm`), because
+//! swap-minimal enumeration destroys the long shared prefixes that
+//! checkpoint reuse depends on.
 
 /// Call `f` with every permutation of `xs`. `xs` is permuted in place and
 /// restored only up to permutation (its final state is some permutation of

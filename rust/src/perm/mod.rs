@@ -3,19 +3,46 @@
 //! (all permutations) and compare the performance of the kernel ordering
 //! given by the algorithm with the optimal (best) result."
 //!
-//! [`sweep`] simulates every permutation of the launch order (rayon-parallel
-//! across first-position prefixes, Heap's algorithm within each worker) and
-//! returns the full time distribution plus best/worst orders, from which
+//! # Architecture: prepared workloads + prefix checkpointing
+//!
+//! [`sweep`] evaluates every permutation of the launch order and returns
+//! the full time distribution plus best/worst orders, from which
 //! [`SweepResult::percentile_rank`], speedup-over-worst, and
-//! deviation-from-optimal (the Table 3 columns) are computed.
+//! deviation-from-optimal (the Table 3 columns) are computed. The hot
+//! path is built on two seams:
+//!
+//! * **Prepared workloads** — each worker calls
+//!   [`crate::exec::ExecutionBackend::prepare`] once, hoisting kernel
+//!   constants, the jittered block-work table and all scratch buffers out
+//!   of the per-permutation loop; evaluating one order then performs no
+//!   heap allocation after warm-up (`tests/zero_alloc.rs`).
+//! * **Prefix checkpointing** — when the prepared handle supports it
+//!   (both model backends do), suffixes are enumerated as a lexicographic
+//!   prefix tree instead of raw Heap's: the backend state at the moment a
+//!   shared prefix's last block is dispatched is snapshotted once and
+//!   restored per sibling suffix instead of re-simulated. Results are
+//!   **bit-identical** to the flat path (`tests/sweep_equivalence.rs`).
+//!
+//! Work is spread across threads over the `n·(n-1)` choices of the first
+//! two positions through the work-stealing [`parallel_map`].
+//!
+//! # Sweeping large n: memory
+//!
+//! [`SweepResult`] keeps every permutation's makespan: `n! × 8` bytes —
+//! 290 KB at n=8, ~29 MB at n=10, ~320 MB at n=11, ~3.8 GB at n=12. For
+//! n ≥ 11 use [`sweep_stats`] instead: [`SweepStats`] folds each makespan
+//! into online best/worst/count/sum plus a fixed-resolution histogram
+//! (`n_bins × 8` bytes, default 4096), so percentile ranks stay available
+//! at histogram resolution while memory stays constant in `n`.
 
 mod heap;
 
 pub use heap::for_each_permutation;
 
-use crate::exec::{ExecutionBackend, SimulatorBackend};
+use crate::exec::{ExecutionBackend, PreparedWorkload, SimulatorBackend};
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::util::{default_threads, parallel_map};
+use std::sync::OnceLock;
 
 /// Distribution of simulated makespans across all launch-order
 /// permutations of one workload.
@@ -23,43 +50,86 @@ use crate::util::{default_threads, parallel_map};
 pub struct SweepResult {
     /// Number of permutations evaluated (`n!`).
     pub n_perms: usize,
-    /// Best (minimum) makespan and the order achieving it.
+    /// Best (minimum) makespan and the order achieving it (ties broken
+    /// toward the lexicographically smallest order, so the result is
+    /// independent of enumeration strategy).
     pub best_ms: f64,
     pub best_order: Vec<usize>,
-    /// Worst (maximum) makespan and the order achieving it.
+    /// Worst (maximum) makespan and the order achieving it (same
+    /// tie-break).
     pub worst_ms: f64,
     pub worst_order: Vec<usize>,
-    /// Every permutation's makespan (unsorted; ~n! entries).
+    /// Every permutation's makespan (unsorted; ~n! entries — see the
+    /// module docs for the memory formula and [`SweepStats`] for the
+    /// constant-memory alternative).
+    ///
+    /// Treat as read-only: the percentile/median/sorted queries serve
+    /// from a sorted copy cached on first use, so mutating `times` after
+    /// any query silently yields stale answers.
     pub times: Vec<f64>,
+    /// Lazily computed sorted copy of `times` (total_cmp order, NaNs
+    /// last), shared by the percentile/median queries.
+    sorted_cache: OnceLock<Vec<f64>>,
 }
 
 impl SweepResult {
+    fn empty() -> Self {
+        SweepResult {
+            n_perms: 0,
+            best_ms: f64::INFINITY,
+            best_order: Vec::new(),
+            worst_ms: f64::NEG_INFINITY,
+            worst_order: Vec::new(),
+            times: Vec::new(),
+            sorted_cache: OnceLock::new(),
+        }
+    }
+
+    /// Sorted view of the distribution, computed once on first use and
+    /// cached (the distribution has `n!` entries; re-sorting per query
+    /// made every percentile call O(n! log n!)).
+    fn sorted(&self) -> &[f64] {
+        self.sorted_cache.get_or_init(|| {
+            let mut ts = self.times.clone();
+            ts.sort_unstable_by(f64::total_cmp);
+            ts
+        })
+    }
+
+    /// The sorted slice with trailing NaNs (unsimulable entries) dropped.
+    fn sorted_finite(&self) -> &[f64] {
+        let s = self.sorted();
+        let end = s.iter().rposition(|x| !x.is_nan()).map_or(0, |i| i + 1);
+        &s[..end]
+    }
+
     /// The paper's *percentile rank* of a candidate time within the
     /// permutation space: the percentage of permutations the candidate is
     /// at least as good as, with ties counted half (mid-rank). Higher is
     /// better; the paper reports 91.5–99.4% for Algorithm 1.
+    ///
+    /// O(log n!) per query via binary search on the cached sorted copy.
     pub fn percentile_rank(&self, t_ms: f64) -> f64 {
-        if self.times.is_empty() {
+        // NaN candidate (unsimulable run): beats nothing, ties nothing —
+        // matches the original linear scan, where every comparison with
+        // NaN is false.
+        if self.times.is_empty() || t_ms.is_nan() {
             return 0.0;
         }
         let eps = 1e-9 * t_ms.abs().max(1e-300);
-        let mut worse = 0usize;
-        let mut equal = 0usize;
-        for &t in &self.times {
-            if t > t_ms + eps {
-                worse += 1;
-            } else if (t - t_ms).abs() <= eps {
-                equal += 1;
-            }
-        }
+        let s = self.sorted_finite();
+        // `worse` = entries strictly above t+eps; `equal` = within ±eps.
+        let le_hi = s.partition_point(|&x| x <= t_ms + eps);
+        let lt_lo = s.partition_point(|&x| x < t_ms - eps);
+        let worse = s.len() - le_hi;
+        let equal = le_hi - lt_lo;
         (worse as f64 + 0.5 * equal as f64) / self.times.len() as f64 * 100.0
     }
 
     /// Median makespan of the permutation space (the paper's "random
     /// order choice" reference point).
     pub fn median_ms(&self) -> f64 {
-        let mut ts = self.times.clone();
-        ts.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let ts = self.sorted_finite();
         let n = ts.len();
         if n == 0 {
             return 0.0;
@@ -72,11 +142,27 @@ impl SweepResult {
     }
 
     /// Sorted copy of the distribution (ascending), for ranking plots.
-    pub fn sorted_times(&self) -> Vec<f64> {
-        let mut ts = self.times.clone();
-        ts.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-        ts
+    /// Cached; cheap to call repeatedly.
+    pub fn sorted_times(&self) -> &[f64] {
+        self.sorted()
     }
+}
+
+/// How [`sweep_with_mode`] evaluates each permutation. The three modes
+/// produce bit-identical [`SweepResult`]s; they differ only in speed
+/// (`benches/sweep_throughput.rs` tracks the ratios).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepMode {
+    /// One [`ExecutionBackend::execute`] round-trip per permutation — the
+    /// pre-seam baseline, kept as the golden reference.
+    NaiveExecute,
+    /// One [`PreparedWorkload::execute_order`] per permutation: setup
+    /// hoisted, no checkpoint sharing.
+    PreparedFlat,
+    /// Lexicographic prefix-tree enumeration with checkpoint restore
+    /// where the backend supports it (falls back to [`SweepMode::PreparedFlat`]
+    /// where it does not). The default.
+    Checkpointed,
 }
 
 /// Exhaustively simulate all `n!` launch orders of `kernels` on the fluid
@@ -88,24 +174,301 @@ pub fn sweep(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SweepResult {
 
 /// Exhaustively evaluate all `n!` launch orders of `kernels` on an
 /// [`ExecutionBackend`] built by `make_backend` (backends are not
-/// required to be `Sync`).
+/// required to be `Sync`), using the prepared + checkpointed hot path.
 ///
 /// Parallelized over the choice of the first two positions (`n·(n-1)`
-/// prefixes, each enumerating `(n-2)!` suffixes with Heap's algorithm) so
-/// work spreads evenly across cores. `make_backend` is invoked once per
-/// *prefix* — `n·(n-1)` times, not once per thread — so keep the factory
-/// cheap (the zero-sized model backends are; an expensive backend like
-/// PJRT is the wrong substrate for a 40 320-permutation sweep anyway).
-/// n ≤ 12 or so is practical (the paper's largest space is 8! = 40 320).
+/// prefixes, work-stolen by [`parallel_map`]); `make_backend` is invoked
+/// once per *prefix* — `n·(n-1)` times, not once per permutation — and
+/// each worker prepares the workload once. n ≤ 10 or so is practical with
+/// the full `times` vector (the paper's largest space is 8! = 40 320);
+/// use [`sweep_stats_with`] beyond that.
 pub fn sweep_with(
     gpu: &GpuSpec,
     kernels: &[KernelProfile],
     make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
 ) -> SweepResult {
+    sweep_with_mode(gpu, kernels, make_backend, SweepMode::Checkpointed)
+}
+
+/// The golden-reference sweep: per-permutation `execute` calls, no
+/// prepared state, no checkpoints (today's behaviour before the seam).
+/// Exists so the equivalence suite can prove the fast paths exact.
+pub fn sweep_flat_with(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+) -> SweepResult {
+    sweep_with_mode(gpu, kernels, make_backend, SweepMode::NaiveExecute)
+}
+
+/// [`sweep_with`] with an explicit [`SweepMode`] (bench ablation knob).
+pub fn sweep_with_mode(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    mode: SweepMode,
+) -> SweepResult {
+    let n = kernels.len();
+    assert!(n >= 1, "empty workload");
+    let prefixes = position_prefixes(n);
+
+    let partials: Vec<Partial> = parallel_map(prefixes.len(), default_threads(), |pi| {
+        let mut backend = make_backend();
+        let mut p = Partial::new();
+        enumerate_task(
+            gpu,
+            kernels,
+            backend.as_mut(),
+            &prefixes[pi],
+            mode,
+            &mut |t, order| p.record(t, order),
+        );
+        p
+    });
+
+    let mut result = SweepResult::empty();
+    for p in partials {
+        result.n_perms += p.times.len();
+        if p.best_ms < result.best_ms
+            || (p.best_ms == result.best_ms && p.best_order < result.best_order)
+        {
+            result.best_ms = p.best_ms;
+            result.best_order = p.best_order;
+        }
+        if p.worst_ms > result.worst_ms
+            || (p.worst_ms == result.worst_ms && p.worst_order < result.worst_order)
+        {
+            result.worst_ms = p.worst_ms;
+            result.worst_order = p.worst_order;
+        }
+        result.times.extend(p.times);
+    }
+    result
+}
+
+// ---------------------------------------------------------------------------
+// Streaming statistics mode
+// ---------------------------------------------------------------------------
+
+/// Online sweep statistics: exact best/worst (with orders), count, sum,
+/// and a fixed-resolution histogram for percentile ranks — constant
+/// memory in `n`, so n = 11–12 sweeps fit where the `times` vector of a
+/// [`SweepResult`] would not (module docs have the formula).
+#[derive(Debug, Clone)]
+pub struct SweepStats {
+    /// Number of permutations recorded.
+    pub n_perms: usize,
+    /// Exact minimum makespan and its order (lexicographic tie-break,
+    /// identical to [`SweepResult`]).
+    pub best_ms: f64,
+    pub best_order: Vec<usize>,
+    /// Exact maximum makespan and its order.
+    pub worst_ms: f64,
+    pub worst_order: Vec<usize>,
+    /// Sum of all finite makespans (for [`SweepStats::mean_ms`]).
+    pub sum_ms: f64,
+    lo: f64,
+    bin_width: f64,
+    bins: Vec<u64>,
+}
+
+impl SweepStats {
+    /// Histogram over `[lo, hi)` with `n_bins` equal bins; out-of-range
+    /// makespans clamp into the edge bins (best/worst stay exact).
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        let n_bins = n_bins.max(1);
+        SweepStats {
+            n_perms: 0,
+            best_ms: f64::INFINITY,
+            best_order: Vec::new(),
+            worst_ms: f64::NEG_INFINITY,
+            worst_order: Vec::new(),
+            sum_ms: 0.0,
+            lo,
+            bin_width: (hi - lo).max(f64::MIN_POSITIVE) / n_bins as f64,
+            bins: vec![0; n_bins],
+        }
+    }
+
+    fn bin_index(&self, t_ms: f64) -> usize {
+        let raw = (t_ms - self.lo) / self.bin_width;
+        if raw <= 0.0 {
+            0
+        } else {
+            (raw as usize).min(self.bins.len() - 1)
+        }
+    }
+
+    /// Fold one permutation's makespan in. Allocation-free after the
+    /// first best/worst updates (orders are copied into reused buffers).
+    pub fn record(&mut self, t_ms: f64, order: &[usize]) {
+        self.n_perms += 1;
+        if t_ms.is_nan() {
+            return;
+        }
+        if t_ms < self.best_ms || (t_ms == self.best_ms && order < &self.best_order[..]) {
+            self.best_ms = t_ms;
+            self.best_order.clear();
+            self.best_order.extend_from_slice(order);
+        }
+        if t_ms > self.worst_ms || (t_ms == self.worst_ms && order < &self.worst_order[..]) {
+            self.worst_ms = t_ms;
+            self.worst_order.clear();
+            self.worst_order.extend_from_slice(order);
+        }
+        self.sum_ms += t_ms;
+        let i = self.bin_index(t_ms);
+        self.bins[i] += 1;
+    }
+
+    /// Merge another worker's statistics (same histogram configuration).
+    pub fn merge(&mut self, o: &SweepStats) {
+        assert!(
+            self.bins.len() == o.bins.len()
+                && self.lo.to_bits() == o.lo.to_bits()
+                && self.bin_width.to_bits() == o.bin_width.to_bits(),
+            "histogram configs differ"
+        );
+        self.n_perms += o.n_perms;
+        self.sum_ms += o.sum_ms;
+        if o.best_ms < self.best_ms
+            || (o.best_ms == self.best_ms && o.best_order < self.best_order)
+        {
+            self.best_ms = o.best_ms;
+            self.best_order.clear();
+            self.best_order.extend_from_slice(&o.best_order);
+        }
+        if o.worst_ms > self.worst_ms
+            || (o.worst_ms == self.worst_ms && o.worst_order < self.worst_order)
+        {
+            self.worst_ms = o.worst_ms;
+            self.worst_order.clear();
+            self.worst_order.extend_from_slice(&o.worst_order);
+        }
+        for (a, b) in self.bins.iter_mut().zip(&o.bins) {
+            *a += b;
+        }
+    }
+
+    /// Mean makespan over the recorded (finite) permutations.
+    pub fn mean_ms(&self) -> f64 {
+        let finite: u64 = self.bins.iter().sum();
+        if finite == 0 {
+            return f64::NAN;
+        }
+        self.sum_ms / finite as f64
+    }
+
+    /// Mid-rank percentile of a candidate time, at histogram resolution:
+    /// mass strictly above the candidate's bin counts as worse, the
+    /// candidate's own bin counts half. Agrees with
+    /// [`SweepResult::percentile_rank`] to within half the candidate
+    /// bin's mass (see [`SweepStats::bin_mass`]).
+    pub fn percentile_rank(&self, t_ms: f64) -> f64 {
+        // NaN candidate: beats nothing, ties nothing (same guard as
+        // [`SweepResult::percentile_rank`] — without it, `NaN as usize`
+        // saturates to bin 0 and the rank reads ~100%).
+        if self.n_perms == 0 || t_ms.is_nan() {
+            return 0.0;
+        }
+        let i = self.bin_index(t_ms);
+        let worse: u64 = self.bins[i + 1..].iter().sum();
+        let equal = self.bins[i];
+        (worse as f64 + 0.5 * equal as f64) / self.n_perms as f64 * 100.0
+    }
+
+    /// Number of recorded makespans sharing the candidate's bin — the
+    /// resolution bound on [`SweepStats::percentile_rank`].
+    pub fn bin_mass(&self, t_ms: f64) -> u64 {
+        self.bins[self.bin_index(t_ms)]
+    }
+
+    /// Approximate quantile (`q` in [0,1]) from the histogram: the center
+    /// of the bin where the cumulative count crosses `q · n`.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let finite: u64 = self.bins.iter().sum();
+        if finite == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * finite as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return self.lo + (i as f64 + 0.5) * self.bin_width;
+            }
+        }
+        self.lo + self.bins.len() as f64 * self.bin_width
+    }
+
+    /// Number of histogram bins.
+    pub fn n_bins(&self) -> usize {
+        self.bins.len()
+    }
+}
+
+/// Streaming-statistics sweep on the fluid simulator with the default
+/// 4096-bin histogram. See [`sweep_stats_with`].
+pub fn sweep_stats(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SweepStats {
+    sweep_stats_with(gpu, kernels, &|| Box::new(SimulatorBackend::new()), 4096)
+}
+
+/// Exhaustive sweep in streaming-statistics mode: every permutation is
+/// evaluated on the checkpointed hot path but folded into a [`SweepStats`]
+/// instead of an `n!`-entry vector, so memory is constant in `n`.
+///
+/// Best/worst makespans and orders are exact and bit-identical to
+/// [`sweep_with`]; percentile ranks are histogram-resolution
+/// approximations. The histogram spans `[r/4, 4r)` where `r` is the
+/// identity order's makespan (permutation makespans cluster within a
+/// small factor of any fixed order; outliers clamp to the edge bins).
+pub fn sweep_stats_with(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    n_bins: usize,
+) -> SweepStats {
     let n = kernels.len();
     assert!(n >= 1, "empty workload");
 
-    // Prefixes of length min(2, n).
+    // Range reference: one evaluation of the identity order.
+    let identity: Vec<usize> = (0..n).collect();
+    let mut b0 = make_backend();
+    let reference = b0.prepare(gpu, kernels).execute_order(&identity);
+    let (lo, hi) = if reference.is_finite() && reference > 0.0 {
+        (reference / 4.0, reference * 4.0)
+    } else {
+        (0.0, 1.0)
+    };
+
+    let prefixes = position_prefixes(n);
+    let partials: Vec<SweepStats> = parallel_map(prefixes.len(), default_threads(), |pi| {
+        let mut backend = make_backend();
+        let mut stats = SweepStats::new(lo, hi, n_bins);
+        enumerate_task(
+            gpu,
+            kernels,
+            backend.as_mut(),
+            &prefixes[pi],
+            SweepMode::Checkpointed,
+            &mut |t, order| stats.record(t, order),
+        );
+        stats
+    });
+
+    let mut result = SweepStats::new(lo, hi, n_bins);
+    for p in &partials {
+        result.merge(p);
+    }
+    result
+}
+
+// ---------------------------------------------------------------------------
+// Enumeration core
+// ---------------------------------------------------------------------------
+
+/// Parallelization units: fixed prefixes of length min(2, n).
+fn position_prefixes(n: usize) -> Vec<Vec<usize>> {
     let mut prefixes: Vec<Vec<usize>> = Vec::new();
     if n == 1 {
         prefixes.push(vec![0]);
@@ -118,51 +481,126 @@ pub fn sweep_with(
             }
         }
     }
-
-    let partials: Vec<Partial> = parallel_map(prefixes.len(), default_threads(), |pi| {
-        let mut backend = make_backend();
-        let prefix = &prefixes[pi];
-        let mut rest: Vec<usize> = (0..n).filter(|i| !prefix.contains(i)).collect();
-        let mut order = Vec::with_capacity(n);
-        let mut p = Partial::new();
-        if rest.is_empty() {
-            let t = backend.execute(gpu, kernels, prefix).makespan_ms;
-            p.record(t, prefix);
-            return p;
-        }
-        for_each_permutation(&mut rest, &mut |suffix| {
-            order.clear();
-            order.extend_from_slice(prefix);
-            order.extend_from_slice(suffix);
-            let t = backend.execute(gpu, kernels, &order).makespan_ms;
-            p.record(t, &order);
-        });
-        p
-    });
-
-    let mut result = SweepResult {
-        n_perms: 0,
-        best_ms: f64::INFINITY,
-        best_order: Vec::new(),
-        worst_ms: f64::NEG_INFINITY,
-        worst_order: Vec::new(),
-        times: Vec::new(),
-    };
-    for p in partials {
-        result.n_perms += p.times.len();
-        if p.best_ms < result.best_ms {
-            result.best_ms = p.best_ms;
-            result.best_order = p.best_order;
-        }
-        if p.worst_ms > result.worst_ms {
-            result.worst_ms = p.worst_ms;
-            result.worst_order = p.worst_order;
-        }
-        result.times.extend(p.times);
-    }
-    result
+    prefixes
 }
 
+/// Evaluate every permutation starting with `prefix` on `backend`,
+/// feeding `(makespan, order)` pairs to `rec`.
+fn enumerate_task(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    backend: &mut dyn ExecutionBackend,
+    prefix: &[usize],
+    mode: SweepMode,
+    rec: &mut dyn FnMut(f64, &[usize]),
+) {
+    let n = kernels.len();
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    order.extend_from_slice(prefix);
+    let mut rest: Vec<usize> = (0..n).filter(|i| !prefix.contains(i)).collect();
+
+    if mode == SweepMode::NaiveExecute {
+        if rest.is_empty() {
+            let t = backend.execute(gpu, kernels, &order).makespan_ms;
+            rec(t, &order);
+            return;
+        }
+        let plen = prefix.len();
+        for_each_permutation(&mut rest, &mut |suffix| {
+            order.truncate(plen);
+            order.extend_from_slice(suffix);
+            let t = backend.execute(gpu, kernels, &order).makespan_ms;
+            rec(t, &order);
+        });
+        return;
+    }
+
+    let mut prepared = backend.prepare(gpu, kernels);
+    if mode == SweepMode::Checkpointed && prepared.supports_checkpoints() {
+        for &k in prefix {
+            prepared.checkpoint_push(k);
+        }
+        let mut used = vec![false; n];
+        for &k in prefix {
+            used[k] = true;
+        }
+        checkpointed_dfs(prepared.as_mut(), &mut used, &mut order, n, rec);
+        for _ in prefix {
+            prepared.checkpoint_pop();
+        }
+    } else {
+        if rest.is_empty() {
+            let t = prepared.execute_order(&order);
+            rec(t, &order);
+            return;
+        }
+        let plen = prefix.len();
+        for_each_permutation(&mut rest, &mut |suffix| {
+            order.truncate(plen);
+            order.extend_from_slice(suffix);
+            let t = prepared.execute_order(&order);
+            rec(t, &order);
+        });
+    }
+}
+
+/// Lexicographic prefix-tree enumeration over the unused kernels: each
+/// internal node pushes one checkpoint shared by every permutation of its
+/// subtree; the last two positions are completed directly from the
+/// parent checkpoint (a depth-(n-1) checkpoint would serve one leaf).
+fn checkpointed_dfs(
+    prepared: &mut dyn PreparedWorkload,
+    used: &mut [bool],
+    order: &mut Vec<usize>,
+    n: usize,
+    rec: &mut dyn FnMut(f64, &[usize]),
+) {
+    match n - order.len() {
+        0 => {
+            let t = prepared.execute_suffix(&[]);
+            rec(t, order);
+        }
+        1 => {
+            let k = used.iter().position(|u| !u).expect("one kernel left");
+            order.push(k);
+            let t = prepared.execute_suffix(&order[n - 1..]);
+            rec(t, order);
+            order.pop();
+        }
+        2 => {
+            let a = used.iter().position(|u| !u).expect("two kernels left");
+            let b = used[a + 1..]
+                .iter()
+                .position(|u| !u)
+                .map(|i| a + 1 + i)
+                .expect("two kernels left");
+            for (x, y) in [(a, b), (b, a)] {
+                order.push(x);
+                order.push(y);
+                let t = prepared.execute_suffix(&order[n - 2..]);
+                rec(t, order);
+                order.pop();
+                order.pop();
+            }
+        }
+        _ => {
+            for k in 0..n {
+                if used[k] {
+                    continue;
+                }
+                used[k] = true;
+                order.push(k);
+                prepared.checkpoint_push(k);
+                checkpointed_dfs(prepared, used, order, n, rec);
+                prepared.checkpoint_pop();
+                order.pop();
+                used[k] = false;
+            }
+        }
+    }
+}
+
+/// Per-worker accumulator for the full-distribution sweep.
 struct Partial {
     best_ms: f64,
     best_order: Vec<usize>,
@@ -184,13 +622,18 @@ impl Partial {
 
     #[inline]
     fn record(&mut self, t: f64, order: &[usize]) {
-        if t < self.best_ms {
+        // Exact ties break toward the lexicographically smallest order so
+        // the reported extreme orders are enumeration-order independent
+        // (Heap's, prefix-tree DFS and streaming mode all agree).
+        if t < self.best_ms || (t == self.best_ms && order < &self.best_order[..]) {
             self.best_ms = t;
-            self.best_order = order.to_vec();
+            self.best_order.clear();
+            self.best_order.extend_from_slice(order);
         }
-        if t > self.worst_ms {
+        if t > self.worst_ms || (t == self.worst_ms && order < &self.worst_order[..]) {
             self.worst_ms = t;
-            self.worst_order = order.to_vec();
+            self.worst_order.clear();
+            self.worst_order.extend_from_slice(order);
         }
         self.times.push(t);
     }
@@ -269,6 +712,55 @@ mod tests {
     }
 
     #[test]
+    fn percentile_rank_matches_linear_scan() {
+        // The binary-search implementation must agree exactly with the
+        // original O(n!) linear scan.
+        fn linear_rank(times: &[f64], t_ms: f64) -> f64 {
+            if times.is_empty() {
+                return 0.0;
+            }
+            let eps = 1e-9 * t_ms.abs().max(1e-300);
+            let mut worse = 0usize;
+            let mut equal = 0usize;
+            for &t in times {
+                if t > t_ms + eps {
+                    worse += 1;
+                } else if (t - t_ms).abs() <= eps {
+                    equal += 1;
+                }
+            }
+            (worse as f64 + 0.5 * equal as f64) / times.len() as f64 * 100.0
+        }
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..5)
+            .map(|i| kernel(16, 4 + i * 8, 8192 * (i % 2) as u32, 1.0 + i as f64, 400.0))
+            .collect();
+        let r = sweep(&gpu, &ks);
+        let probes = [
+            r.best_ms,
+            r.worst_ms,
+            r.median_ms(),
+            r.best_ms * 0.9,
+            r.worst_ms * 1.1,
+            r.times[7],
+            r.times[63],
+        ];
+        for t in probes {
+            assert_eq!(
+                r.percentile_rank(t).to_bits(),
+                linear_rank(&r.times, t).to_bits(),
+                "probe {t}"
+            );
+        }
+        // A NaN candidate (unsimulable run) ranks 0, as in the linear
+        // scan where every NaN comparison is false — in both the full
+        // and the streaming distribution.
+        assert_eq!(r.percentile_rank(f64::NAN), 0.0);
+        assert_eq!(linear_rank(&r.times, f64::NAN), 0.0);
+        assert_eq!(sweep_stats(&gpu, &ks).percentile_rank(f64::NAN), 0.0);
+    }
+
+    #[test]
     fn median_between_best_and_worst() {
         let gpu = GpuSpec::gtx580();
         let ks: Vec<_> = (0..4)
@@ -300,5 +792,68 @@ mod tests {
         let r = sweep(&gpu, &ks);
         let spread = (r.worst_ms - r.best_ms) / r.best_ms;
         assert!(spread < 1e-9, "spread {spread}");
+    }
+
+    #[test]
+    fn tied_extremes_pick_lexicographically_smallest_order() {
+        // Identical kernels: every permutation ties, so both extreme
+        // orders must be the lexicographically smallest (the identity) —
+        // in every mode.
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![kernel(16, 8, 8192, 3.0, 500.0); 4];
+        let factory: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync) =
+            &|| Box::new(SimulatorBackend::new());
+        for mode in [
+            SweepMode::NaiveExecute,
+            SweepMode::PreparedFlat,
+            SweepMode::Checkpointed,
+        ] {
+            let r = sweep_with_mode(&gpu, &ks, factory, mode);
+            assert_eq!(r.best_order, vec![0, 1, 2, 3], "{mode:?}");
+            assert_eq!(r.worst_order, vec![0, 1, 2, 3], "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_stats_tracks_exact_extremes() {
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..5)
+            .map(|i| {
+                let shmem = ((i % 2) as u32) * 16384;
+                kernel(16, 4 + (i % 3) * 10, shmem, 1.0 + 2.0 * i as f64, 400.0)
+            })
+            .collect();
+        let full = sweep(&gpu, &ks);
+        let stats = sweep_stats(&gpu, &ks);
+        assert_eq!(stats.n_perms, full.n_perms);
+        assert_eq!(stats.best_ms.to_bits(), full.best_ms.to_bits());
+        assert_eq!(stats.worst_ms.to_bits(), full.worst_ms.to_bits());
+        assert_eq!(stats.best_order, full.best_order);
+        assert_eq!(stats.worst_order, full.worst_order);
+        // Mean from the histogram sum matches the full distribution.
+        let mean_full: f64 = full.times.iter().sum::<f64>() / full.times.len() as f64;
+        assert!((stats.mean_ms() - mean_full).abs() < 1e-9 * mean_full);
+        // Quantiles land inside the observed range.
+        let q50 = stats.quantile_ms(0.5);
+        assert!(q50 >= stats.best_ms - stats.bin_width && q50 <= stats.worst_ms + stats.bin_width);
+    }
+
+    #[test]
+    fn sweep_stats_percentiles_within_bin_resolution() {
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..5)
+            .map(|i| kernel(16, 4 + i * 6, ((i % 2) as u32) * 8192, 1.0 + 1.5 * i as f64, 400.0))
+            .collect();
+        let full = sweep(&gpu, &ks);
+        let stats = sweep_stats(&gpu, &ks);
+        for &t in [full.best_ms, full.median_ms(), full.worst_ms].iter() {
+            let exact = full.percentile_rank(t);
+            let approx = stats.percentile_rank(t);
+            let tol = 50.0 * stats.bin_mass(t) as f64 / stats.n_perms as f64 + 1e-6;
+            assert!(
+                (exact - approx).abs() <= tol,
+                "t={t}: exact {exact} vs approx {approx} (tol {tol})"
+            );
+        }
     }
 }

@@ -25,6 +25,25 @@
 //!   at each event the engine advances time to the earliest projected
 //!   finish, retires finished blocks, refills from the queue, and
 //!   recomputes rates.
+//!
+//! # Reusable state and prefix checkpoints
+//!
+//! The engine is a [`SimState`]: per-kernel constants, the jittered
+//! per-block work table, and every scratch buffer are built once by
+//! [`SimState::new`] and reused across runs via [`SimState::reset`] — the
+//! permutation sweeps evaluate millions of orders on one state with no
+//! per-order heap allocation after warm-up.
+//!
+//! On top of that, [`SimState::push_prefix_kernel`] /
+//! [`SimState::finish_with`] expose **prefix checkpointing**: pushing a
+//! kernel advances the simulation exactly until that kernel's last block
+//! has been dispatched and snapshots the full fluid state at that instant.
+//! Because dispatch is strictly in launch order, everything up to that
+//! moment is independent of the suffix, so two orders sharing a prefix
+//! share the checkpoint — restoring is a buffer copy instead of a
+//! re-simulation, and the result is *bit-identical* to simulating the
+//! full order from scratch (pinned by tests here and in
+//! `tests/sweep_equivalence.rs`).
 
 use crate::gpu::{GpuSpec, KernelProfile, ResourceVec};
 
@@ -101,6 +120,7 @@ struct Block {
 }
 
 /// Per-kernel constants hoisted out of the hot loop.
+#[derive(Debug, Clone)]
 struct KernelConsts {
     res: ResourceVec,
     /// bytes of memory traffic per unit of compute work (1/R_i); 0 for
@@ -133,8 +153,12 @@ fn block_jitter_factor(jitter: f64, block: u64) -> f64 {
 /// Call [`super::validate_workload`] first; this function `debug_assert`s
 /// validity and produces meaningless results on invalid input in release
 /// builds (it is the innermost loop of the permutation sweeps).
+///
+/// This is a convenience wrapper that builds a fresh [`SimState`] per
+/// call; hot paths that evaluate many orders of one workload should hold
+/// a `SimState` and call [`SimState::makespan_of`] instead.
 pub fn simulate_order(gpu: &GpuSpec, kernels: &[KernelProfile], order: &[usize]) -> SimResult {
-    run(gpu, kernels, order, false)
+    SimState::new(gpu, kernels).run(order, false)
 }
 
 /// As [`simulate_order`], but records a full placement/completion trace.
@@ -143,153 +167,406 @@ pub fn simulate_order_traced(
     kernels: &[KernelProfile],
     order: &[usize],
 ) -> SimResult {
-    run(gpu, kernels, order, true)
+    SimState::new(gpu, kernels).run(order, true)
 }
 
-fn run(gpu: &GpuSpec, kernels: &[KernelProfile], order: &[usize], traced: bool) -> SimResult {
-    debug_assert_eq!(order.len(), kernels.len());
-    debug_assert!({
-        let mut seen = vec![false; kernels.len()];
-        order.iter().all(|&i| {
-            let ok = i < kernels.len() && !seen[i];
-            if ok {
-                seen[i] = true;
+/// A saved copy of the mutable fluid state, taken at the instant the last
+/// block of a prefix was dispatched. Buffers are reused across saves.
+#[derive(Debug, Clone, Default)]
+struct Snapshot {
+    t: f64,
+    n_events: usize,
+    dispatch_stalls: usize,
+    occupancy_integral: f64,
+    order: Vec<usize>,
+    order_pos: usize,
+    block_pos: usize,
+    sm_used: Vec<ResourceVec>,
+    resident: Vec<Block>,
+    blocks_left: Vec<u32>,
+    kernel_finish: Vec<f64>,
+}
+
+/// Reusable fluid-simulation state for one `(gpu, kernels)` workload.
+///
+/// Construction hoists everything order-independent out of the hot loop:
+/// per-kernel resource/rate constants, the jittered per-block work table,
+/// and all scratch buffers. Evaluating an order then performs **no heap
+/// allocation after warm-up** (asserted by `tests/zero_alloc.rs`).
+///
+/// Two evaluation paths:
+///
+/// * [`SimState::makespan_of`] — reset + full-order run (the flat path).
+/// * [`SimState::push_prefix_kernel`] / [`SimState::finish_with`] — the
+///   prefix-checkpoint path used by the permutation sweeps: state is
+///   snapshotted per prefix kernel and restored instead of re-simulated.
+#[derive(Debug)]
+pub struct SimState {
+    // ---- machine constants (copied from GpuSpec) ----
+    n_sm: usize,
+    sm_cap: ResourceVec,
+    blocks_per_sm: usize,
+    compute_rate_per_sm: f64,
+    bandwidth: f64,
+    warp_capacity: f64,
+    saturate: f64,
+    // ---- per-kernel constants ----
+    consts: Vec<KernelConsts>,
+    blocks_total: Vec<u32>,
+    /// `works[work_offsets[k] + b]` = jittered work of block `b` of kernel
+    /// `k` (kernel-major, precomputed once).
+    work_offsets: Vec<usize>,
+    works: Vec<f64>,
+    // ---- mutable fluid state ----
+    t: f64,
+    n_events: usize,
+    dispatch_stalls: usize,
+    occupancy_integral: f64,
+    sm_used: Vec<ResourceVec>,
+    resident: Vec<Block>,
+    blocks_left: Vec<u32>,
+    kernel_finish: Vec<f64>,
+    /// The order being executed: the checkpointed prefix plus any suffix.
+    order_buf: Vec<usize>,
+    /// Dispatch cursor: next block is `(order_buf[order_pos], block_pos)`.
+    order_pos: usize,
+    block_pos: usize,
+    // ---- event-loop scratch (reused, zero alloc per event) ----
+    rates: Vec<f64>,
+    demands: Vec<f64>,
+    sorted_scratch: Vec<f64>,
+    /// Per-SM resident-warp totals, sized from `GpuSpec::n_sm` (replaces
+    /// the old fixed `[0.0; 64]` array that silently produced garbage for
+    /// `n_sm > 64` machines in release builds).
+    sm_warps: Vec<f64>,
+    // ---- tracing ----
+    traced: bool,
+    trace: Vec<BlockEvent>,
+    // ---- prefix checkpoints ----
+    /// `snapshots[d]` is the state with the first `d` prefix kernels fully
+    /// dispatched; `snapshots[0]` is the pristine reset state.
+    snapshots: Vec<Snapshot>,
+    depth: usize,
+}
+
+impl SimState {
+    /// Build reusable state for one workload. Does not validate — call
+    /// [`super::validate_workload`] first (an unsimulable workload would
+    /// deadlock the in-order dispatcher).
+    pub fn new(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SimState {
+        let consts: Vec<KernelConsts> = kernels
+            .iter()
+            .map(|k| KernelConsts {
+                res: k.block_resources(),
+                mem_per_work: if k.ratio > 0.0 { 1.0 / k.ratio } else { 0.0 },
+                warps: k.warps_per_block as f64,
+            })
+            .collect();
+        let blocks_total: Vec<u32> = kernels.iter().map(|k| k.n_blocks).collect();
+
+        // Jittered per-block work table, kernel-major. The jitter factor
+        // depends only on the block index within its kernel — never on the
+        // order — so every permutation sees the same physical workload.
+        let total_blocks: usize = blocks_total.iter().map(|&b| b as usize).sum();
+        let mut work_offsets = Vec::with_capacity(kernels.len() + 1);
+        let mut works = Vec::with_capacity(total_blocks);
+        work_offsets.push(0);
+        for k in kernels {
+            for b in 0..k.n_blocks {
+                works.push(k.work_per_block * block_jitter_factor(gpu.block_jitter, b as u64));
             }
-            ok
-        })
-    });
+            work_offsets.push(works.len());
+        }
 
-    let consts: Vec<KernelConsts> = kernels
-        .iter()
-        .map(|k| KernelConsts {
-            res: k.block_resources(),
-            mem_per_work: if k.ratio > 0.0 { 1.0 / k.ratio } else { 0.0 },
-            warps: k.warps_per_block as f64,
-        })
-        .collect();
+        let n = kernels.len();
+        let n_sm = gpu.n_sm as usize;
+        let resident_cap = n_sm * gpu.blocks_per_sm as usize;
+        let mut state = SimState {
+            n_sm,
+            sm_cap: gpu.sm_capacity(),
+            blocks_per_sm: gpu.blocks_per_sm as usize,
+            compute_rate_per_sm: gpu.compute_rate_per_sm,
+            bandwidth: gpu.memory_bandwidth(),
+            warp_capacity: (gpu.warps_per_sm * gpu.n_sm) as f64,
+            saturate: gpu.warps_to_saturate as f64,
+            consts,
+            blocks_total,
+            work_offsets,
+            works,
+            t: 0.0,
+            n_events: 0,
+            dispatch_stalls: 0,
+            occupancy_integral: 0.0,
+            sm_used: vec![ResourceVec::ZERO; n_sm],
+            resident: Vec::with_capacity(resident_cap),
+            blocks_left: vec![0; n],
+            kernel_finish: vec![0.0; n],
+            order_buf: Vec::with_capacity(n),
+            order_pos: 0,
+            block_pos: 0,
+            rates: Vec::with_capacity(resident_cap),
+            demands: Vec::with_capacity(resident_cap),
+            sorted_scratch: Vec::with_capacity(resident_cap),
+            sm_warps: vec![0.0; n_sm],
+            traced: false,
+            trace: Vec::new(),
+            snapshots: Vec::with_capacity(n + 1),
+            depth: 0,
+        };
+        state.reset();
+        state.save_snapshot(); // snapshots[0] = pristine state
+        state
+    }
 
-    // Block queue in launch order: (kernel index, per-block work with the
-    // deterministic jitter factor applied). The factor depends only on
-    // (kernel, block index), never on the order, so permutations see the
-    // same physical workload.
-    let total_blocks: usize = kernels.iter().map(|k| k.n_blocks as usize).sum();
-    let mut queue: Vec<(u32, f64)> = Vec::with_capacity(total_blocks);
-    for &ki in order {
-        let k = &kernels[ki];
-        for b in 0..k.n_blocks {
-            let jitter = block_jitter_factor(gpu.block_jitter, b as u64);
-            queue.push((ki as u32, k.work_per_block * jitter));
+    /// Number of kernels in the prepared workload.
+    pub fn n_kernels(&self) -> usize {
+        self.consts.len()
+    }
+
+    /// Length of the currently checkpointed prefix.
+    pub fn prefix_len(&self) -> usize {
+        self.depth.saturating_sub(1)
+    }
+
+    /// Clear the mutable fluid state back to `t = 0` with an empty order.
+    /// Checkpoints are untouched (`snapshots[0]` *is* this state).
+    pub fn reset(&mut self) {
+        self.t = 0.0;
+        self.n_events = 0;
+        self.dispatch_stalls = 0;
+        self.occupancy_integral = 0.0;
+        for s in &mut self.sm_used {
+            *s = ResourceVec::ZERO;
+        }
+        self.resident.clear();
+        self.blocks_left.copy_from_slice(&self.blocks_total);
+        self.kernel_finish.fill(0.0);
+        self.order_buf.clear();
+        self.order_pos = 0;
+        self.block_pos = 0;
+        self.trace.clear();
+    }
+
+    /// Makespan of one complete launch `order` (a permutation of
+    /// `0..n_kernels()`), evaluated on the flat path: reset, run to
+    /// completion. Allocation-free after warm-up.
+    pub fn makespan_of(&mut self, order: &[usize]) -> f64 {
+        self.debug_check_permutation(order);
+        self.reset();
+        self.order_buf.extend_from_slice(order);
+        self.run_to_completion();
+        self.t
+    }
+
+    /// Full-result evaluation of one order (allocates the result vectors;
+    /// use [`SimState::makespan_of`] on hot paths).
+    pub fn run(&mut self, order: &[usize], traced: bool) -> SimResult {
+        self.traced = traced;
+        let makespan_ms = self.makespan_of(order);
+        self.traced = false;
+        SimResult {
+            makespan_ms,
+            kernel_finish_ms: self.kernel_finish.clone(),
+            n_events: self.n_events,
+            dispatch_stalls: self.dispatch_stalls,
+            avg_warp_occupancy: if self.t > 0.0 {
+                self.occupancy_integral / self.t
+            } else {
+                0.0
+            },
+            trace: std::mem::take(&mut self.trace),
         }
     }
-    let mut queue_head = 0usize;
 
-    let n_sm = gpu.n_sm as usize;
-    let sm_cap = gpu.sm_capacity();
-    let mut sm_used = vec![ResourceVec::ZERO; n_sm];
-    let mut resident: Vec<Block> = Vec::with_capacity(n_sm * gpu.blocks_per_sm as usize);
+    /// Extend the checkpointed prefix with kernel `k`: restore the current
+    /// prefix's snapshot, advance the simulation exactly until `k`'s last
+    /// block has been dispatched, and snapshot that instant.
+    ///
+    /// Dispatch is strictly in launch order, so everything simulated here
+    /// is independent of any future suffix — continuing from the snapshot
+    /// is bit-identical to simulating the full order from scratch.
+    pub fn push_prefix_kernel(&mut self, k: usize) {
+        debug_assert!(!self.traced, "checkpointing does not snapshot traces");
+        debug_assert!(k < self.consts.len());
+        debug_assert!(!self.order_in_snapshot_contains(k));
+        self.restore_top();
+        self.order_buf.push(k);
+        let limit = self.order_buf.len();
+        while !self.dispatch_up_to(limit) {
+            debug_assert!(!self.resident.is_empty(), "dispatcher deadlocked");
+            self.advance_event();
+        }
+        self.save_snapshot();
+    }
 
-    let mut blocks_left: Vec<u32> = kernels.iter().map(|k| k.n_blocks).collect();
-    let mut kernel_finish = vec![0.0f64; kernels.len()];
+    /// Drop the most recent prefix kernel's checkpoint.
+    pub fn pop_prefix_kernel(&mut self) {
+        debug_assert!(self.depth > 1, "no prefix kernel to pop");
+        self.depth -= 1;
+    }
 
-    let bandwidth = gpu.memory_bandwidth();
-    let warp_capacity = (gpu.warps_per_sm * gpu.n_sm) as f64;
-    let saturate = gpu.warps_to_saturate as f64;
+    /// Complete the checkpointed prefix with `suffix` (the remaining
+    /// kernels, possibly empty) and return the makespan. The checkpoint
+    /// stack is left intact, so this can be called once per sibling
+    /// suffix. Allocation-free after warm-up.
+    pub fn finish_with(&mut self, suffix: &[usize]) -> f64 {
+        debug_assert!(!self.traced, "checkpointing does not snapshot traces");
+        self.restore_top();
+        self.order_buf.extend_from_slice(suffix);
+        self.run_to_completion();
+        self.t
+    }
 
-    let mut t = 0.0f64;
-    let mut n_events = 0usize;
-    let mut dispatch_stalls = 0usize;
-    let mut occupancy_integral = 0.0f64;
-    let mut trace = Vec::new();
+    // ---- internals -------------------------------------------------------
 
-    // Scratch buffers reused across events (hot loop: zero allocations
-    // per event after warm-up — see EXPERIMENTS.md §Perf).
-    let mut rates: Vec<f64> = Vec::new();
-    let mut demands: Vec<f64> = Vec::new();
-    let mut sorted_scratch: Vec<f64> = Vec::new();
+    /// Alloc-free O(n²) permutation check (debug builds only).
+    fn debug_check_permutation(&self, order: &[usize]) {
+        debug_assert_eq!(order.len(), self.consts.len());
+        debug_assert!(order.iter().all(|&k| k < self.consts.len()));
+        debug_assert!(order
+            .iter()
+            .enumerate()
+            .all(|(i, &a)| order[i + 1..].iter().all(|&b| a != b)));
+    }
 
-    loop {
-        // ---- dispatch: place head blocks while they fit somewhere ----
-        while queue_head < queue.len() {
-            let (ki, block_work) = queue[queue_head];
-            let ki = ki as usize;
-            let need = &consts[ki].res;
+    fn order_in_snapshot_contains(&self, k: usize) -> bool {
+        self.depth > 0 && self.snapshots[self.depth - 1].order.contains(&k)
+    }
+
+    fn save_snapshot(&mut self) {
+        if self.snapshots.len() == self.depth {
+            self.snapshots.push(Snapshot::default());
+        }
+        let snap = &mut self.snapshots[self.depth];
+        snap.t = self.t;
+        snap.n_events = self.n_events;
+        snap.dispatch_stalls = self.dispatch_stalls;
+        snap.occupancy_integral = self.occupancy_integral;
+        snap.order_pos = self.order_pos;
+        snap.block_pos = self.block_pos;
+        snap.order.clear();
+        snap.order.extend_from_slice(&self.order_buf);
+        snap.sm_used.clear();
+        snap.sm_used.extend_from_slice(&self.sm_used);
+        snap.resident.clear();
+        snap.resident.extend_from_slice(&self.resident);
+        snap.blocks_left.clear();
+        snap.blocks_left.extend_from_slice(&self.blocks_left);
+        snap.kernel_finish.clear();
+        snap.kernel_finish.extend_from_slice(&self.kernel_finish);
+        self.depth += 1;
+    }
+
+    fn restore_top(&mut self) {
+        debug_assert!(self.depth > 0);
+        let snap = &self.snapshots[self.depth - 1];
+        self.t = snap.t;
+        self.n_events = snap.n_events;
+        self.dispatch_stalls = snap.dispatch_stalls;
+        self.occupancy_integral = snap.occupancy_integral;
+        self.order_pos = snap.order_pos;
+        self.block_pos = snap.block_pos;
+        self.order_buf.clear();
+        self.order_buf.extend_from_slice(&snap.order);
+        self.sm_used.clear();
+        self.sm_used.extend_from_slice(&snap.sm_used);
+        self.resident.clear();
+        self.resident.extend_from_slice(&snap.resident);
+        self.blocks_left.clear();
+        self.blocks_left.extend_from_slice(&snap.blocks_left);
+        self.kernel_finish.clear();
+        self.kernel_finish.extend_from_slice(&snap.kernel_finish);
+    }
+
+    /// Place head blocks in order while they fit, considering only the
+    /// first `limit` kernels of `order_buf`. Returns `true` once every
+    /// block of those kernels has been dispatched, `false` on a
+    /// head-of-line stall (head block fits nowhere right now).
+    fn dispatch_up_to(&mut self, limit: usize) -> bool {
+        while self.order_pos < limit {
+            let ki = self.order_buf[self.order_pos];
+            if self.block_pos >= self.blocks_total[ki] as usize {
+                self.order_pos += 1;
+                self.block_pos = 0;
+                continue;
+            }
+            let need = self.consts[ki].res;
             // Least-loaded-by-warps SM that fits; ties to lowest index.
             let mut best: Option<usize> = None;
-            for s in 0..n_sm {
-                if (sm_used[s] + *need).fits_within(&sm_cap) {
+            for s in 0..self.n_sm {
+                if (self.sm_used[s] + need).fits_within(&self.sm_cap) {
                     match best {
                         None => best = Some(s),
-                        Some(b) if sm_used[s].warps < sm_used[b].warps => best = Some(s),
+                        Some(b) if self.sm_used[s].warps < self.sm_used[b].warps => {
+                            best = Some(s)
+                        }
                         _ => {}
                     }
                 }
             }
             let Some(s) = best else {
-                if resident.len() < n_sm * gpu.blocks_per_sm as usize {
-                    dispatch_stalls += 1;
+                if self.resident.len() < self.n_sm * self.blocks_per_sm {
+                    self.dispatch_stalls += 1;
                 }
-                break;
+                return false;
             };
-            sm_used[s] += *need;
-            resident.push(Block {
+            self.sm_used[s] += need;
+            self.resident.push(Block {
                 kernel: ki as u32,
                 sm: s as u32,
-                rem_work: block_work,
+                rem_work: self.works[self.work_offsets[ki] + self.block_pos],
             });
-            if traced {
-                trace.push(BlockEvent {
-                    t_ms: t,
+            if self.traced {
+                self.trace.push(BlockEvent {
+                    t_ms: self.t,
                     kernel: ki,
                     sm: s as u32,
                     kind: BlockEventKind::Placed,
                 });
             }
-            queue_head += 1;
+            self.block_pos += 1;
         }
+        true
+    }
 
-        if resident.is_empty() {
-            debug_assert_eq!(queue_head, queue.len(), "dispatcher deadlocked");
-            break;
-        }
-
+    /// Compute rates (processor-sharing compute + max-min-fair memory),
+    /// advance time to the earliest completion, retire finished blocks.
+    fn advance_event(&mut self) {
         // ---- rates: processor-sharing compute + max-min-fair memory ----
-        rates.clear();
-        rates.reserve(resident.len());
-        // Per-SM warp totals.
-        let mut sm_warps = [0.0f64; 64];
-        debug_assert!(n_sm <= 64);
-        for b in &resident {
-            sm_warps[b.sm as usize] += consts[b.kernel as usize].warps;
+        self.rates.clear();
+        self.rates.reserve(self.resident.len());
+        // Per-SM warp totals (reusable scratch sized from GpuSpec).
+        self.sm_warps.fill(0.0);
+        for b in &self.resident {
+            self.sm_warps[b.sm as usize] += self.consts[b.kernel as usize].warps;
         }
-        let mut resident_warps = 0.0;
-        for s in 0..n_sm {
-            resident_warps += sm_warps[s];
-        }
-        for b in &resident {
-            let kc = &consts[b.kernel as usize];
-            let denom = sm_warps[b.sm as usize].max(saturate);
-            rates.push(gpu.compute_rate_per_sm * kc.warps / denom);
+        let resident_warps: f64 = self.sm_warps.iter().sum();
+        for b in &self.resident {
+            let kc = &self.consts[b.kernel as usize];
+            let denom = self.sm_warps[b.sm as usize].max(self.saturate);
+            self.rates.push(self.compute_rate_per_sm * kc.warps / denom);
         }
 
         // Max-min fair bandwidth: find the water level L with
         // sum(min(d_b, L)) = B, then p_b = min(c_b, grant_b * R_b).
-        demands.clear();
-        demands.reserve(resident.len());
+        self.demands.clear();
+        self.demands.reserve(self.resident.len());
         let mut total_demand = 0.0;
-        for (i, b) in resident.iter().enumerate() {
-            let d = rates[i] * consts[b.kernel as usize].mem_per_work;
-            demands.push(d);
+        for (i, b) in self.resident.iter().enumerate() {
+            let d = self.rates[i] * self.consts[b.kernel as usize].mem_per_work;
+            self.demands.push(d);
             total_demand += d;
         }
-        if total_demand > bandwidth {
+        if total_demand > self.bandwidth {
             // Water-filling over the sorted demands (reused scratch).
-            sorted_scratch.clear();
-            sorted_scratch.extend_from_slice(&demands);
-            sorted_scratch.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-            let mut rem = bandwidth;
+            self.sorted_scratch.clear();
+            self.sorted_scratch.extend_from_slice(&self.demands);
+            self.sorted_scratch
+                .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut rem = self.bandwidth;
             let mut level = f64::INFINITY;
-            let mut m = sorted_scratch.len();
-            for d in &sorted_scratch {
+            let mut m = self.sorted_scratch.len();
+            for d in &self.sorted_scratch {
                 let fair = rem / m as f64;
                 if *d <= fair {
                     rem -= d;
@@ -299,51 +576,50 @@ fn run(gpu: &GpuSpec, kernels: &[KernelProfile], order: &[usize], traced: bool) 
                     break;
                 }
             }
-            for (i, b) in resident.iter().enumerate() {
-                let kc = &consts[b.kernel as usize];
-                if demands[i] > level && kc.mem_per_work > 0.0 {
+            for (i, b) in self.resident.iter().enumerate() {
+                let kc = &self.consts[b.kernel as usize];
+                if self.demands[i] > level && kc.mem_per_work > 0.0 {
                     // Memory-throttled: granted `level` bytes/ms.
-                    rates[i] = rates[i].min(level / kc.mem_per_work);
+                    self.rates[i] = self.rates[i].min(level / kc.mem_per_work);
                 }
             }
         }
 
         // ---- advance to earliest completion ----
         let mut dt = f64::INFINITY;
-        for (i, b) in resident.iter().enumerate() {
-            let ti = b.rem_work / rates[i];
+        for (i, b) in self.resident.iter().enumerate() {
+            let ti = b.rem_work / self.rates[i];
             if ti < dt {
                 dt = ti;
             }
         }
         debug_assert!(dt.is_finite() && dt > 0.0);
-        t += dt;
-        occupancy_integral += resident_warps / warp_capacity * dt;
-        n_events += 1;
+        self.t += dt;
+        self.occupancy_integral += resident_warps / self.warp_capacity * dt;
+        self.n_events += 1;
 
         // Retire finished blocks (everything within float noise of done).
         let eps = dt * 1e-9;
         let mut i = 0;
-        while i < resident.len() {
+        while i < self.resident.len() {
             let finished = {
-                let b = &mut resident[i];
-                b.rem_work -= rates[i] * dt;
-                b.rem_work <= rates[i] * eps
+                let b = &mut self.resident[i];
+                b.rem_work -= self.rates[i] * dt;
+                b.rem_work <= self.rates[i] * eps
             };
             if finished {
-                let b = resident.swap_remove(i);
-                let r = rates.swap_remove(i);
-                let _ = r;
-                sm_used[b.sm as usize] -= consts[b.kernel as usize].res;
-                debug_assert!(sm_used[b.sm as usize].non_negative());
+                let b = self.resident.swap_remove(i);
+                self.rates.swap_remove(i);
+                self.sm_used[b.sm as usize] -= self.consts[b.kernel as usize].res;
+                debug_assert!(self.sm_used[b.sm as usize].non_negative());
                 let k = b.kernel as usize;
-                blocks_left[k] -= 1;
-                if blocks_left[k] == 0 {
-                    kernel_finish[k] = t;
+                self.blocks_left[k] -= 1;
+                if self.blocks_left[k] == 0 {
+                    self.kernel_finish[k] = self.t;
                 }
-                if traced {
-                    trace.push(BlockEvent {
-                        t_ms: t,
+                if self.traced {
+                    self.trace.push(BlockEvent {
+                        t_ms: self.t,
                         kernel: k,
                         sm: b.sm,
                         kind: BlockEventKind::Finished,
@@ -355,13 +631,19 @@ fn run(gpu: &GpuSpec, kernels: &[KernelProfile], order: &[usize], traced: bool) 
         }
     }
 
-    SimResult {
-        makespan_ms: t,
-        kernel_finish_ms: kernel_finish,
-        n_events,
-        dispatch_stalls,
-        avg_warp_occupancy: if t > 0.0 { occupancy_integral / t } else { 0.0 },
-        trace,
+    fn run_to_completion(&mut self) {
+        loop {
+            self.dispatch_up_to(self.order_buf.len());
+            if self.resident.is_empty() {
+                debug_assert_eq!(
+                    self.order_pos,
+                    self.order_buf.len(),
+                    "dispatcher deadlocked"
+                );
+                break;
+            }
+            self.advance_event();
+        }
     }
 }
 
@@ -436,6 +718,19 @@ mod tests {
         let gpu = tgpu();
         // 16 blocks on 16 SMs: each alone, saturating -> 1 ms total.
         let ks = vec![kernel("k", 16, 16, 0, 1e9, 1000.0)];
+        let r = simulate_order(&gpu, &ks, &[0]);
+        assert!((r.makespan_ms - 1.0).abs() < 1e-9, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn large_sm_count_supported() {
+        // Regression for the old fixed `[0.0; 64]` per-SM scratch array:
+        // a machine with more than 64 SMs must simulate correctly (the
+        // scratch is now sized from GpuSpec).
+        let mut gpu = tgpu();
+        gpu.n_sm = 100;
+        // 100 saturating blocks on 100 SMs: each alone -> 1 ms total.
+        let ks = vec![kernel("k", 100, 16, 0, 1e9, 1000.0)];
         let r = simulate_order(&gpu, &ks, &[0]);
         assert!((r.makespan_ms - 1.0).abs() < 1e-9, "{}", r.makespan_ms);
     }
@@ -523,7 +818,7 @@ mod tests {
             kernel("b", 40, 12, 0, 9.0, 300.0),
         ];
         let r = simulate_order(&gpu, &ks, &[1, 0]);
-        assert_eq!(r.n_events as u32 >= 1, true);
+        assert!(r.n_events >= 1);
         for (i, &f) in r.kernel_finish_ms.iter().enumerate() {
             assert!(f > 0.0, "kernel {i} never finished");
             assert!(f <= r.makespan_ms + 1e-12);
@@ -575,5 +870,89 @@ mod tests {
         let ks = vec![kernel("a", 64, 8, 0, 4.0, 500.0)];
         let r = simulate_order(&gpu, &ks, &[0]);
         assert!(r.avg_warp_occupancy > 0.0 && r.avg_warp_occupancy <= 1.0);
+    }
+
+    // ---- SimState reuse + checkpointing --------------------------------
+
+    #[test]
+    fn reused_state_matches_fresh_state_bitwise() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 16, 4, 8192, 3.11, 800.0),
+            kernel("b", 32, 8, 0, 11.1, 400.0),
+            kernel("c", 48, 6, 16384, 2.0, 300.0),
+            kernel("d", 12, 16, 0, 1.0, 600.0),
+        ];
+        let mut state = SimState::new(&gpu, &ks);
+        for order in [[0, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2], [2, 0, 3, 1]] {
+            let reused = state.makespan_of(&order);
+            let fresh = simulate_order(&gpu, &ks, &order).makespan_ms;
+            assert_eq!(reused.to_bits(), fresh.to_bits(), "order {order:?}");
+        }
+    }
+
+    #[test]
+    fn checkpointed_prefixes_match_full_runs_bitwise() {
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 16, 4, 8192, 3.11, 800.0),
+            kernel("b", 32, 8, 0, 11.1, 400.0),
+            kernel("c", 48, 6, 16384, 2.0, 300.0),
+            kernel("d", 12, 16, 0, 1.0, 600.0),
+        ];
+        let mut state = SimState::new(&gpu, &ks);
+        // Every 4-kernel order, evaluated as prefix [a, b] + suffix.
+        for a in 0..4usize {
+            state.push_prefix_kernel(a);
+            for b in 0..4usize {
+                if b == a {
+                    continue;
+                }
+                state.push_prefix_kernel(b);
+                for c in 0..4usize {
+                    if c == a || c == b {
+                        continue;
+                    }
+                    let d = 6 - a - b - c;
+                    let order = [a, b, c, d];
+                    let checkpointed = state.finish_with(&[c, d]);
+                    let full = simulate_order(&gpu, &ks, &order).makespan_ms;
+                    assert_eq!(
+                        checkpointed.to_bits(),
+                        full.to_bits(),
+                        "order {order:?}: {checkpointed} vs {full}"
+                    );
+                }
+                state.pop_prefix_kernel();
+            }
+            state.pop_prefix_kernel();
+        }
+        assert_eq!(state.prefix_len(), 0);
+    }
+
+    #[test]
+    fn checkpoints_and_flat_runs_interleave_safely() {
+        // A flat makespan_of between checkpoint ops must not corrupt the
+        // checkpoint stack.
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 16, 4, 0, 3.0, 500.0),
+            kernel("b", 24, 8, 0, 9.0, 400.0),
+            kernel("c", 8, 12, 8192, 1.5, 700.0),
+        ];
+        let mut state = SimState::new(&gpu, &ks);
+        state.push_prefix_kernel(1);
+        let t_flat = state.makespan_of(&[2, 1, 0]);
+        assert_eq!(
+            t_flat.to_bits(),
+            simulate_order(&gpu, &ks, &[2, 1, 0]).makespan_ms.to_bits()
+        );
+        // Checkpoint for prefix [1] still valid after the flat run.
+        let t_ck = state.finish_with(&[0, 2]);
+        assert_eq!(
+            t_ck.to_bits(),
+            simulate_order(&gpu, &ks, &[1, 0, 2]).makespan_ms.to_bits()
+        );
+        state.pop_prefix_kernel();
     }
 }

@@ -27,6 +27,7 @@ pub mod rounds;
 
 pub use engine::{
     simulate_order, simulate_order_traced, BlockEvent, BlockEventKind, SimError, SimResult,
+    SimState,
 };
 
 use crate::gpu::{GpuSpec, KernelProfile};

@@ -1,13 +1,18 @@
 //! Dependency-free data parallelism over `std::thread::scope` — the
 //! offline environment ships no rayon, so the permutation sweeps use this
-//! static work partitioner.
+//! work-stealing task pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Map `f` over `0..n` tasks on up to `threads` OS threads, collecting the
 /// results in task order. `f` must be `Sync` (it is shared by reference).
 ///
-/// Tasks are partitioned into contiguous chunks, one per thread — the right
-/// shape for the permutation sweep, where every task (a first-position
-/// prefix) has near-identical cost.
+/// Tasks are claimed one at a time from a shared atomic counter
+/// (work-stealing), so uneven task costs self-balance: a worker that
+/// draws a cheap task immediately claims the next one instead of idling
+/// behind a statically assigned chunk. The permutation sweeps need this —
+/// checkpointed prefix tasks vary in cost with how early their prefix
+/// stalls the dispatcher.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -21,17 +26,30 @@ where
         return (0..n).map(f).collect();
     }
 
+    let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let chunk = n.div_ceil(threads);
     std::thread::scope(|scope| {
-        for (t, slot_chunk) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                let base = t * chunk;
-                for (i, slot) in slot_chunk.iter_mut().enumerate() {
-                    *slot = Some(f(base + i));
-                }
-            });
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let f = &f;
+                let next = &next;
+                scope.spawn(move || {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("worker panicked") {
+                out[i] = Some(v);
+            }
         }
     });
     out.into_iter().map(|x| x.expect("task completed")).collect()
@@ -78,6 +96,23 @@ mod tests {
         assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
         assert_eq!(parallel_map(3, 100, |i| i), vec![0, 1, 2]);
         assert_eq!(parallel_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn uneven_task_costs_balance() {
+        // A single pathological task (index 0) must not serialize the
+        // pool: with static chunking, thread 0's whole chunk would queue
+        // behind it; with stealing, other workers drain the rest.
+        let out = parallel_map(64, 8, |i| {
+            let spin = if i == 0 { 200_000u64 } else { 50 };
+            let mut acc = 0u64;
+            for x in 0..spin {
+                acc = acc.wrapping_add(x);
+            }
+            std::hint::black_box(acc);
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
     }
 
     #[test]

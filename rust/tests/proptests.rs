@@ -5,15 +5,16 @@
 //! every case reports its seed on failure, making reproduction a
 //! one-liner. Each property runs across hundreds of seeded cases.
 
-use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, PreparedWorkload, SimulatorBackend};
 use kreorder::gpu::{GpuSpec, KernelProfile, ResourceVec};
 use kreorder::perm::for_each_permutation;
 use kreorder::sched::{registry, reorder, reorder_with, CombinedProfile, ScoreConfig};
 use kreorder::sim::{
     self, rounds::pack_rounds, simulate_order, simulate_order_traced, BlockEvent,
 };
-use kreorder::util::SplitMix64;
+use kreorder::util::{parallel_map, SplitMix64};
 use kreorder::workloads::synthetic_workload;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 const CASES: u64 = 150;
 
@@ -286,6 +287,80 @@ fn prop_percentile_antitone() {
                         "seed {seed}: rank({a}) < rank({b})"
                     );
                 }
+            }
+        }
+    }
+}
+
+/// The work-stealing `parallel_map` runs every task exactly once and
+/// returns results in task order, under adversarially uneven task costs
+/// (randomized sizes, thread counts, and per-task spin durations).
+#[test]
+fn prop_parallel_map_work_stealing_runs_each_task_once() {
+    for seed in 0..25 {
+        let mut rng = SplitMix64::new(seed);
+        let n = 1 + rng.below(150);
+        let threads = 1 + rng.below(16);
+        let costs: Vec<u64> = (0..n).map(|_| rng.below(2000) as u64).collect();
+        let counters: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let out = parallel_map(n, threads, |i| {
+            counters[i].fetch_add(1, Ordering::Relaxed);
+            // Uneven spin so workers finish their claims at very
+            // different times.
+            let mut acc = 0u64;
+            for x in 0..costs[i] * 50 {
+                acc = acc.wrapping_add(x ^ seed);
+            }
+            std::hint::black_box(acc);
+            i * 3 + 1
+        });
+        assert_eq!(
+            out,
+            (0..n).map(|i| i * 3 + 1).collect::<Vec<_>>(),
+            "seed {seed} n={n} threads={threads}"
+        );
+        for (i, c) in counters.iter().enumerate() {
+            assert_eq!(
+                c.load(Ordering::Relaxed),
+                1,
+                "seed {seed}: task {i} ran {} times",
+                c.load(Ordering::Relaxed)
+            );
+        }
+    }
+}
+
+/// Prepared workload handles agree exactly with their backend's
+/// `execute` for arbitrary workloads and orders — the contract the
+/// sweep hot path rests on (the checkpointed variant is pinned in
+/// `tests/sweep_equivalence.rs`).
+#[test]
+fn prop_prepared_handles_match_execute() {
+    for seed in 0..CASES / 5 {
+        let g = gpu();
+        let ks = workload(seed);
+        let mut orders: Vec<Vec<usize>> = Vec::new();
+        for i in 0..4u64 {
+            let mut o: Vec<usize> = (0..ks.len()).collect();
+            SplitMix64::new(seed.wrapping_mul(31).wrapping_add(i)).shuffle(&mut o);
+            orders.push(o);
+        }
+        let mut backends: Vec<Box<dyn ExecutionBackend>> = vec![
+            Box::new(SimulatorBackend::new()),
+            Box::new(AnalyticBackend::new()),
+        ];
+        for backend in &mut backends {
+            let direct: Vec<f64> = orders
+                .iter()
+                .map(|o| backend.execute(&g, &ks, o).makespan_ms)
+                .collect();
+            let mut prepared = backend.prepare(&g, &ks);
+            for (o, d) in orders.iter().zip(&direct) {
+                assert_eq!(
+                    prepared.execute_order(o).to_bits(),
+                    d.to_bits(),
+                    "seed {seed} order {o:?}"
+                );
             }
         }
     }

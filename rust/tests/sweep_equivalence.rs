@@ -1,0 +1,129 @@
+//! Golden equivalence suite for the sweep fast paths.
+//!
+//! The prefix-checkpointed sweep and the streaming-statistics sweep must
+//! be *indistinguishable* from the naive per-permutation `execute` sweep:
+//! bit-identical best/worst makespans and orders, bit-identical time
+//! multisets, and percentile ranks matching within histogram resolution —
+//! for n ≤ 6, on both model backends.
+
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::gpu::GpuSpec;
+use kreorder::perm::{sweep_flat_with, sweep_stats_with, sweep_with};
+use kreorder::workloads::{by_id, synthetic_workload};
+
+type Factory<'a> = &'a (dyn Fn() -> Box<dyn ExecutionBackend> + Sync);
+
+fn backends() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync>)> {
+    vec![
+        ("sim", Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)),
+        (
+            "analytic",
+            Box::new(|| Box::new(AnalyticBackend::new()) as Box<dyn ExecutionBackend>),
+        ),
+    ]
+}
+
+fn assert_sweeps_identical(
+    gpu: &GpuSpec,
+    kernels: &[kreorder::gpu::KernelProfile],
+    factory: Factory,
+    label: &str,
+) {
+    let naive = sweep_flat_with(gpu, kernels, factory);
+    let fast = sweep_with(gpu, kernels, factory);
+
+    assert_eq!(naive.n_perms, fast.n_perms, "{label}: n_perms");
+    assert_eq!(
+        naive.best_ms.to_bits(),
+        fast.best_ms.to_bits(),
+        "{label}: best_ms {} vs {}",
+        naive.best_ms,
+        fast.best_ms
+    );
+    assert_eq!(
+        naive.worst_ms.to_bits(),
+        fast.worst_ms.to_bits(),
+        "{label}: worst_ms {} vs {}",
+        naive.worst_ms,
+        fast.worst_ms
+    );
+    assert_eq!(naive.best_order, fast.best_order, "{label}: best_order");
+    assert_eq!(naive.worst_order, fast.worst_order, "{label}: worst_order");
+
+    // Same multiset of makespans, bit for bit.
+    let mut a = naive.times.clone();
+    let mut b = fast.times.clone();
+    a.sort_unstable_by(f64::total_cmp);
+    b.sort_unstable_by(f64::total_cmp);
+    assert_eq!(a.len(), b.len(), "{label}");
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: sorted times diverge at {i}");
+    }
+}
+
+/// Tentpole acceptance: the checkpointed sweep is exactly the naive sweep
+/// for every n ≤ 6 on both model backends, across varied workloads.
+#[test]
+fn checkpointed_sweep_matches_naive_bitwise() {
+    let gpu = GpuSpec::gtx580();
+    for (name, factory) in backends() {
+        for n in 2..=6 {
+            for seed in [1u64, 17, 123] {
+                let ks = synthetic_workload(&gpu, n, seed);
+                assert_sweeps_identical(
+                    &gpu,
+                    &ks,
+                    factory.as_ref(),
+                    &format!("{name} n={n} seed={seed}"),
+                );
+            }
+        }
+    }
+}
+
+/// The paper's 6-kernel experiments, checkpointed vs naive.
+#[test]
+fn paper_experiments_checkpointed_matches_naive() {
+    let gpu = GpuSpec::gtx580();
+    for (name, factory) in backends() {
+        for id in ["ep-6-shm", "epbs-6"] {
+            let ks = by_id(id).unwrap().kernels;
+            assert_sweeps_identical(&gpu, &ks, factory.as_ref(), &format!("{name} {id}"));
+        }
+    }
+}
+
+/// Streaming `SweepStats` agrees with the naive sweep: exact extremes
+/// (values and orders) and percentile ranks within histogram resolution.
+#[test]
+fn streaming_stats_match_naive() {
+    let gpu = GpuSpec::gtx580();
+    for (name, factory) in backends() {
+        for n in 3..=6 {
+            for seed in [5u64, 99] {
+                let ks = synthetic_workload(&gpu, n, seed);
+                let naive = sweep_flat_with(&gpu, &ks, factory.as_ref());
+                let stats = sweep_stats_with(&gpu, &ks, factory.as_ref(), 4096);
+                let label = format!("{name} n={n} seed={seed}");
+
+                assert_eq!(stats.n_perms, naive.n_perms, "{label}");
+                assert_eq!(stats.best_ms.to_bits(), naive.best_ms.to_bits(), "{label}");
+                assert_eq!(stats.worst_ms.to_bits(), naive.worst_ms.to_bits(), "{label}");
+                assert_eq!(stats.best_order, naive.best_order, "{label}");
+                assert_eq!(stats.worst_order, naive.worst_order, "{label}");
+
+                // Percentile ranks agree to within half the probe's bin
+                // mass (the histogram's resolution bound).
+                for &t in [naive.best_ms, naive.median_ms(), naive.worst_ms].iter() {
+                    let exact = naive.percentile_rank(t);
+                    let approx = stats.percentile_rank(t);
+                    let tol = 50.0 * stats.bin_mass(t) as f64 / stats.n_perms as f64 + 1e-6;
+                    assert!(
+                        (exact - approx).abs() <= tol,
+                        "{label}: rank({t}) exact {exact} vs approx {approx} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+}

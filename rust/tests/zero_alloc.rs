@@ -1,0 +1,124 @@
+//! Acceptance pin: the per-permutation sweep hot path performs **no heap
+//! allocation after warm-up**, for both model backends, on both the flat
+//! (`execute_order`) and prefix-checkpointed paths.
+//!
+//! A counting global allocator wraps the system allocator; this file
+//! contains a single `#[test]` (its own test binary) so no concurrent
+//! test pollutes the counter.
+
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, PreparedWorkload, SimulatorBackend};
+use kreorder::gpu::GpuSpec;
+use kreorder::workloads::synthetic_workload;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// One full lexicographic enumeration of the permutation space through
+/// the checkpoint API plus a flat pass, using only preallocated buffers —
+/// the exact shape of the sweep's per-worker hot loop.
+fn full_pass(
+    prepared: &mut dyn PreparedWorkload,
+    used: &mut [bool],
+    order: &mut Vec<usize>,
+    n: usize,
+    sink: &mut f64,
+) {
+    fn dfs(
+        prepared: &mut dyn PreparedWorkload,
+        used: &mut [bool],
+        order: &mut Vec<usize>,
+        n: usize,
+        sink: &mut f64,
+    ) {
+        if n - order.len() == 1 {
+            let k = used.iter().position(|u| !u).unwrap();
+            order.push(k);
+            *sink += prepared.execute_suffix(&order[n - 1..]);
+            order.pop();
+            return;
+        }
+        for k in 0..n {
+            if used[k] {
+                continue;
+            }
+            used[k] = true;
+            order.push(k);
+            prepared.checkpoint_push(k);
+            dfs(prepared, used, order, n, sink);
+            prepared.checkpoint_pop();
+            order.pop();
+            used[k] = false;
+        }
+    }
+    dfs(prepared, used, order, n, sink);
+}
+
+#[test]
+fn per_permutation_path_is_allocation_free_after_warmup() {
+    let gpu = GpuSpec::gtx580();
+    let n = 5;
+    let ks = synthetic_workload(&gpu, n, 42);
+
+    // All n! orders, materialized before measurement.
+    let mut orders: Vec<Vec<usize>> = Vec::new();
+    let mut idx: Vec<usize> = (0..n).collect();
+    kreorder::perm::for_each_permutation(&mut idx, &mut |p| orders.push(p.to_vec()));
+
+    let factories: Vec<(&str, Box<dyn ExecutionBackend>)> = vec![
+        ("sim", Box::new(SimulatorBackend::new())),
+        ("analytic", Box::new(AnalyticBackend::new())),
+    ];
+
+    for (name, mut backend) in factories {
+        let mut prepared = backend.prepare(&gpu, &ks);
+        assert!(prepared.supports_checkpoints(), "{name}");
+        let mut used = vec![false; n];
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        let mut sink = 0.0f64;
+
+        // Warm-up: one full checkpointed pass + one flat pass grows every
+        // reusable buffer to its steady-state capacity.
+        full_pass(prepared.as_mut(), &mut used, &mut order, n, &mut sink);
+        for o in &orders {
+            sink += prepared.execute_order(o);
+        }
+
+        // Measured: the identical work must not touch the allocator.
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        full_pass(prepared.as_mut(), &mut used, &mut order, n, &mut sink);
+        for o in &orders {
+            sink += prepared.execute_order(o);
+        }
+        let after = ALLOC_CALLS.load(Ordering::Relaxed);
+
+        assert!(sink.is_finite());
+        assert_eq!(
+            after - before,
+            0,
+            "{name}: hot path allocated {} time(s) after warm-up",
+            after - before
+        );
+    }
+}
