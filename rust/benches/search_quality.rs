@@ -1,0 +1,245 @@
+//! Bench + CI gate: launch-order **search quality**.
+//!
+//! Two contracts, both enforced (non-zero exit on violation) in `--quick`
+//! mode, which CI runs on every push:
+//!
+//! 1. **Exactness** — branch-and-bound returns the bit-identical optimal
+//!    makespan *and* tie-broken optimal order as the exhaustive
+//!    checkpointed sweep, for every scenario family at n ≤ 8 on both
+//!    model backends (simulator + analytic).
+//! 2. **Anytime quality** — each anytime strategy (`anneal`, `local`) at
+//!    a 10 000-evaluation budget lands at or above the 90th percentile
+//!    of the full n = 10 permutation distribution on every scenario
+//!    family (simulator backend; percentile at histogram resolution).
+//!
+//! Results are written to `BENCH_search.json` (optimality gap, sweep
+//! percentile, evals, wall time per strategy × family) so the perf/
+//! quality trajectory is tracked alongside `BENCH_sweep.json`. The full
+//! mode additionally reports n = 12 anytime improvement over the
+//! Algorithm 1 warm start, where no sweep reference exists.
+
+// This bench gates pass/fail quality contracts rather than timing loops,
+// so it uses only the harness's section headers.
+#[path = "harness/mod.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::gpu::GpuSpec;
+use kreorder::perm::{sweep_stats_with, SweepStats};
+use kreorder::search::{
+    BranchAndBound, LocalSearch, SearchBudget, SearchStrategy, SimulatedAnnealing,
+};
+use kreorder::sched::reorder;
+use kreorder::workloads::all_scenarios;
+
+const GATE_BUDGET: u64 = 10_000;
+const GATE_PERCENTILE: f64 = 90.0;
+
+struct Row {
+    scenario: &'static str,
+    backend: &'static str,
+    n: usize,
+    strategy: String,
+    budget: String,
+    best_ms: f64,
+    gap_pct: f64,
+    percentile: f64,
+    evals: u64,
+    wall_ms: f64,
+}
+
+fn factory(backend: &str) -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    match backend {
+        "sim" => Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>),
+        "analytic" => Box::new(|| Box::new(AnalyticBackend::new()) as Box<dyn ExecutionBackend>),
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let gpu = GpuSpec::gtx580();
+    let mut failures: Vec<String> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // ---- gate 1: branch-and-bound bitwise exactness vs the sweep ------
+    harness::section("branch-and-bound vs exhaustive sweep (bitwise optima)");
+    let sizes: &[usize] = if quick { &[6, 8] } else { &[6, 7, 8] };
+    let mut bnb_ok = true;
+    for sc in all_scenarios() {
+        for &n in sizes {
+            for backend in ["sim", "analytic"] {
+                let ks = sc.workload(&gpu, n, 11);
+                let f = factory(backend);
+                let stats: SweepStats = sweep_stats_with(&gpu, &ks, f.as_ref(), 4096);
+                let out = BranchAndBound.search(&gpu, &ks, f.as_ref(), &SearchBudget::unlimited());
+                let bits_match = out.best_ms.to_bits() == stats.best_ms.to_bits()
+                    && out.best_order == stats.best_order
+                    && out.complete;
+                println!(
+                    "  {:<14} n={n} {:<8} sweep {:>10.4} ms | bnb {:>10.4} ms in {:>6} evals \
+                     ({} pruned) {}",
+                    sc.id,
+                    backend,
+                    stats.best_ms,
+                    out.best_ms,
+                    out.evals,
+                    out.pruned_subtrees,
+                    if bits_match { "OK" } else { "MISMATCH" }
+                );
+                if !bits_match {
+                    bnb_ok = false;
+                    failures.push(format!(
+                        "bnb mismatch: {} n={n} {backend}: sweep ({}, {:?}) vs bnb \
+                         ({}, {:?}, complete={})",
+                        sc.id, stats.best_ms, stats.best_order, out.best_ms, out.best_order,
+                        out.complete
+                    ));
+                }
+                rows.push(Row {
+                    scenario: sc.id,
+                    backend,
+                    n,
+                    strategy: "bnb".into(),
+                    budget: "unlimited".into(),
+                    best_ms: out.best_ms,
+                    gap_pct: (out.best_ms - stats.best_ms) / stats.best_ms * 100.0,
+                    percentile: stats.percentile_rank(out.best_ms),
+                    evals: out.evals,
+                    wall_ms: out.wall_ms,
+                });
+            }
+        }
+    }
+
+    // ---- gate 2: anytime quality at the 10k-eval budget, n = 10 -------
+    harness::section("anytime strategies vs n=10 sweep distribution (10k-eval budget)");
+    let mut anytime_ok = true;
+    let sim = factory("sim");
+    for sc in all_scenarios() {
+        let ks = sc.workload(&gpu, 10, 23);
+        let stats = sweep_stats_with(&gpu, &ks, sim.as_ref(), 4096);
+        let strategies: [Box<dyn SearchStrategy>; 2] = [
+            Box::new(SimulatedAnnealing::new(7)),
+            Box::new(LocalSearch::new(7)),
+        ];
+        for s in strategies {
+            let out = s.search(&gpu, &ks, sim.as_ref(), &SearchBudget::evals(GATE_BUDGET));
+            let pct = stats.percentile_rank(out.best_ms);
+            let gap = (out.best_ms - stats.best_ms) / stats.best_ms * 100.0;
+            let pass = pct >= GATE_PERCENTILE;
+            println!(
+                "  {:<14} {:<10} best {:>10.4} ms  gap {:>6.2}%  percentile {:>6.2}%  {}",
+                sc.id,
+                out.strategy,
+                out.best_ms,
+                gap,
+                pct,
+                if pass { "OK" } else { "BELOW GATE" }
+            );
+            if !pass {
+                anytime_ok = false;
+                failures.push(format!(
+                    "anytime below gate: {} {} at {} evals: percentile {pct:.2} < \
+                     {GATE_PERCENTILE}",
+                    sc.id, out.strategy, GATE_BUDGET
+                ));
+            }
+            rows.push(Row {
+                scenario: sc.id,
+                backend: "sim",
+                n: 10,
+                strategy: out.strategy.clone(),
+                budget: GATE_BUDGET.to_string(),
+                best_ms: out.best_ms,
+                gap_pct: gap,
+                percentile: pct,
+                evals: out.evals,
+                wall_ms: out.wall_ms,
+            });
+        }
+    }
+
+    // ---- full mode: n = 12, anytime improvement over the warm start ----
+    if !quick {
+        harness::section("anytime improvement over Algorithm 1 at n=12 (no sweep reference)");
+        for sc in all_scenarios() {
+            let ks = sc.workload(&gpu, 12, 31);
+            let greedy_order = reorder(&gpu, &ks).order;
+            let greedy_ms = SimulatorBackend::new()
+                .execute(&gpu, &ks, &greedy_order)
+                .makespan_ms;
+            for s in [
+                Box::new(SimulatedAnnealing::new(7)) as Box<dyn SearchStrategy>,
+                Box::new(LocalSearch::new(7)),
+            ] {
+                let out = s.search(&gpu, &ks, sim.as_ref(), &SearchBudget::evals(GATE_BUDGET));
+                println!(
+                    "  {:<14} {:<10} algorithm1 {:>10.4} ms -> {:>10.4} ms ({:+.2}%)",
+                    sc.id,
+                    out.strategy,
+                    greedy_ms,
+                    out.best_ms,
+                    (out.best_ms - greedy_ms) / greedy_ms * 100.0
+                );
+                rows.push(Row {
+                    scenario: sc.id,
+                    backend: "sim",
+                    n: 12,
+                    strategy: out.strategy.clone(),
+                    budget: GATE_BUDGET.to_string(),
+                    best_ms: out.best_ms,
+                    gap_pct: (out.best_ms - greedy_ms) / greedy_ms * 100.0,
+                    percentile: f64::NAN,
+                    evals: out.evals,
+                    wall_ms: out.wall_ms,
+                });
+            }
+        }
+    }
+
+    // ---- machine-readable trajectory record ---------------------------
+    let mut json = String::from("{\n  \"bench\": \"search_quality\",\n  \"gpu\": \"gtx580\",\n");
+    json.push_str(&format!(
+        "  \"gates\": {{\"bnb_bitwise_ok\": {bnb_ok}, \"anytime_p90_ok\": {anytime_ok}}},\n"
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"backend\": \"{}\", \"n\": {}, \"strategy\": \"{}\", \
+             \"budget\": \"{}\", \"best_ms\": {:.6}, \"gap_pct\": {:.4}, \"percentile\": {}, \
+             \"evals\": {}, \"wall_ms\": {:.3}}}{}\n",
+            r.scenario,
+            r.backend,
+            r.n,
+            r.strategy,
+            r.budget,
+            r.best_ms,
+            r.gap_pct,
+            if r.percentile.is_nan() {
+                "null".to_string()
+            } else {
+                format!("{:.4}", r.percentile)
+            },
+            r.evals,
+            r.wall_ms,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = "BENCH_search.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    if !failures.is_empty() {
+        eprintln!("\nsearch quality gates FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("\nall search quality gates passed");
+}

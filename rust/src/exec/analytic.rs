@@ -260,6 +260,48 @@ impl PreparedWorkload for PreparedAnalytic {
         }
         self.total()
     }
+
+    /// Admissible bound from the round model's structure: rounds are
+    /// sequential and partition the kernels, so from the checkpoint's
+    /// `elapsed` no completion can beat
+    ///
+    /// * the open round's current duration (members only gain, and
+    ///   `round_duration` is monotone in membership),
+    /// * any remaining kernel's round-duration floor — its round's
+    ///   `denom ≥ max(its warp footprint, saturate)`, so the round lasts
+    ///   ≥ `work_per_block · max(footprint, saturate) / (C · w_blk)`,
+    /// * the bandwidth roofline over *all* leftover memory traffic
+    ///   (every round lasts ≥ its own traffic / B, and traffic sets are
+    ///   disjoint across rounds).
+    fn suffix_lower_bound(&mut self, remaining: &[usize]) -> f64 {
+        if !self.valid {
+            return f64::NEG_INFINITY;
+        }
+        let s = &self.snaps[self.depth - 1];
+        // Same arithmetic as `round_duration` (not an algebraic
+        // rearrangement), so the floor never exceeds the true duration
+        // even at the last ulp — a rounded-up bound could falsely prune
+        // a subtree holding a bit-exact tie of the optimum.
+        let mut dur_floor = if s.cur.is_empty() {
+            0.0
+        } else {
+            self.round_duration(&s.cur)
+        };
+        let mut mem_rem: f64 = s.cur.iter().map(|&k| self.ks[k].total_mem).sum();
+        for &k in remaining {
+            let kk = &self.ks[k];
+            mem_rem += kk.total_mem;
+            if kk.warps_per_block > 0.0 {
+                // Minimum possible denominator for k's round; IEEE
+                // division is monotone, so this mirrors round_duration's
+                // `work / (C·w/denom)` at `denom = max(footprint, sat)`.
+                let denom = kk.warps_footprint.max(self.saturate);
+                let rate = self.compute_rate * kk.warps_per_block / denom;
+                dur_floor = dur_floor.max(kk.work_per_block / rate);
+            }
+        }
+        s.elapsed + dur_floor.max(mem_rem / self.bandwidth)
+    }
 }
 
 #[cfg(test)]
@@ -330,6 +372,39 @@ mod tests {
         );
         prepared.checkpoint_pop();
         prepared.checkpoint_pop();
+    }
+
+    #[test]
+    fn suffix_lower_bound_never_exceeds_any_completion() {
+        // Admissibility pin for the round-model pruning bound, checked
+        // exhaustively over every prefix of a 5-kernel paper workload.
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = epbsessw_8()[..5].to_vec();
+        let n = ks.len();
+        let mut backend = AnalyticBackend::new();
+        let mut prepared = backend.prepare(&gpu, &ks);
+
+        fn check(p: &mut dyn PreparedWorkload, used: &mut [bool], n: usize) {
+            let remaining: Vec<usize> = (0..n).filter(|&k| !used[k]).collect();
+            let lb = p.suffix_lower_bound(&remaining);
+            let mut rest = remaining.clone();
+            crate::perm::for_each_permutation(&mut rest, &mut |s| {
+                let t = p.execute_suffix(s);
+                assert!(lb <= t * (1.0 + 1e-9), "bound {lb} > makespan {t} ({s:?})");
+            });
+            if remaining.is_empty() {
+                let t = p.execute_suffix(&[]);
+                assert!(lb <= t * (1.0 + 1e-9));
+            }
+            for &k in &remaining {
+                used[k] = true;
+                p.checkpoint_push(k);
+                check(p, used, n);
+                p.checkpoint_pop();
+                used[k] = false;
+            }
+        }
+        check(prepared.as_mut(), &mut vec![false; n], n);
     }
 
     #[test]

@@ -175,6 +175,25 @@ pub trait PreparedWorkload {
         let _ = suffix;
         panic!("prefix checkpointing unsupported (check supports_checkpoints())");
     }
+
+    /// An **admissible lower bound** on [`execute_suffix`] over *every*
+    /// permutation of `remaining` appended to the checkpointed prefix:
+    /// no completion order may beat it. The branch-and-bound solver in
+    /// [`crate::search`] prunes a subtree when this bound exceeds its
+    /// incumbent, so a bound that is ever optimistic in the wrong
+    /// direction (claims more than the true minimum) silently breaks
+    /// exactness — implementations must derive it from conservative
+    /// model invariants only (residual work over peak throughput,
+    /// per-kernel occupancy caps, bandwidth rooflines).
+    ///
+    /// The default returns `f64::NEG_INFINITY` (no information): search
+    /// stays correct but degrades to exhaustive enumeration.
+    ///
+    /// [`execute_suffix`]: PreparedWorkload::execute_suffix
+    fn suffix_lower_bound(&mut self, remaining: &[usize]) -> f64 {
+        let _ = remaining;
+        f64::NEG_INFINITY
+    }
 }
 
 /// Default [`PreparedWorkload`]: no hoisting, every order round-trips

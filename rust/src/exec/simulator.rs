@@ -97,6 +97,13 @@ impl PreparedWorkload for PreparedSim {
     fn execute_suffix(&mut self, suffix: &[usize]) -> f64 {
         self.state.finish_with(suffix)
     }
+
+    fn suffix_lower_bound(&mut self, remaining: &[usize]) -> f64 {
+        if !self.valid {
+            return f64::NEG_INFINITY;
+        }
+        self.state.suffix_lower_bound(remaining)
+    }
 }
 
 #[cfg(test)]

@@ -57,6 +57,40 @@
 //! exact best/worst makespans *and orders*, count and mean, plus a
 //! fixed-resolution histogram (default 4096 bins ≈ 32 KB) for percentile
 //! ranks — constant memory in `n`, so n = 11–12 sweeps fit comfortably.
+//! Histogram answers are approximate at bin resolution (best/worst stay
+//! exact); the error bounds are documented and pinned on `SweepStats`.
+//!
+//! ## Beyond the factorial wall: the search seam
+//!
+//! Past n ≈ 12 no sweep variant helps — `12! ≈ 4.8 × 10⁸` evaluations —
+//! yet real reorder windows hold dozens of kernels. [`search`] treats
+//! order selection as a search problem over the *same* prepared /
+//! checkpointed evaluation engine, behind the [`search::SearchStrategy`]
+//! trait with its own string registry ([`search::parse_strategy`]).
+//! Choosing a tool:
+//!
+//! * **n ≤ ~10, want the full distribution** (percentile ranks, Table 3
+//!   columns) → [`perm::sweep`]; n = 11–12 → [`perm::sweep_stats`].
+//! * **n ≈ 8–20, want the provable optimum only** →
+//!   [`search::BranchAndBound`] (`"bnb"`): the sweep's prefix tree plus
+//!   admissible fluid-model bounds
+//!   ([`exec::PreparedWorkload::suffix_lower_bound`]); bit-identical
+//!   best makespan *and* tie-broken best order to the exhaustive sweep.
+//! * **larger n, or a latency cap** → anytime strategies
+//!   (`"anneal:<seed>"`, `"local:<seed>"`) under a [`search::SearchBudget`];
+//!   the incumbent trajectory is reproducible from `(seed, evals)`.
+//! * **in the serving path** → the `search[:<strategy>[:<budget>]]`
+//!   launch policy ([`search::SearchPolicy`]): exact for small windows,
+//!   budgeted anytime search for large ones.
+//!
+//! CI enforces the quality contract (`benches/search_quality.rs`,
+//! smoke-run per push): branch-and-bound must bit-match the sweep on
+//! every scenario family at n ≤ 8 on both model backends, and each
+//! anytime strategy at a 10 k-evaluation budget must beat the 90th
+//! percentile of the n = 10 sweep distribution; `BENCH_search.json` /
+//! `BENCH_sweep.json` are uploaded as artifacts and checkpointed sweep
+//! throughput is gated against the committed `BENCH_baseline.json`
+//! (tolerances documented in `.github/workflows/ci.yml`).
 //!
 //! ## Crate layout
 //!
@@ -67,10 +101,11 @@
 //! | [`sched`] | [`sched::LaunchPolicy`] trait, Algorithm 1 + baselines, string registry |
 //! | [`exec`] | [`exec::ExecutionBackend`] trait: simulator / analytic / PJRT substrates |
 //! | [`perm`] | permutation-space sweeps, checkpointed + streaming (Table 3 / Fig. 1) |
+//! | [`search`] | [`search::SearchStrategy`]: exact branch-and-bound + anytime metaheuristics for n ≫ 12 |
 //! | [`profile`] | artifact profile loading (the "CUDA profiler" stand-in) |
 //! | `runtime` | PJRT execution of AOT-compiled HLO kernels (feature `pjrt`) |
 //! | [`coordinator`] | [`coordinator::CoordinatorBuilder`]: batching + reordering + multi-device dispatch |
-//! | [`workloads`] | the paper's six experiments (Table 2) + synthetic generators |
+//! | [`workloads`] | the paper's six experiments (Table 2) + synthetic generators + named scenario families |
 //! | [`metrics`] | percentiles, histograms, report tables |
 //!
 //! ## Quickstart
@@ -170,6 +205,7 @@ pub mod profile;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;
+pub mod search;
 pub mod sim;
 pub mod util;
 pub mod workloads;

@@ -5,6 +5,7 @@
 //! * `table3`  — regenerate the paper's Table 3 (all six experiments).
 //! * `fig1`    — regenerate Fig. 1 (EpBsEsSw-8 ranking + distribution CSVs).
 //! * `sweep`   — permutation sweep of one experiment.
+//! * `search`  — branch-and-bound / anytime launch-order search (n ≫ 12).
 //! * `sched`   — show every registered policy's order/rounds for a workload.
 //! * `serve`   — run the launch-coordinator service (simulated or real PJRT payloads).
 //! * `ablate`  — score-component ablation across experiments.
@@ -50,6 +51,7 @@ fn run(args: &[String]) -> Result<()> {
         "table3" => cmd_table3(rest),
         "fig1" => cmd_fig1(rest),
         "sweep" => cmd_sweep(rest),
+        "search" => cmd_search(rest),
         "sched" => cmd_sched(rest),
         "serve" => cmd_serve(rest),
         "ablate" => cmd_ablate(rest),
@@ -74,6 +76,10 @@ COMMANDS:
                                        reproduce Table 3 (default: all experiments)
   fig1 [--out-dir DIR] [--bins N]      reproduce Fig. 1 for EpBsEsSw-8
   sweep --exp ID [--backend B]         permutation-space stats for one experiment
+  search (--exp ID | --synthetic N | --scenario FAMILY:N) [--seed S]
+         [--strategy STRAT] [--budget EVALS] [--backend B]
+         [--trajectory] [--compare-sweep] [--list]
+                                       launch-order search beyond the factorial wall
   sched (--exp ID | --synthetic N [--seed S]) [--backend B]
                                        show every registered policy's order vs makespan
   serve [--batches N] [--window K] [--policy P] [--devices D] [--seed S]
@@ -85,7 +91,8 @@ COMMANDS:
 
 EXPERIMENT IDS: ep-6-shm ep-6-grid bs-6-blk epbs-6 epbs-6-shm epbsessw-8
 POLICIES: fifo reverse random:<seed> algorithm1 algorithm1:strict sjf coschedule
-          (see `kreorder policies`)
+          search[:<strategy>[:<evals>]]   (see `kreorder policies`)
+STRATEGIES & SCENARIOS: `kreorder search --list`
 BACKENDS: sim (fluid simulator, default), analytic (round model){}",
         if cfg!(feature = "pjrt") {
             ", pjrt (serve only)"
@@ -256,6 +263,117 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     println!("  median {:.2} ms", sw.median_ms());
     println!("  p75    {:.2} ms", kreorder::metrics::percentile(sorted, 75.0));
     println!("  worst  {:.2} ms  {:?}", sw.worst_ms, sw.worst_order);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// search
+// ---------------------------------------------------------------------------
+
+fn cmd_search(args: &[String]) -> Result<()> {
+    use kreorder::search::{parse_strategy, strategy_help_table, SearchBudget};
+    use kreorder::workloads::{all_scenarios, scenario_by_id};
+
+    if flag(args, "--list") {
+        println!("search strategies:");
+        print!("{}", strategy_help_table());
+        println!("\nscenario families (--scenario FAMILY:N):");
+        for sc in all_scenarios() {
+            println!("  {:<14} {}", sc.id, sc.description);
+        }
+        return Ok(());
+    }
+
+    let gpu = GpuSpec::gtx580();
+    let seed: u64 = opt(args, "--seed").map_or(0, |s| s.parse().unwrap_or(0));
+    let kernels = if let Some(id) = opt(args, "--exp") {
+        by_id(id)
+            .with_context(|| format!("unknown experiment `{id}`"))?
+            .kernels
+    } else if let Some(n) = opt(args, "--synthetic") {
+        let n: usize = n.parse().context("bad --synthetic")?;
+        synthetic_workload(&gpu, n, seed)
+    } else if let Some(spec) = opt(args, "--scenario") {
+        let (family, n) = spec
+            .split_once(':')
+            .context("--scenario takes FAMILY:N, e.g. skewed:16")?;
+        let sc = scenario_by_id(family).with_context(|| {
+            format!("unknown scenario family `{family}` (see `kreorder search --list`)")
+        })?;
+        sc.workload(&gpu, n.parse().context("bad scenario size")?, seed)
+    } else {
+        bail!("need --exp ID, --synthetic N or --scenario FAMILY:N (or --list)");
+    };
+    if kernels.is_empty() {
+        bail!("empty workload: need at least one kernel to search");
+    }
+    sim::validate_workload(&gpu, &kernels).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let strategy_name = opt(args, "--strategy").unwrap_or("bnb");
+    let strategy = parse_strategy(strategy_name).map_err(anyhow::Error::from)?;
+    // Default budget: unlimited for the exact solver (prove optimality),
+    // the 10k-eval CI-gate budget for anytime strategies.
+    let budget = match opt(args, "--budget") {
+        Some(b) => SearchBudget::evals(b.parse().context("bad --budget")?),
+        None if strategy.name() == "bnb" => SearchBudget::unlimited(),
+        None => SearchBudget::default(),
+    };
+    let make_backend = model_backend_factory(args)?;
+
+    let n = kernels.len();
+    eprintln!(
+        "searching {n} kernels ({} orders) with {}…",
+        if n <= 20 {
+            format!("{:.3e}", (1..=n).map(|i| i as f64).product::<f64>())
+        } else {
+            "≫ 10^18".into()
+        },
+        strategy.name()
+    );
+    let out = strategy.search(&gpu, &kernels, make_backend.as_ref(), &budget);
+
+    println!("strategy   : {}", out.strategy);
+    println!("best       : {:.4} ms", out.best_ms);
+    println!("order      : {:?}", out.best_order);
+    println!(
+        "evals      : {} ({} subtrees pruned)",
+        out.evals, out.pruned_subtrees
+    );
+    println!("wall       : {:.1} ms", out.wall_ms);
+    println!(
+        "optimal    : {}",
+        if out.complete {
+            "proven (branch-and-bound ran to completion)"
+        } else {
+            "not proven (anytime result / budget exhausted)"
+        }
+    );
+    if flag(args, "--trajectory") {
+        println!("incumbent trajectory (eval -> best ms):");
+        for s in &out.trajectory {
+            println!("  {:>10} {:.4}", s.eval, s.best_ms);
+        }
+    }
+
+    if flag(args, "--compare-sweep") {
+        if n > 11 {
+            eprintln!("note: --compare-sweep skipped (n = {n} > 11 is past the sweep wall)");
+        } else {
+            eprintln!("sweeping all orders for comparison…");
+            let stats =
+                kreorder::perm::sweep_stats_with(&gpu, &kernels, make_backend.as_ref(), 4096);
+            println!("sweep      : best {:.4} ms, worst {:.4} ms", stats.best_ms, stats.worst_ms);
+            println!(
+                "percentile : {:.2}% of all {} orders (histogram resolution)",
+                stats.percentile_rank(out.best_ms),
+                stats.n_perms
+            );
+            println!(
+                "gap        : {:+.4}% vs sweep optimum",
+                (out.best_ms - stats.best_ms) / stats.best_ms * 100.0
+            );
+        }
+    }
     Ok(())
 }
 

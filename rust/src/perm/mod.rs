@@ -254,6 +254,25 @@ pub fn sweep_with_mode(
 /// and a fixed-resolution histogram for percentile ranks — constant
 /// memory in `n`, so n = 11–12 sweeps fit where the `times` vector of a
 /// [`SweepResult`] would not (module docs have the formula).
+///
+/// # Accuracy: what is exact and what is approximate
+///
+/// `best_ms` / `worst_ms` / `best_order` / `worst_order` / `n_perms` /
+/// `sum_ms` are **exact** — bit-identical to the full-distribution
+/// [`SweepResult`], because they are folded online, not read back from
+/// the histogram. Everything that *is* answered from the histogram is
+/// approximate at its fixed resolution, with pinned error bounds
+/// (`perm::tests` asserts both):
+///
+/// * [`SweepStats::percentile_rank`] errs by at most half the candidate
+///   bin's mass, as a fraction of `n_perms` — i.e.
+///   `50 · bin_mass(t) / n_perms` percentage points
+///   ([`SweepStats::bin_mass`] exposes the bound).
+/// * [`SweepStats::quantile_ms`] returns the center of the bin holding
+///   the requested order statistic, so it errs by at most half a
+///   [`SweepStats::bin_width`] while the statistic lies inside the
+///   histogram range; makespans outside `[lo, hi)` clamp into the edge
+///   bins and only then is the error unbounded.
 #[derive(Debug, Clone)]
 pub struct SweepStats {
     /// Number of permutations recorded.
@@ -405,6 +424,13 @@ impl SweepStats {
     pub fn n_bins(&self) -> usize {
         self.bins.len()
     }
+
+    /// Width of one histogram bin in ms — the resolution of
+    /// [`SweepStats::quantile_ms`] (error ≤ half of this while the
+    /// statistic lies inside the histogram range).
+    pub fn bin_width(&self) -> f64 {
+        self.bin_width
+    }
 }
 
 /// Streaming-statistics sweep on the fluid simulator with the default
@@ -467,8 +493,10 @@ pub fn sweep_stats_with(
 // Enumeration core
 // ---------------------------------------------------------------------------
 
-/// Parallelization units: fixed prefixes of length min(2, n).
-fn position_prefixes(n: usize) -> Vec<Vec<usize>> {
+/// Parallelization units: fixed prefixes of length min(2, n). Shared
+/// with the branch-and-bound solver in [`crate::search`], which splits
+/// its tree over the same `n·(n-1)` first-two-position tasks.
+pub(crate) fn position_prefixes(n: usize) -> Vec<Vec<usize>> {
     let mut prefixes: Vec<Vec<usize>> = Vec::new();
     if n == 1 {
         prefixes.push(vec![0]);
@@ -836,6 +864,63 @@ mod tests {
         // Quantiles land inside the observed range.
         let q50 = stats.quantile_ms(0.5);
         assert!(q50 >= stats.best_ms - stats.bin_width && q50 <= stats.worst_ms + stats.bin_width);
+    }
+
+    #[test]
+    fn sweep_stats_quantile_error_bounded_by_half_bin_width() {
+        // The documented quantile error bound: the histogram's partial
+        // sums are exact per bin, so the bin `quantile_ms` picks is the
+        // one holding the requested order statistic, and the returned
+        // bin center is within bin_width/2 of the exact value (while the
+        // statistic is inside the histogram range, which the reference
+        // span [r/4, 4r) guarantees for these workloads).
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..5)
+            .map(|i| {
+                let shmem = ((i % 2) as u32) * 16384;
+                kernel(16, 4 + (i % 3) * 10, shmem, 1.0 + 2.0 * i as f64, 400.0)
+            })
+            .collect();
+        let full = sweep(&gpu, &ks);
+        let stats = sweep_stats(&gpu, &ks);
+        let sorted = full.sorted_times();
+        let finite = sorted.len();
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            // Same order statistic `quantile_ms` targets: the ceil(q·n)-th
+            // smallest (1-indexed).
+            let target = ((q * finite as f64).ceil().max(1.0) as usize).min(finite);
+            let exact = sorted[target - 1];
+            let approx = stats.quantile_ms(q);
+            assert!(
+                (approx - exact).abs() <= stats.bin_width() / 2.0 + 1e-12,
+                "q={q}: approx {approx} vs exact {exact} (bin width {})",
+                stats.bin_width()
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_stats_rank_error_bounded_across_distribution() {
+        // The documented rank error bound — ≤ 50·bin_mass/n_perms
+        // percentage points — must hold for probes spread across the
+        // whole distribution, not just the extremes.
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..5)
+            .map(|i| kernel(16, 4 + i * 6, ((i % 2) as u32) * 8192, 1.0 + 1.5 * i as f64, 400.0))
+            .collect();
+        let full = sweep(&gpu, &ks);
+        let stats = sweep_stats(&gpu, &ks);
+        let sorted = full.sorted_times();
+        for i in (0..sorted.len()).step_by(sorted.len() / 16 + 1) {
+            let t = sorted[i];
+            let exact = full.percentile_rank(t);
+            let approx = stats.percentile_rank(t);
+            let tol = 50.0 * stats.bin_mass(t) as f64 / stats.n_perms as f64 + 1e-6;
+            assert!(
+                (exact - approx).abs() <= tol,
+                "probe {t}: exact {exact} vs approx {approx} (tol {tol})"
+            );
+        }
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! Every spelling the seed CLI accepted keeps working (`fifo`, `reverse`,
 //! `random:<seed>`, `algorithm1` with its `algorithm` / `alg` aliases),
 //! plus the policies added with the trait redesign (`sjf`, `coschedule`,
-//! `algorithm1:strict`). Unknown spellings return a [`PolicyParseError`]
-//! whose message lists every valid name, so the CLI can fail helpfully.
+//! `algorithm1:strict`) and the budgeted search delegate
+//! (`search[:<strategy>[:<evals>]]`, backed by [`crate::search`]).
+//! Unknown spellings return a [`PolicyParseError`] whose message lists
+//! every valid name, so the CLI can fail helpfully.
 //!
 //! [`parse`], [`all_policies`] and [`help_table`] all derive from the one
 //! [`REGISTRY`] table below, so adding a policy really is one `impl` plus
@@ -71,6 +73,14 @@ pub static REGISTRY: &[RegistryEntry] = &[
         description: "Kernelet-style greedy pairing by combined-ratio distance to R_B",
         make: || Box::new(GreedyCoschedulePolicy),
     },
+    RegistryEntry {
+        name: "search",
+        aliases: &[],
+        description: "budgeted launch-order search: exact branch-and-bound for small windows, \
+                      anytime metaheuristics beyond (search[:<strategy>[:<evals>]], e.g. \
+                      search:anneal:7:5000 — see `crate::search`)",
+        make: || Box::new(crate::search::SearchPolicy::new()),
+    },
 ];
 
 /// Error returned for unknown policy spellings; its `Display` lists every
@@ -109,6 +119,38 @@ pub fn parse(s: &str) -> Result<Box<dyn LaunchPolicy>, PolicyParseError> {
             .ok()
             .map(|seed| Box::new(RandomPolicy::new(seed)) as Box<dyn LaunchPolicy>)
             .ok_or_else(|| PolicyParseError { input: s.into() });
+    }
+    if let Some(rest) = lower.strip_prefix("search:") {
+        // `search:<strategy>[:<evals>]`: the whole remainder is tried as
+        // a strategy spelling first (strategies carry their own `:<seed>`
+        // parameter), then with the last `:`-segment as an eval budget —
+        // so `search:anneal:7` is strategy `anneal:7` at the default
+        // budget and `search:anneal:7:5000` caps it at 5000 evaluations.
+        // Only *anytime* strategies are accepted here: a budget-capped
+        // parallel branch-and-bound is not run-to-run deterministic, and
+        // a launch policy must be (small windows still get exact bnb
+        // automatically, where the budget provably covers the tree).
+        use crate::search::{parse_strategy, SearchPolicy, DEFAULT_POLICY_EVALS};
+        // The *canonical* strategy spelling is stored (e.g. bare
+        // `local` → `local:0`, alias `sa:5` → `anneal:5`) so that
+        // `name()` — `search:<strategy>:<evals>` — reparses to the same
+        // policy instead of misreading a seedless spelling's budget as
+        // a seed.
+        let anytime = |sp: &str| {
+            parse_strategy(sp)
+                .ok()
+                .map(|st| st.name())
+                .filter(|name| name != "bnb")
+        };
+        if let Some(canonical) = anytime(rest) {
+            return Ok(Box::new(SearchPolicy::with(canonical, DEFAULT_POLICY_EVALS)));
+        }
+        if let Some((strat, evals)) = rest.rsplit_once(':') {
+            if let (Some(canonical), Ok(evals)) = (anytime(strat), evals.parse::<u64>()) {
+                return Ok(Box::new(SearchPolicy::with(canonical, evals)));
+            }
+        }
+        return Err(PolicyParseError { input: s.into() });
     }
     REGISTRY
         .iter()
@@ -161,6 +203,53 @@ mod tests {
             "algorithm1:strict",
         ] {
             assert!(parse(s).is_ok(), "{s}");
+        }
+    }
+
+    #[test]
+    fn search_spellings_parse() {
+        // Bare, with an anytime strategy (strategies carry their own
+        // `:<seed>`), and with a trailing eval budget.
+        for s in [
+            "search",
+            "search:anneal:7",
+            "search:local:0",
+            "search:anneal:7:5000",
+            "search:local:0:256",
+        ] {
+            let p = parse(s).unwrap_or_else(|e| panic!("{e}"));
+            assert!(p.name().starts_with("search:"), "{s} -> {}", p.name());
+        }
+        assert_eq!(parse("search:anneal:7:5000").unwrap().name(), "search:anneal:7:5000");
+        // Strategy without an explicit budget gets the default.
+        assert_eq!(
+            parse("search:anneal:7").unwrap().name(),
+            format!("search:anneal:7:{}", crate::search::DEFAULT_POLICY_EVALS)
+        );
+        // Seedless and alias spellings canonicalize, so every emitted
+        // name reparses to the *same* policy (a raw "search:local" name
+        // would otherwise read its budget suffix back as a seed).
+        let p = parse("search:local").unwrap();
+        assert_eq!(
+            p.name(),
+            format!("search:local:0:{}", crate::search::DEFAULT_POLICY_EVALS)
+        );
+        assert_eq!(parse(&p.name()).unwrap().name(), p.name());
+        assert_eq!(
+            parse("search:sa:5").unwrap().name(),
+            format!("search:anneal:5:{}", crate::search::DEFAULT_POLICY_EVALS)
+        );
+        // Unknown strategies, malformed budgets, and bnb (which is not
+        // anytime — a budget-capped parallel exact solve is not
+        // deterministic, so a policy may not request it) are rejected.
+        for s in [
+            "search:nope",
+            "search:anneal:x:y",
+            "search:",
+            "search:bnb",
+            "search:bnb:100",
+        ] {
+            assert!(parse(s).is_err(), "{s}");
         }
     }
 

@@ -1,0 +1,141 @@
+//! Seeded simulated annealing over launch orders.
+//!
+//! The state space is the set of permutations; a move either swaps two
+//! positions or shifts one kernel to another position (remove + insert —
+//! the insertion neighborhood matters because the fluid model's
+//! head-of-line blocking makes *where* a kernel sits in the dispatch
+//! stream, not just which kernels it is adjacent to, determine packing).
+//! Temperature follows a geometric schedule from 10 % of the warm-start
+//! makespan down to 10⁻⁴ of it across the evaluation budget.
+//!
+//! Warm start: Algorithm 1's order — the paper's greedy already sits
+//! above the 90th percentile, so annealing spends its budget improving a
+//! good order instead of escaping a random one. Every random choice
+//! comes from one [`SplitMix64`] stream, so `(seed, max_evals)` fully
+//! determines the incumbent trajectory.
+
+use super::{
+    BackendFactory, Incumbent, SearchBudget, SearchOutcome, SearchStrategy, DEFAULT_ANYTIME_EVALS,
+};
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::sched::reorder;
+use crate::util::SplitMix64;
+use std::time::Instant;
+
+/// Anytime simulated-annealing strategy (registry spelling
+/// `"anneal:<seed>"`).
+#[derive(Debug, Clone, Copy)]
+pub struct SimulatedAnnealing {
+    pub seed: u64,
+}
+
+impl SimulatedAnnealing {
+    pub fn new(seed: u64) -> Self {
+        SimulatedAnnealing { seed }
+    }
+}
+
+impl SearchStrategy for SimulatedAnnealing {
+    fn name(&self) -> String {
+        format!("anneal:{}", self.seed)
+    }
+
+    fn search(
+        &self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        make_backend: &BackendFactory,
+        budget: &SearchBudget,
+    ) -> SearchOutcome {
+        let t_start = Instant::now();
+        let n = kernels.len();
+        assert!(n >= 1, "empty workload");
+        let max_evals = budget.max_evals.unwrap_or(DEFAULT_ANYTIME_EVALS).max(1);
+        let deadline = budget.max_wall.map(|d| t_start + d);
+
+        let mut backend = make_backend();
+        let mut prepared = backend.prepare(gpu, kernels);
+        let mut rng = SplitMix64::new(self.seed);
+
+        let mut cur = reorder(gpu, kernels).order;
+        let mut t_cur = prepared.execute_order(&cur);
+        let mut evals = 1u64;
+        let mut inc = Incumbent::new();
+        inc.offer(evals, t_cur, &cur);
+
+        if t_cur.is_nan() || n < 2 {
+            return SearchOutcome {
+                strategy: self.name(),
+                best_ms: t_cur,
+                best_order: cur,
+                evals,
+                complete: false,
+                trajectory: inc.trajectory,
+                pruned_subtrees: 0,
+                wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            };
+        }
+
+        // Geometric cooling anchored to the warm start's scale.
+        let temp_hi = (0.10 * t_cur).max(f64::MIN_POSITIVE);
+        let temp_lo = (1e-4 * t_cur).max(f64::MIN_POSITIVE);
+        let mut cand = cur.clone();
+
+        while evals < max_evals {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    break;
+                }
+            }
+            cand.copy_from_slice(&cur);
+            if rng.below(2) == 0 {
+                // Swap two distinct positions.
+                let i = rng.below(n);
+                let mut j = rng.below(n - 1);
+                if j >= i {
+                    j += 1;
+                }
+                cand.swap(i, j);
+            } else {
+                // Shift: remove position i, reinsert at j. After the
+                // removal the vector holds n-1 elements, so j ∈ 0..n
+                // covers every position including "move to the end"
+                // (j may reproduce the current order; that burns one
+                // evaluation, which the budget accounts for).
+                let i = rng.below(n);
+                let j = rng.below(n);
+                let v = cand.remove(i);
+                cand.insert(j, v);
+            }
+
+            let t = prepared.execute_order(&cand);
+            evals += 1;
+            inc.offer(evals, t, &cand);
+
+            let progress = evals as f64 / max_evals as f64;
+            let temp = temp_hi * (temp_lo / temp_hi).powf(progress);
+            let accept = if t.is_nan() {
+                false
+            } else if t <= t_cur {
+                true
+            } else {
+                rng.next_f64() < ((t_cur - t) / temp).exp()
+            };
+            if accept {
+                std::mem::swap(&mut cur, &mut cand);
+                t_cur = t;
+            }
+        }
+
+        SearchOutcome {
+            strategy: self.name(),
+            best_ms: inc.best_ms,
+            best_order: inc.best_order,
+            evals,
+            complete: false,
+            trajectory: inc.trajectory,
+            pruned_subtrees: 0,
+            wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! Exact branch-and-bound over the checkpointed prefix tree.
+//!
+//! The solver walks the *same* lexicographic prefix tree as
+//! [`crate::perm::sweep`]'s checkpointed mode — one
+//! [`PreparedWorkload::checkpoint_push`] per internal node, the last two
+//! positions completed directly from the parent checkpoint — but before
+//! descending into a node it asks the backend for an admissible lower
+//! bound on every completion of that prefix
+//! ([`PreparedWorkload::suffix_lower_bound`]) and prunes the subtree when
+//! the bound exceeds the shared incumbent.
+//!
+//! # Exactness and determinism
+//!
+//! * Pruning requires `bound > incumbent · (1 + ε)` with ε = 1e-9: a
+//!   pruned subtree therefore contains no makespan below **or equal to**
+//!   the final optimum (the margin absorbs last-ulp rounding in bound
+//!   arithmetic), so the optimum *and* the full set of its bit-exact ties
+//!   are always visited. Merging per-task results with the sweep's
+//!   lexicographic tie-break then yields a result bit-identical to
+//!   exhaustive [`crate::perm::sweep`] — same `best_ms`, same
+//!   `best_order` — regardless of thread timing.
+//! * Evaluations are spread over the sweep's `n·(n-1)` first-two-position
+//!   prefix tasks via the work-stealing pool; the incumbent is a shared
+//!   atomic so a bound proven in one task prunes every other.
+//! * Under an exhausted [`SearchBudget`] the result degrades to a best
+//!   incumbent (`complete = false`); how far each task got then depends
+//!   on scheduling, so only unbudgeted runs are bit-reproducible.
+//!
+//! The warm start is Algorithm 1's order: the paper shows it lands above
+//! the 90th percentile, so the very first bound checks already prune
+//! against a near-optimal incumbent.
+
+use super::{improves, BackendFactory, IncumbentSample, SearchBudget, SearchOutcome, SearchStrategy};
+use crate::exec::PreparedWorkload;
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::perm::position_prefixes;
+use crate::sched::reorder;
+use crate::util::{default_threads, parallel_map};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Relative pruning margin: a subtree is cut only when its bound exceeds
+/// the incumbent by more than this factor, so ulp-level rounding in the
+/// bound arithmetic can never discard a bit-exact tie of the optimum.
+const PRUNE_MARGIN: f64 = 1e-9;
+
+/// Trees up to this size run as ONE sequential task (single backend,
+/// single prepared handle, no thread pool): at ≤ 6! + 1 evaluations the
+/// n·(n-1)-task parallel split would spend more on thread spawn/join and
+/// per-task `prepare` than on the search itself — this is the
+/// coordinator's per-batch path, where that overhead dominates. Results
+/// are identical either way (same tree, same tie-breaks).
+const SEQUENTIAL_MAX_N: usize = 6;
+
+/// Exact branch-and-bound launch-order solver (registry spelling
+/// `"bnb"`). See the module docs for the exactness argument.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BranchAndBound;
+
+/// Shared monotone-minimum incumbent (f64 bits in an `AtomicU64`).
+struct SharedIncumbent(AtomicU64);
+
+impl SharedIncumbent {
+    fn new(initial: f64) -> Self {
+        let v = if initial.is_nan() {
+            f64::INFINITY
+        } else {
+            initial
+        };
+        SharedIncumbent(AtomicU64::new(v.to_bits()))
+    }
+
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    fn offer(&self, t: f64) {
+        if t.is_nan() {
+            return;
+        }
+        let mut cur = self.0.load(Ordering::Relaxed);
+        while t < f64::from_bits(cur) {
+            match self
+                .0
+                .compare_exchange_weak(cur, t.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
+/// Per-task accumulator, merged with the sweep's lexicographic
+/// tie-breaks.
+struct Partial {
+    best_ms: f64,
+    best_order: Vec<usize>,
+    evals: u64,
+    pruned: u64,
+    stopped: bool,
+}
+
+impl Partial {
+    fn new() -> Self {
+        Partial {
+            best_ms: f64::INFINITY,
+            best_order: Vec::new(),
+            evals: 0,
+            pruned: 0,
+            stopped: false,
+        }
+    }
+
+    #[inline]
+    fn record(&mut self, t: f64, order: &[usize], incumbent: &SharedIncumbent) {
+        self.evals += 1;
+        if improves(t, order, self.best_ms, &self.best_order) {
+            self.best_ms = t;
+            self.best_order.clear();
+            self.best_order.extend_from_slice(order);
+        }
+        incumbent.offer(t);
+    }
+}
+
+/// Budget shared by every task.
+struct Limits {
+    evals: AtomicU64,
+    max_evals: u64,
+    deadline: Option<Instant>,
+}
+
+impl Limits {
+    /// Claim one evaluation; `false` once the budget is spent.
+    #[inline]
+    fn claim(&self) -> bool {
+        if self.evals.fetch_add(1, Ordering::Relaxed) >= self.max_evals {
+            return false;
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl SearchStrategy for BranchAndBound {
+    fn name(&self) -> String {
+        "bnb".into()
+    }
+
+    fn search(
+        &self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        make_backend: &BackendFactory,
+        budget: &SearchBudget,
+    ) -> SearchOutcome {
+        let t_start = Instant::now();
+        let n = kernels.len();
+        assert!(n >= 1, "empty workload");
+
+        // Warm start: Algorithm 1's order seeds the incumbent.
+        let seed_order = reorder(gpu, kernels).order;
+        let seed_ms = {
+            let mut b = make_backend();
+            b.prepare(gpu, kernels).execute_order(&seed_order)
+        };
+        let mut trajectory = vec![IncumbentSample {
+            eval: 1,
+            best_ms: seed_ms,
+        }];
+        if seed_ms.is_nan() {
+            // Unsimulable workload: nothing to search.
+            return SearchOutcome {
+                strategy: self.name(),
+                best_ms: f64::NAN,
+                best_order: seed_order,
+                evals: 1,
+                complete: false,
+                trajectory,
+                pruned_subtrees: 0,
+                wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            };
+        }
+
+        let incumbent = SharedIncumbent::new(seed_ms);
+        let limits = Limits {
+            evals: AtomicU64::new(1), // the warm start spent one
+            max_evals: budget.max_evals.unwrap_or(u64::MAX),
+            deadline: budget.max_wall.map(|d| t_start + d),
+        };
+
+        // One empty-prefix task (sequential, shared nothing) for small
+        // trees; the sweep's first-two-position split beyond.
+        let prefixes = if n <= SEQUENTIAL_MAX_N {
+            vec![Vec::new()]
+        } else {
+            position_prefixes(n)
+        };
+        let partials: Vec<Partial> = parallel_map(prefixes.len(), default_threads(), |pi| {
+            let mut backend = make_backend();
+            let mut p = Partial::new();
+            bnb_task(
+                gpu,
+                kernels,
+                backend.as_mut(),
+                &prefixes[pi],
+                &incumbent,
+                &limits,
+                &mut p,
+            );
+            p
+        });
+
+        let mut best_ms = seed_ms;
+        let mut best_order = seed_order;
+        let mut pruned = 0u64;
+        let mut stopped = false;
+        // Evaluations actually performed: the warm start plus each
+        // task's exact count. (The shared claim counter also ticks for
+        // *denied* claims — e.g. every task hitting a wall deadline — so
+        // it over-reports and is used for budget decisions only.)
+        let mut evals = 1u64;
+        for p in partials {
+            pruned += p.pruned;
+            stopped |= p.stopped;
+            evals += p.evals;
+            if improves(p.best_ms, &p.best_order, best_ms, &best_order) {
+                best_ms = p.best_ms;
+                best_order = p.best_order;
+            }
+        }
+        if best_ms < trajectory[0].best_ms {
+            trajectory.push(IncumbentSample { eval: evals, best_ms });
+        }
+        SearchOutcome {
+            strategy: self.name(),
+            best_ms,
+            best_order,
+            evals,
+            complete: !stopped,
+            trajectory,
+            pruned_subtrees: pruned,
+            wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}
+
+/// Solve one first-two-position prefix task.
+fn bnb_task(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    backend: &mut dyn crate::exec::ExecutionBackend,
+    prefix: &[usize],
+    incumbent: &SharedIncumbent,
+    limits: &Limits,
+    out: &mut Partial,
+) {
+    let n = kernels.len();
+    let mut prepared = backend.prepare(gpu, kernels);
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    order.extend_from_slice(prefix);
+
+    if !prepared.supports_checkpoints() {
+        // No checkpoints ⇒ no bounds either (`suffix_lower_bound` needs a
+        // prefix state): degrade to flat enumeration of this task's
+        // suffixes with incumbent tracking only.
+        let mut rest: Vec<usize> = (0..n).filter(|i| !prefix.contains(i)).collect();
+        if rest.is_empty() {
+            if limits.claim() {
+                let t = prepared.execute_order(&order);
+                out.record(t, &order, incumbent);
+            } else {
+                out.stopped = true;
+            }
+            return;
+        }
+        let plen = prefix.len();
+        // `for_each_permutation` cannot early-exit; skip the evaluation
+        // once the budget is gone (enumeration itself is cheap).
+        crate::perm::for_each_permutation(&mut rest, &mut |suffix| {
+            if out.stopped {
+                return;
+            }
+            if !limits.claim() {
+                out.stopped = true;
+                return;
+            }
+            order.truncate(plen);
+            order.extend_from_slice(suffix);
+            let t = prepared.execute_order(&order);
+            out.record(t, &order, incumbent);
+        });
+        return;
+    }
+
+    let mut used = vec![false; n];
+    for &k in prefix {
+        prepared.checkpoint_push(k);
+        used[k] = true;
+    }
+    let mut remaining_buf: Vec<usize> = Vec::with_capacity(n);
+    dfs(
+        prepared.as_mut(),
+        &mut used,
+        &mut order,
+        &mut remaining_buf,
+        n,
+        incumbent,
+        limits,
+        out,
+    );
+    for _ in prefix {
+        prepared.checkpoint_pop();
+    }
+}
+
+/// Depth-first descent: the caller has pushed checkpoints for every
+/// kernel in `order`.
+#[allow(clippy::too_many_arguments)]
+fn dfs(
+    prepared: &mut dyn PreparedWorkload,
+    used: &mut [bool],
+    order: &mut Vec<usize>,
+    remaining_buf: &mut Vec<usize>,
+    n: usize,
+    incumbent: &SharedIncumbent,
+    limits: &Limits,
+    out: &mut Partial,
+) {
+    if out.stopped {
+        return;
+    }
+    match n - order.len() {
+        0 => {
+            if !limits.claim() {
+                out.stopped = true;
+                return;
+            }
+            let t = prepared.execute_suffix(&[]);
+            out.record(t, order, incumbent);
+        }
+        1 => {
+            if !limits.claim() {
+                out.stopped = true;
+                return;
+            }
+            let k = used.iter().position(|u| !u).expect("one kernel left");
+            order.push(k);
+            let t = prepared.execute_suffix(&order[n - 1..]);
+            out.record(t, order, incumbent);
+            order.pop();
+        }
+        2 => {
+            let a = used.iter().position(|u| !u).expect("two kernels left");
+            let b = used[a + 1..]
+                .iter()
+                .position(|u| !u)
+                .map(|i| a + 1 + i)
+                .expect("two kernels left");
+            for (x, y) in [(a, b), (b, a)] {
+                if !limits.claim() {
+                    out.stopped = true;
+                    return;
+                }
+                order.push(x);
+                order.push(y);
+                let t = prepared.execute_suffix(&order[n - 2..]);
+                out.record(t, order, incumbent);
+                order.pop();
+                order.pop();
+            }
+        }
+        _ => {
+            // Bound check before descending: prune when no completion of
+            // this prefix can beat (or bit-exactly tie) the incumbent.
+            remaining_buf.clear();
+            remaining_buf.extend((0..n).filter(|&k| !used[k]));
+            let lb = prepared.suffix_lower_bound(remaining_buf);
+            if lb > incumbent.get() * (1.0 + PRUNE_MARGIN) {
+                out.pruned += 1;
+                return;
+            }
+            for k in 0..n {
+                if used[k] {
+                    continue;
+                }
+                used[k] = true;
+                order.push(k);
+                prepared.checkpoint_push(k);
+                dfs(
+                    prepared,
+                    used,
+                    order,
+                    remaining_buf,
+                    n,
+                    incumbent,
+                    limits,
+                    out,
+                );
+                prepared.checkpoint_pop();
+                order.pop();
+                used[k] = false;
+                if out.stopped {
+                    return;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! First-improvement local search over launch orders with seeded
+//! restarts.
+//!
+//! One descent scans the swap neighborhood (all position pairs), then
+//! the insertion neighborhood (move one kernel to another position),
+//! accepting the first strictly improving move and rescanning; a full
+//! pass with no improvement is a local optimum. The search then restarts
+//! from a seeded random shuffle and keeps the global incumbent, until
+//! the evaluation budget is spent.
+//!
+//! First-improvement (rather than best-improvement) is deliberate: under
+//! a fixed evaluation budget it converts more of the budget into
+//! accepted moves, which is what the anytime quality gate measures. The
+//! first descent starts from Algorithm 1's order; all randomness comes
+//! from one [`SplitMix64`] stream, so `(seed, max_evals)` fully
+//! determines the incumbent trajectory.
+
+use super::{
+    BackendFactory, Incumbent, SearchBudget, SearchOutcome, SearchStrategy, DEFAULT_ANYTIME_EVALS,
+};
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::sched::reorder;
+use crate::util::SplitMix64;
+use std::time::Instant;
+
+/// Anytime insertion/swap local-search strategy (registry spelling
+/// `"local:<seed>"`).
+#[derive(Debug, Clone, Copy)]
+pub struct LocalSearch {
+    pub seed: u64,
+}
+
+impl LocalSearch {
+    pub fn new(seed: u64) -> Self {
+        LocalSearch { seed }
+    }
+}
+
+impl SearchStrategy for LocalSearch {
+    fn name(&self) -> String {
+        format!("local:{}", self.seed)
+    }
+
+    fn search(
+        &self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        make_backend: &BackendFactory,
+        budget: &SearchBudget,
+    ) -> SearchOutcome {
+        let t_start = Instant::now();
+        let n = kernels.len();
+        assert!(n >= 1, "empty workload");
+        let max_evals = budget.max_evals.unwrap_or(DEFAULT_ANYTIME_EVALS).max(1);
+        let deadline = budget.max_wall.map(|d| t_start + d);
+        let out_of_time = || deadline.is_some_and(|d| Instant::now() >= d);
+
+        let mut backend = make_backend();
+        let mut prepared = backend.prepare(gpu, kernels);
+        let mut rng = SplitMix64::new(self.seed);
+
+        let mut cur = reorder(gpu, kernels).order;
+        let mut t_cur = prepared.execute_order(&cur);
+        let mut evals = 1u64;
+        let mut inc = Incumbent::new();
+        inc.offer(evals, t_cur, &cur);
+
+        if t_cur.is_nan() || n < 2 {
+            return SearchOutcome {
+                strategy: self.name(),
+                best_ms: t_cur,
+                best_order: cur,
+                evals,
+                complete: false,
+                trajectory: inc.trajectory,
+                pruned_subtrees: 0,
+                wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            };
+        }
+
+        let mut cand = cur.clone();
+        'search: while evals < max_evals && !out_of_time() {
+            // One first-improvement descent to a local optimum.
+            let mut improved = true;
+            while improved {
+                improved = false;
+                // Swap neighborhood.
+                'swaps: for i in 0..n - 1 {
+                    for j in i + 1..n {
+                        if evals >= max_evals || out_of_time() {
+                            break 'search;
+                        }
+                        cand.copy_from_slice(&cur);
+                        cand.swap(i, j);
+                        let t = prepared.execute_order(&cand);
+                        evals += 1;
+                        inc.offer(evals, t, &cand);
+                        if t < t_cur {
+                            cur.copy_from_slice(&cand);
+                            t_cur = t;
+                            improved = true;
+                            break 'swaps;
+                        }
+                    }
+                }
+                if improved {
+                    continue;
+                }
+                // Insertion neighborhood. After `remove(i)` the candidate
+                // has n-1 elements, so valid insert positions are 0..=n-1
+                // inclusive — iterating to n-1 keeps "move to the end"
+                // reachable.
+                'shifts: for i in 0..n {
+                    for j in 0..n {
+                        if evals >= max_evals || out_of_time() {
+                            break 'search;
+                        }
+                        cand.copy_from_slice(&cur);
+                        let v = cand.remove(i);
+                        cand.insert(j, v);
+                        if cand == cur {
+                            continue; // no-op shift
+                        }
+                        let t = prepared.execute_order(&cand);
+                        evals += 1;
+                        inc.offer(evals, t, &cand);
+                        if t < t_cur {
+                            cur.copy_from_slice(&cand);
+                            t_cur = t;
+                            improved = true;
+                            break 'shifts;
+                        }
+                    }
+                }
+            }
+            // Local optimum: seeded restart.
+            if evals >= max_evals {
+                break;
+            }
+            rng.shuffle(&mut cur);
+            t_cur = prepared.execute_order(&cur);
+            evals += 1;
+            inc.offer(evals, t_cur, &cur);
+        }
+
+        SearchOutcome {
+            strategy: self.name(),
+            best_ms: inc.best_ms,
+            best_order: inc.best_order,
+            evals,
+            complete: false,
+            trajectory: inc.trajectory,
+            pruned_subtrees: 0,
+            wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}

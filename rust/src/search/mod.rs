@@ -1,0 +1,528 @@
+//! Launch-order **search** — finding good orders when `n!` is out of
+//! reach.
+//!
+//! [`crate::perm::sweep`] answers "what does the whole permutation space
+//! look like", but the factorial wall lands near n = 12 even on the
+//! checkpointed hot path. Real reorder windows (shared-cloud streams,
+//! irregular kernel graphs) hold dozens of pending kernels, so this
+//! module treats order selection as a *search problem* over the same
+//! evaluation engine the sweeps use — [`crate::exec::PreparedWorkload`]
+//! with prefix checkpointing — behind one trait:
+//!
+//! * [`BranchAndBound`] (`"bnb"`) — exact. Walks the same lexicographic
+//!   prefix tree as the checkpointed sweep but prunes every subtree
+//!   whose admissible lower bound
+//!   ([`crate::exec::PreparedWorkload::suffix_lower_bound`], derived
+//!   from the fluid model's residual-work / occupancy / bandwidth
+//!   invariants) exceeds the incumbent. Bit-identical optima to
+//!   [`crate::perm::sweep`] — including the lexicographic tie-break on
+//!   the optimal order — at a fraction of the evaluations; practical to
+//!   n ≈ 16–20 where enumeration is impossible.
+//! * [`SimulatedAnnealing`] (`"anneal:<seed>"`) — anytime. Seeded
+//!   swap/shift moves over launch orders under a geometric cooling
+//!   schedule, warm-started from Algorithm 1's order.
+//! * [`LocalSearch`] (`"local:<seed>"`) — anytime. First-improvement
+//!   descent over the swap + insertion neighborhoods with seeded random
+//!   restarts at local optima.
+//!
+//! Every strategy consumes a [`SearchBudget`] (evaluations and/or wall
+//! time) and reports a [`SearchOutcome`] carrying the incumbent
+//! **trajectory** — each improvement stamped with its evaluation index —
+//! so an anytime result is reproducible from `(seed, budget)` alone and
+//! quality-vs-budget curves fall out of one run
+//! (`benches/search_quality.rs` gates them in CI).
+//!
+//! Spellings mirror [`crate::sched::registry`]: [`parse_strategy`] maps
+//! `"bnb"`, `"anneal:7"`, `"local:3"` onto trait objects, and the
+//! [`SearchPolicy`] launch policy (registry spelling
+//! `"search[:<strategy>[:<budget>]]"`) lets the coordinator delegate
+//! ordering to budgeted search: exact for small windows, anytime beyond
+//! [`SearchPolicy::exact_max_n`].
+
+mod anneal;
+mod bnb;
+mod local;
+
+pub use anneal::SimulatedAnnealing;
+pub use bnb::BranchAndBound;
+pub use local::LocalSearch;
+
+use crate::exec::{ExecutionBackend, SimulatorBackend};
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::sched::LaunchPolicy;
+use std::time::Duration;
+
+/// Backend factory shared by search strategies (one backend per worker,
+/// exactly like [`crate::perm::sweep_with`]).
+pub type BackendFactory = dyn Fn() -> Box<dyn ExecutionBackend> + Sync;
+
+/// How much work a search run may spend. Both limits are optional; when
+/// both are `None` the strategy runs to its natural completion (exact
+/// strategies prove optimality, anytime strategies fall back to their
+/// default evaluation budget).
+///
+/// Evaluation budgets are the *reproducible* limit: a strategy driven by
+/// `(seed, max_evals)` alone yields a bit-identical
+/// [`SearchOutcome::trajectory`] on every run. Wall-clock budgets are for
+/// production latency caps and make trajectories machine-dependent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SearchBudget {
+    /// Maximum number of order evaluations (calls into the prepared
+    /// workload), counted across all worker threads.
+    pub max_evals: Option<u64>,
+    /// Maximum wall-clock time.
+    pub max_wall: Option<Duration>,
+}
+
+impl SearchBudget {
+    /// Evaluation-count budget (the reproducible kind).
+    pub fn evals(n: u64) -> Self {
+        SearchBudget {
+            max_evals: Some(n),
+            max_wall: None,
+        }
+    }
+
+    /// No limits: exact strategies prove optimality, anytime strategies
+    /// use their default evaluation budget.
+    pub fn unlimited() -> Self {
+        SearchBudget {
+            max_evals: None,
+            max_wall: None,
+        }
+    }
+
+    /// Add a wall-clock cap to this budget.
+    pub fn with_wall(mut self, d: Duration) -> Self {
+        self.max_wall = Some(d);
+        self
+    }
+}
+
+impl Default for SearchBudget {
+    /// 10 000 evaluations — the budget the CI quality gate holds anytime
+    /// strategies to (`benches/search_quality.rs`).
+    fn default() -> Self {
+        SearchBudget::evals(DEFAULT_ANYTIME_EVALS)
+    }
+}
+
+/// Default evaluation budget for anytime strategies when none is given.
+pub const DEFAULT_ANYTIME_EVALS: u64 = 10_000;
+
+/// One incumbent improvement: after `eval` evaluations the best-known
+/// makespan dropped to `best_ms`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IncumbentSample {
+    pub eval: u64,
+    pub best_ms: f64,
+}
+
+/// What a search run found.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// The strategy's registry spelling (e.g. `"anneal:7"`).
+    pub strategy: String,
+    /// Best makespan found (`NaN` if the workload is unsimulable).
+    pub best_ms: f64,
+    /// The order achieving it — always a permutation of the workload.
+    pub best_order: Vec<usize>,
+    /// Order evaluations actually spent.
+    pub evals: u64,
+    /// `true` iff the result is *provably optimal* (branch-and-bound ran
+    /// to completion without exhausting its budget). Anytime strategies
+    /// always report `false`.
+    pub complete: bool,
+    /// Incumbent improvements in evaluation order. Deterministic for the
+    /// seeded anytime strategies under an evaluation budget; for the
+    /// parallel exact solver only the final entry is meaningful.
+    pub trajectory: Vec<IncumbentSample>,
+    /// Subtrees cut by the admissible bound (exact solver only; anytime
+    /// strategies report 0).
+    pub pruned_subtrees: u64,
+    /// Wall-clock time of the whole search (reporting only — never
+    /// compare for determinism).
+    pub wall_ms: f64,
+}
+
+/// A launch-order search strategy over one workload.
+///
+/// Implementations evaluate orders exclusively through
+/// [`crate::exec::ExecutionBackend::prepare`] handles built from
+/// `make_backend`, so any substrate that implements the prepared seam —
+/// including checkpoint-free ones — is searchable.
+pub trait SearchStrategy: Send + Sync {
+    /// Registry spelling (accepted back by [`parse_strategy`]).
+    fn name(&self) -> String;
+
+    /// Search for a good launch order within `budget`.
+    fn search(
+        &self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        make_backend: &BackendFactory,
+        budget: &SearchBudget,
+    ) -> SearchOutcome;
+}
+
+/// The sweep's exact incumbent predicate — a strictly better makespan,
+/// or a bit-exact tie broken toward the lexicographically smaller
+/// order. Every search path (anytime incumbents, branch-and-bound
+/// per-task bests, the parallel merge) must share this one definition:
+/// bnb's bit-identity to [`crate::perm::sweep`] depends on the
+/// tie-break never drifting between copies. NaN never improves.
+#[inline]
+pub(crate) fn improves(t_ms: f64, order: &[usize], best_ms: f64, best_order: &[usize]) -> bool {
+    t_ms < best_ms || (t_ms == best_ms && order < best_order)
+}
+
+/// Sequential incumbent tracker shared by the anytime strategies: exact
+/// lexicographic tie-breaks (identical to [`crate::perm::sweep`]) and
+/// improvement-trajectory recording.
+pub(crate) struct Incumbent {
+    pub best_ms: f64,
+    pub best_order: Vec<usize>,
+    pub trajectory: Vec<IncumbentSample>,
+}
+
+impl Default for Incumbent {
+    fn default() -> Self {
+        Incumbent::new()
+    }
+}
+
+impl Incumbent {
+    pub fn new() -> Self {
+        Incumbent {
+            best_ms: f64::INFINITY,
+            best_order: Vec::new(),
+            trajectory: Vec::new(),
+        }
+    }
+
+    /// Fold one evaluated order in. NaN (unsimulable) never wins.
+    pub fn offer(&mut self, eval: u64, t_ms: f64, order: &[usize]) {
+        if improves(t_ms, order, self.best_ms, &self.best_order) {
+            let improved = t_ms < self.best_ms;
+            self.best_ms = t_ms;
+            self.best_order.clear();
+            self.best_order.extend_from_slice(order);
+            if improved {
+                self.trajectory.push(IncumbentSample {
+                    eval,
+                    best_ms: t_ms,
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strategy registry (mirrors sched::registry)
+// ---------------------------------------------------------------------------
+
+/// One registered strategy: canonical spelling, aliases, description and
+/// constructor (seeded spellings use seed 0 here; [`parse_strategy`]
+/// handles the `:<seed>` parameter directly).
+pub struct StrategyEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub description: &'static str,
+    make: fn() -> Box<dyn SearchStrategy>,
+}
+
+/// The strategy registry — single source of truth for spellings.
+pub static STRATEGIES: &[StrategyEntry] = &[
+    StrategyEntry {
+        name: "bnb",
+        aliases: &["exact", "branch-and-bound"],
+        description: "exact branch-and-bound over the checkpointed prefix tree (provably optimal)",
+        make: || Box::new(BranchAndBound),
+    },
+    StrategyEntry {
+        name: "anneal:<seed>",
+        aliases: &["sa:<seed>"],
+        description: "anytime seeded simulated annealing (swap/shift moves, geometric cooling)",
+        make: || Box::new(SimulatedAnnealing::new(0)),
+    },
+    StrategyEntry {
+        name: "local:<seed>",
+        aliases: &["ls:<seed>"],
+        description: "anytime first-improvement swap/insertion local search with seeded restarts",
+        make: || Box::new(LocalSearch::new(0)),
+    },
+];
+
+/// Error for unknown strategy spellings; `Display` lists the valid names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StrategyParseError {
+    pub input: String,
+}
+
+impl std::fmt::Display for StrategyParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names: Vec<&str> = STRATEGIES.iter().map(|e| e.name).collect();
+        write!(
+            f,
+            "unknown search strategy `{}` — valid strategies: {}",
+            self.input,
+            names.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for StrategyParseError {}
+
+/// Parse a strategy spelling into a trait object.
+///
+/// ```
+/// let s = kreorder::search::parse_strategy("anneal:42").unwrap();
+/// assert_eq!(s.name(), "anneal:42");
+/// assert!(kreorder::search::parse_strategy("nope").is_err());
+/// ```
+pub fn parse_strategy(s: &str) -> Result<Box<dyn SearchStrategy>, StrategyParseError> {
+    let lower = s.to_ascii_lowercase();
+    let err = || StrategyParseError { input: s.into() };
+    let (head, param) = match lower.split_once(':') {
+        Some((h, p)) => (h, Some(p)),
+        None => (lower.as_str(), None),
+    };
+    let seed = |p: Option<&str>| -> Result<u64, StrategyParseError> {
+        match p {
+            None => Ok(0),
+            Some(x) => x.parse().map_err(|_| err()),
+        }
+    };
+    match head {
+        "bnb" | "exact" | "branch-and-bound" if param.is_none() => Ok(Box::new(BranchAndBound)),
+        "anneal" | "sa" => Ok(Box::new(SimulatedAnnealing::new(seed(param)?))),
+        "local" | "ls" => Ok(Box::new(LocalSearch::new(seed(param)?))),
+        _ => Err(err()),
+    }
+}
+
+/// One representative instance of every registered strategy (seeded
+/// strategies use seed 0).
+pub fn all_strategies() -> Vec<Box<dyn SearchStrategy>> {
+    STRATEGIES.iter().map(|e| (e.make)()).collect()
+}
+
+/// Human-readable registry table (one line per strategy).
+pub fn strategy_help_table() -> String {
+    let mut out = String::new();
+    for e in STRATEGIES {
+        let alias_note = if e.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", e.aliases.join(", "))
+        };
+        out.push_str(&format!("  {:<20} {}{alias_note}\n", e.name, e.description));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator integration: search as a launch policy
+// ---------------------------------------------------------------------------
+
+/// Default evaluation budget for [`SearchPolicy`] — small enough that a
+/// per-batch search stays in the coordinator's latency envelope, large
+/// enough that the exact path (n ≤ [`SearchPolicy::exact_max_n`], whose
+/// full tree is 5! + 1 = 121 evaluations) always runs to completion.
+/// Past the cap the incumbent is still at least as good as the
+/// Algorithm 1 warm start.
+pub const DEFAULT_POLICY_EVALS: u64 = 256;
+
+/// A [`LaunchPolicy`] that delegates order selection to budgeted search
+/// on the simulator model: exact branch-and-bound for windows of up to
+/// [`SearchPolicy::exact_max_n`] kernels, the configured anytime
+/// strategy beyond that. Registry spelling:
+/// `search[:<strategy>[:<budget-evals>]]` (e.g. `search:anneal:7:5000`).
+#[derive(Debug, Clone)]
+pub struct SearchPolicy {
+    /// Anytime strategy spelling used for windows larger than
+    /// `exact_max_n` (e.g. `"local:0"`, `"anneal:7"`).
+    pub strategy: String,
+    /// Evaluation budget per batch.
+    pub budget_evals: u64,
+    /// Window sizes up to this run exact branch-and-bound instead. The
+    /// default (5) is the largest n whose full tree (n! + warm start)
+    /// provably fits the default budget, so the exact path always runs
+    /// to completion — a budget-exhausted *parallel* solve is not
+    /// bit-reproducible, and a policy must be deterministic.
+    pub exact_max_n: usize,
+}
+
+impl SearchPolicy {
+    pub fn new() -> Self {
+        SearchPolicy {
+            strategy: "local:0".into(),
+            budget_evals: DEFAULT_POLICY_EVALS,
+            exact_max_n: 5,
+        }
+    }
+
+    /// Policy with an explicit anytime strategy and evaluation budget.
+    /// The spelling is validated at parse time by
+    /// [`crate::sched::registry::parse`]; an invalid spelling here makes
+    /// [`SearchPolicy::order`] fall back to the warm-start order.
+    pub fn with(strategy: impl Into<String>, budget_evals: u64) -> Self {
+        SearchPolicy {
+            strategy: strategy.into(),
+            budget_evals,
+            exact_max_n: 5,
+        }
+    }
+}
+
+impl Default for SearchPolicy {
+    fn default() -> Self {
+        SearchPolicy::new()
+    }
+}
+
+/// `n! + 1` (the exact solver's worst-case evaluation count for `n`
+/// kernels, warm start included), or `None` on overflow.
+fn exact_tree_evals(n: usize) -> Option<u64> {
+    let mut f: u64 = 1;
+    for i in 2..=n as u64 {
+        f = f.checked_mul(i)?;
+    }
+    f.checked_add(1)
+}
+
+impl LaunchPolicy for SearchPolicy {
+    fn name(&self) -> String {
+        format!("search:{}:{}", self.strategy, self.budget_evals)
+    }
+
+    fn order(&self, gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+        let n = kernels.len();
+        if n <= 1 {
+            return (0..n).collect();
+        }
+        let factory: &BackendFactory = &|| Box::new(SimulatorBackend::new());
+        let budget = SearchBudget::evals(self.budget_evals);
+        // The exact path runs only when the budget provably covers the
+        // whole tree: a budget-exhausted *parallel* branch-and-bound is
+        // not run-to-run deterministic, and a policy must be.
+        let exact_ok = n <= self.exact_max_n
+            && exact_tree_evals(n).is_some_and(|need| need <= self.budget_evals);
+        let outcome = if exact_ok {
+            BranchAndBound.search(gpu, kernels, factory, &budget)
+        } else {
+            match parse_strategy(&self.strategy) {
+                // Same determinism rule for directly-constructed
+                // policies: only anytime strategies may run budgeted.
+                Ok(s) if s.name() != "bnb" => s.search(gpu, kernels, factory, &budget),
+                // Invalid or non-anytime strategy spellings (the
+                // registry rejects these at parse time): degrade to the
+                // greedy order rather than panic inside the coordinator.
+                _ => return crate::sched::reorder(gpu, kernels).order,
+            }
+        };
+        if outcome.best_order.len() == n {
+            outcome.best_order
+        } else {
+            (0..n).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::scenario_by_id;
+
+    #[test]
+    fn every_registry_spelling_parses() {
+        for s in [
+            "bnb",
+            "exact",
+            "branch-and-bound",
+            "anneal",
+            "anneal:42",
+            "sa:7",
+            "local",
+            "local:3",
+            "ls:0",
+            "BNB",
+            "Anneal:5",
+        ] {
+            assert!(parse_strategy(s).is_ok(), "{s}");
+        }
+    }
+
+    #[test]
+    fn bad_spellings_error_and_list_names() {
+        for s in ["nope", "anneal:x", "local:", "bnb:3"] {
+            let err = parse_strategy(s).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(s), "{msg}");
+            for name in ["bnb", "anneal:<seed>", "local:<seed>"] {
+                assert!(msg.contains(name), "missing {name} in: {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for s in all_strategies() {
+            let reparsed = parse_strategy(&s.name()).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(reparsed.name(), s.name());
+        }
+        assert_eq!(parse_strategy("sa:9").unwrap().name(), "anneal:9");
+        assert_eq!(parse_strategy("ls:9").unwrap().name(), "local:9");
+    }
+
+    #[test]
+    fn help_table_covers_registry() {
+        let t = strategy_help_table();
+        for e in STRATEGIES {
+            assert!(t.contains(e.name));
+        }
+    }
+
+    #[test]
+    fn search_policy_emits_permutation_on_both_paths() {
+        let gpu = crate::gpu::GpuSpec::gtx580();
+        let policy = SearchPolicy::with("local:1", 200);
+        // Exact path (n ≤ exact_max_n) …
+        let small = scenario_by_id("uniform").unwrap().workload(&gpu, 5, 3);
+        let order = policy.order(&gpu, &small);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..5).collect::<Vec<_>>());
+        // … and the anytime path.
+        let large = scenario_by_id("uniform").unwrap().workload(&gpu, 9, 3);
+        let order = policy.order(&gpu, &large);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn search_policy_never_runs_nondeterministic_bnb() {
+        let gpu = crate::gpu::GpuSpec::gtx580();
+        // A directly-constructed bnb strategy (the registry rejects the
+        // spelling) degrades to the deterministic greedy order instead
+        // of running a budget-capped parallel solve.
+        let ks = scenario_by_id("uniform").unwrap().workload(&gpu, 8, 1);
+        let p = SearchPolicy::with("bnb", 100);
+        assert_eq!(p.order(&gpu, &ks), crate::sched::reorder(&gpu, &ks).order);
+        // A budget below the exact tree (5! + 1 = 121) routes even a
+        // small window to the sequential anytime strategy; two runs must
+        // agree exactly.
+        let small = scenario_by_id("uniform").unwrap().workload(&gpu, 5, 1);
+        let p = SearchPolicy::with("local:0", 50);
+        assert_eq!(p.order(&gpu, &small), p.order(&gpu, &small));
+    }
+
+    #[test]
+    fn search_policy_name_spells_its_config() {
+        assert_eq!(
+            SearchPolicy::with("anneal:7", 500).name(),
+            "search:anneal:7:500"
+        );
+    }
+}

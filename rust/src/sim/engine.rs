@@ -217,6 +217,18 @@ pub struct SimState {
     /// `k` (kernel-major, precomputed once).
     work_offsets: Vec<usize>,
     works: Vec<f64>,
+    // ---- per-kernel lower-bound constants (see suffix_lower_bound) ----
+    /// Total jittered compute work of each kernel's grid.
+    bound_work: Vec<f64>,
+    /// Total memory traffic of each kernel's grid (jittered work × 1/R).
+    bound_mem: Vec<f64>,
+    /// Occupancy-capped aggregate progress rate of each kernel running
+    /// alone: `n_sm · C · min(1, m_max · w / warps_to_saturate)` where
+    /// `m_max` is the kernel's solo blocks-per-SM occupancy limit.
+    bound_occ_rate: Vec<f64>,
+    /// Fastest possible single-block completion: the heaviest block's
+    /// work over the best per-block rate `C · w / max(w, saturate)`.
+    bound_block_floor: Vec<f64>,
     // ---- mutable fluid state ----
     t: f64,
     n_events: usize,
@@ -278,6 +290,35 @@ impl SimState {
             work_offsets.push(works.len());
         }
 
+        // Admissible-bound constants: everything here must *under*-state
+        // how fast the fluid model can retire work (see
+        // [`SimState::suffix_lower_bound`] for the admissibility proofs).
+        let saturate = gpu.warps_to_saturate as f64;
+        let peak_per_sm = gpu.compute_rate_per_sm;
+        let mut bound_work = Vec::with_capacity(kernels.len());
+        let mut bound_mem = Vec::with_capacity(kernels.len());
+        let mut bound_occ_rate = Vec::with_capacity(kernels.len());
+        let mut bound_block_floor = Vec::with_capacity(kernels.len());
+        for (k, prof) in kernels.iter().enumerate() {
+            let blocks = &works[work_offsets[k]..work_offsets[k + 1]];
+            let total: f64 = blocks.iter().sum();
+            let heaviest = blocks.iter().copied().fold(0.0f64, f64::max);
+            bound_work.push(total);
+            bound_mem.push(total * consts[k].mem_per_work);
+            let w = prof.warps_per_block as f64;
+            if w > 0.0 {
+                let m_max = prof.max_blocks_per_sm(gpu) as f64;
+                let phi = (m_max * w / saturate).min(1.0);
+                bound_occ_rate.push((gpu.n_sm as f64 * peak_per_sm * phi).max(f64::MIN_POSITIVE));
+                bound_block_floor.push(heaviest * w.max(saturate) / (peak_per_sm * w));
+            } else {
+                // Degenerate zero-warp kernel: claim nothing beyond the
+                // aggregate peak (weak but still admissible).
+                bound_occ_rate.push(gpu.n_sm as f64 * peak_per_sm);
+                bound_block_floor.push(0.0);
+            }
+        }
+
         let n = kernels.len();
         let n_sm = gpu.n_sm as usize;
         let resident_cap = n_sm * gpu.blocks_per_sm as usize;
@@ -293,6 +334,10 @@ impl SimState {
             blocks_total,
             work_offsets,
             works,
+            bound_work,
+            bound_mem,
+            bound_occ_rate,
+            bound_block_floor,
             t: 0.0,
             n_events: 0,
             dispatch_stalls: 0,
@@ -415,6 +460,51 @@ impl SimState {
         self.order_buf.extend_from_slice(suffix);
         self.run_to_completion();
         self.t
+    }
+
+    /// Admissible lower bound on [`SimState::finish_with`] over **every**
+    /// permutation of `remaining` — the branch-and-bound pruning bound.
+    ///
+    /// Reads the top checkpoint (taken at time `t₀`, the instant the
+    /// prefix's last block was dispatched) without touching the working
+    /// state, and combines three fluid-model invariants, each of which no
+    /// completion order can beat:
+    ///
+    /// * **Aggregate work** — residual compute work (leftover work of
+    ///   resident prefix blocks + the whole grids of `remaining`) drains
+    ///   at ≤ `n_sm · C` GPU-wide, because each SM's processor-sharing
+    ///   rates sum to `C · warps / max(warps, saturate) ≤ C`.
+    /// * **Aggregate memory** — residual traffic drains at ≤ the global
+    ///   bandwidth pool `B` (max-min fair allocation never over-grants).
+    /// * **Per-kernel occupancy** — a remaining kernel `k` dispatches no
+    ///   earlier than `t₀` (dispatch is strictly in launch order), and its
+    ///   own grid progresses at ≤ `n_sm · C · min(1, m_max·w/saturate)`
+    ///   (its solo occupancy cap; co-residents only slow it down), nor can
+    ///   it finish before its heaviest single block runs at the best
+    ///   per-block rate `C · w / max(w, saturate)`.
+    ///
+    /// Allocation-free and `O(resident + remaining)`.
+    pub fn suffix_lower_bound(&self, remaining: &[usize]) -> f64 {
+        let snap = &self.snapshots[self.depth.saturating_sub(1)];
+        let t0 = snap.t;
+        let mut work_rem = 0.0f64;
+        let mut mem_rem = 0.0f64;
+        for b in &snap.resident {
+            let kc = &self.consts[b.kernel as usize];
+            work_rem += b.rem_work;
+            mem_rem += b.rem_work * kc.mem_per_work;
+        }
+        let mut per_kernel = 0.0f64;
+        for &k in remaining {
+            work_rem += self.bound_work[k];
+            mem_rem += self.bound_mem[k];
+            let solo =
+                (self.bound_work[k] / self.bound_occ_rate[k]).max(self.bound_block_floor[k]);
+            per_kernel = per_kernel.max(solo);
+        }
+        let peak = self.compute_rate_per_sm * self.n_sm as f64;
+        let aggregate = (work_rem / peak).max(mem_rem / self.bandwidth);
+        t0 + aggregate.max(per_kernel)
     }
 
     // ---- internals -------------------------------------------------------
@@ -928,6 +1018,49 @@ mod tests {
             state.pop_prefix_kernel();
         }
         assert_eq!(state.prefix_len(), 0);
+    }
+
+    #[test]
+    fn suffix_lower_bound_never_exceeds_any_completion() {
+        // Admissibility pin: the branch-and-bound pruning bound must be ≤
+        // the makespan of *every* way of completing the prefix. Checked
+        // exhaustively over all prefixes of a 5-kernel workload.
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 16, 4, 8192, 3.11, 800.0),
+            kernel("b", 32, 8, 0, 11.1, 400.0),
+            kernel("c", 48, 6, 16384, 2.0, 300.0),
+            kernel("d", 12, 16, 0, 1.0, 600.0),
+            kernel("e", 16, 24, 24576, 5.0, 900.0),
+        ];
+        let n = ks.len();
+        let mut state = SimState::new(&gpu, &ks);
+
+        fn check(state: &mut SimState, prefix: &mut Vec<usize>, n: usize) {
+            let remaining: Vec<usize> = (0..n).filter(|k| !prefix.contains(k)).collect();
+            let lb = state.suffix_lower_bound(&remaining);
+            // Every completion of this prefix must respect the bound.
+            let mut rest = remaining.clone();
+            crate::perm::for_each_permutation(&mut rest, &mut |suffix| {
+                let t = state.finish_with(suffix);
+                assert!(
+                    lb <= t * (1.0 + 1e-9),
+                    "prefix {prefix:?} suffix {suffix:?}: bound {lb} > makespan {t}"
+                );
+            });
+            if remaining.is_empty() {
+                let t = state.finish_with(&[]);
+                assert!(lb <= t * (1.0 + 1e-9));
+            }
+            for &k in &remaining {
+                state.push_prefix_kernel(k);
+                prefix.push(k);
+                check(state, prefix, n);
+                prefix.pop();
+                state.pop_prefix_kernel();
+            }
+        }
+        check(&mut state, &mut Vec::new(), n);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! The paper's experiment workloads (Table 2) and a seeded synthetic
-//! workload generator.
+//! The paper's experiment workloads (Table 2), a seeded synthetic
+//! workload generator, and named [`Scenario`] families for the search
+//! subsystem's quality gates (see `scenarios`).
 //!
 //! Parameter notes (Table 2, GTX580):
 //!
@@ -16,6 +17,7 @@
 
 mod apps;
 mod experiments;
+mod scenarios;
 mod synthetic;
 
 pub use apps::{blackscholes, electrostatics, ep, smith_waterman};
@@ -23,6 +25,7 @@ pub use experiments::{
     all_experiments, bs_6_blk, by_id, ep_6_grid, ep_6_shm, epbs_6, epbs_6_shm, epbsessw_8,
     Experiment,
 };
+pub use scenarios::{all_scenarios, scenario_by_id, Scenario, SCENARIOS};
 pub use synthetic::synthetic_workload;
 
 #[cfg(test)]

@@ -1,0 +1,317 @@
+//! Named scenario families — diverse, seeded workload generators beyond
+//! the paper's six fixed experiments.
+//!
+//! The paper evaluates hand-built 6–8 kernel mixes; the search subsystem
+//! and its CI quality gates need *families* of workloads whose structure
+//! stresses different parts of the model at any `n`:
+//!
+//! | id | stress |
+//! |---|---|
+//! | `uniform` | baseline synthetic mix (log-uniform ratios, mixed occupancy) |
+//! | `skewed` | heavy-tailed durations: ~20 % dominant kernels among light ones |
+//! | `complementary` | memory-bound shmem hogs paired with compute-bound warp hogs |
+//! | `small-large` | many near-trivial kernels hiding a few SM-filling giants |
+//! | `mixed` | multi-device-style stream: each kernel drawn from a random family |
+//!
+//! Every generated kernel passes [`crate::sim::validate_workload`]
+//! (pinned by tests across seeds and sizes), and equal `(family, n,
+//! seed)` always produces the identical workload, so search results and
+//! bench gates are reproducible.
+
+use super::synthetic_workload;
+use crate::gpu::{AppKind, GpuSpec, KernelProfile};
+use crate::util::SplitMix64;
+
+/// One named workload family.
+pub struct Scenario {
+    /// Stable spelling used by the CLI and benches (e.g. `"skewed"`).
+    pub id: &'static str,
+    pub description: &'static str,
+    gen: fn(&GpuSpec, usize, u64) -> Vec<KernelProfile>,
+}
+
+impl Scenario {
+    /// Generate this family's workload of `n` kernels. Deterministic per
+    /// `(n, seed)`.
+    pub fn workload(&self, gpu: &GpuSpec, n: usize, seed: u64) -> Vec<KernelProfile> {
+        (self.gen)(gpu, n, seed)
+    }
+}
+
+/// The scenario registry.
+pub static SCENARIOS: &[Scenario] = &[
+    Scenario {
+        id: "uniform",
+        description: "baseline synthetic mix (log-uniform ratios, mixed occupancy)",
+        gen: gen_uniform,
+    },
+    Scenario {
+        id: "skewed",
+        description: "heavy-tailed durations: a few dominant kernels among many light ones",
+        gen: gen_skewed,
+    },
+    Scenario {
+        id: "complementary",
+        description: "resource-complementary pairs: memory-bound shmem hogs + compute warp hogs",
+        gen: gen_complementary,
+    },
+    Scenario {
+        id: "small-large",
+        description: "many small kernels hiding a few SM-filling giants",
+        gen: gen_small_large,
+    },
+    Scenario {
+        id: "mixed",
+        description: "multi-device style stream: every kernel drawn from a random family",
+        gen: gen_mixed,
+    },
+];
+
+/// All registered scenario families.
+pub fn all_scenarios() -> &'static [Scenario] {
+    SCENARIOS
+}
+
+/// Look a family up by its `id` spelling.
+pub fn scenario_by_id(id: &str) -> Option<&'static Scenario> {
+    SCENARIOS.iter().find(|s| s.id.eq_ignore_ascii_case(id))
+}
+
+fn gen_uniform(gpu: &GpuSpec, n: usize, seed: u64) -> Vec<KernelProfile> {
+    synthetic_workload(gpu, n, seed)
+}
+
+/// Log-uniform ratio across the memory/compute divide (shared by several
+/// families).
+fn draw_ratio(gpu: &GpuSpec, rng: &mut SplitMix64, lo: f64, hi_mult: f64) -> f64 {
+    let log_lo = lo.ln();
+    let log_hi = (gpu.balanced_ratio * hi_mult).ln();
+    (log_lo + (log_hi - log_lo) * rng.next_f64()).exp()
+}
+
+fn gen_skewed(gpu: &GpuSpec, n: usize, seed: u64) -> Vec<KernelProfile> {
+    let mut rng = SplitMix64::new(seed ^ 0x5EED_0002);
+    (0..n)
+        .map(|i| {
+            // ~1 in 5 kernels dominates the runtime by 1–2 orders of
+            // magnitude: the order then hinges on what runs beside them.
+            let heavy = rng.next_f64() < 0.2 || (i == 0 && n >= 4);
+            let work = if heavy {
+                rng.range_f64(30_000.0, 120_000.0)
+            } else {
+                rng.range_f64(500.0, 4_000.0)
+            };
+            let warps = 2 + rng.below(12) as u32;
+            let shmem = if rng.next_f64() < 0.3 {
+                (1 + rng.below(4) as u32) * 4096
+            } else {
+                0
+            };
+            KernelProfile {
+                name: format!("SKW#{i}{}", if heavy { "-heavy" } else { "" }),
+                app: AppKind::Synthetic,
+                n_blocks: gpu.n_sm * (1 + rng.below(4) as u32),
+                regs_per_block: ((16 + rng.below(25) as u32) * warps * 32).min(gpu.regs_per_sm),
+                shmem_per_block: shmem,
+                warps_per_block: warps,
+                ratio: draw_ratio(gpu, &mut rng, 0.5, 8.0),
+                work_per_block: work,
+                artifact: String::new(),
+            }
+        })
+        .collect()
+}
+
+fn gen_complementary(gpu: &GpuSpec, n: usize, seed: u64) -> Vec<KernelProfile> {
+    let mut rng = SplitMix64::new(seed ^ 0x5EED_0003);
+    let mut ks: Vec<KernelProfile> = (0..n)
+        .map(|i| {
+            if i % 2 == 0 {
+                // Memory-bound shared-memory hog: low occupancy, heavy
+                // bandwidth demand — starves when packed with its own
+                // kind.
+                KernelProfile {
+                    name: format!("CMP#{i}-mem"),
+                    app: AppKind::Synthetic,
+                    n_blocks: gpu.n_sm * (1 + rng.below(2) as u32),
+                    regs_per_block: 4096,
+                    shmem_per_block: (3 + rng.below(3) as u32) * 4096, // 12–20 KiB
+                    warps_per_block: 4,
+                    ratio: rng.range_f64(0.8, 2.5),
+                    work_per_block: rng.range_f64(3_000.0, 8_000.0),
+                    artifact: String::new(),
+                }
+            } else {
+                // Compute-bound warp hog: saturates issue pipelines,
+                // touches little memory — the ideal round-mate above.
+                KernelProfile {
+                    name: format!("CMP#{i}-cmp"),
+                    app: AppKind::Synthetic,
+                    n_blocks: gpu.n_sm * (1 + rng.below(3) as u32),
+                    regs_per_block: 12_288,
+                    shmem_per_block: 0,
+                    warps_per_block: 16 + rng.below(9) as u32, // 16–24
+                    ratio: rng.range_f64(15.0, 60.0),
+                    work_per_block: rng.range_f64(3_000.0, 8_000.0),
+                    artifact: String::new(),
+                }
+            }
+        })
+        .collect();
+    // Scramble the arrival order so FIFO does not accidentally
+    // interleave the pairs the generator built.
+    rng.shuffle(&mut ks);
+    for (i, k) in ks.iter_mut().enumerate() {
+        k.name = format!("{}@{i}", k.name);
+    }
+    ks
+}
+
+fn gen_small_large(gpu: &GpuSpec, n: usize, seed: u64) -> Vec<KernelProfile> {
+    let mut rng = SplitMix64::new(seed ^ 0x5EED_0004);
+    let n_large = (n / 4).max(1);
+    let mut ks: Vec<KernelProfile> = (0..n)
+        .map(|i| {
+            if i < n_large {
+                // SM-filling giant: large grid, wide blocks, real work.
+                KernelProfile {
+                    name: format!("SL#{i}-large"),
+                    app: AppKind::Synthetic,
+                    n_blocks: gpu.n_sm * (4 + rng.below(4) as u32),
+                    regs_per_block: 16_384,
+                    shmem_per_block: if rng.next_f64() < 0.5 { 16_384 } else { 0 },
+                    warps_per_block: 16 + rng.below(17) as u32, // 16–32
+                    ratio: draw_ratio(gpu, &mut rng, 1.0, 6.0),
+                    work_per_block: rng.range_f64(20_000.0, 60_000.0),
+                    artifact: String::new(),
+                }
+            } else {
+                // Near-trivial filler that packs around the giants.
+                KernelProfile {
+                    name: format!("SL#{i}-small"),
+                    app: AppKind::Synthetic,
+                    n_blocks: gpu.n_sm,
+                    regs_per_block: 1024,
+                    shmem_per_block: 0,
+                    warps_per_block: 2 + rng.below(3) as u32,
+                    ratio: draw_ratio(gpu, &mut rng, 0.5, 4.0),
+                    work_per_block: rng.range_f64(500.0, 2_000.0),
+                    artifact: String::new(),
+                }
+            }
+        })
+        .collect();
+    rng.shuffle(&mut ks);
+    ks
+}
+
+fn gen_mixed(gpu: &GpuSpec, n: usize, seed: u64) -> Vec<KernelProfile> {
+    // A shared-cloud request stream headed for multi-device dispatch:
+    // each slot draws from a random family (with a derived seed, so the
+    // mix differs from any single family's output).
+    let mut rng = SplitMix64::new(seed ^ 0x5EED_0005);
+    let families: [fn(&GpuSpec, usize, u64) -> Vec<KernelProfile>; 4] =
+        [gen_uniform, gen_skewed, gen_complementary, gen_small_large];
+    let pools: Vec<Vec<KernelProfile>> = families
+        .iter()
+        .map(|g| g(gpu, n, seed.wrapping_mul(0x9E37).wrapping_add(17)))
+        .collect();
+    (0..n)
+        .map(|i| {
+            let f = rng.below(pools.len());
+            let mut k = pools[f][i].clone();
+            k.name = format!("MIX#{i}/{}", k.name);
+            k
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::validate_workload;
+
+    #[test]
+    fn every_family_generates_valid_workloads() {
+        let gpu = GpuSpec::gtx580();
+        for sc in all_scenarios() {
+            for n in [1usize, 2, 6, 10, 24] {
+                for seed in 0..8u64 {
+                    let ks = sc.workload(&gpu, n, seed);
+                    assert_eq!(ks.len(), n, "{} n={n} seed={seed}", sc.id);
+                    validate_workload(&gpu, &ks)
+                        .unwrap_or_else(|e| panic!("{} n={n} seed={seed}: {e}", sc.id));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn families_are_deterministic_per_seed() {
+        let gpu = GpuSpec::gtx580();
+        for sc in all_scenarios() {
+            assert_eq!(sc.workload(&gpu, 8, 5), sc.workload(&gpu, 8, 5), "{}", sc.id);
+            assert_ne!(sc.workload(&gpu, 8, 5), sc.workload(&gpu, 8, 6), "{}", sc.id);
+        }
+    }
+
+    #[test]
+    fn ids_unique_and_resolvable() {
+        let mut ids: Vec<&str> = SCENARIOS.iter().map(|s| s.id).collect();
+        for id in &ids {
+            assert!(scenario_by_id(id).is_some());
+            assert!(scenario_by_id(&id.to_uppercase()).is_some(), "{id} case-insensitive");
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), SCENARIOS.len());
+        assert!(scenario_by_id("nonsense").is_none());
+    }
+
+    #[test]
+    fn skewed_family_has_heavy_tail() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("skewed").unwrap().workload(&gpu, 12, 3);
+        // Heavy kernels draw ≥ 30 000 work/block, light ones ≤ 4 000 — the
+        // family guarantees at least one of each for n ≥ 4.
+        let works: Vec<f64> = ks.iter().map(|k| k.work_per_block).collect();
+        let max = works.iter().cloned().fold(0.0f64, f64::max);
+        let min = works.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 7.0, "no skew: max {max} min {min}");
+    }
+
+    #[test]
+    fn complementary_family_mixes_bound_types() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("complementary").unwrap().workload(&gpu, 10, 1);
+        let mem = ks.iter().filter(|k| k.memory_bound(&gpu)).count();
+        assert_eq!(mem, 5, "half the kernels must be memory-bound");
+        // The memory-bound half carries the shared-memory footprint.
+        for k in &ks {
+            if k.memory_bound(&gpu) {
+                assert!(k.shmem_per_block >= 12 * 1024, "{}", k.name);
+            } else {
+                assert_eq!(k.shmem_per_block, 0, "{}", k.name);
+            }
+        }
+    }
+
+    #[test]
+    fn small_large_family_has_giants_and_fillers() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("small-large").unwrap().workload(&gpu, 12, 2);
+        let large = ks.iter().filter(|k| k.name.contains("large")).count();
+        assert_eq!(large, 3); // n/4
+        let giant_work: f64 = ks
+            .iter()
+            .filter(|k| k.name.contains("large"))
+            .map(|k| k.total_work())
+            .sum();
+        let filler_work: f64 = ks
+            .iter()
+            .filter(|k| k.name.contains("small"))
+            .map(|k| k.total_work())
+            .sum();
+        assert!(giant_work > filler_work, "giants must dominate total work");
+    }
+}

@@ -135,3 +135,46 @@ fn per_device_backends_are_independent_instances() {
         assert!((r.sim_policy_ms - full[0].sim_policy_ms).abs() < 1e-9);
     }
 }
+
+#[test]
+fn search_policy_serves_batches_end_to_end() {
+    // Coordinator integration for the search subsystem: a window-sized
+    // batch is ordered by budgeted branch-and-bound (window ≤ the
+    // policy's exact threshold) and the reordered batch must never be
+    // slower than FIFO on the simulated device — search starts from the
+    // Algorithm 1 warm start and only improves it.
+    let gpu = GpuSpec::gtx580();
+    let coord = CoordinatorBuilder::new()
+        .policy_named("search:local:0:256")
+        .unwrap()
+        .devices(2)
+        .window(5)
+        .linger(Duration::from_millis(10))
+        .start();
+
+    let mut handles = Vec::new();
+    for b in 0..4u64 {
+        for (i, k) in synthetic_workload(&gpu, 5, 100 + b).into_iter().enumerate() {
+            handles.push(coord.submit(LaunchRequest {
+                id: b * 5 + i as u64,
+                profile: k,
+                seed: i as u64,
+            }));
+        }
+        coord.flush();
+    }
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let (reports, stats) = coord.shutdown();
+    assert_eq!(stats.n_responses, 20);
+    for r in reports.iter().filter(|r| r.n == 5) {
+        assert!(
+            r.sim_policy_ms <= r.sim_fifo_ms * (1.0 + 1e-9),
+            "search order slower than FIFO: {} vs {} (batch {})",
+            r.sim_policy_ms,
+            r.sim_fifo_ms,
+            r.batch_id
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! Search-subsystem correctness: branch-and-bound exactness against the
+//! exhaustive sweep (bit-identical, both model backends), anytime
+//! determinism (same seed + budget ⇒ identical incumbent trajectory),
+//! and budget enforcement.
+//!
+//! These are the debug-build companions to the release-mode CI gates in
+//! `benches/search_quality.rs` (which pushes the same exactness check to
+//! n = 8 and the anytime quality gate to the n = 10 sweep distribution).
+
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::gpu::GpuSpec;
+use kreorder::perm::sweep_with;
+use kreorder::search::{
+    parse_strategy, BranchAndBound, LocalSearch, SearchBudget, SearchOutcome, SearchStrategy,
+    SimulatedAnnealing,
+};
+use kreorder::sched::{registry, reorder};
+use kreorder::workloads::{all_scenarios, by_id, scenario_by_id};
+
+type Factory = dyn Fn() -> Box<dyn ExecutionBackend> + Sync;
+
+fn assert_permutation(order: &[usize], n: usize) {
+    let mut sorted = order.to_vec();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "not a permutation: {order:?}");
+}
+
+/// Branch-and-bound must agree with the exhaustive sweep bit-for-bit —
+/// best makespan *and* lexicographically tie-broken best order — on
+/// every scenario family, on both model backends.
+#[test]
+fn bnb_matches_sweep_bitwise_on_all_scenario_families() {
+    let gpu = GpuSpec::gtx580();
+    let sim: &Factory = &|| Box::new(SimulatorBackend::new());
+    let analytic: &Factory = &|| Box::new(AnalyticBackend::new());
+    for sc in all_scenarios() {
+        for n in [2usize, 5] {
+            for (bname, factory) in [("sim", sim), ("analytic", analytic)] {
+                let ks = sc.workload(&gpu, n, 9);
+                let sw = sweep_with(&gpu, &ks, factory);
+                let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::unlimited());
+                assert!(out.complete, "{} n={n} {bname}: not proven optimal", sc.id);
+                assert_eq!(
+                    out.best_ms.to_bits(),
+                    sw.best_ms.to_bits(),
+                    "{} n={n} {bname}: bnb {} vs sweep {}",
+                    sc.id,
+                    out.best_ms,
+                    sw.best_ms
+                );
+                assert_eq!(
+                    out.best_order, sw.best_order,
+                    "{} n={n} {bname}: tie-break drift",
+                    sc.id
+                );
+            }
+        }
+    }
+}
+
+/// Same exactness on a paper workload (n = 6), where the permutation
+/// space is the paper's own Table 3 setting.
+#[test]
+fn bnb_matches_sweep_on_paper_experiment() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+    let ks = by_id("epbs-6").unwrap().kernels;
+    let sw = sweep_with(&gpu, &ks, factory);
+    let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    assert!(out.complete);
+    assert_eq!(out.best_ms.to_bits(), sw.best_ms.to_bits());
+    assert_eq!(out.best_order, sw.best_order);
+    // Accounting sanity: never more evaluations than the exhaustive
+    // space (720 permutations) plus the warm start — pruning can only
+    // reduce this (`pruned_subtrees` in the bench output tracks by how
+    // much).
+    assert!(
+        out.evals <= 721,
+        "evaluation accounting broken: {} evals for 720 permutations",
+        out.evals
+    );
+}
+
+/// Identical-kernel workloads tie everywhere: branch-and-bound must
+/// still report the sweep's lexicographically smallest optimal order
+/// (the identity), not an arbitrary tied one.
+#[test]
+fn bnb_tie_break_matches_sweep_on_identical_kernels() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+    let ks = vec![by_id("epbs-6").unwrap().kernels[0].clone(); 5];
+    let sw = sweep_with(&gpu, &ks, factory);
+    let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    assert_eq!(sw.best_order, vec![0, 1, 2, 3, 4]);
+    assert_eq!(out.best_order, vec![0, 1, 2, 3, 4]);
+    assert_eq!(out.best_ms.to_bits(), sw.best_ms.to_bits());
+}
+
+fn assert_outcomes_identical(a: &SearchOutcome, b: &SearchOutcome) {
+    assert_eq!(a.strategy, b.strategy);
+    assert_eq!(a.best_ms.to_bits(), b.best_ms.to_bits());
+    assert_eq!(a.best_order, b.best_order);
+    assert_eq!(a.evals, b.evals);
+    assert_eq!(a.trajectory.len(), b.trajectory.len(), "trajectory lengths");
+    for (x, y) in a.trajectory.iter().zip(&b.trajectory) {
+        assert_eq!(x.eval, y.eval);
+        assert_eq!(x.best_ms.to_bits(), y.best_ms.to_bits());
+    }
+}
+
+/// Same seed + same evaluation budget ⇒ bit-identical incumbent
+/// trajectory, for both anytime strategies.
+#[test]
+fn anytime_trajectories_deterministic_per_seed_and_budget() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+    let ks = scenario_by_id("skewed").unwrap().workload(&gpu, 10, 4);
+    let budget = SearchBudget::evals(300);
+    for strategy in [
+        Box::new(SimulatedAnnealing::new(42)) as Box<dyn SearchStrategy>,
+        Box::new(LocalSearch::new(42)),
+    ] {
+        let a = strategy.search(&gpu, &ks, factory, &budget);
+        let b = strategy.search(&gpu, &ks, factory, &budget);
+        assert_outcomes_identical(&a, &b);
+        assert_permutation(&a.best_order, ks.len());
+        assert!(!a.complete, "anytime results must not claim optimality");
+        assert!(a.evals <= 300, "budget exceeded: {}", a.evals);
+        // Trajectory is sorted by evaluation index and improving.
+        for w in a.trajectory.windows(2) {
+            assert!(w[0].eval < w[1].eval);
+            assert!(w[0].best_ms > w[1].best_ms);
+        }
+    }
+}
+
+/// Anytime strategies warm-start from Algorithm 1, so they can never
+/// report anything worse than the greedy order.
+#[test]
+fn anytime_never_worse_than_algorithm1_warm_start() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+    for sc in all_scenarios() {
+        let ks = sc.workload(&gpu, 9, 5);
+        let greedy = reorder(&gpu, &ks).order;
+        let t_greedy = SimulatorBackend::new().execute(&gpu, &ks, &greedy).makespan_ms;
+        for spelling in ["anneal:3", "local:3"] {
+            let s = parse_strategy(spelling).unwrap();
+            let out = s.search(&gpu, &ks, factory, &SearchBudget::evals(150));
+            assert!(
+                out.best_ms <= t_greedy * (1.0 + 1e-12),
+                "{} on {}: {} worse than warm start {}",
+                spelling,
+                sc.id,
+                out.best_ms,
+                t_greedy
+            );
+            assert_permutation(&out.best_order, ks.len());
+        }
+    }
+}
+
+/// An exhausted evaluation budget degrades branch-and-bound to a valid
+/// (non-proven) incumbent instead of overrunning.
+#[test]
+fn bnb_respects_eval_budget() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+    let ks = scenario_by_id("uniform").unwrap().workload(&gpu, 8, 2);
+
+    // A budget of 1 is consumed entirely by the warm start: the solver
+    // must degrade to exactly the Algorithm 1 order, unproven.
+    let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::evals(1));
+    assert!(!out.complete);
+    assert_eq!(out.evals, 1);
+    assert_eq!(out.best_order, reorder(&gpu, &ks).order);
+    assert!(out.best_ms.is_finite());
+
+    // A small budget is never overrun, and the incumbent it returns is
+    // at least as good as the warm start.
+    let warm = out.best_ms;
+    let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::evals(40));
+    assert!(out.evals <= 40, "budget overrun: {}", out.evals);
+    assert!(out.best_ms <= warm * (1.0 + 1e-12));
+    assert_permutation(&out.best_order, ks.len());
+}
+
+/// The `search` launch-policy spelling works end to end through the
+/// policy registry (the coordinator's parse path) and emits permutations
+/// on both the exact and the anytime path.
+#[test]
+fn search_policy_via_registry_orders_both_window_sizes() {
+    let gpu = GpuSpec::gtx580();
+    let policy = registry::parse("search:local:1:200").unwrap();
+    assert_eq!(policy.name(), "search:local:1:200");
+    for n in [5usize, 10] {
+        let ks = scenario_by_id("mixed").unwrap().workload(&gpu, n, 7);
+        let order = policy.order(&gpu, &ks);
+        assert_permutation(&order, n);
+    }
+    // Same spelling round-trips through the registry (the coordinator
+    // logs policy names and must be able to reconstruct them).
+    let reparsed = registry::parse(&policy.name()).unwrap();
+    assert_eq!(reparsed.name(), policy.name());
+}
+
+/// Every registered strategy spelling produces a valid permutation under
+/// a small budget on every scenario family.
+#[test]
+fn every_strategy_emits_permutations_on_every_family() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+    for sc in all_scenarios() {
+        let ks = sc.workload(&gpu, 7, 13);
+        for spelling in ["bnb", "anneal:1", "local:1"] {
+            let s = parse_strategy(spelling).unwrap();
+            let out = s.search(&gpu, &ks, factory, &SearchBudget::evals(100));
+            assert_permutation(&out.best_order, ks.len());
+            assert!(out.evals <= 100, "{spelling} on {}: {} evals", sc.id, out.evals);
+        }
+    }
+}
