@@ -205,7 +205,12 @@ impl PreparedAnalytic {
 
     fn save_snapshot(&mut self) {
         if self.snaps.len() == self.depth {
-            self.snaps.push(ASnap::default());
+            // Full-capacity members up front: a later save of a different
+            // (larger) open round at this depth must not reallocate.
+            self.snaps.push(ASnap {
+                cur: Vec::with_capacity(self.ks.len()),
+                ..ASnap::default()
+            });
         }
         let s = &mut self.snaps[self.depth];
         s.elapsed = self.elapsed;
@@ -216,7 +221,11 @@ impl PreparedAnalytic {
     }
 
     fn restore_top(&mut self) {
-        let s = &self.snaps[self.depth - 1];
+        self.restore_at(self.depth - 1);
+    }
+
+    fn restore_at(&mut self, idx: usize) {
+        let s = &self.snaps[idx];
         self.elapsed = s.elapsed;
         self.used = s.used;
         self.cur.clear();
@@ -255,6 +264,19 @@ impl PreparedWorkload for PreparedAnalytic {
 
     fn execute_suffix(&mut self, suffix: &[usize]) -> f64 {
         self.restore_top();
+        for &k in suffix {
+            self.apply(k);
+        }
+        self.total()
+    }
+
+    fn supports_depth_addressing(&self) -> bool {
+        self.valid
+    }
+
+    fn execute_suffix_at(&mut self, depth: usize, suffix: &[usize]) -> f64 {
+        debug_assert!(depth < self.depth, "no checkpoint at depth {depth}");
+        self.restore_at(depth);
         for &k in suffix {
             self.apply(k);
         }
@@ -369,6 +391,18 @@ mod tests {
         assert_eq!(
             prepared.execute_suffix(&o[2..]).to_bits(),
             direct[2].to_bits()
+        );
+        // Depth-addressed completion from mid-stack (depth 1) and the
+        // empty prefix (depth 0) leave the stack intact.
+        assert_eq!(
+            prepared.execute_suffix_at(1, &o[1..]).to_bits(),
+            direct[2].to_bits()
+        );
+        assert_eq!(prepared.execute_suffix_at(0, o).to_bits(), direct[2].to_bits());
+        assert_eq!(
+            prepared.execute_suffix(&o[2..]).to_bits(),
+            direct[2].to_bits(),
+            "top checkpoint must survive mid-stack restores"
         );
         prepared.checkpoint_pop();
         prepared.checkpoint_pop();

@@ -19,7 +19,10 @@
 //! permutation sweeps), [`ExecutionBackend::prepare`] returns a
 //! [`PreparedWorkload`] handle that hoists per-workload setup out of the
 //! loop; the model backends' handles additionally support exact
-//! **prefix checkpointing** (see the trait docs).
+//! **prefix checkpointing** (see the trait docs). [`PrefixCursor`]
+//! layers incremental **move evaluation** on the same seam: anytime
+//! search prices each candidate by its suffix past the longest prefix
+//! shared with the incumbent, bit-identically to a full evaluation.
 
 mod analytic;
 #[cfg(feature = "pjrt")]
@@ -138,13 +141,21 @@ impl BackendReport {
 /// prefix with the remaining kernels, and [`checkpoint_pop`] backtracks.
 /// Results are bit-identical to [`execute_order`] on the concatenated
 /// order; the sweeps use this to share the cost of a prefix across every
-/// permutation of its suffix. Both model backends (simulator and
-/// analytic) support it; the default implementation does not.
+/// permutation of its suffix. [`execute_suffix_at`] additionally
+/// completes from **any** stack level without disturbing the levels
+/// above it (opt-in via [`supports_depth_addressing`]) — the seam
+/// [`PrefixCursor`] builds incremental anytime-search evaluation on.
+/// Both model backends (simulator and analytic) support all of it; the
+/// default implementation does not — and a backend that implements the
+/// `checkpoint_*` seam plus the depth-addressed completion gets fast
+/// sweeps, branch-and-bound *and* fast anytime search for free.
 ///
 /// [`supports_checkpoints`]: PreparedWorkload::supports_checkpoints
 /// [`checkpoint_push`]: PreparedWorkload::checkpoint_push
 /// [`checkpoint_pop`]: PreparedWorkload::checkpoint_pop
 /// [`execute_suffix`]: PreparedWorkload::execute_suffix
+/// [`execute_suffix_at`]: PreparedWorkload::execute_suffix_at
+/// [`supports_depth_addressing`]: PreparedWorkload::supports_depth_addressing
 /// [`execute_order`]: PreparedWorkload::execute_order
 pub trait PreparedWorkload {
     /// Model makespan of one complete launch `order` (a permutation of
@@ -174,6 +185,39 @@ pub trait PreparedWorkload {
     fn execute_suffix(&mut self, suffix: &[usize]) -> f64 {
         let _ = suffix;
         panic!("prefix checkpointing unsupported (check supports_checkpoints())");
+    }
+
+    /// Whether [`execute_suffix_at`] may be called. Separate from
+    /// [`supports_checkpoints`] so a handle that implemented the
+    /// original push/pop/suffix seam keeps working (the sweeps and
+    /// branch-and-bound need only that); [`PrefixCursor`] uses
+    /// incremental evaluation only when *this* returns `true` and
+    /// degrades to [`execute_order`] otherwise.
+    ///
+    /// [`execute_suffix_at`]: PreparedWorkload::execute_suffix_at
+    /// [`supports_checkpoints`]: PreparedWorkload::supports_checkpoints
+    /// [`execute_order`]: PreparedWorkload::execute_order
+    fn supports_depth_addressing(&self) -> bool {
+        false
+    }
+
+    /// [`execute_suffix`] generalized to any stack level — the
+    /// depth-addressable seam behind [`PrefixCursor`]. Completes the
+    /// prefix checkpointed at `depth` (`0` = the empty prefix, up to the
+    /// current stack depth) with `suffix` and returns the makespan,
+    /// leaving the **whole** stack — including checkpoints above `depth`
+    /// — intact, so one anchored stack can serve evaluations at every
+    /// divergence depth. Checkpoints are pure functions of their prefix,
+    /// so the result must be bit-identical to [`execute_order`] on
+    /// `prefix[..depth] ++ suffix`. Only called when
+    /// [`supports_depth_addressing`] returns `true`.
+    ///
+    /// [`execute_suffix`]: PreparedWorkload::execute_suffix
+    /// [`execute_order`]: PreparedWorkload::execute_order
+    /// [`supports_depth_addressing`]: PreparedWorkload::supports_depth_addressing
+    fn execute_suffix_at(&mut self, depth: usize, suffix: &[usize]) -> f64 {
+        let _ = (depth, suffix);
+        panic!("depth-addressable checkpointing unsupported (check supports_depth_addressing())");
     }
 
     /// An **admissible lower bound** on [`execute_suffix`] over *every*
@@ -207,6 +251,130 @@ struct FallbackPrepared<'a, B: ?Sized> {
 impl<B: ExecutionBackend + ?Sized> PreparedWorkload for FallbackPrepared<'_, B> {
     fn execute_order(&mut self, order: &[usize]) -> f64 {
         self.backend.execute(self.gpu, self.kernels, order).makespan_ms
+    }
+}
+
+/// **Prefix-reuse cursor** — incremental order evaluation for anytime
+/// search, the hot-path seam of [`crate::search`]'s metaheuristics.
+///
+/// A local-search or annealing move (swap, shift, insertion) produces a
+/// candidate that shares a prefix with the incumbent up to the move's
+/// first touched position, yet re-simulating it from scratch pays for the
+/// whole order. The cursor keeps a checkpoint stack anchored along the
+/// incumbent and prices every evaluation by its **suffix past the longest
+/// common prefix** with that stack:
+///
+/// * [`PrefixCursor::eval`] — evaluate a complete order, restoring the
+///   deepest matching checkpoint and simulating only past it. The stack
+///   is never mutated.
+/// * [`PrefixCursor::eval_anchored`] — same, but first extend the stack
+///   along `order[..anchor]` when it is shorter (the caller passes the
+///   move's divergence position, so the stack lazily grows along the
+///   incumbent and every sibling move at that depth reuses it).
+///
+/// Results are **bit-identical** to
+/// [`PreparedWorkload::execute_order`]: checkpoints are pure functions of
+/// their prefix and restore is pinned bit-exact, so switching a search to
+/// the cursor is a pure speedup (`tests/incremental_equivalence.rs` pins
+/// whole trajectories). On a handle without checkpoint support — e.g. the
+/// default [`ExecutionBackend::prepare`] fallback — every call degrades
+/// to `execute_order`, so callers need no capability check.
+pub struct PrefixCursor<'a> {
+    prepared: Box<dyn PreparedWorkload + 'a>,
+    /// Kernels currently checkpointed, in stack order (mirror of the
+    /// prepared handle's stack; `prefix[..d]` ↔ checkpoint depth `d`).
+    prefix: Vec<usize>,
+    incremental: bool,
+    evals: u64,
+    reused: u64,
+}
+
+impl<'a> PrefixCursor<'a> {
+    /// Wrap a freshly prepared handle (its checkpoint stack must be
+    /// empty). Incremental evaluation is used whenever the handle
+    /// supports depth-addressable checkpoints
+    /// ([`PreparedWorkload::supports_depth_addressing`]); handles that
+    /// implement only the original push/pop/suffix seam — or none of it
+    /// — are evaluated through [`PreparedWorkload::execute_order`].
+    pub fn new(prepared: Box<dyn PreparedWorkload + 'a>) -> Self {
+        let incremental = prepared.supports_checkpoints() && prepared.supports_depth_addressing();
+        PrefixCursor {
+            prepared,
+            prefix: Vec::new(),
+            incremental,
+            evals: 0,
+            reused: 0,
+        }
+    }
+
+    /// Wrap a prepared handle with incremental evaluation **disabled**:
+    /// every call round-trips through
+    /// [`PreparedWorkload::execute_order`]. The reference path of the
+    /// bit-equivalence pins and of `kreorder search --compare-eval`.
+    pub fn new_full(prepared: Box<dyn PreparedWorkload + 'a>) -> Self {
+        PrefixCursor {
+            prepared,
+            prefix: Vec::new(),
+            incremental: false,
+            evals: 0,
+            reused: 0,
+        }
+    }
+
+    /// Whether evaluations actually reuse checkpoints (`false` for
+    /// checkpoint-free handles and [`PrefixCursor::new_full`]).
+    pub fn incremental(&self) -> bool {
+        self.incremental
+    }
+
+    /// Orders evaluated through this cursor.
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+
+    /// Total prefix kernels *not* re-simulated thanks to checkpoint
+    /// reuse, summed over all evaluations (0 in full mode) — the
+    /// numerator of the reuse ratio reported by `--compare-eval`.
+    pub fn reused_kernels(&self) -> u64 {
+        self.reused
+    }
+
+    /// Evaluate a complete launch `order`, reusing the deepest checkpoint
+    /// that matches a prefix of it. Never mutates the stack.
+    pub fn eval(&mut self, order: &[usize]) -> f64 {
+        self.eval_anchored(order, 0)
+    }
+
+    /// Evaluate `order`, first extending the checkpoint stack along
+    /// `order[..anchor]` when it is shallower (mismatched entries are
+    /// popped). Callers pass the first position where the candidate
+    /// differs from the incumbent, so the stack stays anchored along the
+    /// incumbent and is shared by every move diverging at or beyond that
+    /// depth; an accepted move simply re-anchors through later calls'
+    /// longest-common-prefix handling.
+    pub fn eval_anchored(&mut self, order: &[usize], anchor: usize) -> f64 {
+        debug_assert!(anchor <= order.len());
+        self.evals += 1;
+        if !self.incremental {
+            return self.prepared.execute_order(order);
+        }
+        let mut l = 0;
+        while l < self.prefix.len() && l < order.len() && self.prefix[l] == order[l] {
+            l += 1;
+        }
+        if l < anchor {
+            while self.prefix.len() > l {
+                self.prepared.checkpoint_pop();
+                self.prefix.pop();
+            }
+            for &k in &order[l..anchor] {
+                self.prepared.checkpoint_push(k);
+                self.prefix.push(k);
+            }
+            l = anchor;
+        }
+        self.reused += l as u64;
+        self.prepared.execute_suffix_at(l, &order[l..])
     }
 }
 
@@ -349,8 +517,57 @@ mod tests {
         let kernels: Vec<KernelProfile> = Vec::new();
         let mut b = Doubling;
         let direct = b.execute(&gpu, &kernels, &[3, 1, 2]).makespan_ms;
-        let mut prepared = b.prepare(&gpu, &kernels);
-        assert!(!prepared.supports_checkpoints());
-        assert_eq!(prepared.execute_order(&[3, 1, 2]), direct);
+        {
+            let mut prepared = b.prepare(&gpu, &kernels);
+            assert!(!prepared.supports_checkpoints());
+            assert_eq!(prepared.execute_order(&[3, 1, 2]), direct);
+        }
+        // A cursor over a checkpoint-free handle degrades to execute_order
+        // without any capability check by the caller.
+        let mut cursor = PrefixCursor::new(b.prepare(&gpu, &kernels));
+        assert!(!cursor.incremental());
+        assert_eq!(cursor.eval_anchored(&[3, 1, 2], 2), direct);
+        assert_eq!(cursor.evals(), 1);
+        assert_eq!(cursor.reused_kernels(), 0);
+    }
+
+    #[test]
+    fn cursor_matches_execute_order_bitwise_under_interleaved_anchors() {
+        use crate::util::SplitMix64;
+        let gpu = crate::gpu::GpuSpec::gtx580();
+        let ks = crate::workloads::epbsessw_8();
+        for factory in [
+            (|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+                as fn() -> Box<dyn ExecutionBackend>,
+            || Box::new(AnalyticBackend::new()),
+        ] {
+            // Reference makespans from a plain prepared handle.
+            let mut reference = factory();
+            let mut prepared = reference.prepare(&gpu, &ks);
+            let mut orders: Vec<Vec<usize>> = Vec::new();
+            let mut rng = SplitMix64::new(17);
+            for _ in 0..24 {
+                let mut o: Vec<usize> = (0..ks.len()).collect();
+                rng.shuffle(&mut o);
+                orders.push(o);
+            }
+            let direct: Vec<f64> = orders.iter().map(|o| prepared.execute_order(o)).collect();
+
+            // The same orders through a cursor, with anchors that force
+            // every path: pure reuse, stack growth, and re-anchoring.
+            let mut backend = factory();
+            let mut cursor = PrefixCursor::new(backend.prepare(&gpu, &ks));
+            assert!(cursor.incremental());
+            for (i, (o, d)) in orders.iter().zip(&direct).enumerate() {
+                let anchor = i % ks.len();
+                let got = cursor.eval_anchored(o, anchor);
+                assert_eq!(got.to_bits(), d.to_bits(), "order {o:?} anchor {anchor}");
+                // And again with no anchor: pure reuse of whatever the
+                // stack now holds.
+                assert_eq!(cursor.eval(o).to_bits(), d.to_bits(), "re-eval {o:?}");
+            }
+            assert_eq!(cursor.evals(), 2 * orders.len() as u64);
+            assert!(cursor.reused_kernels() > 0);
+        }
     }
 }

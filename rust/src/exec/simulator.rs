@@ -98,6 +98,14 @@ impl PreparedWorkload for PreparedSim {
         self.state.finish_with(suffix)
     }
 
+    fn supports_depth_addressing(&self) -> bool {
+        self.valid
+    }
+
+    fn execute_suffix_at(&mut self, depth: usize, suffix: &[usize]) -> f64 {
+        self.state.finish_from(depth, suffix)
+    }
+
     fn suffix_lower_bound(&mut self, remaining: &[usize]) -> f64 {
         if !self.valid {
             return f64::NEG_INFINITY;
@@ -197,6 +205,11 @@ mod tests {
         prepared.checkpoint_push(2);
         let ck = prepared.execute_suffix(&order[2..]);
         assert_eq!(ck.to_bits(), flat.to_bits());
+        // Depth-addressed completions reuse mid-stack checkpoints and
+        // leave the deeper ones usable.
+        assert_eq!(prepared.execute_suffix_at(1, &order[1..]).to_bits(), flat.to_bits());
+        assert_eq!(prepared.execute_suffix_at(0, &order).to_bits(), flat.to_bits());
+        assert_eq!(prepared.execute_suffix(&order[2..]).to_bits(), flat.to_bits());
         prepared.checkpoint_pop();
         prepared.checkpoint_pop();
     }

@@ -138,6 +138,45 @@ impl KernelProfile {
     pub fn memory_bound(&self, gpu: &GpuSpec) -> bool {
         self.ratio < gpu.balanced_ratio
     }
+
+    /// Are two kernels **model-identical** — interchangeable in every
+    /// timing model and payload?
+    ///
+    /// True when every execution-relevant field matches exactly (floats
+    /// compared by bits): grid size, per-block resources, ratio, work,
+    /// source app and payload artifact. `name` is display-only and
+    /// excluded. Both model backends time a kernel solely from these
+    /// fields (per-block jitter depends on the block index only, never on
+    /// the kernel — see `sim::engine`), so swapping two model-identical
+    /// kernels in a launch order leaves the makespan **bit-identical**.
+    /// This is the contract behind the symmetry collapse in
+    /// [`crate::search::BranchAndBound`] and
+    /// [`crate::perm::sweep_stats_sym`].
+    pub fn model_identical(&self, other: &KernelProfile) -> bool {
+        self.app == other.app
+            && self.n_blocks == other.n_blocks
+            && self.regs_per_block == other.regs_per_block
+            && self.shmem_per_block == other.shmem_per_block
+            && self.warps_per_block == other.warps_per_block
+            && self.ratio.to_bits() == other.ratio.to_bits()
+            && self.work_per_block.to_bits() == other.work_per_block.to_bits()
+            && self.artifact == other.artifact
+    }
+}
+
+/// Partition a workload into [`KernelProfile::model_identical`]
+/// equivalence classes: `class_of[i]` is the smallest index whose profile
+/// is model-identical to `kernels[i]` (so a kernel with no duplicate maps
+/// to itself). O(n²) exact-field comparisons — the workloads this serves
+/// (search windows, sweeps) hold at most a few dozen kernels.
+pub fn equivalence_classes(kernels: &[KernelProfile]) -> Vec<usize> {
+    (0..kernels.len())
+        .map(|i| {
+            (0..i)
+                .find(|&j| kernels[j].model_identical(&kernels[i]))
+                .unwrap_or(i)
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -232,5 +271,44 @@ mod tests {
         let mut k = ep();
         k.shmem_per_block = 49 * 1024;
         assert!(!k.block_fits(&gpu));
+    }
+
+    #[test]
+    fn model_identity_ignores_name_only() {
+        let a = ep();
+        let mut b = ep();
+        b.name = "EP(renamed)".into();
+        assert!(a.model_identical(&b), "name must not split classes");
+        // Every execution-relevant field splits the class.
+        for mutate in [
+            (|k: &mut KernelProfile| k.n_blocks += 1) as fn(&mut KernelProfile),
+            |k| k.regs_per_block += 1,
+            |k| k.shmem_per_block += 1,
+            |k| k.warps_per_block += 1,
+            |k| k.ratio += 1e-12,
+            |k| k.work_per_block += 1e-9,
+            |k| k.artifact = "other".into(),
+            |k| k.app = AppKind::Synthetic,
+        ] {
+            let mut c = ep();
+            mutate(&mut c);
+            assert!(!a.model_identical(&c));
+        }
+    }
+
+    #[test]
+    fn equivalence_classes_map_to_smallest_duplicate() {
+        let a = ep();
+        let mut b = ep();
+        b.name = "EP#2".into(); // same class as a despite the name
+        let mut c = ep();
+        c.ratio = 9.0; // its own class
+        let ks = vec![a.clone(), c.clone(), b, a, c];
+        assert_eq!(equivalence_classes(&ks), vec![0, 1, 0, 0, 1]);
+        // All-distinct workload: identity mapping.
+        let mut d = ep();
+        d.n_blocks = 7;
+        assert_eq!(equivalence_classes(&[ep(), d]), vec![0, 1]);
+        assert_eq!(equivalence_classes(&[]), Vec::<usize>::new());
     }
 }

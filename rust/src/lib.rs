@@ -47,6 +47,23 @@
 //!   enumerates suffixes as a lexicographic prefix tree to maximize that
 //!   sharing, with results bit-identical to the naive per-permutation
 //!   path (`tests/sweep_equivalence.rs` is the golden suite).
+//! * On the same seam, [`exec::PrefixCursor`] makes **anytime search
+//!   suffix-priced**: a depth-addressable checkpoint stack anchored
+//!   along the incumbent lets every candidate move (swap / shift /
+//!   insertion) re-simulate only past its first touched position,
+//!   bit-identically to full evaluation
+//!   (`tests/incremental_equivalence.rs` pins whole trajectories). A
+//!   new backend implements the `checkpoint_*` methods once and gets
+//!   fast sweeps, branch-and-bound pruning *and* fast anytime search
+//!   for free.
+//!
+//! Workloads with repeated kernels get a second, orthogonal collapse:
+//! [`gpu::KernelProfile::model_identical`] kernels are bit-interchangeable
+//! in every model backend, so [`search::BranchAndBound`] expands one
+//! class representative per tree node ([`gpu::equivalence_classes`];
+//! `∏ m_c!` fewer subtrees, results still bit-identical to the sweep
+//! including tie-breaks) and [`perm::sweep_stats_sym`] evaluates one
+//! canonical order per orbit with multiplicity weighting.
 //!
 //! ## Sweeping large n: memory
 //!
@@ -85,12 +102,15 @@
 //!
 //! CI enforces the quality contract (`benches/search_quality.rs`,
 //! smoke-run per push): branch-and-bound must bit-match the sweep on
-//! every scenario family at n ≤ 8 on both model backends, and each
-//! anytime strategy at a 10 k-evaluation budget must beat the 90th
-//! percentile of the n = 10 sweep distribution; `BENCH_search.json` /
-//! `BENCH_sweep.json` are uploaded as artifacts and checkpointed sweep
-//! throughput is gated against the committed `BENCH_baseline.json`
-//! (tolerances documented in `.github/workflows/ci.yml`).
+//! every scenario family at n ≤ 8 on both model backends, each anytime
+//! strategy at a 10 k-evaluation budget must beat the 90th percentile
+//! of the n = 10 sweep distribution, and cursor-evaluated strategies
+//! must produce bit-identical outcomes to full evaluation (with their
+//! evals/s ratio recorded as the anytime-throughput trajectory);
+//! `BENCH_search.json` / `BENCH_sweep.json` are uploaded as artifacts,
+//! checkpointed sweep throughput is hard-gated against the committed
+//! `BENCH_baseline.json`, and the anytime-throughput floors warn until
+//! calibrated (tolerances documented in `.github/workflows/ci.yml`).
 //!
 //! ## Crate layout
 //!

@@ -78,8 +78,11 @@ COMMANDS:
   sweep --exp ID [--backend B]         permutation-space stats for one experiment
   search (--exp ID | --synthetic N | --scenario FAMILY:N) [--seed S]
          [--strategy STRAT] [--budget EVALS] [--backend B]
-         [--trajectory] [--compare-sweep] [--list]
+         [--trajectory] [--compare-sweep] [--compare-eval] [--list]
                                        launch-order search beyond the factorial wall
+                                       (--compare-eval re-runs on the full-evaluation /
+                                       no-symmetry reference path: prints both evals/s
+                                       and verifies bit-identical incumbents)
   sched (--exp ID | --synthetic N [--seed S]) [--backend B]
                                        show every registered policy's order vs makespan
   serve [--batches N] [--window K] [--policy P] [--devices D] [--seed S]
@@ -271,7 +274,9 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn cmd_search(args: &[String]) -> Result<()> {
-    use kreorder::search::{parse_strategy, strategy_help_table, SearchBudget};
+    use kreorder::search::{
+        parse_strategy, parse_strategy_reference, strategy_help_table, SearchBudget,
+    };
     use kreorder::workloads::{all_scenarios, scenario_by_id};
 
     if flag(args, "--list") {
@@ -352,6 +357,53 @@ fn cmd_search(args: &[String]) -> Result<()> {
         println!("incumbent trajectory (eval -> best ms):");
         for s in &out.trajectory {
             println!("  {:>10} {:.4}", s.eval, s.best_ms);
+        }
+    }
+
+    if flag(args, "--compare-eval") {
+        // Field-debugging aid for the fast evaluation paths: re-run the
+        // same strategy in its reference configuration (anytime: full
+        // per-candidate evaluation instead of the prefix-reuse cursor;
+        // bnb: identical-kernel symmetry collapse disabled), print both
+        // throughputs, and verify the incumbents are bit-identical.
+        let reference = parse_strategy_reference(strategy_name).map_err(anyhow::Error::from)?;
+        let is_bnb = strategy.name() == "bnb";
+        if is_bnb && budget.max_evals.is_some() {
+            bail!(
+                "--compare-eval with bnb needs an unbudgeted run (omit --budget): a \
+                 budget-capped parallel solve is not run-to-run deterministic, so the \
+                 comparison would be meaningless"
+            );
+        }
+        let what = if is_bnb {
+            "symmetry collapse disabled"
+        } else {
+            "full (non-incremental) evaluation"
+        };
+        eprintln!("re-running with {what}…");
+        let full = reference.search(&gpu, &kernels, make_backend.as_ref(), &budget);
+        let rate = |evals: u64, wall_ms: f64| evals as f64 / (wall_ms / 1e3).max(1e-9);
+        println!(
+            "eval rate  : {:.0} evals/s fast vs {:.0} evals/s reference ({:.2}x, {} vs {} evals)",
+            rate(out.evals, out.wall_ms),
+            rate(full.evals, full.wall_ms),
+            (rate(out.evals, out.wall_ms) / rate(full.evals, full.wall_ms)).max(0.0),
+            out.evals,
+            full.evals
+        );
+        let identical = out.best_ms.to_bits() == full.best_ms.to_bits()
+            && out.best_order == full.best_order
+            && (is_bnb || out.trajectory.len() == full.trajectory.len());
+        if identical {
+            println!("incumbents : identical (bit-exact) — the fast path is a pure speedup");
+        } else {
+            bail!(
+                "incumbent drift between fast and reference paths: ({}, {:?}) vs ({}, {:?})",
+                out.best_ms,
+                out.best_order,
+                full.best_ms,
+                full.best_order
+            );
         }
     }
 

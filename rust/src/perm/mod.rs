@@ -34,6 +34,14 @@
 //! into online best/worst/count/sum plus a fixed-resolution histogram
 //! (`n_bins × 8` bytes, default 4096), so percentile ranks stay available
 //! at histogram resolution while memory stays constant in `n`.
+//!
+//! Workloads with repeated kernels (real app streams submit many
+//! instances of one profiled kernel) additionally admit
+//! [`sweep_stats_sym`]: within-class reorderings of
+//! [`crate::gpu::KernelProfile::model_identical`] kernels are
+//! bit-identical ties, so only one canonical order per orbit is
+//! evaluated and folded in with its orbit's multiplicity — `n!/∏ m_c!`
+//! evaluations for the same reported distribution.
 
 mod heap;
 
@@ -321,7 +329,17 @@ impl SweepStats {
     /// Fold one permutation's makespan in. Allocation-free after the
     /// first best/worst updates (orders are copied into reused buffers).
     pub fn record(&mut self, t_ms: f64, order: &[usize]) {
-        self.n_perms += 1;
+        self.record_weighted(t_ms, order, 1);
+    }
+
+    /// Fold one makespan in with multiplicity `weight` — `order` stands
+    /// for `weight` distinct permutations sharing this exact makespan.
+    /// Used by the symmetry-collapsed sweep ([`sweep_stats_sym_with`]),
+    /// where each canonical order represents its whole orbit of
+    /// within-class reorderings. Best/worst track `order` itself (the
+    /// orbit's lexicographic minimum under canonical enumeration).
+    pub fn record_weighted(&mut self, t_ms: f64, order: &[usize], weight: u64) {
+        self.n_perms += weight as usize;
         if t_ms.is_nan() {
             return;
         }
@@ -335,9 +353,9 @@ impl SweepStats {
             self.worst_order.clear();
             self.worst_order.extend_from_slice(order);
         }
-        self.sum_ms += t_ms;
+        self.sum_ms += t_ms * weight as f64;
         let i = self.bin_index(t_ms);
-        self.bins[i] += 1;
+        self.bins[i] += weight;
     }
 
     /// Merge another worker's statistics (same histogram configuration).
@@ -487,6 +505,231 @@ pub fn sweep_stats_with(
         result.merge(p);
     }
     result
+}
+
+// ---------------------------------------------------------------------------
+// Identical-kernel symmetry collapse
+// ---------------------------------------------------------------------------
+
+/// Is every element of `prefix` the smallest not-yet-used member of its
+/// equivalence class — equivalently, do class members appear in
+/// ascending index order? Exactly one order per orbit of within-class
+/// reorderings is canonical, and it is the orbit's lexicographic
+/// minimum. Works on full orders too. Shared with the branch-and-bound
+/// solver's task split ([`crate::search`]).
+pub(crate) fn canonical_prefix(prefix: &[usize], class_of: &[usize]) -> bool {
+    for (pos, &k) in prefix.iter().enumerate() {
+        if (0..k).any(|j| class_of[j] == class_of[k] && !prefix[..pos].contains(&j)) {
+            return false;
+        }
+    }
+    true
+}
+
+/// The per-node expansion rule of the canonical enumerations, shared by
+/// [`sweep_stats_sym_with`]'s DFS and the branch-and-bound solver
+/// ([`crate::search`]): `k` must be skipped when a smaller unused index
+/// shares its equivalence class — expanding only one representative per
+/// class per node yields exactly the canonical orders
+/// ([`canonical_prefix`]) and hence one lexicographic-minimum member of
+/// every orbit. Keeping this rule in one place is what pins bnb and the
+/// collapsed sweep to the same canonical set.
+#[inline]
+pub(crate) fn class_blocked(k: usize, used: &[bool], class_of: &[usize]) -> bool {
+    (0..k).any(|j| !used[j] && class_of[j] == class_of[k])
+}
+
+/// Streaming sweep on the fluid simulator with the identical-kernel
+/// **symmetry collapse** and the default 4096-bin histogram. See
+/// [`sweep_stats_sym_with`].
+pub fn sweep_stats_sym(gpu: &GpuSpec, kernels: &[KernelProfile]) -> SweepStats {
+    sweep_stats_sym_with(gpu, kernels, &|| Box::new(SimulatorBackend::new()), 4096)
+}
+
+/// [`sweep_stats_with`] with **identical-kernel symmetry collapse**: only
+/// canonical orders (class members of
+/// [`crate::gpu::equivalence_classes`] in ascending index order) are
+/// evaluated, each folded in with multiplicity `∏ m_c!` — the size of
+/// its orbit of within-class reorderings, every member of which has a
+/// bit-identical makespan ([`crate::gpu::KernelProfile::model_identical`]
+/// documents why). On a workload with `m` copies of one kernel this
+/// evaluates `n!/m!` orders instead of `n!` while reporting the same
+/// `n_perms`, bit-identical best/worst makespans *and* orders
+/// (canonical orders include every orbit's lexicographic minimum, which
+/// is what the plain sweep's tie-break selects), an identical histogram,
+/// and a mean equal up to float summation order. Workloads with no
+/// duplicated kernels take the plain [`sweep_stats_with`] path
+/// unchanged.
+///
+/// Opt-in rather than the default because the multiplicity argument
+/// assumes the backend times kernels solely from their profile fields —
+/// true for both model backends, not necessarily for exotic substrates.
+pub fn sweep_stats_sym_with(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    n_bins: usize,
+) -> SweepStats {
+    let n = kernels.len();
+    assert!(n >= 1, "empty workload");
+    let class_of = crate::gpu::equivalence_classes(kernels);
+    let mut class_sizes = vec![0u64; n];
+    for &c in &class_of {
+        class_sizes[c] += 1;
+    }
+    // Orbit size of every canonical order: ∏ m_c! over the class sizes.
+    // n ≤ 20 in any sweepable setting, so this cannot overflow u64.
+    let weight: u64 = class_sizes
+        .iter()
+        .filter(|&&m| m > 1)
+        .map(|&m| (2..=m).product::<u64>())
+        .product();
+    if weight == 1 {
+        // No duplicated kernels: nothing to collapse.
+        return sweep_stats_with(gpu, kernels, make_backend, n_bins);
+    }
+
+    // Same histogram range reference as the plain streaming sweep, so
+    // the two modes' histograms are directly comparable.
+    let identity: Vec<usize> = (0..n).collect();
+    let mut b0 = make_backend();
+    let reference = b0.prepare(gpu, kernels).execute_order(&identity);
+    let (lo, hi) = if reference.is_finite() && reference > 0.0 {
+        (reference / 4.0, reference * 4.0)
+    } else {
+        (0.0, 1.0)
+    };
+
+    let mut prefixes = position_prefixes(n);
+    prefixes.retain(|p| canonical_prefix(p, &class_of));
+    let partials: Vec<SweepStats> = parallel_map(prefixes.len(), default_threads(), |pi| {
+        let mut backend = make_backend();
+        let mut stats = SweepStats::new(lo, hi, n_bins);
+        sym_enumerate_task(
+            gpu,
+            kernels,
+            backend.as_mut(),
+            &prefixes[pi],
+            &class_of,
+            &mut |t, order| stats.record_weighted(t, order, weight),
+        );
+        stats
+    });
+
+    let mut result = SweepStats::new(lo, hi, n_bins);
+    for p in &partials {
+        result.merge(p);
+    }
+    result
+}
+
+/// Evaluate every **canonical** permutation starting with `prefix`
+/// (itself canonical), feeding `(makespan, order)` pairs to `rec` —
+/// the symmetry-collapsed sibling of [`enumerate_task`]. Uses the
+/// checkpointed prefix tree when the backend supports it, filtered flat
+/// enumeration otherwise.
+fn sym_enumerate_task(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    backend: &mut dyn ExecutionBackend,
+    prefix: &[usize],
+    class_of: &[usize],
+    rec: &mut dyn FnMut(f64, &[usize]),
+) {
+    let n = kernels.len();
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    order.extend_from_slice(prefix);
+
+    let mut prepared = backend.prepare(gpu, kernels);
+    if prepared.supports_checkpoints() {
+        for &k in prefix {
+            prepared.checkpoint_push(k);
+        }
+        let mut used = vec![false; n];
+        for &k in prefix {
+            used[k] = true;
+        }
+        sym_checkpointed_dfs(prepared.as_mut(), &mut used, &mut order, n, class_of, rec);
+        for _ in prefix {
+            prepared.checkpoint_pop();
+        }
+    } else {
+        let mut rest: Vec<usize> = (0..n).filter(|i| !prefix.contains(i)).collect();
+        if rest.is_empty() {
+            let t = prepared.execute_order(&order);
+            rec(t, &order);
+            return;
+        }
+        let plen = prefix.len();
+        for_each_permutation(&mut rest, &mut |suffix| {
+            order.truncate(plen);
+            order.extend_from_slice(suffix);
+            if canonical_prefix(&order, class_of) {
+                let t = prepared.execute_order(&order);
+                rec(t, &order);
+            }
+        });
+    }
+}
+
+/// [`checkpointed_dfs`] restricted to canonical orders: each node
+/// expands only the smallest unused index of every equivalence class,
+/// and a model-identical final pair is completed in ascending order
+/// only.
+fn sym_checkpointed_dfs(
+    prepared: &mut dyn PreparedWorkload,
+    used: &mut [bool],
+    order: &mut Vec<usize>,
+    n: usize,
+    class_of: &[usize],
+    rec: &mut dyn FnMut(f64, &[usize]),
+) {
+    match n - order.len() {
+        0 => {
+            let t = prepared.execute_suffix(&[]);
+            rec(t, order);
+        }
+        1 => {
+            let k = used.iter().position(|u| !u).expect("one kernel left");
+            order.push(k);
+            let t = prepared.execute_suffix(&order[n - 1..]);
+            rec(t, order);
+            order.pop();
+        }
+        2 => {
+            let a = used.iter().position(|u| !u).expect("two kernels left");
+            let b = used[a + 1..]
+                .iter()
+                .position(|u| !u)
+                .map(|i| a + 1 + i)
+                .expect("two kernels left");
+            for (x, y) in [(a, b), (b, a)] {
+                if x == b && class_of[a] == class_of[b] {
+                    continue; // out-of-order twin of (a, b)
+                }
+                order.push(x);
+                order.push(y);
+                let t = prepared.execute_suffix(&order[n - 2..]);
+                rec(t, order);
+                order.pop();
+                order.pop();
+            }
+        }
+        _ => {
+            for k in 0..n {
+                if used[k] || class_blocked(k, used, class_of) {
+                    continue;
+                }
+                used[k] = true;
+                order.push(k);
+                prepared.checkpoint_push(k);
+                sym_checkpointed_dfs(prepared, used, order, n, class_of, rec);
+                prepared.checkpoint_pop();
+                order.pop();
+                used[k] = false;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -921,6 +1164,82 @@ mod tests {
                 "probe {t}: exact {exact} vs approx {approx} (tol {tol})"
             );
         }
+    }
+
+    #[test]
+    fn canonical_prefix_orders_class_members_ascending() {
+        // Classes: {0, 2}, {1}, {3} (class_of maps to smallest member).
+        let cls = [0usize, 1, 0, 3];
+        assert!(canonical_prefix(&[], &cls));
+        assert!(canonical_prefix(&[0, 2], &cls));
+        assert!(canonical_prefix(&[1, 0, 3, 2], &cls));
+        assert!(!canonical_prefix(&[2], &cls), "2 before its twin 0");
+        assert!(!canonical_prefix(&[1, 2, 0], &cls));
+        // All-distinct classes: everything is canonical.
+        let distinct = [0usize, 1, 2, 3];
+        assert!(canonical_prefix(&[3, 1, 2, 0], &distinct));
+    }
+
+    #[test]
+    fn sym_sweep_stats_matches_plain_on_duplicated_kernels() {
+        // 2 + 2 + 1 duplicate layout: the collapsed sweep evaluates
+        // 5!/(2!·2!) = 30 canonical orders, each with weight 4, and must
+        // agree with the plain 120-order sweep on everything except
+        // float summation order.
+        let gpu = GpuSpec::gtx580();
+        let a = kernel(16, 8, 8192, 3.0, 500.0);
+        let b = kernel(16, 4, 0, 9.0, 700.0);
+        let c = kernel(24, 12, 16384, 1.5, 400.0);
+        let ks = vec![a.clone(), a, b.clone(), b, c];
+        let plain = sweep_stats(&gpu, &ks);
+        let sym = sweep_stats_sym(&gpu, &ks);
+        assert_eq!(sym.n_perms, 120);
+        assert_eq!(sym.n_perms, plain.n_perms);
+        assert_eq!(sym.best_ms.to_bits(), plain.best_ms.to_bits());
+        assert_eq!(sym.worst_ms.to_bits(), plain.worst_ms.to_bits());
+        assert_eq!(sym.best_order, plain.best_order);
+        assert_eq!(sym.worst_order, plain.worst_order);
+        // Orbit members share bit-identical makespans, so the histograms
+        // are identical and histogram-served queries agree exactly.
+        for q in [0.1, 0.5, 0.9] {
+            assert_eq!(sym.quantile_ms(q).to_bits(), plain.quantile_ms(q).to_bits());
+        }
+        for probe in [plain.best_ms, plain.quantile_ms(0.5), plain.worst_ms] {
+            assert_eq!(
+                sym.percentile_rank(probe).to_bits(),
+                plain.percentile_rank(probe).to_bits()
+            );
+        }
+        let rel = (sym.mean_ms() - plain.mean_ms()).abs() / plain.mean_ms();
+        assert!(rel < 1e-9, "means drifted: {rel}");
+        // The analytic backend honors the same contract.
+        let factory: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync) =
+            &|| Box::new(AnalyticBackend::new());
+        let plain_a = sweep_stats_with(&gpu, &ks, factory, 4096);
+        let sym_a = sweep_stats_sym_with(&gpu, &ks, factory, 4096);
+        assert_eq!(sym_a.n_perms, plain_a.n_perms);
+        assert_eq!(sym_a.best_ms.to_bits(), plain_a.best_ms.to_bits());
+        assert_eq!(sym_a.best_order, plain_a.best_order);
+    }
+
+    #[test]
+    fn sym_sweep_stats_collapses_identical_workload_to_one_order() {
+        // n identical kernels: one canonical order carries the whole n!.
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![kernel(16, 8, 8192, 3.0, 500.0); 5];
+        let sym = sweep_stats_sym(&gpu, &ks);
+        assert_eq!(sym.n_perms, 120);
+        assert_eq!(sym.best_order, vec![0, 1, 2, 3, 4]);
+        assert_eq!(sym.worst_order, vec![0, 1, 2, 3, 4]);
+        assert_eq!(sym.best_ms.to_bits(), sym.worst_ms.to_bits());
+        // No duplicates: the sym spelling is exactly the plain sweep.
+        let distinct: Vec<_> = (0..4)
+            .map(|i| kernel(16, 4 + i * 8, 0, 2.0 + i as f64, 500.0))
+            .collect();
+        let sym = sweep_stats_sym(&gpu, &distinct);
+        let plain = sweep_stats(&gpu, &distinct);
+        assert_eq!(sym.n_perms, plain.n_perms);
+        assert_eq!(sym.best_ms.to_bits(), plain.best_ms.to_bits());
     }
 
     #[test]

@@ -26,14 +26,34 @@
 //!   incumbent (`complete = false`); how far each task got then depends
 //!   on scheduling, so only unbudgeted runs are bit-reproducible.
 //!
+//! # Identical-kernel symmetry collapse
+//!
+//! Real kernel graphs repeat kernels: an ACS-style app submits many
+//! instances of the same profiled kernel, and every within-class
+//! reordering of [`crate::gpu::KernelProfile::model_identical`] kernels
+//! yields a **bit-identical** makespan (per-block jitter depends on the
+//! block index only). The solver therefore expands, at every tree node,
+//! only the *smallest unused index of each equivalence class*
+//! ([`crate::gpu::equivalence_classes`]) — enumerating exactly the
+//! orders whose class members appear in ascending index order. The
+//! sweep's lexicographically tie-broken optimum is such an order (any
+//! tied optimum with class members out of order has a smaller in-order
+//! twin with the same bits), so results stay bit-identical to the
+//! exhaustive sweep while the tree shrinks by `∏ m_c!` for class sizes
+//! `m_c` — a factorial factor per duplicated kernel. Disable with
+//! [`BranchAndBound::without_symmetry`] for exotic substrates whose
+//! timing depends on more than the profile fields (both model backends
+//! honor the contract; `tests/incremental_equivalence.rs` pins
+//! with == without).
+//!
 //! The warm start is Algorithm 1's order: the paper shows it lands above
 //! the 90th percentile, so the very first bound checks already prune
 //! against a near-optimal incumbent.
 
 use super::{improves, BackendFactory, IncumbentSample, SearchBudget, SearchOutcome, SearchStrategy};
 use crate::exec::PreparedWorkload;
-use crate::gpu::{GpuSpec, KernelProfile};
-use crate::perm::position_prefixes;
+use crate::gpu::{equivalence_classes, GpuSpec, KernelProfile};
+use crate::perm::{canonical_prefix, class_blocked, position_prefixes};
 use crate::sched::reorder;
 use crate::util::{default_threads, parallel_map};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -53,9 +73,35 @@ const PRUNE_MARGIN: f64 = 1e-9;
 const SEQUENTIAL_MAX_N: usize = 6;
 
 /// Exact branch-and-bound launch-order solver (registry spelling
-/// `"bnb"`). See the module docs for the exactness argument.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct BranchAndBound;
+/// `"bnb"`). See the module docs for the exactness argument and the
+/// identical-kernel symmetry collapse.
+#[derive(Debug, Clone, Copy)]
+pub struct BranchAndBound {
+    /// Expand one representative per [`crate::gpu::equivalence_classes`]
+    /// class per node (default `true`; results are bit-identical either
+    /// way, the collapse only shrinks the tree).
+    pub symmetry: bool,
+}
+
+impl BranchAndBound {
+    pub fn new() -> Self {
+        BranchAndBound { symmetry: true }
+    }
+
+    /// The solver with the identical-kernel collapse disabled — the
+    /// full-enumeration reference of the equivalence pins and of
+    /// `kreorder search --compare-eval`, and an escape hatch for
+    /// substrates whose timing depends on more than the profile fields.
+    pub fn without_symmetry() -> Self {
+        BranchAndBound { symmetry: false }
+    }
+}
+
+impl Default for BranchAndBound {
+    fn default() -> Self {
+        BranchAndBound::new()
+    }
+}
 
 /// Shared monotone-minimum incumbent (f64 bits in an `AtomicU64`).
 struct SharedIncumbent(AtomicU64);
@@ -194,13 +240,28 @@ impl SearchStrategy for BranchAndBound {
             deadline: budget.max_wall.map(|d| t_start + d),
         };
 
+        // Identical-kernel collapse: expand one representative per class
+        // per node (the no-checkpoint fallback filters canonically
+        // instead). `None` disables the collapse everywhere.
+        let class_of = if self.symmetry {
+            Some(equivalence_classes(kernels))
+        } else {
+            None
+        };
+        let classes = class_of.as_deref();
+
         // One empty-prefix task (sequential, shared nothing) for small
-        // trees; the sweep's first-two-position split beyond.
-        let prefixes = if n <= SEQUENTIAL_MAX_N {
+        // trees; the sweep's first-two-position split beyond — with the
+        // non-canonical prefixes (a duplicate kernel ahead of a
+        // smaller-indexed class sibling) dropped entirely.
+        let mut prefixes = if n <= SEQUENTIAL_MAX_N {
             vec![Vec::new()]
         } else {
             position_prefixes(n)
         };
+        if let Some(cls) = classes {
+            prefixes.retain(|p| canonical_prefix(p, cls));
+        }
         let partials: Vec<Partial> = parallel_map(prefixes.len(), default_threads(), |pi| {
             let mut backend = make_backend();
             let mut p = Partial::new();
@@ -209,6 +270,7 @@ impl SearchStrategy for BranchAndBound {
                 kernels,
                 backend.as_mut(),
                 &prefixes[pi],
+                classes,
                 &incumbent,
                 &limits,
                 &mut p,
@@ -251,11 +313,13 @@ impl SearchStrategy for BranchAndBound {
 }
 
 /// Solve one first-two-position prefix task.
+#[allow(clippy::too_many_arguments)]
 fn bnb_task(
     gpu: &GpuSpec,
     kernels: &[KernelProfile],
     backend: &mut dyn crate::exec::ExecutionBackend,
     prefix: &[usize],
+    classes: Option<&[usize]>,
     incumbent: &SharedIncumbent,
     limits: &Limits,
     out: &mut Partial,
@@ -268,7 +332,11 @@ fn bnb_task(
     if !prepared.supports_checkpoints() {
         // No checkpoints ⇒ no bounds either (`suffix_lower_bound` needs a
         // prefix state): degrade to flat enumeration of this task's
-        // suffixes with incumbent tracking only.
+        // suffixes with incumbent tracking only. The symmetry collapse
+        // still applies (the solver's `symmetry` flag asserts the
+        // interchangeability contract regardless of substrate): the
+        // canonical prefixes were kept by the caller, and non-canonical
+        // *orders* are filtered here before spending an evaluation.
         let mut rest: Vec<usize> = (0..n).filter(|i| !prefix.contains(i)).collect();
         if rest.is_empty() {
             if limits.claim() {
@@ -286,12 +354,15 @@ fn bnb_task(
             if out.stopped {
                 return;
             }
+            order.truncate(plen);
+            order.extend_from_slice(suffix);
+            if classes.is_some_and(|cls| !canonical_prefix(&order, cls)) {
+                return;
+            }
             if !limits.claim() {
                 out.stopped = true;
                 return;
             }
-            order.truncate(plen);
-            order.extend_from_slice(suffix);
             let t = prepared.execute_order(&order);
             out.record(t, &order, incumbent);
         });
@@ -310,6 +381,7 @@ fn bnb_task(
         &mut order,
         &mut remaining_buf,
         n,
+        classes,
         incumbent,
         limits,
         out,
@@ -317,6 +389,15 @@ fn bnb_task(
     for _ in prefix {
         prepared.checkpoint_pop();
     }
+}
+
+/// Symmetry skip: `k` may be expanded only when no smaller unused index
+/// shares its equivalence class (one representative per class per node —
+/// the rule itself lives in [`crate::perm`] so this solver and the
+/// collapsed sweep can never disagree on the canonical set).
+#[inline]
+fn symmetry_skipped(k: usize, used: &[bool], classes: Option<&[usize]>) -> bool {
+    classes.is_some_and(|cls| class_blocked(k, used, cls))
 }
 
 /// Depth-first descent: the caller has pushed checkpoints for every
@@ -328,6 +409,7 @@ fn dfs(
     order: &mut Vec<usize>,
     remaining_buf: &mut Vec<usize>,
     n: usize,
+    classes: Option<&[usize]>,
     incumbent: &SharedIncumbent,
     limits: &Limits,
     out: &mut Partial,
@@ -362,7 +444,13 @@ fn dfs(
                 .position(|u| !u)
                 .map(|i| a + 1 + i)
                 .expect("two kernels left");
+            // Model-identical last pair: (b, a) is the out-of-order twin
+            // of (a, b) with bit-identical makespan — skip it.
+            let twins = classes.is_some_and(|cls| cls[a] == cls[b]);
             for (x, y) in [(a, b), (b, a)] {
+                if twins && x == b {
+                    continue;
+                }
                 if !limits.claim() {
                     out.stopped = true;
                     return;
@@ -386,7 +474,7 @@ fn dfs(
                 return;
             }
             for k in 0..n {
-                if used[k] {
+                if used[k] || symmetry_skipped(k, used, classes) {
                     continue;
                 }
                 used[k] = true;
@@ -398,6 +486,7 @@ fn dfs(
                     order,
                     remaining_buf,
                     n,
+                    classes,
                     incumbent,
                     limits,
                     out,

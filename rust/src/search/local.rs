@@ -14,10 +14,23 @@
 //! first descent starts from Algorithm 1's order; all randomness comes
 //! from one [`SplitMix64`] stream, so `(seed, max_evals)` fully
 //! determines the incumbent trajectory.
+//!
+//! # Suffix-priced evaluation
+//!
+//! A swap at `(i, j)` or an insertion between `i` and `j` leaves the
+//! incumbent's prefix up to `min(i, j)` untouched, so candidates are
+//! evaluated through a [`PrefixCursor`]: the checkpoint stack grows
+//! along the incumbent as the scan's leading position advances, and each
+//! candidate re-simulates only its suffix. Bit-identical to full
+//! evaluation (pinned by `tests/incremental_equivalence.rs`), and the
+//! descent loop performs no heap allocation after warm-up
+//! (`tests/zero_alloc.rs`).
 
+use super::anneal::apply_shift;
 use super::{
     BackendFactory, Incumbent, SearchBudget, SearchOutcome, SearchStrategy, DEFAULT_ANYTIME_EVALS,
 };
+use crate::exec::PrefixCursor;
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::sched::reorder;
 use crate::util::SplitMix64;
@@ -28,11 +41,106 @@ use std::time::Instant;
 #[derive(Debug, Clone, Copy)]
 pub struct LocalSearch {
     pub seed: u64,
+    /// Evaluate candidates through the prefix-reuse cursor (the default).
+    /// `false` forces full per-candidate evaluation — results are
+    /// bit-identical either way; the flag exists for the equivalence
+    /// pins and `kreorder search --compare-eval`.
+    pub incremental: bool,
 }
 
 impl LocalSearch {
     pub fn new(seed: u64) -> Self {
-        LocalSearch { seed }
+        LocalSearch {
+            seed,
+            incremental: true,
+        }
+    }
+
+    /// This strategy with prefix-reuse evaluation disabled (the
+    /// full-evaluation reference path; same trajectories, slower).
+    pub fn full_evaluation(mut self) -> Self {
+        self.incremental = false;
+        self
+    }
+
+    /// One first-improvement descent from `cur` (whose makespan is
+    /// `t_cur`) to a local optimum, over caller-owned buffers — the
+    /// allocation-free core of [`SearchStrategy::search`], exposed so
+    /// `tests/zero_alloc.rs` can pin it directly.
+    ///
+    /// Returns `(t_final, stopped)` where `stopped` is `true` when the
+    /// descent ended because the evaluation budget or deadline ran out
+    /// (rather than at a local optimum); `cur` is left at the last
+    /// accepted order and `offer` received every evaluation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn descend_on(
+        &self,
+        cursor: &mut PrefixCursor<'_>,
+        cur: &mut Vec<usize>,
+        cand: &mut Vec<usize>,
+        t_cur: f64,
+        max_evals: u64,
+        deadline: Option<Instant>,
+        evals: &mut u64,
+        offer: &mut dyn FnMut(u64, f64, &[usize]),
+    ) -> (f64, bool) {
+        let n = cur.len();
+        debug_assert!(n >= 2);
+        debug_assert_eq!(cand.len(), n);
+        let out_of_time = || deadline.is_some_and(|d| Instant::now() >= d);
+        let mut t_cur = t_cur;
+        let mut improved = true;
+        while improved {
+            improved = false;
+            // Swap neighborhood: candidates at leading position i share
+            // the incumbent's prefix of length i.
+            'swaps: for i in 0..n - 1 {
+                for j in i + 1..n {
+                    if *evals >= max_evals || out_of_time() {
+                        return (t_cur, true);
+                    }
+                    cand.copy_from_slice(cur);
+                    cand.swap(i, j);
+                    let t = cursor.eval_anchored(cand, i);
+                    *evals += 1;
+                    offer(*evals, t, cand);
+                    if t < t_cur {
+                        cur.copy_from_slice(cand);
+                        t_cur = t;
+                        improved = true;
+                        break 'swaps;
+                    }
+                }
+            }
+            if improved {
+                continue;
+            }
+            // Insertion neighborhood: shift position i to position j
+            // (i == j is the identity and is skipped without spending an
+            // evaluation, exactly like the old `cand == cur` test).
+            'shifts: for i in 0..n {
+                for j in 0..n {
+                    if i == j {
+                        continue;
+                    }
+                    if *evals >= max_evals || out_of_time() {
+                        return (t_cur, true);
+                    }
+                    cand.copy_from_slice(cur);
+                    apply_shift(cand, i, j);
+                    let t = cursor.eval_anchored(cand, i.min(j));
+                    *evals += 1;
+                    offer(*evals, t, cand);
+                    if t < t_cur {
+                        cur.copy_from_slice(cand);
+                        t_cur = t;
+                        improved = true;
+                        break 'shifts;
+                    }
+                }
+            }
+        }
+        (t_cur, false)
     }
 }
 
@@ -56,11 +164,16 @@ impl SearchStrategy for LocalSearch {
         let out_of_time = || deadline.is_some_and(|d| Instant::now() >= d);
 
         let mut backend = make_backend();
-        let mut prepared = backend.prepare(gpu, kernels);
+        let prepared = backend.prepare(gpu, kernels);
+        let mut cursor = if self.incremental {
+            PrefixCursor::new(prepared)
+        } else {
+            PrefixCursor::new_full(prepared)
+        };
         let mut rng = SplitMix64::new(self.seed);
 
         let mut cur = reorder(gpu, kernels).order;
-        let mut t_cur = prepared.execute_order(&cur);
+        let mut t_cur = cursor.eval(&cur);
         let mut evals = 1u64;
         let mut inc = Incumbent::new();
         inc.offer(evals, t_cur, &cur);
@@ -79,66 +192,25 @@ impl SearchStrategy for LocalSearch {
         }
 
         let mut cand = cur.clone();
-        'search: while evals < max_evals && !out_of_time() {
+        while evals < max_evals && !out_of_time() {
             // One first-improvement descent to a local optimum.
-            let mut improved = true;
-            while improved {
-                improved = false;
-                // Swap neighborhood.
-                'swaps: for i in 0..n - 1 {
-                    for j in i + 1..n {
-                        if evals >= max_evals || out_of_time() {
-                            break 'search;
-                        }
-                        cand.copy_from_slice(&cur);
-                        cand.swap(i, j);
-                        let t = prepared.execute_order(&cand);
-                        evals += 1;
-                        inc.offer(evals, t, &cand);
-                        if t < t_cur {
-                            cur.copy_from_slice(&cand);
-                            t_cur = t;
-                            improved = true;
-                            break 'swaps;
-                        }
-                    }
-                }
-                if improved {
-                    continue;
-                }
-                // Insertion neighborhood. After `remove(i)` the candidate
-                // has n-1 elements, so valid insert positions are 0..=n-1
-                // inclusive — iterating to n-1 keeps "move to the end"
-                // reachable.
-                'shifts: for i in 0..n {
-                    for j in 0..n {
-                        if evals >= max_evals || out_of_time() {
-                            break 'search;
-                        }
-                        cand.copy_from_slice(&cur);
-                        let v = cand.remove(i);
-                        cand.insert(j, v);
-                        if cand == cur {
-                            continue; // no-op shift
-                        }
-                        let t = prepared.execute_order(&cand);
-                        evals += 1;
-                        inc.offer(evals, t, &cand);
-                        if t < t_cur {
-                            cur.copy_from_slice(&cand);
-                            t_cur = t;
-                            improved = true;
-                            break 'shifts;
-                        }
-                    }
-                }
-            }
-            // Local optimum: seeded restart.
-            if evals >= max_evals {
+            let (t, stopped) = self.descend_on(
+                &mut cursor,
+                &mut cur,
+                &mut cand,
+                t_cur,
+                max_evals,
+                deadline,
+                &mut evals,
+                &mut |e, t, o| inc.offer(e, t, o),
+            );
+            t_cur = t;
+            if stopped || evals >= max_evals {
                 break;
             }
+            // Local optimum: seeded restart.
             rng.shuffle(&mut cur);
-            t_cur = prepared.execute_order(&cur);
+            t_cur = cursor.eval(&cur);
             evals += 1;
             inc.offer(evals, t_cur, &cur);
         }

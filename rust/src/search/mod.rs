@@ -14,7 +14,10 @@
 //!   whose admissible lower bound
 //!   ([`crate::exec::PreparedWorkload::suffix_lower_bound`], derived
 //!   from the fluid model's residual-work / occupancy / bandwidth
-//!   invariants) exceeds the incumbent. Bit-identical optima to
+//!   invariants) exceeds the incumbent, and collapses
+//!   profile-identical kernels to one representative per tree node
+//!   ([`crate::gpu::equivalence_classes`] — a `∏ m_c!` tree shrink on
+//!   workloads with repeated kernels). Bit-identical optima to
 //!   [`crate::perm::sweep`] — including the lexicographic tie-break on
 //!   the optimal order — at a fraction of the evaluations; practical to
 //!   n ≈ 16–20 where enumeration is impossible.
@@ -24,6 +27,13 @@
 //! * [`LocalSearch`] (`"local:<seed>"`) — anytime. First-improvement
 //!   descent over the swap + insertion neighborhoods with seeded random
 //!   restarts at local optima.
+//!
+//! Both anytime strategies price each candidate move by its **suffix**:
+//! evaluation goes through [`crate::exec::PrefixCursor`], which keeps a
+//! checkpoint stack anchored along the incumbent and re-simulates only
+//! past the move's first touched position — bit-identical to full
+//! evaluation (checkpoint restore is pinned bit-exact), so trajectories
+//! are unchanged and the speedup is pure.
 //!
 //! Every strategy consumes a [`SearchBudget`] (evaluations and/or wall
 //! time) and reports a [`SearchOutcome`] carrying the incumbent
@@ -237,7 +247,7 @@ pub static STRATEGIES: &[StrategyEntry] = &[
         name: "bnb",
         aliases: &["exact", "branch-and-bound"],
         description: "exact branch-and-bound over the checkpointed prefix tree (provably optimal)",
-        make: || Box::new(BranchAndBound),
+        make: || Box::new(BranchAndBound::new()),
     },
     StrategyEntry {
         name: "anneal:<seed>",
@@ -294,10 +304,41 @@ pub fn parse_strategy(s: &str) -> Result<Box<dyn SearchStrategy>, StrategyParseE
         }
     };
     match head {
-        "bnb" | "exact" | "branch-and-bound" if param.is_none() => Ok(Box::new(BranchAndBound)),
+        "bnb" | "exact" | "branch-and-bound" if param.is_none() => {
+            Ok(Box::new(BranchAndBound::new()))
+        }
         "anneal" | "sa" => Ok(Box::new(SimulatedAnnealing::new(seed(param)?))),
         "local" | "ls" => Ok(Box::new(LocalSearch::new(seed(param)?))),
         _ => Err(err()),
+    }
+}
+
+/// Parse a strategy spelling into its **reference configuration**: the
+/// anytime strategies with prefix-reuse (cursor) evaluation disabled,
+/// branch-and-bound with the identical-kernel symmetry collapse
+/// disabled. Results are bit-identical to [`parse_strategy`]'s fast
+/// configurations by construction — this exists so
+/// `kreorder search --compare-eval` and the equivalence pins can verify
+/// exactly that while measuring the speedup.
+pub fn parse_strategy_reference(s: &str) -> Result<Box<dyn SearchStrategy>, StrategyParseError> {
+    // Derive from the one real parser (aliases, seed handling, errors all
+    // live there) and rebuild the reference config from the *canonical*
+    // name it reports — so the two paths cannot drift on spellings. A
+    // future strategy without a reference configuration falls through to
+    // an error instead of silently diverging.
+    let canonical = parse_strategy(s)?.name();
+    let (head, param) = match canonical.split_once(':') {
+        Some((h, p)) => (h, Some(p)),
+        None => (canonical.as_str(), None),
+    };
+    let seed = param
+        .map(|p| p.parse::<u64>().expect("canonical names carry numeric seeds"))
+        .unwrap_or(0);
+    match head {
+        "bnb" => Ok(Box::new(BranchAndBound::without_symmetry())),
+        "anneal" => Ok(Box::new(SimulatedAnnealing::new(seed).full_evaluation())),
+        "local" => Ok(Box::new(LocalSearch::new(seed).full_evaluation())),
+        _ => Err(StrategyParseError { input: s.into() }),
     }
 }
 
@@ -409,7 +450,7 @@ impl LaunchPolicy for SearchPolicy {
         let exact_ok = n <= self.exact_max_n
             && exact_tree_evals(n).is_some_and(|need| need <= self.budget_evals);
         let outcome = if exact_ok {
-            BranchAndBound.search(gpu, kernels, factory, &budget)
+            BranchAndBound::new().search(gpu, kernels, factory, &budget)
         } else {
             match parse_strategy(&self.strategy) {
                 // Same determinism rule for directly-constructed
@@ -473,6 +514,20 @@ mod tests {
         }
         assert_eq!(parse_strategy("sa:9").unwrap().name(), "anneal:9");
         assert_eq!(parse_strategy("ls:9").unwrap().name(), "local:9");
+    }
+
+    #[test]
+    fn reference_spellings_parse_and_share_names() {
+        // The reference (full-evaluation / no-symmetry) configurations
+        // accept exactly the registry spellings and keep the same names:
+        // they differ only in evaluation mechanics, never in results.
+        for s in ["bnb", "anneal:7", "local:3", "sa:1", "ls:2"] {
+            let fast = parse_strategy(s).unwrap();
+            let reference = parse_strategy_reference(s).unwrap();
+            assert_eq!(fast.name(), reference.name(), "{s}");
+        }
+        assert!(parse_strategy_reference("nope").is_err());
+        assert!(parse_strategy_reference("bnb:3").is_err());
     }
 
     #[test]

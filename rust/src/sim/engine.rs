@@ -462,6 +462,24 @@ impl SimState {
         self.t
     }
 
+    /// [`SimState::finish_with`] generalized to any stack level: complete
+    /// the prefix checkpointed at `depth` (`0` = the empty prefix, up to
+    /// [`SimState::prefix_len`]) with `suffix`, leaving the whole stack —
+    /// including the checkpoints above `depth` — intact. Snapshots are
+    /// pure functions of their prefix, so the result is bit-identical to
+    /// [`SimState::makespan_of`] on `prefix[..depth] ++ suffix` no matter
+    /// what was evaluated in between. This is the depth-addressable seam
+    /// behind [`crate::exec::PrefixCursor`]. Allocation-free after
+    /// warm-up.
+    pub fn finish_from(&mut self, depth: usize, suffix: &[usize]) -> f64 {
+        debug_assert!(!self.traced, "checkpointing does not snapshot traces");
+        debug_assert!(depth < self.depth, "no checkpoint at depth {depth}");
+        self.restore_at(depth);
+        self.order_buf.extend_from_slice(suffix);
+        self.run_to_completion();
+        self.t
+    }
+
     /// Admissible lower bound on [`SimState::finish_with`] over **every**
     /// permutation of `remaining` — the branch-and-bound pruning bound.
     ///
@@ -525,7 +543,19 @@ impl SimState {
 
     fn save_snapshot(&mut self) {
         if self.snapshots.len() == self.depth {
-            self.snapshots.push(Snapshot::default());
+            // Reserve every buffer at its workload-wide maximum up front,
+            // so saving a *different* prefix at this depth later (the
+            // anytime cursor re-anchors constantly) can never reallocate
+            // — first touch of a depth is the only allocation.
+            let n = self.consts.len();
+            self.snapshots.push(Snapshot {
+                order: Vec::with_capacity(n),
+                sm_used: Vec::with_capacity(self.n_sm),
+                resident: Vec::with_capacity(self.n_sm * self.blocks_per_sm),
+                blocks_left: Vec::with_capacity(n),
+                kernel_finish: Vec::with_capacity(n),
+                ..Snapshot::default()
+            });
         }
         let snap = &mut self.snapshots[self.depth];
         snap.t = self.t;
@@ -549,7 +579,11 @@ impl SimState {
 
     fn restore_top(&mut self) {
         debug_assert!(self.depth > 0);
-        let snap = &self.snapshots[self.depth - 1];
+        self.restore_at(self.depth - 1);
+    }
+
+    fn restore_at(&mut self, idx: usize) {
+        let snap = &self.snapshots[idx];
         self.t = snap.t;
         self.n_events = snap.n_events;
         self.dispatch_stalls = snap.dispatch_stalls;
@@ -1061,6 +1095,39 @@ mod tests {
             }
         }
         check(&mut state, &mut Vec::new(), n);
+    }
+
+    #[test]
+    fn finish_from_matches_full_runs_at_every_depth() {
+        // The depth-addressable restore must be bit-identical to a flat
+        // run of prefix[..depth] ++ suffix, and must leave the deeper
+        // checkpoints usable afterwards.
+        let gpu = GpuSpec::gtx580();
+        let ks = vec![
+            kernel("a", 16, 4, 8192, 3.11, 800.0),
+            kernel("b", 32, 8, 0, 11.1, 400.0),
+            kernel("c", 48, 6, 16384, 2.0, 300.0),
+            kernel("d", 12, 16, 0, 1.0, 600.0),
+        ];
+        let mut state = SimState::new(&gpu, &ks);
+        let prefix = [2usize, 0, 3];
+        for &k in &prefix {
+            state.push_prefix_kernel(k);
+        }
+        // depth 0..=3, each completed with the lexicographically smallest
+        // suffix over the unused kernels.
+        let suffixes: [&[usize]; 4] = [&[0, 1, 2, 3], &[0, 1, 3], &[1, 3], &[1]];
+        for (depth, suffix) in suffixes.iter().enumerate() {
+            let mut order: Vec<usize> = prefix[..depth].to_vec();
+            order.extend_from_slice(suffix);
+            let from = state.finish_from(depth, suffix);
+            let full = simulate_order(&gpu, &ks, &order).makespan_ms;
+            assert_eq!(from.to_bits(), full.to_bits(), "depth {depth}");
+        }
+        // The top-of-stack checkpoint survived every mid-stack restore.
+        let top = state.finish_with(&[1]);
+        let full = simulate_order(&gpu, &ks, &[2, 0, 3, 1]).makespan_ms;
+        assert_eq!(top.to_bits(), full.to_bits());
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! PR pins for the prefix-reuse / symmetry-collapse optimizations: both
+//! are **pure speedups**, so every observable result must stay
+//! bit-identical to the reference paths.
+//!
+//! * Anytime strategies evaluated through the [`PrefixCursor`] produce
+//!   the exact same [`SearchOutcome`] — best makespan bits, best order,
+//!   evaluation count and full incumbent trajectory — as full
+//!   per-candidate evaluation, on every scenario family and both model
+//!   backends.
+//! * Branch-and-bound with the identical-kernel symmetry collapse
+//!   returns the same proven optimum (bits *and* tie-broken order) as
+//!   the full-enumeration solver and the exhaustive sweep, on workloads
+//!   with duplicated kernels.
+
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::gpu::{equivalence_classes, GpuSpec, KernelProfile};
+use kreorder::perm::sweep_with;
+use kreorder::search::{
+    BranchAndBound, LocalSearch, SearchBudget, SearchOutcome, SearchStrategy, SimulatedAnnealing,
+};
+use kreorder::workloads::{all_scenarios, scenario_by_id};
+
+type Factory = dyn Fn() -> Box<dyn ExecutionBackend> + Sync;
+
+fn assert_outcomes_identical(a: &SearchOutcome, b: &SearchOutcome, ctx: &str) {
+    assert_eq!(a.strategy, b.strategy, "{ctx}");
+    assert_eq!(
+        a.best_ms.to_bits(),
+        b.best_ms.to_bits(),
+        "{ctx}: best {} vs {}",
+        a.best_ms,
+        b.best_ms
+    );
+    assert_eq!(a.best_order, b.best_order, "{ctx}");
+    assert_eq!(a.evals, b.evals, "{ctx}");
+    assert_eq!(a.trajectory.len(), b.trajectory.len(), "{ctx}: trajectory lengths");
+    for (x, y) in a.trajectory.iter().zip(&b.trajectory) {
+        assert_eq!(x.eval, y.eval, "{ctx}");
+        assert_eq!(x.best_ms.to_bits(), y.best_ms.to_bits(), "{ctx}");
+    }
+}
+
+/// Cursor evaluation vs full evaluation: identical `SearchOutcome` for
+/// both anytime strategies on every scenario family (simulator model).
+#[test]
+fn anytime_cursor_outcomes_bit_identical_on_all_families() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+    let budget = SearchBudget::evals(250);
+    for sc in all_scenarios() {
+        let ks = sc.workload(&gpu, 8, 3);
+        for seed in [0u64, 7] {
+            let pairs: [(Box<dyn SearchStrategy>, Box<dyn SearchStrategy>); 2] = [
+                (
+                    Box::new(SimulatedAnnealing::new(seed)),
+                    Box::new(SimulatedAnnealing::new(seed).full_evaluation()),
+                ),
+                (
+                    Box::new(LocalSearch::new(seed)),
+                    Box::new(LocalSearch::new(seed).full_evaluation()),
+                ),
+            ];
+            for (fast, reference) in pairs {
+                let a = fast.search(&gpu, &ks, factory, &budget);
+                let b = reference.search(&gpu, &ks, factory, &budget);
+                let ctx = format!("{} seed={seed} {}", sc.id, a.strategy);
+                assert_outcomes_identical(&a, &b, &ctx);
+            }
+        }
+    }
+}
+
+/// The same pin on the analytic round model — the cursor must be exact
+/// on every checkpoint-capable backend, not just the simulator.
+#[test]
+fn anytime_cursor_outcomes_bit_identical_on_analytic_backend() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(AnalyticBackend::new());
+    let ks = scenario_by_id("complementary").unwrap().workload(&gpu, 10, 5);
+    let budget = SearchBudget::evals(400);
+    let a = SimulatedAnnealing::new(11).search(&gpu, &ks, factory, &budget);
+    let b = SimulatedAnnealing::new(11)
+        .full_evaluation()
+        .search(&gpu, &ks, factory, &budget);
+    assert_outcomes_identical(&a, &b, "analytic anneal");
+    let a = LocalSearch::new(11).search(&gpu, &ks, factory, &budget);
+    let b = LocalSearch::new(11)
+        .full_evaluation()
+        .search(&gpu, &ks, factory, &budget);
+    assert_outcomes_identical(&a, &b, "analytic local");
+}
+
+/// A workload of `copies[i]` clones of each base kernel — the shape real
+/// app streams (many instances of one profiled kernel) produce.
+fn duplicated_workload(
+    gpu: &GpuSpec,
+    base_n: usize,
+    copies: &[usize],
+    seed: u64,
+) -> Vec<KernelProfile> {
+    let base = scenario_by_id("uniform").unwrap().workload(gpu, base_n, seed);
+    assert_eq!(base.len(), copies.len());
+    let mut ks = Vec::new();
+    for (k, &m) in base.iter().zip(copies) {
+        for _ in 0..m {
+            ks.push(k.clone());
+        }
+    }
+    ks
+}
+
+/// Symmetry-collapsed branch-and-bound == full-enumeration
+/// branch-and-bound == exhaustive sweep, on duplicated-kernel workloads
+/// (sequential solver path, both model backends).
+#[test]
+fn bnb_symmetry_matches_full_enumeration_and_sweep() {
+    let gpu = GpuSpec::gtx580();
+    let sim: &Factory = &|| Box::new(SimulatorBackend::new());
+    let analytic: &Factory = &|| Box::new(AnalyticBackend::new());
+    for copies in [&[2usize, 2, 1][..], &[3, 1, 2][..]] {
+        let ks = duplicated_workload(&gpu, 3, copies, 17);
+        let classes = equivalence_classes(&ks);
+        assert!(
+            classes.iter().enumerate().any(|(i, &c)| c != i),
+            "workload must actually contain duplicates"
+        );
+        for (bname, factory) in [("sim", sim), ("analytic", analytic)] {
+            let sw = sweep_with(&gpu, &ks, factory);
+            let sym = BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::unlimited());
+            let full = BranchAndBound::without_symmetry().search(
+                &gpu,
+                &ks,
+                factory,
+                &SearchBudget::unlimited(),
+            );
+            let ctx = format!("{copies:?} {bname}");
+            assert!(sym.complete && full.complete, "{ctx}");
+            assert_eq!(sym.best_ms.to_bits(), full.best_ms.to_bits(), "{ctx}");
+            assert_eq!(sym.best_order, full.best_order, "{ctx}");
+            assert_eq!(sym.best_ms.to_bits(), sw.best_ms.to_bits(), "{ctx}");
+            assert_eq!(sym.best_order, sw.best_order, "{ctx}: sweep tie-break drift");
+            assert!(
+                sym.evals <= full.evals,
+                "{ctx}: collapse must never evaluate more ({} vs {})",
+                sym.evals,
+                full.evals
+            );
+        }
+    }
+}
+
+/// The collapse on the parallel solver path (n > 6) and on an
+/// all-identical workload, where the tree shrinks by the full n!.
+#[test]
+fn bnb_symmetry_exact_on_parallel_path_and_identical_workloads() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+
+    // n = 7 (past SEQUENTIAL_MAX_N): prefix tasks are canonically
+    // filtered and the per-node skip runs inside worker tasks.
+    let ks = duplicated_workload(&gpu, 3, &[3, 2, 2], 29);
+    let sym = BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    let full =
+        BranchAndBound::without_symmetry().search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    assert!(sym.complete && full.complete);
+    assert_eq!(sym.best_ms.to_bits(), full.best_ms.to_bits());
+    assert_eq!(sym.best_order, full.best_order);
+    assert!(sym.evals <= full.evals);
+
+    // All-identical: every order ties, the canonical tree is one path,
+    // and the reported optimum must still be the identity order.
+    let ks = duplicated_workload(&gpu, 1, &[6], 31);
+    let sym = BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    assert!(sym.complete);
+    assert_eq!(sym.best_order, vec![0, 1, 2, 3, 4, 5]);
+    // The collapsed tree holds exactly one completion beyond the warm
+    // start's evaluation.
+    assert!(sym.evals <= 2, "expected ≤ 2 evals on a fully collapsed tree, got {}", sym.evals);
+}
+
+/// On all-distinct workloads the collapse is a no-op: identical
+/// outcomes, identical evaluation counts.
+#[test]
+fn bnb_symmetry_noop_without_duplicates() {
+    let gpu = GpuSpec::gtx580();
+    let factory: &Factory = &|| Box::new(SimulatorBackend::new());
+    let ks = scenario_by_id("skewed").unwrap().workload(&gpu, 6, 2);
+    assert_eq!(equivalence_classes(&ks), (0..6).collect::<Vec<_>>());
+    let sym = BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    let full =
+        BranchAndBound::without_symmetry().search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    assert_eq!(sym.best_ms.to_bits(), full.best_ms.to_bits());
+    assert_eq!(sym.best_order, full.best_order);
+    assert_eq!(sym.evals, full.evals);
+    assert_eq!(sym.pruned_subtrees, full.pruned_subtrees);
+}

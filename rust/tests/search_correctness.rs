@@ -38,7 +38,8 @@ fn bnb_matches_sweep_bitwise_on_all_scenario_families() {
             for (bname, factory) in [("sim", sim), ("analytic", analytic)] {
                 let ks = sc.workload(&gpu, n, 9);
                 let sw = sweep_with(&gpu, &ks, factory);
-                let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::unlimited());
+                let out =
+                    BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::unlimited());
                 assert!(out.complete, "{} n={n} {bname}: not proven optimal", sc.id);
                 assert_eq!(
                     out.best_ms.to_bits(),
@@ -66,7 +67,7 @@ fn bnb_matches_sweep_on_paper_experiment() {
     let factory: &Factory = &|| Box::new(SimulatorBackend::new());
     let ks = by_id("epbs-6").unwrap().kernels;
     let sw = sweep_with(&gpu, &ks, factory);
-    let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    let out = BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::unlimited());
     assert!(out.complete);
     assert_eq!(out.best_ms.to_bits(), sw.best_ms.to_bits());
     assert_eq!(out.best_order, sw.best_order);
@@ -90,7 +91,7 @@ fn bnb_tie_break_matches_sweep_on_identical_kernels() {
     let factory: &Factory = &|| Box::new(SimulatorBackend::new());
     let ks = vec![by_id("epbs-6").unwrap().kernels[0].clone(); 5];
     let sw = sweep_with(&gpu, &ks, factory);
-    let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::unlimited());
+    let out = BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::unlimited());
     assert_eq!(sw.best_order, vec![0, 1, 2, 3, 4]);
     assert_eq!(out.best_order, vec![0, 1, 2, 3, 4]);
     assert_eq!(out.best_ms.to_bits(), sw.best_ms.to_bits());
@@ -170,7 +171,7 @@ fn bnb_respects_eval_budget() {
 
     // A budget of 1 is consumed entirely by the warm start: the solver
     // must degrade to exactly the Algorithm 1 order, unproven.
-    let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::evals(1));
+    let out = BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::evals(1));
     assert!(!out.complete);
     assert_eq!(out.evals, 1);
     assert_eq!(out.best_order, reorder(&gpu, &ks).order);
@@ -179,7 +180,7 @@ fn bnb_respects_eval_budget() {
     // A small budget is never overrun, and the incumbent it returns is
     // at least as good as the warm start.
     let warm = out.best_ms;
-    let out = BranchAndBound.search(&gpu, &ks, factory, &SearchBudget::evals(40));
+    let out = BranchAndBound::new().search(&gpu, &ks, factory, &SearchBudget::evals(40));
     assert!(out.evals <= 40, "budget overrun: {}", out.evals);
     assert!(out.best_ms <= warm * (1.0 + 1e-12));
     assert_permutation(&out.best_order, ks.len());

@@ -1,13 +1,19 @@
 //! Acceptance pin: the per-permutation sweep hot path performs **no heap
 //! allocation after warm-up**, for both model backends, on both the flat
-//! (`execute_order`) and prefix-checkpointed paths.
+//! (`execute_order`) and prefix-checkpointed paths — and the anytime
+//! search loops (one simulated-annealing run, one local-search descent)
+//! are equally allocation-free on their cursor-evaluated hot path.
 //!
 //! A counting global allocator wraps the system allocator; this file
 //! contains a single `#[test]` (its own test binary) so no concurrent
 //! test pollutes the counter.
 
-use kreorder::exec::{AnalyticBackend, ExecutionBackend, PreparedWorkload, SimulatorBackend};
+use kreorder::exec::{
+    AnalyticBackend, ExecutionBackend, PrefixCursor, PreparedWorkload, SimulatorBackend,
+};
 use kreorder::gpu::GpuSpec;
+use kreorder::sched::reorder;
+use kreorder::search::{LocalSearch, SimulatedAnnealing};
 use kreorder::workloads::synthetic_workload;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -121,4 +127,93 @@ fn per_permutation_path_is_allocation_free_after_warmup() {
             after - before
         );
     }
+
+    // ---- anytime search loops: SA + one local-search descent ----------
+    //
+    // The cursor-evaluated move loops must be equally allocation-free:
+    // run each loop once to warm every checkpoint depth and scratch
+    // buffer, then re-run the identical (seeded, deterministic) loop
+    // under the counter. The incumbent is folded into preallocated
+    // buffers via the `offer` callback, exactly as `search()` does with
+    // its warmed `Incumbent`.
+    let warm_order = reorder(&gpu, &ks).order;
+    let factories: Vec<(&str, Box<dyn ExecutionBackend>)> = vec![
+        ("sim", Box::new(SimulatorBackend::new())),
+        ("analytic", Box::new(AnalyticBackend::new())),
+    ];
+    for (name, mut backend) in factories {
+        let mut cursor = PrefixCursor::new(backend.prepare(&gpu, &ks));
+        let mut cur = warm_order.clone();
+        let mut cand = cur.clone();
+        let mut best_ms = f64::INFINITY;
+        let mut best_order = vec![0usize; n];
+        // Anchoring at n-1 touches every checkpoint depth once — the
+        // only allocation the snapshot stack ever makes is that first
+        // touch (each level reserves its workload-wide max capacity).
+        let t_warm = cursor.eval_anchored(&cur, n - 1);
+
+        // Warm-up: grows every scratch buffer the seeded loops reach.
+        run_anytime_loops(
+            &mut cursor,
+            &warm_order,
+            t_warm,
+            &mut cur,
+            &mut cand,
+            &mut best_ms,
+            &mut best_order,
+        );
+
+        // Measured: the identical loops must not touch the allocator.
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        run_anytime_loops(
+            &mut cursor,
+            &warm_order,
+            t_warm,
+            &mut cur,
+            &mut cand,
+            &mut best_ms,
+            &mut best_order,
+        );
+        let after = ALLOC_CALLS.load(Ordering::Relaxed);
+
+        assert!(best_ms.is_finite() && best_order.len() == n);
+        assert_eq!(
+            after - before,
+            0,
+            "{name}: anytime search loop allocated {} time(s) after warm-up",
+            after - before
+        );
+    }
+}
+
+/// One seeded SA run plus one local-search descent over preallocated
+/// buffers — the anytime hot loops exactly as `search()` drives them,
+/// with the incumbent folded into caller-owned storage.
+fn run_anytime_loops(
+    cursor: &mut PrefixCursor<'_>,
+    warm_order: &[usize],
+    t_warm: f64,
+    cur: &mut Vec<usize>,
+    cand: &mut Vec<usize>,
+    best_ms: &mut f64,
+    best_order: &mut Vec<usize>,
+) {
+    let sa = SimulatedAnnealing::new(9);
+    let ls = LocalSearch::new(9);
+    let mut offer = |_: u64, t: f64, o: &[usize]| {
+        if t < *best_ms {
+            *best_ms = t;
+            best_order.copy_from_slice(o);
+        }
+    };
+
+    cur.copy_from_slice(warm_order);
+    let mut evals = 1u64;
+    sa.anneal_on(cursor, cur, cand, t_warm, 400, None, &mut evals, &mut offer);
+
+    cur.copy_from_slice(warm_order);
+    let mut evals = 1u64;
+    let (t_end, _stopped) =
+        ls.descend_on(cursor, cur, cand, t_warm, 400, None, &mut evals, &mut offer);
+    assert!(t_end.is_finite());
 }
