@@ -1,6 +1,9 @@
 //! Bench: what does the trait redesign cost? Dynamic dispatch
-//! (`Box<dyn LaunchPolicy>`) vs the legacy closed-enum path, on the
-//! coordinator-relevant batch sizes (8–64 kernels).
+//! (`Box<dyn LaunchPolicy>`) vs direct static dispatch on the concrete
+//! policy structs, on the coordinator-relevant batch sizes (8–64
+//! kernels). (The pre-0.2 closed-enum `Policy` this bench originally
+//! compared against is gone; a monomorphized struct call is the same
+//! no-vtable baseline.)
 //!
 //! The coordinator invokes the policy once per *batch*, so even a large
 //! relative overhead would be irrelevant in absolute terms — but the
@@ -8,13 +11,11 @@
 //! pure dispatch overhead (the policy body is a trivial collect);
 //! Algorithm 1 shows how completely real scheduling work amortizes it.
 
-#![allow(deprecated)]
-
 #[path = "harness/mod.rs"]
 mod harness;
 
 use kreorder::gpu::GpuSpec;
-use kreorder::sched::{registry, LaunchPolicy, Policy};
+use kreorder::sched::{registry, Algorithm1Policy, FifoPolicy, LaunchPolicy};
 use kreorder::workloads::synthetic_workload;
 
 fn main() {
@@ -26,10 +27,10 @@ fn main() {
         harness::section(&format!("{n}-kernel batch"));
 
         // --- FIFO: the policy body is trivial, so this pair isolates the
-        // enum-match vs vtable-call difference.
-        let enum_fifo = Policy::Fifo;
-        harness::bench(&format!("enum/fifo/{n}"), 20, samples, || {
-            std::hint::black_box(enum_fifo.order(&gpu, &ks));
+        // static-call vs vtable-call difference.
+        let static_fifo = FifoPolicy;
+        harness::bench(&format!("static/fifo/{n}"), 20, samples, || {
+            std::hint::black_box(static_fifo.order(&gpu, &ks));
         });
         let dyn_fifo: Box<dyn LaunchPolicy> = registry::parse("fifo").unwrap();
         harness::bench(&format!("dyn/fifo/{n}"), 20, samples, || {
@@ -38,9 +39,9 @@ fn main() {
 
         // --- Algorithm 1: real scheduling work (O(n^2) scoring) on both
         // paths; the dispatch difference should vanish in the noise.
-        let enum_alg = Policy::Algorithm1;
-        harness::bench(&format!("enum/algorithm1/{n}"), 5, samples, || {
-            std::hint::black_box(enum_alg.order(&gpu, &ks));
+        let static_alg = Algorithm1Policy::new();
+        harness::bench(&format!("static/algorithm1/{n}"), 5, samples, || {
+            std::hint::black_box(static_alg.order(&gpu, &ks));
         });
         let dyn_alg: Box<dyn LaunchPolicy> = registry::parse("algorithm1").unwrap();
         harness::bench(&format!("dyn/algorithm1/{n}"), 5, samples, || {

@@ -1,0 +1,89 @@
+//! Injectable time source for the dispatcher's window batching.
+//!
+//! The dispatcher's linger/deadline arithmetic used to read
+//! `Instant::now()` directly, which made every batching test a wall-time
+//! race (a 20 ms linger under a loaded CI runner closes windows early or
+//! late). [`BatchClock`] injects the *measurement* of time — blocking
+//! still happens in `recv_timeout`, but deadlines, latencies and window
+//! decisions are computed against the clock, so a [`ManualClock`] makes
+//! batching fully deterministic: a frozen clock never expires a linger
+//! (windows close on occupancy alone), and advancing it expires
+//! deadlines on demand.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A source of monotonic time for the coordinator's batching decisions
+/// and latency accounting.
+pub trait BatchClock: Send + Sync {
+    fn now(&self) -> Instant;
+}
+
+/// The real monotonic clock (production default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SystemClock;
+
+impl BatchClock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// A clock that only moves when told to. With it installed, linger
+/// deadlines are a pure function of [`ManualClock::advance`] calls:
+/// frozen time = windows close only by occupancy (or flush/shutdown),
+/// which is what deterministic batching tests want.
+#[derive(Debug)]
+pub struct ManualClock {
+    base: Instant,
+    offset: Mutex<Duration>,
+}
+
+impl Default for ManualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        ManualClock {
+            base: Instant::now(),
+            offset: Mutex::new(Duration::ZERO),
+        }
+    }
+
+    /// Move time forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        *self.offset.lock().expect("clock poisoned") += d;
+    }
+}
+
+impl BatchClock for ManualClock {
+    fn now(&self) -> Instant {
+        self.base + *self.offset.lock().expect("clock poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_moves() {
+        let c = SystemClock;
+        let a = c.now();
+        assert!(c.now() >= a);
+    }
+
+    #[test]
+    fn manual_clock_moves_only_on_advance() {
+        let c = ManualClock::new();
+        let a = c.now();
+        assert_eq!(c.now(), a);
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now(), a + Duration::from_millis(250));
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now(), a + Duration::from_millis(500));
+    }
+}

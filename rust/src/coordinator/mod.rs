@@ -16,11 +16,20 @@
 //!   sequence, so the service produces real numerics end to end (Python
 //!   never runs on this path).
 //!
-//! Threading: a dispatcher thread owns batching (window + linger) and
-//! feeds per-device worker threads over MPSC channels; each worker builds
-//! its backend on its own thread via the configured factory (the PJRT C
-//! handles are not `Send`). Responses travel over per-request channels.
-//! This is the std-library analogue of the usual tokio actor shape.
+//! Threading: a dispatcher thread owns batching and feeds per-device
+//! worker threads over MPSC channels; each worker builds its backend on
+//! its own thread via the configured factory (the PJRT C handles are not
+//! `Send`). Responses travel over per-request channels. This is the
+//! std-library analogue of the usual tokio actor shape.
+//!
+//! *When* a window closes is decided by a pluggable
+//! [`crate::online::WindowPolicy`] (shared with the online streaming
+//! engine; the `window`/`linger` builder knobs are sugar for the default
+//! [`crate::online::LingerWindow`]), and all batching time is measured
+//! through an injectable [`BatchClock`] — a [`ManualClock`] makes
+//! batching and latency accounting fully deterministic for tests.
+//! [`ServiceStats`] records per-request sojourn and queue-wait samples
+//! with exact p50/p95/p99.
 //!
 //! Construct with [`CoordinatorBuilder`]:
 //!
@@ -34,13 +43,13 @@
 //!     .start();
 //! ```
 
+mod clock;
 mod service;
 mod stats;
 
-#[allow(deprecated)]
-pub use service::CoordinatorConfig;
+pub use clock::{BatchClock, ManualClock, SystemClock};
 pub use service::{
     BackendFactory, BatchReport, Coordinator, CoordinatorBuilder, LaunchHandle, LaunchRequest,
     LaunchResponse,
 };
-pub use stats::ServiceStats;
+pub use stats::{LATENCY_SAMPLE_CAP, ServiceStats};

@@ -4,7 +4,7 @@
 //! Thread shape:
 //!
 //! ```text
-//! submitters --MPSC--> dispatcher (batching: window + linger)
+//! submitters --MPSC--> dispatcher (batching via WindowPolicy + BatchClock)
 //!                          |  round-robin by batch id
 //!                          +--> device worker 0 (own ExecutionBackend)
 //!                          +--> device worker 1
@@ -15,10 +15,29 @@
 //! instance built on its own thread by the configured factory (the PJRT
 //! handles are `!Send`, so backends must be born where they run) plus a
 //! [`SimulatorBackend`] used for the per-batch FIFO-vs-policy comparison.
+//!
+//! *When* a window closes is delegated to a
+//! [`crate::online::WindowPolicy`] — the same trait the virtual-clock
+//! online engine uses, so a policy tuned in simulation
+//! (`kreorder serve --arrivals …`) drops into the live service
+//! unchanged (occupancy-aware policies excepted: the dispatcher shows
+//! the policy an idle device, see
+//! [`CoordinatorBuilder::window_policy`]). The classic
+//! `window`/`linger` builder knobs are sugar for
+//! [`crate::online::LingerWindow`]. All deadline arithmetic reads the
+//! injectable [`BatchClock`], making batching deterministic under a
+//! [`super::ManualClock`] (see `tests/integration_coordinator.rs`).
+//!
+//! On `shutdown`, every request already submitted — batched *or* still
+//! in the channel — is dispatched and answered before the dispatcher
+//! exits; only submissions racing shutdown from other threads can
+//! instead observe a disconnect error from their handle.
 
+use super::clock::{BatchClock, SystemClock};
 use super::stats::ServiceStats;
-use crate::exec::{ExecutionBackend, PreparedWorkload, SimulatorBackend};
+use crate::exec::{ExecutionBackend, SimulatorBackend};
 use crate::gpu::{GpuSpec, KernelProfile};
+use crate::online::{LingerWindow, WindowDecision, WindowPolicy, WindowState};
 use crate::sched::{registry, Algorithm1Policy, LaunchPolicy, PolicyParseError};
 use crate::sim;
 use anyhow::Result;
@@ -53,8 +72,11 @@ pub struct LaunchResponse {
     pub checksum: f64,
     /// Wall-clock execution time of this kernel (0 for model backends).
     pub exec_wall_ms: f64,
-    /// Time from submission to response.
+    /// Time from submission to response (sojourn), per the batch clock.
     pub latency_ms: f64,
+    /// Time from submission to window dispatch (the batching share of
+    /// `latency_ms`), per the batch clock.
+    pub queue_ms: f64,
     /// Which batch served this request and at what position of the
     /// reordered launch sequence.
     pub batch_id: u64,
@@ -108,7 +130,7 @@ impl LaunchHandle {
 /// Builder for the coordinator service.
 ///
 /// Defaults: GTX580 model, Algorithm 1 policy, simulator backend, one
-/// device, window 8, linger 2 ms.
+/// device, linger window (8 kernels / 2 ms) on the system clock.
 ///
 /// ```no_run
 /// use kreorder::coordinator::CoordinatorBuilder;
@@ -127,6 +149,8 @@ pub struct CoordinatorBuilder {
     devices: usize,
     window: usize,
     linger: Duration,
+    window_policy: Option<Box<dyn WindowPolicy>>,
+    clock: Arc<dyn BatchClock>,
 }
 
 impl Default for CoordinatorBuilder {
@@ -138,6 +162,8 @@ impl Default for CoordinatorBuilder {
             devices: 1,
             window: 8,
             linger: Duration::from_millis(2),
+            window_policy: None,
+            clock: Arc::new(SystemClock),
         }
     }
 }
@@ -212,24 +238,54 @@ impl CoordinatorBuilder {
     }
 
     /// Reorder window: max launches batched together (clamped to ≥ 1).
+    /// Sugar for the default [`LingerWindow`]; also bounds the chunk
+    /// size of the shutdown drain under any custom policy.
     pub fn window(mut self, n: usize) -> Self {
         self.window = n.max(1);
         self
     }
 
     /// How long the batcher waits for more work once a batch has started
-    /// filling.
+    /// filling (the linger bound of the default [`LingerWindow`]).
     pub fn linger(mut self, d: Duration) -> Self {
         self.linger = d;
+        self
+    }
+
+    /// Replace the batching policy wholesale with any
+    /// [`crate::online::WindowPolicy`]. Overrides `window`/`linger` for
+    /// closing decisions; `window` still bounds shutdown-drain chunks.
+    ///
+    /// Caveat: the dispatcher does not observe device occupancy, so it
+    /// always presents an **idle** device to the policy — an
+    /// [`crate::online::AdaptiveWindow`] therefore degrades to its
+    /// idle-grace behavior here (close after `linger/8`), not the
+    /// fill-while-busy behavior it shows in the online simulator.
+    /// Occupancy-aware live batching needs worker feedback, which the
+    /// dispatcher does not have yet; tune occupancy-sensitive policies
+    /// with `kreorder serve --arrivals …` and install occupancy-free
+    /// ones (`fixed`, `linger`) here.
+    pub fn window_policy<W: WindowPolicy + 'static>(mut self, policy: W) -> Self {
+        self.window_policy = Some(Box::new(policy));
+        self
+    }
+
+    /// Inject the time source for batching deadlines and latency
+    /// accounting (default: the system clock). A
+    /// [`super::ManualClock`] makes batching deterministic for tests.
+    pub fn clock(mut self, clock: Arc<dyn BatchClock>) -> Self {
+        self.clock = clock;
         self
     }
 
     /// Start the service.
     pub fn start(self) -> Coordinator {
         let (tx, rx) = channel::<Msg>();
+        let clock = Arc::clone(&self.clock);
         let dispatcher = std::thread::spawn(move || dispatcher_loop(self, rx));
         Coordinator {
             tx,
+            clock,
             dispatcher: Some(dispatcher),
         }
     }
@@ -250,6 +306,7 @@ enum Msg {
 /// [`CoordinatorBuilder`].
 pub struct Coordinator {
     tx: Sender<Msg>,
+    clock: Arc<dyn BatchClock>,
     dispatcher: Option<JoinHandle<(Vec<BatchReport>, ServiceStats)>>,
 }
 
@@ -263,7 +320,7 @@ impl Coordinator {
     pub fn submit(&self, req: LaunchRequest) -> LaunchHandle {
         let (tx, rx) = channel();
         // Dispatcher outlives all submissions (it only exits on Shutdown).
-        let _ = self.tx.send(Msg::Launch(req, tx, Instant::now()));
+        let _ = self.tx.send(Msg::Launch(req, tx, self.clock.now()));
         LaunchHandle { rx }
     }
 
@@ -274,6 +331,8 @@ impl Coordinator {
 
     /// Stop the service, returning every batch report (ordered by batch
     /// id) and the aggregate service statistics across all devices.
+    /// Requests submitted before this call — batched or still queued —
+    /// are dispatched and answered first (drain semantics).
     pub fn shutdown(mut self) -> (Vec<BatchReport>, ServiceStats) {
         let _ = self.tx.send(Msg::Shutdown);
         self.dispatcher
@@ -297,6 +356,8 @@ struct Pending {
     req: LaunchRequest,
     reply: Sender<LaunchResponse>,
     submitted: Instant,
+    /// Stamped when the dispatcher hands the batch to a worker.
+    dispatched: Instant,
 }
 
 struct Batch {
@@ -304,8 +365,8 @@ struct Batch {
     pending: Vec<Pending>,
 }
 
-/// Batching loop: fills reorder windows and round-robins complete batches
-/// across the device workers.
+/// Batching loop: fills reorder windows per the window policy and
+/// round-robins complete batches across the device workers.
 fn dispatcher_loop(
     cfg: CoordinatorBuilder,
     rx: Receiver<Msg>,
@@ -320,16 +381,33 @@ fn dispatcher_loop(
         let gpu = cfg.gpu.clone();
         let policy = Arc::clone(&cfg.policy);
         let factory = Arc::clone(&cfg.backend);
+        let clock = Arc::clone(&cfg.clock);
         worker_txs.push(btx);
         worker_handles.push(std::thread::spawn(move || {
-            device_loop(device, gpu, policy, factory, brx)
+            device_loop(device, gpu, policy, factory, clock, brx)
         }));
     }
 
+    let clock = cfg.clock;
+    let t0 = clock.now();
+    let now_ms = |c: &Arc<dyn BatchClock>| {
+        c.now().saturating_duration_since(t0).as_secs_f64() * 1e3
+    };
+    let mut window_policy = cfg.window_policy.unwrap_or_else(|| {
+        Box::new(LingerWindow::new(cfg.window, cfg.linger.as_secs_f64() * 1e3))
+    });
+
     let mut batch_id = 0u64;
-    let dispatch = |batch: Vec<Pending>, id: u64| {
+    let dispatch = |mut batch: Vec<Pending>, id: u64| {
+        // An empty window must never reach a worker as a zero-kernel
+        // batch (guards the Flush/drain paths and any misbehaving
+        // window policy).
         if batch.is_empty() {
             return;
+        }
+        let t = clock.now();
+        for p in &mut batch {
+            p.dispatched = t;
         }
         let device = (id as usize) % worker_txs.len();
         // A worker can only be gone if it panicked; dropping the batch
@@ -338,46 +416,97 @@ fn dispatcher_loop(
         let _ = worker_txs[device].send(Batch { id, pending: batch });
     };
 
+    let mut batch: Vec<Pending> = Vec::new();
+    let mut oldest_ms = 0.0f64;
     'outer: loop {
-        // Block for the first request of the next batch.
-        let first = match rx.recv() {
-            Ok(Msg::Launch(r, tx, t)) => Pending {
-                req: r,
-                reply: tx,
-                submitted: t,
-            },
-            Ok(Msg::Flush) => continue,
-            Ok(Msg::Shutdown) | Err(_) => break,
-        };
-        let mut batch = vec![first];
-
-        // Fill the window, lingering for stragglers.
-        let deadline = Instant::now() + cfg.linger;
-        while batch.len() < cfg.window {
-            let now = Instant::now();
-            let Some(remaining) = deadline.checked_duration_since(now) else {
-                break;
+        // Let the window policy look at the open window first.
+        let now = now_ms(&clock);
+        let mut recheck: Option<f64> = None;
+        if !batch.is_empty() {
+            let state = WindowState {
+                now_ms: now,
+                n_pending: batch.len(),
+                oldest_arrival_ms: oldest_ms,
+                // The dispatcher does not observe device occupancy;
+                // policies see an idle device (adaptive degrades to its
+                // idle-grace behavior).
+                device_free_at_ms: now,
+                queued_batches: 0,
             };
-            match rx.recv_timeout(remaining) {
-                Ok(Msg::Launch(r, tx, t)) => batch.push(Pending {
-                    req: r,
-                    reply: tx,
-                    submitted: t,
-                }),
-                Ok(Msg::Flush) => break,
-                Ok(Msg::Shutdown) => {
-                    dispatch(batch, batch_id);
-                    break 'outer;
+            match window_policy.decide(&state) {
+                WindowDecision::Close => {
+                    dispatch(std::mem::take(&mut batch), batch_id);
+                    batch_id += 1;
+                    continue;
                 }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    dispatch(batch, batch_id);
-                    break 'outer;
-                }
+                WindowDecision::Wait { recheck_at_ms } => recheck = recheck_at_ms,
             }
         }
 
-        dispatch(batch, batch_id);
+        // Wait for the next message, bounded by the policy's recheck
+        // deadline when it gave one.
+        let msg = match recheck {
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break 'outer,
+            },
+            Some(at) => {
+                let wait = Duration::from_secs_f64((at - now).max(0.0) / 1e3);
+                match rx.recv_timeout(wait) {
+                    Ok(m) => m,
+                    // Deadline (by the real clock) passed: re-decide
+                    // against the batch clock. Under a frozen manual
+                    // clock the deadline never arrives by time, which
+                    // is exactly the determinism tests want.
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break 'outer,
+                }
+            }
+        };
+        match msg {
+            Msg::Launch(r, tx, t) => {
+                if batch.is_empty() {
+                    // The linger deadline anchors at the request's
+                    // *submission* time, not its dequeue time, so
+                    // channel backlog counts against the latency bound
+                    // (consistent with queue_ms).
+                    oldest_ms = t.saturating_duration_since(t0).as_secs_f64() * 1e3;
+                }
+                batch.push(Pending {
+                    req: r,
+                    reply: tx,
+                    submitted: t,
+                    dispatched: t,
+                });
+            }
+            Msg::Flush => {
+                if !batch.is_empty() {
+                    dispatch(std::mem::take(&mut batch), batch_id);
+                    batch_id += 1;
+                }
+            }
+            Msg::Shutdown => break 'outer,
+        }
+    }
+
+    // Drain: requests still in the channel at shutdown were submitted
+    // before it (same-sender ordering), so they are completed rather
+    // than dropped. Custom window policies drain in `window`-sized
+    // chunks.
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Launch(r, tx, t) = msg {
+            batch.push(Pending {
+                req: r,
+                reply: tx,
+                submitted: t,
+                dispatched: t,
+            });
+        }
+    }
+    while !batch.is_empty() {
+        let rest = batch.split_off(cfg.window.min(batch.len()));
+        let head = std::mem::replace(&mut batch, rest);
+        dispatch(head, batch_id);
         batch_id += 1;
     }
 
@@ -402,6 +531,7 @@ fn device_loop(
     gpu: GpuSpec,
     policy: Arc<dyn LaunchPolicy>,
     factory: BackendFactory,
+    clock: Arc<dyn BatchClock>,
     rx: Receiver<Batch>,
 ) -> (Vec<BatchReport>, ServiceStats) {
     // Backend construction failure (e.g. PJRT client unavailable) is not
@@ -425,6 +555,7 @@ fn device_loop(
             policy.as_ref(),
             backend.as_deref_mut(),
             &mut compare,
+            clock.as_ref(),
             batch,
             &mut reports,
             &mut stats,
@@ -440,6 +571,7 @@ fn process_batch(
     policy: &dyn LaunchPolicy,
     backend: Option<&mut dyn ExecutionBackend>,
     compare: &mut SimulatorBackend,
+    clock: &dyn BatchClock,
     batch: Batch,
     reports: &mut Vec<BatchReport>,
     stats: &mut ServiceStats,
@@ -489,6 +621,7 @@ fn process_batch(
         ),
     };
 
+    let done = clock.now();
     for (position, &bi) in order.iter().enumerate() {
         let p = &pending[bi];
         let (checksum, wall) = outcome_of[bi];
@@ -496,7 +629,8 @@ fn process_batch(
             id: p.req.id,
             checksum,
             exec_wall_ms: wall,
-            latency_ms: p.submitted.elapsed().as_secs_f64() * 1e3,
+            latency_ms: done.saturating_duration_since(p.submitted).as_secs_f64() * 1e3,
+            queue_ms: p.dispatched.saturating_duration_since(p.submitted).as_secs_f64() * 1e3,
             batch_id,
             position,
             device,
@@ -520,78 +654,12 @@ fn process_batch(
     reports.push(report);
 }
 
-// ---------------------------------------------------------------------------
-// Deprecated config shim
-// ---------------------------------------------------------------------------
-
-/// Coordinator configuration (deprecated shim over
-/// [`CoordinatorBuilder`]).
-#[deprecated(since = "0.2.0", note = "use CoordinatorBuilder")]
-#[allow(deprecated)]
-#[derive(Debug, Clone)]
-pub struct CoordinatorConfig {
-    /// Simulated GPU model (defaults to the paper's GTX580).
-    pub gpu: GpuSpec,
-    /// Launch-order policy applied to each batch.
-    pub policy: crate::sched::Policy,
-    /// Reorder window: max launches batched together.
-    pub window: usize,
-    /// How long the batcher waits for more work once a batch has started
-    /// filling (the "linger", as in serving systems).
-    pub linger: Duration,
-    /// Artifacts directory for real PJRT execution; `None` = simulate
-    /// timing only (no payload execution). Requires the `pjrt` feature
-    /// when `Some`.
-    pub artifacts_dir: Option<std::path::PathBuf>,
-}
-
-#[allow(deprecated)]
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        CoordinatorConfig {
-            gpu: GpuSpec::gtx580(),
-            policy: crate::sched::Policy::Algorithm1,
-            window: 8,
-            linger: Duration::from_millis(2),
-            artifacts_dir: None,
-        }
-    }
-}
-
-#[allow(deprecated)]
-impl Coordinator {
-    /// Start the service from a legacy [`CoordinatorConfig`].
-    #[deprecated(since = "0.2.0", note = "use CoordinatorBuilder::start")]
-    pub fn start(cfg: CoordinatorConfig) -> Coordinator {
-        let mut b = CoordinatorBuilder::new()
-            .gpu(cfg.gpu)
-            .policy_arc(Arc::from(cfg.policy.to_launch_policy()))
-            .window(cfg.window)
-            .linger(cfg.linger);
-        if let Some(dir) = cfg.artifacts_dir {
-            #[cfg(feature = "pjrt")]
-            {
-                b = b.pjrt_backend(dir);
-            }
-            #[cfg(not(feature = "pjrt"))]
-            {
-                let dir: std::path::PathBuf = dir;
-                b = b.backend(move || {
-                    anyhow::bail!(
-                        "artifacts_dir {} set but the `pjrt` feature is not enabled",
-                        dir.display()
-                    )
-                });
-            }
-        }
-        b.start()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ManualClock;
     use crate::gpu::AppKind;
+    use crate::online::FixedWindow;
 
     fn profile(name: &str, warps: u32, ratio: f64) -> KernelProfile {
         KernelProfile {
@@ -611,6 +679,16 @@ mod tests {
         CoordinatorBuilder::new()
             .window(window)
             .linger(Duration::from_millis(20))
+            .start()
+    }
+
+    /// A coordinator whose linger can never expire: batching is a pure
+    /// function of occupancy + flush/shutdown (fully deterministic).
+    fn frozen(window: usize) -> Coordinator {
+        CoordinatorBuilder::new()
+            .window(window)
+            .linger(Duration::from_secs(3600))
+            .clock(Arc::new(ManualClock::new()))
             .start()
     }
 
@@ -638,8 +716,11 @@ mod tests {
     }
 
     #[test]
-    fn window_bounds_batch_size() {
-        let c = sim_only(3);
+    fn frozen_clock_fills_windows_exactly() {
+        // With time frozen, the linger never fires: 9 submissions into a
+        // window of 3 must produce exactly three full batches, on every
+        // run, on any machine.
+        let c = frozen(3);
         let handles: Vec<_> = (0..9)
             .map(|i| {
                 c.submit(LaunchRequest {
@@ -649,11 +730,44 @@ mod tests {
                 })
             })
             .collect();
+        let mut batches = Vec::new();
+        for h in handles {
+            let r = h.wait().unwrap();
+            // Frozen clock: all latencies are exactly zero.
+            assert_eq!(r.latency_ms, 0.0);
+            assert_eq!(r.queue_ms, 0.0);
+            batches.push(r.batch_id);
+        }
+        let (reports, _) = c.shutdown();
+        let sizes: Vec<usize> = reports.iter().map(|r| r.n).collect();
+        assert_eq!(sizes, vec![3, 3, 3]);
+        batches.sort_unstable();
+        batches.dedup();
+        assert_eq!(batches, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn custom_window_policy_controls_batching() {
+        let c = CoordinatorBuilder::new()
+            .window(64) // drain chunking only; FixedWindow decides closes
+            .window_policy(FixedWindow::new(2))
+            .clock(Arc::new(ManualClock::new()))
+            .start();
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                c.submit(LaunchRequest {
+                    id: i,
+                    profile: profile("k", 8, 2.0),
+                    seed: 0,
+                })
+            })
+            .collect();
         for h in handles {
             h.wait().unwrap();
         }
         let (reports, _) = c.shutdown();
-        assert!(reports.iter().all(|r| r.n <= 3), "{reports:?}");
+        let sizes: Vec<usize> = reports.iter().map(|r| r.n).collect();
+        assert_eq!(sizes, vec![2, 2, 2]);
     }
 
     #[test]
@@ -704,6 +818,7 @@ mod tests {
         assert_eq!(r.exec_wall_ms, 0.0);
         assert_eq!(r.id, 7);
         assert_eq!(r.device, 0);
+        assert!(r.queue_ms <= r.latency_ms);
     }
 
     #[test]
@@ -733,10 +848,7 @@ mod tests {
 
     #[test]
     fn flush_closes_partial_batch() {
-        let c = CoordinatorBuilder::new()
-            .window(100)
-            .linger(Duration::from_secs(10)) // would stall without flush
-            .start();
+        let c = frozen(100);
         let h = c.submit(LaunchRequest {
             id: 0,
             profile: profile("k", 8, 2.0),
@@ -746,6 +858,28 @@ mod tests {
         let r = h.wait_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r.batch_id, 0);
         c.shutdown();
+    }
+
+    #[test]
+    fn flush_without_pending_dispatches_nothing() {
+        // A flush storm on an empty window must not emit zero-kernel
+        // batches.
+        let c = frozen(4);
+        for _ in 0..5 {
+            c.flush();
+        }
+        let h = c.submit(LaunchRequest {
+            id: 0,
+            profile: profile("k", 8, 2.0),
+            seed: 0,
+        });
+        c.flush();
+        c.flush();
+        h.wait_timeout(Duration::from_secs(5)).unwrap();
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_batches, 1);
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].n, 1);
     }
 
     #[test]
@@ -802,25 +936,5 @@ mod tests {
         let (reports, stats) = c.shutdown();
         assert_eq!(stats.n_failures, 1);
         assert_eq!(reports[0].backend, "unavailable");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn legacy_config_shim_still_serves() {
-        let cfg = CoordinatorConfig {
-            window: 2,
-            linger: Duration::from_millis(10),
-            ..CoordinatorConfig::default()
-        };
-        let c = Coordinator::start(cfg);
-        let h = c.submit(LaunchRequest {
-            id: 3,
-            profile: profile("k", 8, 2.0),
-            seed: 0,
-        });
-        c.flush();
-        assert_eq!(h.wait().unwrap().id, 3);
-        let (_, stats) = c.shutdown();
-        assert_eq!(stats.n_responses, 1);
     }
 }

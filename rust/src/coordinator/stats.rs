@@ -1,8 +1,25 @@
 //! Aggregate service statistics for the coordinator.
 
 use super::service::{BatchReport, LaunchResponse};
+use crate::metrics::percentile;
+
+/// Cap on the retained latency samples: beyond it the buffers wrap
+/// (oldest samples overwritten), so a long-lived service holds at most
+/// ~1 MB of samples and its percentiles describe the **trailing
+/// window** of this many responses — the quantity a live SLO dashboard
+/// wants anyway. Below the cap, percentiles are exact over the whole
+/// run.
+pub const LATENCY_SAMPLE_CAP: usize = 65_536;
 
 /// Running totals over the life of a coordinator.
+///
+/// Latency is recorded as raw per-response samples (sojourn and
+/// dispatcher queue wait) in bounded ring buffers (see
+/// [`LATENCY_SAMPLE_CAP`]), so the percentile accessors are exact over
+/// the trailing window — the same accounting the online engine reports
+/// for its virtual runs, measured here against the injectable batch
+/// clock. Totals (`n_responses`, mean, max) always cover the whole
+/// run.
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
     pub n_batches: usize,
@@ -11,6 +28,14 @@ pub struct ServiceStats {
     pub total_latency_ms: f64,
     /// Max per-request latency (ms).
     pub max_latency_ms: f64,
+    /// Per-response sojourn samples (submit → response, ms); wraps at
+    /// [`LATENCY_SAMPLE_CAP`].
+    pub latencies_ms: Vec<f64>,
+    /// Per-response queue-wait samples (submit → window dispatch, ms);
+    /// wraps in lockstep with `latencies_ms`.
+    pub queue_waits_ms: Vec<f64>,
+    /// Ring cursor for the wrapped sample buffers.
+    sample_cursor: usize,
     /// Sum of simulated FIFO / policy makespans over valid batches.
     pub total_sim_fifo_ms: f64,
     pub total_sim_policy_ms: f64,
@@ -29,8 +54,22 @@ impl ServiceStats {
         if r.latency_ms > self.max_latency_ms {
             self.max_latency_ms = r.latency_ms;
         }
+        self.push_samples(r.latency_ms, r.queue_ms);
         if r.checksum == f64::NEG_INFINITY {
             self.n_failures += 1;
+        }
+    }
+
+    /// Append one (sojourn, queue-wait) sample pair, wrapping the ring
+    /// once [`LATENCY_SAMPLE_CAP`] samples are held.
+    fn push_samples(&mut self, latency_ms: f64, queue_ms: f64) {
+        if self.latencies_ms.len() < LATENCY_SAMPLE_CAP {
+            self.latencies_ms.push(latency_ms);
+            self.queue_waits_ms.push(queue_ms);
+        } else {
+            self.latencies_ms[self.sample_cursor] = latency_ms;
+            self.queue_waits_ms[self.sample_cursor] = queue_ms;
+            self.sample_cursor = (self.sample_cursor + 1) % LATENCY_SAMPLE_CAP;
         }
     }
 
@@ -46,12 +85,22 @@ impl ServiceStats {
     }
 
     /// Fold another worker's totals into this one (multi-device merge at
-    /// shutdown).
+    /// shutdown). Latency samples concatenate through the same bounded
+    /// ring, so percentiles stay exact across workers until the cap
+    /// wraps.
     pub fn merge(&mut self, other: &ServiceStats) {
         self.n_batches += other.n_batches;
         self.n_responses += other.n_responses;
         self.total_latency_ms += other.total_latency_ms;
         self.max_latency_ms = self.max_latency_ms.max(other.max_latency_ms);
+        // Replay the peer's ring in chronological order (oldest sample
+        // sits at its cursor once wrapped), so this ring's own eviction
+        // keeps dropping oldest-first.
+        let n = other.latencies_ms.len();
+        for k in 0..n {
+            let i = (other.sample_cursor + k) % n;
+            self.push_samples(other.latencies_ms[i], other.queue_waits_ms[i]);
+        }
         self.total_sim_fifo_ms += other.total_sim_fifo_ms;
         self.total_sim_policy_ms += other.total_sim_policy_ms;
         self.n_unsimulated += other.n_unsimulated;
@@ -66,6 +115,16 @@ impl ServiceStats {
         } else {
             self.total_latency_ms / self.n_responses as f64
         }
+    }
+
+    /// Exact p-th percentile (0–100) of per-request sojourn latency.
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        percentile(&self.latencies_ms, p)
+    }
+
+    /// Exact p-th percentile (0–100) of per-request queue wait.
+    pub fn queue_percentile_ms(&self, p: f64) -> f64 {
+        percentile(&self.queue_waits_ms, p)
     }
 
     /// Aggregate simulated speedup of the policy over FIFO arrival order.
@@ -89,12 +148,15 @@ impl ServiceStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{} batches / {} responses | mean latency {:.2} ms (max {:.2}) | \
-             sim speedup vs FIFO {:.3}x | exec wall {:.1} ms | {} failures",
+            "{} batches / {} responses | latency mean {:.2} ms p95 {:.2} p99 {:.2} (max {:.2}) | \
+             queue p95 {:.2} ms | sim speedup vs FIFO {:.3}x | exec wall {:.1} ms | {} failures",
             self.n_batches,
             self.n_responses,
             self.mean_latency_ms(),
+            self.latency_percentile_ms(95.0),
+            self.latency_percentile_ms(99.0),
             self.max_latency_ms,
+            self.queue_percentile_ms(95.0),
             self.sim_speedup(),
             self.total_exec_wall_ms,
             self.n_failures,
@@ -112,6 +174,7 @@ mod tests {
             checksum,
             exec_wall_ms: 1.0,
             latency_ms: latency,
+            queue_ms: latency / 2.0,
             batch_id: 0,
             position: 0,
             device: 0,
@@ -141,6 +204,36 @@ mod tests {
         assert_eq!(s.mean_latency_ms(), 20.0);
         assert_eq!(s.max_latency_ms, 30.0);
         assert_eq!(s.n_failures, 0);
+    }
+
+    #[test]
+    fn percentiles_are_exact_over_samples() {
+        let mut s = ServiceStats::default();
+        for i in 1..=100 {
+            s.record_response(&resp(i as f64, 1.0));
+        }
+        assert!((s.latency_percentile_ms(50.0) - 50.5).abs() < 1e-9);
+        assert!((s.latency_percentile_ms(99.0) - 99.01).abs() < 1e-9);
+        assert!((s.queue_percentile_ms(50.0) - 25.25).abs() < 1e-9);
+        assert_eq!(s.latencies_ms.len(), 100);
+        assert_eq!(s.queue_waits_ms.len(), 100);
+    }
+
+    #[test]
+    fn sample_buffers_wrap_at_the_cap() {
+        let mut s = ServiceStats::default();
+        for i in 0..(LATENCY_SAMPLE_CAP + 10) {
+            s.record_response(&resp(i as f64, 1.0));
+        }
+        // Bounded memory: the buffers never exceed the cap…
+        assert_eq!(s.latencies_ms.len(), LATENCY_SAMPLE_CAP);
+        assert_eq!(s.queue_waits_ms.len(), LATENCY_SAMPLE_CAP);
+        // …totals still cover the whole run…
+        assert_eq!(s.n_responses, LATENCY_SAMPLE_CAP + 10);
+        assert_eq!(s.max_latency_ms, (LATENCY_SAMPLE_CAP + 9) as f64);
+        // …and the oldest samples were the ones overwritten.
+        let min = s.latencies_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(min, 10.0);
     }
 
     #[test]
@@ -176,6 +269,9 @@ mod tests {
         assert_eq!(a.n_failures, 1);
         assert_eq!(a.sim_speedup(), 2.0);
         assert!((a.total_exec_wall_ms - 12.0).abs() < 1e-12);
+        // Percentiles see both workers' samples.
+        assert_eq!(a.latencies_ms.len(), 2);
+        assert_eq!(a.latency_percentile_ms(100.0), 40.0);
     }
 
     #[test]
@@ -184,6 +280,7 @@ mod tests {
         assert_eq!(s.mean_latency_ms(), 0.0);
         assert_eq!(s.sim_speedup(), 0.0);
         assert_eq!(s.throughput_per_s(), 0.0);
+        assert_eq!(s.latency_percentile_ms(99.0), 0.0);
         assert!(s.summary().contains("0 batches"));
     }
 }

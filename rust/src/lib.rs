@@ -99,6 +99,38 @@
 //! * **in the serving path** → the `search[:<strategy>[:<budget>]]`
 //!   launch policy ([`search::SearchPolicy`]): exact for small windows,
 //!   budgeted anytime search for large ones.
+//! * **online, kernels still arriving** → the [`online`] subsystem (see
+//!   below and `src/search/README.md` for the full online-vs-offline
+//!   decision guide).
+//!
+//! ## Online: when ordering competes with time
+//!
+//! Everything above assumes the batch is in hand. The [`online`] module
+//! is the streaming regime — launch requests arrive over time and every
+//! queued kernel pays latency while its reorder window stays open:
+//!
+//! * seeded **arrival processes** ([`online::ArrivalSpec`]: `poisson`,
+//!   `bursty`, closed-loop, `replay` of a recorded [`online::Trace`])
+//!   draw kernels from the [`workloads`] scenario families;
+//! * pluggable [`online::WindowPolicy`] implementations decide *when* a
+//!   window closes (`fixed:<k>`, `linger:<k>:<ms>` — the latency-SLO
+//!   bound — and occupancy-aware `adaptive:<k>:<ms>`); the thread
+//!   coordinator's dispatcher batches through the **same trait**
+//!   ([`coordinator::CoordinatorBuilder::window_policy`]), with its
+//!   linger clock injectable ([`coordinator::BatchClock`]) so batching
+//!   is deterministic under test;
+//! * an [`online::OnlineReorderer`] picks each window's order inside a
+//!   per-decision [`search::SearchBudget`] — exhaustive when the budget
+//!   provably covers `n!`, any registered anytime strategy beyond,
+//!   never worse than FIFO;
+//! * [`online::simulate_online`] runs it all on a **virtual clock**
+//!   (discrete-event, no wall sleeping): per-kernel queue-wait /
+//!   service / sojourn times are bit-identical per (arrival seed,
+//!   strategy seed, window policy) — `tests/online_determinism.rs` pins
+//!   replay, and `benches/online_latency.rs` gates reordered-vs-FIFO
+//!   p99 sojourn per arrival regime into `BENCH_online.json`, with the
+//!   clairvoyant [`online::offline_oracle`] pricing what onlineness
+//!   cost.
 //!
 //! CI enforces the quality contract (`benches/search_quality.rs`,
 //! smoke-run per push): branch-and-bound must bit-match the sweep on
@@ -122,6 +154,7 @@
 //! | [`exec`] | [`exec::ExecutionBackend`] trait: simulator / analytic / PJRT substrates |
 //! | [`perm`] | permutation-space sweeps, checkpointed + streaming (Table 3 / Fig. 1) |
 //! | [`search`] | [`search::SearchStrategy`]: exact branch-and-bound + anytime metaheuristics for n ≫ 12 |
+//! | [`online`] | streaming scheduler: arrival processes, [`online::WindowPolicy`], virtual-clock engine, latency SLOs |
 //! | [`profile`] | artifact profile loading (the "CUDA profiler" stand-in) |
 //! | `runtime` | PJRT execution of AOT-compiled HLO kernels (feature `pjrt`) |
 //! | [`coordinator`] | [`coordinator::CoordinatorBuilder`]: batching + reordering + multi-device dispatch |
@@ -220,6 +253,7 @@ pub mod coordinator;
 pub mod exec;
 pub mod gpu;
 pub mod metrics;
+pub mod online;
 pub mod perm;
 pub mod profile;
 #[cfg(feature = "pjrt")]

@@ -88,6 +88,13 @@ COMMANDS:
   serve [--batches N] [--window K] [--policy P] [--devices D] [--seed S]
         [--artifacts DIR] [--sim-only] [--backend B]
                                        run the launch coordinator service
+  serve --arrivals PROC [--count N] [--scenario FAMILY] [--window WP]
+        [--strategy S|fifo] [--budget EVALS] [--decision-cost MS]
+        [--slo MS] [--oracle] [--record FILE] [--backend B]
+                                       ONLINE mode: deterministic virtual-clock run of
+                                       the streaming scheduler (arrivals PROC = e.g.
+                                       poisson:<rate>:<seed>; window WP = e.g.
+                                       linger:8:50; see `kreorder serve --list-online`)
   ablate [--exp ID] [--backend B]      score-component ablation
   policies                             list the launch-policy registry
   artifacts [--dir DIR]                list AOT artifacts + measured profiles
@@ -96,6 +103,7 @@ EXPERIMENT IDS: ep-6-shm ep-6-grid bs-6-blk epbs-6 epbs-6-shm epbsessw-8
 POLICIES: fifo reverse random:<seed> algorithm1 algorithm1:strict sjf coschedule
           search[:<strategy>[:<evals>]]   (see `kreorder policies`)
 STRATEGIES & SCENARIOS: `kreorder search --list`
+ARRIVALS & WINDOW POLICIES: `kreorder serve --list-online`
 BACKENDS: sim (fluid simulator, default), analytic (round model){}",
         if cfg!(feature = "pjrt") {
             ", pjrt (serve only)"
@@ -484,6 +492,20 @@ fn cmd_sched(args: &[String]) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn cmd_serve(args: &[String]) -> Result<()> {
+    // Online mode: a deterministic virtual-clock run of the streaming
+    // scheduler (no threads, no wall clock) — selected by --arrivals.
+    if flag(args, "--list-online") {
+        println!("arrival processes (--arrivals):");
+        print!("{}", kreorder::online::arrival_help_table());
+        println!("\nwindow policies (--window):");
+        print!("{}", kreorder::online::window_policy_help_table());
+        println!("\nscenario families (--scenario): see `kreorder search --list`");
+        return Ok(());
+    }
+    if let Some(spec) = opt(args, "--arrivals") {
+        let spec = spec.to_string();
+        return cmd_serve_online(args, &spec);
+    }
     let batches: usize = opt(args, "--batches").map_or(8, |s| s.parse().unwrap_or(8));
     let window: usize = opt(args, "--window").map_or(8, |s| s.parse().unwrap_or(8));
     let devices: usize = opt(args, "--devices").map_or(1, |s| s.parse().unwrap_or(1));
@@ -586,6 +608,144 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     println!("\n{}", stats.summary());
     println!("throughput: {:.1} kernels/s", stats.throughput_per_s());
+    Ok(())
+}
+
+/// `serve --arrivals …`: the online streaming scheduler on the virtual
+/// clock. Fully deterministic per (arrival seed, strategy seed, window
+/// policy): two runs print bit-identical latency numbers.
+fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
+    use kreorder::online::{
+        offline_oracle, parse_window_policy, simulate_online, ArrivalSource, ArrivalSpec,
+        ClosedLoopSource, OnlineOpts, OnlineReorderer, ReplaySource, Trace,
+    };
+    use kreorder::workloads::scenario_by_id;
+
+    let gpu = GpuSpec::gtx580();
+    let count: usize = opt(args, "--count").map_or(64, |s| s.parse().unwrap_or(64));
+    let family_name = opt(args, "--scenario").unwrap_or("mixed");
+    let window_spec = opt(args, "--window").unwrap_or("linger:8:50");
+    let strategy = opt(args, "--strategy").unwrap_or("local:0");
+    let budget: u64 = opt(args, "--budget").map_or(256, |s| s.parse().unwrap_or(256));
+    let decision_cost: f64 =
+        opt(args, "--decision-cost").map_or(0.0, |s| s.parse().unwrap_or(0.0));
+    let slo_ms: Option<f64> = opt(args, "--slo").and_then(|s| s.parse().ok());
+
+    let spec = ArrivalSpec::parse(arrivals).map_err(anyhow::Error::from)?;
+    let family = scenario_by_id(family_name)
+        .with_context(|| format!("unknown scenario family `{family_name}`"))?;
+
+    // Materialize the source. Open-loop processes go through a Trace so
+    // the realized schedule can be recorded; replay reads one back.
+    let (source, trace): (Box<dyn ArrivalSource>, Option<Trace>) = match &spec {
+        ArrivalSpec::Replay { path } => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading trace {path}"))?;
+            let trace = Trace::parse(&text).map_err(anyhow::Error::from)?;
+            eprintln!(
+                "replaying {}: family={} n={} seed={}",
+                path, trace.family, trace.n, trace.seed
+            );
+            let src = ReplaySource::from_trace(&trace, &gpu).map_err(anyhow::Error::from)?;
+            (Box::new(src), Some(trace))
+        }
+        ArrivalSpec::Closed {
+            clients,
+            think_ms,
+            seed,
+        } => {
+            let src = ClosedLoopSource::new(family, &gpu, count, *clients, *think_ms, *seed);
+            (Box::new(src), None)
+        }
+        _ => {
+            let trace = spec.trace(family.id, count).expect("open-loop spec");
+            let src = ReplaySource::from_trace(&trace, &gpu)
+                .map_err(anyhow::Error::from)?
+                .named(spec.name());
+            (Box::new(src), Some(trace))
+        }
+    };
+
+    let window = parse_window_policy(window_spec).map_err(anyhow::Error::from)?;
+    let reorderer = if strategy.eq_ignore_ascii_case("fifo") {
+        OnlineReorderer::fifo()
+    } else {
+        OnlineReorderer::search(strategy, budget).map_err(anyhow::Error::from)?
+    };
+    let make_backend = model_backend_factory(args)?;
+    let opts = OnlineOpts {
+        decision_ms_per_eval: decision_cost,
+    };
+
+    println!(
+        "online: arrivals={} scenario={} window={} reorderer={} backend={} decision-cost={}",
+        spec.name(),
+        family.id,
+        window.name(),
+        reorderer.name(),
+        opt(args, "--backend").unwrap_or("sim"),
+        decision_cost
+    );
+    let report = simulate_online(&gpu, source, window, &reorderer, make_backend.as_ref(), &opts);
+    println!("{}", report.summary());
+
+    // Distribution panel at histogram resolution.
+    let hist = report.sojourn_histogram(64);
+    println!(
+        "  sojourn histogram (64 bins): p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+        hist.percentile(50.0),
+        hist.percentile(90.0),
+        hist.percentile(99.0)
+    );
+    if let Some(slo) = slo_ms {
+        println!(
+            "  SLO {slo} ms: {:.2}% attained",
+            report.slo_attainment(slo) * 100.0
+        );
+    }
+
+    // Pool seed: open-loop traces carry it; the closed loop uses its own.
+    let pool_seed = match &spec {
+        ArrivalSpec::Closed { seed, .. } => *seed,
+        _ => 0,
+    };
+
+    if flag(args, "--oracle") {
+        // The clairvoyant full-trace baseline: all kernels at t=0, one
+        // optimally ordered batch.
+        let pool = match &trace {
+            Some(t) => t.pool(&gpu).expect("family validated above"),
+            None => family.workload(&gpu, count, pool_seed),
+        };
+        let oracle = offline_oracle(&gpu, &pool, make_backend.as_ref(), 20_000);
+        println!(
+            "  offline oracle ({}): makespan {:.2} ms | online span {:.2} ms | \
+             price of onlineness {:.3}x",
+            oracle.method,
+            oracle.makespan_ms,
+            report.span_ms,
+            report.span_ms / oracle.makespan_ms
+        );
+    }
+
+    if let Some(path) = opt(args, "--record") {
+        // Record the realized arrival schedule (for closed loop: the
+        // schedule its completions produced) for bit-exact replay.
+        let recorded = match trace {
+            Some(t) => t,
+            None => {
+                let times: Vec<f64> = report.kernels.iter().map(|k| k.arrival_ms).collect();
+                Trace {
+                    family: family.id.to_string(),
+                    n: times.len(),
+                    seed: pool_seed,
+                    times_ms: times,
+                }
+            }
+        };
+        std::fs::write(path, recorded.to_csv())?;
+        eprintln!("recorded trace -> {path} (replay with --arrivals replay:{path})");
+    }
     Ok(())
 }
 

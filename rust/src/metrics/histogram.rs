@@ -54,6 +54,37 @@ impl Histogram {
         self.counts.iter().sum()
     }
 
+    /// p-th percentile (0–100) read off the binned distribution:
+    /// linear interpolation within the bin where the cumulative count
+    /// crosses the rank, so the answer is exact to bin resolution
+    /// (±half a bin width). Returns 0 for an empty histogram. Used by
+    /// the online latency reports for distribution summaries where the
+    /// raw samples have been discarded.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = p / 100.0 * total as f64;
+        let width = (self.max - self.min) / self.counts.len() as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= rank {
+                // Interpolate inside this bin by the fraction of its
+                // mass below the rank.
+                let frac = ((rank - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return self.min + (i as f64 + frac) * width;
+            }
+            cum = next;
+        }
+        self.max
+    }
+
     /// CSV rows: `bin_center,count`.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("bin_center_ms,count\n");
@@ -96,6 +127,31 @@ mod tests {
     fn empty_input() {
         let h = Histogram::build(&[], 3);
         assert_eq!(h.total(), 0);
+    }
+
+    #[test]
+    fn percentile_tracks_exact_within_bin_resolution() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let h = Histogram::build(&xs, 100);
+        let bin_width = (h.max - h.min) / 100.0;
+        for p in [1.0, 25.0, 50.0, 90.0, 99.0] {
+            let exact = crate::metrics::percentile(&xs, p);
+            let approx = h.percentile(p);
+            assert!(
+                (approx - exact).abs() <= bin_width,
+                "p{p}: approx {approx} vs exact {exact}"
+            );
+        }
+        assert_eq!(h.percentile(0.0), h.min);
+        assert!((h.percentile(100.0) - h.max).abs() <= bin_width);
+    }
+
+    #[test]
+    fn percentile_empty_and_degenerate() {
+        assert_eq!(Histogram::build(&[], 4).percentile(50.0), 0.0);
+        let h = Histogram::build(&[5.0; 9], 4);
+        // All mass in one zero-width bin.
+        assert_eq!(h.percentile(50.0), 5.0);
     }
 
     #[test]

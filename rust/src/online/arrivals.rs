@@ -1,0 +1,724 @@
+//! Arrival processes — timestamped kernel streams for the online engine.
+//!
+//! Kernels are drawn from the named [`crate::workloads::Scenario`]
+//! families (the *what*), while the generators here decide the *when*:
+//!
+//! | spelling | process |
+//! |---|---|
+//! | `poisson:<rate>:<seed>` | memoryless arrivals at `rate` kernels/s |
+//! | `bursty:<rate>:<seed>` | on/off-modulated Poisson: bursts at `rate`, exponential on/off phases |
+//! | `closed:<clients>:<think_ms>:<seed>` | closed loop: each client resubmits `think_ms` (mean) after its previous kernel completes |
+//! | `replay:<file>` | replay a recorded [`Trace`] |
+//!
+//! Open-loop processes (`poisson`, `bursty`) are realized as a [`Trace`]
+//! — a fully materialized, seed-deterministic arrival schedule — played
+//! back by [`ReplaySource`]; that makes *record → replay* the identity
+//! and keeps the bit-identical-replay guarantee trivial. The closed loop
+//! is genuinely reactive ([`ClosedLoopSource`] schedules its next
+//! submission from [`ArrivalSource::on_completion`]) but every draw
+//! comes from the same seeded [`SplitMix64`], so it is equally
+//! deterministic — and its realized schedule can itself be recorded as a
+//! [`Trace`] and replayed open-loop.
+
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::util::SplitMix64;
+use crate::workloads::{scenario_by_id, Scenario};
+use std::fmt;
+
+/// One timestamped kernel-launch request.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// Stable id: the kernel's index in the scenario pool (`pool[id]`).
+    pub id: u64,
+    /// Virtual arrival time.
+    pub at_ms: f64,
+    /// Static profile used for ordering and simulation.
+    pub profile: KernelProfile,
+}
+
+/// A stream of timestamped kernel launches, consumed by
+/// [`crate::online::simulate_online`]'s event loop.
+pub trait ArrivalSource: Send {
+    /// Human-readable spelling of this source (e.g. `"poisson:80:1"`).
+    fn name(&self) -> String;
+
+    /// Time of the next arrival, if one is currently scheduled. Open-loop
+    /// sources always know; a closed-loop source returns `None` while
+    /// every client is waiting on a completion.
+    fn next_at(&self) -> Option<f64>;
+
+    /// Pop the arrival previously announced by [`ArrivalSource::next_at`].
+    /// Called exactly when the virtual clock reaches that time.
+    fn pop(&mut self, now_ms: f64) -> Arrival;
+
+    /// A previously popped kernel completed at `now_ms`. Open-loop
+    /// sources ignore this; the closed loop schedules its client's next
+    /// submission from it.
+    fn on_completion(&mut self, now_ms: f64, id: u64) {
+        let _ = (now_ms, id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace: a materialized, replayable arrival schedule
+// ---------------------------------------------------------------------------
+
+/// A recorded arrival schedule: the scenario-pool coordinates plus one
+/// arrival time per kernel (kernel `i` of
+/// `scenario_by_id(family).workload(gpu, n, seed)` arrives at
+/// `times_ms[i]`). Serializes to a small CSV so a production incident
+/// (or an interesting synthetic run) can be replayed bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub family: String,
+    pub n: usize,
+    pub seed: u64,
+    /// Non-decreasing arrival times, one per kernel.
+    pub times_ms: Vec<f64>,
+}
+
+/// Mean kernels per ON burst of the `bursty` process (documented
+/// contract of the `bursty:<rate>:<seed>` spelling).
+const BURST_MEAN_KERNELS: f64 = 16.0;
+
+impl Trace {
+    /// Poisson arrivals: exponential inter-arrival times at
+    /// `rate_per_s` kernels per (virtual) second.
+    pub fn poisson(family: &str, n: usize, rate_per_s: f64, seed: u64) -> Trace {
+        assert!(rate_per_s > 0.0, "arrival rate must be positive");
+        let mut rng = SplitMix64::new(seed ^ 0xA221_7001);
+        let mean_gap_ms = 1e3 / rate_per_s;
+        let mut t = 0.0f64;
+        let times_ms = (0..n)
+            .map(|_| {
+                t += exp_draw(&mut rng, mean_gap_ms);
+                t
+            })
+            .collect();
+        Trace {
+            family: family.to_string(),
+            n,
+            seed,
+            times_ms,
+        }
+    }
+
+    /// On/off-modulated Poisson: during ON phases kernels arrive at
+    /// `rate_per_s`; phases alternate with exponential durations sized so
+    /// a burst carries ~16 kernels on average (`BURST_MEAN_KERNELS`) and
+    /// the duty cycle is ~50% (effective rate ≈ `rate_per_s / 2`). The
+    /// clustered arrivals stress the window policies far harder than the
+    /// memoryless stream at the same mean rate.
+    pub fn bursty(family: &str, n: usize, rate_per_s: f64, seed: u64) -> Trace {
+        assert!(rate_per_s > 0.0, "arrival rate must be positive");
+        let mut rng = SplitMix64::new(seed ^ 0xA221_7002);
+        let mean_gap_ms = 1e3 / rate_per_s;
+        let mean_phase_ms = BURST_MEAN_KERNELS * mean_gap_ms;
+        let mut t = 0.0f64;
+        let mut phase_ends = exp_draw(&mut rng, mean_phase_ms);
+        let mut times_ms = Vec::with_capacity(n);
+        while times_ms.len() < n {
+            let gap = exp_draw(&mut rng, mean_gap_ms);
+            if t + gap <= phase_ends {
+                t += gap;
+                times_ms.push(t);
+            } else {
+                // Burst over: skip the OFF phase, start the next burst.
+                t = phase_ends + exp_draw(&mut rng, mean_phase_ms);
+                phase_ends = t + exp_draw(&mut rng, mean_phase_ms);
+            }
+        }
+        Trace {
+            family: family.to_string(),
+            n,
+            seed,
+            times_ms,
+        }
+    }
+
+    /// The scenario pool this trace draws kernels from (`pool[i]` is the
+    /// kernel arriving at `times_ms[i]`).
+    pub fn pool(&self, gpu: &GpuSpec) -> Option<Vec<KernelProfile>> {
+        Some(scenario_by_id(&self.family)?.workload(gpu, self.n, self.seed))
+    }
+
+    /// Serialize as a small replayable CSV (`# kreorder-trace` header
+    /// carrying the pool coordinates, one `at_ms` row per kernel).
+    pub fn to_csv(&self) -> String {
+        let mut s = format!(
+            "# kreorder-trace v1 family={} n={} seed={}\nat_ms\n",
+            self.family, self.n, self.seed
+        );
+        for t in &self.times_ms {
+            // 17 significant digits round-trip f64 exactly.
+            s.push_str(&format!("{t:.17e}\n"));
+        }
+        s
+    }
+
+    /// Parse the [`Trace::to_csv`] format.
+    pub fn parse(text: &str) -> Result<Trace, TraceParseError> {
+        let err = |m: &str| TraceParseError { message: m.into() };
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| err("empty trace"))?;
+        if !header.starts_with("# kreorder-trace v1 ") {
+            return Err(err("missing `# kreorder-trace v1` header"));
+        }
+        let (mut family, mut n, mut seed) = (None, None, None);
+        for field in header.split_whitespace().skip(3) {
+            match field.split_once('=') {
+                Some(("family", v)) => family = Some(v.to_string()),
+                Some(("n", v)) => n = v.parse::<usize>().ok(),
+                Some(("seed", v)) => seed = v.parse::<u64>().ok(),
+                _ => return Err(err(&format!("unknown header field `{field}`"))),
+            }
+        }
+        let family = family.ok_or_else(|| err("header missing family="))?;
+        let n = n.ok_or_else(|| err("header missing or invalid n="))?;
+        let seed = seed.ok_or_else(|| err("header missing or invalid seed="))?;
+        match lines.next() {
+            Some("at_ms") => {}
+            _ => return Err(err("missing `at_ms` column header")),
+        }
+        let mut times_ms = Vec::with_capacity(n);
+        // The engine's clock starts at 0 and only moves forward, so a
+        // trace must be non-negative as well as non-decreasing.
+        let mut prev = 0.0f64;
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let t: f64 = line
+                .parse()
+                .map_err(|_| err(&format!("bad arrival time `{line}`")))?;
+            if !t.is_finite() || t < prev {
+                return Err(err(
+                    "arrival times must be finite, non-negative and non-decreasing",
+                ));
+            }
+            prev = t;
+            times_ms.push(t);
+        }
+        if times_ms.len() != n {
+            return Err(err(&format!(
+                "header says n={n} but {} arrival rows present",
+                times_ms.len()
+            )));
+        }
+        Ok(Trace {
+            family,
+            n,
+            seed,
+            times_ms,
+        })
+    }
+}
+
+/// Exponential draw with the given mean (inverse-CDF; strictly positive).
+fn exp_draw(rng: &mut SplitMix64, mean: f64) -> f64 {
+    // 1 - next_f64() is in (0, 1]; ln of it is finite and <= 0.
+    -(1.0 - rng.next_f64()).ln() * mean
+}
+
+/// Error parsing a recorded trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceParseError {
+    pub message: String,
+}
+
+impl fmt::Display for TraceParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid kreorder trace: {}", self.message)
+    }
+}
+
+impl std::error::Error for TraceParseError {}
+
+// ---------------------------------------------------------------------------
+// Sources
+// ---------------------------------------------------------------------------
+
+/// Open-loop playback of a [`Trace`] (also the realization of the
+/// `poisson` / `bursty` spellings).
+pub struct ReplaySource {
+    name: String,
+    arrivals: Vec<Arrival>,
+    next: usize,
+}
+
+impl ReplaySource {
+    /// Build from a trace. Fails when the trace names an unknown
+    /// scenario family.
+    pub fn from_trace(trace: &Trace, gpu: &GpuSpec) -> Result<Self, TraceParseError> {
+        let pool = trace.pool(gpu).ok_or_else(|| TraceParseError {
+            message: format!("unknown scenario family `{}`", trace.family),
+        })?;
+        let arrivals = trace
+            .times_ms
+            .iter()
+            .zip(pool)
+            .enumerate()
+            .map(|(i, (&at_ms, profile))| Arrival {
+                id: i as u64,
+                at_ms,
+                profile,
+            })
+            .collect();
+        Ok(ReplaySource {
+            name: format!("replay:{}:{}:{}", trace.family, trace.n, trace.seed),
+            arrivals,
+            next: 0,
+        })
+    }
+
+    /// Override the reported spelling (so `poisson:…` runs report their
+    /// generator, not `replay:…`).
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+}
+
+impl ArrivalSource for ReplaySource {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn next_at(&self) -> Option<f64> {
+        self.arrivals.get(self.next).map(|a| a.at_ms)
+    }
+
+    fn pop(&mut self, _now_ms: f64) -> Arrival {
+        let a = self.arrivals[self.next].clone();
+        self.next += 1;
+        a
+    }
+}
+
+/// Closed-loop source: `clients` concurrent submitters, each issuing its
+/// next kernel an exponential think time (mean `think_ms`) after its
+/// previous one **completes**. Arrival pressure is therefore coupled to
+/// service speed — the regime where reordering's makespan wins feed
+/// straight back into the offered load.
+pub struct ClosedLoopSource {
+    clients: usize,
+    think_ms: f64,
+    seed: u64,
+    pool: Vec<KernelProfile>,
+    /// Submission times already scheduled but not yet popped (min-heap
+    /// by time via sorted Vec — client count is small).
+    scheduled: Vec<f64>,
+    issued: usize,
+    rng: SplitMix64,
+}
+
+impl ClosedLoopSource {
+    /// `n` bounds the total number of submissions (the run's length).
+    pub fn new(
+        family: &Scenario,
+        gpu: &GpuSpec,
+        n: usize,
+        clients: usize,
+        think_ms: f64,
+        seed: u64,
+    ) -> Self {
+        let clients = clients.max(1);
+        let mut rng = SplitMix64::new(seed ^ 0xA221_7003);
+        // Initial submissions staggered by one think time each, so
+        // clients don't all collide at t=0.
+        let mut scheduled: Vec<f64> = (0..clients.min(n))
+            .map(|_| exp_draw(&mut rng, think_ms.max(0.0).max(1e-6)))
+            .collect();
+        scheduled.sort_by(f64::total_cmp);
+        ClosedLoopSource {
+            clients,
+            think_ms: think_ms.max(0.0),
+            seed,
+            pool: family.workload(gpu, n, seed),
+            scheduled,
+            issued: 0,
+            rng,
+        }
+    }
+}
+
+impl ArrivalSource for ClosedLoopSource {
+    fn name(&self) -> String {
+        format!("closed:{}:{}:{}", self.clients, self.think_ms, self.seed)
+    }
+
+    fn next_at(&self) -> Option<f64> {
+        if self.issued >= self.pool.len() {
+            return None;
+        }
+        self.scheduled.first().copied()
+    }
+
+    fn pop(&mut self, _now_ms: f64) -> Arrival {
+        let at_ms = self.scheduled.remove(0);
+        let id = self.issued as u64;
+        let profile = self.pool[self.issued].clone();
+        self.issued += 1;
+        Arrival { id, at_ms, profile }
+    }
+
+    fn on_completion(&mut self, now_ms: f64, _id: u64) {
+        // The completing client thinks, then submits — unless the run's
+        // submission budget is already fully scheduled.
+        if self.issued + self.scheduled.len() >= self.pool.len() {
+            return;
+        }
+        let t = now_ms + exp_draw(&mut self.rng, self.think_ms.max(1e-6));
+        let at = self
+            .scheduled
+            .iter()
+            .position(|&x| x > t)
+            .unwrap_or(self.scheduled.len());
+        self.scheduled.insert(at, t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spelling registry
+// ---------------------------------------------------------------------------
+
+/// A parsed `--arrivals` spelling.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    Poisson { rate_per_s: f64, seed: u64 },
+    Bursty { rate_per_s: f64, seed: u64 },
+    Closed { clients: usize, think_ms: f64, seed: u64 },
+    /// Replay a recorded trace file; the caller loads the file (this
+    /// module does no I/O).
+    Replay { path: String },
+}
+
+/// Error for unknown arrival spellings; `Display` lists the valid forms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrivalParseError {
+    pub input: String,
+}
+
+impl fmt::Display for ArrivalParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown arrival process `{}` — valid processes: poisson:<rate>:<seed>, \
+             bursty:<rate>:<seed>, closed:<clients>:<think_ms>:<seed>, replay:<file>",
+            self.input
+        )
+    }
+}
+
+impl std::error::Error for ArrivalParseError {}
+
+impl ArrivalSpec {
+    /// Parse an arrival-process spelling.
+    ///
+    /// ```
+    /// use kreorder::online::ArrivalSpec;
+    /// assert!(matches!(
+    ///     ArrivalSpec::parse("poisson:80:1"),
+    ///     Ok(ArrivalSpec::Poisson { .. })
+    /// ));
+    /// assert!(ArrivalSpec::parse("uniform:3").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<ArrivalSpec, ArrivalParseError> {
+        let err = || ArrivalParseError { input: s.into() };
+        let (head, rest) = s.split_once(':').ok_or_else(err)?;
+        let rate = |p: &str| -> Result<f64, ArrivalParseError> {
+            let v: f64 = p.parse().map_err(|_| err())?;
+            if v.is_finite() && v > 0.0 {
+                Ok(v)
+            } else {
+                Err(err())
+            }
+        };
+        match head.to_ascii_lowercase().as_str() {
+            "poisson" => {
+                let (r, seed) = rest.split_once(':').ok_or_else(err)?;
+                Ok(ArrivalSpec::Poisson {
+                    rate_per_s: rate(r)?,
+                    seed: seed.parse().map_err(|_| err())?,
+                })
+            }
+            "bursty" => {
+                let (r, seed) = rest.split_once(':').ok_or_else(err)?;
+                Ok(ArrivalSpec::Bursty {
+                    rate_per_s: rate(r)?,
+                    seed: seed.parse().map_err(|_| err())?,
+                })
+            }
+            "closed" => {
+                let mut parts = rest.split(':');
+                let clients: usize = parts.next().ok_or_else(err)?.parse().map_err(|_| err())?;
+                let think: f64 = parts.next().ok_or_else(err)?.parse().map_err(|_| err())?;
+                let seed: u64 = parts.next().ok_or_else(err)?.parse().map_err(|_| err())?;
+                if parts.next().is_some() || clients == 0 || !think.is_finite() || think < 0.0 {
+                    return Err(err());
+                }
+                Ok(ArrivalSpec::Closed {
+                    clients,
+                    think_ms: think,
+                    seed,
+                })
+            }
+            "replay" => Ok(ArrivalSpec::Replay { path: rest.into() }),
+            _ => Err(err()),
+        }
+    }
+
+    /// Materialize the open-loop spellings as a [`Trace`] over `family`
+    /// (`None` for `closed` / `replay`, which are not trace-shaped up
+    /// front).
+    pub fn trace(&self, family: &str, n: usize) -> Option<Trace> {
+        match self {
+            ArrivalSpec::Poisson { rate_per_s, seed } => {
+                Some(Trace::poisson(family, n, *rate_per_s, *seed))
+            }
+            ArrivalSpec::Bursty { rate_per_s, seed } => {
+                Some(Trace::bursty(family, n, *rate_per_s, *seed))
+            }
+            _ => None,
+        }
+    }
+
+    /// The spelling's canonical display form.
+    pub fn name(&self) -> String {
+        match self {
+            ArrivalSpec::Poisson { rate_per_s, seed } => format!("poisson:{rate_per_s}:{seed}"),
+            ArrivalSpec::Bursty { rate_per_s, seed } => format!("bursty:{rate_per_s}:{seed}"),
+            ArrivalSpec::Closed {
+                clients,
+                think_ms,
+                seed,
+            } => format!("closed:{clients}:{think_ms}:{seed}"),
+            ArrivalSpec::Replay { path } => format!("replay:{path}"),
+        }
+    }
+}
+
+/// Human-readable table of the arrival spellings (one per line).
+pub fn arrival_help_table() -> String {
+    let rows = [
+        ("poisson:<rate>:<seed>", "memoryless arrivals at <rate> kernels per virtual second"),
+        (
+            "bursty:<rate>:<seed>",
+            "on/off bursts at <rate> during ON phases (~16 kernels/burst, ~50% duty)",
+        ),
+        (
+            "closed:<c>:<think>:<seed>",
+            "closed loop: <c> clients, each resubmitting <think> ms (mean) after completion",
+        ),
+        ("replay:<file>", "replay a trace recorded with `kreorder serve --record`"),
+    ];
+    let mut out = String::new();
+    for (name, desc) in rows {
+        out.push_str(&format!("  {name:<26} {desc}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::gtx580()
+    }
+
+    #[test]
+    fn poisson_is_deterministic_and_ordered() {
+        let a = Trace::poisson("uniform", 50, 100.0, 7);
+        let b = Trace::poisson("uniform", 50, 100.0, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, Trace::poisson("uniform", 50, 100.0, 8));
+        assert_eq!(a.times_ms.len(), 50);
+        for w in a.times_ms.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(a.times_ms.iter().all(|t| t.is_finite() && *t > 0.0));
+        // Mean inter-arrival should land near 10 ms at 100/s.
+        let mean_gap = a.times_ms.last().unwrap() / 50.0;
+        assert!((2.0..50.0).contains(&mean_gap), "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn bursty_clusters_more_than_poisson() {
+        let p = Trace::poisson("uniform", 200, 100.0, 3);
+        let b = Trace::bursty("uniform", 200, 100.0, 3);
+        // Same ON rate, ~50% duty: the bursty trace takes longer overall…
+        assert!(b.times_ms.last().unwrap() > p.times_ms.last().unwrap());
+        // …yet its shortest gaps match the ON-phase rate (clustering).
+        let min_gap = |t: &Trace| {
+            t.times_ms
+                .windows(2)
+                .map(|w| w[1] - w[0])
+                .fold(f64::INFINITY, f64::min)
+        };
+        assert!(min_gap(&b) < 10.0, "no intra-burst clustering");
+        for w in b.times_ms.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn trace_csv_round_trips_bit_exactly() {
+        let t = Trace::bursty("skewed", 31, 42.5, 9);
+        let parsed = Trace::parse(&t.to_csv()).unwrap();
+        assert_eq!(parsed.family, t.family);
+        assert_eq!(parsed.n, t.n);
+        assert_eq!(parsed.seed, t.seed);
+        assert_eq!(parsed.times_ms.len(), t.times_ms.len());
+        for (a, b) in parsed.times_ms.iter().zip(&t.times_ms) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn trace_parse_rejects_garbage() {
+        for bad in [
+            "",
+            "at_ms\n1.0\n",
+            "# kreorder-trace v1 family=uniform n=2 seed=0\nat_ms\n1.0\n",
+            "# kreorder-trace v1 family=uniform n=1 seed=0\nat_ms\nNaN\n",
+            "# kreorder-trace v1 family=uniform n=2 seed=0\nat_ms\n2.0\n1.0\n",
+            "# kreorder-trace v1 family=uniform n=1 seed=0\nat_ms\n-5.0\n",
+            "# kreorder-trace v1 n=1 seed=0\nat_ms\n1.0\n",
+            "# kreorder-trace v1 family=uniform n=1 seed=0 bogus=1\nat_ms\n1.0\n",
+        ] {
+            assert!(Trace::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn replay_source_plays_pool_in_order() {
+        let t = Trace::poisson("skewed", 12, 50.0, 4);
+        let pool = t.pool(&gpu()).unwrap();
+        let mut src = ReplaySource::from_trace(&t, &gpu()).unwrap();
+        for i in 0..12u64 {
+            let at = src.next_at().unwrap();
+            let a = src.pop(at);
+            assert_eq!(a.id, i);
+            assert_eq!(a.at_ms.to_bits(), t.times_ms[i as usize].to_bits());
+            assert_eq!(a.profile, pool[i as usize]);
+        }
+        assert!(src.next_at().is_none());
+    }
+
+    #[test]
+    fn replay_unknown_family_errors() {
+        let t = Trace {
+            family: "no-such-family".into(),
+            n: 1,
+            seed: 0,
+            times_ms: vec![1.0],
+        };
+        assert!(ReplaySource::from_trace(&t, &gpu()).is_err());
+    }
+
+    #[test]
+    fn closed_loop_bounds_outstanding_and_total() {
+        let fam = scenario_by_id("uniform").unwrap();
+        let mut src = ClosedLoopSource::new(fam, &gpu(), 10, 3, 5.0, 1);
+        // At most `clients` submissions are ever scheduled before
+        // completions come back.
+        let mut popped = Vec::new();
+        while popped.len() < 3 {
+            let at = src.next_at().unwrap();
+            popped.push(src.pop(at));
+        }
+        assert!(src.next_at().is_none(), "4th submission before any completion");
+        // Completions release one new submission each, up to the total.
+        for k in 0..7u64 {
+            src.on_completion(100.0 + k as f64, k % 3);
+            let at = src.next_at().unwrap();
+            popped.push(src.pop(at));
+        }
+        assert!(src.next_at().is_none());
+        src.on_completion(500.0, 9); // budget exhausted: no 11th kernel
+        assert!(src.next_at().is_none());
+        assert_eq!(popped.len(), 10);
+        let ids: Vec<u64> = popped.iter().map(|a| a.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn closed_loop_is_deterministic() {
+        let fam = scenario_by_id("mixed").unwrap();
+        let run = |seed| {
+            let mut src = ClosedLoopSource::new(fam, &gpu(), 6, 2, 3.0, seed);
+            let mut times = Vec::new();
+            for i in 0..6 {
+                let at = src.next_at().unwrap();
+                let a = src.pop(at);
+                times.push(a.at_ms);
+                src.on_completion(a.at_ms + 10.0, i);
+            }
+            times
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn spellings_parse() {
+        assert_eq!(
+            ArrivalSpec::parse("poisson:80:1").unwrap(),
+            ArrivalSpec::Poisson {
+                rate_per_s: 80.0,
+                seed: 1
+            }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("BURSTY:12.5:3").unwrap(),
+            ArrivalSpec::Bursty {
+                rate_per_s: 12.5,
+                seed: 3
+            }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("closed:4:25:9").unwrap(),
+            ArrivalSpec::Closed {
+                clients: 4,
+                think_ms: 25.0,
+                seed: 9
+            }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("replay:/tmp/trace.csv").unwrap(),
+            ArrivalSpec::Replay {
+                path: "/tmp/trace.csv".into()
+            }
+        );
+        for bad in [
+            "poisson",
+            "poisson:80",
+            "poisson:-1:0",
+            "poisson:x:0",
+            "closed:0:5:1",
+            "closed:2:5:1:9",
+            "nonsense:1:2",
+        ] {
+            let err = ArrivalSpec::parse(bad).unwrap_err();
+            assert!(err.to_string().contains(bad), "{err}");
+        }
+    }
+
+    #[test]
+    fn spec_trace_only_for_open_loop() {
+        assert!(ArrivalSpec::parse("poisson:10:0").unwrap().trace("uniform", 5).is_some());
+        assert!(ArrivalSpec::parse("bursty:10:0").unwrap().trace("uniform", 5).is_some());
+        assert!(ArrivalSpec::parse("closed:2:5:0").unwrap().trace("uniform", 5).is_none());
+        assert!(ArrivalSpec::parse("replay:x").unwrap().trace("uniform", 5).is_none());
+    }
+
+    #[test]
+    fn help_table_covers_spellings() {
+        let t = arrival_help_table();
+        for name in ["poisson:", "bursty:", "closed:", "replay:"] {
+            assert!(t.contains(name));
+        }
+    }
+}

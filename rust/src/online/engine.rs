@@ -1,0 +1,422 @@
+//! The virtual-clock event loop: arrivals → reorder windows → device.
+//!
+//! [`simulate_online`] is a single-threaded discrete-event simulation.
+//! Nothing ever sleeps on the wall clock — time is a plain `f64` of
+//! virtual milliseconds advanced from event to event — so a run is a
+//! pure function of its configuration: equal (arrival seed, strategy
+//! seed, window policy, backend) produce **bit-identical** per-kernel
+//! timestamps on every machine (`tests/online_determinism.rs` pins it).
+//!
+//! Four event kinds drive the loop, processed in this fixed priority at
+//! equal times (ties are resolved deterministically, never by insertion
+//! race):
+//!
+//! 1. **completion** — a kernel's model finish time passed (closed-loop
+//!    sources schedule their next submission from it);
+//! 2. **batch start** — the device is free and a closed window's
+//!    decision overhead has elapsed;
+//! 3. **arrival** — the source's next kernel joins the open window;
+//! 4. **recheck** — a [`WindowPolicy`] `Wait` deadline landed.
+//!
+//! The window policy is consulted after every event; `Close` runs the
+//! [`OnlineReorderer`] (bounded by its per-decision budget), queues the
+//! batch behind the device, and the batch's per-kernel finish times come
+//! from one [`crate::exec::ExecutionBackend::execute`] call — the same
+//! timing model the offline layers use, now coupled to a clock.
+
+use super::arrivals::ArrivalSource;
+use super::report::{BatchRecord, KernelRecord, OnlineReport};
+use super::window::{WindowDecision, WindowPolicy, WindowState};
+use super::OnlineReorderer;
+use crate::exec::ExecutionBackend;
+use crate::gpu::{GpuSpec, KernelProfile};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Knobs of the online run that are not trait objects.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OnlineOpts {
+    /// Modeled scheduling overhead: virtual milliseconds charged per
+    /// order evaluation the reorder decision spends. A closed window
+    /// cannot start service before `close + evals × this` — set it > 0
+    /// to make the search budget a *latency* trade-off instead of a free
+    /// lunch. Default 0 (decisions are instantaneous, only bounded by
+    /// their evaluation budget). Negative or non-finite values are
+    /// treated as 0 — time only moves forward.
+    pub decision_ms_per_eval: f64,
+}
+
+/// Totally ordered f64 for the completion heap (event times are always
+/// finite).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct EventTime(f64);
+
+impl Eq for EventTime {}
+
+impl PartialOrd for EventTime {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventTime {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// A kernel waiting in the open reorder window.
+struct Open {
+    id: u64,
+    arrival_ms: f64,
+    profile: KernelProfile,
+}
+
+/// A closed window queued behind the device.
+struct Closed {
+    batch: u64,
+    close_ms: f64,
+    /// Close time plus decision overhead; service cannot start earlier.
+    ready_ms: f64,
+    members: Vec<Open>,
+    order: Vec<usize>,
+    evals: u64,
+}
+
+/// Event priorities at equal times (lower wins).
+const EV_COMPLETION: u8 = 0;
+const EV_BATCH_START: u8 = 1;
+const EV_ARRIVAL: u8 = 2;
+const EV_RECHECK: u8 = 3;
+
+/// Run the online scheduler over one arrival stream. See the module docs
+/// for the event model; the returned [`OnlineReport`] carries every
+/// per-kernel timestamp.
+pub fn simulate_online(
+    gpu: &GpuSpec,
+    mut source: Box<dyn ArrivalSource>,
+    mut window: Box<dyn WindowPolicy>,
+    reorderer: &OnlineReorderer,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    opts: &OnlineOpts,
+) -> OnlineReport {
+    let mut backend = make_backend();
+    let source_name = source.name();
+    let window_name = window.name();
+    // A negative decision cost would move batch-ready times before their
+    // close times and break event monotonicity; clamp it out.
+    let decision_ms_per_eval = if opts.decision_ms_per_eval.is_finite() {
+        opts.decision_ms_per_eval.max(0.0)
+    } else {
+        0.0
+    };
+
+    let mut now = 0.0f64;
+    let mut pending: Vec<Open> = Vec::new();
+    let mut queue: VecDeque<Closed> = VecDeque::new();
+    // Min-heap of (finish time, kernel id) completion events.
+    let mut completions: BinaryHeap<Reverse<(EventTime, u64)>> = BinaryHeap::new();
+    let mut device_free_at = 0.0f64;
+    let mut next_batch = 0u64;
+
+    let mut kernels: Vec<KernelRecord> = Vec::new();
+    let mut batches: Vec<BatchRecord> = Vec::new();
+    let mut device_busy_ms = 0.0f64;
+    let mut decision_evals = 0u64;
+    let mut n_unsimulable = 0usize;
+
+    loop {
+        // Ask the policy about the open window. Closing never advances
+        // time, so the policy always sees the post-close state before
+        // the clock moves again.
+        let mut close_now = false;
+        let mut recheck_at: Option<f64> = None;
+        if !pending.is_empty() {
+            let state = WindowState {
+                now_ms: now,
+                n_pending: pending.len(),
+                oldest_arrival_ms: pending[0].arrival_ms,
+                device_free_at_ms: device_free_at,
+                queued_batches: queue.len(),
+            };
+            match window.decide(&state) {
+                WindowDecision::Close => close_now = true,
+                WindowDecision::Wait { recheck_at_ms } => {
+                    debug_assert!(
+                        recheck_at_ms.map_or(true, |t| t > now),
+                        "window policy returned a non-future recheck deadline"
+                    );
+                    recheck_at = recheck_at_ms;
+                }
+            }
+        }
+
+        if !close_now {
+            // Earliest event, ties broken by the fixed priority order.
+            let t_completion = completions.peek().map(|Reverse((t, _))| t.0);
+            let t_start = queue.front().map(|b| b.ready_ms.max(device_free_at));
+            let t_arrival = source.next_at();
+            let candidates = [
+                (t_completion, EV_COMPLETION),
+                (t_start, EV_BATCH_START),
+                (t_arrival, EV_ARRIVAL),
+                (recheck_at, EV_RECHECK),
+            ];
+            let mut next: Option<(f64, u8)> = None;
+            for (t, kind) in candidates {
+                let Some(t) = t else { continue };
+                let better = match next {
+                    None => true,
+                    Some((bt, bk)) => t < bt || (t == bt && kind < bk),
+                };
+                if better {
+                    next = Some((t, kind));
+                }
+            }
+
+            match next {
+                None if pending.is_empty() => break, // drained and idle: done
+                // End-of-stream drain: nothing else can ever happen, so
+                // the window closes regardless of the policy (a
+                // fixed:<k> window would otherwise strand its remainder
+                // forever).
+                None => close_now = true,
+                Some((t, kind)) => {
+                    debug_assert!(t >= now, "event time moved backwards");
+                    now = t.max(now);
+                    match kind {
+                        EV_COMPLETION => {
+                            let Reverse((_, id)) = completions.pop().expect("peeked");
+                            source.on_completion(now, id);
+                        }
+                        EV_BATCH_START => {
+                            let b = queue.pop_front().expect("peeked");
+                            let profiles: Vec<KernelProfile> =
+                                b.members.iter().map(|m| m.profile.clone()).collect();
+                            let report = backend.execute(gpu, &profiles, &b.order);
+                            let makespan = if report.makespan_ms.is_nan() {
+                                // Unsimulable batch: serve it in zero
+                                // time rather than wedging the queue
+                                // (validated sources never hit this; the
+                                // report counts it).
+                                n_unsimulable += 1;
+                                0.0
+                            } else {
+                                report.makespan_ms
+                            };
+                            device_free_at = now + makespan;
+                            device_busy_ms += makespan;
+                            for o in &report.outcomes {
+                                let m = &b.members[o.index];
+                                let dt = if o.finish_ms.is_nan() { 0.0 } else { o.finish_ms };
+                                let finish = now + dt;
+                                kernels.push(KernelRecord {
+                                    id: m.id,
+                                    arrival_ms: m.arrival_ms,
+                                    close_ms: b.close_ms,
+                                    start_ms: now,
+                                    finish_ms: finish,
+                                    batch: b.batch,
+                                    position: o.position,
+                                });
+                                completions.push(Reverse((EventTime(finish), m.id)));
+                            }
+                            batches.push(BatchRecord {
+                                id: b.batch,
+                                n: b.members.len(),
+                                close_ms: b.close_ms,
+                                ready_ms: b.ready_ms,
+                                start_ms: now,
+                                makespan_ms: makespan,
+                                evals: b.evals,
+                                order: b.order,
+                            });
+                        }
+                        EV_ARRIVAL => {
+                            let a = source.pop(now);
+                            pending.push(Open {
+                                id: a.id,
+                                arrival_ms: a.at_ms,
+                                profile: a.profile,
+                            });
+                        }
+                        _ => {} // EV_RECHECK: the policy re-decides above
+                    }
+                    continue;
+                }
+            }
+        }
+
+        // Close the open window: reorder within the per-decision budget
+        // and queue the batch behind the device.
+        let members = std::mem::take(&mut pending);
+        let profiles: Vec<KernelProfile> = members.iter().map(|m| m.profile.clone()).collect();
+        let decision = reorderer.decide(gpu, &profiles, make_backend);
+        decision_evals += decision.evals;
+        queue.push_back(Closed {
+            batch: next_batch,
+            close_ms: now,
+            ready_ms: now + decision_ms_per_eval * decision.evals as f64,
+            members,
+            order: decision.order,
+            evals: decision.evals,
+        });
+        next_batch += 1;
+    }
+
+    let span_ms = kernels.iter().map(|k| k.finish_ms).fold(0.0, f64::max);
+    kernels.sort_by_key(|k| k.id);
+    OnlineReport {
+        source: source_name,
+        window: window_name,
+        reorderer: reorderer.name(),
+        backend: backend.name().to_string(),
+        kernels,
+        batches,
+        span_ms,
+        device_busy_ms,
+        decision_evals,
+        n_unsimulable,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::SimulatorBackend;
+    use crate::online::arrivals::{ReplaySource, Trace};
+    use crate::online::window::parse_window_policy;
+    use crate::workloads::scenario_by_id;
+
+    fn sim() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+        Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+    }
+
+    fn run(
+        family: &str,
+        n: usize,
+        rate: f64,
+        window: &str,
+        reorderer: &OnlineReorderer,
+    ) -> OnlineReport {
+        let gpu = GpuSpec::gtx580();
+        let trace = Trace::poisson(family, n, rate, 7);
+        let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+        let w = parse_window_policy(window).unwrap();
+        simulate_online(&gpu, source, w, reorderer, sim().as_ref(), &OnlineOpts::default())
+    }
+
+    #[test]
+    fn conservation_and_timestamp_ordering() {
+        let r = run("uniform", 24, 100.0, "linger:6:30", &OnlineReorderer::fifo());
+        assert_eq!(r.kernels.len(), 24);
+        assert_eq!(r.batches.iter().map(|b| b.n).sum::<usize>(), 24);
+        // Every batch holds at least one kernel — a zero-kernel window is
+        // a scheduler bug.
+        assert!(r.batches.iter().all(|b| b.n >= 1));
+        let ids: Vec<u64> = r.kernels.iter().map(|k| k.id).collect();
+        assert_eq!(ids, (0..24).collect::<Vec<_>>());
+        for k in &r.kernels {
+            assert!(k.arrival_ms <= k.close_ms, "{k:?}");
+            assert!(k.close_ms <= k.start_ms, "{k:?}");
+            assert!(k.start_ms <= k.finish_ms, "{k:?}");
+        }
+        // The device is serial: each batch starts only after the
+        // previous one finished.
+        for w in r.batches.windows(2) {
+            assert!(w[1].start_ms >= w[0].start_ms + w[0].makespan_ms - 1e-9);
+        }
+        assert!(r.span_ms > 0.0);
+        assert_eq!(r.n_unsimulable, 0);
+    }
+
+    #[test]
+    fn fixed_window_batches_exactly_k_plus_drain_remainder() {
+        let r = run("uniform", 14, 200.0, "fixed:4", &OnlineReorderer::fifo());
+        let sizes: Vec<usize> = r.batches.iter().map(|b| b.n).collect();
+        assert_eq!(sizes, vec![4, 4, 4, 2]);
+    }
+
+    #[test]
+    fn sparse_arrivals_with_linger_serve_singletons() {
+        // Inter-arrival ~20 s (far beyond any single-kernel makespan),
+        // linger 5 ms, huge cap: every kernel rides alone — the latency
+        // SLO wins over batching.
+        let r = run("uniform", 6, 0.05, "linger:64:5", &OnlineReorderer::fifo());
+        assert!(r.batches.iter().all(|b| b.n == 1), "{:?}", r.batches);
+        // With the device idle between sparse arrivals, no kernel waits
+        // past the linger bound.
+        for (k, q) in r.kernels.iter().zip(r.queue_waits_ms()) {
+            assert!(q <= 5.0 + 1e-9, "{k:?} waited {q}");
+        }
+    }
+
+    #[test]
+    fn adaptive_window_grows_under_load() {
+        let idle = run("uniform", 24, 0.05, "adaptive:8:40", &OnlineReorderer::fifo());
+        let loaded = run("uniform", 24, 2000.0, "adaptive:8:40", &OnlineReorderer::fifo());
+        assert!(
+            loaded.mean_window() > idle.mean_window(),
+            "loaded {} !> idle {}",
+            loaded.mean_window(),
+            idle.mean_window()
+        );
+        assert!(idle.mean_window() < 2.0, "idle windows should stay small");
+    }
+
+    #[test]
+    fn decision_cost_delays_service() {
+        let gpu = GpuSpec::gtx580();
+        let reorderer = OnlineReorderer::search("local:0", 64).unwrap();
+        let trace = Trace::poisson("skewed", 16, 500.0, 3);
+        let mut spans = Vec::new();
+        for cost in [0.0, 0.05] {
+            let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+            let w = parse_window_policy("linger:8:20").unwrap();
+            let opts = OnlineOpts {
+                decision_ms_per_eval: cost,
+            };
+            let r = simulate_online(&gpu, source, w, &reorderer, sim().as_ref(), &opts);
+            // ready_ms reflects the charged overhead.
+            for b in &r.batches {
+                assert!((b.ready_ms - b.close_ms - cost * b.evals as f64).abs() < 1e-9);
+            }
+            spans.push(r.span_ms);
+        }
+        assert!(spans[1] > spans[0], "overhead {spans:?} did not delay completion");
+    }
+
+    #[test]
+    fn closed_loop_couples_arrivals_to_completions() {
+        let gpu = GpuSpec::gtx580();
+        let fam = scenario_by_id("uniform").unwrap();
+        let source = Box::new(crate::online::ClosedLoopSource::new(fam, &gpu, 12, 3, 1.0, 9));
+        let w = parse_window_policy("adaptive:4:10").unwrap();
+        let r = simulate_online(
+            &gpu,
+            source,
+            w,
+            &OnlineReorderer::fifo(),
+            sim().as_ref(),
+            &OnlineOpts::default(),
+        );
+        assert_eq!(r.kernels.len(), 12);
+        // With 3 clients, no window can ever hold more than 3 kernels.
+        assert!(r.batches.iter().all(|b| b.n <= 3), "{:?}", r.batches);
+        // Later kernels arrive only after earlier completions: arrivals
+        // interleave with finishes rather than all landing at t≈0.
+        let last_arrival = r.kernels.iter().map(|k| k.arrival_ms).fold(0.0, f64::max);
+        let first_finish = r.kernels.iter().map(|k| k.finish_ms).fold(f64::INFINITY, f64::min);
+        assert!(last_arrival > first_finish);
+    }
+
+    #[test]
+    fn report_is_sorted_by_id_and_span_matches_max_finish() {
+        let r = run("mixed", 20, 300.0, "linger:8:25", &OnlineReorderer::fifo());
+        for w in r.kernels.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+        let max_finish = r.kernels.iter().map(|k| k.finish_ms).fold(0.0, f64::max);
+        assert_eq!(r.span_ms.to_bits(), max_finish.to_bits());
+    }
+}

@@ -1,0 +1,355 @@
+//! **Online streaming scheduler** — arrival-driven reorder windows with
+//! latency SLOs.
+//!
+//! Every offline layer of this crate ([`crate::perm`], [`crate::search`],
+//! the batch coordinator) assumes the kernels are already in hand. A
+//! production service sees a *stream*: launch requests arrive over time,
+//! and the scheduler must trade reordering freedom (bigger windows =
+//! better orders) against the latency each queued kernel pays for the
+//! wait. This module couples the existing per-order evaluation seams to
+//! a clock:
+//!
+//! * [`arrivals`](self::arrivals) — seeded arrival processes (`poisson`,
+//!   `bursty`, `closed` loop, `replay` of a recorded [`Trace`]) drawing
+//!   kernels from the [`crate::workloads::Scenario`] families;
+//! * [`window`](self::window) — pluggable [`WindowPolicy`] deciding
+//!   *when* a reorder window closes (`fixed`, `linger` with its latency
+//!   bound, occupancy-aware `adaptive`);
+//! * [`OnlineReorderer`] — decides *what order* a closed window launches
+//!   in: exhaustive for tiny windows (when the evaluation budget provably
+//!   covers `n!`), any registered anytime [`crate::search::SearchStrategy`]
+//!   beyond, always under a per-decision [`crate::search::SearchBudget`]
+//!   so scheduling overhead is bounded — and never worse than the FIFO
+//!   arrival order (a final guarded comparison);
+//! * [`simulate_online`] — the deterministic virtual-clock event loop
+//!   (no wall sleeping; bit-identical per-kernel timestamps per seed);
+//! * [`report`](self::report) — per-kernel queue-wait / service /
+//!   sojourn accounting with exact p50/p95/p99, plus throughput,
+//!   utilization and SLO attainment;
+//! * [`oracle`](self::oracle) — the clairvoyant full-trace baseline that
+//!   prices onlineness per arrival regime.
+//!
+//! The thread coordinator ([`crate::coordinator`]) shares the
+//! [`WindowPolicy`] seam for its dispatcher batching, so a policy tuned
+//! in simulation drops into the real service unchanged — except that
+//! the dispatcher cannot observe device occupancy, so occupancy-aware
+//! policies degrade there (see
+//! [`crate::coordinator::CoordinatorBuilder::window_policy`]). CLI:
+//! `kreorder serve --arrivals poisson:<rate>:<seed> --window <policy>
+//! --strategy <s>`; CI trends FIFO-vs-reordered tail latency through
+//! `benches/online_latency.rs` (`BENCH_online.json`).
+//!
+//! ```
+//! use kreorder::gpu::GpuSpec;
+//! use kreorder::exec::{ExecutionBackend, SimulatorBackend};
+//! use kreorder::online::{
+//!     parse_window_policy, simulate_online, OnlineOpts, OnlineReorderer, ReplaySource, Trace,
+//! };
+//!
+//! let gpu = GpuSpec::gtx580();
+//! let trace = Trace::poisson("skewed", 24, 200.0, 7);
+//! let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+//! let window = parse_window_policy("linger:8:50").unwrap();
+//! let reorderer = OnlineReorderer::search("local:0", 256).unwrap();
+//! let report = simulate_online(
+//!     &gpu,
+//!     source,
+//!     window,
+//!     &reorderer,
+//!     &|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>,
+//!     &OnlineOpts::default(),
+//! );
+//! assert_eq!(report.kernels.len(), 24);
+//! println!("p99 sojourn: {:.2} ms", report.sojourn_stats().p99_ms);
+//! ```
+
+pub mod arrivals;
+mod engine;
+pub mod oracle;
+pub mod report;
+pub mod window;
+
+pub use arrivals::{
+    arrival_help_table, Arrival, ArrivalParseError, ArrivalSource, ArrivalSpec, ClosedLoopSource,
+    ReplaySource, Trace, TraceParseError,
+};
+pub use engine::{simulate_online, OnlineOpts};
+pub use oracle::{
+    fifo_window_capacity_per_s, offline_oracle, OracleOutcome, ORACLE_EXACT_MAX_N,
+};
+pub use report::{BatchRecord, KernelRecord, LatencyStats, OnlineReport};
+pub use window::{
+    parse_window_policy, window_policy_help_table, AdaptiveWindow, FixedWindow, LingerWindow,
+    WindowDecision, WindowParseError, WindowPolicy, WindowState,
+};
+
+use crate::exec::ExecutionBackend;
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::perm::sweep_with;
+use crate::search::{exact_tree_evals, improves, parse_strategy, SearchBudget};
+use std::fmt;
+
+/// Largest window the [`OnlineReorderer`] will solve exhaustively even
+/// when the evaluation budget covers `n!` — 8! = 40 320 evaluations
+/// (~300 KB of sweep state) is cheap; beyond it the anytime strategies
+/// are both faster and allocation-bounded.
+pub const ONLINE_EXACT_MAX_N: usize = 8;
+
+/// What one reorder decision chose.
+#[derive(Debug, Clone)]
+pub struct ReorderDecision {
+    /// Launch order: a permutation of `0..n` batch positions.
+    pub order: Vec<usize>,
+    /// Order evaluations the decision spent (0 for FIFO).
+    pub evals: u64,
+}
+
+/// Per-window order selection for the online engine.
+///
+/// Determinism contract (the whole subsystem's replay guarantee rests on
+/// it): a decision is a pure function of `(mode, kernels)`. The exact
+/// path is the exhaustive [`crate::perm::sweep_with`] — used only when
+/// the budget provably covers all `n!` orders, so its evaluation count
+/// is `n!` exactly, never a run-dependent pruning count — and the
+/// anytime path is a seeded sequential strategy whose trajectory is
+/// reproducible from `(seed, evals)`. Budget-capped parallel
+/// branch-and-bound is rejected at construction for the same reason
+/// [`crate::search::SearchPolicy`] rejects it.
+#[derive(Debug, Clone)]
+pub struct OnlineReorderer {
+    mode: ReorderMode,
+}
+
+#[derive(Debug, Clone)]
+enum ReorderMode {
+    Fifo,
+    Search { strategy: String, budget_evals: u64 },
+}
+
+/// Error constructing an [`OnlineReorderer`] from a strategy spelling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReordererParseError {
+    pub input: String,
+    reason: String,
+}
+
+impl fmt::Display for ReordererParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid online reorder strategy `{}`: {}", self.input, self.reason)
+    }
+}
+
+impl std::error::Error for ReordererParseError {}
+
+impl OnlineReorderer {
+    /// No reordering: every window launches in arrival order. The
+    /// baseline the bench gates compare against.
+    pub fn fifo() -> Self {
+        OnlineReorderer {
+            mode: ReorderMode::Fifo,
+        }
+    }
+
+    /// Budgeted search per window: exhaustive when `n!` provably fits
+    /// `budget_evals`, the given anytime strategy (`"anneal:<seed>"`,
+    /// `"local:<seed>"`) beyond. `"bnb"` is rejected — a budget-capped
+    /// parallel solve is not run-to-run deterministic, and the exact
+    /// path is chosen automatically where it is affordable.
+    pub fn search(strategy: &str, budget_evals: u64) -> Result<Self, ReordererParseError> {
+        let parsed = parse_strategy(strategy).map_err(|e| ReordererParseError {
+            input: strategy.into(),
+            reason: e.to_string(),
+        })?;
+        if parsed.name() == "bnb" {
+            return Err(ReordererParseError {
+                input: strategy.into(),
+                reason: "budget-capped parallel branch-and-bound is not deterministic; \
+                         exhaustive search is already used automatically when the budget \
+                         covers the window"
+                    .into(),
+            });
+        }
+        Ok(OnlineReorderer {
+            mode: ReorderMode::Search {
+                strategy: parsed.name(),
+                budget_evals,
+            },
+        })
+    }
+
+    /// Display spelling (`"fifo"` or `"search:<strategy>:<budget>"`).
+    pub fn name(&self) -> String {
+        match &self.mode {
+            ReorderMode::Fifo => "fifo".into(),
+            ReorderMode::Search {
+                strategy,
+                budget_evals,
+            } => format!("search:{strategy}:{budget_evals}"),
+        }
+    }
+
+    /// Pick a launch order for one closed window.
+    pub fn decide(
+        &self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    ) -> ReorderDecision {
+        let n = kernels.len();
+        let fifo: Vec<usize> = (0..n).collect();
+        let (strategy, budget_evals) = match &self.mode {
+            ReorderMode::Fifo => {
+                return ReorderDecision {
+                    order: fifo,
+                    evals: 0,
+                }
+            }
+            ReorderMode::Search {
+                strategy,
+                budget_evals,
+            } => (strategy, *budget_evals),
+        };
+        if n <= 1 {
+            return ReorderDecision {
+                order: fifo,
+                evals: 0,
+            };
+        }
+
+        // Tiny windows, fully covered budget: exhaustive sweep. Exactly
+        // n! evaluations, optimum provable, FIFO dominated by
+        // construction (the sweep evaluates it too). The window-size cap
+        // keeps a generous budget from routing a large window to an
+        // n!-sized sweep allocation.
+        if n <= ONLINE_EXACT_MAX_N
+            && exact_tree_evals(n).is_some_and(|need| need <= budget_evals)
+        {
+            let sw = sweep_with(gpu, kernels, make_backend);
+            let evals = sw.n_perms as u64;
+            let order = if sw.best_order.len() == n { sw.best_order } else { fifo };
+            return ReorderDecision { order, evals };
+        }
+
+        // Anytime search under the per-decision budget…
+        let parsed = parse_strategy(strategy).expect("validated at construction");
+        let out = parsed.search(
+            gpu,
+            kernels,
+            make_backend,
+            &SearchBudget::evals(budget_evals),
+        );
+        let mut evals = out.evals;
+        if out.best_order.len() != n {
+            return ReorderDecision { order: fifo, evals };
+        }
+        // …with a FIFO guard: the served order is never worse than
+        // arrival order (ties break toward FIFO, the lexicographically
+        // smaller permutation), so enabling search can only help the
+        // makespan of any window it touches.
+        let mut backend = make_backend();
+        let mut prepared = backend.prepare(gpu, kernels);
+        let t_cand = prepared.execute_order(&out.best_order);
+        let t_fifo = prepared.execute_order(&fifo);
+        evals += 2;
+        if improves(t_cand, &out.best_order, t_fifo, &fifo) {
+            ReorderDecision {
+                order: out.best_order,
+                evals,
+            }
+        } else {
+            ReorderDecision { order: fifo, evals }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::SimulatorBackend;
+    use crate::workloads::scenario_by_id;
+
+    fn sim() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+        Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+    }
+
+    fn makespan(gpu: &GpuSpec, ks: &[KernelProfile], order: &[usize]) -> f64 {
+        SimulatorBackend::new().execute(gpu, ks, order).makespan_ms
+    }
+
+    #[test]
+    fn fifo_mode_is_identity() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("uniform").unwrap().workload(&gpu, 6, 1);
+        let d = OnlineReorderer::fifo().decide(&gpu, &ks, sim().as_ref());
+        assert_eq!(d.order, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(d.evals, 0);
+        assert_eq!(OnlineReorderer::fifo().name(), "fifo");
+    }
+
+    #[test]
+    fn tiny_windows_get_the_exhaustive_optimum() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("skewed").unwrap().workload(&gpu, 4, 5);
+        let r = OnlineReorderer::search("local:0", 256).unwrap();
+        let d = r.decide(&gpu, &ks, sim().as_ref());
+        assert_eq!(d.evals, 24); // exactly 4!
+        let sw = crate::perm::sweep_with(&gpu, &ks, sim().as_ref());
+        assert_eq!(d.order, sw.best_order);
+    }
+
+    #[test]
+    fn large_windows_use_the_anytime_strategy_and_never_lose_to_fifo() {
+        let gpu = GpuSpec::gtx580();
+        let r = OnlineReorderer::search("anneal:3", 300).unwrap();
+        for family in ["uniform", "skewed", "small-large", "complementary", "mixed"] {
+            let ks = scenario_by_id(family).unwrap().workload(&gpu, 9, 2);
+            let d = r.decide(&gpu, &ks, sim().as_ref());
+            let mut sorted = d.order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..9).collect::<Vec<_>>(), "{family}");
+            assert!(d.evals > 0 && d.evals <= 302, "{family}: {}", d.evals);
+            let fifo: Vec<usize> = (0..9).collect();
+            assert!(
+                makespan(&gpu, &ks, &d.order) <= makespan(&gpu, &ks, &fifo) + 1e-9,
+                "{family}: search order lost to FIFO"
+            );
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("mixed").unwrap().workload(&gpu, 10, 4);
+        let r = OnlineReorderer::search("local:2", 500).unwrap();
+        let a = r.decide(&gpu, &ks, sim().as_ref());
+        let b = r.decide(&gpu, &ks, sim().as_ref());
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn bnb_and_bad_spellings_are_rejected() {
+        for s in ["bnb", "exact", "branch-and-bound"] {
+            let err = OnlineReorderer::search(s, 100).unwrap_err();
+            assert!(err.to_string().contains("deterministic"), "{err}");
+        }
+        let err = OnlineReorderer::search("nope", 100).unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn name_spells_the_config() {
+        let r = OnlineReorderer::search("sa:7", 512).unwrap();
+        assert_eq!(r.name(), "search:anneal:7:512");
+    }
+
+    #[test]
+    fn singleton_window_is_trivial() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("uniform").unwrap().workload(&gpu, 1, 0);
+        let r = OnlineReorderer::search("local:0", 100).unwrap();
+        let d = r.decide(&gpu, &ks, sim().as_ref());
+        assert_eq!(d.order, vec![0]);
+        assert_eq!(d.evals, 0);
+    }
+}

@@ -1,0 +1,331 @@
+//! Per-kernel latency accounting and run reports for the online engine.
+//!
+//! Every kernel's life is four timestamps — *arrival* (submission),
+//! *close* (its reorder window closed), *start* (its batch began
+//! service) and *finish* (the model completed it) — from which the three
+//! latency components fall out:
+//!
+//! * **queue wait** `start − arrival`: window linger + device queueing +
+//!   scheduling-decision overhead;
+//! * **service** `finish − start`: time inside the executing batch;
+//! * **sojourn** `finish − arrival`: what the submitter experiences, the
+//!   quantity latency SLOs are written against.
+//!
+//! [`LatencyStats`] summarizes each component (exact p50/p95/p99 via
+//! [`crate::metrics::percentile`]); [`OnlineReport::sojourn_histogram`]
+//! exposes the full distribution through [`crate::metrics::Histogram`].
+
+use crate::metrics::{mean, percentile, Histogram};
+
+/// The four timestamps of one kernel's passage through the system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelRecord {
+    /// Arrival id (index into the scenario pool).
+    pub id: u64,
+    pub arrival_ms: f64,
+    /// When this kernel's reorder window closed.
+    pub close_ms: f64,
+    /// When its batch began service on the device.
+    pub start_ms: f64,
+    /// When the model completed it.
+    pub finish_ms: f64,
+    /// Batch that served it, and its position in the reordered launch
+    /// sequence.
+    pub batch: u64,
+    pub position: usize,
+}
+
+/// One dispatched reorder window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchRecord {
+    pub id: u64,
+    pub n: usize,
+    pub close_ms: f64,
+    /// Close time plus the modeled scheduling-decision overhead.
+    pub ready_ms: f64,
+    pub start_ms: f64,
+    pub makespan_ms: f64,
+    /// Order evaluations the reorder decision spent.
+    pub evals: u64,
+    /// Launch order (positions into the batch).
+    pub order: Vec<usize>,
+}
+
+/// Summary of one latency component (exact sample percentiles).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyStats {
+    /// Summarize a sample set (zeros for an empty one).
+    pub fn from_samples(xs: &[f64]) -> LatencyStats {
+        LatencyStats {
+            n: xs.len(),
+            mean_ms: mean(xs),
+            p50_ms: percentile(xs, 50.0),
+            p95_ms: percentile(xs, 95.0),
+            p99_ms: percentile(xs, 99.0),
+            max_ms: xs.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    /// One-line rendering used by the CLI report.
+    pub fn line(&self) -> String {
+        format!(
+            "mean {:>9.3} ms  p50 {:>9.3}  p95 {:>9.3}  p99 {:>9.3}  max {:>9.3}  (n={})",
+            self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms, self.n
+        )
+    }
+}
+
+/// Everything a [`crate::online::simulate_online`] run produced. All
+/// quantities are in virtual milliseconds and bit-deterministic per
+/// (arrival seed, strategy seed, window policy) — pinned by
+/// `tests/online_determinism.rs`.
+#[derive(Debug, Clone)]
+pub struct OnlineReport {
+    /// Spellings of the run's configuration, for display.
+    pub source: String,
+    pub window: String,
+    pub reorderer: String,
+    pub backend: String,
+    /// One record per kernel, sorted by arrival id.
+    pub kernels: Vec<KernelRecord>,
+    /// One record per dispatched window, in dispatch order.
+    pub batches: Vec<BatchRecord>,
+    /// Last completion time (0 for an empty run).
+    pub span_ms: f64,
+    /// Total device busy time (sum of batch makespans).
+    pub device_busy_ms: f64,
+    /// Order evaluations spent across all reorder decisions.
+    pub decision_evals: u64,
+    /// Batches the model backend could not time (served with zero
+    /// service time; should be 0 for validated workloads).
+    pub n_unsimulable: usize,
+}
+
+impl OnlineReport {
+    /// Per-kernel sojourn times (`finish − arrival`), by arrival id.
+    pub fn sojourns_ms(&self) -> Vec<f64> {
+        self.kernels.iter().map(|k| k.finish_ms - k.arrival_ms).collect()
+    }
+
+    /// Per-kernel queue waits (`start − arrival`), by arrival id.
+    pub fn queue_waits_ms(&self) -> Vec<f64> {
+        self.kernels.iter().map(|k| k.start_ms - k.arrival_ms).collect()
+    }
+
+    /// Per-kernel service times (`finish − start`), by arrival id.
+    pub fn services_ms(&self) -> Vec<f64> {
+        self.kernels.iter().map(|k| k.finish_ms - k.start_ms).collect()
+    }
+
+    pub fn sojourn_stats(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.sojourns_ms())
+    }
+
+    pub fn queue_stats(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.queue_waits_ms())
+    }
+
+    pub fn service_stats(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.services_ms())
+    }
+
+    /// The full sojourn distribution at `n_bins` resolution.
+    pub fn sojourn_histogram(&self, n_bins: usize) -> Histogram {
+        Histogram::build(&self.sojourns_ms(), n_bins)
+    }
+
+    /// Sustained completion throughput over the run (kernels per virtual
+    /// second).
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.span_ms <= 0.0 {
+            0.0
+        } else {
+            self.kernels.len() as f64 / (self.span_ms / 1e3)
+        }
+    }
+
+    /// Fraction of the run the device spent executing batches.
+    pub fn utilization(&self) -> f64 {
+        if self.span_ms <= 0.0 {
+            0.0
+        } else {
+            (self.device_busy_ms / self.span_ms).min(1.0)
+        }
+    }
+
+    /// Mean kernels per dispatched window.
+    pub fn mean_window(&self) -> f64 {
+        if self.batches.is_empty() {
+            0.0
+        } else {
+            self.kernels.len() as f64 / self.batches.len() as f64
+        }
+    }
+
+    /// Fraction of kernels whose sojourn met the SLO (1.0 for an empty
+    /// run: no kernel violated it).
+    pub fn slo_attainment(&self, slo_ms: f64) -> f64 {
+        if self.kernels.is_empty() {
+            return 1.0;
+        }
+        let ok = self
+            .kernels
+            .iter()
+            .filter(|k| k.finish_ms - k.arrival_ms <= slo_ms)
+            .count();
+        ok as f64 / self.kernels.len() as f64
+    }
+
+    /// Multi-line human summary.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{} kernels in {} windows (mean {:.2}/window) | span {:.2} ms | \
+             {:.1} kernels/s | utilization {:.1}% | {} decision evals\n",
+            self.kernels.len(),
+            self.batches.len(),
+            self.mean_window(),
+            self.span_ms,
+            self.throughput_per_s(),
+            self.utilization() * 100.0,
+            self.decision_evals,
+        ));
+        s.push_str(&format!("  sojourn : {}\n", self.sojourn_stats().line()));
+        s.push_str(&format!("  queue   : {}\n", self.queue_stats().line()));
+        s.push_str(&format!("  service : {}", self.service_stats().line()));
+        if self.n_unsimulable > 0 {
+            s.push_str(&format!("\n  WARNING: {} unsimulable batches", self.n_unsimulable));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(id: u64, arrival: f64, start: f64, finish: f64) -> KernelRecord {
+        KernelRecord {
+            id,
+            arrival_ms: arrival,
+            close_ms: start,
+            start_ms: start,
+            finish_ms: finish,
+            batch: 0,
+            position: id as usize,
+        }
+    }
+
+    fn report(kernels: Vec<KernelRecord>) -> OnlineReport {
+        let span = kernels.iter().map(|k| k.finish_ms).fold(0.0, f64::max);
+        OnlineReport {
+            source: "test".into(),
+            window: "fixed:4".into(),
+            reorderer: "fifo".into(),
+            backend: "sim".into(),
+            batches: vec![BatchRecord {
+                id: 0,
+                n: kernels.len(),
+                close_ms: 0.0,
+                ready_ms: 0.0,
+                start_ms: 0.0,
+                makespan_ms: span,
+                evals: 0,
+                order: (0..kernels.len()).collect(),
+            }],
+            kernels,
+            span_ms: span,
+            device_busy_ms: span,
+            decision_evals: 0,
+            n_unsimulable: 0,
+        }
+    }
+
+    #[test]
+    fn latency_components_decompose() {
+        let r = report(vec![record(0, 0.0, 5.0, 15.0), record(1, 2.0, 5.0, 20.0)]);
+        assert_eq!(r.queue_waits_ms(), vec![5.0, 3.0]);
+        assert_eq!(r.services_ms(), vec![10.0, 15.0]);
+        assert_eq!(r.sojourns_ms(), vec![15.0, 18.0]);
+        // sojourn = queue + service, per kernel.
+        for ((q, s), j) in r
+            .queue_waits_ms()
+            .iter()
+            .zip(r.services_ms())
+            .zip(r.sojourns_ms())
+        {
+            assert!((q + s - j).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn stats_percentiles_are_exact() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let st = LatencyStats::from_samples(&xs);
+        assert_eq!(st.n, 100);
+        assert!((st.p50_ms - 50.5).abs() < 1e-9);
+        assert!((st.p99_ms - 99.01).abs() < 1e-9);
+        assert_eq!(st.max_ms, 100.0);
+        assert!((st.mean_ms - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let st = LatencyStats::from_samples(&[]);
+        assert_eq!(st.n, 0);
+        assert_eq!(st.mean_ms, 0.0);
+        assert_eq!(st.max_ms, 0.0);
+    }
+
+    #[test]
+    fn throughput_and_utilization() {
+        let r = report(vec![record(0, 0.0, 0.0, 100.0), record(1, 0.0, 0.0, 200.0)]);
+        assert!((r.throughput_per_s() - 10.0).abs() < 1e-9); // 2 kernels / 0.2 s
+        assert_eq!(r.utilization(), 1.0);
+        assert_eq!(r.mean_window(), 2.0);
+    }
+
+    #[test]
+    fn slo_attainment_counts_violations() {
+        let r = report(vec![
+            record(0, 0.0, 0.0, 10.0),
+            record(1, 0.0, 0.0, 20.0),
+            record(2, 0.0, 0.0, 30.0),
+            record(3, 0.0, 0.0, 40.0),
+        ]);
+        assert_eq!(r.slo_attainment(25.0), 0.5);
+        assert_eq!(r.slo_attainment(f64::INFINITY), 1.0);
+        assert_eq!(r.slo_attainment(0.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_covers_all_kernels() {
+        let r = report(vec![
+            record(0, 0.0, 0.0, 10.0),
+            record(1, 0.0, 0.0, 20.0),
+            record(2, 0.0, 0.0, 30.0),
+        ]);
+        let h = r.sojourn_histogram(8);
+        assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn summary_mentions_the_load_bearing_numbers() {
+        let r = report(vec![record(0, 0.0, 0.0, 10.0)]);
+        let s = r.summary();
+        assert!(s.contains("1 kernels in 1 windows"));
+        assert!(s.contains("sojourn"));
+        assert!(s.contains("queue"));
+        assert!(s.contains("service"));
+        assert!(!s.contains("WARNING"));
+    }
+}

@@ -1,0 +1,434 @@
+//! [`WindowPolicy`] — *when* to close a reorder window.
+//!
+//! Offline, a reorder window is just "the batch": everything is known up
+//! front and the only question is the order. Online, the window is a
+//! **time** decision — close early and you give up reordering freedom
+//! (small batches ≈ FIFO), close late and every queued kernel pays the
+//! wait in its sojourn time. The policies here decide that trade-off
+//! from a [`WindowState`] snapshot, and are shared by two consumers:
+//!
+//! * the virtual-clock online engine ([`crate::online::simulate_online`]),
+//!   where `now_ms` is simulated time and decisions are re-evaluated at
+//!   every event;
+//! * the thread coordinator
+//!   ([`crate::coordinator::CoordinatorBuilder::window_policy`]), where
+//!   `now_ms` derives from the injectable batch clock and `Wait`
+//!   deadlines bound the dispatcher's `recv_timeout`.
+//!
+//! | spelling | behavior |
+//! |---|---|
+//! | `fixed:<k>` | close only when `k` kernels are pending (drain closes remainders) |
+//! | `linger:<k>:<ms>` | close at `k` kernels or when the oldest pending kernel has waited `ms` |
+//! | `adaptive:<k>:<ms>` | linger-deadline, but occupancy-aware: batch freely while the device is busy, dispatch after a short grace when it is idle |
+//!
+//! Policies must be **deterministic pure functions of the state they are
+//! shown** — the online engine's bit-identical-replay guarantee
+//! (`tests/online_determinism.rs`) rests on it.
+
+use std::fmt;
+
+/// Snapshot of the open reorder window a [`WindowPolicy`] decides over.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowState {
+    /// Current time (virtual in the online engine, clock-derived in the
+    /// coordinator).
+    pub now_ms: f64,
+    /// Kernels currently pending in the open window.
+    pub n_pending: usize,
+    /// Arrival time of the oldest pending kernel (meaningless when
+    /// `n_pending == 0`).
+    pub oldest_arrival_ms: f64,
+    /// Earliest time the executing device frees (`<= now_ms` means
+    /// idle). The thread coordinator does not track device occupancy and
+    /// passes `now_ms`.
+    pub device_free_at_ms: f64,
+    /// Batches already closed but not yet started on the device.
+    pub queued_batches: usize,
+}
+
+impl WindowState {
+    /// Whether the device could accept a batch right now (idle and
+    /// nothing queued ahead).
+    pub fn device_idle(&self) -> bool {
+        self.device_free_at_ms <= self.now_ms && self.queued_batches == 0
+    }
+}
+
+/// A window policy's verdict for the current instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WindowDecision {
+    /// Close the window now: reorder and dispatch the pending kernels.
+    Close,
+    /// Keep the window open. `recheck_at_ms` is the next time the
+    /// decision could flip with no new arrivals (`None` = only a new
+    /// arrival or end-of-stream drain can close it).
+    Wait { recheck_at_ms: Option<f64> },
+}
+
+/// Decides when the open reorder window closes.
+///
+/// Contract (the event loops rely on it):
+/// * never `Close` on an empty window (`n_pending == 0`);
+/// * any `recheck_at_ms` must be **strictly greater** than
+///   `state.now_ms` — a policy whose deadline has already passed must
+///   return `Close` instead, or the caller would spin without progress.
+pub trait WindowPolicy: Send {
+    /// Registry spelling of this policy instance (e.g. `"linger:8:50"`).
+    fn name(&self) -> String;
+
+    /// Decide whether to close the window at `state.now_ms`.
+    fn decide(&mut self, state: &WindowState) -> WindowDecision;
+}
+
+// ---------------------------------------------------------------------------
+// Implementations
+// ---------------------------------------------------------------------------
+
+/// `fixed:<k>` — close only on occupancy. The simplest policy and the
+/// one with no latency bound: a trickle of arrivals below `k` waits for
+/// the end-of-stream drain.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedWindow {
+    cap: usize,
+}
+
+impl FixedWindow {
+    pub fn new(cap: usize) -> Self {
+        FixedWindow { cap: cap.max(1) }
+    }
+}
+
+impl WindowPolicy for FixedWindow {
+    fn name(&self) -> String {
+        format!("fixed:{}", self.cap)
+    }
+
+    fn decide(&mut self, s: &WindowState) -> WindowDecision {
+        if s.n_pending >= self.cap {
+            WindowDecision::Close
+        } else {
+            WindowDecision::Wait { recheck_at_ms: None }
+        }
+    }
+}
+
+/// `linger:<k>:<ms>` — the serving-system classic: close at `k` kernels
+/// or once the oldest pending kernel has waited `ms`. The linger bound
+/// is the window's contribution to the per-kernel latency SLO: no
+/// kernel waits more than `ms` for its window to close.
+#[derive(Debug, Clone, Copy)]
+pub struct LingerWindow {
+    cap: usize,
+    linger_ms: f64,
+}
+
+impl LingerWindow {
+    pub fn new(cap: usize, linger_ms: f64) -> Self {
+        LingerWindow {
+            cap: cap.max(1),
+            linger_ms: linger_ms.max(0.0),
+        }
+    }
+}
+
+impl WindowPolicy for LingerWindow {
+    fn name(&self) -> String {
+        format!("linger:{}:{}", self.cap, self.linger_ms)
+    }
+
+    fn decide(&mut self, s: &WindowState) -> WindowDecision {
+        if s.n_pending == 0 {
+            return WindowDecision::Wait { recheck_at_ms: None };
+        }
+        let deadline = s.oldest_arrival_ms + self.linger_ms;
+        if s.n_pending >= self.cap || s.now_ms >= deadline {
+            WindowDecision::Close
+        } else {
+            WindowDecision::Wait {
+                recheck_at_ms: Some(deadline),
+            }
+        }
+    }
+}
+
+/// Fraction of the linger budget an [`AdaptiveWindow`] waits before
+/// dispatching to an **idle** device: long enough that a back-to-back
+/// burst coalesces into one window, short enough that an isolated
+/// kernel's sojourn stays near its bare service time.
+const IDLE_GRACE_FRACTION: f64 = 0.125;
+
+/// `adaptive:<k>:<ms>` — occupancy-aware linger. While the device is
+/// busy (or batches are queued ahead), waiting costs nothing — the
+/// kernel would queue anyway — so the window keeps filling toward `k`
+/// until the device frees or the linger deadline lands. When the device
+/// is idle, every queued millisecond is pure added latency, so the
+/// window closes after a short grace (`IDLE_GRACE_FRACTION` of the
+/// linger budget). Under light load this behaves like near-immediate
+/// dispatch; under heavy load it converges to full `k`-windows, which
+/// is where reordering pays most.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveWindow {
+    cap: usize,
+    linger_ms: f64,
+}
+
+impl AdaptiveWindow {
+    pub fn new(cap: usize, linger_ms: f64) -> Self {
+        AdaptiveWindow {
+            cap: cap.max(1),
+            linger_ms: linger_ms.max(0.0),
+        }
+    }
+}
+
+impl WindowPolicy for AdaptiveWindow {
+    fn name(&self) -> String {
+        format!("adaptive:{}:{}", self.cap, self.linger_ms)
+    }
+
+    fn decide(&mut self, s: &WindowState) -> WindowDecision {
+        if s.n_pending == 0 {
+            return WindowDecision::Wait { recheck_at_ms: None };
+        }
+        let deadline = s.oldest_arrival_ms + self.linger_ms;
+        if s.n_pending >= self.cap || s.now_ms >= deadline {
+            return WindowDecision::Close;
+        }
+        if !s.device_idle() {
+            // Batching is free while the device cannot take the batch:
+            // recheck when it frees (if that is ever known to the
+            // caller's clock) or at the hard linger deadline.
+            let recheck = if s.device_free_at_ms > s.now_ms {
+                s.device_free_at_ms.min(deadline)
+            } else {
+                deadline
+            };
+            return WindowDecision::Wait {
+                recheck_at_ms: Some(recheck),
+            };
+        }
+        let grace = s.oldest_arrival_ms + self.linger_ms * IDLE_GRACE_FRACTION;
+        if s.now_ms >= grace {
+            WindowDecision::Close
+        } else {
+            WindowDecision::Wait {
+                recheck_at_ms: Some(grace.min(deadline)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Error for unknown window-policy spellings; `Display` lists the valid
+/// forms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WindowParseError {
+    pub input: String,
+}
+
+impl fmt::Display for WindowParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown window policy `{}` — valid policies: fixed:<k>, linger:<k>:<ms>, \
+             adaptive:<k>:<ms>",
+            self.input
+        )
+    }
+}
+
+impl std::error::Error for WindowParseError {}
+
+/// Parse a window-policy spelling (`"fixed:8"`, `"linger:8:50"`,
+/// `"adaptive:16:100"`) into a trait object.
+///
+/// ```
+/// let p = kreorder::online::parse_window_policy("linger:8:50").unwrap();
+/// assert_eq!(p.name(), "linger:8:50");
+/// assert!(kreorder::online::parse_window_policy("nope").is_err());
+/// ```
+pub fn parse_window_policy(s: &str) -> Result<Box<dyn WindowPolicy>, WindowParseError> {
+    let lower = s.to_ascii_lowercase();
+    let err = || WindowParseError { input: s.into() };
+    let mut parts = lower.split(':');
+    let head = parts.next().unwrap_or("");
+    let cap = |p: Option<&str>| -> Result<usize, WindowParseError> {
+        p.ok_or_else(err)?.parse::<usize>().map_err(|_| err())
+    };
+    let ms = |p: Option<&str>| -> Result<f64, WindowParseError> {
+        let v: f64 = p.ok_or_else(err)?.parse().map_err(|_| err())?;
+        if v.is_finite() && v >= 0.0 {
+            Ok(v)
+        } else {
+            Err(err())
+        }
+    };
+    let policy: Box<dyn WindowPolicy> = match head {
+        "fixed" => Box::new(FixedWindow::new(cap(parts.next())?)),
+        "linger" => Box::new(LingerWindow::new(cap(parts.next())?, ms(parts.next())?)),
+        "adaptive" => Box::new(AdaptiveWindow::new(cap(parts.next())?, ms(parts.next())?)),
+        _ => return Err(err()),
+    };
+    if parts.next().is_some() {
+        return Err(err());
+    }
+    Ok(policy)
+}
+
+/// Human-readable table of the window-policy spellings (one per line).
+pub fn window_policy_help_table() -> String {
+    let rows = [
+        ("fixed:<k>", "close only when k kernels are pending (no latency bound)"),
+        (
+            "linger:<k>:<ms>",
+            "close at k kernels or when the oldest has waited ms (latency SLO bound)",
+        ),
+        (
+            "adaptive:<k>:<ms>",
+            "linger, but occupancy-aware: fill while the device is busy, dispatch fast when idle",
+        ),
+    ];
+    let mut out = String::new();
+    for (name, desc) in rows {
+        out.push_str(&format!("  {name:<20} {desc}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(now: f64, n: usize, oldest: f64, free_at: f64, queued: usize) -> WindowState {
+        WindowState {
+            now_ms: now,
+            n_pending: n,
+            oldest_arrival_ms: oldest,
+            device_free_at_ms: free_at,
+            queued_batches: queued,
+        }
+    }
+
+    fn wait_until(d: WindowDecision) -> Option<f64> {
+        match d {
+            WindowDecision::Wait { recheck_at_ms } => recheck_at_ms,
+            WindowDecision::Close => panic!("expected Wait, got Close"),
+        }
+    }
+
+    #[test]
+    fn fixed_closes_only_on_occupancy() {
+        let mut p = FixedWindow::new(4);
+        assert_eq!(wait_until(p.decide(&state(0.0, 0, 0.0, 0.0, 0))), None);
+        assert_eq!(wait_until(p.decide(&state(1e9, 3, 0.0, 0.0, 0))), None);
+        assert_eq!(p.decide(&state(0.0, 4, 0.0, 0.0, 0)), WindowDecision::Close);
+        assert_eq!(p.decide(&state(0.0, 9, 0.0, 0.0, 0)), WindowDecision::Close);
+    }
+
+    #[test]
+    fn linger_closes_on_cap_or_deadline() {
+        let mut p = LingerWindow::new(8, 50.0);
+        // Below cap, before deadline: wait exactly until the deadline.
+        assert_eq!(wait_until(p.decide(&state(10.0, 2, 5.0, 0.0, 0))), Some(55.0));
+        // Deadline reached.
+        assert_eq!(p.decide(&state(55.0, 2, 5.0, 0.0, 0)), WindowDecision::Close);
+        assert_eq!(p.decide(&state(80.0, 2, 5.0, 0.0, 0)), WindowDecision::Close);
+        // Cap reached early.
+        assert_eq!(p.decide(&state(6.0, 8, 5.0, 0.0, 0)), WindowDecision::Close);
+        // Empty window never closes.
+        assert_eq!(wait_until(p.decide(&state(1e9, 0, 0.0, 0.0, 0))), None);
+    }
+
+    #[test]
+    fn linger_recheck_is_strictly_future() {
+        // Contract: Wait deadlines are strictly after now.
+        let mut p = LingerWindow::new(8, 50.0);
+        for now in [0.0, 10.0, 54.9] {
+            if let WindowDecision::Wait { recheck_at_ms: Some(t) } =
+                p.decide(&state(now, 1, 5.0, 0.0, 0))
+            {
+                assert!(t > now, "recheck {t} !> now {now}");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_fills_while_busy_dispatches_fast_when_idle() {
+        let mut p = AdaptiveWindow::new(8, 80.0);
+        // Device busy until 100: keep filling, recheck when it frees.
+        assert_eq!(
+            wait_until(p.decide(&state(10.0, 3, 0.0, 100.0, 0))),
+            Some(80.0f64.min(100.0))
+        );
+        // Device idle: close after the short grace (80 * 0.125 = 10).
+        assert_eq!(
+            wait_until(p.decide(&state(5.0, 3, 0.0, 0.0, 0))),
+            Some(10.0)
+        );
+        assert_eq!(p.decide(&state(10.0, 3, 0.0, 0.0, 0)), WindowDecision::Close);
+        // Queued batches count as busy even if the device reads idle.
+        let d = p.decide(&state(5.0, 3, 0.0, 0.0, 2));
+        assert_eq!(wait_until(d), Some(80.0));
+        // Hard deadline closes regardless of occupancy.
+        assert_eq!(p.decide(&state(80.0, 3, 0.0, 1e9, 0)), WindowDecision::Close);
+        // Cap closes regardless of everything.
+        assert_eq!(p.decide(&state(0.0, 8, 0.0, 1e9, 5)), WindowDecision::Close);
+    }
+
+    #[test]
+    fn adaptive_busy_recheck_is_bounded_by_deadline() {
+        let mut p = AdaptiveWindow::new(8, 20.0);
+        // Device frees long after the linger deadline: recheck at the
+        // deadline, not the device.
+        assert_eq!(wait_until(p.decide(&state(0.0, 1, 0.0, 1e6, 0))), Some(20.0));
+    }
+
+    #[test]
+    fn spellings_parse_and_round_trip() {
+        for s in ["fixed:8", "linger:8:50", "adaptive:16:100", "LINGER:4:2.5"] {
+            let p = parse_window_policy(s).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(p.name(), s.to_ascii_lowercase());
+            // Canonical names re-parse.
+            assert!(parse_window_policy(&p.name()).is_ok());
+        }
+    }
+
+    #[test]
+    fn bad_spellings_error_and_list_names() {
+        for s in [
+            "nope",
+            "fixed",
+            "fixed:x",
+            "linger:8",
+            "linger:8:-1",
+            "linger:8:nan",
+            "adaptive:8:5:9",
+            "fixed:8:2",
+        ] {
+            let err = parse_window_policy(s).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(s), "{msg}");
+            for name in ["fixed:<k>", "linger:<k>:<ms>", "adaptive:<k>:<ms>"] {
+                assert!(msg.contains(name), "missing {name} in: {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn caps_clamp_to_one() {
+        let mut p = FixedWindow::new(0);
+        assert_eq!(p.decide(&state(0.0, 1, 0.0, 0.0, 0)), WindowDecision::Close);
+        assert_eq!(p.name(), "fixed:1");
+    }
+
+    #[test]
+    fn help_table_covers_registry() {
+        let t = window_policy_help_table();
+        for name in ["fixed:<k>", "linger:<k>:<ms>", "adaptive:<k>:<ms>"] {
+            assert!(t.contains(name));
+        }
+    }
+}

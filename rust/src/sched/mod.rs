@@ -17,12 +17,14 @@
 //!   [`registry`] line.
 //! * [`registry`] — string spellings (`"fifo"`, `"random:42"`, …) to
 //!   trait objects, with error messages that list every valid name.
-//! * [`Policy`] — deprecated closed-enum shim over the same policies,
-//!   kept one release for migration.
+//!
+//! The pre-0.2 closed-enum `Policy` shim (and the coordinator's
+//! `CoordinatorConfig` twin) rode out their one deprecation release and
+//! are gone; every selection path goes through [`registry::parse`] or a
+//! [`LaunchPolicy`] value.
 
 mod algorithm;
 mod launch_policy;
-mod policy;
 pub mod registry;
 mod score;
 
@@ -31,8 +33,6 @@ pub use launch_policy::{
     Algorithm1Policy, FifoPolicy, GreedyCoschedulePolicy, LaunchPolicy, RandomPolicy,
     ReversePolicy, SjfPolicy,
 };
-#[allow(deprecated)]
-pub use policy::Policy;
 pub use registry::PolicyParseError;
 pub use score::{score, CombinedProfile, RoundOrder, ScoreConfig};
 

@@ -47,7 +47,11 @@
 //! [`SearchPolicy`] launch policy (registry spelling
 //! `"search[:<strategy>[:<budget>]]"`) lets the coordinator delegate
 //! ordering to budgeted search: exact for small windows, anytime beyond
-//! [`SearchPolicy::exact_max_n`].
+//! [`SearchPolicy::exact_max_n`]. The online streaming scheduler
+//! ([`crate::online::OnlineReorderer`]) consumes the same registry per
+//! reorder window under a per-decision budget — see
+//! `src/search/README.md` for the full offline-vs-online decision
+//! guide.
 
 mod anneal;
 mod bnb;
@@ -423,8 +427,10 @@ impl Default for SearchPolicy {
 }
 
 /// `n! + 1` (the exact solver's worst-case evaluation count for `n`
-/// kernels, warm start included), or `None` on overflow.
-fn exact_tree_evals(n: usize) -> Option<u64> {
+/// kernels, warm start included), or `None` on overflow. Shared with
+/// [`crate::online::OnlineReorderer`], whose exact-vs-anytime cut uses
+/// the same budget-coverage rule.
+pub(crate) fn exact_tree_evals(n: usize) -> Option<u64> {
     let mut f: u64 = 1;
     for i in 2..=n as u64 {
         f = f.checked_mul(i)?;

@@ -25,7 +25,7 @@ pub use experiments::{
     all_experiments, bs_6_blk, by_id, ep_6_grid, ep_6_shm, epbs_6, epbs_6_shm, epbsessw_8,
     Experiment,
 };
-pub use scenarios::{all_scenarios, scenario_by_id, Scenario, SCENARIOS};
+pub use scenarios::{all_scenarios, scenario_by_id, scenario_ids, Scenario, SCENARIOS};
 pub use synthetic::synthetic_workload;
 
 #[cfg(test)]

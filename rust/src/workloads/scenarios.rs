@@ -72,6 +72,12 @@ pub fn all_scenarios() -> &'static [Scenario] {
     SCENARIOS
 }
 
+/// The registered family ids, in registry order — the arrival-regime
+/// axis the online bench and `kreorder serve --arrivals` sweep.
+pub fn scenario_ids() -> Vec<&'static str> {
+    SCENARIOS.iter().map(|s| s.id).collect()
+}
+
 /// Look a family up by its `id` spelling.
 pub fn scenario_by_id(id: &str) -> Option<&'static Scenario> {
     SCENARIOS.iter().find(|s| s.id.eq_ignore_ascii_case(id))
@@ -252,6 +258,15 @@ mod tests {
         for sc in all_scenarios() {
             assert_eq!(sc.workload(&gpu, 8, 5), sc.workload(&gpu, 8, 5), "{}", sc.id);
             assert_ne!(sc.workload(&gpu, 8, 5), sc.workload(&gpu, 8, 6), "{}", sc.id);
+        }
+    }
+
+    #[test]
+    fn scenario_ids_match_registry_order() {
+        let ids = scenario_ids();
+        assert_eq!(ids.len(), SCENARIOS.len());
+        for (id, sc) in ids.iter().zip(SCENARIOS) {
+            assert_eq!(*id, sc.id);
         }
     }
 

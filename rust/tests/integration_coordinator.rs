@@ -1,163 +1,320 @@
-//! Integration: the coordinator service executing REAL AOT payloads via
-//! the PJRT execution backend while reordering batches with Algorithm 1 —
-//! the full three-layer request path, through the trait seams.
+//! Integration: the coordinator service through its public API.
 //!
-//! Compiled only with `--features pjrt` and `#[ignore]`d by default: the
-//! payloads are AOT artifacts produced outside cargo (`make artifacts`),
-//! which offline/CI environments don't have. Run with
-//! `make artifacts && cargo test --features pjrt -- --ignored`.
+//! Two halves:
+//!
+//! * `drain` — always-on pins for shutdown/drain semantics and
+//!   deterministic batching under the injectable [`ManualClock`]:
+//!   every request submitted before `shutdown()` is either completed or
+//!   reported (a disconnect error at the handle), never silently
+//!   dropped or hung.
+//! * `pjrt_payloads` — the full three-layer request path executing REAL
+//!   AOT payloads via the PJRT execution backend. Compiled only with
+//!   `--features pjrt` and `#[ignore]`d by default: the payloads are
+//!   AOT artifacts produced outside cargo (`make artifacts`), which
+//!   offline/CI environments don't have. Run with
+//!   `make artifacts && cargo test --features pjrt -- --ignored`.
 
-#![cfg(feature = "pjrt")]
+mod drain {
+    use kreorder::coordinator::{CoordinatorBuilder, LaunchRequest, ManualClock};
+    use kreorder::gpu::{AppKind, KernelProfile};
+    use std::sync::Arc;
+    use std::time::Duration;
 
-use kreorder::coordinator::{Coordinator, CoordinatorBuilder, LaunchRequest};
-use kreorder::gpu::GpuSpec;
-use kreorder::workloads::{by_id, synthetic_workload};
-use std::path::PathBuf;
-use std::time::Duration;
+    fn profile(i: u64) -> KernelProfile {
+        KernelProfile {
+            name: format!("k{i}"),
+            app: AppKind::Synthetic,
+            n_blocks: 16,
+            regs_per_block: 512,
+            shmem_per_block: 0,
+            warps_per_block: 4 + (i % 3) as u32 * 8,
+            ratio: 1.0 + i as f64,
+            work_per_block: 500.0,
+            artifact: String::new(),
+        }
+    }
 
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    fn request(i: u64) -> LaunchRequest {
+        LaunchRequest {
+            id: i,
+            profile: profile(i),
+            seed: i,
+        }
+    }
+
+    /// A coordinator whose linger can never expire (frozen manual
+    /// clock): batching depends only on occupancy, flush and shutdown.
+    fn frozen(window: usize) -> kreorder::coordinator::Coordinator {
+        CoordinatorBuilder::new()
+            .window(window)
+            .linger(Duration::from_secs(3600))
+            .clock(Arc::new(ManualClock::new()))
+            .start()
+    }
+
+    #[test]
+    fn shutdown_completes_undispatched_requests() {
+        // Window 100 + frozen clock: nothing would ever dispatch these
+        // five requests — except shutdown's drain, which must answer
+        // every one of them.
+        let c = frozen(100);
+        let handles: Vec<_> = (0..5).map(|i| c.submit(request(i))).collect();
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 5);
+        assert_eq!(reports.iter().map(|r| r.n).sum::<usize>(), 5);
+        let mut ids: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.wait().expect("drained request must be answered").id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..5).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shutdown_drain_respects_window_chunks() {
+        // Drain splits the leftover queue into window-sized batches: 7
+        // requests through a window of 3 arrive as 3+3+1.
+        let c = frozen(3);
+        let handles: Vec<_> = (0..7).map(|i| c.submit(request(i))).collect();
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 7);
+        let mut sizes: Vec<usize> = reports.iter().map(|r| r.n).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![1, 3, 3]);
+        for h in handles {
+            h.wait().expect("answered");
+        }
+    }
+
+    #[test]
+    fn shutdown_with_nothing_pending_reports_no_batches() {
+        let c = frozen(4);
+        let (reports, stats) = c.shutdown();
+        assert!(reports.is_empty());
+        assert_eq!(stats.n_responses, 0);
+        assert_eq!(stats.n_batches, 0);
+    }
+
+    #[test]
+    fn drop_reports_rather_than_hangs_a_straggler() {
+        // Drop (the no-result shutdown path) also drains: the handle
+        // resolves rather than hanging, and even if a future change
+        // dropped the batch instead, the reply channel closing must
+        // surface as an error — "completed or reported", never stuck.
+        let c = frozen(100);
+        let h = c.submit(request(0));
+        drop(c);
+        match h.wait_timeout(Duration::from_secs(10)) {
+            Ok(r) => assert_eq!(r.id, 0),
+            Err(e) => panic!("straggler neither completed nor answered: {e}"),
+        }
+    }
+
+    #[test]
+    fn deterministic_batching_is_identical_across_runs() {
+        // Frozen clock + fixed submission sequence: batch compositions
+        // and ids must be bit-identical run to run.
+        let run = || {
+            let c = frozen(4);
+            let handles: Vec<_> = (0..10).map(|i| c.submit(request(i))).collect();
+            // Shutdown first: the final partial window (2 kernels) only
+            // dispatches through the drain under a frozen clock.
+            let (reports, _) = c.shutdown();
+            let mut seen: Vec<(u64, u64, usize)> = handles
+                .into_iter()
+                .map(|h| {
+                    let r = h.wait().unwrap();
+                    (r.id, r.batch_id, r.position)
+                })
+                .collect();
+            seen.sort_unstable();
+            let sizes: Vec<usize> = reports.iter().map(|r| r.n).collect();
+            (seen, sizes)
+        };
+        // 10 = 4 + 4 + drain 2; every placement identical across runs.
+        let (a_seen, a_sizes) = run();
+        let (b_seen, b_sizes) = run();
+        assert_eq!(a_sizes, vec![4, 4, 2]);
+        assert_eq!(a_seen, b_seen);
+        assert_eq!(a_sizes, b_sizes);
+    }
+
+    #[test]
+    fn multi_device_shutdown_answers_everything() {
+        let c = CoordinatorBuilder::new()
+            .devices(3)
+            .window(2)
+            .linger(Duration::from_secs(3600))
+            .clock(Arc::new(ManualClock::new()))
+            .start();
+        let handles: Vec<_> = (0..12).map(|i| c.submit(request(i))).collect();
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 12);
+        assert_eq!(reports.iter().map(|r| r.n).sum::<usize>(), 12);
+        for h in handles {
+            h.wait().expect("answered");
+        }
+        // Batches really did round-robin across the workers.
+        let mut devices: Vec<usize> = reports.iter().map(|r| r.device).collect();
+        devices.sort_unstable();
+        devices.dedup();
+        assert_eq!(devices, vec![0, 1, 2]);
+    }
 }
 
-fn coordinator(window: usize) -> Coordinator {
-    CoordinatorBuilder::new()
-        .policy_named("algorithm1")
-        .unwrap()
-        .pjrt_backend(artifacts_dir())
-        .window(window)
-        .linger(Duration::from_millis(10))
-        .start()
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_payloads {
+    use kreorder::coordinator::{Coordinator, CoordinatorBuilder, LaunchRequest};
+    use kreorder::gpu::GpuSpec;
+    use kreorder::workloads::{by_id, synthetic_workload};
+    use std::path::PathBuf;
+    use std::time::Duration;
 
-#[test]
-#[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
-fn serves_real_payloads_for_every_app() {
-    let e = by_id("epbsessw-8").unwrap(); // 2 kernels per app
-    let coord = coordinator(8);
-    let handles: Vec<_> = e
-        .kernels
-        .iter()
-        .enumerate()
-        .map(|(i, k)| {
-            coord.submit(LaunchRequest {
-                id: i as u64,
-                profile: k.clone(),
-                seed: 1000 + i as u64,
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn coordinator(window: usize) -> Coordinator {
+        CoordinatorBuilder::new()
+            .policy_named("algorithm1")
+            .unwrap()
+            .pjrt_backend(artifacts_dir())
+            .window(window)
+            .linger(Duration::from_millis(10))
+            .start()
+    }
+
+    #[test]
+    #[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
+    fn serves_real_payloads_for_every_app() {
+        let e = by_id("epbsessw-8").unwrap(); // 2 kernels per app
+        let coord = coordinator(8);
+        let handles: Vec<_> = e
+            .kernels
+            .iter()
+            .enumerate()
+            .map(|(i, k)| {
+                coord.submit(LaunchRequest {
+                    id: i as u64,
+                    profile: k.clone(),
+                    seed: 1000 + i as u64,
+                })
             })
-        })
-        .collect();
-    let mut positions = Vec::new();
-    for h in handles {
-        let r = h.wait().unwrap();
-        assert!(r.checksum.is_finite(), "id {} failed", r.id);
-        assert!(r.exec_wall_ms > 0.0);
-        positions.push(r.position);
-    }
-    positions.sort_unstable();
-    assert_eq!(positions, (0..8).collect::<Vec<_>>());
-
-    let (reports, stats) = coord.shutdown();
-    assert_eq!(stats.n_failures, 0);
-    assert_eq!(stats.n_responses, 8);
-    // The batch must have been reordered by Algorithm 1 (trait dispatch),
-    // simulated, and executed by the PJRT backend.
-    let batch = &reports[0];
-    assert_eq!(batch.n, 8);
-    assert_eq!(batch.policy, "algorithm1");
-    assert_eq!(batch.backend, "pjrt");
-    assert!(batch.sim_policy_ms <= batch.sim_fifo_ms + 1e-9);
-}
-
-#[test]
-#[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
-fn sustained_stream_multiple_batches() {
-    let gpu = GpuSpec::gtx580();
-    let coord = coordinator(4);
-    let mut handles = Vec::new();
-    for b in 0..4u64 {
-        for (i, k) in synthetic_workload(&gpu, 4, b).into_iter().enumerate() {
-            handles.push(coord.submit(LaunchRequest {
-                id: b * 4 + i as u64,
-                profile: k,
-                seed: b * 4 + i as u64,
-            }));
+            .collect();
+        let mut positions = Vec::new();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert!(r.checksum.is_finite(), "id {} failed", r.id);
+            assert!(r.exec_wall_ms > 0.0);
+            positions.push(r.position);
         }
+        positions.sort_unstable();
+        assert_eq!(positions, (0..8).collect::<Vec<_>>());
+
+        let (reports, stats) = coord.shutdown();
+        assert_eq!(stats.n_failures, 0);
+        assert_eq!(stats.n_responses, 8);
+        // The batch must have been reordered by Algorithm 1 (trait
+        // dispatch), simulated, and executed by the PJRT backend.
+        let batch = &reports[0];
+        assert_eq!(batch.n, 8);
+        assert_eq!(batch.policy, "algorithm1");
+        assert_eq!(batch.backend, "pjrt");
+        assert!(batch.sim_policy_ms <= batch.sim_fifo_ms + 1e-9);
+    }
+
+    #[test]
+    #[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
+    fn sustained_stream_multiple_batches() {
+        let gpu = GpuSpec::gtx580();
+        let coord = coordinator(4);
+        let mut handles = Vec::new();
+        for b in 0..4u64 {
+            for (i, k) in synthetic_workload(&gpu, 4, b).into_iter().enumerate() {
+                handles.push(coord.submit(LaunchRequest {
+                    id: b * 4 + i as u64,
+                    profile: k,
+                    seed: b * 4 + i as u64,
+                }));
+            }
+            coord.flush();
+        }
+        let mut ok = 0;
+        for h in handles {
+            let r = h.wait().unwrap();
+            if r.checksum.is_finite() {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 16);
+        let (reports, stats) = coord.shutdown();
+        assert_eq!(stats.n_responses, 16);
+        assert!(reports.len() >= 4);
+        assert!(stats.throughput_per_s() > 0.0);
+    }
+
+    #[test]
+    #[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
+    fn bad_artifact_name_is_failure_injected_not_fatal() {
+        let gpu = GpuSpec::gtx580();
+        let coord = coordinator(2);
+        let mut good = synthetic_workload(&gpu, 2, 99);
+        good[1].artifact = "no_such_artifact".into();
+        let h0 = coord.submit(LaunchRequest {
+            id: 0,
+            profile: good[0].clone(),
+            seed: 0,
+        });
+        let h1 = coord.submit(LaunchRequest {
+            id: 1,
+            profile: good[1].clone(),
+            seed: 0,
+        });
         coord.flush();
+        let r0 = h0.wait().unwrap();
+        let r1 = h1.wait().unwrap();
+        // One succeeds, the broken one reports the failure sentinel; the
+        // service keeps running either way.
+        let (a, b) = if r0.id == 0 { (r0, r1) } else { (r1, r0) };
+        assert!(a.checksum.is_finite());
+        assert_eq!(b.checksum, f64::NEG_INFINITY);
+        let (_, stats) = coord.shutdown();
+        assert_eq!(stats.n_failures, 1);
     }
-    let mut ok = 0;
-    for h in handles {
-        let r = h.wait().unwrap();
-        if r.checksum.is_finite() {
-            ok += 1;
-        }
-    }
-    assert_eq!(ok, 16);
-    let (reports, stats) = coord.shutdown();
-    assert_eq!(stats.n_responses, 16);
-    assert!(reports.len() >= 4);
-    assert!(stats.throughput_per_s() > 0.0);
-}
 
-#[test]
-#[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
-fn bad_artifact_name_is_failure_injected_not_fatal() {
-    let gpu = GpuSpec::gtx580();
-    let coord = coordinator(2);
-    let mut good = synthetic_workload(&gpu, 2, 99);
-    good[1].artifact = "no_such_artifact".into();
-    let h0 = coord.submit(LaunchRequest {
-        id: 0,
-        profile: good[0].clone(),
-        seed: 0,
-    });
-    let h1 = coord.submit(LaunchRequest {
-        id: 1,
-        profile: good[1].clone(),
-        seed: 0,
-    });
-    coord.flush();
-    let r0 = h0.wait().unwrap();
-    let r1 = h1.wait().unwrap();
-    // One succeeds, the broken one reports the failure sentinel; the
-    // service keeps running either way.
-    let (a, b) = if r0.id == 0 { (r0, r1) } else { (r1, r0) };
-    assert!(a.checksum.is_finite());
-    assert_eq!(b.checksum, f64::NEG_INFINITY);
-    let (_, stats) = coord.shutdown();
-    assert_eq!(stats.n_failures, 1);
-}
-
-#[test]
-#[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
-fn multi_device_pjrt_builds_one_runtime_per_worker() {
-    // Two device workers, each constructing its own PJRT backend via the
-    // factory (the handles are !Send): both must serve real payloads.
-    let gpu = GpuSpec::gtx580();
-    let coord = CoordinatorBuilder::new()
-        .policy_named("algorithm1")
-        .unwrap()
-        .pjrt_backend(artifacts_dir())
-        .devices(2)
-        .window(4)
-        .linger(Duration::from_millis(10))
-        .start();
-    let mut handles = Vec::new();
-    for b in 0..4u64 {
-        for (i, k) in synthetic_workload(&gpu, 4, b).into_iter().enumerate() {
-            handles.push(coord.submit(LaunchRequest {
-                id: b * 4 + i as u64,
-                profile: k,
-                seed: i as u64,
-            }));
+    #[test]
+    #[ignore = "needs AOT artifacts (`make artifacts`) and a PJRT-enabled environment"]
+    fn multi_device_pjrt_builds_one_runtime_per_worker() {
+        // Two device workers, each constructing its own PJRT backend via
+        // the factory (the handles are !Send): both must serve real
+        // payloads.
+        let gpu = GpuSpec::gtx580();
+        let coord = CoordinatorBuilder::new()
+            .policy_named("algorithm1")
+            .unwrap()
+            .pjrt_backend(artifacts_dir())
+            .devices(2)
+            .window(4)
+            .linger(Duration::from_millis(10))
+            .start();
+        let mut handles = Vec::new();
+        for b in 0..4u64 {
+            for (i, k) in synthetic_workload(&gpu, 4, b).into_iter().enumerate() {
+                handles.push(coord.submit(LaunchRequest {
+                    id: b * 4 + i as u64,
+                    profile: k,
+                    seed: i as u64,
+                }));
+            }
+            coord.flush();
         }
-        coord.flush();
+        for h in handles {
+            assert!(h.wait().unwrap().checksum.is_finite());
+        }
+        let (reports, _) = coord.shutdown();
+        let mut devices: Vec<usize> = reports.iter().map(|r| r.device).collect();
+        devices.sort_unstable();
+        devices.dedup();
+        assert_eq!(devices, vec![0, 1]);
     }
-    for h in handles {
-        assert!(h.wait().unwrap().checksum.is_finite());
-    }
-    let (reports, _) = coord.shutdown();
-    let mut devices: Vec<usize> = reports.iter().map(|r| r.device).collect();
-    devices.sort_unstable();
-    devices.dedup();
-    assert_eq!(devices, vec![0, 1]);
 }

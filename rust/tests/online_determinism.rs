@@ -1,0 +1,272 @@
+//! Integration pins for the online streaming scheduler.
+//!
+//! The headline contract (ISSUE 5 acceptance): a run with a fixed
+//! (arrival seed, strategy seed, window policy) produces **bit-identical
+//! per-kernel sojourn times** across runs — the virtual clock makes the
+//! whole subsystem a pure function of its configuration. The rest of
+//! the file pins record/replay round-trips, the FIFO-vs-reordered tail
+//! ordering the bench gates, and cross-policy sanity.
+
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::gpu::GpuSpec;
+use kreorder::online::{
+    fifo_window_capacity_per_s, offline_oracle, parse_window_policy, simulate_online,
+    ClosedLoopSource, OnlineOpts, OnlineReorderer, OnlineReport, ReplaySource, Trace,
+};
+use kreorder::workloads::scenario_by_id;
+
+fn sim_factory() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+}
+
+fn analytic_factory() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    Box::new(|| Box::new(AnalyticBackend::new()) as Box<dyn ExecutionBackend>)
+}
+
+fn run_poisson(
+    family: &str,
+    n: usize,
+    rate: f64,
+    arrival_seed: u64,
+    window: &str,
+    reorderer: &OnlineReorderer,
+) -> OnlineReport {
+    let gpu = GpuSpec::gtx580();
+    let trace = Trace::poisson(family, n, rate, arrival_seed);
+    let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+    let w = parse_window_policy(window).unwrap();
+    let factory = sim_factory();
+    simulate_online(&gpu, source, w, reorderer, factory.as_ref(), &OnlineOpts::default())
+}
+
+fn sojourn_bits(r: &OnlineReport) -> Vec<u64> {
+    r.sojourns_ms().iter().map(|t| t.to_bits()).collect()
+}
+
+/// The acceptance pin: bit-identical per-kernel sojourn times across
+/// runs for a fixed (arrival seed, strategy seed, window policy), for
+/// every window policy and both reorderer modes.
+#[test]
+fn fixed_seeds_replay_bit_identically() {
+    let reorderers = [
+        OnlineReorderer::fifo(),
+        OnlineReorderer::search("local:3", 300).unwrap(),
+        OnlineReorderer::search("anneal:7", 300).unwrap(),
+    ];
+    for window in ["fixed:6", "linger:6:25", "adaptive:6:25"] {
+        for reorderer in &reorderers {
+            let a = run_poisson("skewed", 40, 400.0, 11, window, reorderer);
+            let b = run_poisson("skewed", 40, 400.0, 11, window, reorderer);
+            assert_eq!(
+                sojourn_bits(&a),
+                sojourn_bits(&b),
+                "sojourns drifted: window={window} reorderer={}",
+                reorderer.name()
+            );
+            assert_eq!(a.span_ms.to_bits(), b.span_ms.to_bits());
+            assert_eq!(a.decision_evals, b.decision_evals);
+            let batches_a: Vec<(u64, usize, Vec<usize>)> = a
+                .batches
+                .iter()
+                .map(|x| (x.id, x.n, x.order.clone()))
+                .collect();
+            let batches_b: Vec<(u64, usize, Vec<usize>)> = b
+                .batches
+                .iter()
+                .map(|x| (x.id, x.n, x.order.clone()))
+                .collect();
+            assert_eq!(batches_a, batches_b);
+        }
+    }
+}
+
+#[test]
+fn arrival_seed_changes_the_run() {
+    let r = OnlineReorderer::search("local:0", 200).unwrap();
+    let a = run_poisson("uniform", 30, 300.0, 1, "linger:8:30", &r);
+    let b = run_poisson("uniform", 30, 300.0, 2, "linger:8:30", &r);
+    assert_ne!(sojourn_bits(&a), sojourn_bits(&b));
+}
+
+#[test]
+fn strategy_seed_changes_only_ordering_not_arrivals() {
+    let a = run_poisson(
+        "mixed",
+        30,
+        600.0,
+        5,
+        "linger:8:30",
+        &OnlineReorderer::search("anneal:1", 300).unwrap(),
+    );
+    let b = run_poisson(
+        "mixed",
+        30,
+        600.0,
+        5,
+        "linger:8:30",
+        &OnlineReorderer::search("anneal:2", 300).unwrap(),
+    );
+    // Same trace, same arrivals…
+    let arrivals_a: Vec<u64> = a.kernels.iter().map(|k| k.arrival_ms.to_bits()).collect();
+    let arrivals_b: Vec<u64> = b.kernels.iter().map(|k| k.arrival_ms.to_bits()).collect();
+    assert_eq!(arrivals_a, arrivals_b);
+    // …and identical window compositions under the arrival-driven
+    // linger policy (close decisions never depend on the chosen order).
+    let sizes_a: Vec<usize> = a.batches.iter().map(|x| x.n).collect();
+    let sizes_b: Vec<usize> = b.batches.iter().map(|x| x.n).collect();
+    assert_eq!(sizes_a, sizes_b);
+}
+
+#[test]
+fn recorded_trace_replays_bit_identically_via_csv() {
+    let gpu = GpuSpec::gtx580();
+    let trace = Trace::bursty("small-large", 32, 250.0, 9);
+    let reorderer = OnlineReorderer::search("local:1", 200).unwrap();
+    let factory = sim_factory();
+
+    let run = |t: &Trace| {
+        let source = Box::new(ReplaySource::from_trace(t, &gpu).unwrap());
+        let w = parse_window_policy("adaptive:8:40").unwrap();
+        simulate_online(&gpu, source, w, &reorderer, factory.as_ref(), &OnlineOpts::default())
+    };
+    let direct = run(&trace);
+    // Round-trip the trace through its CSV serialization (what
+    // `kreorder serve --record` writes and `replay:<file>` reads).
+    let parsed = Trace::parse(&trace.to_csv()).unwrap();
+    let replayed = run(&parsed);
+    assert_eq!(sojourn_bits(&direct), sojourn_bits(&replayed));
+    assert_eq!(direct.span_ms.to_bits(), replayed.span_ms.to_bits());
+}
+
+#[test]
+fn closed_loop_run_records_and_replays_bit_identically() {
+    // A closed-loop run is reactive (arrivals depend on completions),
+    // yet its realized schedule, recorded as a trace and replayed
+    // open-loop, must reproduce the identical run — the record/replay
+    // escape hatch for production incidents.
+    let gpu = GpuSpec::gtx580();
+    let fam = scenario_by_id("uniform").unwrap();
+    let factory = sim_factory();
+    let reorderer = OnlineReorderer::fifo();
+    let run_closed = || {
+        let source = Box::new(ClosedLoopSource::new(fam, &gpu, 20, 4, 2.0, 13));
+        let w = parse_window_policy("adaptive:4:20").unwrap();
+        simulate_online(&gpu, source, w, &reorderer, factory.as_ref(), &OnlineOpts::default())
+    };
+    let closed = run_closed();
+    let again = run_closed();
+    assert_eq!(sojourn_bits(&closed), sojourn_bits(&again), "closed loop not deterministic");
+
+    let trace = Trace {
+        family: "uniform".into(),
+        n: 20,
+        seed: 13, // the closed loop draws its pool from its own seed
+        times_ms: closed.kernels.iter().map(|k| k.arrival_ms).collect(),
+    };
+    let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+    let w = parse_window_policy("adaptive:4:20").unwrap();
+    let replayed =
+        simulate_online(&gpu, source, w, &reorderer, factory.as_ref(), &OnlineOpts::default());
+    assert_eq!(sojourn_bits(&closed), sojourn_bits(&replayed));
+}
+
+/// The bench's hard gate, pinned as a test so `cargo test` catches a
+/// regression before CI's bench-smoke does: under mild overload on the
+/// skewed and small-large regimes, the reordered windows must not lose
+/// the p99 sojourn race to FIFO.
+#[test]
+fn reordered_p99_beats_fifo_on_the_gated_regimes() {
+    let gpu = GpuSpec::gtx580();
+    for family in ["skewed", "small-large"] {
+        let sc = scenario_by_id(family).unwrap();
+        let pool = sc.workload(&gpu, 64, 23);
+        // Calibrate ~1.05x the FIFO capacity of 8-kernel windows — the
+        // same normalization benches/online_latency.rs uses (shared
+        // helper, so the gate and this pin measure the same regime).
+        let factory = sim_factory();
+        let rate = 1.05 * fifo_window_capacity_per_s(&gpu, &pool, 8, factory.as_ref());
+
+        let fifo = run_poisson(family, 64, rate, 23, "linger:8:40", &OnlineReorderer::fifo());
+        let reord = run_poisson(
+            family,
+            64,
+            rate,
+            23,
+            "linger:8:40",
+            &OnlineReorderer::search("local:0", 300).unwrap(),
+        );
+        // Same trace + arrival-driven windows: identical compositions,
+        // so the only difference is launch order within each window.
+        let sizes_f: Vec<usize> = fifo.batches.iter().map(|b| b.n).collect();
+        let sizes_r: Vec<usize> = reord.batches.iter().map(|b| b.n).collect();
+        assert_eq!(sizes_f, sizes_r, "{family}: window composition diverged");
+        for (f, r) in fifo.batches.iter().zip(&reord.batches) {
+            assert!(
+                r.makespan_ms <= f.makespan_ms + 1e-9,
+                "{family}: reordered window slower than FIFO (guard broken)"
+            );
+        }
+        let (pf, pr) = (fifo.sojourn_stats().p99_ms, reord.sojourn_stats().p99_ms);
+        assert!(pr <= pf + 1e-9, "{family}: reordered p99 {pr} > fifo p99 {pf}");
+    }
+}
+
+#[test]
+fn oracle_bounds_the_online_span_from_below() {
+    let gpu = GpuSpec::gtx580();
+    let pool = scenario_by_id("skewed").unwrap().workload(&gpu, 8, 3);
+    let factory = sim_factory();
+    let oracle = offline_oracle(&gpu, &pool, factory.as_ref(), 1000);
+    assert_eq!(oracle.method, "bnb-exact");
+    let r = run_poisson("skewed", 8, 200.0, 3, "linger:4:20", &OnlineReorderer::fifo());
+    // The clairvoyant single-batch optimum can never exceed an online
+    // span that also pays arrival gaps, windowing and queueing.
+    assert!(
+        oracle.makespan_ms <= r.span_ms + 1e-9,
+        "oracle {} !<= online span {}",
+        oracle.makespan_ms,
+        r.span_ms
+    );
+}
+
+#[test]
+fn analytic_backend_runs_the_same_subsystem() {
+    // The online engine is backend-generic: the analytic round model
+    // slots in through the same factory seam, deterministically.
+    let gpu = GpuSpec::gtx580();
+    let trace = Trace::poisson("complementary", 16, 300.0, 4);
+    let reorderer = OnlineReorderer::search("local:0", 128).unwrap();
+    let factory = analytic_factory();
+    let run = || {
+        let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+        let w = parse_window_policy("linger:4:25").unwrap();
+        simulate_online(&gpu, source, w, &reorderer, factory.as_ref(), &OnlineOpts::default())
+    };
+    let a = run();
+    assert_eq!(a.backend, "analytic");
+    assert_eq!(a.kernels.len(), 16);
+    assert_eq!(sojourn_bits(&a), sojourn_bits(&run()));
+}
+
+#[test]
+fn slo_linger_bounds_queue_wait_when_underloaded() {
+    // At 10% utilization with a 15 ms linger, no kernel's window-wait
+    // share of latency can exceed the linger bound (the device is idle
+    // when windows close).
+    let gpu = GpuSpec::gtx580();
+    let pool = scenario_by_id("uniform").unwrap().workload(&gpu, 24, 6);
+    let factory = sim_factory();
+    let rate = 0.1 * fifo_window_capacity_per_s(&gpu, &pool, 8, factory.as_ref());
+    let r = run_poisson("uniform", 24, rate, 6, "linger:8:15", &OnlineReorderer::fifo());
+    for (k, q) in r.kernels.iter().zip(r.queue_waits_ms()) {
+        // Window wait ≤ linger; the rest of the queue wait can only be
+        // residual device busy time, which is bounded by one window's
+        // service at this load.
+        assert!(k.close_ms - k.arrival_ms <= 15.0 + 1e-9, "{k:?}");
+        assert!(q >= 0.0);
+    }
+    // SLO attainment is 1.0 for an SLO beyond the max sojourn.
+    let max_sojourn = r.sojourn_stats().max_ms;
+    assert_eq!(r.slo_attainment(max_sojourn + 1.0), 1.0);
+    assert!(r.slo_attainment(-1.0) == 0.0);
+}
