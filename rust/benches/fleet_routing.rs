@@ -1,0 +1,259 @@
+//! Bench + CI gate: **fleet routing** — blind round-robin vs load-aware
+//! route policies over multi-device fleets, on the deterministic virtual
+//! clock.
+//!
+//! For each (fleet, scenario family) the bench:
+//!
+//! 1. calibrates an arrival rate at ~1.05× the fleet's *summed* FIFO
+//!    window capacity (the same per-device normalization
+//!    `benches/online_latency.rs` uses) — mild overload, where a routing
+//!    mistake turns into unbounded queueing on the victim device;
+//! 2. replays the **identical** Poisson trace through every registered
+//!    route policy with the same per-device window policy and reorderer,
+//!    so the only difference between rows is *which device* each kernel
+//!    joins;
+//! 3. prices each run against the clairvoyant fleet lower bound
+//!    (`fleet::fleet_lower_bound` — nominal-profile fluid bound).
+//!
+//! **Hard gate** (non-zero exit, CI runs `--quick` per push): on the
+//! heterogeneous fleet's `skewed` and `small-large` poisson regimes,
+//! every non-roundrobin policy's fleet p99 sojourn must not exceed
+//! round-robin's. Heterogeneity is where blind dealing loses: round-robin
+//! sends a quarter of the load to a quarter-speed device, whose queue
+//! then diverges. The homogeneous-fleet rows are informational (there
+//! round-robin is already near-balanced and the race is a toss-up). The
+//! p99-speedup floors in `BENCH_baseline.json`'s `fleet` section stay
+//! warn-only until a real runner calibrates them.
+//!
+//! Everything is virtual-time: the numbers in `BENCH_fleet.json` are
+//! machine-independent (bit-stable f64 arithmetic), so regressions are
+//! real scheduling changes, never runner noise.
+
+#[path = "harness/mod.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use kreorder::exec::{ExecutionBackend, SimulatorBackend};
+use kreorder::fleet::{
+    fleet_lower_bound, parse_route_policy, simulate_fleet, FleetReport, FleetSpec,
+};
+use kreorder::gpu::GpuSpec;
+use kreorder::online::{
+    fifo_window_capacity_per_s, parse_window_policy, OnlineOpts, OnlineReorderer, ReplaySource,
+    Trace,
+};
+use kreorder::workloads::{scenario_by_id, scenario_ids};
+
+const SEED: u64 = 29;
+const WINDOW_CAP: usize = 8;
+const WINDOW_SPEC: &str = "linger:8:40";
+const SEARCH_BUDGET: u64 = 300;
+/// Offered load relative to the fleet's summed FIFO capacity.
+const OVERLOAD: f64 = 1.05;
+/// Regimes the routed-vs-roundrobin p99 gate is enforced on.
+const GATED_FAMILIES: [&str; 2] = ["skewed", "small-large"];
+/// Every registered route policy; `roundrobin` is the baseline row.
+const ROUTES: [&str; 5] = ["roundrobin", "jsq", "lrw", "p2c:5", "affinity"];
+/// (spec, hard-gated): the lopsided fleet carries the gate.
+const FLEETS: [(&str, bool); 2] = [("4", false), ("1,1,0.5,0.25", true)];
+
+struct Row {
+    fleet: &'static str,
+    gated: bool,
+    family: &'static str,
+    arrivals: String,
+    n: usize,
+    rate_per_s: f64,
+    route: &'static str,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    mean_ms: f64,
+    span_ms: f64,
+    throughput_per_s: f64,
+    imbalance: f64,
+    decision_evals: u64,
+    lower_bound_ms: f64,
+    p99_speedup_vs_roundrobin: f64,
+}
+
+fn sim_factory() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+}
+
+fn run_trace(
+    fleet: &FleetSpec,
+    trace: &Trace,
+    route: &str,
+    reorderer: &OnlineReorderer,
+) -> FleetReport {
+    let gpu = GpuSpec::gtx580();
+    let source = Box::new(
+        ReplaySource::from_trace(trace, &gpu)
+            .expect("registry family")
+            .named(trace.family.clone()),
+    );
+    let factory = sim_factory();
+    simulate_fleet(
+        fleet,
+        source,
+        parse_route_policy(route).expect("registered route"),
+        &|| parse_window_policy(WINDOW_SPEC).expect("gate window spelling"),
+        reorderer,
+        factory.as_ref(),
+        &OnlineOpts::default(),
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let gpu = GpuSpec::gtx580();
+    let count: usize = if quick { 96 } else { 192 };
+    let families: Vec<&'static str> = if quick {
+        GATED_FAMILIES.to_vec()
+    } else {
+        scenario_ids()
+    };
+    let reorderer = OnlineReorderer::search("local:0", SEARCH_BUDGET).expect("spelling");
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+
+    harness::section(&format!(
+        "fleet routing: roundrobin vs load-aware ({WINDOW_SPEC}, budget {SEARCH_BUDGET}, \
+         n={count})"
+    ));
+    for (fleet_spec, gated) in FLEETS {
+        let fleet = FleetSpec::parse(fleet_spec).expect("bench fleet spelling");
+        for &family in &families {
+            let sc = scenario_by_id(family).expect("registry family");
+            let pool = sc.workload(&gpu, count, SEED);
+            // Fleet capacity = sum of each device's FIFO window capacity
+            // on this pool (slow devices contribute proportionally less).
+            let cal_factory = sim_factory();
+            let capacity: f64 = fleet
+                .devices
+                .iter()
+                .map(|g| fifo_window_capacity_per_s(g, &pool, WINDOW_CAP, cal_factory.as_ref()))
+                .sum();
+            let rate = OVERLOAD * capacity;
+            let arrivals = format!("poisson:{rate:.3}:{SEED}");
+            let trace = Trace::poisson(family, count, rate, SEED);
+            let lower_bound_ms = fleet_lower_bound(&fleet, &pool);
+
+            let mut rr_p99 = 0.0f64;
+            for route in ROUTES {
+                let r = run_trace(&fleet, &trace, route, &reorderer);
+                assert_eq!(r.kernels.len(), count, "{family}/{route}: lost kernels");
+                let s = r.sojourn_stats();
+                if route == "roundrobin" {
+                    rr_p99 = s.p99_ms;
+                }
+                let speedup = if route == "roundrobin" || s.p99_ms <= 0.0 {
+                    1.0
+                } else {
+                    rr_p99 / s.p99_ms
+                };
+                let fleet_label = format!("fleet={fleet_spec}");
+                println!(
+                    "  {:<14} {:<10} {:<10} p99 {:>10.2} ms ({:>5.2}x vs rr) | imbalance \
+                     {:>5.2} | bound {:>8.2} ms",
+                    fleet_label,
+                    family,
+                    route,
+                    s.p99_ms,
+                    speedup,
+                    r.imbalance(),
+                    lower_bound_ms,
+                );
+                if gated
+                    && route != "roundrobin"
+                    && GATED_FAMILIES.contains(&family)
+                    && s.p99_ms > rr_p99 + 1e-9
+                {
+                    failures.push(format!(
+                        "{route} fleet p99 {} ms > roundrobin p99 {rr_p99} ms on \
+                         fleet={fleet_spec} {family} ({arrivals})",
+                        s.p99_ms
+                    ));
+                }
+                rows.push(Row {
+                    fleet: fleet_spec,
+                    gated,
+                    family,
+                    arrivals: arrivals.clone(),
+                    n: count,
+                    rate_per_s: rate,
+                    route,
+                    p50_ms: s.p50_ms,
+                    p95_ms: s.p95_ms,
+                    p99_ms: s.p99_ms,
+                    mean_ms: s.mean_ms,
+                    span_ms: r.span_ms,
+                    throughput_per_s: r.throughput_per_s(),
+                    imbalance: r.imbalance(),
+                    decision_evals: r.decision_evals,
+                    lower_bound_ms,
+                    p99_speedup_vs_roundrobin: speedup,
+                });
+            }
+        }
+    }
+
+    let gate_ok = failures.is_empty();
+
+    // ---- machine-readable record --------------------------------------
+    let mut json = String::from("{\n  \"bench\": \"fleet_routing\",\n  \"gpu\": \"gtx580\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!(
+        "  \"config\": {{\"window\": \"{WINDOW_SPEC}\", \"strategy\": \
+         \"search:local:0:{SEARCH_BUDGET}\", \"overload\": {OVERLOAD}, \"seed\": {SEED}, \
+         \"routes\": [\"roundrobin\", \"jsq\", \"lrw\", \"p2c:5\", \"affinity\"]}},\n"
+    ));
+    json.push_str(&format!(
+        "  \"gates\": {{\"routed_beats_roundrobin_p99_ok\": {gate_ok}}},\n"
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"fleet\": \"{}\", \"gated\": {}, \"family\": \"{}\", \"arrivals\": \"{}\", \
+             \"n\": {}, \"rate_per_s\": {:.4}, \"route\": \"{}\",\n     \"p50_ms\": {:.6}, \
+             \"p95_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_ms\": {:.6}, \"span_ms\": {:.6},\n     \
+             \"throughput_per_s\": {:.4}, \"imbalance\": {:.4}, \"decision_evals\": {}, \
+             \"fleet_lower_bound_ms\": {:.6},\n     \"p99_speedup_vs_roundrobin\": {:.4}}}{}\n",
+            r.fleet,
+            r.gated,
+            r.family,
+            r.arrivals,
+            r.n,
+            r.rate_per_s,
+            r.route,
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
+            r.mean_ms,
+            r.span_ms,
+            r.throughput_per_s,
+            r.imbalance,
+            r.decision_evals,
+            r.lower_bound_ms,
+            r.p99_speedup_vs_roundrobin,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = "BENCH_fleet.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    if !failures.is_empty() {
+        eprintln!("\nfleet routing gates FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("\nall fleet routing gates passed");
+}

@@ -4,9 +4,12 @@
 //! A CUDA application (or, here, a request stream) submits kernel launches
 //! in arrival order. The coordinator batches them in a *reorder window*,
 //! derives a launch order with the configured [`crate::sched::LaunchPolicy`]
-//! (Algorithm 1 by default), and round-robins complete batches across N
-//! *device workers*, each of which dispatches through its own
-//! [`crate::exec::ExecutionBackend`]:
+//! (Algorithm 1 by default), and routes complete batches across N
+//! *device workers* with a pluggable [`crate::fleet::RoutePolicy`]
+//! (round-robin by default; load-aware policies read the live queue
+//! depths the workers feed back — see
+//! [`CoordinatorBuilder::route_policy`]). Each worker dispatches
+//! through its own [`crate::exec::ExecutionBackend`]:
 //!
 //! * **simulator / analytic backends** — every batch is timed on the
 //!   GTX580 model under both FIFO and the chosen order (the paper's

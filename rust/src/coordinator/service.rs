@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! submitters --MPSC--> dispatcher (batching via WindowPolicy + BatchClock)
-//!                          |  round-robin by batch id
+//!                          |  RoutePolicy over live per-device queue depths
 //!                          +--> device worker 0 (own ExecutionBackend)
 //!                          +--> device worker 1
 //!                          +--> …
@@ -20,9 +20,13 @@
 //! [`crate::online::WindowPolicy`] — the same trait the virtual-clock
 //! online engine uses, so a policy tuned in simulation
 //! (`kreorder serve --arrivals …`) drops into the live service
-//! unchanged (occupancy-aware policies excepted: the dispatcher shows
-//! the policy an idle device, see
-//! [`CoordinatorBuilder::window_policy`]). The classic
+//! unchanged — including occupancy-aware policies: the workers feed
+//! per-device queue depths back to the dispatcher, which forwards the
+//! least-loaded device's depth to the window policy (see
+//! [`CoordinatorBuilder::window_policy`]). *Where* a closed batch goes
+//! is delegated to a [`crate::fleet::RoutePolicy`] reading the same
+//! depths ([`CoordinatorBuilder::route_policy`]; default round-robin,
+//! which preserves the historical batch-id modulo mapping). The classic
 //! `window`/`linger` builder knobs are sugar for
 //! [`crate::online::LingerWindow`]. All deadline arithmetic reads the
 //! injectable [`BatchClock`], making batching deterministic under a
@@ -36,11 +40,15 @@
 use super::clock::{BatchClock, SystemClock};
 use super::stats::ServiceStats;
 use crate::exec::{ExecutionBackend, SimulatorBackend};
+use crate::fleet::{
+    parse_route_policy, DeviceLoad, FleetView, RoundRobin, RouteParseError, RoutePolicy,
+};
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::online::{LingerWindow, WindowDecision, WindowPolicy, WindowState};
 use crate::sched::{registry, Algorithm1Policy, LaunchPolicy, PolicyParseError};
 use crate::sim;
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -150,6 +158,7 @@ pub struct CoordinatorBuilder {
     window: usize,
     linger: Duration,
     window_policy: Option<Box<dyn WindowPolicy>>,
+    route: Box<dyn RoutePolicy>,
     clock: Arc<dyn BatchClock>,
 }
 
@@ -163,6 +172,7 @@ impl Default for CoordinatorBuilder {
             window: 8,
             linger: Duration::from_millis(2),
             window_policy: None,
+            route: Box::new(RoundRobin::default()),
             clock: Arc::new(SystemClock),
         }
     }
@@ -230,11 +240,30 @@ impl CoordinatorBuilder {
         })
     }
 
-    /// Number of device workers batches are round-robined across
-    /// (clamped to ≥ 1).
+    /// Number of device workers batches are routed across (clamped to
+    /// ≥ 1). See [`CoordinatorBuilder::route_policy`] for *which* device
+    /// each batch goes to.
     pub fn devices(mut self, n: usize) -> Self {
         self.devices = n.max(1);
         self
+    }
+
+    /// Routing policy deciding which device worker serves each closed
+    /// batch (default [`RoundRobin`], which preserves the historical
+    /// `batch_id % devices` mapping). Load-aware policies (`jsq`,
+    /// `affinity`, …) read the live per-device queue depths the workers
+    /// feed back; pricing-based `lrw` cannot price wall-clock backlogs
+    /// and falls back to queue depth here.
+    pub fn route_policy<R: RoutePolicy + 'static>(mut self, route: R) -> Self {
+        self.route = Box::new(route);
+        self
+    }
+
+    /// Routing policy by registry spelling (`"jsq"`, `"p2c:42"`, …), per
+    /// [`parse_route_policy`].
+    pub fn route_policy_named(mut self, name: &str) -> Result<Self, RouteParseError> {
+        self.route = parse_route_policy(name)?;
+        Ok(self)
     }
 
     /// Reorder window: max launches batched together (clamped to ≥ 1).
@@ -256,15 +285,16 @@ impl CoordinatorBuilder {
     /// [`crate::online::WindowPolicy`]. Overrides `window`/`linger` for
     /// closing decisions; `window` still bounds shutdown-drain chunks.
     ///
-    /// Caveat: the dispatcher does not observe device occupancy, so it
-    /// always presents an **idle** device to the policy — an
-    /// [`crate::online::AdaptiveWindow`] therefore degrades to its
-    /// idle-grace behavior here (close after `linger/8`), not the
-    /// fill-while-busy behavior it shows in the online simulator.
-    /// Occupancy-aware live batching needs worker feedback, which the
-    /// dispatcher does not have yet; tune occupancy-sensitive policies
-    /// with `kreorder serve --arrivals …` and install occupancy-free
-    /// ones (`fixed`, `linger`) here.
+    /// The dispatcher forwards real occupancy to the policy: the workers
+    /// feed back per-device queue depths, and the policy's
+    /// [`WindowState`] carries the least-loaded device's depth in
+    /// `queued_batches` (so `device_idle()` means "some worker could
+    /// take this batch right now"). An
+    /// [`crate::online::AdaptiveWindow`] therefore shows the same
+    /// fill-while-busy behavior here as in the online simulator. One
+    /// residual gap: workers report *when* they free only by draining
+    /// (depth reaching zero), so `device_free_at_ms` is always `now` and
+    /// a busy-wait recheck falls back to the policy's own deadline.
     pub fn window_policy<W: WindowPolicy + 'static>(mut self, policy: W) -> Self {
         self.window_policy = Some(Box::new(policy));
         self
@@ -366,13 +396,18 @@ struct Batch {
 }
 
 /// Batching loop: fills reorder windows per the window policy and
-/// round-robins complete batches across the device workers.
+/// routes complete batches across the device workers per the configured
+/// [`RoutePolicy`].
 fn dispatcher_loop(
     cfg: CoordinatorBuilder,
     rx: Receiver<Msg>,
 ) -> (Vec<BatchReport>, ServiceStats) {
     // Spawn the device workers first; each builds its backend on its own
-    // thread via the factory.
+    // thread via the factory. The shared counters track batches handed
+    // to each worker but not yet finished — the occupancy signal both
+    // the route policy and the window policy read.
+    let depths: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..cfg.devices).map(|_| AtomicUsize::new(0)).collect());
     let mut worker_txs: Vec<Sender<Batch>> = Vec::with_capacity(cfg.devices);
     let mut worker_handles: Vec<JoinHandle<(Vec<BatchReport>, ServiceStats)>> =
         Vec::with_capacity(cfg.devices);
@@ -382,9 +417,10 @@ fn dispatcher_loop(
         let policy = Arc::clone(&cfg.policy);
         let factory = Arc::clone(&cfg.backend);
         let clock = Arc::clone(&cfg.clock);
+        let depths = Arc::clone(&depths);
         worker_txs.push(btx);
         worker_handles.push(std::thread::spawn(move || {
-            device_loop(device, gpu, policy, factory, clock, brx)
+            device_loop(device, gpu, policy, factory, clock, depths, brx)
         }));
     }
 
@@ -396,9 +432,11 @@ fn dispatcher_loop(
     let mut window_policy = cfg.window_policy.unwrap_or_else(|| {
         Box::new(LingerWindow::new(cfg.window, cfg.linger.as_secs_f64() * 1e3))
     });
+    let mut route = cfg.route;
+    let peak_compute = cfg.gpu.peak_compute();
 
     let mut batch_id = 0u64;
-    let dispatch = |mut batch: Vec<Pending>, id: u64| {
+    let mut dispatch = |mut batch: Vec<Pending>, id: u64| {
         // An empty window must never reach a worker as a zero-kernel
         // batch (guards the Flush/drain paths and any misbehaving
         // window policy).
@@ -409,7 +447,35 @@ fn dispatcher_loop(
         for p in &mut batch {
             p.dispatched = t;
         }
-        let device = (id as usize) % worker_txs.len();
+        // Route on live queue depths; the window's oldest kernel stands
+        // in for the whole batch (affinity keys on its class). The live
+        // path cannot price wall-clock backlogs, so `backlog_lb_ms` is
+        // NaN and pricing policies fall back to queue depth.
+        let now = t.saturating_duration_since(t0).as_secs_f64() * 1e3;
+        let loads: Vec<DeviceLoad> = depths
+            .iter()
+            .enumerate()
+            .map(|(d, depth)| {
+                let depth = depth.load(Ordering::Relaxed);
+                DeviceLoad {
+                    device: d,
+                    outstanding: depth,
+                    n_pending: 0,
+                    queued_batches: depth,
+                    free_at_ms: now,
+                    peak_compute,
+                    backlog_lb_ms: f64::NAN,
+                }
+            })
+            .collect();
+        let view = FleetView {
+            now_ms: now,
+            devices: &loads,
+        };
+        let device = route
+            .route(&batch[0].req.profile, &view)
+            .min(worker_txs.len() - 1);
+        depths[device].fetch_add(1, Ordering::Relaxed);
         // A worker can only be gone if it panicked; dropping the batch
         // here drops the reply senders, which surfaces as recv errors at
         // the submitters rather than a hang.
@@ -423,15 +489,21 @@ fn dispatcher_loop(
         let now = now_ms(&clock);
         let mut recheck: Option<f64> = None;
         if !batch.is_empty() {
+            // Real occupancy: the least-loaded worker's unfinished-batch
+            // depth. Workers only report freeing by draining to zero, so
+            // `device_free_at_ms` stays `now` and a busy policy rechecks
+            // at its own deadline.
+            let queued = depths
+                .iter()
+                .map(|d| d.load(Ordering::Relaxed))
+                .min()
+                .unwrap_or(0);
             let state = WindowState {
                 now_ms: now,
                 n_pending: batch.len(),
                 oldest_arrival_ms: oldest_ms,
-                // The dispatcher does not observe device occupancy;
-                // policies see an idle device (adaptive degrades to its
-                // idle-grace behavior).
                 device_free_at_ms: now,
-                queued_batches: 0,
+                queued_batches: queued,
             };
             match window_policy.decide(&state) {
                 WindowDecision::Close => {
@@ -525,13 +597,16 @@ fn dispatcher_loop(
 
 /// One device worker: owns its backend (plus a simulator for the
 /// FIFO-vs-policy comparison) and processes batches until the queue
-/// closes.
+/// closes, decrementing its shared depth counter as each batch
+/// finishes (the dispatcher's occupancy signal).
+#[allow(clippy::too_many_arguments)]
 fn device_loop(
     device: usize,
     gpu: GpuSpec,
     policy: Arc<dyn LaunchPolicy>,
     factory: BackendFactory,
     clock: Arc<dyn BatchClock>,
+    depths: Arc<Vec<AtomicUsize>>,
     rx: Receiver<Batch>,
 ) -> (Vec<BatchReport>, ServiceStats) {
     // Backend construction failure (e.g. PJRT client unavailable) is not
@@ -560,6 +635,7 @@ fn device_loop(
             &mut reports,
             &mut stats,
         );
+        depths[device].fetch_sub(1, Ordering::Relaxed);
     }
     (reports, stats)
 }
@@ -886,6 +962,60 @@ mod tests {
     fn drop_without_shutdown_does_not_hang() {
         let c = sim_only(2);
         drop(c);
+    }
+
+    #[test]
+    fn route_policy_named_swaps_routing() {
+        let c = CoordinatorBuilder::new()
+            .route_policy_named("jsq")
+            .unwrap()
+            .devices(2)
+            .window(1)
+            .linger(Duration::from_millis(5))
+            .start();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                c.submit(LaunchRequest {
+                    id: i,
+                    profile: profile("k", 8, 2.0),
+                    seed: 0,
+                })
+            })
+            .collect();
+        let devices: Vec<usize> = handles
+            .into_iter()
+            .map(|h| h.wait().unwrap().device)
+            .collect();
+        assert!(devices.iter().all(|&d| d < 2), "{devices:?}");
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 8);
+        assert_eq!(reports.iter().map(|r| r.n).sum::<usize>(), 8);
+        assert!(CoordinatorBuilder::new().route_policy_named("bogus").is_err());
+    }
+
+    #[test]
+    fn adaptive_window_serves_under_real_occupancy() {
+        // The adaptive policy now reads real worker depths in the live
+        // path; the service must still answer everything (no spin, no
+        // hang) whatever the interleaving of closes and drains.
+        let c = CoordinatorBuilder::new()
+            .window_policy(crate::online::AdaptiveWindow::new(4, 10.0))
+            .devices(2)
+            .start();
+        let handles: Vec<_> = (0..12)
+            .map(|i| {
+                c.submit(LaunchRequest {
+                    id: i,
+                    profile: profile("k", 8, 2.0),
+                    seed: 0,
+                })
+            })
+            .collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let (_, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 12);
     }
 
     #[test]

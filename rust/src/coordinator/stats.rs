@@ -34,6 +34,10 @@ pub struct ServiceStats {
     /// Per-response queue-wait samples (submit → window dispatch, ms);
     /// wraps in lockstep with `latencies_ms`.
     pub queue_waits_ms: Vec<f64>,
+    /// Device that served each sample; wraps in lockstep with
+    /// `latencies_ms`, so per-device latency breakdowns survive the
+    /// multi-device merge.
+    pub sample_devices: Vec<usize>,
     /// Ring cursor for the wrapped sample buffers.
     sample_cursor: usize,
     /// Sum of simulated FIFO / policy makespans over valid batches.
@@ -54,21 +58,23 @@ impl ServiceStats {
         if r.latency_ms > self.max_latency_ms {
             self.max_latency_ms = r.latency_ms;
         }
-        self.push_samples(r.latency_ms, r.queue_ms);
+        self.push_samples(r.latency_ms, r.queue_ms, r.device);
         if r.checksum == f64::NEG_INFINITY {
             self.n_failures += 1;
         }
     }
 
-    /// Append one (sojourn, queue-wait) sample pair, wrapping the ring
-    /// once [`LATENCY_SAMPLE_CAP`] samples are held.
-    fn push_samples(&mut self, latency_ms: f64, queue_ms: f64) {
+    /// Append one (sojourn, queue-wait, device) sample triple, wrapping
+    /// the rings once [`LATENCY_SAMPLE_CAP`] samples are held.
+    fn push_samples(&mut self, latency_ms: f64, queue_ms: f64, device: usize) {
         if self.latencies_ms.len() < LATENCY_SAMPLE_CAP {
             self.latencies_ms.push(latency_ms);
             self.queue_waits_ms.push(queue_ms);
+            self.sample_devices.push(device);
         } else {
             self.latencies_ms[self.sample_cursor] = latency_ms;
             self.queue_waits_ms[self.sample_cursor] = queue_ms;
+            self.sample_devices[self.sample_cursor] = device;
             self.sample_cursor = (self.sample_cursor + 1) % LATENCY_SAMPLE_CAP;
         }
     }
@@ -95,11 +101,16 @@ impl ServiceStats {
         self.max_latency_ms = self.max_latency_ms.max(other.max_latency_ms);
         // Replay the peer's ring in chronological order (oldest sample
         // sits at its cursor once wrapped), so this ring's own eviction
-        // keeps dropping oldest-first.
+        // keeps dropping oldest-first and device provenance stays
+        // aligned with its samples.
         let n = other.latencies_ms.len();
         for k in 0..n {
             let i = (other.sample_cursor + k) % n;
-            self.push_samples(other.latencies_ms[i], other.queue_waits_ms[i]);
+            self.push_samples(
+                other.latencies_ms[i],
+                other.queue_waits_ms[i],
+                other.sample_devices[i],
+            );
         }
         self.total_sim_fifo_ms += other.total_sim_fifo_ms;
         self.total_sim_policy_ms += other.total_sim_policy_ms;
@@ -125,6 +136,37 @@ impl ServiceStats {
     /// Exact p-th percentile (0–100) of per-request queue wait.
     pub fn queue_percentile_ms(&self, p: f64) -> f64 {
         percentile(&self.queue_waits_ms, p)
+    }
+
+    /// Retained samples in chronological order, oldest first, as
+    /// `(device, latency_ms, queue_ms)` triples. Once the ring has
+    /// wrapped, the oldest retained sample sits at the cursor.
+    pub fn samples_chronological(&self) -> Vec<(usize, f64, f64)> {
+        let n = self.latencies_ms.len();
+        (0..n)
+            .map(|k| {
+                let i = (self.sample_cursor + k) % n;
+                (
+                    self.sample_devices[i],
+                    self.latencies_ms[i],
+                    self.queue_waits_ms[i],
+                )
+            })
+            .collect()
+    }
+
+    /// Exact p-th percentile (0–100) of sojourn latency over the
+    /// retained samples served by one device (0 when that device has no
+    /// retained samples).
+    pub fn device_latency_percentile_ms(&self, device: usize, p: f64) -> f64 {
+        let samples: Vec<f64> = self
+            .latencies_ms
+            .iter()
+            .zip(&self.sample_devices)
+            .filter(|&(_, &d)| d == device)
+            .map(|(&l, _)| l)
+            .collect();
+        percentile(&samples, p)
     }
 
     /// Aggregate simulated speedup of the policy over FIFO arrival order.
@@ -169,6 +211,10 @@ mod tests {
     use super::*;
 
     fn resp(latency: f64, checksum: f64) -> LaunchResponse {
+        resp_on(0, latency, checksum)
+    }
+
+    fn resp_on(device: usize, latency: f64, checksum: f64) -> LaunchResponse {
         LaunchResponse {
             id: 0,
             checksum,
@@ -177,7 +223,7 @@ mod tests {
             queue_ms: latency / 2.0,
             batch_id: 0,
             position: 0,
-            device: 0,
+            device,
         }
     }
 
@@ -272,6 +318,58 @@ mod tests {
         // Percentiles see both workers' samples.
         assert_eq!(a.latencies_ms.len(), 2);
         assert_eq!(a.latency_percentile_ms(100.0), 40.0);
+    }
+
+    #[test]
+    fn merge_keeps_wrapped_rings_chronological_with_device_provenance() {
+        // Encode (device, sequence) into each latency so ordering and
+        // provenance are checkable after the merge.
+        let lat = |d: usize, i: usize| (d * 100_000_000 + i) as f64;
+
+        // Device 0's ring wraps (cap + 100 responses); devices 1 and 2
+        // stay under the cap.
+        let mut w0 = ServiceStats::default();
+        for i in 0..(LATENCY_SAMPLE_CAP + 100) {
+            w0.record_response(&resp_on(0, lat(0, i), 1.0));
+        }
+        let mut w1 = ServiceStats::default();
+        let mut w2 = ServiceStats::default();
+        for i in 0..50 {
+            w1.record_response(&resp_on(1, lat(1, i), 1.0));
+            w2.record_response(&resp_on(2, lat(2, i), 1.0));
+        }
+
+        let mut merged = ServiceStats::default();
+        merged.merge(&w0);
+        merged.merge(&w1);
+        merged.merge(&w2);
+
+        // 100 + 50 + 50 evictions past the cap, always oldest-first.
+        assert_eq!(merged.n_responses, LATENCY_SAMPLE_CAP + 200);
+        let samples = merged.samples_chronological();
+        assert_eq!(samples.len(), LATENCY_SAMPLE_CAP);
+        // Oldest surviving sample: device 0's sequence number 200 (its
+        // own ring dropped 0..100, the two merges dropped 100..200).
+        assert_eq!(samples[0], (0, lat(0, 200), lat(0, 200) / 2.0));
+        // Within each device the samples stay in submission order, and
+        // the devices appear in merge order (0 block, then 1, then 2).
+        let mut last_seq = [None::<f64>; 3];
+        let mut max_device_seen = 0;
+        for &(d, l, q) in &samples {
+            assert!(d >= max_device_seen, "device blocks out of order");
+            max_device_seen = d;
+            assert!(last_seq[d].map_or(true, |prev| prev < l), "device {d} reordered");
+            last_seq[d] = Some(l);
+            assert_eq!(q, l / 2.0);
+        }
+        let count = |dev: usize| samples.iter().filter(|&&(d, _, _)| d == dev).count();
+        assert_eq!(count(0), LATENCY_SAMPLE_CAP - 100);
+        assert_eq!(count(1), 50);
+        assert_eq!(count(2), 50);
+        // Per-device percentiles read only that device's samples.
+        assert_eq!(merged.device_latency_percentile_ms(1, 100.0), lat(1, 49));
+        assert_eq!(merged.device_latency_percentile_ms(2, 100.0), lat(2, 49));
+        assert_eq!(merged.device_latency_percentile_ms(7, 99.0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,546 @@
+//! The fleet event loop: arrivals → route → per-device reorder windows.
+//!
+//! [`simulate_fleet`] extends the single-device virtual-clock simulation
+//! ([`crate::online::simulate_online`]) to `D` devices, each with its
+//! own [`WindowPolicy`] instance, its own batch queue and its own
+//! backend, with a [`RoutePolicy`] deciding which device every arriving
+//! kernel joins. Time is still a plain `f64` of virtual milliseconds,
+//! the loop is still O(events), and a run is still a pure function of
+//! its configuration: equal (arrival seed, route policy, window policy,
+//! strategy seed, backend) produce **bit-identical** per-kernel
+//! timestamps on every machine (`tests/fleet_determinism.rs` pins it).
+//!
+//! Five event kinds drive the loop, processed in this fixed priority at
+//! equal times:
+//!
+//! 1. **routing decision** — a popped arrival is placed on a device;
+//! 2. **completion** — a kernel's model finish time passed;
+//! 3. **batch start** — a device is free and a closed window's decision
+//!    overhead has elapsed (device ties break toward the lowest index);
+//! 4. **arrival** — the source's next kernel enters the router;
+//! 5. **recheck** — some device's [`WindowPolicy`] `Wait` deadline
+//!    landed.
+//!
+//! Every device's window policy is consulted after every event; the
+//! first device (by index) whose policy says `Close` runs the shared
+//! [`OnlineReorderer`] over its own pending kernels and queues the
+//! batch behind its own device.
+
+use super::report::{FleetBatchRecord, FleetKernelRecord, FleetReport};
+use super::route::{DeviceLoad, FleetView, RoutePolicy};
+use super::spec::FleetSpec;
+use crate::exec::ExecutionBackend;
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::online::arrivals::{Arrival, ArrivalSource};
+use crate::online::window::{WindowDecision, WindowPolicy, WindowState};
+use crate::online::{OnlineOpts, OnlineReorderer};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Totally ordered f64 for the completion heap (event times are always
+/// finite).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct EventTime(f64);
+
+impl Eq for EventTime {}
+
+impl PartialOrd for EventTime {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventTime {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// A kernel waiting in a device's open reorder window.
+struct Open {
+    id: u64,
+    arrival_ms: f64,
+    route_ms: f64,
+    profile: KernelProfile,
+}
+
+/// A closed window queued behind its device.
+struct Closed {
+    batch: u64,
+    close_ms: f64,
+    /// Close time plus decision overhead; service cannot start earlier.
+    ready_ms: f64,
+    members: Vec<Open>,
+    order: Vec<usize>,
+    evals: u64,
+}
+
+/// One device's complete scheduling state.
+struct Dev {
+    gpu: GpuSpec,
+    window: Box<dyn WindowPolicy>,
+    backend: Box<dyn ExecutionBackend>,
+    pending: Vec<Open>,
+    queue: VecDeque<Closed>,
+    free_at: f64,
+    /// Kernels routed here and not yet completed.
+    outstanding: usize,
+    busy_ms: f64,
+    recheck: Option<f64>,
+}
+
+/// Event priorities at equal times (lower wins).
+const EV_ROUTE: u8 = 0;
+const EV_COMPLETION: u8 = 1;
+const EV_BATCH_START: u8 = 2;
+const EV_ARRIVAL: u8 = 3;
+const EV_RECHECK: u8 = 4;
+
+/// Close device `dev`'s open window at `now`: reorder within the
+/// per-decision budget and queue the batch behind the device. Returns
+/// the evaluations the decision spent.
+fn close_window(
+    dev: &mut Dev,
+    now: f64,
+    batch_id: u64,
+    decision_ms_per_eval: f64,
+    reorderer: &OnlineReorderer,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+) -> u64 {
+    let members = std::mem::take(&mut dev.pending);
+    let profiles: Vec<KernelProfile> = members.iter().map(|m| m.profile.clone()).collect();
+    let decision = reorderer.decide(&dev.gpu, &profiles, make_backend);
+    let evals = decision.evals;
+    dev.queue.push_back(Closed {
+        batch: batch_id,
+        close_ms: now,
+        ready_ms: now + decision_ms_per_eval * evals as f64,
+        members,
+        order: decision.order,
+        evals,
+    });
+    evals
+}
+
+/// Admissible lower bound (ms) on everything device `dev` still owes:
+/// the executing batch's remainder plus the backend's suffix bound over
+/// the backlog (open window + queued batches).
+fn price_backlog(dev: &mut Dev, now: f64) -> f64 {
+    let residual = (dev.free_at - now).max(0.0);
+    let mut profiles: Vec<KernelProfile> =
+        dev.pending.iter().map(|o| o.profile.clone()).collect();
+    for b in &dev.queue {
+        profiles.extend(b.members.iter().map(|o| o.profile.clone()));
+    }
+    if profiles.is_empty() {
+        return residual;
+    }
+    let all: Vec<usize> = (0..profiles.len()).collect();
+    let mut prepared = dev.backend.prepare(&dev.gpu, &profiles);
+    let lb = prepared.suffix_lower_bound(&all);
+    // Backends without a bound seam report -inf; price the backlog as
+    // free rather than poisoning the score.
+    residual + if lb.is_finite() { lb.max(0.0) } else { 0.0 }
+}
+
+/// Build the per-device snapshot a [`RoutePolicy`] decides over.
+/// Backlog pricing costs a backend `prepare` per device, so it only
+/// happens when the policy asked for it ([`RoutePolicy::needs_pricing`]).
+fn device_loads(devs: &mut [Dev], now: f64, price: bool) -> Vec<DeviceLoad> {
+    let mut loads = Vec::with_capacity(devs.len());
+    for (d, dev) in devs.iter_mut().enumerate() {
+        let backlog_lb_ms = if price { price_backlog(dev, now) } else { f64::NAN };
+        loads.push(DeviceLoad {
+            device: d,
+            outstanding: dev.outstanding,
+            n_pending: dev.pending.len(),
+            queued_batches: dev.queue.len(),
+            free_at_ms: dev.free_at,
+            peak_compute: dev.gpu.peak_compute(),
+            backlog_lb_ms,
+        });
+    }
+    loads
+}
+
+/// Run the fleet scheduler over one arrival stream. See the module docs
+/// for the event model; the returned [`FleetReport`] carries every
+/// per-kernel timestamp with its device.
+pub fn simulate_fleet(
+    fleet: &FleetSpec,
+    mut source: Box<dyn ArrivalSource>,
+    mut route: Box<dyn RoutePolicy>,
+    make_window: &dyn Fn() -> Box<dyn WindowPolicy>,
+    reorderer: &OnlineReorderer,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    opts: &OnlineOpts,
+) -> FleetReport {
+    assert!(!fleet.devices.is_empty(), "simulate_fleet needs at least one device");
+    let mut devs: Vec<Dev> = fleet
+        .devices
+        .iter()
+        .map(|gpu| Dev {
+            gpu: gpu.clone(),
+            window: make_window(),
+            backend: make_backend(),
+            pending: Vec::new(),
+            queue: VecDeque::new(),
+            free_at: 0.0,
+            outstanding: 0,
+            busy_ms: 0.0,
+            recheck: None,
+        })
+        .collect();
+    let source_name = source.name();
+    let route_name = route.name();
+    let window_name = devs[0].window.name();
+    let backend_name = devs[0].backend.name().to_string();
+    let needs_pricing = route.needs_pricing();
+    let decision_ms_per_eval = if opts.decision_ms_per_eval.is_finite() {
+        opts.decision_ms_per_eval.max(0.0)
+    } else {
+        0.0
+    };
+
+    let mut now = 0.0f64;
+    // Arrivals popped from the source but not yet placed on a device,
+    // with the time each one entered the router.
+    let mut to_route: VecDeque<(f64, Arrival)> = VecDeque::new();
+    // Min-heap of (finish time, kernel id, device) completion events.
+    let mut completions: BinaryHeap<Reverse<(EventTime, u64, usize)>> = BinaryHeap::new();
+    let mut next_batch = 0u64;
+
+    let mut kernels: Vec<FleetKernelRecord> = Vec::new();
+    let mut batches: Vec<FleetBatchRecord> = Vec::new();
+    let mut decision_evals = 0u64;
+    let mut n_unsimulable = 0usize;
+
+    loop {
+        // Ask every device's policy about its open window. Closing never
+        // advances time, so each policy always sees the post-close state
+        // before the clock moves again.
+        let mut close_dev: Option<usize> = None;
+        for (d, dev) in devs.iter_mut().enumerate() {
+            dev.recheck = None;
+            if dev.pending.is_empty() {
+                continue;
+            }
+            let state = WindowState {
+                now_ms: now,
+                n_pending: dev.pending.len(),
+                oldest_arrival_ms: dev.pending[0].arrival_ms,
+                device_free_at_ms: dev.free_at,
+                queued_batches: dev.queue.len(),
+            };
+            match dev.window.decide(&state) {
+                WindowDecision::Close => {
+                    close_dev = Some(d);
+                    break;
+                }
+                WindowDecision::Wait { recheck_at_ms } => {
+                    debug_assert!(
+                        recheck_at_ms.map_or(true, |t| t > now),
+                        "window policy returned a non-future recheck deadline"
+                    );
+                    dev.recheck = recheck_at_ms;
+                }
+            }
+        }
+        if let Some(d) = close_dev {
+            decision_evals += close_window(
+                &mut devs[d],
+                now,
+                next_batch,
+                decision_ms_per_eval,
+                reorderer,
+                make_backend,
+            );
+            next_batch += 1;
+            continue;
+        }
+
+        // Earliest event, ties broken by the fixed priority order
+        // (batch-start device ties break toward the lowest index by the
+        // strict `<` scan).
+        let t_route = to_route.front().map(|(t, _)| *t);
+        let t_completion = completions.peek().map(|Reverse((t, _, _))| t.0);
+        let mut start: Option<(f64, usize)> = None;
+        for (d, dev) in devs.iter().enumerate() {
+            if let Some(b) = dev.queue.front() {
+                let t = b.ready_ms.max(dev.free_at);
+                if start.map_or(true, |(bt, _)| t < bt) {
+                    start = Some((t, d));
+                }
+            }
+        }
+        let t_arrival = source.next_at();
+        let t_recheck = devs.iter().filter_map(|d| d.recheck).reduce(f64::min);
+        let candidates = [
+            (t_route, EV_ROUTE),
+            (t_completion, EV_COMPLETION),
+            (start.map(|(t, _)| t), EV_BATCH_START),
+            (t_arrival, EV_ARRIVAL),
+            (t_recheck, EV_RECHECK),
+        ];
+        let mut next: Option<(f64, u8)> = None;
+        for (t, kind) in candidates {
+            let Some(t) = t else { continue };
+            let better = match next {
+                None => true,
+                Some((bt, bk)) => t < bt || (t == bt && kind < bk),
+            };
+            if better {
+                next = Some((t, kind));
+            }
+        }
+
+        match next {
+            None => {
+                // End-of-stream drain: nothing else can ever happen, so
+                // open windows close regardless of policy, lowest device
+                // first (a fixed:<k> window would otherwise strand its
+                // remainder forever).
+                match devs.iter().position(|d| !d.pending.is_empty()) {
+                    None => break, // drained and idle everywhere: done
+                    Some(d) => {
+                        decision_evals += close_window(
+                            &mut devs[d],
+                            now,
+                            next_batch,
+                            decision_ms_per_eval,
+                            reorderer,
+                            make_backend,
+                        );
+                        next_batch += 1;
+                    }
+                }
+            }
+            Some((t, kind)) => {
+                debug_assert!(t >= now, "event time moved backwards");
+                now = t.max(now);
+                match kind {
+                    EV_ROUTE => {
+                        let (_, a) = to_route.pop_front().expect("peeked");
+                        let loads = device_loads(&mut devs, now, needs_pricing);
+                        let view = FleetView { now_ms: now, devices: &loads };
+                        let d = route.route(&a.profile, &view).min(devs.len() - 1);
+                        devs[d].outstanding += 1;
+                        devs[d].pending.push(Open {
+                            id: a.id,
+                            arrival_ms: a.at_ms,
+                            route_ms: now,
+                            profile: a.profile,
+                        });
+                    }
+                    EV_COMPLETION => {
+                        let Reverse((_, id, d)) = completions.pop().expect("peeked");
+                        devs[d].outstanding -= 1;
+                        source.on_completion(now, id);
+                    }
+                    EV_BATCH_START => {
+                        let (_, d) = start.expect("batch-start chosen from a queued batch");
+                        let dev = &mut devs[d];
+                        let b = dev.queue.pop_front().expect("peeked");
+                        let profiles: Vec<KernelProfile> =
+                            b.members.iter().map(|m| m.profile.clone()).collect();
+                        let report = dev.backend.execute(&dev.gpu, &profiles, &b.order);
+                        let makespan = if report.makespan_ms.is_nan() {
+                            // Unsimulable batch: serve it in zero time
+                            // rather than wedging the queue (validated
+                            // sources never hit this; the report counts
+                            // it).
+                            n_unsimulable += 1;
+                            0.0
+                        } else {
+                            report.makespan_ms
+                        };
+                        dev.free_at = now + makespan;
+                        dev.busy_ms += makespan;
+                        for o in &report.outcomes {
+                            let m = &b.members[o.index];
+                            let dt = if o.finish_ms.is_nan() { 0.0 } else { o.finish_ms };
+                            let finish = now + dt;
+                            kernels.push(FleetKernelRecord {
+                                id: m.id,
+                                device: d,
+                                arrival_ms: m.arrival_ms,
+                                route_ms: m.route_ms,
+                                close_ms: b.close_ms,
+                                start_ms: now,
+                                finish_ms: finish,
+                                batch: b.batch,
+                                position: o.position,
+                            });
+                            completions.push(Reverse((EventTime(finish), m.id, d)));
+                        }
+                        batches.push(FleetBatchRecord {
+                            id: b.batch,
+                            device: d,
+                            n: b.members.len(),
+                            close_ms: b.close_ms,
+                            ready_ms: b.ready_ms,
+                            start_ms: now,
+                            makespan_ms: makespan,
+                            evals: b.evals,
+                            order: b.order,
+                        });
+                    }
+                    EV_ARRIVAL => {
+                        let a = source.pop(now);
+                        to_route.push_back((now, a));
+                    }
+                    _ => {} // EV_RECHECK: the policies re-decide above
+                }
+            }
+        }
+    }
+
+    let span_ms = kernels.iter().map(|k| k.finish_ms).fold(0.0, f64::max);
+    kernels.sort_by_key(|k| k.id);
+    FleetReport {
+        source: source_name,
+        route: route_name,
+        window: window_name,
+        reorderer: reorderer.name(),
+        backend: backend_name,
+        kernels,
+        batches,
+        span_ms,
+        device_busy_ms: devs.iter().map(|d| d.busy_ms).collect(),
+        decision_evals,
+        n_unsimulable,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::SimulatorBackend;
+    use crate::fleet::route::parse_route_policy;
+    use crate::online::arrivals::{ReplaySource, Trace};
+    use crate::online::window::parse_window_policy;
+
+    fn sim() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+        Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+    }
+
+    fn run(fleet: &FleetSpec, route: &str, family: &str, n: usize, rate: f64) -> FleetReport {
+        let gpu = GpuSpec::gtx580();
+        let trace = Trace::poisson(family, n, rate, 7);
+        let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+        simulate_fleet(
+            fleet,
+            source,
+            parse_route_policy(route).unwrap(),
+            &|| parse_window_policy("linger:6:30").unwrap(),
+            &OnlineReorderer::fifo(),
+            sim().as_ref(),
+            &OnlineOpts::default(),
+        )
+    }
+
+    #[test]
+    fn conservation_and_timestamp_ordering_across_devices() {
+        let fleet = FleetSpec::homogeneous(3);
+        let r = run(&fleet, "jsq", "uniform", 30, 400.0);
+        assert_eq!(r.kernels.len(), 30);
+        assert_eq!(r.batches.iter().map(|b| b.n).sum::<usize>(), 30);
+        assert!(r.batches.iter().all(|b| b.n >= 1));
+        let ids: Vec<u64> = r.kernels.iter().map(|k| k.id).collect();
+        assert_eq!(ids, (0..30).collect::<Vec<_>>());
+        for k in &r.kernels {
+            assert!(k.device < 3, "{k:?}");
+            assert!(k.arrival_ms <= k.route_ms, "{k:?}");
+            assert!(k.route_ms <= k.close_ms, "{k:?}");
+            assert!(k.close_ms <= k.start_ms, "{k:?}");
+            assert!(k.start_ms <= k.finish_ms, "{k:?}");
+        }
+        // Each device is serial: its batches never overlap.
+        for d in 0..3 {
+            let mine: Vec<&FleetBatchRecord> =
+                r.batches.iter().filter(|b| b.device == d).collect();
+            for w in mine.windows(2) {
+                assert!(w[1].start_ms >= w[0].start_ms + w[0].makespan_ms - 1e-9);
+            }
+        }
+        assert_eq!(r.n_unsimulable, 0);
+        assert_eq!(r.device_busy_ms.len(), 3);
+    }
+
+    #[test]
+    fn jsq_uses_every_device_under_load() {
+        let fleet = FleetSpec::homogeneous(3);
+        let r = run(&fleet, "jsq", "uniform", 48, 2000.0);
+        let counts = r.device_kernel_counts();
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn single_device_fleet_matches_the_online_engine() {
+        // D=1 routing is a no-op, so the fleet engine must reproduce
+        // simulate_online's timestamps bit-for-bit — same events, same
+        // tie-breaks.
+        let gpu = GpuSpec::gtx580();
+        let trace = Trace::poisson("skewed", 24, 300.0, 11);
+        let fleet = FleetSpec::homogeneous(1);
+        let reorderer = OnlineReorderer::search("local:3", 200).unwrap();
+        let f = simulate_fleet(
+            &fleet,
+            Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap()),
+            parse_route_policy("roundrobin").unwrap(),
+            &|| parse_window_policy("linger:6:25").unwrap(),
+            &reorderer,
+            sim().as_ref(),
+            &OnlineOpts::default(),
+        );
+        let o = crate::online::simulate_online(
+            &gpu,
+            Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap()),
+            parse_window_policy("linger:6:25").unwrap(),
+            &reorderer,
+            sim().as_ref(),
+            &OnlineOpts::default(),
+        );
+        assert_eq!(f.kernels.len(), o.kernels.len());
+        for (fk, ok) in f.kernels.iter().zip(&o.kernels) {
+            assert_eq!(fk.id, ok.id);
+            assert_eq!(fk.finish_ms.to_bits(), ok.finish_ms.to_bits(), "{fk:?} vs {ok:?}");
+            assert_eq!(fk.start_ms.to_bits(), ok.start_ms.to_bits());
+        }
+        assert_eq!(f.span_ms.to_bits(), o.span_ms.to_bits());
+    }
+
+    #[test]
+    fn lrw_pricing_runs_and_serves_everything() {
+        let fleet = FleetSpec::parse("1,0.5").unwrap();
+        let r = run(&fleet, "lrw", "skewed", 32, 800.0);
+        assert_eq!(r.kernels.len(), 32);
+        assert!(r.kernels.iter().all(|k| k.device < 2));
+    }
+
+    #[test]
+    fn out_of_range_route_is_clamped() {
+        struct Wild;
+        impl RoutePolicy for Wild {
+            fn name(&self) -> String {
+                "wild".into()
+            }
+            fn route(&mut self, _k: &KernelProfile, _f: &FleetView<'_>) -> usize {
+                usize::MAX
+            }
+        }
+        let gpu = GpuSpec::gtx580();
+        let trace = Trace::poisson("uniform", 8, 200.0, 3);
+        let r = simulate_fleet(
+            &FleetSpec::homogeneous(2),
+            Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap()),
+            Box::new(Wild),
+            &|| parse_window_policy("fixed:4").unwrap(),
+            &OnlineReorderer::fifo(),
+            sim().as_ref(),
+            &OnlineOpts::default(),
+        );
+        assert_eq!(r.kernels.len(), 8);
+        assert!(r.kernels.iter().all(|k| k.device == 1));
+    }
+}

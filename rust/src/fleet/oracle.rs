@@ -1,0 +1,98 @@
+//! Clairvoyant fleet lower bound: how fast could *any* router and *any*
+//! launch order have finished the whole pool, ignoring arrival times?
+//!
+//! Three admissible bounds under the fluid model, combined by max:
+//!
+//! * **bottleneck kernel** — some kernel must run somewhere, so the pool
+//!   cannot finish before the largest per-kernel bound on its *best*
+//!   device;
+//! * **aggregate compute** — total work over the fleet's summed compute
+//!   roofline;
+//! * **aggregate bandwidth** — total memory traffic over the fleet's
+//!   summed bandwidth.
+//!
+//! No schedule — clairvoyant, preemptive, perfectly balanced — beats
+//! this, so `fleet span / bound` reads as the price of the arrival
+//! process, the routing policy and the windowing combined. The bound is
+//! intentionally machine-independent (no search, no backend): it prices
+//! devices exactly the way [`crate::gpu::GpuSpec::makespan_lower_bound`]
+//! prices one device. One caveat: it prices the *nominal* profiles, so
+//! a backend with per-block jitter `j` (the simulator's default is 0.1)
+//! can undercut it by at most a factor `1 - j` — compare with that
+//! slack, or run against `GpuSpec::deterministic()` devices.
+
+use super::spec::FleetSpec;
+use crate::gpu::KernelProfile;
+
+/// Lower bound (virtual ms) on serving `kernels` on `fleet` with every
+/// kernel available at t = 0. Returns 0 for an empty pool or fleet.
+pub fn fleet_lower_bound(fleet: &FleetSpec, kernels: &[KernelProfile]) -> f64 {
+    if kernels.is_empty() || fleet.devices.is_empty() {
+        return 0.0;
+    }
+    let bottleneck = kernels
+        .iter()
+        .map(|k| {
+            fleet
+                .devices
+                .iter()
+                .map(|g| g.makespan_lower_bound(k.total_work(), k.total_mem()))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .fold(0.0, f64::max);
+    let total_work: f64 = kernels.iter().map(|k| k.total_work()).sum();
+    let total_mem: f64 = kernels.iter().map(|k| k.total_mem()).sum();
+    let peak: f64 = fleet.devices.iter().map(|g| g.peak_compute()).sum();
+    let bandwidth: f64 = fleet.devices.iter().map(|g| g.memory_bandwidth()).sum();
+    let compute_bound = if peak > 0.0 { total_work / peak } else { 0.0 };
+    let memory_bound = if bandwidth > 0.0 { total_mem / bandwidth } else { 0.0 };
+    bottleneck.max(compute_bound).max(memory_bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+    use crate::workloads::scenario_by_id;
+
+    #[test]
+    fn bound_is_positive_and_tightens_with_more_devices() {
+        let gpu = GpuSpec::gtx580();
+        let pool = scenario_by_id("mixed").unwrap().workload(&gpu, 24, 5);
+        let one = fleet_lower_bound(&FleetSpec::homogeneous(1), &pool);
+        let four = fleet_lower_bound(&FleetSpec::homogeneous(4), &pool);
+        assert!(one > 0.0);
+        assert!(four > 0.0);
+        // More devices can only lower (or bottleneck-pin) the bound.
+        assert!(four <= one + 1e-12, "four {four} !<= one {one}");
+    }
+
+    #[test]
+    fn single_device_bound_matches_gpu_spec_bound() {
+        let gpu = GpuSpec::gtx580();
+        let pool = scenario_by_id("uniform").unwrap().workload(&gpu, 8, 3);
+        let total_work: f64 = pool.iter().map(|k| k.total_work()).sum();
+        let total_mem: f64 = pool.iter().map(|k| k.total_mem()).sum();
+        let direct = gpu.makespan_lower_bound(total_work, total_mem);
+        let viafleet = fleet_lower_bound(&FleetSpec::homogeneous(1), &pool);
+        // On one device the aggregate bounds coincide with the GpuSpec
+        // bound; the bottleneck-kernel term can only raise it.
+        assert!(viafleet >= direct - 1e-12, "{viafleet} < {direct}");
+    }
+
+    #[test]
+    fn slow_devices_weaken_the_bound_less_than_removing_them() {
+        let gpu = GpuSpec::gtx580();
+        let pool = scenario_by_id("skewed").unwrap().workload(&gpu, 16, 7);
+        let fast_pair = fleet_lower_bound(&FleetSpec::parse("1,1").unwrap(), &pool);
+        let lopsided = fleet_lower_bound(&FleetSpec::parse("1,0.25").unwrap(), &pool);
+        let solo = fleet_lower_bound(&FleetSpec::homogeneous(1), &pool);
+        assert!(fast_pair <= lopsided + 1e-12);
+        assert!(lopsided <= solo + 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_bound_to_zero() {
+        assert_eq!(fleet_lower_bound(&FleetSpec::homogeneous(2), &[]), 0.0);
+    }
+}

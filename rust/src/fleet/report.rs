@@ -1,0 +1,286 @@
+//! What a fleet run produced: per-kernel timestamps with device
+//! provenance, per-device rollups (utilization, imbalance) and
+//! fleet-wide latency distributions, reusing the single-device
+//! [`LatencyStats`] machinery.
+
+use crate::metrics::mean;
+use crate::online::report::LatencyStats;
+
+/// One kernel's complete fleet timeline: arrive → route → window close
+/// → batch start → finish, all in virtual ms, plus where it ran.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetKernelRecord {
+    pub id: u64,
+    /// Device the router placed this kernel on.
+    pub device: usize,
+    pub arrival_ms: f64,
+    /// When the routing decision placed it (>= arrival; equal unless the
+    /// router was backlogged at the same instant).
+    pub route_ms: f64,
+    pub close_ms: f64,
+    pub start_ms: f64,
+    pub finish_ms: f64,
+    /// Fleet-wide batch id (close order across all devices).
+    pub batch: u64,
+    /// Launch position within its batch after reordering.
+    pub position: usize,
+}
+
+/// One closed window's service record on its device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetBatchRecord {
+    pub id: u64,
+    pub device: usize,
+    pub n: usize,
+    pub close_ms: f64,
+    pub ready_ms: f64,
+    pub start_ms: f64,
+    pub makespan_ms: f64,
+    pub evals: u64,
+    pub order: Vec<usize>,
+}
+
+/// Everything [`crate::fleet::simulate_fleet`] measured, kernels sorted
+/// by id.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub source: String,
+    pub route: String,
+    pub window: String,
+    pub reorderer: String,
+    pub backend: String,
+    pub kernels: Vec<FleetKernelRecord>,
+    pub batches: Vec<FleetBatchRecord>,
+    /// Latest finish time across the fleet (0 for an empty run).
+    pub span_ms: f64,
+    /// Total busy (executing) time per device, indexed by device id.
+    pub device_busy_ms: Vec<f64>,
+    pub decision_evals: u64,
+    pub n_unsimulable: usize,
+}
+
+impl FleetReport {
+    /// Number of devices in the fleet.
+    pub fn n_devices(&self) -> usize {
+        self.device_busy_ms.len()
+    }
+
+    /// Per-kernel sojourn (arrival → finish), in kernel-id order.
+    pub fn sojourns_ms(&self) -> Vec<f64> {
+        self.kernels.iter().map(|k| k.finish_ms - k.arrival_ms).collect()
+    }
+
+    /// Per-kernel queueing delay (arrival → batch start).
+    pub fn queue_waits_ms(&self) -> Vec<f64> {
+        self.kernels.iter().map(|k| k.start_ms - k.arrival_ms).collect()
+    }
+
+    /// Per-kernel service time (batch start → finish).
+    pub fn services_ms(&self) -> Vec<f64> {
+        self.kernels.iter().map(|k| k.finish_ms - k.start_ms).collect()
+    }
+
+    /// Fleet-wide sojourn distribution.
+    pub fn sojourn_stats(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.sojourns_ms())
+    }
+
+    /// Fleet-wide queueing-delay distribution.
+    pub fn queue_stats(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.queue_waits_ms())
+    }
+
+    /// Sojourn distribution of the kernels served by one device.
+    pub fn device_sojourn_stats(&self, device: usize) -> LatencyStats {
+        let samples: Vec<f64> = self
+            .kernels
+            .iter()
+            .filter(|k| k.device == device)
+            .map(|k| k.finish_ms - k.arrival_ms)
+            .collect();
+        LatencyStats::from_samples(&samples)
+    }
+
+    /// Kernels served per device, indexed by device id.
+    pub fn device_kernel_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_devices()];
+        for k in &self.kernels {
+            if k.device < counts.len() {
+                counts[k.device] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Busy fraction per device over the fleet span.
+    pub fn utilizations(&self) -> Vec<f64> {
+        self.device_busy_ms
+            .iter()
+            .map(|&busy| {
+                if self.span_ms > 0.0 {
+                    (busy / self.span_ms).min(1.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Load imbalance: the busiest device's busy time over the fleet
+    /// mean (1.0 = perfectly balanced; an idle fleet reports 1.0).
+    pub fn imbalance(&self) -> f64 {
+        if self.device_busy_ms.is_empty() {
+            return 1.0;
+        }
+        let max = self.device_busy_ms.iter().copied().fold(0.0, f64::max);
+        let mean_busy = mean(&self.device_busy_ms);
+        if mean_busy > 0.0 {
+            max / mean_busy
+        } else {
+            1.0
+        }
+    }
+
+    /// Served kernels per (virtual) second of fleet span.
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.span_ms > 0.0 {
+            self.kernels.len() as f64 / (self.span_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean kernels per closed window across the fleet.
+    pub fn mean_window(&self) -> f64 {
+        if self.batches.is_empty() {
+            return 0.0;
+        }
+        self.kernels.len() as f64 / self.batches.len() as f64
+    }
+
+    /// Multi-line human-readable rollup.
+    pub fn summary(&self) -> String {
+        let utils = self
+            .utilizations()
+            .iter()
+            .map(|u| format!("{u:.2}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "fleet    : {} devices, route {}, window {}, reorder {}, backend {}\n\
+             source   : {}\n\
+             sojourn  : {}\n\
+             queue    : {}\n\
+             span     : {:.3} ms, throughput {:.1} kernels/s, mean window {:.2}\n\
+             devices  : util [{}], imbalance {:.3}, kernels {:?}\n\
+             decisions: {} evals, {} unsimulable",
+            self.n_devices(),
+            self.route,
+            self.window,
+            self.reorderer,
+            self.backend,
+            self.source,
+            self.sojourn_stats().line(),
+            self.queue_stats().line(),
+            self.span_ms,
+            self.throughput_per_s(),
+            self.mean_window(),
+            utils,
+            self.imbalance(),
+            self.device_kernel_counts(),
+            self.decision_evals,
+            self.n_unsimulable,
+        )
+    }
+}
+
+/// Fleet p99-sojourn speedup of `candidate` over `baseline` (the
+/// routed-vs-roundrobin headline number; > 1 means `candidate` is
+/// better, 0 when either report is degenerate).
+pub fn p99_speedup(baseline: &FleetReport, candidate: &FleetReport) -> f64 {
+    let b = baseline.sojourn_stats().p99_ms;
+    let c = candidate.sojourn_stats().p99_ms;
+    if b > 0.0 && c > 0.0 {
+        b / c
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel(id: u64, device: usize, arrival: f64, finish: f64) -> FleetKernelRecord {
+        FleetKernelRecord {
+            id,
+            device,
+            arrival_ms: arrival,
+            route_ms: arrival,
+            close_ms: arrival,
+            start_ms: arrival,
+            finish_ms: finish,
+            batch: id,
+            position: 0,
+        }
+    }
+
+    fn report(kernels: Vec<FleetKernelRecord>, busy: Vec<f64>, span: f64) -> FleetReport {
+        FleetReport {
+            source: "test".into(),
+            route: "jsq".into(),
+            window: "fixed:1".into(),
+            reorderer: "fifo".into(),
+            backend: "sim".into(),
+            kernels,
+            batches: Vec::new(),
+            span_ms: span,
+            device_busy_ms: busy,
+            decision_evals: 0,
+            n_unsimulable: 0,
+        }
+    }
+
+    #[test]
+    fn rollups_split_by_device() {
+        let r = report(
+            vec![
+                kernel(0, 0, 0.0, 10.0),
+                kernel(1, 1, 0.0, 20.0),
+                kernel(2, 0, 5.0, 15.0),
+            ],
+            vec![20.0, 20.0],
+            20.0,
+        );
+        assert_eq!(r.device_kernel_counts(), vec![2, 1]);
+        assert_eq!(r.device_sojourn_stats(0).n, 2);
+        assert_eq!(r.device_sojourn_stats(1).n, 1);
+        assert_eq!(r.sojourn_stats().n, 3);
+        assert_eq!(r.utilizations(), vec![1.0, 1.0]);
+        assert!((r.imbalance() - 1.0).abs() < 1e-12);
+        let s = r.summary();
+        assert!(s.contains("2 devices"), "{s}");
+        assert!(s.contains("route jsq"), "{s}");
+    }
+
+    #[test]
+    fn imbalance_reads_skew() {
+        let r = report(vec![kernel(0, 0, 0.0, 30.0)], vec![30.0, 0.0, 0.0], 30.0);
+        // One device does all the work of three: max/mean = 3.
+        assert!((r.imbalance() - 3.0).abs() < 1e-12);
+        let idle = report(Vec::new(), vec![0.0, 0.0], 0.0);
+        assert_eq!(idle.imbalance(), 1.0);
+        assert_eq!(idle.throughput_per_s(), 0.0);
+        assert_eq!(idle.utilizations(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn p99_speedup_compares_reports() {
+        let slow = report(vec![kernel(0, 0, 0.0, 40.0), kernel(1, 0, 0.0, 40.0)], vec![40.0], 40.0);
+        let fast = report(vec![kernel(0, 0, 0.0, 10.0), kernel(1, 0, 0.0, 10.0)], vec![10.0], 10.0);
+        assert!((p99_speedup(&slow, &fast) - 4.0).abs() < 1e-12);
+        assert!((p99_speedup(&fast, &slow) - 0.25).abs() < 1e-12);
+        let empty = report(Vec::new(), vec![0.0], 0.0);
+        assert_eq!(p99_speedup(&empty, &fast), 0.0);
+    }
+}

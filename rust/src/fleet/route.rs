@@ -1,0 +1,498 @@
+//! [`RoutePolicy`] — *which device* an arriving kernel goes to.
+//!
+//! A fleet run has two online decisions per kernel: the route (here) and
+//! the order within its device's reorder window
+//! ([`crate::online::OnlineReorderer`]). The policies in this registry
+//! cover the classic load-balancing spectrum plus two that exploit what
+//! this crate already knows about kernels:
+//!
+//! | spelling | behavior |
+//! |---|---|
+//! | `roundrobin` | blind rotation (the baseline every bench gate compares against) |
+//! | `jsq` | join-shortest-queue by outstanding kernel count |
+//! | `lrw` | least residual work: queue *time*, priced via the backend's admissible [`crate::exec::PreparedWorkload::suffix_lower_bound`] over each device's backlog |
+//! | `p2c:<seed>` | power-of-two-choices: sample two devices, join the shorter queue |
+//! | `affinity` | class affinity: kernels that are model-identical (the predicate behind [`crate::gpu::equivalence_classes`]) co-locate so symmetry collapse keeps paying in the per-device search |
+//!
+//! `jsq` counts kernels; on a heterogeneous fleet (or heavy-tailed kernel
+//! work) queue *length* mispredicts queue *work*, which is where `lrw`'s
+//! pricing earns its extra cost. Like the window policies, every route
+//! policy must be a **deterministic** function of the state it is shown
+//! (plus, for `p2c`, its own seeded PRNG stream) — the fleet engine's
+//! bit-identical-replay guarantee (`tests/fleet_determinism.rs`) rests
+//! on it.
+
+use crate::gpu::KernelProfile;
+use crate::util::SplitMix64;
+use std::fmt;
+
+/// Snapshot of one device at a routing instant.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceLoad {
+    /// Device index in the fleet.
+    pub device: usize,
+    /// Kernels routed to this device and not yet completed (open window
+    /// + queued batches + executing batch).
+    pub outstanding: usize,
+    /// Kernels in the device's open reorder window.
+    pub n_pending: usize,
+    /// Windows closed but not yet started on the device.
+    pub queued_batches: usize,
+    /// Earliest time the device frees (`<= now_ms` means idle). The
+    /// thread coordinator cannot predict this and passes `now_ms` for an
+    /// idle device, `+inf` for a busy one.
+    pub free_at_ms: f64,
+    /// Device compute roofline (work units per ms) — how heterogeneous
+    /// fleets expose their speed differences to the policies.
+    pub peak_compute: f64,
+    /// Admissible lower bound (ms) on the device's residual work:
+    /// executing-batch remainder plus a
+    /// [`crate::exec::PreparedWorkload::suffix_lower_bound`] over the
+    /// backlog. `NaN` when the caller did not price it (only policies
+    /// with [`RoutePolicy::needs_pricing`] get finite values; `lrw`
+    /// falls back to `outstanding` on `NaN`).
+    pub backlog_lb_ms: f64,
+}
+
+/// Everything a [`RoutePolicy`] sees when it places one kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetView<'a> {
+    /// Current virtual time (or clock-derived time in the coordinator).
+    pub now_ms: f64,
+    /// One entry per device, indexed by device id.
+    pub devices: &'a [DeviceLoad],
+}
+
+/// Decides which device an arriving kernel joins.
+///
+/// Contract: `route` returns a device index (the engine clamps it into
+/// range defensively); equal-score ties must break toward the lowest
+/// index so runs replay bit-identically.
+pub trait RoutePolicy: Send {
+    /// Registry spelling of this policy instance (e.g. `"p2c:7"`).
+    fn name(&self) -> String;
+
+    /// Whether [`DeviceLoad::backlog_lb_ms`] must be priced before
+    /// `route` is called. Pricing costs a backend `prepare` per device
+    /// per decision, so only `lrw` asks for it.
+    fn needs_pricing(&self) -> bool {
+        false
+    }
+
+    /// Pick the device for `kernel` given the fleet snapshot.
+    fn route(&mut self, kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize;
+}
+
+/// First device minimizing `score` (strict `<`, so ties break toward
+/// the lowest index — the determinism contract).
+fn argmin_by(devices: &[DeviceLoad], score: impl Fn(&DeviceLoad) -> f64) -> usize {
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    for d in devices {
+        let s = score(d);
+        if s < best_score {
+            best_score = s;
+            best = d.device;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Implementations
+// ---------------------------------------------------------------------------
+
+/// `roundrobin` — blind rotation, load- and kernel-oblivious. The
+/// baseline the fleet bench gates every other policy against, and the
+/// coordinator's historical dispatch rule.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        RoundRobin::default()
+    }
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> String {
+        "roundrobin".to_string()
+    }
+
+    fn route(&mut self, _kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
+        let d = self.next % fleet.devices.len().max(1);
+        self.next = self.next.wrapping_add(1);
+        d
+    }
+}
+
+/// `jsq` — join the device with the fewest outstanding kernels. Optimal
+/// among length-based rules on homogeneous fleets; blind to device speed
+/// and kernel size.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Jsq;
+
+impl Jsq {
+    pub fn new() -> Self {
+        Jsq
+    }
+}
+
+impl RoutePolicy for Jsq {
+    fn name(&self) -> String {
+        "jsq".to_string()
+    }
+
+    fn route(&mut self, _kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
+        argmin_by(fleet.devices, |d| d.outstanding as f64)
+    }
+}
+
+/// `lrw` — least residual work. Scores each device by its priced
+/// backlog lower bound plus the arriving kernel's own compute-roofline
+/// time on that device, so a slow or work-laden device loses to a fast
+/// or empty one even at equal queue length. Falls back to `jsq` scoring
+/// where the caller cannot price backlogs (`backlog_lb_ms` NaN — the
+/// live coordinator path).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Lrw;
+
+impl Lrw {
+    pub fn new() -> Self {
+        Lrw
+    }
+}
+
+impl RoutePolicy for Lrw {
+    fn name(&self) -> String {
+        "lrw".to_string()
+    }
+
+    fn needs_pricing(&self) -> bool {
+        true
+    }
+
+    fn route(&mut self, kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
+        argmin_by(fleet.devices, |d| {
+            if d.backlog_lb_ms.is_finite() {
+                let own = if d.peak_compute > 0.0 {
+                    kernel.total_work() / d.peak_compute
+                } else {
+                    0.0
+                };
+                d.backlog_lb_ms + own
+            } else {
+                d.outstanding as f64
+            }
+        })
+    }
+}
+
+/// `p2c:<seed>` — power-of-two-choices: sample two distinct devices from
+/// a seeded PRNG stream, join the one with fewer outstanding kernels.
+/// Near-jsq balance at O(1) state inspection; deterministic per seed.
+#[derive(Debug, Clone)]
+pub struct P2c {
+    seed: u64,
+    rng: SplitMix64,
+}
+
+/// Domain-separation constant for the `p2c` PRNG stream (the arrival
+/// constants live in `online::arrivals`).
+const P2C_SEED_XOR: u64 = 0xF1EE_7007;
+
+impl P2c {
+    pub fn new(seed: u64) -> Self {
+        P2c {
+            seed,
+            rng: SplitMix64::new(seed ^ P2C_SEED_XOR),
+        }
+    }
+}
+
+impl RoutePolicy for P2c {
+    fn name(&self) -> String {
+        format!("p2c:{}", self.seed)
+    }
+
+    fn route(&mut self, _kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
+        let n = fleet.devices.len();
+        if n <= 1 {
+            return 0;
+        }
+        let a = (self.rng.next_u64() % n as u64) as usize;
+        let mut b = (self.rng.next_u64() % (n as u64 - 1)) as usize;
+        if b >= a {
+            b += 1; // distinct second sample
+        }
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        // `<=` keeps the lower index on ties (determinism contract).
+        if fleet.devices[lo].outstanding <= fleet.devices[hi].outstanding {
+            lo
+        } else {
+            hi
+        }
+    }
+}
+
+/// Outstanding-kernel slack beyond the fleet minimum that makes
+/// [`Affinity`] re-home a class instead of keeping it co-located: small
+/// enough that a hot class cannot wedge one device, large enough that a
+/// class is not ping-ponged by ordinary queue noise.
+const REBALANCE_SLACK: usize = 8;
+
+/// `affinity` — class affinity. Model-identical kernels (the same
+/// predicate [`crate::gpu::equivalence_classes`] collapses on) are
+/// routed to the same home device, so per-device reorder windows fill
+/// with repeated kernels and the search layer's identical-kernel
+/// symmetry collapse keeps paying. New classes are homed on the
+/// least-loaded device; a home that falls more than [`REBALANCE_SLACK`]
+/// outstanding kernels behind the fleet minimum is re-homed so affinity
+/// never beats load balance by more than a bounded margin.
+#[derive(Debug, Clone, Default)]
+pub struct Affinity {
+    /// One `(representative, home device)` entry per class seen.
+    classes: Vec<(KernelProfile, usize)>,
+}
+
+impl Affinity {
+    pub fn new() -> Self {
+        Affinity::default()
+    }
+}
+
+impl RoutePolicy for Affinity {
+    fn name(&self) -> String {
+        "affinity".to_string()
+    }
+
+    fn route(&mut self, kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
+        let n = fleet.devices.len().max(1);
+        let min_out = fleet.devices.iter().map(|d| d.outstanding).min().unwrap_or(0);
+        if let Some(slot) = self
+            .classes
+            .iter_mut()
+            .find(|(rep, _)| rep.model_identical(kernel))
+        {
+            let home = slot.1.min(n - 1);
+            if fleet.devices[home].outstanding > min_out + REBALANCE_SLACK {
+                slot.1 = argmin_by(fleet.devices, |d| d.outstanding as f64);
+                return slot.1;
+            }
+            slot.1 = home;
+            return home;
+        }
+        let home = argmin_by(fleet.devices, |d| d.outstanding as f64);
+        self.classes.push((kernel.clone(), home));
+        home
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Error for unknown route-policy spellings; `Display` lists the valid
+/// forms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RouteParseError {
+    pub input: String,
+}
+
+impl fmt::Display for RouteParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown route policy `{}` — valid policies: roundrobin, jsq, lrw, p2c:<seed>, \
+             affinity",
+            self.input
+        )
+    }
+}
+
+impl std::error::Error for RouteParseError {}
+
+/// Parse a route-policy spelling (`"roundrobin"`, `"jsq"`, `"lrw"`,
+/// `"p2c:7"`, `"affinity"`; `"rr"` is accepted as an alias) into a
+/// trait object.
+///
+/// ```
+/// let p = kreorder::fleet::parse_route_policy("p2c:7").unwrap();
+/// assert_eq!(p.name(), "p2c:7");
+/// assert!(kreorder::fleet::parse_route_policy("nope").is_err());
+/// ```
+pub fn parse_route_policy(s: &str) -> Result<Box<dyn RoutePolicy>, RouteParseError> {
+    let lower = s.to_ascii_lowercase();
+    let err = || RouteParseError { input: s.into() };
+    let mut parts = lower.split(':');
+    let head = parts.next().unwrap_or("");
+    let policy: Box<dyn RoutePolicy> = match head {
+        "roundrobin" | "rr" => Box::new(RoundRobin::new()),
+        "jsq" => Box::new(Jsq::new()),
+        "lrw" => Box::new(Lrw::new()),
+        "p2c" => {
+            let seed = parts
+                .next()
+                .ok_or_else(err)?
+                .parse::<u64>()
+                .map_err(|_| err())?;
+            Box::new(P2c::new(seed))
+        }
+        "affinity" => Box::new(Affinity::new()),
+        _ => return Err(err()),
+    };
+    if parts.next().is_some() {
+        return Err(err());
+    }
+    Ok(policy)
+}
+
+/// Human-readable table of the route-policy spellings (one per line).
+pub fn route_policy_help_table() -> String {
+    let rows = [
+        ("roundrobin", "blind rotation across devices (the gate baseline)"),
+        ("jsq", "join-shortest-queue by outstanding kernel count"),
+        (
+            "lrw",
+            "least residual work, priced by the backend's admissible suffix lower bound",
+        ),
+        ("p2c:<seed>", "power-of-two-choices: sample two devices, join the shorter"),
+        (
+            "affinity",
+            "co-locate model-identical kernels so symmetry collapse keeps paying",
+        ),
+    ];
+    let mut out = String::new();
+    for (name, desc) in rows {
+        out.push_str(&format!("  {name:<20} {desc}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+    use crate::workloads::synthetic_workload;
+
+    fn load(device: usize, outstanding: usize, backlog: f64) -> DeviceLoad {
+        DeviceLoad {
+            device,
+            outstanding,
+            n_pending: 0,
+            queued_batches: 0,
+            free_at_ms: 0.0,
+            peak_compute: GpuSpec::gtx580().peak_compute(),
+            backlog_lb_ms: backlog,
+        }
+    }
+
+    fn kernel() -> KernelProfile {
+        synthetic_workload(&GpuSpec::gtx580(), 1, 5)[0].clone()
+    }
+
+    #[test]
+    fn roundrobin_rotates_regardless_of_load() {
+        let loads = [load(0, 9, f64::NAN), load(1, 0, f64::NAN), load(2, 5, f64::NAN)];
+        let view = FleetView { now_ms: 0.0, devices: &loads };
+        let mut p = RoundRobin::new();
+        let k = kernel();
+        let picks: Vec<usize> = (0..6).map(|_| p.route(&k, &view)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_joins_shortest_with_lowest_index_ties() {
+        let loads = [load(0, 3, f64::NAN), load(1, 1, f64::NAN), load(2, 1, f64::NAN)];
+        let view = FleetView { now_ms: 0.0, devices: &loads };
+        assert_eq!(Jsq::new().route(&kernel(), &view), 1);
+    }
+
+    #[test]
+    fn lrw_prefers_less_residual_work_over_shorter_queue() {
+        // Device 1 has fewer kernels but a much larger priced backlog
+        // (heavy kernels): lrw must disagree with jsq here.
+        let loads = [load(0, 4, 10.0), load(1, 1, 500.0)];
+        let view = FleetView { now_ms: 0.0, devices: &loads };
+        assert_eq!(Jsq::new().route(&kernel(), &view), 1);
+        assert_eq!(Lrw::new().route(&kernel(), &view), 0);
+        assert!(Lrw::new().needs_pricing());
+    }
+
+    #[test]
+    fn lrw_falls_back_to_queue_length_without_pricing() {
+        let loads = [load(0, 4, f64::NAN), load(1, 1, f64::NAN)];
+        let view = FleetView { now_ms: 0.0, devices: &loads };
+        assert_eq!(Lrw::new().route(&kernel(), &view), 1);
+    }
+
+    #[test]
+    fn p2c_is_deterministic_per_seed_and_avoids_the_longer_queue() {
+        let loads = [load(0, 0, f64::NAN), load(1, 100, f64::NAN), load(2, 0, f64::NAN)];
+        let view = FleetView { now_ms: 0.0, devices: &loads };
+        let k = kernel();
+        let picks = |seed| {
+            let mut p = P2c::new(seed);
+            (0..32).map(|_| p.route(&k, &view)).collect::<Vec<_>>()
+        };
+        assert_eq!(picks(7), picks(7), "same seed must replay identically");
+        assert_ne!(picks(7), picks(8), "different seeds should diverge");
+        // Device 1 is only ever chosen when both samples land on it —
+        // impossible since the two samples are distinct.
+        assert!(picks(7).iter().all(|&d| d != 1));
+    }
+
+    #[test]
+    fn affinity_colocates_identical_kernels_until_rebalance() {
+        let gpu = GpuSpec::gtx580();
+        let pool = synthetic_workload(&gpu, 2, 5);
+        let mut p = Affinity::new();
+        let balanced = [load(0, 2, f64::NAN), load(1, 0, f64::NAN)];
+        let view = FleetView { now_ms: 0.0, devices: &balanced };
+        // First sighting homes the class on the least-loaded device and
+        // repeats stick to it.
+        let home = p.route(&pool[0], &view);
+        assert_eq!(home, 1);
+        assert_eq!(p.route(&pool[0].clone(), &view), home);
+        // A different class gets its own (possibly equal) home decision.
+        assert!(!pool[0].model_identical(&pool[1]));
+        let _ = p.route(&pool[1], &view);
+        // Overloading the home past the slack re-homes the class.
+        let skewed = [load(0, 0, f64::NAN), load(1, 100, f64::NAN)];
+        let view = FleetView { now_ms: 0.0, devices: &skewed };
+        assert_eq!(p.route(&pool[0], &view), 0);
+    }
+
+    #[test]
+    fn spellings_parse_and_round_trip() {
+        for s in ["roundrobin", "jsq", "lrw", "p2c:7", "affinity", "JSQ"] {
+            let p = parse_route_policy(s).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(p.name(), s.to_ascii_lowercase());
+            assert!(parse_route_policy(&p.name()).is_ok());
+        }
+        // The alias parses to the canonical spelling.
+        assert_eq!(parse_route_policy("rr").unwrap().name(), "roundrobin");
+    }
+
+    #[test]
+    fn bad_spellings_error_and_list_names() {
+        for s in ["nope", "p2c", "p2c:x", "p2c:1:2", "jsq:1", "lrw:0", "affinity:a"] {
+            let err = parse_route_policy(s).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(s), "{msg}");
+            for name in ["roundrobin", "jsq", "lrw", "p2c:<seed>", "affinity"] {
+                assert!(msg.contains(name), "missing {name} in: {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn help_table_covers_registry() {
+        let t = route_policy_help_table();
+        for name in ["roundrobin", "jsq", "lrw", "p2c:<seed>", "affinity"] {
+            assert!(t.contains(name));
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! [`FleetSpec`] — how many devices, and how fast each one is.
+//!
+//! A fleet is a list of per-device [`GpuSpec`]s. Heterogeneity is
+//! modeled as a per-device *speed factor* scaling the compute roofline
+//! (`compute_rate_per_sm`; memory bandwidth scales with it through
+//! `balanced_ratio`), so a `0.5` device is uniformly half as fast and
+//! every kernel that fits the baseline device fits every device. The
+//! CLI spelling (`--devices`) is either a bare device count
+//! (homogeneous) or a comma list of speed terms:
+//!
+//! | spelling | fleet |
+//! |---|---|
+//! | `4` | four baseline (GTX 580) devices |
+//! | `1,1,0.5` | two baseline devices and one half-speed device |
+//! | `2x1,2x0.25` | two baseline and two quarter-speed devices |
+
+use crate::gpu::GpuSpec;
+use crate::online::Trace;
+use std::fmt;
+
+/// A fleet of (possibly heterogeneous) devices, one [`GpuSpec`] each.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Per-device models, indexed by device id.
+    pub devices: Vec<GpuSpec>,
+}
+
+impl FleetSpec {
+    /// `n` identical baseline (GTX 580) devices; `n` clamps to at least 1.
+    pub fn homogeneous(n: usize) -> FleetSpec {
+        FleetSpec {
+            devices: vec![GpuSpec::gtx580(); n.max(1)],
+        }
+    }
+
+    /// One device per speed factor, each a baseline device with its
+    /// compute roofline scaled by the factor. An empty slice yields a
+    /// single baseline device.
+    pub fn heterogeneous(speeds: &[f64]) -> FleetSpec {
+        if speeds.is_empty() {
+            return FleetSpec::homogeneous(1);
+        }
+        let base = GpuSpec::gtx580();
+        FleetSpec {
+            devices: speeds
+                .iter()
+                .map(|&s| GpuSpec {
+                    compute_rate_per_sm: base.compute_rate_per_sm * s,
+                    ..base.clone()
+                })
+                .collect(),
+        }
+    }
+
+    /// Parse a `--devices` spelling; see the module docs for the forms.
+    pub fn parse(s: &str) -> Result<FleetSpec, FleetParseError> {
+        let err = || FleetParseError { input: s.into() };
+        let trimmed = s.trim();
+        if trimmed.is_empty() {
+            return Err(err());
+        }
+        if !trimmed.contains(',') && !trimmed.contains('x') {
+            if let Ok(n) = trimmed.parse::<usize>() {
+                if n == 0 {
+                    return Err(err());
+                }
+                return Ok(FleetSpec::homogeneous(n));
+            }
+            // Not an integer: fall through and read it as one speed term.
+        }
+        let speed = |v: &str| -> Result<f64, FleetParseError> {
+            let f: f64 = v.trim().parse().map_err(|_| err())?;
+            if f.is_finite() && f > 0.0 {
+                Ok(f)
+            } else {
+                Err(err())
+            }
+        };
+        let mut speeds = Vec::new();
+        for term in trimmed.split(',') {
+            match term.split_once('x') {
+                Some((count, v)) => {
+                    let count: usize = count.trim().parse().map_err(|_| err())?;
+                    if count == 0 {
+                        return Err(err());
+                    }
+                    let f = speed(v)?;
+                    speeds.extend(std::iter::repeat(f).take(count));
+                }
+                None => speeds.push(speed(term)?),
+            }
+        }
+        Ok(FleetSpec::heterogeneous(&speeds))
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Whether the fleet has no devices (only constructible by hand —
+    /// the parser and constructors guarantee at least one).
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Canonical spelling: the device count when every device is the
+    /// baseline, otherwise the comma list of speed factors. Exact for
+    /// fleets built by [`FleetSpec::parse`] / [`FleetSpec::homogeneous`]
+    /// / [`FleetSpec::heterogeneous`]; fleets of hand-built [`GpuSpec`]s
+    /// are named by their compute-roofline ratio to the baseline.
+    pub fn name(&self) -> String {
+        let base = GpuSpec::gtx580();
+        if self.devices.iter().all(|d| *d == base) {
+            return self.devices.len().to_string();
+        }
+        self.devices
+            .iter()
+            .map(|d| format!("{}", d.peak_compute() / base.peak_compute()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Check that a recorded trace fits this fleet: a trace recorded on
+    /// `D` devices routes into at least `D` (a smaller fleet would see a
+    /// different overload regime than the one recorded, silently).
+    pub fn validate_trace(&self, trace: &Trace) -> Result<(), FleetMismatchError> {
+        if trace.devices > self.devices.len() {
+            Err(FleetMismatchError {
+                trace_devices: trace.devices,
+                fleet_devices: self.devices.len(),
+            })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Error for unknown fleet spellings; `Display` lists the valid forms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetParseError {
+    pub input: String,
+}
+
+impl fmt::Display for FleetParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invalid fleet spec `{}` — valid forms: a device count (e.g. `4`), or a comma \
+             list of speed factors `<speed>` / `<count>x<speed>` (e.g. `1,1,0.5` or \
+             `2x1,2x0.25`); speeds must be finite and > 0",
+            self.input
+        )
+    }
+}
+
+impl std::error::Error for FleetParseError {}
+
+/// A recorded trace was replayed onto a smaller fleet than it was
+/// recorded for.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetMismatchError {
+    pub trace_devices: usize,
+    pub fleet_devices: usize,
+}
+
+impl fmt::Display for FleetMismatchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "trace was recorded for a {}-device fleet but this fleet has only {} — replay on \
+             at least {} devices (`--devices {}`) or re-record the trace for this fleet",
+            self.trace_devices, self.fleet_devices, self.trace_devices, self.trace_devices
+        )
+    }
+}
+
+impl std::error::Error for FleetMismatchError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_count_is_homogeneous() {
+        let f = FleetSpec::parse("4").unwrap();
+        assert_eq!(f.len(), 4);
+        assert!(f.devices.iter().all(|d| *d == GpuSpec::gtx580()));
+        assert_eq!(f.name(), "4");
+        // Canonical names re-parse to the same fleet.
+        assert_eq!(FleetSpec::parse(&f.name()).unwrap(), f);
+    }
+
+    #[test]
+    fn speed_lists_scale_the_compute_roofline() {
+        let f = FleetSpec::parse("1,1,0.5").unwrap();
+        assert_eq!(f.len(), 3);
+        let base = GpuSpec::gtx580();
+        assert_eq!(f.devices[0], base);
+        assert_eq!(f.devices[2].peak_compute(), base.peak_compute() * 0.5);
+        // Memory bandwidth scales with compute through balanced_ratio.
+        assert_eq!(f.devices[2].memory_bandwidth(), base.memory_bandwidth() * 0.5);
+        assert_eq!(f.name(), "1,1,0.5");
+        assert_eq!(FleetSpec::parse(&f.name()).unwrap(), f);
+    }
+
+    #[test]
+    fn count_x_speed_terms_expand() {
+        let f = FleetSpec::parse("2x1,2x0.25").unwrap();
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.devices[0], f.devices[1]);
+        assert_eq!(f.devices[2], f.devices[3]);
+        let base = GpuSpec::gtx580();
+        assert_eq!(f.devices[3].peak_compute(), base.peak_compute() * 0.25);
+    }
+
+    #[test]
+    fn bad_spellings_error_and_echo_input() {
+        for s in ["", "0", "x", "1,", "1,-2", "1,nan", "0x2", "2x0", "1,inf", "a"] {
+            let err = FleetSpec::parse(s).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(&format!("`{s}`")), "{msg}");
+            assert!(msg.contains("speed factors"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn trace_device_count_is_validated() {
+        let mut trace = Trace::poisson("uniform", 4, 100.0, 1);
+        trace.devices = 4;
+        let small = FleetSpec::homogeneous(2);
+        let err = small.validate_trace(&trace).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("4-device"), "{msg}");
+        assert!(msg.contains("only 2"), "{msg}");
+        assert!(msg.contains("--devices 4"), "{msg}");
+        // An equal or larger fleet replays fine.
+        assert!(FleetSpec::homogeneous(4).validate_trace(&trace).is_ok());
+        assert!(FleetSpec::homogeneous(8).validate_trace(&trace).is_ok());
+    }
+
+    #[test]
+    fn homogeneous_clamps_to_one_device() {
+        assert_eq!(FleetSpec::homogeneous(0).len(), 1);
+        assert_eq!(FleetSpec::heterogeneous(&[]).len(), 1);
+    }
+}

@@ -132,6 +132,31 @@
 //!   clairvoyant [`online::offline_oracle`] pricing what onlineness
 //!   cost.
 //!
+//! ## Fleet: when *which device* competes with *what order*
+//!
+//! The [`fleet`] subsystem scales the online layer out to D (possibly
+//! heterogeneous) devices, each running its own window + reorder loop:
+//!
+//! * a [`fleet::RoutePolicy`] registry (`roundrobin`, `jsq`, `lrw`,
+//!   `p2c:<seed>`, `affinity`) decides which device every arriving
+//!   kernel joins — `lrw` prices each device's backlog with the
+//!   backend's admissible [`exec::PreparedWorkload::suffix_lower_bound`]
+//!   and `affinity` co-locates model-identical kernels so the search
+//!   layer's symmetry collapse keeps paying;
+//! * a [`fleet::FleetSpec`] describes the devices, heterogeneity as
+//!   per-device speed factors (`--devices 1,1,0.5`);
+//! * [`fleet::simulate_fleet`] extends the virtual-clock loop to D
+//!   devices (routing decision < completion < batch start < arrival <
+//!   recheck at equal times) with the same bit-identical-replay
+//!   contract (`tests/fleet_determinism.rs`), and the
+//!   [`fleet::FleetReport`] rolls up per-device utilization/imbalance
+//!   plus fleet-wide sojourn percentiles against the clairvoyant
+//!   [`fleet::fleet_lower_bound`];
+//! * the live thread coordinator routes through the same trait
+//!   ([`coordinator::CoordinatorBuilder::route_policy`]), and
+//!   `benches/fleet_routing.rs` hard-gates routed-vs-`roundrobin` p99
+//!   sojourn into `BENCH_fleet.json`.
+//!
 //! CI enforces the quality contract (`benches/search_quality.rs`,
 //! smoke-run per push): branch-and-bound must bit-match the sweep on
 //! every scenario family at n ≤ 8 on both model backends, each anytime
@@ -155,6 +180,7 @@
 //! | [`perm`] | permutation-space sweeps, checkpointed + streaming (Table 3 / Fig. 1) |
 //! | [`search`] | [`search::SearchStrategy`]: exact branch-and-bound + anytime metaheuristics for n ≫ 12 |
 //! | [`online`] | streaming scheduler: arrival processes, [`online::WindowPolicy`], virtual-clock engine, latency SLOs |
+//! | [`fleet`] | multi-device dispatch: [`fleet::RoutePolicy`] registry, heterogeneous [`fleet::FleetSpec`], fleet-scale virtual-clock engine |
 //! | [`profile`] | artifact profile loading (the "CUDA profiler" stand-in) |
 //! | `runtime` | PJRT execution of AOT-compiled HLO kernels (feature `pjrt`) |
 //! | [`coordinator`] | [`coordinator::CoordinatorBuilder`]: batching + reordering + multi-device dispatch |
@@ -251,6 +277,7 @@
 
 pub mod coordinator;
 pub mod exec;
+pub mod fleet;
 pub mod gpu;
 pub mod metrics;
 pub mod online;

@@ -8,6 +8,7 @@
 //! * `search`  — branch-and-bound / anytime launch-order search (n ≫ 12).
 //! * `sched`   — show every registered policy's order/rounds for a workload.
 //! * `serve`   — run the launch-coordinator service (simulated or real PJRT payloads).
+//! * `fleet`   — multi-device online scheduling: routed arrivals over a GPU fleet.
 //! * `ablate`  — score-component ablation across experiments.
 //! * `policies`— list the launch-policy registry.
 //! * `artifacts` — list AOT artifacts and their measured profiles.
@@ -54,6 +55,7 @@ fn run(args: &[String]) -> Result<()> {
         "search" => cmd_search(rest),
         "sched" => cmd_sched(rest),
         "serve" => cmd_serve(rest),
+        "fleet" => cmd_fleet(rest),
         "ablate" => cmd_ablate(rest),
         "policies" => cmd_policies(rest),
         "artifacts" => cmd_artifacts(rest),
@@ -95,6 +97,15 @@ COMMANDS:
                                        the streaming scheduler (arrivals PROC = e.g.
                                        poisson:<rate>:<seed>; window WP = e.g.
                                        linger:8:50; see `kreorder serve --list-online`)
+  fleet [--devices SPEC] [--route POLICY] [--count N] [--scenario FAMILY]
+        [--arrivals PROC] [--window WP] [--strategy S|fifo] [--budget EVALS]
+        [--decision-cost MS] [--backend B] [--record FILE] [--replay FILE]
+        [--compare-roundrobin] [--oracle]
+                                       multi-device online scheduling: arrivals routed
+                                       over a (possibly heterogeneous) fleet, each
+                                       device its own reorder window (--devices SPEC =
+                                       e.g. 4 or 1,1,0.5; see `kreorder fleet
+                                       --list-routes`)
   ablate [--exp ID] [--backend B]      score-component ablation
   policies                             list the launch-policy registry
   artifacts [--dir DIR]                list AOT artifacts + measured profiles
@@ -104,6 +115,7 @@ POLICIES: fifo reverse random:<seed> algorithm1 algorithm1:strict sjf coschedule
           search[:<strategy>[:<evals>]]   (see `kreorder policies`)
 STRATEGIES & SCENARIOS: `kreorder search --list`
 ARRIVALS & WINDOW POLICIES: `kreorder serve --list-online`
+ROUTE POLICIES & DEVICE SPECS: `kreorder fleet --list-routes`
 BACKENDS: sim (fluid simulator, default), analytic (round model){}",
         if cfg!(feature = "pjrt") {
             ", pjrt (serve only)"
@@ -739,12 +751,201 @@ fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
                     family: family.id.to_string(),
                     n: times.len(),
                     seed: pool_seed,
+                    devices: 1,
                     times_ms: times,
                 }
             }
         };
         std::fs::write(path, recorded.to_csv())?;
         eprintln!("recorded trace -> {path} (replay with --arrivals replay:{path})");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// fleet
+// ---------------------------------------------------------------------------
+
+/// Read a recorded trace and check it fits this fleet (a trace recorded
+/// on D devices must replay on at least D).
+fn load_fleet_trace(
+    path: &str,
+    fleet: &kreorder::fleet::FleetSpec,
+) -> Result<kreorder::online::Trace> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let trace = kreorder::online::Trace::parse(&text).map_err(anyhow::Error::from)?;
+    fleet.validate_trace(&trace).map_err(anyhow::Error::from)?;
+    eprintln!(
+        "replaying {}: family={} n={} seed={} devices={}",
+        path, trace.family, trace.n, trace.seed, trace.devices
+    );
+    Ok(trace)
+}
+
+/// `fleet`: multi-device online scheduling on the virtual clock — a
+/// routing policy fans arrivals out over a (possibly heterogeneous)
+/// fleet, each device running its own reorder window. Deterministic per
+/// (arrival seed, route policy, window policy, strategy seed): two runs
+/// print bit-identical numbers.
+fn cmd_fleet(args: &[String]) -> Result<()> {
+    use kreorder::fleet::{
+        fleet_lower_bound, p99_speedup, parse_route_policy, route_policy_help_table,
+        simulate_fleet, FleetSpec,
+    };
+    use kreorder::online::{
+        parse_window_policy, ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts,
+        OnlineReorderer, ReplaySource, Trace,
+    };
+    use kreorder::workloads::scenario_by_id;
+
+    if flag(args, "--list-routes") {
+        println!("route policies (--route):");
+        print!("{}", route_policy_help_table());
+        println!("\ndevice specs (--devices):");
+        println!("  a device count (`4`), or a comma list of speed factors");
+        println!("  `<speed>` / `<count>x<speed>` (e.g. `1,1,0.5`, `2x1,2x0.25`)");
+        println!("\nwindow policies (--window): see `kreorder serve --list-online`");
+        return Ok(());
+    }
+
+    let gpu = GpuSpec::gtx580();
+    let fleet =
+        FleetSpec::parse(opt(args, "--devices").unwrap_or("2")).map_err(anyhow::Error::from)?;
+    let route_spec = opt(args, "--route").unwrap_or("jsq");
+    let count: usize = opt(args, "--count").map_or(64, |s| s.parse().unwrap_or(64));
+    let family_name = opt(args, "--scenario").unwrap_or("mixed");
+    let window_spec = opt(args, "--window").unwrap_or("linger:8:50");
+    let strategy = opt(args, "--strategy").unwrap_or("local:0");
+    let budget: u64 = opt(args, "--budget").map_or(256, |s| s.parse().unwrap_or(256));
+    let decision_cost: f64 =
+        opt(args, "--decision-cost").map_or(0.0, |s| s.parse().unwrap_or(0.0));
+
+    let family = scenario_by_id(family_name)
+        .with_context(|| format!("unknown scenario family `{family_name}`"))?;
+
+    // Materialize the arrival schedule. `--replay FILE` (or `--arrivals
+    // replay:FILE`) reads a recorded trace back and checks it fits this
+    // fleet; open-loop specs go through a Trace so the realized
+    // schedule can be recorded; the closed loop reacts to completions.
+    let mut closed: Option<(usize, f64, u64)> = None;
+    let trace: Option<Trace> = if let Some(path) = opt(args, "--replay") {
+        Some(load_fleet_trace(path, &fleet)?)
+    } else {
+        let arrivals = opt(args, "--arrivals").unwrap_or("poisson:400:1");
+        let spec = ArrivalSpec::parse(arrivals).map_err(anyhow::Error::from)?;
+        match &spec {
+            ArrivalSpec::Replay { path } => Some(load_fleet_trace(path, &fleet)?),
+            ArrivalSpec::Closed {
+                clients,
+                think_ms,
+                seed,
+            } => {
+                closed = Some((*clients, *think_ms, *seed));
+                None
+            }
+            _ => Some(spec.trace(family.id, count).expect("open-loop spec")),
+        }
+    };
+
+    // Source factory: `--compare-roundrobin` replays the identical
+    // schedule through the baseline router.
+    let make_source = || -> Result<Box<dyn ArrivalSource>> {
+        Ok(match (&trace, closed) {
+            (Some(t), _) => {
+                Box::new(ReplaySource::from_trace(t, &gpu).map_err(anyhow::Error::from)?)
+            }
+            (None, Some((clients, think_ms, seed))) => {
+                Box::new(ClosedLoopSource::new(family, &gpu, count, clients, think_ms, seed))
+            }
+            (None, None) => unreachable!("either a trace or closed-loop params exist"),
+        })
+    };
+
+    // Validate the window spelling once; each device then builds its own
+    // policy instance from it.
+    parse_window_policy(window_spec).map_err(anyhow::Error::from)?;
+    let make_window = || parse_window_policy(window_spec).expect("validated above");
+    let reorderer = if strategy.eq_ignore_ascii_case("fifo") {
+        OnlineReorderer::fifo()
+    } else {
+        OnlineReorderer::search(strategy, budget).map_err(anyhow::Error::from)?
+    };
+    let make_backend = model_backend_factory(args)?;
+    let opts = OnlineOpts {
+        decision_ms_per_eval: decision_cost,
+    };
+
+    println!(
+        "fleet: devices={} route={} window={} reorderer={} backend={} decision-cost={}",
+        fleet.name(),
+        route_spec,
+        window_spec,
+        reorderer.name(),
+        opt(args, "--backend").unwrap_or("sim"),
+        decision_cost
+    );
+    let report = simulate_fleet(
+        &fleet,
+        make_source()?,
+        parse_route_policy(route_spec).map_err(anyhow::Error::from)?,
+        &make_window,
+        &reorderer,
+        make_backend.as_ref(),
+        &opts,
+    );
+    println!("{}", report.summary());
+
+    if flag(args, "--oracle") {
+        // The clairvoyant fleet baseline: every kernel at t=0, perfectly
+        // routed and ordered (fluid bound — see fleet::fleet_lower_bound
+        // for the jitter caveat).
+        let pool = match &trace {
+            Some(t) => t.pool(&gpu).context("trace family missing from the registry")?,
+            None => family.workload(&gpu, count, closed.map(|(_, _, s)| s).unwrap_or(0)),
+        };
+        let lb = fleet_lower_bound(&fleet, &pool);
+        println!(
+            "  fleet oracle: lower bound {:.2} ms | span {:.2} ms | ratio {:.3}x",
+            lb,
+            report.span_ms,
+            report.span_ms / lb.max(f64::MIN_POSITIVE)
+        );
+    }
+
+    if flag(args, "--compare-roundrobin") {
+        let rr = simulate_fleet(
+            &fleet,
+            make_source()?,
+            parse_route_policy("roundrobin").map_err(anyhow::Error::from)?,
+            &make_window,
+            &reorderer,
+            make_backend.as_ref(),
+            &opts,
+        );
+        println!(
+            "  roundrobin baseline: p99 {:.2} ms vs routed p99 {:.2} ms | speedup {:.3}x",
+            rr.sojourn_stats().p99_ms,
+            report.sojourn_stats().p99_ms,
+            p99_speedup(&rr, &report)
+        );
+    }
+
+    if let Some(path) = opt(args, "--record") {
+        // Record the realized arrival schedule, stamped with the fleet
+        // size so replay onto a smaller fleet is rejected.
+        let recorded = match &trace {
+            Some(t) => t.clone(),
+            None => Trace {
+                family: family.id.to_string(),
+                n: report.kernels.len(),
+                seed: closed.map(|(_, _, s)| s).unwrap_or(0),
+                devices: 1,
+                times_ms: report.kernels.iter().map(|k| k.arrival_ms).collect(),
+            },
+        }
+        .with_devices(fleet.len());
+        std::fs::write(path, recorded.to_csv())?;
+        eprintln!("recorded fleet trace -> {path} (replay with --replay {path})");
     }
     Ok(())
 }

@@ -73,6 +73,12 @@ pub struct Trace {
     pub family: String,
     pub n: usize,
     pub seed: u64,
+    /// Device count of the fleet the trace was recorded for (1 for
+    /// single-device runs — the `v1` CSV format, which omits the
+    /// field). Replaying onto a smaller fleet is rejected by
+    /// [`crate::fleet::FleetSpec::validate_trace`]: the recorded
+    /// overload regime would silently change.
+    pub devices: usize,
     /// Non-decreasing arrival times, one per kernel.
     pub times_ms: Vec<f64>,
 }
@@ -99,6 +105,7 @@ impl Trace {
             family: family.to_string(),
             n,
             seed,
+            devices: 1,
             times_ms,
         }
     }
@@ -132,8 +139,18 @@ impl Trace {
             family: family.to_string(),
             n,
             seed,
+            devices: 1,
             times_ms,
         }
+    }
+
+    /// Stamp the fleet device count the trace is recorded for (clamped
+    /// to at least 1). Single-device traces serialize without the
+    /// `devices=` field, staying byte-identical to the original `v1`
+    /// format.
+    pub fn with_devices(mut self, devices: usize) -> Trace {
+        self.devices = devices.max(1);
+        self
     }
 
     /// The scenario pool this trace draws kernels from (`pool[i]` is the
@@ -145,8 +162,13 @@ impl Trace {
     /// Serialize as a small replayable CSV (`# kreorder-trace` header
     /// carrying the pool coordinates, one `at_ms` row per kernel).
     pub fn to_csv(&self) -> String {
+        let devices = if self.devices > 1 {
+            format!(" devices={}", self.devices)
+        } else {
+            String::new()
+        };
         let mut s = format!(
-            "# kreorder-trace v1 family={} n={} seed={}\nat_ms\n",
+            "# kreorder-trace v1 family={} n={} seed={}{devices}\nat_ms\n",
             self.family, self.n, self.seed
         );
         for t in &self.times_ms {
@@ -165,11 +187,17 @@ impl Trace {
             return Err(err("missing `# kreorder-trace v1` header"));
         }
         let (mut family, mut n, mut seed) = (None, None, None);
+        // Absent devices= means the single-device v1 format.
+        let mut devices = 1usize;
         for field in header.split_whitespace().skip(3) {
             match field.split_once('=') {
                 Some(("family", v)) => family = Some(v.to_string()),
                 Some(("n", v)) => n = v.parse::<usize>().ok(),
                 Some(("seed", v)) => seed = v.parse::<u64>().ok(),
+                Some(("devices", v)) => match v.parse::<usize>() {
+                    Ok(d) if d >= 1 => devices = d,
+                    _ => return Err(err(&format!("invalid header field `{field}`"))),
+                },
                 _ => return Err(err(&format!("unknown header field `{field}`"))),
             }
         }
@@ -210,6 +238,7 @@ impl Trace {
             family,
             n,
             seed,
+            devices,
             times_ms,
         })
     }
@@ -587,9 +616,29 @@ mod tests {
             "# kreorder-trace v1 family=uniform n=1 seed=0\nat_ms\n-5.0\n",
             "# kreorder-trace v1 n=1 seed=0\nat_ms\n1.0\n",
             "# kreorder-trace v1 family=uniform n=1 seed=0 bogus=1\nat_ms\n1.0\n",
+            "# kreorder-trace v1 family=uniform n=1 seed=0 devices=0\nat_ms\n1.0\n",
+            "# kreorder-trace v1 family=uniform n=1 seed=0 devices=x\nat_ms\n1.0\n",
         ] {
             assert!(Trace::parse(bad).is_err(), "{bad:?}");
         }
+    }
+
+    #[test]
+    fn trace_devices_field_round_trips_and_defaults_to_one() {
+        // Without the field (the v1 format) a trace is single-device…
+        let t = Trace::poisson("uniform", 3, 100.0, 2);
+        assert_eq!(t.devices, 1);
+        assert!(!t.to_csv().contains("devices="), "{}", t.to_csv());
+        assert_eq!(Trace::parse(&t.to_csv()).unwrap().devices, 1);
+        // …and a fleet-stamped trace carries its device count through
+        // the CSV bit-exactly.
+        let f = t.clone().with_devices(4);
+        let csv = f.to_csv();
+        assert!(csv.contains("devices=4"), "{csv}");
+        let parsed = Trace::parse(&csv).unwrap();
+        assert_eq!(parsed, f);
+        // with_devices clamps to at least one device.
+        assert_eq!(Trace::poisson("uniform", 1, 1.0, 0).with_devices(0).devices, 1);
     }
 
     #[test]
@@ -613,6 +662,7 @@ mod tests {
             family: "no-such-family".into(),
             n: 1,
             seed: 0,
+            devices: 1,
             times_ms: vec![1.0],
         };
         assert!(ReplaySource::from_trace(&t, &gpu()).is_err());

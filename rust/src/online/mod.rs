@@ -31,10 +31,13 @@
 //!
 //! The thread coordinator ([`crate::coordinator`]) shares the
 //! [`WindowPolicy`] seam for its dispatcher batching, so a policy tuned
-//! in simulation drops into the real service unchanged — except that
-//! the dispatcher cannot observe device occupancy, so occupancy-aware
-//! policies degrade there (see
-//! [`crate::coordinator::CoordinatorBuilder::window_policy`]). CLI:
+//! in simulation drops into the real service unchanged — including
+//! occupancy-aware policies, which read live per-device queue depths
+//! through [`WindowState::queued_batches`] there (see
+//! [`crate::coordinator::CoordinatorBuilder::window_policy`]). The
+//! multi-device generalization lives in [`crate::fleet`]: a
+//! [`crate::fleet::RoutePolicy`] in front of per-device window +
+//! reorder loops. CLI:
 //! `kreorder serve --arrivals poisson:<rate>:<seed> --window <policy>
 //! --strategy <s>`; CI trends FIFO-vs-reordered tail latency through
 //! `benches/online_latency.rs` (`BENCH_online.json`).

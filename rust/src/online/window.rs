@@ -39,10 +39,12 @@ pub struct WindowState {
     /// `n_pending == 0`).
     pub oldest_arrival_ms: f64,
     /// Earliest time the executing device frees (`<= now_ms` means
-    /// idle). The thread coordinator does not track device occupancy and
-    /// passes `now_ms`.
+    /// idle). The thread coordinator cannot predict when a worker frees
+    /// and passes `now_ms`; it reports occupancy through
+    /// `queued_batches` instead.
     pub device_free_at_ms: f64,
-    /// Batches already closed but not yet started on the device.
+    /// Batches already closed but not yet finished on the device (the
+    /// thread coordinator reports the least-loaded worker's depth here).
     pub queued_batches: usize,
 }
 

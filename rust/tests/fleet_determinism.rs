@@ -1,0 +1,158 @@
+//! Integration pins for the fleet dispatch subsystem.
+//!
+//! The headline contract (ISSUE 6 acceptance): `simulate_fleet` produces
+//! **bit-identical per-kernel sojourns** across runs for every
+//! (route policy × window policy × reorderer) combination on both model
+//! backends — the fleet, like the single-device online engine, is a pure
+//! function of its configuration. The rest of the file pins the trace
+//! record/replay round-trip through the fleet engine (including the
+//! device-count header), the rejection of traces replayed onto a smaller
+//! fleet, and the routed-vs-roundrobin p99 ordering the bench gates.
+
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::fleet::{parse_route_policy, simulate_fleet, FleetReport, FleetSpec};
+use kreorder::gpu::GpuSpec;
+use kreorder::online::{
+    fifo_window_capacity_per_s, parse_window_policy, OnlineOpts, OnlineReorderer, ReplaySource,
+    Trace,
+};
+use kreorder::workloads::scenario_by_id;
+
+fn sim_factory() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+}
+
+fn analytic_factory() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    Box::new(|| Box::new(AnalyticBackend::new()) as Box<dyn ExecutionBackend>)
+}
+
+fn run_fleet(
+    fleet: &FleetSpec,
+    trace: &Trace,
+    route: &str,
+    window: &str,
+    reorderer: &OnlineReorderer,
+    factory: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+) -> FleetReport {
+    let gpu = GpuSpec::gtx580();
+    let source = Box::new(ReplaySource::from_trace(trace, &gpu).unwrap());
+    simulate_fleet(
+        fleet,
+        source,
+        parse_route_policy(route).unwrap(),
+        &|| parse_window_policy(window).unwrap(),
+        reorderer,
+        factory,
+        &OnlineOpts::default(),
+    )
+}
+
+fn sojourn_bits(r: &FleetReport) -> Vec<u64> {
+    r.sojourns_ms().iter().map(|t| t.to_bits()).collect()
+}
+
+/// The acceptance pin: bit-identical sojourns, spans, eval counts and
+/// device placements across runs for every route × window × reorderer
+/// combination, on both model backends, on a heterogeneous fleet.
+#[test]
+fn fleet_runs_are_bit_identical_for_every_route_window_reorderer() {
+    let fleet = FleetSpec::parse("1,0.5").unwrap();
+    let trace = Trace::poisson("skewed", 32, 400.0, 11);
+    let reorderers = [
+        OnlineReorderer::fifo(),
+        OnlineReorderer::search("local:3", 200).unwrap(),
+    ];
+    let factories: [(&str, Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync>); 2] =
+        [("sim", sim_factory()), ("analytic", analytic_factory())];
+    for route in ["roundrobin", "jsq", "lrw", "p2c:5", "affinity"] {
+        for window in ["fixed:6", "linger:6:25", "adaptive:6:25"] {
+            for reorderer in &reorderers {
+                for (bname, factory) in &factories {
+                    let a = run_fleet(&fleet, &trace, route, window, reorderer, factory.as_ref());
+                    let b = run_fleet(&fleet, &trace, route, window, reorderer, factory.as_ref());
+                    assert_eq!(
+                        sojourn_bits(&a),
+                        sojourn_bits(&b),
+                        "sojourns drifted: route={route} window={window} reorderer={} \
+                         backend={bname}",
+                        reorderer.name()
+                    );
+                    assert_eq!(a.span_ms.to_bits(), b.span_ms.to_bits());
+                    assert_eq!(a.decision_evals, b.decision_evals);
+                    // Placement is part of the contract, not just timing.
+                    let devs_a: Vec<usize> = a.kernels.iter().map(|k| k.device).collect();
+                    let devs_b: Vec<usize> = b.kernels.iter().map(|k| k.device).collect();
+                    assert_eq!(devs_a, devs_b);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_trace_records_and_replays_bit_identically_via_csv() {
+    // The fleet record/replay escape hatch: a trace stamped with the
+    // fleet size round-trips through its CSV serialization (what
+    // `kreorder fleet --record` writes and `--replay` reads) and drives
+    // an identical run.
+    let fleet = FleetSpec::parse("1,1,0.5").unwrap();
+    let trace = Trace::bursty("small-large", 32, 300.0, 9).with_devices(fleet.len());
+    let reorderer = OnlineReorderer::search("local:1", 200).unwrap();
+    let factory = sim_factory();
+
+    let direct = run_fleet(&fleet, &trace, "jsq", "linger:6:30", &reorderer, factory.as_ref());
+    let parsed = Trace::parse(&trace.to_csv()).unwrap();
+    assert_eq!(parsed.devices, 3);
+    let replayed = run_fleet(&fleet, &parsed, "jsq", "linger:6:30", &reorderer, factory.as_ref());
+    assert_eq!(sojourn_bits(&direct), sojourn_bits(&replayed));
+    assert_eq!(direct.span_ms.to_bits(), replayed.span_ms.to_bits());
+}
+
+#[test]
+fn traces_reject_smaller_fleets_with_an_actionable_error() {
+    let trace = Trace::poisson("uniform", 8, 200.0, 3).with_devices(3);
+    let parsed = Trace::parse(&trace.to_csv()).unwrap();
+    assert_eq!(parsed.devices, 3);
+    let err = FleetSpec::homogeneous(2).validate_trace(&parsed).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("3-device"), "{msg}");
+    assert!(msg.contains("only 2"), "{msg}");
+    assert!(msg.contains("--devices 3"), "{msg}");
+    // Equal or larger fleets replay fine.
+    assert!(FleetSpec::homogeneous(3).validate_trace(&parsed).is_ok());
+    assert!(FleetSpec::parse("1,1,0.5,0.25").unwrap().validate_trace(&parsed).is_ok());
+}
+
+/// The bench's hard gate, pinned as a test so `cargo test` catches a
+/// regression before CI's bench-smoke does: on a lopsided fleet under
+/// mild overload, load-aware routing must not lose the fleet p99
+/// sojourn race to blind round-robin on the identical replayed trace.
+#[test]
+fn load_aware_routing_beats_roundrobin_on_a_skewed_heterogeneous_fleet() {
+    let fleet = FleetSpec::parse("1,1,0.25").unwrap();
+    let gpu = GpuSpec::gtx580();
+    let pool = scenario_by_id("skewed").unwrap().workload(&gpu, 64, 23);
+    let factory = sim_factory();
+    // Calibrate ~1.05x the fleet's summed FIFO capacity of 8-kernel
+    // windows — the same normalization benches/fleet_routing.rs uses.
+    let capacity: f64 = fleet
+        .devices
+        .iter()
+        .map(|g| fifo_window_capacity_per_s(g, &pool, 8, factory.as_ref()))
+        .sum();
+    let rate = 1.05 * capacity;
+    let trace = Trace::poisson("skewed", 64, rate, 23);
+    // FIFO reorderer isolates the routing effect from the ordering one.
+    let reorderer = OnlineReorderer::fifo();
+
+    let rr = run_fleet(&fleet, &trace, "roundrobin", "linger:8:40", &reorderer, factory.as_ref());
+    let rr_p99 = rr.sojourn_stats().p99_ms;
+    for route in ["jsq", "lrw"] {
+        let routed = run_fleet(&fleet, &trace, route, "linger:8:40", &reorderer, factory.as_ref());
+        let p99 = routed.sojourn_stats().p99_ms;
+        assert!(
+            p99 <= rr_p99 + 1e-9,
+            "{route} fleet p99 {p99} ms lost to roundrobin {rr_p99} ms"
+        );
+    }
+}

@@ -161,6 +161,7 @@ fn closed_loop_run_records_and_replays_bit_identically() {
         family: "uniform".into(),
         n: 20,
         seed: 13, // the closed loop draws its pool from its own seed
+        devices: 1,
         times_ms: closed.kernels.iter().map(|k| k.arrival_ms).collect(),
     };
     let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
