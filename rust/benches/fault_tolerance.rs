@@ -1,0 +1,341 @@
+//! Bench + CI gate: **fault tolerance** — health-aware rerouting vs a
+//! health-blind router under a deterministic 1-of-4 device crash, plus
+//! seeded launch failures absorbed by retry, on the virtual clock.
+//!
+//! For each gated scenario family the bench:
+//!
+//! 1. calibrates an arrival rate at ~1.05× the 4-device fleet's summed
+//!    FIFO window capacity (the `benches/fleet_routing.rs`
+//!    normalization) — mild overload, where losing a device matters;
+//! 2. crashes device 1 permanently ~30% into the trace and replays the
+//!    **identical** Poisson trace through health-aware `jsq` and a
+//!    bench-local *health-blind* JSQ (same score, ignores
+//!    `DeviceLoad::health`), so the only difference between the rows is
+//!    whether routing steers around the corpse;
+//! 3. scores each run by **effective p99**: completed sojourns plus a
+//!    censored sojourn of `span - arrival` for every shed kernel — a
+//!    router cannot win by stranding kernels and reporting only
+//!    survivors;
+//! 4. re-runs the same trace with no faults (the degradation
+//!    denominator) and with a `launchfail` plan under the default retry
+//!    policy (informational: retries absorb, nothing is lost).
+//!
+//! **Hard gates** (non-zero exit, CI runs `--quick` per push):
+//!
+//! * conservation — every run accounts `completed + shed == arrivals`;
+//! * rerouting pays — health-aware `jsq`'s effective p99 strictly beats
+//!   the health-blind router's on every gated crash regime, and sheds
+//!   nothing where the blind router strands kernels on the dead device.
+//!
+//! The `p99_degradation_under_crash` ceiling in `BENCH_baseline.json`'s
+//! `faults` section stays warn-only until a real runner calibrates it.
+//! Everything is virtual-time: `BENCH_faults.json` is machine-
+//! independent, so regressions are scheduling changes, never noise.
+
+#[path = "harness/mod.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use kreorder::exec::{ExecutionBackend, SimulatorBackend};
+use kreorder::fault::{FaultConfig, FaultPlan, RetryPolicy};
+use kreorder::fleet::{
+    parse_route_policy, simulate_fleet_with_faults, FleetReport, FleetSpec, FleetView, RoutePolicy,
+};
+use kreorder::gpu::{GpuSpec, KernelProfile};
+use kreorder::online::{
+    fifo_window_capacity_per_s, parse_window_policy, LatencyStats, OnlineOpts, OnlineReorderer,
+    ReplaySource, Trace,
+};
+use kreorder::workloads::scenario_by_id;
+
+const SEED: u64 = 29;
+const WINDOW_CAP: usize = 8;
+const WINDOW_SPEC: &str = "linger:8:40";
+const SEARCH_BUDGET: u64 = 300;
+/// Offered load relative to the healthy fleet's summed FIFO capacity.
+const OVERLOAD: f64 = 1.05;
+/// Four identical devices; device 1 dies in the crash regimes.
+const FLEET: &str = "4";
+/// Where in the trace the crash lands (fraction of the nominal span).
+const CRASH_FRAC: f64 = 0.3;
+/// Regimes the rerouted-vs-blind effective-p99 gate is enforced on.
+const GATED_FAMILIES: [&str; 2] = ["skewed", "mixed"];
+
+/// Health-blind join-shortest-queue: the identical score to `jsq` with
+/// the health field ignored. This is the no-reroute comparator — after
+/// the crash it keeps dealing kernels to the dead device whenever its
+/// frozen queue looks shortest.
+struct BlindJsq;
+
+impl RoutePolicy for BlindJsq {
+    fn name(&self) -> String {
+        "blind-jsq".into()
+    }
+    fn route(&mut self, _kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
+        let mut best = 0usize;
+        let mut best_score = usize::MAX;
+        for d in fleet.devices {
+            if d.outstanding < best_score {
+                best_score = d.outstanding;
+                best = d.device;
+            }
+        }
+        best
+    }
+}
+
+struct Row {
+    family: &'static str,
+    plan: String,
+    route: String,
+    arrivals: String,
+    n: usize,
+    completed: usize,
+    shed: usize,
+    rerouted: u64,
+    launch_failures: u64,
+    degraded_decisions: u64,
+    p99_ms: f64,
+    effective_p99_ms: f64,
+    completion_rate: f64,
+    span_ms: f64,
+}
+
+fn sim_factory() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+}
+
+/// Sojourn p99 with shed kernels censored at end-of-run: a shed kernel
+/// contributes `span - arrival` (it waited that long and got nothing).
+fn effective_p99(r: &FleetReport) -> f64 {
+    let mut xs = r.sojourns_ms();
+    xs.extend(r.shed.iter().map(|s| (r.span_ms - s.arrival_ms).max(0.0)));
+    LatencyStats::from_samples(&xs).p99_ms
+}
+
+fn run_trace(
+    fleet: &FleetSpec,
+    trace: &Trace,
+    route: Box<dyn RoutePolicy>,
+    reorderer: &OnlineReorderer,
+    faults: &FaultConfig,
+) -> FleetReport {
+    let gpu = GpuSpec::gtx580();
+    let source = Box::new(
+        ReplaySource::from_trace(trace, &gpu)
+            .expect("registry family")
+            .named(trace.family.clone()),
+    );
+    let factory = sim_factory();
+    simulate_fleet_with_faults(
+        fleet,
+        source,
+        route,
+        &|| parse_window_policy(WINDOW_SPEC).expect("gate window spelling"),
+        reorderer,
+        factory.as_ref(),
+        &OnlineOpts::default(),
+        faults,
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let gpu = GpuSpec::gtx580();
+    let count: usize = if quick { 96 } else { 160 };
+    let fleet = FleetSpec::parse(FLEET).expect("bench fleet spelling");
+    let reorderer = OnlineReorderer::search("local:0", SEARCH_BUDGET).expect("spelling");
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    // (family, degradation) pairs for the warn-only baseline ceiling.
+    let mut degradations: Vec<(&str, f64)> = Vec::new();
+
+    harness::section(&format!(
+        "fault tolerance: 1-of-4 crash, reroute vs blind ({WINDOW_SPEC}, budget \
+         {SEARCH_BUDGET}, n={count})"
+    ));
+    for family in GATED_FAMILIES {
+        let sc = scenario_by_id(family).expect("registry family");
+        let pool = sc.workload(&gpu, count, SEED);
+        let cal_factory = sim_factory();
+        let capacity: f64 = fleet
+            .devices
+            .iter()
+            .map(|g| fifo_window_capacity_per_s(g, &pool, WINDOW_CAP, cal_factory.as_ref()))
+            .sum();
+        let rate = OVERLOAD * capacity;
+        let arrivals = format!("poisson:{rate:.3}:{SEED}");
+        let trace = Trace::poisson(family, count, rate, SEED);
+        // Nominal span of the open-loop schedule; the crash lands partway
+        // through so both queues and in-flight batches are live.
+        let crash_at = CRASH_FRAC * count as f64 / rate * 1000.0;
+        let crash_spec = format!("crash:1@{crash_at:.3}");
+        let launchfail_spec = format!("launchfail:0.1:{SEED}");
+        let retry = RetryPolicy::new(4, SEED);
+
+        // (label, route, plan spec) — the first two rows carry the gate.
+        let regimes: [(&str, Box<dyn RoutePolicy>, &str); 5] = [
+            ("jsq", parse_route_policy("jsq").unwrap(), crash_spec.as_str()),
+            ("blind-jsq", Box::new(BlindJsq), crash_spec.as_str()),
+            ("jsq", parse_route_policy("jsq").unwrap(), "none"),
+            ("jsq", parse_route_policy("jsq").unwrap(), launchfail_spec.as_str()),
+            (
+                "circuit:jsq",
+                parse_route_policy("circuit:jsq").unwrap(),
+                launchfail_spec.as_str(),
+            ),
+        ];
+
+        let mut crash_eff: Vec<(String, f64, usize)> = Vec::new();
+        let mut nofault_p99 = f64::NAN;
+        let mut crash_jsq_eff = f64::NAN;
+        for (label, route, plan_spec) in regimes {
+            let plan = if plan_spec == "none" {
+                FaultPlan::none()
+            } else {
+                FaultPlan::parse(plan_spec).expect("bench plan spelling")
+            };
+            let plan_name = plan.name();
+            let faults = FaultConfig { plan, retry };
+            let r = run_trace(&fleet, &trace, route, &reorderer, &faults);
+            if r.kernels.len() + r.shed.len() != count {
+                failures.push(format!(
+                    "{family}/{label}/{plan_name}: {} completed + {} shed != {count} arrivals",
+                    r.kernels.len(),
+                    r.shed.len()
+                ));
+            }
+            let eff = effective_p99(&r);
+            let p99 = r.sojourn_stats().p99_ms;
+            println!(
+                "  {:<10} {:<12} plan {:<24} eff-p99 {:>10.2} ms | shed {:>3} | rerouted \
+                 {:>3} | launch-fail {:>3} | completion {:.4}",
+                family,
+                label,
+                plan_name,
+                eff,
+                r.n_shed(),
+                r.n_rerouted,
+                r.n_launch_failures,
+                r.completion_rate(),
+            );
+            if plan_spec == crash_spec.as_str() {
+                crash_eff.push((label.to_string(), eff, r.n_shed()));
+                if label == "jsq" {
+                    crash_jsq_eff = eff;
+                    if r.n_rerouted == 0 {
+                        failures.push(format!(
+                            "{family}: the crash orphaned nothing — crash_at {crash_at:.1} ms \
+                             misses the live window; recalibrate CRASH_FRAC"
+                        ));
+                    }
+                }
+            }
+            if plan_spec == "none" {
+                nofault_p99 = p99;
+                if !r.shed.is_empty() || r.n_fault_events != 0 {
+                    failures.push(format!(
+                        "{family}: the empty plan shed {} kernels / saw {} fault events",
+                        r.n_shed(),
+                        r.n_fault_events
+                    ));
+                }
+            }
+            rows.push(Row {
+                family,
+                plan: plan_name,
+                route: label.to_string(),
+                arrivals: arrivals.clone(),
+                n: count,
+                completed: r.kernels.len(),
+                shed: r.n_shed(),
+                rerouted: r.n_rerouted,
+                launch_failures: r.n_launch_failures,
+                degraded_decisions: r.n_degraded_decisions,
+                p99_ms: p99,
+                effective_p99_ms: eff,
+                completion_rate: r.completion_rate(),
+                span_ms: r.span_ms,
+            });
+        }
+
+        // The headline gate: steering around the corpse must strictly
+        // beat dealing to it, on the censored (shed-inclusive) p99.
+        let blind = crash_eff.iter().find(|(l, _, _)| l == "blind-jsq").unwrap();
+        if !(crash_jsq_eff < blind.1) {
+            failures.push(format!(
+                "{family}: health-aware jsq effective p99 {crash_jsq_eff} ms did not beat \
+                 blind-jsq {} ms under {crash_spec}",
+                blind.1
+            ));
+        }
+        let degradation = crash_jsq_eff / nofault_p99.max(f64::MIN_POSITIVE);
+        degradations.push((family, degradation));
+        println!(
+            "  {family:<10} crash degradation: {degradation:.3}x (eff-p99 {crash_jsq_eff:.2} \
+             ms vs no-fault p99 {nofault_p99:.2} ms)"
+        );
+    }
+
+    let gate_ok = failures.is_empty();
+
+    // ---- machine-readable record --------------------------------------
+    let mut json = String::from("{\n  \"bench\": \"fault_tolerance\",\n  \"gpu\": \"gtx580\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!(
+        "  \"config\": {{\"fleet\": \"{FLEET}\", \"window\": \"{WINDOW_SPEC}\", \"strategy\": \
+         \"search:local:0:{SEARCH_BUDGET}\", \"overload\": {OVERLOAD}, \"seed\": {SEED}, \
+         \"crash_frac\": {CRASH_FRAC}, \"retry\": \"4 attempts, seeded backoff\"}},\n"
+    ));
+    json.push_str(&format!(
+        "  \"gates\": {{\"no_kernel_lost_ok\": {gate_ok}, \
+         \"reroute_beats_blind_p99_ok\": {gate_ok}}},\n"
+    ));
+    json.push_str("  \"degradation\": {\n");
+    for (i, (family, d)) in degradations.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{family}\": {d:.4}{}\n",
+            if i + 1 == degradations.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  },\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"family\": \"{}\", \"plan\": \"{}\", \"route\": \"{}\", \"arrivals\": \
+             \"{}\", \"n\": {},\n     \"completed\": {}, \"shed\": {}, \"rerouted\": {}, \
+             \"launch_failures\": {}, \"degraded_decisions\": {},\n     \"p99_ms\": {:.6}, \
+             \"effective_p99_ms\": {:.6}, \"completion_rate\": {:.6}, \"span_ms\": {:.6}}}{}\n",
+            r.family,
+            r.plan,
+            r.route,
+            r.arrivals,
+            r.n,
+            r.completed,
+            r.shed,
+            r.rerouted,
+            r.launch_failures,
+            r.degraded_decisions,
+            r.p99_ms,
+            r.effective_p99_ms,
+            r.completion_rate,
+            r.span_ms,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = "BENCH_faults.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    if !failures.is_empty() {
+        eprintln!("\nfault tolerance gates FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("\nall fault tolerance gates passed");
+}

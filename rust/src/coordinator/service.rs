@@ -41,7 +41,7 @@ use super::clock::{BatchClock, SystemClock};
 use super::stats::ServiceStats;
 use crate::exec::{ExecutionBackend, SimulatorBackend};
 use crate::fleet::{
-    parse_route_policy, DeviceLoad, FleetView, RoundRobin, RouteParseError, RoutePolicy,
+    parse_route_policy, DeviceLoad, FleetView, Health, RoundRobin, RouteParseError, RoutePolicy,
 };
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::online::{LingerWindow, WindowDecision, WindowPolicy, WindowState};
@@ -362,14 +362,19 @@ impl Coordinator {
     /// Stop the service, returning every batch report (ordered by batch
     /// id) and the aggregate service statistics across all devices.
     /// Requests submitted before this call — batched or still queued —
-    /// are dispatched and answered first (drain semantics).
+    /// are dispatched and answered first (drain semantics). A panicked
+    /// dispatcher does not propagate: shutdown still returns, with the
+    /// panic recorded in the stats.
     pub fn shutdown(mut self) -> (Vec<BatchReport>, ServiceStats) {
         let _ = self.tx.send(Msg::Shutdown);
-        self.dispatcher
-            .take()
-            .expect("shutdown called once")
-            .join()
-            .expect("dispatcher panicked")
+        match self.dispatcher.take().expect("shutdown called once").join() {
+            Ok(out) => out,
+            Err(payload) => {
+                let mut stats = ServiceStats::default();
+                stats.record_panic(format!("dispatcher panicked: {}", panic_message(&payload)));
+                (Vec::new(), stats)
+            }
+        }
     }
 }
 
@@ -393,6 +398,18 @@ struct Pending {
 struct Batch {
     id: u64,
     pending: Vec<Pending>,
+}
+
+/// Render a caught panic payload (the `Box<dyn Any>` from
+/// `catch_unwind`/`join`) as best-effort human text.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Batching loop: fills reorder windows per the window policy and
@@ -436,6 +453,11 @@ fn dispatcher_loop(
     let peak_compute = cfg.gpu.peak_compute();
 
     let mut batch_id = 0u64;
+    // Workers whose channel has closed under us (the worker thread died
+    // outside its per-batch panic guard). Health-aware route policies
+    // see them as Down and steer around; a failed send falls through to
+    // the next live worker either way.
+    let mut worker_dead = vec![false; cfg.devices];
     let mut dispatch = |mut batch: Vec<Pending>, id: u64| {
         // An empty window must never reach a worker as a zero-kernel
         // batch (guards the Flush/drain paths and any misbehaving
@@ -465,6 +487,7 @@ fn dispatcher_loop(
                     free_at_ms: now,
                     peak_compute,
                     backlog_lb_ms: f64::NAN,
+                    health: if worker_dead[d] { Health::Down } else { Health::Healthy },
                 }
             })
             .collect();
@@ -472,14 +495,34 @@ fn dispatcher_loop(
             now_ms: now,
             devices: &loads,
         };
-        let device = route
+        let mut device = route
             .route(&batch[0].req.profile, &view)
             .min(worker_txs.len() - 1);
         depths[device].fetch_add(1, Ordering::Relaxed);
-        // A worker can only be gone if it panicked; dropping the batch
-        // here drops the reply senders, which surfaces as recv errors at
-        // the submitters rather than a hang.
-        let _ = worker_txs[device].send(Batch { id, pending: batch });
+        let mut batch = Batch { id, pending: batch };
+        loop {
+            match worker_txs[device].send(batch) {
+                Ok(()) => break,
+                // The worker's receiver is gone (its thread died). The
+                // send gives the batch back: mark the worker dead and
+                // re-route to the next live one.
+                Err(std::sync::mpsc::SendError(b)) => {
+                    depths[device].fetch_sub(1, Ordering::Relaxed);
+                    worker_dead[device] = true;
+                    batch = b;
+                    match (0..worker_txs.len()).find(|&d| !worker_dead[d]) {
+                        Some(d) => {
+                            device = d;
+                            depths[device].fetch_add(1, Ordering::Relaxed);
+                        }
+                        // Every worker is gone: dropping the batch drops
+                        // the reply senders, which surfaces as recv
+                        // errors at the submitters rather than a hang.
+                        None => return,
+                    }
+                }
+            }
+        }
     };
 
     let mut batch: Vec<Pending> = Vec::new();
@@ -582,14 +625,26 @@ fn dispatcher_loop(
         batch_id += 1;
     }
 
-    // Close the worker queues and collect their reports/stats.
+    // Close the worker queues and collect their reports/stats. A worker
+    // that died poisoned (outside its per-batch panic guard) must not
+    // abort shutdown for the rest of the fleet: its panic is recorded
+    // and every other worker's results are still collected.
     drop(worker_txs);
     let mut reports = Vec::new();
     let mut stats = ServiceStats::default();
-    for handle in worker_handles {
-        let (mut r, s) = handle.join().expect("device worker panicked");
-        reports.append(&mut r);
-        stats.merge(&s);
+    for (device, handle) in worker_handles.into_iter().enumerate() {
+        match handle.join() {
+            Ok((mut r, s)) => {
+                reports.append(&mut r);
+                stats.merge(&s);
+            }
+            Err(payload) => {
+                stats.record_panic(format!(
+                    "device {device} worker thread panicked: {}",
+                    panic_message(&payload)
+                ));
+            }
+        }
     }
     reports.sort_by_key(|r| r.batch_id);
     (reports, stats)
@@ -624,17 +679,64 @@ fn device_loop(
     let mut reports = Vec::new();
     let mut stats = ServiceStats::default();
     while let Ok(batch) = rx.recv() {
-        process_batch(
-            device,
-            &gpu,
-            policy.as_ref(),
-            backend.as_deref_mut(),
-            &mut compare,
-            clock.as_ref(),
-            batch,
-            &mut reports,
-            &mut stats,
-        );
+        // A panic anywhere in the batch path (policy, backend, payload)
+        // must fail only this batch's in-flight handles — never the
+        // worker, never `shutdown` for the rest of the fleet. Keep the
+        // reply senders so a panicked batch can still be answered with
+        // the failure sentinel (handles resolve to an error response,
+        // not a disconnect).
+        let batch_id = batch.id;
+        let fallback: Vec<(u64, Sender<LaunchResponse>)> = batch
+            .pending
+            .iter()
+            .map(|p| (p.req.id, p.reply.clone()))
+            .collect();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            process_batch(
+                device,
+                &gpu,
+                policy.as_ref(),
+                backend.as_deref_mut(),
+                &mut compare,
+                clock.as_ref(),
+                batch,
+                &mut reports,
+                &mut stats,
+            );
+        }));
+        if let Err(payload) = outcome {
+            let msg = panic_message(payload.as_ref());
+            eprintln!("device {device}: panic while serving batch {batch_id}: {msg}");
+            stats.record_panic(format!("device {device}, batch {batch_id}: {msg}"));
+            // Answer the batch's handles with the failure sentinel. If
+            // the panic struck after some responses were already sent,
+            // the duplicate is harmless: each handle resolves to the
+            // first (real) response it received.
+            for (position, (req_id, reply)) in fallback.into_iter().enumerate() {
+                let resp = LaunchResponse {
+                    id: req_id,
+                    checksum: f64::NEG_INFINITY,
+                    exec_wall_ms: 0.0,
+                    latency_ms: 0.0,
+                    queue_ms: 0.0,
+                    batch_id,
+                    position,
+                    device,
+                };
+                stats.record_response(&resp);
+                let _ = reply.send(resp);
+            }
+            // The panic may have struck mid-execute and left the backend
+            // in an undefined state; rebuild it before the next batch.
+            backend = match factory() {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    eprintln!("device {device}: backend rebuild after panic failed: {e:#}");
+                    None
+                }
+            };
+            compare = SimulatorBackend::new();
+        }
         depths[device].fetch_sub(1, Ordering::Relaxed);
     }
     (reports, stats)
@@ -1046,6 +1148,70 @@ mod tests {
             // Reverse policy: order is the reversed arrival order.
             assert_eq!(r.order, vec![3, 2, 1, 0]);
         }
+    }
+
+    #[test]
+    fn worker_panic_fails_only_its_own_batch() {
+        use crate::sched::LaunchPolicy;
+
+        /// Panics on any batch holding the marker kernel — simulating a
+        /// fault anywhere inside the worker's batch path.
+        struct PanicOnMarker;
+        impl LaunchPolicy for PanicOnMarker {
+            fn name(&self) -> String {
+                "panic-on-marker".into()
+            }
+            fn order(&self, _gpu: &GpuSpec, kernels: &[KernelProfile]) -> Vec<usize> {
+                if kernels.iter().any(|k| k.name == "boom") {
+                    panic!("injected test panic");
+                }
+                (0..kernels.len()).collect()
+            }
+        }
+
+        let c = CoordinatorBuilder::new()
+            .policy(PanicOnMarker)
+            .window(1)
+            .linger(Duration::from_millis(5))
+            .start();
+        let h0 = c.submit(LaunchRequest {
+            id: 0,
+            profile: profile("ok0", 8, 2.0),
+            seed: 0,
+        });
+        let h1 = c.submit(LaunchRequest {
+            id: 1,
+            profile: profile("boom", 8, 2.0),
+            seed: 0,
+        });
+        let h2 = c.submit(LaunchRequest {
+            id: 2,
+            profile: profile("ok2", 8, 2.0),
+            seed: 0,
+        });
+        // The poisoned batch resolves to the failure sentinel — an
+        // answer, not a disconnect…
+        let r1 = h1.wait_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r1.checksum, f64::NEG_INFINITY);
+        // …and the neighbours are served normally by the same worker.
+        let r0 = h0.wait_timeout(Duration::from_secs(10)).unwrap();
+        let r2 = h2.wait_timeout(Duration::from_secs(10)).unwrap();
+        assert!(r0.checksum.is_nan());
+        assert!(r2.checksum.is_nan());
+        // Shutdown completes (no poisoned join) and the panic is on the
+        // books.
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 3);
+        assert_eq!(stats.n_worker_panics, 1);
+        assert!(
+            stats.panic_messages[0].contains("injected test panic"),
+            "{:?}",
+            stats.panic_messages
+        );
+        assert!(stats.summary().contains("1 worker panics"));
+        // Only the surviving batches produced reports.
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.n == 1));
     }
 
     #[test]

@@ -49,6 +49,12 @@ pub struct ServiceStats {
     pub total_exec_wall_ms: f64,
     /// Responses carrying a failed-execution sentinel.
     pub n_failures: usize,
+    /// Panics caught inside device workers (or at worker join). Each
+    /// one failed only its own in-flight batch — the service kept
+    /// serving and `shutdown` completed normally.
+    pub n_worker_panics: usize,
+    /// Human-readable messages of those panics, in catch order.
+    pub panic_messages: Vec<String>,
 }
 
 impl ServiceStats {
@@ -77,6 +83,13 @@ impl ServiceStats {
             self.sample_devices[self.sample_cursor] = device;
             self.sample_cursor = (self.sample_cursor + 1) % LATENCY_SAMPLE_CAP;
         }
+    }
+
+    /// Record a caught worker panic (per-batch `catch_unwind`, or a
+    /// poisoned thread observed at shutdown join).
+    pub(crate) fn record_panic(&mut self, message: String) {
+        self.n_worker_panics += 1;
+        self.panic_messages.push(message);
     }
 
     pub(crate) fn record_batch(&mut self, b: &BatchReport) {
@@ -117,6 +130,8 @@ impl ServiceStats {
         self.n_unsimulated += other.n_unsimulated;
         self.total_exec_wall_ms += other.total_exec_wall_ms;
         self.n_failures += other.n_failures;
+        self.n_worker_panics += other.n_worker_panics;
+        self.panic_messages.extend(other.panic_messages.iter().cloned());
     }
 
     /// Mean request latency (ms).
@@ -187,9 +202,9 @@ impl ServiceStats {
         }
     }
 
-    /// One-line human summary.
+    /// One-line human summary (plus a panic line when any were caught).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} batches / {} responses | latency mean {:.2} ms p95 {:.2} p99 {:.2} (max {:.2}) | \
              queue p95 {:.2} ms | sim speedup vs FIFO {:.3}x | exec wall {:.1} ms | {} failures",
             self.n_batches,
@@ -202,7 +217,15 @@ impl ServiceStats {
             self.sim_speedup(),
             self.total_exec_wall_ms,
             self.n_failures,
-        )
+        );
+        if self.n_worker_panics > 0 {
+            s.push_str(&format!(
+                " | {} worker panics (last: {})",
+                self.n_worker_panics,
+                self.panic_messages.last().map(String::as_str).unwrap_or("?"),
+            ));
+        }
+        s
     }
 }
 
@@ -370,6 +393,21 @@ mod tests {
         assert_eq!(merged.device_latency_percentile_ms(1, 100.0), lat(1, 49));
         assert_eq!(merged.device_latency_percentile_ms(2, 100.0), lat(2, 49));
         assert_eq!(merged.device_latency_percentile_ms(7, 99.0), 0.0);
+    }
+
+    #[test]
+    fn worker_panics_are_counted_merged_and_summarized() {
+        let mut a = ServiceStats::default();
+        assert!(!a.summary().contains("worker panics"));
+        a.record_panic("device 1: boom".into());
+        let mut b = ServiceStats::default();
+        b.record_panic("device 0: pow".into());
+        a.merge(&b);
+        assert_eq!(a.n_worker_panics, 2);
+        assert_eq!(a.panic_messages.len(), 2);
+        let s = a.summary();
+        assert!(s.contains("2 worker panics"), "{s}");
+        assert!(s.contains("device 0: pow"), "{s}");
     }
 
     #[test]

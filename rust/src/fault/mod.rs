@@ -1,0 +1,649 @@
+//! **Deterministic fault injection** — replayable device crash /
+//! straggler / launch-failure plans, and seeded retry with backoff.
+//!
+//! The paper's reordering wins assume every launched kernel runs to
+//! completion on a healthy device. A production fleet does not get that
+//! luxury: devices crash and recover, stragglers appear mid-run, and
+//! individual launches are rejected by the driver. This module gives the
+//! virtual-clock engines ([`crate::fleet::simulate_fleet_with_faults`])
+//! a *replayable* failure model, so recovery behavior is tested with the
+//! same bit-identical-replay guarantee as everything else:
+//!
+//! * [`FaultPlan`] — a schedule of injected faults, parsed from a spec
+//!   string (clauses joined with `;`) or a CSV-ish line-per-clause file,
+//!   or generated from a seeded process ([`FaultPlan::generate`]);
+//! * [`RetryPolicy`] — per-kernel retry with seeded exponential backoff
+//!   + jitter and a max-attempts cap, after which the kernel is counted
+//!   as **shed**, never silently lost;
+//! * [`LaunchFailures`] — a seeded Bernoulli process over `(kernel,
+//!   attempt)` pairs, so whether a given launch attempt fails is a pure
+//!   function of `(seed, id, attempt)` — independent of event
+//!   interleaving, which is what keeps fault runs replayable.
+//!
+//! | clause | meaning |
+//! |---|---|
+//! | `crash:<dev>@<t>` | device `<dev>` goes down at virtual time `<t>` ms |
+//! | `crash:<dev>@<t>:recover@<t2>` | …and comes back at `<t2>` ms |
+//! | `slowdown:<dev>@<t>:<factor>` | device `<dev>` serves `<factor>`× slower from `<t>` ms (a straggler; `< 1` models a speedup) |
+//! | `launchfail:<p>:<seed>` | every launch attempt fails with probability `<p>`, seeded (at most one per plan) |
+//!
+//! Everything downstream — orphaning a dead device's queue back to the
+//! router, health-aware routing, circuit breakers, graceful FIFO
+//! degradation — lives in [`crate::fleet`]; the invariant the whole
+//! subsystem is pinned on (`tests/fault_recovery.rs`) is
+//! **no kernel is ever lost**: every arrival is completed, shed with a
+//! cause, or failed with a cause.
+
+use crate::util::SplitMix64;
+use std::fmt;
+
+/// Domain-separation constants for the fault PRNG streams (the arrival
+/// constants live in `online::arrivals`, the routing one in
+/// `fleet::route`).
+const LAUNCHFAIL_SEED_XOR: u64 = 0xFA17_0001;
+const RETRY_SEED_XOR: u64 = 0xFA17_0002;
+const GENERATE_SEED_XOR: u64 = 0xFA17_0003;
+
+/// Odd multiplier for folding a kernel id into a PRNG key (the
+/// finalization multiplier from the splitmix64 reference).
+const ID_MIX: u64 = 0x2545_F491_4F6C_DD1D;
+
+/// A device going down at a scheduled virtual time, optionally coming
+/// back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Crash {
+    /// Device index in the fleet.
+    pub device: usize,
+    /// Virtual time (ms) the device goes down.
+    pub at_ms: f64,
+    /// Virtual time (ms) the device comes back, if it ever does.
+    pub recover_at_ms: Option<f64>,
+}
+
+/// A device becoming a straggler (or, with `factor < 1`, speeding up)
+/// from a scheduled virtual time onward.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Slowdown {
+    /// Device index in the fleet.
+    pub device: usize,
+    /// Virtual time (ms) the factor takes effect.
+    pub at_ms: f64,
+    /// Service-time multiplier from `at_ms` on (`2.0` = half speed).
+    pub factor: f64,
+}
+
+/// Seeded Bernoulli launch-failure process: attempt `a` of kernel `id`
+/// fails with probability `p`, decided by a pure function of
+/// `(seed, id, a)` so replay does not depend on event interleaving.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaunchFailures {
+    /// Per-attempt failure probability in `[0, 1]`.
+    pub p: f64,
+    /// Stream seed.
+    pub seed: u64,
+}
+
+impl LaunchFailures {
+    /// Whether attempt `attempt` (1-based) of kernel `id` fails.
+    pub fn fails(&self, id: u64, attempt: u32) -> bool {
+        let key = self.seed
+            ^ LAUNCHFAIL_SEED_XOR
+            ^ id.wrapping_mul(ID_MIX)
+            ^ ((attempt as u64) << 32);
+        SplitMix64::new(key).next_f64() < self.p
+    }
+}
+
+/// What one expanded fault event does to its device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// The device goes down (its backlog is orphaned to the router).
+    Down,
+    /// The device comes back up.
+    Recover,
+    /// The device's service times are multiplied by the factor.
+    Slow(f64),
+}
+
+/// One scheduled fault, expanded from a [`FaultPlan`] by
+/// [`FaultPlan::timeline`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time (ms) the event fires.
+    pub at_ms: f64,
+    /// Device index it applies to.
+    pub device: usize,
+    /// What happens.
+    pub action: FaultAction,
+}
+
+/// A replayable schedule of injected faults. Equal plans on equal
+/// configurations replay **bit-identically** (`tests/fault_recovery.rs`
+/// pins it); an empty plan is a strict no-op — the fault-aware engine
+/// produces exactly the fault-free timestamps.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Scheduled device crashes (with optional recovery).
+    pub crashes: Vec<Crash>,
+    /// Scheduled straggler onsets.
+    pub slowdowns: Vec<Slowdown>,
+    /// Optional seeded launch-failure process.
+    pub launch_failures: Option<LaunchFailures>,
+}
+
+impl FaultPlan {
+    /// The empty plan: inject nothing.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.slowdowns.is_empty() && self.launch_failures.is_none()
+    }
+
+    /// Parse a plan. Accepts the spec-string form (clauses joined with
+    /// `;`) and the CSV-ish file form (one clause per line, `#` comments)
+    /// interchangeably; see the module docs for the clause table.
+    ///
+    /// ```
+    /// use kreorder::fault::FaultPlan;
+    /// let p = FaultPlan::parse("crash:0@50:recover@200; launchfail:0.1:7").unwrap();
+    /// assert_eq!(p.crashes.len(), 1);
+    /// assert!(FaultPlan::parse("crash:0@oops").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<FaultPlan, FaultParseError> {
+        let mut plan = FaultPlan::default();
+        for raw in s.split(|c| c == ';' || c == '\n') {
+            let clause = raw.trim();
+            if clause.is_empty() || clause.starts_with('#') {
+                continue;
+            }
+            plan.push_clause(clause)?;
+        }
+        Ok(plan)
+    }
+
+    fn push_clause(&mut self, clause: &str) -> Result<(), FaultParseError> {
+        let err = |reason: &str| FaultParseError {
+            input: clause.to_string(),
+            reason: reason.to_string(),
+        };
+        let lower = clause.to_ascii_lowercase();
+        let (head, rest) = lower
+            .split_once(':')
+            .ok_or_else(|| err("missing `:` after the clause kind"))?;
+        // `<dev>@<t>` target term shared by crash and slowdown.
+        let target = |term: &str| -> Result<(usize, f64), FaultParseError> {
+            let (dev, t) = term
+                .split_once('@')
+                .ok_or_else(|| err("expected `<dev>@<t>`"))?;
+            let device: usize = dev
+                .trim()
+                .parse()
+                .map_err(|_| err("device must be a non-negative integer"))?;
+            let at_ms: f64 = t
+                .trim()
+                .parse()
+                .map_err(|_| err("time must be a number (virtual ms)"))?;
+            if !at_ms.is_finite() || at_ms < 0.0 {
+                return Err(err("time must be finite and >= 0"));
+            }
+            Ok((device, at_ms))
+        };
+        match head {
+            "crash" => {
+                let mut parts = rest.splitn(2, ':');
+                let (device, at_ms) = target(parts.next().unwrap_or(""))?;
+                let recover_at_ms = match parts.next() {
+                    None => None,
+                    Some(r) => {
+                        let t = r
+                            .strip_prefix("recover@")
+                            .ok_or_else(|| err("expected `recover@<t2>` after the crash time"))?;
+                        let t2: f64 = t
+                            .trim()
+                            .parse()
+                            .map_err(|_| err("recovery time must be a number"))?;
+                        if !t2.is_finite() || t2 <= at_ms {
+                            return Err(err("recovery time must be finite and after the crash"));
+                        }
+                        Some(t2)
+                    }
+                };
+                self.crashes.push(Crash {
+                    device,
+                    at_ms,
+                    recover_at_ms,
+                });
+            }
+            "slowdown" => {
+                let (term, f) = rest
+                    .rsplit_once(':')
+                    .ok_or_else(|| err("expected `slowdown:<dev>@<t>:<factor>`"))?;
+                let (device, at_ms) = target(term)?;
+                let factor: f64 = f
+                    .trim()
+                    .parse()
+                    .map_err(|_| err("factor must be a number"))?;
+                if !factor.is_finite() || factor <= 0.0 {
+                    return Err(err("factor must be finite and > 0"));
+                }
+                self.slowdowns.push(Slowdown {
+                    device,
+                    at_ms,
+                    factor,
+                });
+            }
+            "launchfail" => {
+                if self.launch_failures.is_some() {
+                    return Err(err("at most one launchfail clause per plan"));
+                }
+                let (p_str, seed_str) = rest
+                    .split_once(':')
+                    .ok_or_else(|| err("expected `launchfail:<p>:<seed>`"))?;
+                let p: f64 = p_str
+                    .trim()
+                    .parse()
+                    .map_err(|_| err("probability must be a number"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(err("probability must be in [0, 1]"));
+                }
+                let seed: u64 = seed_str
+                    .trim()
+                    .parse()
+                    .map_err(|_| err("seed must be a non-negative integer"))?;
+                self.launch_failures = Some(LaunchFailures { p, seed });
+            }
+            _ => return Err(err("unknown clause kind")),
+        }
+        Ok(())
+    }
+
+    /// Generate a plan from a seeded process: `n_faults` events spread
+    /// over `[0, horizon_ms)` across `n_devices` devices — crashes
+    /// (half of them recovering) and stragglers in roughly equal
+    /// measure. Pure function of the arguments, so generated plans are
+    /// as replayable as hand-written ones.
+    pub fn generate(seed: u64, n_devices: usize, horizon_ms: f64, n_faults: usize) -> FaultPlan {
+        let n_devices = n_devices.max(1);
+        let horizon = if horizon_ms.is_finite() && horizon_ms > 0.0 {
+            horizon_ms
+        } else {
+            1_000.0
+        };
+        let mut rng = SplitMix64::new(seed ^ GENERATE_SEED_XOR);
+        let mut plan = FaultPlan::default();
+        for _ in 0..n_faults {
+            let device = rng.below(n_devices);
+            let at_ms = rng.range_f64(0.0, horizon * 0.75);
+            match rng.below(4) {
+                // Crash with recovery after 10–35% of the horizon.
+                0 | 1 => {
+                    let recover_at_ms = Some(at_ms + rng.range_f64(0.10, 0.35) * horizon);
+                    plan.crashes.push(Crash {
+                        device,
+                        at_ms,
+                        recover_at_ms,
+                    });
+                }
+                // Permanent crash.
+                2 => plan.crashes.push(Crash {
+                    device,
+                    at_ms,
+                    recover_at_ms: None,
+                }),
+                // Straggler: 1.5–4× slower.
+                _ => plan.slowdowns.push(Slowdown {
+                    device,
+                    at_ms,
+                    factor: rng.range_f64(1.5, 4.0),
+                }),
+            }
+        }
+        plan
+    }
+
+    /// Check every device index against a fleet of `n_devices`.
+    pub fn validate_for(&self, n_devices: usize) -> Result<(), FaultParseError> {
+        let bad = self
+            .crashes
+            .iter()
+            .map(|c| c.device)
+            .chain(self.slowdowns.iter().map(|s| s.device))
+            .find(|&d| d >= n_devices);
+        match bad {
+            Some(d) => Err(FaultParseError {
+                input: self.name(),
+                reason: format!("device {d} does not exist in a {n_devices}-device fleet"),
+            }),
+            None => Ok(()),
+        }
+    }
+
+    /// Canonical spelling; round-trips through [`FaultPlan::parse`].
+    pub fn name(&self) -> String {
+        let mut clauses: Vec<String> = Vec::new();
+        for c in &self.crashes {
+            clauses.push(match c.recover_at_ms {
+                Some(r) => format!("crash:{}@{}:recover@{}", c.device, c.at_ms, r),
+                None => format!("crash:{}@{}", c.device, c.at_ms),
+            });
+        }
+        for s in &self.slowdowns {
+            clauses.push(format!("slowdown:{}@{}:{}", s.device, s.at_ms, s.factor));
+        }
+        if let Some(lf) = self.launch_failures {
+            clauses.push(format!("launchfail:{}:{}", lf.p, lf.seed));
+        }
+        if clauses.is_empty() {
+            "none".to_string()
+        } else {
+            clauses.join(";")
+        }
+    }
+
+    /// The CSV-ish file form: a header comment plus one clause per line.
+    /// [`FaultPlan::parse`] reads it back.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("# kreorder-faults v1\n");
+        if self.is_empty() {
+            return out;
+        }
+        for clause in self.name().split(';') {
+            out.push_str(clause);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Expand the plan into a time-sorted event stream for the engine.
+    /// Ties break by `(time, device, Down < Recover < Slow)` so the
+    /// expansion is deterministic regardless of clause order.
+    pub fn timeline(&self) -> Vec<FaultEvent> {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        for c in &self.crashes {
+            events.push(FaultEvent {
+                at_ms: c.at_ms,
+                device: c.device,
+                action: FaultAction::Down,
+            });
+            if let Some(r) = c.recover_at_ms {
+                events.push(FaultEvent {
+                    at_ms: r,
+                    device: c.device,
+                    action: FaultAction::Recover,
+                });
+            }
+        }
+        for s in &self.slowdowns {
+            events.push(FaultEvent {
+                at_ms: s.at_ms,
+                device: s.device,
+                action: FaultAction::Slow(s.factor),
+            });
+        }
+        let rank = |a: &FaultAction| match a {
+            FaultAction::Down => 0u8,
+            FaultAction::Recover => 1,
+            FaultAction::Slow(_) => 2,
+        };
+        events.sort_by(|a, b| {
+            a.at_ms
+                .total_cmp(&b.at_ms)
+                .then(a.device.cmp(&b.device))
+                .then(rank(&a.action).cmp(&rank(&b.action)))
+        });
+        events
+    }
+}
+
+/// Per-kernel retry with seeded exponential backoff + jitter. Attempt
+/// numbers are 1-based; once `max_attempts` launch attempts have failed
+/// the kernel is **shed** (counted with a cause), never silently lost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total launch attempts per kernel (including the first). Clamped
+    /// to at least 1 by [`RetryPolicy::new`].
+    pub max_attempts: u32,
+    /// Backoff before the second attempt (doubles each retry).
+    pub base_backoff_ms: f64,
+    /// Cap on the exponential term.
+    pub max_backoff_ms: f64,
+    /// Jitter fraction in `[0, 1]`: the backoff is scaled by a seeded
+    /// uniform draw from `[1 - jitter/2, 1 + jitter/2]`.
+    pub jitter: f64,
+    /// Jitter stream seed.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff_ms: 1.0,
+            max_backoff_ms: 64.0,
+            jitter: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy with the default backoff curve and the given cap + seed.
+    pub fn new(max_attempts: u32, seed: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            seed,
+            ..RetryPolicy::default()
+        }
+    }
+
+    /// Backoff (ms) after failed attempt `attempt` (1-based) of kernel
+    /// `id`: `base · 2^(attempt-1)` capped at `max_backoff_ms`, jittered
+    /// by a pure function of `(seed, id, attempt)` — deterministic and
+    /// interleaving-independent, like [`LaunchFailures::fails`].
+    pub fn backoff_ms(&self, id: u64, attempt: u32) -> f64 {
+        let exp = self.base_backoff_ms * 2f64.powi(attempt.saturating_sub(1).min(62) as i32);
+        let capped = exp.min(self.max_backoff_ms).max(0.0);
+        let jitter = self.jitter.clamp(0.0, 1.0);
+        if jitter == 0.0 {
+            return capped;
+        }
+        let key = self.seed
+            ^ RETRY_SEED_XOR
+            ^ id.wrapping_mul(ID_MIX)
+            ^ ((attempt as u64) << 32);
+        let u = SplitMix64::new(key).next_f64(); // [0, 1)
+        capped * (1.0 + jitter * (u - 0.5))
+    }
+}
+
+/// Fault plan + retry policy, bundled so the fault-aware engine entry
+/// point stays within a sane argument count. `Default` is the no-fault
+/// configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultConfig {
+    /// What to inject.
+    pub plan: FaultPlan,
+    /// How launch failures are retried.
+    pub retry: RetryPolicy,
+}
+
+/// Error for malformed fault-plan clauses; `Display` names the clause,
+/// the reason, and the valid forms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultParseError {
+    /// The offending clause (or plan, for fleet-validation errors).
+    pub input: String,
+    /// What was wrong with it.
+    pub reason: String,
+}
+
+impl fmt::Display for FaultParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invalid fault plan clause `{}`: {} — valid clauses: crash:<dev>@<t>[:recover@<t2>], \
+             slowdown:<dev>@<t>:<factor>, launchfail:<p>:<seed>, joined with `;`",
+            self.input, self.reason
+        )
+    }
+}
+
+impl std::error::Error for FaultParseError {}
+
+/// Human-readable table of the fault-plan clauses (one per line).
+pub fn fault_plan_help_table() -> String {
+    let rows = [
+        ("crash:<dev>@<t>", "device <dev> goes down at virtual time <t> ms"),
+        ("crash:<dev>@<t>:recover@<t2>", "…and comes back at <t2> ms"),
+        ("slowdown:<dev>@<t>:<factor>", "device serves <factor>x slower from <t> ms"),
+        ("launchfail:<p>:<seed>", "each launch attempt fails with probability <p>, seeded"),
+    ];
+    let mut out = String::new();
+    for (name, desc) in rows {
+        out.push_str(&format!("  {name:<30} {desc}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_strings_parse_and_round_trip() {
+        let p = FaultPlan::parse("crash:0@50:recover@200;slowdown:1@10:2.5;launchfail:0.1:7")
+            .unwrap();
+        assert_eq!(p.crashes.len(), 1);
+        assert_eq!(p.crashes[0].device, 0);
+        assert_eq!(p.crashes[0].recover_at_ms, Some(200.0));
+        assert_eq!(p.slowdowns[0].factor, 2.5);
+        assert_eq!(p.launch_failures, Some(LaunchFailures { p: 0.1, seed: 7 }));
+        // Canonical name re-parses to the same plan.
+        assert_eq!(FaultPlan::parse(&p.name()).unwrap(), p);
+        // The CSV form reads back too.
+        assert_eq!(FaultPlan::parse(&p.to_csv()).unwrap(), p);
+        // Whitespace and case are forgiven; empty clauses skipped.
+        let q = FaultPlan::parse(" CRASH:0@50 ; ; Slowdown:1@10:2.5 ").unwrap();
+        assert_eq!(q.crashes.len(), 1);
+        assert_eq!(q.slowdowns.len(), 1);
+    }
+
+    #[test]
+    fn empty_and_comment_only_inputs_are_the_empty_plan() {
+        for s in ["", "  ", "# kreorder-faults v1\n", ";;"] {
+            let p = FaultPlan::parse(s).unwrap();
+            assert!(p.is_empty(), "{s:?}");
+        }
+        assert_eq!(FaultPlan::none().name(), "none");
+    }
+
+    #[test]
+    fn hostile_clauses_error_with_reasons() {
+        for s in [
+            "crash",
+            "crash:0",
+            "crash:0@oops",
+            "crash:-1@5",
+            "crash:0@-5",
+            "crash:0@nan",
+            "crash:0@5:recover@4",
+            "crash:0@5:later@9",
+            "slowdown:0@5",
+            "slowdown:0@5:0",
+            "slowdown:0@5:-2",
+            "slowdown:0@5:inf",
+            "launchfail:2:1",
+            "launchfail:nan:1",
+            "launchfail:0.5:x",
+            "launchfail:0.5",
+            "blorp:1@2",
+            "launchfail:0.1:1;launchfail:0.2:2",
+        ] {
+            let err = FaultPlan::parse(s).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("valid clauses"), "{s}: {msg}");
+        }
+    }
+
+    #[test]
+    fn timeline_expands_sorted_with_pinned_tie_breaks() {
+        let p = FaultPlan::parse("slowdown:1@50:2;crash:0@50;crash:1@10:recover@60").unwrap();
+        let t = p.timeline();
+        let kinds: Vec<(f64, usize)> = t.iter().map(|e| (e.at_ms, e.device)).collect();
+        assert_eq!(kinds, vec![(10.0, 1), (50.0, 0), (50.0, 1), (60.0, 1)]);
+        assert_eq!(t[1].action, FaultAction::Down);
+        assert_eq!(t[2].action, FaultAction::Slow(2.0));
+        assert_eq!(t[3].action, FaultAction::Recover);
+    }
+
+    #[test]
+    fn launch_failures_are_pure_functions_of_seed_id_attempt() {
+        let lf = LaunchFailures { p: 0.5, seed: 9 };
+        for id in 0..64u64 {
+            for attempt in 1..4u32 {
+                assert_eq!(lf.fails(id, attempt), lf.fails(id, attempt));
+            }
+        }
+        let hits = (0..10_000u64).filter(|&id| lf.fails(id, 1)).count();
+        assert!((4_000..6_000).contains(&hits), "p=0.5 hit {hits}/10000");
+        assert!((0..10_000u64).all(|id| !LaunchFailures { p: 0.0, seed: 9 }.fails(id, 1)));
+        assert!((0..10_000u64).all(|id| LaunchFailures { p: 1.0, seed: 9 }.fails(id, 1)));
+    }
+
+    #[test]
+    fn retry_backoff_grows_caps_and_jitters_deterministically() {
+        let r = RetryPolicy {
+            jitter: 0.0,
+            ..RetryPolicy::new(8, 3)
+        };
+        assert_eq!(r.backoff_ms(5, 1), 1.0);
+        assert_eq!(r.backoff_ms(5, 2), 2.0);
+        assert_eq!(r.backoff_ms(5, 3), 4.0);
+        assert_eq!(r.backoff_ms(5, 20), 64.0); // capped
+        let j = RetryPolicy::new(8, 3);
+        let b = j.backoff_ms(5, 2);
+        assert_eq!(b, j.backoff_ms(5, 2), "jitter must replay");
+        assert!((1.5..=2.5).contains(&b), "jittered 2ms backoff was {b}");
+        assert_ne!(j.backoff_ms(5, 2), j.backoff_ms(6, 2), "per-kernel jitter");
+        assert!(RetryPolicy::new(0, 0).max_attempts >= 1);
+    }
+
+    #[test]
+    fn generated_plans_are_deterministic_and_in_range() {
+        let a = FaultPlan::generate(11, 4, 1_000.0, 12);
+        let b = FaultPlan::generate(11, 4, 1_000.0, 12);
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::generate(12, 4, 1_000.0, 12));
+        assert_eq!(a.crashes.len() + a.slowdowns.len(), 12);
+        assert!(a.validate_for(4).is_ok());
+        for c in &a.crashes {
+            assert!(c.device < 4 && c.at_ms >= 0.0 && c.at_ms < 1_000.0);
+            if let Some(r) = c.recover_at_ms {
+                assert!(r > c.at_ms);
+            }
+        }
+        for s in &a.slowdowns {
+            assert!(s.device < 4 && (1.5..=4.0).contains(&s.factor));
+        }
+    }
+
+    #[test]
+    fn validate_for_rejects_out_of_range_devices() {
+        let p = FaultPlan::parse("crash:3@10").unwrap();
+        assert!(p.validate_for(4).is_ok());
+        let err = p.validate_for(2).unwrap_err();
+        assert!(err.to_string().contains("device 3"), "{err}");
+        assert!(err.to_string().contains("2-device"), "{err}");
+    }
+
+    #[test]
+    fn help_table_covers_the_clauses() {
+        let t = fault_plan_help_table();
+        for name in ["crash:<dev>@<t>", "slowdown:<dev>@<t>:<factor>", "launchfail:<p>:<seed>"] {
+            assert!(t.contains(name), "{t}");
+        }
+    }
+}

@@ -10,32 +10,53 @@
 //! strategy seed, backend) produce **bit-identical** per-kernel
 //! timestamps on every machine (`tests/fleet_determinism.rs` pins it).
 //!
-//! Five event kinds drive the loop, processed in this fixed priority at
+//! [`simulate_fleet_with_faults`] is the same loop with a
+//! [`FaultConfig`] threaded through it; `simulate_fleet` is the
+//! empty-plan special case, and an empty plan is a **strict no-op** —
+//! no extra events, no PRNG draws, no float arithmetic — so the
+//! fault-free timestamps are bit-identical through either entry point
+//! (`tests/fault_recovery.rs` pins that too).
+//!
+//! Seven event kinds drive the loop, processed in this fixed priority at
 //! equal times:
 //!
-//! 1. **routing decision** — a popped arrival is placed on a device;
-//! 2. **completion** — a kernel's model finish time passed;
-//! 3. **batch start** — a device is free and a closed window's decision
+//! 1. **fault** — a [`FaultPlan`] event fires (device down / recover /
+//!    slowdown). A device going **down** orphans everything it holds —
+//!    open window, queued batches, and the in-flight remainder of its
+//!    executing batch — back to the router, which re-routes each kernel
+//!    under the live health state;
+//! 2. **routing decision** — a popped arrival is placed on a device
+//!    (under a `launchfail` process this is also where a launch attempt
+//!    can fail: the kernel backs off per the [`RetryPolicy`] and, past
+//!    the attempt cap, is **shed** with a cause — never silently lost);
+//! 3. **completion** — a kernel's model finish time passed;
+//! 4. **batch start** — a device is free and a closed window's decision
 //!    overhead has elapsed (device ties break toward the lowest index);
-//! 4. **arrival** — the source's next kernel enters the router;
-//! 5. **recheck** — some device's [`WindowPolicy`] `Wait` deadline
+//! 5. **arrival** — the source's next kernel enters the router;
+//! 6. **retry** — a failed launch's backoff elapsed; the kernel
+//!    re-enters the router;
+//! 7. **recheck** — some device's [`WindowPolicy`] `Wait` deadline
 //!    landed.
 //!
-//! Every device's window policy is consulted after every event; the
+//! Every *up* device's window policy is consulted after every event; the
 //! first device (by index) whose policy says `Close` runs the shared
 //! [`OnlineReorderer`] over its own pending kernels and queues the
-//! batch behind its own device.
+//! batch behind its own device. A [`Health::Degraded`] device (a
+//! straggler) skips the search and serves its windows in FIFO arrival
+//! order — reorder effort is wasted on a device that is already late —
+//! and the report counts every such degraded decision.
 
-use super::report::{FleetBatchRecord, FleetKernelRecord, FleetReport};
-use super::route::{DeviceLoad, FleetView, RoutePolicy};
+use super::report::{FleetBatchRecord, FleetKernelRecord, FleetReport, ShedRecord};
+use super::route::{DeviceLoad, FleetView, Health, RoutePolicy};
 use super::spec::FleetSpec;
 use crate::exec::ExecutionBackend;
+use crate::fault::{FaultAction, FaultConfig, FaultPlan};
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::online::arrivals::{Arrival, ArrivalSource};
 use crate::online::window::{WindowDecision, WindowPolicy, WindowState};
-use crate::online::{OnlineOpts, OnlineReorderer};
+use crate::online::{OnlineOpts, OnlineReorderer, ReorderDecision};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 /// Totally ordered f64 for the completion heap (event times are always
 /// finite).
@@ -87,18 +108,31 @@ struct Dev {
     outstanding: usize,
     busy_ms: f64,
     recheck: Option<f64>,
+    /// Injected state: up / straggling / down.
+    health: Health,
+    /// Injected service-time multiplier (1.0 = nominal).
+    slow: f64,
+    /// The executing batch's members with their finish times, kept so a
+    /// crash can orphan the in-flight remainder. Replaced wholesale at
+    /// each batch start (the device is serial, so by then every previous
+    /// member has completed).
+    running: Vec<(f64, Open)>,
 }
 
-/// Event priorities at equal times (lower wins).
-const EV_ROUTE: u8 = 0;
-const EV_COMPLETION: u8 = 1;
-const EV_BATCH_START: u8 = 2;
-const EV_ARRIVAL: u8 = 3;
-const EV_RECHECK: u8 = 4;
+/// Event priorities at equal times (lower wins). The relative order of
+/// the five fault-free kinds is unchanged from the pre-fault engine, so
+/// an empty plan replays bit-identically.
+const EV_FAULT: u8 = 0;
+const EV_ROUTE: u8 = 1;
+const EV_COMPLETION: u8 = 2;
+const EV_BATCH_START: u8 = 3;
+const EV_ARRIVAL: u8 = 4;
+const EV_RETRY: u8 = 5;
+const EV_RECHECK: u8 = 6;
 
 /// Close device `dev`'s open window at `now`: reorder within the
 /// per-decision budget and queue the batch behind the device. Returns
-/// the evaluations the decision spent.
+/// `(evaluations spent, decision was a degraded FIFO fallback)`.
 fn close_window(
     dev: &mut Dev,
     now: f64,
@@ -106,10 +140,23 @@ fn close_window(
     decision_ms_per_eval: f64,
     reorderer: &OnlineReorderer,
     make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
-) -> u64 {
+) -> (u64, bool) {
     let members = std::mem::take(&mut dev.pending);
-    let profiles: Vec<KernelProfile> = members.iter().map(|m| m.profile.clone()).collect();
-    let decision = reorderer.decide(&dev.gpu, &profiles, make_backend);
+    let (decision, degraded) = if dev.health == Health::Degraded {
+        // Straggler: don't spend search budget on a device that is
+        // already late — serve the FIFO-guarded arrival order.
+        let d = ReorderDecision {
+            order: (0..members.len()).collect(),
+            evals: 0,
+            degraded: true,
+        };
+        (d, true)
+    } else {
+        let profiles: Vec<KernelProfile> = members.iter().map(|m| m.profile.clone()).collect();
+        let d = reorderer.decide(&dev.gpu, &profiles, make_backend);
+        let degraded = d.degraded;
+        (d, degraded)
+    };
     let evals = decision.evals;
     dev.queue.push_back(Closed {
         batch: batch_id,
@@ -119,7 +166,7 @@ fn close_window(
         order: decision.order,
         evals,
     });
-    evals
+    (evals, degraded)
 }
 
 /// Admissible lower bound (ms) on everything device `dev` still owes:
@@ -143,11 +190,14 @@ fn price_backlog(dev: &mut Dev, now: f64) -> f64 {
     residual + if lb.is_finite() { lb.max(0.0) } else { 0.0 }
 }
 
-/// Build the per-device snapshot a [`RoutePolicy`] decides over.
-/// Backlog pricing costs a backend `prepare` per device, so it only
-/// happens when the policy asked for it ([`RoutePolicy::needs_pricing`]).
-fn device_loads(devs: &mut [Dev], now: f64, price: bool) -> Vec<DeviceLoad> {
-    let mut loads = Vec::with_capacity(devs.len());
+/// Fill `loads` with the per-device snapshot a [`RoutePolicy`] decides
+/// over. The caller owns the buffer and reuses it across routing
+/// decisions (one allocation per run, not per decision — the first step
+/// of the ROADMAP O(log D) device-view item). Backlog pricing costs a
+/// backend `prepare` per device, so it only happens when the policy
+/// asked for it ([`RoutePolicy::needs_pricing`]).
+fn device_loads(devs: &mut [Dev], now: f64, price: bool, loads: &mut Vec<DeviceLoad>) {
+    loads.clear();
     for (d, dev) in devs.iter_mut().enumerate() {
         let backlog_lb_ms = if price { price_backlog(dev, now) } else { f64::NAN };
         loads.push(DeviceLoad {
@@ -158,15 +208,51 @@ fn device_loads(devs: &mut [Dev], now: f64, price: bool) -> Vec<DeviceLoad> {
             free_at_ms: dev.free_at,
             peak_compute: dev.gpu.peak_compute(),
             backlog_lb_ms,
+            health: dev.health,
         });
     }
-    loads
 }
 
-/// Run the fleet scheduler over one arrival stream. See the module docs
-/// for the event model; the returned [`FleetReport`] carries every
-/// per-kernel timestamp with its device.
+/// Run the fleet scheduler over one arrival stream with no injected
+/// faults. See the module docs for the event model; the returned
+/// [`FleetReport`] carries every per-kernel timestamp with its device.
 pub fn simulate_fleet(
+    fleet: &FleetSpec,
+    source: Box<dyn ArrivalSource>,
+    route: Box<dyn RoutePolicy>,
+    make_window: &dyn Fn() -> Box<dyn WindowPolicy>,
+    reorderer: &OnlineReorderer,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    opts: &OnlineOpts,
+) -> FleetReport {
+    simulate_fleet_with_faults(
+        fleet,
+        source,
+        route,
+        make_window,
+        reorderer,
+        make_backend,
+        opts,
+        &FaultConfig::default(),
+    )
+}
+
+/// [`simulate_fleet`] with a [`FaultConfig`] threaded through the loop.
+///
+/// The no-kernel-lost invariant (`tests/fault_recovery.rs`): every
+/// arrival ends as exactly one of a completed kernel record, or a
+/// [`ShedRecord`] with a cause (retry cap exhausted, or stranded on a
+/// crashed device that never recovers). Equal `(fault plan, retry,
+/// config)` replay **bit-identically**; an empty plan reproduces
+/// [`simulate_fleet`] exactly.
+///
+/// # Panics
+///
+/// Panics if the fleet is empty or the plan names a device the fleet
+/// does not have (validate with [`FaultPlan::validate_for`] first at
+/// the CLI boundary).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet_with_faults(
     fleet: &FleetSpec,
     mut source: Box<dyn ArrivalSource>,
     mut route: Box<dyn RoutePolicy>,
@@ -174,8 +260,13 @@ pub fn simulate_fleet(
     reorderer: &OnlineReorderer,
     make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
     opts: &OnlineOpts,
+    faults: &FaultConfig,
 ) -> FleetReport {
     assert!(!fleet.devices.is_empty(), "simulate_fleet needs at least one device");
+    faults
+        .plan
+        .validate_for(fleet.devices.len())
+        .unwrap_or_else(|e| panic!("{e}"));
     let mut devs: Vec<Dev> = fleet
         .devices
         .iter()
@@ -189,6 +280,9 @@ pub fn simulate_fleet(
             outstanding: 0,
             busy_ms: 0.0,
             recheck: None,
+            health: Health::Healthy,
+            slow: 1.0,
+            running: Vec::new(),
         })
         .collect();
     let source_name = source.name();
@@ -202,6 +296,20 @@ pub fn simulate_fleet(
         0.0
     };
 
+    // Fault machinery. With an empty plan every piece below is inert:
+    // the timeline is empty (no EV_FAULT candidates), `launchfail` is
+    // `None` (no draws at route time), and the retry queue never fills.
+    let timeline = faults.plan.timeline();
+    let mut fault_idx = 0usize;
+    let launchfail = faults.plan.launch_failures;
+    let retry = &faults.retry;
+    // Launch attempts per kernel id (only touched under `launchfail`).
+    let mut attempts: HashMap<u64, u32> = HashMap::new();
+    // Kernels backing off after a failed launch: (due time, id) heap
+    // plus the parked arrival payloads.
+    let mut retry_q: BinaryHeap<Reverse<(EventTime, u64)>> = BinaryHeap::new();
+    let mut parked: HashMap<u64, Arrival> = HashMap::new();
+
     let mut now = 0.0f64;
     // Arrivals popped from the source but not yet placed on a device,
     // with the time each one entered the router.
@@ -209,20 +317,27 @@ pub fn simulate_fleet(
     // Min-heap of (finish time, kernel id, device) completion events.
     let mut completions: BinaryHeap<Reverse<(EventTime, u64, usize)>> = BinaryHeap::new();
     let mut next_batch = 0u64;
+    // Scratch device view, reused across routing decisions.
+    let mut loads: Vec<DeviceLoad> = Vec::with_capacity(devs.len());
 
     let mut kernels: Vec<FleetKernelRecord> = Vec::new();
     let mut batches: Vec<FleetBatchRecord> = Vec::new();
     let mut decision_evals = 0u64;
     let mut n_unsimulable = 0usize;
+    let mut n_degraded_decisions = 0u64;
+    let mut n_rerouted = 0u64;
+    let mut n_launch_failures = 0u64;
+    let mut shed: Vec<ShedRecord> = Vec::new();
 
     loop {
-        // Ask every device's policy about its open window. Closing never
-        // advances time, so each policy always sees the post-close state
-        // before the clock moves again.
+        // Ask every up device's policy about its open window. Closing
+        // never advances time, so each policy always sees the post-close
+        // state before the clock moves again. Down devices are skipped:
+        // their windows are frozen until recovery (or shed at drain).
         let mut close_dev: Option<usize> = None;
         for (d, dev) in devs.iter_mut().enumerate() {
             dev.recheck = None;
-            if dev.pending.is_empty() {
+            if dev.health == Health::Down || dev.pending.is_empty() {
                 continue;
             }
             let state = WindowState {
@@ -247,7 +362,7 @@ pub fn simulate_fleet(
             }
         }
         if let Some(d) = close_dev {
-            decision_evals += close_window(
+            let (evals, degraded) = close_window(
                 &mut devs[d],
                 now,
                 next_batch,
@@ -255,6 +370,10 @@ pub fn simulate_fleet(
                 reorderer,
                 make_backend,
             );
+            decision_evals += evals;
+            if degraded {
+                n_degraded_decisions += 1;
+            }
             next_batch += 1;
             continue;
         }
@@ -262,10 +381,14 @@ pub fn simulate_fleet(
         // Earliest event, ties broken by the fixed priority order
         // (batch-start device ties break toward the lowest index by the
         // strict `<` scan).
+        let t_fault = timeline.get(fault_idx).map(|e| e.at_ms);
         let t_route = to_route.front().map(|(t, _)| *t);
         let t_completion = completions.peek().map(|Reverse((t, _, _))| t.0);
         let mut start: Option<(f64, usize)> = None;
         for (d, dev) in devs.iter().enumerate() {
+            if dev.health == Health::Down {
+                continue; // a down device cannot start work
+            }
             if let Some(b) = dev.queue.front() {
                 let t = b.ready_ms.max(dev.free_at);
                 if start.map_or(true, |(bt, _)| t < bt) {
@@ -274,12 +397,15 @@ pub fn simulate_fleet(
             }
         }
         let t_arrival = source.next_at();
+        let t_retry = retry_q.peek().map(|Reverse((t, _))| t.0);
         let t_recheck = devs.iter().filter_map(|d| d.recheck).reduce(f64::min);
         let candidates = [
+            (t_fault, EV_FAULT),
             (t_route, EV_ROUTE),
             (t_completion, EV_COMPLETION),
             (start.map(|(t, _)| t), EV_BATCH_START),
             (t_arrival, EV_ARRIVAL),
+            (t_retry, EV_RETRY),
             (t_recheck, EV_RECHECK),
         ];
         let mut next: Option<(f64, u8)> = None;
@@ -297,13 +423,15 @@ pub fn simulate_fleet(
         match next {
             None => {
                 // End-of-stream drain: nothing else can ever happen, so
-                // open windows close regardless of policy, lowest device
-                // first (a fixed:<k> window would otherwise strand its
-                // remainder forever).
-                match devs.iter().position(|d| !d.pending.is_empty()) {
-                    None => break, // drained and idle everywhere: done
+                // open windows on up devices close regardless of policy,
+                // lowest device first (a fixed:<k> window would
+                // otherwise strand its remainder forever).
+                match devs
+                    .iter()
+                    .position(|d| d.health != Health::Down && !d.pending.is_empty())
+                {
                     Some(d) => {
-                        decision_evals += close_window(
+                        let (evals, degraded) = close_window(
                             &mut devs[d],
                             now,
                             next_batch,
@@ -311,7 +439,46 @@ pub fn simulate_fleet(
                             reorderer,
                             make_backend,
                         );
+                        decision_evals += evals;
+                        if degraded {
+                            n_degraded_decisions += 1;
+                        }
                         next_batch += 1;
+                    }
+                    None => {
+                        // Anything still held by a device that is down
+                        // with no recovery coming (the fault timeline is
+                        // exhausted — it was a candidate above) can
+                        // never be served: shed it with a cause rather
+                        // than losing it.
+                        let mut stranded = false;
+                        for (d, dev) in devs.iter_mut().enumerate() {
+                            if dev.health != Health::Down {
+                                continue;
+                            }
+                            let mut orphans: Vec<Open> = Vec::new();
+                            for b in dev.queue.drain(..) {
+                                orphans.extend(b.members);
+                            }
+                            orphans.append(&mut dev.pending);
+                            for o in orphans {
+                                stranded = true;
+                                dev.outstanding -= 1;
+                                shed.push(ShedRecord {
+                                    id: o.id,
+                                    arrival_ms: o.arrival_ms,
+                                    attempts: attempts.get(&o.id).copied().unwrap_or(1),
+                                    cause: format!("stranded on crashed device {d}"),
+                                });
+                                // The kernel left the system: closed-loop
+                                // sources must not wait for it forever.
+                                source.on_completion(now, o.id);
+                            }
+                        }
+                        if stranded {
+                            continue;
+                        }
+                        break; // drained and idle everywhere: done
                     }
                 }
             }
@@ -319,11 +486,119 @@ pub fn simulate_fleet(
                 debug_assert!(t >= now, "event time moved backwards");
                 now = t.max(now);
                 match kind {
+                    EV_FAULT => {
+                        let ev = &timeline[fault_idx];
+                        fault_idx += 1;
+                        let d = ev.device;
+                        match ev.action {
+                            FaultAction::Down => {
+                                if devs[d].health != Health::Down {
+                                    let dev = &mut devs[d];
+                                    dev.health = Health::Down;
+                                    // The executing batch's remainder is
+                                    // abandoned: give back the residual
+                                    // busy time and retract the records
+                                    // and completion events of members
+                                    // that had not finished yet.
+                                    if dev.free_at > now {
+                                        dev.busy_ms -= dev.free_at - now;
+                                        dev.free_at = now;
+                                    }
+                                    let mut orphans: Vec<Open> = Vec::new();
+                                    let mut aborted: Vec<u64> = Vec::new();
+                                    for (finish, o) in std::mem::take(&mut dev.running) {
+                                        if finish > now {
+                                            aborted.push(o.id);
+                                            orphans.push(o);
+                                        }
+                                    }
+                                    for b in dev.queue.drain(..) {
+                                        orphans.extend(b.members);
+                                    }
+                                    orphans.append(&mut dev.pending);
+                                    if !aborted.is_empty() {
+                                        kernels.retain(|k| {
+                                            !(k.device == d && aborted.contains(&k.id))
+                                        });
+                                        let heap = std::mem::take(&mut completions);
+                                        completions = heap
+                                            .into_iter()
+                                            .filter(|Reverse((_, id, dd))| {
+                                                !(*dd == d && aborted.contains(id))
+                                            })
+                                            .collect();
+                                    }
+                                    // Hand every orphan back to the
+                                    // router; it re-routes them under
+                                    // the post-crash health state.
+                                    for o in orphans {
+                                        devs[d].outstanding -= 1;
+                                        n_rerouted += 1;
+                                        to_route.push_back((
+                                            now,
+                                            Arrival {
+                                                id: o.id,
+                                                at_ms: o.arrival_ms,
+                                                profile: o.profile,
+                                            },
+                                        ));
+                                    }
+                                }
+                            }
+                            FaultAction::Recover => {
+                                let dev = &mut devs[d];
+                                if dev.health == Health::Down {
+                                    dev.health = if dev.slow > 1.0 {
+                                        Health::Degraded
+                                    } else {
+                                        Health::Healthy
+                                    };
+                                    dev.free_at = dev.free_at.max(now);
+                                }
+                            }
+                            FaultAction::Slow(factor) => {
+                                let dev = &mut devs[d];
+                                dev.slow = factor;
+                                if dev.health != Health::Down {
+                                    dev.health = if factor > 1.0 {
+                                        Health::Degraded
+                                    } else {
+                                        Health::Healthy
+                                    };
+                                }
+                            }
+                        }
+                    }
                     EV_ROUTE => {
                         let (_, a) = to_route.pop_front().expect("peeked");
-                        let loads = device_loads(&mut devs, now, needs_pricing);
+                        device_loads(&mut devs, now, needs_pricing, &mut loads);
                         let view = FleetView { now_ms: now, devices: &loads };
                         let d = route.route(&a.profile, &view).min(devs.len() - 1);
+                        if let Some(lf) = launchfail {
+                            let attempt = attempts.entry(a.id).or_insert(0);
+                            *attempt += 1;
+                            if lf.fails(a.id, *attempt) {
+                                n_launch_failures += 1;
+                                route.on_outcome(d, false, now);
+                                if *attempt >= retry.max_attempts {
+                                    shed.push(ShedRecord {
+                                        id: a.id,
+                                        arrival_ms: a.at_ms,
+                                        attempts: *attempt,
+                                        cause: format!(
+                                            "launch failed {attempt} times (retry cap)"
+                                        ),
+                                    });
+                                    source.on_completion(now, a.id);
+                                } else {
+                                    let back = retry.backoff_ms(a.id, *attempt);
+                                    retry_q.push(Reverse((EventTime(now + back), a.id)));
+                                    parked.insert(a.id, a);
+                                }
+                                continue;
+                            }
+                            route.on_outcome(d, true, now);
+                        }
                         devs[d].outstanding += 1;
                         devs[d].pending.push(Open {
                             id: a.id,
@@ -340,11 +615,18 @@ pub fn simulate_fleet(
                     EV_BATCH_START => {
                         let (_, d) = start.expect("batch-start chosen from a queued batch");
                         let dev = &mut devs[d];
-                        let b = dev.queue.pop_front().expect("peeked");
+                        let Closed {
+                            batch,
+                            close_ms,
+                            ready_ms,
+                            members,
+                            order,
+                            evals,
+                        } = dev.queue.pop_front().expect("peeked");
                         let profiles: Vec<KernelProfile> =
-                            b.members.iter().map(|m| m.profile.clone()).collect();
-                        let report = dev.backend.execute(&dev.gpu, &profiles, &b.order);
-                        let makespan = if report.makespan_ms.is_nan() {
+                            members.iter().map(|m| m.profile.clone()).collect();
+                        let report = dev.backend.execute(&dev.gpu, &profiles, &order);
+                        let mut makespan = if report.makespan_ms.is_nan() {
                             // Unsimulable batch: serve it in zero time
                             // rather than wedging the queue (validated
                             // sources never hit this; the report counts
@@ -354,39 +636,62 @@ pub fn simulate_fleet(
                         } else {
                             report.makespan_ms
                         };
+                        // Straggler stretch (inert at the nominal 1.0:
+                        // the fault-free path sees no extra float op).
+                        let stretch = dev.slow != 1.0;
+                        if stretch {
+                            makespan *= dev.slow;
+                        }
                         dev.free_at = now + makespan;
                         dev.busy_ms += makespan;
+                        let n_members = members.len();
+                        let mut finish_dt = vec![0.0f64; n_members];
                         for o in &report.outcomes {
-                            let m = &b.members[o.index];
-                            let dt = if o.finish_ms.is_nan() { 0.0 } else { o.finish_ms };
+                            let m = &members[o.index];
+                            let mut dt = if o.finish_ms.is_nan() { 0.0 } else { o.finish_ms };
+                            if stretch {
+                                dt *= dev.slow;
+                            }
+                            finish_dt[o.index] = dt;
                             let finish = now + dt;
                             kernels.push(FleetKernelRecord {
                                 id: m.id,
                                 device: d,
                                 arrival_ms: m.arrival_ms,
                                 route_ms: m.route_ms,
-                                close_ms: b.close_ms,
+                                close_ms,
                                 start_ms: now,
                                 finish_ms: finish,
-                                batch: b.batch,
+                                batch,
                                 position: o.position,
                             });
                             completions.push(Reverse((EventTime(finish), m.id, d)));
                         }
+                        // Keep the members with their finish times so a
+                        // crash can orphan the unfinished remainder.
+                        dev.running.clear();
+                        for (i, m) in members.into_iter().enumerate() {
+                            dev.running.push((now + finish_dt[i], m));
+                        }
                         batches.push(FleetBatchRecord {
-                            id: b.batch,
+                            id: batch,
                             device: d,
-                            n: b.members.len(),
-                            close_ms: b.close_ms,
-                            ready_ms: b.ready_ms,
+                            n: n_members,
+                            close_ms,
+                            ready_ms,
                             start_ms: now,
                             makespan_ms: makespan,
-                            evals: b.evals,
-                            order: b.order,
+                            evals,
+                            order,
                         });
                     }
                     EV_ARRIVAL => {
                         let a = source.pop(now);
+                        to_route.push_back((now, a));
+                    }
+                    EV_RETRY => {
+                        let Reverse((_, id)) = retry_q.pop().expect("peeked");
+                        let a = parked.remove(&id).expect("parked retry payload");
                         to_route.push_back((now, a));
                     }
                     _ => {} // EV_RECHECK: the policies re-decide above
@@ -397,6 +702,7 @@ pub fn simulate_fleet(
 
     let span_ms = kernels.iter().map(|k| k.finish_ms).fold(0.0, f64::max);
     kernels.sort_by_key(|k| k.id);
+    shed.sort_by_key(|s| s.id);
     FleetReport {
         source: source_name,
         route: route_name,
@@ -409,6 +715,11 @@ pub fn simulate_fleet(
         device_busy_ms: devs.iter().map(|d| d.busy_ms).collect(),
         decision_evals,
         n_unsimulable,
+        n_degraded_decisions,
+        n_rerouted,
+        n_launch_failures,
+        n_fault_events: timeline.len(),
+        shed,
     }
 }
 
@@ -416,6 +727,7 @@ pub fn simulate_fleet(
 mod tests {
     use super::*;
     use crate::exec::SimulatorBackend;
+    use crate::fault::RetryPolicy;
     use crate::fleet::route::parse_route_policy;
     use crate::online::arrivals::{ReplaySource, Trace};
     use crate::online::window::parse_window_policy;
@@ -436,6 +748,29 @@ mod tests {
             &OnlineReorderer::fifo(),
             sim().as_ref(),
             &OnlineOpts::default(),
+        )
+    }
+
+    fn run_faulty(
+        fleet: &FleetSpec,
+        route: &str,
+        family: &str,
+        n: usize,
+        rate: f64,
+        faults: &FaultConfig,
+    ) -> FleetReport {
+        let gpu = GpuSpec::gtx580();
+        let trace = Trace::poisson(family, n, rate, 7);
+        let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+        simulate_fleet_with_faults(
+            fleet,
+            source,
+            parse_route_policy(route).unwrap(),
+            &|| parse_window_policy("linger:6:30").unwrap(),
+            &OnlineReorderer::fifo(),
+            sim().as_ref(),
+            &OnlineOpts::default(),
+            faults,
         )
     }
 
@@ -465,6 +800,11 @@ mod tests {
         }
         assert_eq!(r.n_unsimulable, 0);
         assert_eq!(r.device_busy_ms.len(), 3);
+        // No faults: all fault accounting is zero.
+        assert!(r.shed.is_empty());
+        assert_eq!(r.n_rerouted, 0);
+        assert_eq!(r.n_launch_failures, 0);
+        assert_eq!(r.n_fault_events, 0);
     }
 
     #[test]
@@ -542,5 +882,70 @@ mod tests {
         );
         assert_eq!(r.kernels.len(), 8);
         assert!(r.kernels.iter().all(|k| k.device == 1));
+    }
+
+    #[test]
+    fn crash_orphans_reroute_and_nothing_is_lost() {
+        let fleet = FleetSpec::homogeneous(2);
+        let faults = FaultConfig {
+            plan: FaultPlan::parse("crash:0@20").unwrap(),
+            retry: RetryPolicy::default(),
+        };
+        let r = run_faulty(&fleet, "jsq", "uniform", 32, 600.0, &faults);
+        // jsq routes around the dead device: everything completes.
+        assert_eq!(r.kernels.len() + r.shed.len(), 32);
+        assert!(r.shed.is_empty(), "{:?}", r.shed);
+        assert!(
+            r.kernels.iter().all(|k| k.device == 1 || k.finish_ms <= 20.0 + 1e-9),
+            "no kernel may finish on device 0 after the crash"
+        );
+        assert_eq!(r.n_fault_events, 1);
+    }
+
+    #[test]
+    fn blind_routing_under_a_permanent_crash_sheds_with_causes() {
+        let fleet = FleetSpec::homogeneous(2);
+        let faults = FaultConfig {
+            plan: FaultPlan::parse("crash:0@5").unwrap(),
+            retry: RetryPolicy::default(),
+        };
+        let r = run_faulty(&fleet, "roundrobin", "uniform", 24, 600.0, &faults);
+        // Round-robin keeps dealing to the dead device; those kernels
+        // are shed at drain, with a cause — the conservation invariant.
+        assert_eq!(r.kernels.len() + r.shed.len(), 24);
+        assert!(!r.shed.is_empty());
+        assert!(r.shed.iter().all(|s| s.cause.contains("crashed device 0")), "{:?}", r.shed);
+        assert!(r.kernels.iter().all(|k| k.device == 1 || k.finish_ms <= 5.0 + 1e-9));
+    }
+
+    #[test]
+    fn empty_plan_through_the_fault_entry_point_is_bit_identical() {
+        let fleet = FleetSpec::parse("1,0.5").unwrap();
+        let a = run(&fleet, "lrw", "skewed", 32, 800.0);
+        let b = run_faulty(&fleet, "lrw", "skewed", 32, 800.0, &FaultConfig::default());
+        assert_eq!(a.kernels.len(), b.kernels.len());
+        for (x, y) in a.kernels.iter().zip(&b.kernels) {
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+            assert_eq!(x.device, y.device);
+        }
+        assert_eq!(a.span_ms.to_bits(), b.span_ms.to_bits());
+    }
+
+    #[test]
+    fn plans_naming_missing_devices_panic_with_context() {
+        let fleet = FleetSpec::homogeneous(2);
+        let faults = FaultConfig {
+            plan: FaultPlan::parse("crash:7@5").unwrap(),
+            retry: RetryPolicy::default(),
+        };
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_faulty(&fleet, "jsq", "uniform", 4, 200.0, &faults)
+        }))
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("device 7"), "{msg}");
     }
 }

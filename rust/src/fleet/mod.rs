@@ -14,22 +14,31 @@
 //! ```
 //!
 //! * [`RoutePolicy`] + [`parse_route_policy`] — the routing registry
-//!   (`roundrobin`, `jsq`, `lrw`, `p2c:<seed>`, `affinity`), shared by
-//!   the virtual-clock engine here and the live thread coordinator
+//!   (`roundrobin`, `jsq`, `lrw`, `p2c:<seed>`, `affinity`, and the
+//!   [`Circuit`] breaker wrapper `circuit:<inner>`), shared by the
+//!   virtual-clock engine here and the live thread coordinator
 //!   ([`crate::coordinator::CoordinatorBuilder::route_policy`]).
 //! * [`FleetSpec`] — the devices, with heterogeneity as per-device
 //!   speed factors (`--devices 1,1,0.5`).
 //! * [`simulate_fleet`] — the deterministic discrete-event loop over D
-//!   devices (routing decision < completion < batch start < arrival <
-//!   recheck at equal times); bit-identical replay per configuration.
+//!   devices (fault < routing decision < completion < batch start <
+//!   arrival < retry < recheck at equal times); bit-identical replay
+//!   per configuration. [`simulate_fleet_with_faults`] is the same loop
+//!   with a [`crate::fault::FaultConfig`] threaded through it: crashes
+//!   orphan a device's backlog back to the router, [`Health`] lets the
+//!   load-aware policies route around dead devices, failed launches
+//!   retry with seeded backoff and are shed past the cap — never lost.
 //! * [`FleetReport`] — per-kernel timestamps with device provenance,
-//!   per-device utilization/imbalance and fleet percentile rollups.
+//!   per-device utilization/imbalance, fleet percentile rollups, and
+//!   the fault ledger ([`ShedRecord`], reroute/degradation counters).
 //! * [`fleet_lower_bound`] — the clairvoyant fleet oracle the span is
 //!   priced against.
 //!
 //! `benches/fleet_routing.rs` replays identical traces through every
 //! route policy on homogeneous and heterogeneous fleets and gates
-//! routed p99 sojourn against the `roundrobin` baseline in CI.
+//! routed p99 sojourn against the `roundrobin` baseline in CI;
+//! `benches/fault_tolerance.rs` gates the recovery story (health-aware
+//! rerouting beats health-blind routing under a 1-of-4 crash plan).
 
 pub mod engine;
 pub mod oracle;
@@ -37,12 +46,12 @@ pub mod report;
 pub mod route;
 pub mod spec;
 
-pub use engine::simulate_fleet;
+pub use engine::{simulate_fleet, simulate_fleet_with_faults};
 pub use oracle::fleet_lower_bound;
-pub use report::{p99_speedup, FleetBatchRecord, FleetKernelRecord, FleetReport};
+pub use report::{p99_speedup, FleetBatchRecord, FleetKernelRecord, FleetReport, ShedRecord};
 pub use route::{
-    parse_route_policy, route_policy_help_table, Affinity, DeviceLoad, FleetView, Jsq, Lrw, P2c,
-    RoundRobin, RouteParseError, RoutePolicy,
+    parse_route_policy, route_policy_help_table, Affinity, Circuit, DeviceLoad, FleetView, Health,
+    Jsq, Lrw, P2c, RoundRobin, RouteParseError, RoutePolicy,
 };
 pub use spec::{FleetMismatchError, FleetParseError, FleetSpec};
 

@@ -40,6 +40,21 @@ pub struct FleetBatchRecord {
     pub order: Vec<usize>,
 }
 
+/// A kernel that left the system unserved — retry cap exhausted, or
+/// stranded on a crashed device at drain. Always carries a cause: the
+/// no-kernel-lost invariant (`tests/fault_recovery.rs`) is that every
+/// arrival is a kernel record or a shed record, never neither.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub arrival_ms: f64,
+    /// Launch attempts spent before shedding (1 when launch never failed
+    /// — e.g. stranded on a dead device).
+    pub attempts: u32,
+    /// Human-readable reason the kernel was shed.
+    pub cause: String,
+}
+
 /// Everything [`crate::fleet::simulate_fleet`] measured, kernels sorted
 /// by id.
 #[derive(Debug, Clone)]
@@ -57,6 +72,17 @@ pub struct FleetReport {
     pub device_busy_ms: Vec<f64>,
     pub decision_evals: u64,
     pub n_unsimulable: usize,
+    /// Window decisions served in FIFO arrival order because the device
+    /// was degraded or the search's FIFO guard rejected its order.
+    pub n_degraded_decisions: u64,
+    /// Kernels handed back to the router by a device crash.
+    pub n_rerouted: u64,
+    /// Launch attempts that failed under a `launchfail` process.
+    pub n_launch_failures: u64,
+    /// Fault events the plan injected (crash/recover/slowdown).
+    pub n_fault_events: usize,
+    /// Kernels shed with a cause (sorted by id). Empty without faults.
+    pub shed: Vec<ShedRecord>,
 }
 
 impl FleetReport {
@@ -158,7 +184,24 @@ impl FleetReport {
         self.kernels.len() as f64 / self.batches.len() as f64
     }
 
-    /// Multi-line human-readable rollup.
+    /// Kernels shed (unserved, with a cause).
+    pub fn n_shed(&self) -> usize {
+        self.shed.len()
+    }
+
+    /// Fraction of arrivals that completed (1.0 without faults).
+    pub fn completion_rate(&self) -> f64 {
+        let total = self.kernels.len() + self.shed.len();
+        if total > 0 {
+            self.kernels.len() as f64 / total as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// Multi-line human-readable rollup. Fault accounting appears as an
+    /// extra line only when the run actually injected or shed anything,
+    /// so fault-free summaries are unchanged.
     pub fn summary(&self) -> String {
         let utils = self
             .utilizations()
@@ -166,7 +209,7 @@ impl FleetReport {
             .map(|u| format!("{u:.2}"))
             .collect::<Vec<_>>()
             .join(" ");
-        format!(
+        let mut s = format!(
             "fleet    : {} devices, route {}, window {}, reorder {}, backend {}\n\
              source   : {}\n\
              sojourn  : {}\n\
@@ -190,7 +233,24 @@ impl FleetReport {
             self.device_kernel_counts(),
             self.decision_evals,
             self.n_unsimulable,
-        )
+        );
+        if self.n_fault_events > 0
+            || !self.shed.is_empty()
+            || self.n_launch_failures > 0
+            || self.n_degraded_decisions > 0
+        {
+            s.push_str(&format!(
+                "\nfaults   : {} events, {} rerouted, {} launch failures, {} shed, \
+                 {} degraded decisions, completion rate {:.4}",
+                self.n_fault_events,
+                self.n_rerouted,
+                self.n_launch_failures,
+                self.shed.len(),
+                self.n_degraded_decisions,
+                self.completion_rate(),
+            ));
+        }
+        s
     }
 }
 
@@ -238,6 +298,11 @@ mod tests {
             device_busy_ms: busy,
             decision_evals: 0,
             n_unsimulable: 0,
+            n_degraded_decisions: 0,
+            n_rerouted: 0,
+            n_launch_failures: 0,
+            n_fault_events: 0,
+            shed: Vec::new(),
         }
     }
 
@@ -272,6 +337,29 @@ mod tests {
         assert_eq!(idle.imbalance(), 1.0);
         assert_eq!(idle.throughput_per_s(), 0.0);
         assert_eq!(idle.utilizations(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn fault_accounting_is_silent_without_faults_and_loud_with_them() {
+        let clean = report(vec![kernel(0, 0, 0.0, 10.0)], vec![10.0], 10.0);
+        assert!(!clean.summary().contains("faults"), "{}", clean.summary());
+        assert_eq!(clean.completion_rate(), 1.0);
+        assert_eq!(clean.n_shed(), 0);
+
+        let mut faulty = report(vec![kernel(0, 0, 0.0, 10.0)], vec![10.0], 10.0);
+        faulty.n_fault_events = 1;
+        faulty.n_rerouted = 2;
+        faulty.shed.push(ShedRecord {
+            id: 9,
+            arrival_ms: 3.0,
+            attempts: 4,
+            cause: "launch failed 4 times (retry cap)".into(),
+        });
+        let s = faulty.summary();
+        assert!(s.contains("faults"), "{s}");
+        assert!(s.contains("1 shed"), "{s}");
+        assert!(s.contains("2 rerouted"), "{s}");
+        assert!((faulty.completion_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]

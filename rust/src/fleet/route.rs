@@ -13,6 +13,7 @@
 //! | `lrw` | least residual work: queue *time*, priced via the backend's admissible [`crate::exec::PreparedWorkload::suffix_lower_bound`] over each device's backlog |
 //! | `p2c:<seed>` | power-of-two-choices: sample two devices, join the shorter queue |
 //! | `affinity` | class affinity: kernels that are model-identical (the predicate behind [`crate::gpu::equivalence_classes`]) co-locate so symmetry collapse keeps paying in the per-device search |
+//! | `circuit:<inner>` | per-device circuit breaker around any inner policy: consecutive launch failures trip the breaker, timed half-open probes close it again |
 //!
 //! `jsq` counts kernels; on a heterogeneous fleet (or heavy-tailed kernel
 //! work) queue *length* mispredicts queue *work*, which is where `lrw`'s
@@ -21,10 +22,32 @@
 //! (plus, for `p2c`, its own seeded PRNG stream) — the fleet engine's
 //! bit-identical-replay guarantee (`tests/fleet_determinism.rs`) rests
 //! on it.
+//!
+//! Every load-aware policy (`jsq`, `lrw`, `p2c`, `affinity`) routes
+//! around devices whose [`DeviceLoad::health`] is [`Health::Down`]
+//! (falling back to the full fleet only when *no* device is up);
+//! `roundrobin` stays deliberately blind — it is the no-health baseline
+//! the fault bench gates rerouting against.
 
 use crate::gpu::KernelProfile;
 use crate::util::SplitMix64;
 use std::fmt;
+
+/// Device health as the router sees it. `Down` devices are excluded by
+/// every load-aware policy (unless the whole fleet is down); `Degraded`
+/// marks stragglers — still routable, but the fleet engine serves their
+/// windows in FIFO order rather than spending search budget on a device
+/// that is already late.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Health {
+    /// Serving normally.
+    #[default]
+    Healthy,
+    /// Serving, but slowed (a straggler) — reorder effort is wasted here.
+    Degraded,
+    /// Not serving: crashed, or masked by a tripped circuit breaker.
+    Down,
+}
 
 /// Snapshot of one device at a routing instant.
 #[derive(Debug, Clone, Copy)]
@@ -52,6 +75,8 @@ pub struct DeviceLoad {
     /// with [`RoutePolicy::needs_pricing`] get finite values; `lrw`
     /// falls back to `outstanding` on `NaN`).
     pub backlog_lb_ms: f64,
+    /// Whether the device is serving, slowed, or down (see [`Health`]).
+    pub health: Health,
 }
 
 /// Everything a [`RoutePolicy`] sees when it places one kernel.
@@ -81,14 +106,27 @@ pub trait RoutePolicy: Send {
 
     /// Pick the device for `kernel` given the fleet snapshot.
     fn route(&mut self, kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize;
+
+    /// Feedback after a launch attempt on `device` (`ok` false on a
+    /// launch failure). Default no-op; [`Circuit`] uses it to drive its
+    /// per-device breakers. Callers only emit it when a fault model is
+    /// active, so policies ignoring it cost nothing.
+    fn on_outcome(&mut self, _device: usize, _ok: bool, _now_ms: f64) {}
 }
 
-/// First device minimizing `score` (strict `<`, so ties break toward
-/// the lowest index — the determinism contract).
+/// First *routable* device minimizing `score` (strict `<`, so ties break
+/// toward the lowest index — the determinism contract). `Down` devices
+/// are skipped unless every device is down, in which case the whole
+/// fleet is scored (the kernel has to land somewhere; it will wait out
+/// the outage there).
 fn argmin_by(devices: &[DeviceLoad], score: impl Fn(&DeviceLoad) -> f64) -> usize {
+    let any_up = devices.iter().any(|d| d.health != Health::Down);
     let mut best = 0usize;
     let mut best_score = f64::INFINITY;
     for d in devices {
+        if any_up && d.health == Health::Down {
+            continue;
+        }
         let s = score(d);
         if s < best_score {
             best_score = s;
@@ -218,16 +256,31 @@ impl RoutePolicy for P2c {
     }
 
     fn route(&mut self, _kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
-        let n = fleet.devices.len();
-        if n <= 1 {
+        if fleet.devices.len() <= 1 {
             return 0;
+        }
+        // Sample among the devices that are up; with everything healthy
+        // this is the identity pool, so the PRNG stream (and therefore
+        // every pick) is bit-identical to the health-blind behavior.
+        let mut pool: Vec<usize> = fleet
+            .devices
+            .iter()
+            .filter(|d| d.health != Health::Down)
+            .map(|d| d.device)
+            .collect();
+        if pool.is_empty() {
+            pool = (0..fleet.devices.len()).collect();
+        }
+        let n = pool.len();
+        if n == 1 {
+            return pool[0];
         }
         let a = (self.rng.next_u64() % n as u64) as usize;
         let mut b = (self.rng.next_u64() % (n as u64 - 1)) as usize;
         if b >= a {
             b += 1; // distinct second sample
         }
-        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let (lo, hi) = if a <= b { (pool[a], pool[b]) } else { (pool[b], pool[a]) };
         // `<=` keeps the lower index on ties (determinism contract).
         if fleet.devices[lo].outstanding <= fleet.devices[hi].outstanding {
             lo
@@ -270,14 +323,27 @@ impl RoutePolicy for Affinity {
 
     fn route(&mut self, kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
         let n = fleet.devices.len().max(1);
-        let min_out = fleet.devices.iter().map(|d| d.outstanding).min().unwrap_or(0);
+        // The rebalance reference is the minimum over devices that are
+        // up (identical to the plain minimum when nothing is down) — a
+        // crashed device's empty queue must not make every class look
+        // overloaded.
+        let min_out = fleet
+            .devices
+            .iter()
+            .filter(|d| d.health != Health::Down)
+            .map(|d| d.outstanding)
+            .min()
+            .unwrap_or(0);
         if let Some(slot) = self
             .classes
             .iter_mut()
             .find(|(rep, _)| rep.model_identical(kernel))
         {
             let home = slot.1.min(n - 1);
-            if fleet.devices[home].outstanding > min_out + REBALANCE_SLACK {
+            let home_down = fleet.devices[home].health == Health::Down;
+            if home_down || fleet.devices[home].outstanding > min_out + REBALANCE_SLACK {
+                // Overloaded or dead home: re-home on the least-loaded
+                // live device (sticky, so the class stays co-located).
                 slot.1 = argmin_by(fleet.devices, |d| d.outstanding as f64);
                 return slot.1;
             }
@@ -287,6 +353,122 @@ impl RoutePolicy for Affinity {
         let home = argmin_by(fleet.devices, |d| d.outstanding as f64);
         self.classes.push((kernel.clone(), home));
         home
+    }
+}
+
+/// Consecutive launch failures on one device that trip its breaker.
+pub const CIRCUIT_TRIP_AFTER: u32 = 3;
+
+/// How long (virtual ms) a tripped breaker stays open before the next
+/// routing instant may probe the device again (half-open state).
+pub const CIRCUIT_COOLDOWN_MS: f64 = 50.0;
+
+/// Per-device breaker state for [`Circuit`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Breaker {
+    /// Normal: counting consecutive failures toward the trip threshold.
+    Closed { consecutive_failures: u32 },
+    /// Tripped: the device is masked from the inner policy until the
+    /// cooldown deadline.
+    Open { until_ms: f64 },
+    /// Cooldown elapsed: the device is offered to the inner policy
+    /// again; the next outcome closes the breaker or re-trips it.
+    HalfOpen,
+}
+
+/// `circuit:<inner>` — a per-device circuit breaker around any inner
+/// route policy. [`CIRCUIT_TRIP_AFTER`] consecutive launch failures
+/// (reported through [`RoutePolicy::on_outcome`]) trip a device's
+/// breaker: the device is shown to the inner policy as [`Health::Down`]
+/// for [`CIRCUIT_COOLDOWN_MS`] of virtual time, after which it goes
+/// *half-open* — offered again, and the first outcome either closes the
+/// breaker (success) or re-trips it for another cooldown (failure).
+/// All transitions are pure functions of `(outcomes, now_ms)`, so the
+/// wrapper preserves the bit-identical-replay contract.
+pub struct Circuit {
+    inner: Box<dyn RoutePolicy>,
+    breakers: Vec<Breaker>,
+    scratch: Vec<DeviceLoad>,
+}
+
+impl Circuit {
+    pub fn new(inner: Box<dyn RoutePolicy>) -> Self {
+        Circuit {
+            inner,
+            breakers: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl RoutePolicy for Circuit {
+    fn name(&self) -> String {
+        format!("circuit:{}", self.inner.name())
+    }
+
+    fn needs_pricing(&self) -> bool {
+        self.inner.needs_pricing()
+    }
+
+    fn route(&mut self, kernel: &KernelProfile, fleet: &FleetView<'_>) -> usize {
+        let n = fleet.devices.len();
+        if self.breakers.len() < n {
+            self.breakers
+                .resize(n, Breaker::Closed { consecutive_failures: 0 });
+        }
+        // Timed half-open: an expired cooldown lets the next routing
+        // instant probe the device again.
+        for b in &mut self.breakers[..n] {
+            if let Breaker::Open { until_ms } = *b {
+                if fleet.now_ms >= until_ms {
+                    *b = Breaker::HalfOpen;
+                }
+            }
+        }
+        // Show the inner policy a view where tripped devices are down.
+        self.scratch.clear();
+        self.scratch.extend_from_slice(fleet.devices);
+        for d in &mut self.scratch {
+            if matches!(self.breakers[d.device.min(n - 1)], Breaker::Open { .. }) {
+                d.health = Health::Down;
+            }
+        }
+        // Never mask the whole fleet: if breakers would leave nothing
+        // routable, fall back to the unmasked view.
+        let view = if self.scratch.iter().all(|d| d.health == Health::Down)
+            && fleet.devices.iter().any(|d| d.health != Health::Down)
+        {
+            FleetView { now_ms: fleet.now_ms, devices: fleet.devices }
+        } else {
+            FleetView { now_ms: fleet.now_ms, devices: &self.scratch }
+        };
+        self.inner.route(kernel, &view)
+    }
+
+    fn on_outcome(&mut self, device: usize, ok: bool, now_ms: f64) {
+        if self.breakers.len() <= device {
+            self.breakers
+                .resize(device + 1, Breaker::Closed { consecutive_failures: 0 });
+        }
+        let b = &mut self.breakers[device];
+        if ok {
+            *b = Breaker::Closed { consecutive_failures: 0 };
+        } else {
+            *b = match *b {
+                Breaker::Closed { consecutive_failures } => {
+                    let f = consecutive_failures + 1;
+                    if f >= CIRCUIT_TRIP_AFTER {
+                        Breaker::Open { until_ms: now_ms + CIRCUIT_COOLDOWN_MS }
+                    } else {
+                        Breaker::Closed { consecutive_failures: f }
+                    }
+                }
+                // A failed half-open probe re-trips for another cooldown.
+                Breaker::HalfOpen => Breaker::Open { until_ms: now_ms + CIRCUIT_COOLDOWN_MS },
+                open @ Breaker::Open { .. } => open,
+            };
+        }
+        self.inner.on_outcome(device, ok, now_ms);
     }
 }
 
@@ -306,7 +488,7 @@ impl fmt::Display for RouteParseError {
         write!(
             f,
             "unknown route policy `{}` — valid policies: roundrobin, jsq, lrw, p2c:<seed>, \
-             affinity",
+             affinity, circuit:<inner>",
             self.input
         )
     }
@@ -315,17 +497,24 @@ impl fmt::Display for RouteParseError {
 impl std::error::Error for RouteParseError {}
 
 /// Parse a route-policy spelling (`"roundrobin"`, `"jsq"`, `"lrw"`,
-/// `"p2c:7"`, `"affinity"`; `"rr"` is accepted as an alias) into a
-/// trait object.
+/// `"p2c:7"`, `"affinity"`, `"circuit:<inner>"`; `"rr"` is accepted as
+/// an alias) into a trait object.
 ///
 /// ```
 /// let p = kreorder::fleet::parse_route_policy("p2c:7").unwrap();
 /// assert_eq!(p.name(), "p2c:7");
+/// assert_eq!(kreorder::fleet::parse_route_policy("circuit:jsq").unwrap().name(), "circuit:jsq");
 /// assert!(kreorder::fleet::parse_route_policy("nope").is_err());
 /// ```
 pub fn parse_route_policy(s: &str) -> Result<Box<dyn RoutePolicy>, RouteParseError> {
     let lower = s.to_ascii_lowercase();
     let err = || RouteParseError { input: s.into() };
+    if let Some(inner) = lower.strip_prefix("circuit:") {
+        // The wrapper nests (e.g. `circuit:p2c:7`); errors echo the full
+        // input, not just the inner spelling.
+        let inner = parse_route_policy(inner).map_err(|_| err())?;
+        return Ok(Box::new(Circuit::new(inner)));
+    }
     let mut parts = lower.split(':');
     let head = parts.next().unwrap_or("");
     let policy: Box<dyn RoutePolicy> = match head {
@@ -363,6 +552,10 @@ pub fn route_policy_help_table() -> String {
             "affinity",
             "co-locate model-identical kernels so symmetry collapse keeps paying",
         ),
+        (
+            "circuit:<inner>",
+            "per-device breaker around any policy: trips on consecutive failures, half-open probes",
+        ),
     ];
     let mut out = String::new();
     for (name, desc) in rows {
@@ -386,6 +579,14 @@ mod tests {
             free_at_ms: 0.0,
             peak_compute: GpuSpec::gtx580().peak_compute(),
             backlog_lb_ms: backlog,
+            health: Health::Healthy,
+        }
+    }
+
+    fn down(device: usize, outstanding: usize) -> DeviceLoad {
+        DeviceLoad {
+            health: Health::Down,
+            ..load(device, outstanding, f64::NAN)
         }
     }
 
@@ -467,22 +668,38 @@ mod tests {
 
     #[test]
     fn spellings_parse_and_round_trip() {
-        for s in ["roundrobin", "jsq", "lrw", "p2c:7", "affinity", "JSQ"] {
+        for s in [
+            "roundrobin",
+            "jsq",
+            "lrw",
+            "p2c:7",
+            "affinity",
+            "JSQ",
+            "circuit:jsq",
+            "circuit:p2c:7",
+        ] {
             let p = parse_route_policy(s).unwrap_or_else(|e| panic!("{e}"));
             assert_eq!(p.name(), s.to_ascii_lowercase());
             assert!(parse_route_policy(&p.name()).is_ok());
         }
         // The alias parses to the canonical spelling.
         assert_eq!(parse_route_policy("rr").unwrap().name(), "roundrobin");
+        assert_eq!(parse_route_policy("circuit:rr").unwrap().name(), "circuit:roundrobin");
+        // The wrapper delegates needs_pricing to its inner policy.
+        assert!(parse_route_policy("circuit:lrw").unwrap().needs_pricing());
+        assert!(!parse_route_policy("circuit:jsq").unwrap().needs_pricing());
     }
 
     #[test]
     fn bad_spellings_error_and_list_names() {
-        for s in ["nope", "p2c", "p2c:x", "p2c:1:2", "jsq:1", "lrw:0", "affinity:a"] {
+        for s in [
+            "nope", "p2c", "p2c:x", "p2c:1:2", "jsq:1", "lrw:0", "affinity:a", "circuit:",
+            "circuit:nope", "circuit",
+        ] {
             let err = parse_route_policy(s).unwrap_err();
             let msg = err.to_string();
             assert!(msg.contains(s), "{msg}");
-            for name in ["roundrobin", "jsq", "lrw", "p2c:<seed>", "affinity"] {
+            for name in ["roundrobin", "jsq", "lrw", "p2c:<seed>", "affinity", "circuit:<inner>"] {
                 assert!(msg.contains(name), "missing {name} in: {msg}");
             }
         }
@@ -491,8 +708,93 @@ mod tests {
     #[test]
     fn help_table_covers_registry() {
         let t = route_policy_help_table();
-        for name in ["roundrobin", "jsq", "lrw", "p2c:<seed>", "affinity"] {
+        for name in ["roundrobin", "jsq", "lrw", "p2c:<seed>", "affinity", "circuit:<inner>"] {
             assert!(t.contains(name));
         }
+    }
+
+    #[test]
+    fn load_aware_policies_route_around_down_devices() {
+        // Device 1 is the shortest queue but down: jsq, lrw and p2c must
+        // all avoid it; roundrobin stays blind by design.
+        let loads = [load(0, 3, f64::NAN), down(1, 0), load(2, 5, f64::NAN)];
+        let view = FleetView { now_ms: 0.0, devices: &loads };
+        let k = kernel();
+        assert_eq!(Jsq::new().route(&k, &view), 0);
+        assert_eq!(Lrw::new().route(&k, &view), 0);
+        let mut p2c = P2c::new(7);
+        assert!((0..64).all(|_| p2c.route(&k, &view) != 1));
+        let mut rr = RoundRobin::new();
+        let picks: Vec<usize> = (0..3).map(|_| rr.route(&k, &view)).collect();
+        assert_eq!(picks, vec![0, 1, 2], "roundrobin is the no-health baseline");
+    }
+
+    #[test]
+    fn all_down_fleet_still_routes_somewhere() {
+        let loads = [down(0, 2), down(1, 1)];
+        let view = FleetView { now_ms: 0.0, devices: &loads };
+        let k = kernel();
+        assert_eq!(Jsq::new().route(&k, &view), 1);
+        let d = P2c::new(3).route(&k, &view);
+        assert!(d < 2);
+    }
+
+    #[test]
+    fn affinity_rehomes_off_a_dead_device() {
+        let gpu = GpuSpec::gtx580();
+        let pool = synthetic_workload(&gpu, 1, 5);
+        let mut p = Affinity::new();
+        let healthy = [load(0, 5, f64::NAN), load(1, 0, f64::NAN)];
+        let view = FleetView { now_ms: 0.0, devices: &healthy };
+        assert_eq!(p.route(&pool[0], &view), 1, "homes on the least-loaded device");
+        // Home dies: the class re-homes onto the live device and sticks.
+        let crashed = [load(0, 5, f64::NAN), down(1, 0)];
+        let view = FleetView { now_ms: 0.0, devices: &crashed };
+        assert_eq!(p.route(&pool[0], &view), 0);
+        assert_eq!(p.route(&pool[0], &view), 0);
+    }
+
+    #[test]
+    fn circuit_trips_after_consecutive_failures_and_probes_half_open() {
+        let k = kernel();
+        let loads = [load(0, 0, f64::NAN), load(1, 9, f64::NAN)];
+        let mut c = Circuit::new(Box::new(Jsq::new()));
+        let view_at = |t: f64| FleetView { now_ms: t, devices: &loads };
+        // Healthy: jsq picks the shorter queue (device 0).
+        assert_eq!(c.route(&k, &view_at(0.0)), 0);
+        // Trip device 0 with consecutive launch failures.
+        for _ in 0..CIRCUIT_TRIP_AFTER {
+            c.on_outcome(0, false, 0.0);
+        }
+        assert_eq!(c.route(&k, &view_at(1.0)), 1, "tripped breaker masks device 0");
+        // Cooldown not elapsed: still masked.
+        assert_eq!(c.route(&k, &view_at(CIRCUIT_COOLDOWN_MS - 1.0)), 1);
+        // Cooldown elapsed: half-open — the device is offered again.
+        assert_eq!(c.route(&k, &view_at(CIRCUIT_COOLDOWN_MS + 1.0)), 0);
+        // A failed probe re-trips immediately…
+        c.on_outcome(0, false, CIRCUIT_COOLDOWN_MS + 1.0);
+        assert_eq!(c.route(&k, &view_at(CIRCUIT_COOLDOWN_MS + 2.0)), 1);
+        // …and a successful probe after the next cooldown closes it.
+        let later = 2.0 * CIRCUIT_COOLDOWN_MS + 2.0;
+        assert_eq!(c.route(&k, &view_at(later)), 0);
+        c.on_outcome(0, true, later);
+        assert_eq!(c.route(&k, &view_at(later + 1.0)), 0);
+        // One more single failure does not re-trip a closed breaker.
+        c.on_outcome(0, false, later + 1.0);
+        assert_eq!(c.route(&k, &view_at(later + 2.0)), 0);
+    }
+
+    #[test]
+    fn circuit_never_masks_the_whole_fleet() {
+        let k = kernel();
+        let loads = [load(0, 0, f64::NAN), load(1, 1, f64::NAN)];
+        let mut c = Circuit::new(Box::new(Jsq::new()));
+        for d in 0..2 {
+            for _ in 0..CIRCUIT_TRIP_AFTER {
+                c.on_outcome(d, false, 0.0);
+            }
+        }
+        // Both breakers open: the unmasked view is used instead.
+        assert_eq!(c.route(&k, &FleetView { now_ms: 1.0, devices: &loads }), 0);
     }
 }

@@ -134,6 +134,16 @@ impl FleetSpec {
             Ok(())
         }
     }
+
+    /// Check a fault plan's device indices against this fleet (the CLI
+    /// boundary for [`crate::fleet::simulate_fleet_with_faults`], which
+    /// panics on out-of-range devices rather than guessing).
+    pub fn validate_fault_plan(
+        &self,
+        plan: &crate::fault::FaultPlan,
+    ) -> Result<(), crate::fault::FaultParseError> {
+        plan.validate_for(self.devices.len())
+    }
 }
 
 /// Error for unknown fleet spellings; `Display` lists the valid forms.

@@ -157,6 +157,43 @@
 //!   `benches/fleet_routing.rs` hard-gates routed-vs-`roundrobin` p99
 //!   sojourn into `BENCH_fleet.json`.
 //!
+//! ## Fault tolerance: when devices crash, straggle, or drop launches
+//!
+//! The [`fault`] module makes failure a *deterministic input* instead of
+//! an accident: a [`fault::FaultPlan`] scripts device crashes (with
+//! optional recovery), slowdown stragglers and seeded per-launch
+//! failures, parsed from a spec string (`crash:0@50;slowdown:2@10:2.5;
+//! launchfail:0.05:7`) or drawn from a seeded generator, and
+//! [`fleet::simulate_fleet_with_faults`] threads it through the fleet
+//! engine as a first-class event kind (faults fire *before* routing at
+//! equal times):
+//!
+//! * a **crash** retracts the device's in-flight batch and re-routes
+//!   every orphaned kernel through the live [`fleet::RoutePolicy`] —
+//!   [`fleet::DeviceLoad`] carries a [`fleet::Health`] state, so the
+//!   load-aware policies steer around `Down` devices and the
+//!   `circuit:<inner>` wrapper ([`fleet::Circuit`]) trips per-device
+//!   breakers on repeated launch failures;
+//! * **launch failures** retry under a [`fault::RetryPolicy`] — seeded
+//!   exponential backoff with jitter, a max-attempts cap, and every
+//!   capped kernel recorded as a [`fleet::ShedRecord`] with its cause
+//!   (the conservation invariant `completed + shed == arrivals` is
+//!   pinned by `tests/fault_recovery.rs`);
+//! * **degraded decisions** — windows on slowed devices, or searches
+//!   whose budget ran out before beating FIFO — fall back to FIFO order
+//!   and are counted (`n_degraded_decisions`) rather than hidden;
+//! * the whole run stays **bit-identical** per (fault plan, fault seed,
+//!   arrival seed, config): backoff and failure draws are pure functions
+//!   of `(seed, kernel id, attempt)`, an empty plan is a strict no-op
+//!   (the `D = 1` run bit-matches [`online::simulate_online`]), and
+//!   `benches/fault_tolerance.rs` gates health-aware rerouting against
+//!   a health-blind baseline into `BENCH_faults.json`;
+//! * the live [`coordinator`] gets the same posture: a panicking device
+//!   worker fails only its own in-flight batch (failure-sentinel
+//!   responses, panic message surfaced in
+//!   [`coordinator::ServiceStats`]), and its queue re-routes to live
+//!   workers instead of poisoning shutdown.
+//!
 //! CI enforces the quality contract (`benches/search_quality.rs`,
 //! smoke-run per push): branch-and-bound must bit-match the sweep on
 //! every scenario family at n ≤ 8 on both model backends, each anytime
@@ -181,6 +218,7 @@
 //! | [`search`] | [`search::SearchStrategy`]: exact branch-and-bound + anytime metaheuristics for n ≫ 12 |
 //! | [`online`] | streaming scheduler: arrival processes, [`online::WindowPolicy`], virtual-clock engine, latency SLOs |
 //! | [`fleet`] | multi-device dispatch: [`fleet::RoutePolicy`] registry, heterogeneous [`fleet::FleetSpec`], fleet-scale virtual-clock engine |
+//! | [`fault`] | deterministic fault injection: [`fault::FaultPlan`] (crash / slowdown / launch-failure scripts), seeded [`fault::RetryPolicy`], recovery accounting |
 //! | [`profile`] | artifact profile loading (the "CUDA profiler" stand-in) |
 //! | `runtime` | PJRT execution of AOT-compiled HLO kernels (feature `pjrt`) |
 //! | [`coordinator`] | [`coordinator::CoordinatorBuilder`]: batching + reordering + multi-device dispatch |
@@ -277,6 +315,7 @@
 
 pub mod coordinator;
 pub mod exec;
+pub mod fault;
 pub mod fleet;
 pub mod gpu;
 pub mod metrics;

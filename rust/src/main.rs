@@ -9,6 +9,8 @@
 //! * `sched`   — show every registered policy's order/rounds for a workload.
 //! * `serve`   — run the launch-coordinator service (simulated or real PJRT payloads).
 //! * `fleet`   — multi-device online scheduling: routed arrivals over a GPU fleet.
+//! * `fault`   — fleet run under a deterministic fault plan (crashes, stragglers,
+//!   launch failures) with seeded retry and health-aware rerouting.
 //! * `ablate`  — score-component ablation across experiments.
 //! * `policies`— list the launch-policy registry.
 //! * `artifacts` — list AOT artifacts and their measured profiles.
@@ -56,6 +58,7 @@ fn run(args: &[String]) -> Result<()> {
         "sched" => cmd_sched(rest),
         "serve" => cmd_serve(rest),
         "fleet" => cmd_fleet(rest),
+        "fault" => cmd_fault(rest),
         "ablate" => cmd_ablate(rest),
         "policies" => cmd_policies(rest),
         "artifacts" => cmd_artifacts(rest),
@@ -106,6 +109,15 @@ COMMANDS:
                                        device its own reorder window (--devices SPEC =
                                        e.g. 4 or 1,1,0.5; see `kreorder fleet
                                        --list-routes`)
+  fault (--plan SPEC-OR-FILE | --gen-faults N) [--fault-seed S] [--horizon MS]
+        [--retries N] [--devices SPEC] [--route POLICY] [--count N]
+        [--scenario FAMILY] [--arrivals PROC] [--window WP] [--strategy S|fifo]
+        [--budget EVALS] [--decision-cost MS] [--backend B]
+        [--compare-nofault] [--list-faults]
+                                       fleet run under a deterministic fault plan:
+                                       device crashes/recoveries, slowdowns, seeded
+                                       launch failures with retry + backoff
+                                       (see `kreorder fault --list-faults`)
   ablate [--exp ID] [--backend B]      score-component ablation
   policies                             list the launch-policy registry
   artifacts [--dir DIR]                list AOT artifacts + measured profiles
@@ -116,6 +128,7 @@ POLICIES: fifo reverse random:<seed> algorithm1 algorithm1:strict sjf coschedule
 STRATEGIES & SCENARIOS: `kreorder search --list`
 ARRIVALS & WINDOW POLICIES: `kreorder serve --list-online`
 ROUTE POLICIES & DEVICE SPECS: `kreorder fleet --list-routes`
+FAULT PLANS: `kreorder fault --list-faults`
 BACKENDS: sim (fluid simulator, default), analytic (round model){}",
         if cfg!(feature = "pjrt") {
             ", pjrt (serve only)"
@@ -946,6 +959,174 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
         .with_devices(fleet.len());
         std::fs::write(path, recorded.to_csv())?;
         eprintln!("recorded fleet trace -> {path} (replay with --replay {path})");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// fault
+// ---------------------------------------------------------------------------
+
+/// `fault`: a fleet run under a deterministic fault plan — device
+/// crashes (with optional recovery), slowdowns, and seeded launch
+/// failures retried with exponential backoff. Fully deterministic per
+/// (fault plan, fault seed, arrival seed, route/window/strategy): two
+/// runs print bit-identical numbers, including the fault ledger.
+fn cmd_fault(args: &[String]) -> Result<()> {
+    use kreorder::fault::{fault_plan_help_table, FaultConfig, FaultPlan, RetryPolicy};
+    use kreorder::fleet::{
+        parse_route_policy, simulate_fleet, simulate_fleet_with_faults, FleetSpec,
+    };
+    use kreorder::online::{
+        parse_window_policy, ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts,
+        OnlineReorderer, ReplaySource, Trace,
+    };
+    use kreorder::workloads::scenario_by_id;
+
+    if flag(args, "--list-faults") {
+        println!("fault plan clauses (--plan SPEC, clauses joined with `;`):");
+        print!("{}", fault_plan_help_table());
+        println!("\n--plan also accepts a file holding one clause per line");
+        println!("(`#` comments allowed — the `kreorder-faults` CSV format).");
+        println!("--gen-faults N draws a plan from the seeded generator instead.");
+        println!("\nroute policies (--route): see `kreorder fleet --list-routes`");
+        println!("window policies (--window): see `kreorder serve --list-online`");
+        return Ok(());
+    }
+
+    let gpu = GpuSpec::gtx580();
+    let fleet =
+        FleetSpec::parse(opt(args, "--devices").unwrap_or("4")).map_err(anyhow::Error::from)?;
+    let fault_seed: u64 = opt(args, "--fault-seed").map_or(0, |s| s.parse().unwrap_or(0));
+    let horizon_ms: f64 = opt(args, "--horizon").map_or(500.0, |s| s.parse().unwrap_or(500.0));
+
+    // Fault plan: `--plan` takes an inline spec or a file holding one;
+    // `--gen-faults N` draws a plan from the seeded generator instead.
+    let plan = if let Some(spec) = opt(args, "--plan") {
+        let text = if std::path::Path::new(spec).is_file() {
+            std::fs::read_to_string(spec)
+                .with_context(|| format!("reading fault plan {spec}"))?
+        } else {
+            spec.to_string()
+        };
+        FaultPlan::parse(&text).map_err(anyhow::Error::from)?
+    } else if let Some(n) = opt(args, "--gen-faults") {
+        let n: usize = n.parse().context("bad --gen-faults")?;
+        FaultPlan::generate(fault_seed, fleet.len(), horizon_ms, n)
+    } else {
+        bail!("need --plan SPEC-OR-FILE or --gen-faults N (or --list-faults)");
+    };
+    fleet.validate_fault_plan(&plan).map_err(anyhow::Error::from)?;
+    let retries: u32 = opt(args, "--retries").map_or(4, |s| s.parse().unwrap_or(4));
+    let faults = FaultConfig {
+        plan,
+        retry: RetryPolicy::new(retries, fault_seed),
+    };
+
+    let route_spec = opt(args, "--route").unwrap_or("jsq");
+    let count: usize = opt(args, "--count").map_or(64, |s| s.parse().unwrap_or(64));
+    let family_name = opt(args, "--scenario").unwrap_or("mixed");
+    let window_spec = opt(args, "--window").unwrap_or("linger:8:50");
+    let strategy = opt(args, "--strategy").unwrap_or("local:0");
+    let budget: u64 = opt(args, "--budget").map_or(256, |s| s.parse().unwrap_or(256));
+    let decision_cost: f64 =
+        opt(args, "--decision-cost").map_or(0.0, |s| s.parse().unwrap_or(0.0));
+
+    let family = scenario_by_id(family_name)
+        .with_context(|| format!("unknown scenario family `{family_name}`"))?;
+
+    // Materialize the arrival schedule (same shapes as `fleet`): open-loop
+    // specs go through a Trace so `--compare-nofault` replays the identical
+    // schedule; the closed loop reacts to completions (including sheds).
+    let mut closed: Option<(usize, f64, u64)> = None;
+    let arrivals = opt(args, "--arrivals").unwrap_or("poisson:400:1");
+    let spec = ArrivalSpec::parse(arrivals).map_err(anyhow::Error::from)?;
+    let trace: Option<Trace> = match &spec {
+        ArrivalSpec::Replay { path } => Some(load_fleet_trace(path, &fleet)?),
+        ArrivalSpec::Closed {
+            clients,
+            think_ms,
+            seed,
+        } => {
+            closed = Some((*clients, *think_ms, *seed));
+            None
+        }
+        _ => Some(spec.trace(family.id, count).expect("open-loop spec")),
+    };
+    let make_source = || -> Result<Box<dyn ArrivalSource>> {
+        Ok(match (&trace, closed) {
+            (Some(t), _) => {
+                Box::new(ReplaySource::from_trace(t, &gpu).map_err(anyhow::Error::from)?)
+            }
+            (None, Some((clients, think_ms, seed))) => {
+                Box::new(ClosedLoopSource::new(family, &gpu, count, clients, think_ms, seed))
+            }
+            (None, None) => unreachable!("either a trace or closed-loop params exist"),
+        })
+    };
+
+    parse_window_policy(window_spec).map_err(anyhow::Error::from)?;
+    let make_window = || parse_window_policy(window_spec).expect("validated above");
+    let reorderer = if strategy.eq_ignore_ascii_case("fifo") {
+        OnlineReorderer::fifo()
+    } else {
+        OnlineReorderer::search(strategy, budget).map_err(anyhow::Error::from)?
+    };
+    let make_backend = model_backend_factory(args)?;
+    let opts = OnlineOpts {
+        decision_ms_per_eval: decision_cost,
+    };
+
+    println!(
+        "fault: devices={} route={} plan={} retries={} window={} reorderer={} backend={}",
+        fleet.name(),
+        route_spec,
+        faults.plan.name(),
+        faults.retry.max_attempts,
+        window_spec,
+        reorderer.name(),
+        opt(args, "--backend").unwrap_or("sim"),
+    );
+    let report = simulate_fleet_with_faults(
+        &fleet,
+        make_source()?,
+        parse_route_policy(route_spec).map_err(anyhow::Error::from)?,
+        &make_window,
+        &reorderer,
+        make_backend.as_ref(),
+        &opts,
+        &faults,
+    );
+    println!("{}", report.summary());
+    for s in &report.shed {
+        println!(
+            "  shed kernel {} (arrived {:.2} ms, {} attempts): {}",
+            s.id, s.arrival_ms, s.attempts, s.cause
+        );
+    }
+
+    if flag(args, "--compare-nofault") {
+        // The identical arrival schedule through the identical router,
+        // with the fault plan removed: isolates what the faults cost.
+        let clean = simulate_fleet(
+            &fleet,
+            make_source()?,
+            parse_route_policy(route_spec).map_err(anyhow::Error::from)?,
+            &make_window,
+            &reorderer,
+            make_backend.as_ref(),
+            &opts,
+        );
+        let faulted_p99 = report.sojourn_stats().p99_ms;
+        let clean_p99 = clean.sojourn_stats().p99_ms;
+        println!(
+            "  no-fault baseline: p99 {:.2} ms vs faulted p99 {:.2} ms | \
+             degradation {:.3}x | completion rate {:.4} vs 1.0000",
+            clean_p99,
+            faulted_p99,
+            faulted_p99 / clean_p99.max(f64::MIN_POSITIVE),
+            report.completion_rate(),
+        );
     }
     Ok(())
 }

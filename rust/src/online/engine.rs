@@ -124,6 +124,8 @@ pub fn simulate_online(
     let mut device_busy_ms = 0.0f64;
     let mut decision_evals = 0u64;
     let mut n_unsimulable = 0usize;
+    let mut n_degraded_decisions = 0u64;
+    let mut n_shed_kernels = 0usize;
 
     loop {
         // Ask the policy about the open window. Closing never advances
@@ -198,8 +200,11 @@ pub fn simulate_online(
                                 // Unsimulable batch: serve it in zero
                                 // time rather than wedging the queue
                                 // (validated sources never hit this; the
-                                // report counts it).
+                                // report counts it). Its kernels got no
+                                // real service — they are force-dropped,
+                                // the single-device shed counter.
                                 n_unsimulable += 1;
+                                n_shed_kernels += b.members.len();
                                 0.0
                             } else {
                                 report.makespan_ms
@@ -253,6 +258,9 @@ pub fn simulate_online(
         let profiles: Vec<KernelProfile> = members.iter().map(|m| m.profile.clone()).collect();
         let decision = reorderer.decide(gpu, &profiles, make_backend);
         decision_evals += decision.evals;
+        if decision.degraded {
+            n_degraded_decisions += 1;
+        }
         queue.push_back(Closed {
             batch: next_batch,
             close_ms: now,
@@ -277,6 +285,8 @@ pub fn simulate_online(
         device_busy_ms,
         decision_evals,
         n_unsimulable,
+        n_degraded_decisions,
+        n_shed_kernels,
     }
 }
 

@@ -105,6 +105,12 @@ pub struct ReorderDecision {
     pub order: Vec<usize>,
     /// Order evaluations the decision spent (0 for FIFO).
     pub evals: u64,
+    /// The decision fell back to FIFO arrival order *after* spending
+    /// search budget (the FIFO guard rejected the searched order) — the
+    /// graceful-degradation signal the engines count. Plain FIFO mode
+    /// and tiny windows are not degraded: FIFO was the plan, not the
+    /// fallback.
+    pub degraded: bool,
 }
 
 /// Per-window order selection for the online engine.
@@ -205,6 +211,7 @@ impl OnlineReorderer {
                 return ReorderDecision {
                     order: fifo,
                     evals: 0,
+                    degraded: false,
                 }
             }
             ReorderMode::Search {
@@ -216,6 +223,7 @@ impl OnlineReorderer {
             return ReorderDecision {
                 order: fifo,
                 evals: 0,
+                degraded: false,
             };
         }
 
@@ -230,7 +238,11 @@ impl OnlineReorderer {
             let sw = sweep_with(gpu, kernels, make_backend);
             let evals = sw.n_perms as u64;
             let order = if sw.best_order.len() == n { sw.best_order } else { fifo };
-            return ReorderDecision { order, evals };
+            return ReorderDecision {
+                order,
+                evals,
+                degraded: false,
+            };
         }
 
         // Anytime search under the per-decision budget…
@@ -243,7 +255,13 @@ impl OnlineReorderer {
         );
         let mut evals = out.evals;
         if out.best_order.len() != n {
-            return ReorderDecision { order: fifo, evals };
+            // The strategy failed to produce a full order: a degraded
+            // FIFO fallback.
+            return ReorderDecision {
+                order: fifo,
+                evals,
+                degraded: true,
+            };
         }
         // …with a FIFO guard: the served order is never worse than
         // arrival order (ties break toward FIFO, the lexicographically
@@ -258,9 +276,16 @@ impl OnlineReorderer {
             ReorderDecision {
                 order: out.best_order,
                 evals,
+                degraded: false,
             }
         } else {
-            ReorderDecision { order: fifo, evals }
+            // Budget spent, search did not beat arrival order: serve
+            // FIFO and let the report count the degraded decision.
+            ReorderDecision {
+                order: fifo,
+                evals,
+                degraded: true,
+            }
         }
     }
 }

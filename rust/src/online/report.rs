@@ -108,6 +108,14 @@ pub struct OnlineReport {
     /// Batches the model backend could not time (served with zero
     /// service time; should be 0 for validated workloads).
     pub n_unsimulable: usize,
+    /// Reorder decisions that fell back to FIFO arrival order after
+    /// spending search budget (graceful degradation, not a failure —
+    /// the served order is never worse than FIFO).
+    pub n_degraded_decisions: u64,
+    /// Kernels force-dropped through unsimulable batches (zero service
+    /// time): the single-device shed counter, surfaced by the CLI
+    /// summary so degradation is visible from `kreorder serve`.
+    pub n_shed_kernels: usize,
 }
 
 impl OnlineReport {
@@ -202,8 +210,17 @@ impl OnlineReport {
         s.push_str(&format!("  sojourn : {}\n", self.sojourn_stats().line()));
         s.push_str(&format!("  queue   : {}\n", self.queue_stats().line()));
         s.push_str(&format!("  service : {}", self.service_stats().line()));
+        if self.n_degraded_decisions > 0 {
+            s.push_str(&format!(
+                "\n  degraded: {} decisions fell back to FIFO",
+                self.n_degraded_decisions
+            ));
+        }
         if self.n_unsimulable > 0 {
-            s.push_str(&format!("\n  WARNING: {} unsimulable batches", self.n_unsimulable));
+            s.push_str(&format!(
+                "\n  WARNING: {} unsimulable batches, {} kernels shed (zero service)",
+                self.n_unsimulable, self.n_shed_kernels
+            ));
         }
         s
     }
@@ -247,6 +264,8 @@ mod tests {
             device_busy_ms: span,
             decision_evals: 0,
             n_unsimulable: 0,
+            n_degraded_decisions: 0,
+            n_shed_kernels: 0,
         }
     }
 
@@ -327,5 +346,17 @@ mod tests {
         assert!(s.contains("queue"));
         assert!(s.contains("service"));
         assert!(!s.contains("WARNING"));
+        assert!(!s.contains("degraded"));
+    }
+
+    #[test]
+    fn summary_surfaces_degraded_decisions_and_shed_kernels() {
+        let mut r = report(vec![record(0, 0.0, 0.0, 10.0)]);
+        r.n_degraded_decisions = 3;
+        r.n_unsimulable = 1;
+        r.n_shed_kernels = 2;
+        let s = r.summary();
+        assert!(s.contains("degraded: 3 decisions fell back to FIFO"), "{s}");
+        assert!(s.contains("2 kernels shed"), "{s}");
     }
 }

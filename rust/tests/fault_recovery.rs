@@ -1,0 +1,353 @@
+//! Integration pins for the fault-injection and recovery subsystem.
+//!
+//! The headline contract (ISSUE 7 acceptance): **no kernel is ever
+//! silently lost**. Under every fault plan — crashes, recoveries,
+//! slowdowns, seeded launch failures — every arrival ends in exactly one
+//! of the completed ledger (`FleetReport::kernels`) or the shed ledger
+//! (`FleetReport::shed`, with a recorded cause), and the whole run is
+//! bit-identical per (fault plan, fault seed, configuration) on both
+//! model backends. An empty plan is a strict no-op: the fault-aware
+//! entry point bit-matches `simulate_fleet`, and on one device it
+//! bit-matches the single-device online engine.
+
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::fault::{FaultConfig, FaultPlan, RetryPolicy};
+use kreorder::fleet::{
+    parse_route_policy, simulate_fleet, simulate_fleet_with_faults, FleetReport, FleetSpec,
+};
+use kreorder::gpu::GpuSpec;
+use kreorder::online::{
+    parse_window_policy, simulate_online, ClosedLoopSource, OnlineOpts, OnlineReorderer,
+    ReplaySource, Trace,
+};
+use kreorder::workloads::scenario_by_id;
+
+fn sim_factory() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+}
+
+fn analytic_factory() -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    Box::new(|| Box::new(AnalyticBackend::new()) as Box<dyn ExecutionBackend>)
+}
+
+fn run_faulty(
+    fleet: &FleetSpec,
+    trace: &Trace,
+    route: &str,
+    faults: &FaultConfig,
+    factory: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+) -> FleetReport {
+    let gpu = GpuSpec::gtx580();
+    let source = Box::new(ReplaySource::from_trace(trace, &gpu).unwrap());
+    let reorderer = OnlineReorderer::search("local:3", 200).unwrap();
+    simulate_fleet_with_faults(
+        fleet,
+        source,
+        parse_route_policy(route).unwrap(),
+        &|| parse_window_policy("linger:6:25").unwrap(),
+        &reorderer,
+        factory,
+        &OnlineOpts::default(),
+        faults,
+    )
+}
+
+fn sojourn_bits(r: &FleetReport) -> Vec<u64> {
+    r.sojourns_ms().iter().map(|t| t.to_bits()).collect()
+}
+
+/// Every arrival id appears in exactly one ledger.
+fn assert_conserved(r: &FleetReport, n_arrivals: usize) {
+    let mut ids: Vec<u64> = r.kernels.iter().map(|k| k.id).collect();
+    ids.extend(r.shed.iter().map(|s| s.id));
+    ids.sort_unstable();
+    let expected: Vec<u64> = (0..n_arrivals as u64).collect();
+    assert_eq!(
+        ids, expected,
+        "conservation violated: completed {} + shed {} vs {} arrivals",
+        r.kernels.len(),
+        r.shed.len(),
+        n_arrivals
+    );
+}
+
+/// The acceptance pin: completed + shed == arrivals under every fault
+/// plan, on both model backends, with the whole ledger (sojourn bits,
+/// shed records, fault accounting) bit-identical across two runs.
+#[test]
+fn no_kernel_is_lost_under_any_plan_on_either_backend() {
+    let fleet = FleetSpec::parse("1,1,0.5").unwrap();
+    let trace = Trace::poisson("mixed", 32, 400.0, 11);
+    let plans = [
+        "crash:0@20",
+        "crash:0@15:recover@60",
+        "slowdown:1@10:3.0",
+        "launchfail:0.3:7",
+        "crash:2@25;slowdown:0@5:2.0;launchfail:0.15:9",
+    ];
+    let factories: [(&str, Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync>); 2] =
+        [("sim", sim_factory()), ("analytic", analytic_factory())];
+    for plan_spec in plans {
+        let faults = FaultConfig {
+            plan: FaultPlan::parse(plan_spec).unwrap(),
+            retry: RetryPolicy::new(4, 13),
+        };
+        for (bname, factory) in &factories {
+            let a = run_faulty(&fleet, &trace, "jsq", &faults, factory.as_ref());
+            let b = run_faulty(&fleet, &trace, "jsq", &faults, factory.as_ref());
+            assert_conserved(&a, 32);
+            assert_eq!(
+                sojourn_bits(&a),
+                sojourn_bits(&b),
+                "sojourns drifted: plan={plan_spec} backend={bname}"
+            );
+            assert_eq!(a.shed, b.shed, "shed ledger drifted: plan={plan_spec}");
+            assert_eq!(a.span_ms.to_bits(), b.span_ms.to_bits());
+            assert_eq!(a.n_rerouted, b.n_rerouted);
+            assert_eq!(a.n_launch_failures, b.n_launch_failures);
+            assert_eq!(a.n_degraded_decisions, b.n_degraded_decisions);
+            for s in &a.shed {
+                assert!(!s.cause.is_empty(), "shed kernel {} has no cause", s.id);
+            }
+        }
+    }
+}
+
+/// An empty fault plan is a strict no-op: the fault-aware entry point
+/// produces the bit-identical run to `simulate_fleet` — no extra
+/// events, no PRNG draws, no float drift.
+#[test]
+fn an_empty_plan_bit_matches_the_faultless_engine() {
+    let gpu = GpuSpec::gtx580();
+    let fleet = FleetSpec::parse("1,1,0.5").unwrap();
+    let trace = Trace::bursty("skewed", 32, 300.0, 9);
+    let reorderer = OnlineReorderer::search("local:1", 200).unwrap();
+    let factory = sim_factory();
+    let make_window = || parse_window_policy("linger:6:30").unwrap();
+
+    let plain = simulate_fleet(
+        &fleet,
+        Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap()),
+        parse_route_policy("lrw").unwrap(),
+        &make_window,
+        &reorderer,
+        factory.as_ref(),
+        &OnlineOpts::default(),
+    );
+    let faulty = simulate_fleet_with_faults(
+        &fleet,
+        Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap()),
+        parse_route_policy("lrw").unwrap(),
+        &make_window,
+        &reorderer,
+        factory.as_ref(),
+        &OnlineOpts::default(),
+        &FaultConfig::default(),
+    );
+    assert_eq!(sojourn_bits(&plain), sojourn_bits(&faulty));
+    assert_eq!(plain.span_ms.to_bits(), faulty.span_ms.to_bits());
+    assert_eq!(faulty.n_fault_events, 0);
+    assert_eq!(faulty.n_rerouted, 0);
+    assert_eq!(faulty.n_launch_failures, 0);
+    assert!(faulty.shed.is_empty());
+    assert_eq!(faulty.completion_rate(), 1.0);
+}
+
+/// On one device with no faults, the fleet engine's fault entry point
+/// bit-matches the single-device online engine record for record.
+#[test]
+fn single_device_empty_plan_matches_the_online_engine() {
+    let gpu = GpuSpec::gtx580();
+    let trace = Trace::poisson("skewed", 24, 300.0, 11);
+    let reorderer = OnlineReorderer::search("local:3", 200).unwrap();
+    let factory = sim_factory();
+
+    let online = simulate_online(
+        &gpu,
+        Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap()),
+        parse_window_policy("linger:6:25").unwrap(),
+        &reorderer,
+        factory.as_ref(),
+        &OnlineOpts::default(),
+    );
+    let fleet = simulate_fleet_with_faults(
+        &FleetSpec::homogeneous(1),
+        Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap()),
+        parse_route_policy("jsq").unwrap(),
+        &|| parse_window_policy("linger:6:25").unwrap(),
+        &reorderer,
+        factory.as_ref(),
+        &OnlineOpts::default(),
+        &FaultConfig::default(),
+    );
+    assert_eq!(online.kernels.len(), fleet.kernels.len());
+    for (o, f) in online.kernels.iter().zip(&fleet.kernels) {
+        assert_eq!(o.id, f.id);
+        assert_eq!(o.arrival_ms.to_bits(), f.arrival_ms.to_bits());
+        assert_eq!(o.close_ms.to_bits(), f.close_ms.to_bits());
+        assert_eq!(o.start_ms.to_bits(), f.start_ms.to_bits());
+        assert_eq!(o.finish_ms.to_bits(), f.finish_ms.to_bits());
+    }
+    assert_eq!(online.span_ms.to_bits(), fleet.span_ms.to_bits());
+}
+
+/// A permanent crash mid-run: health-aware routing steers around the
+/// dead device, every orphaned kernel re-routes, and nothing is shed.
+#[test]
+fn a_crash_reroutes_orphans_and_health_aware_routing_finishes_everything() {
+    let fleet = FleetSpec::homogeneous(3);
+    let trace = Trace::poisson("uniform", 48, 600.0, 5);
+    let faults = FaultConfig {
+        plan: FaultPlan::parse("crash:0@15").unwrap(),
+        retry: RetryPolicy::default(),
+    };
+    let factory = sim_factory();
+    let r = run_faulty(&fleet, &trace, "jsq", &faults, factory.as_ref());
+    assert_conserved(&r, 48);
+    assert!(r.shed.is_empty(), "health-aware jsq shed {:?}", r.shed);
+    assert_eq!(r.completion_rate(), 1.0);
+    assert!(r.n_rerouted > 0, "a crash at 15 ms under load must orphan something");
+    for k in &r.kernels {
+        assert!(
+            k.device != 0 || k.finish_ms <= 15.0,
+            "kernel {} finished on the dead device at {:.2} ms",
+            k.id,
+            k.finish_ms
+        );
+    }
+}
+
+/// Crash with recovery: the device serves again after `recover@`, and
+/// everything still completes.
+#[test]
+fn a_recovered_device_returns_to_service() {
+    let fleet = FleetSpec::homogeneous(2);
+    let trace = Trace::poisson("uniform", 48, 300.0, 5);
+    let faults = FaultConfig {
+        plan: FaultPlan::parse("crash:0@10:recover@40").unwrap(),
+        retry: RetryPolicy::default(),
+    };
+    let factory = sim_factory();
+    let r = run_faulty(&fleet, &trace, "jsq", &faults, factory.as_ref());
+    assert_conserved(&r, 48);
+    assert!(r.shed.is_empty());
+    assert!(
+        r.kernels.iter().any(|k| k.device == 0 && k.start_ms >= 40.0),
+        "device 0 never served again after recovery at 40 ms"
+    );
+    // Nothing *starts* on device 0 while it is down.
+    for k in &r.kernels {
+        assert!(
+            k.device != 0 || k.start_ms < 10.0 || k.start_ms >= 40.0,
+            "kernel {} started on device 0 at {:.2} ms while it was down",
+            k.id,
+            k.start_ms
+        );
+    }
+}
+
+/// Launch failures at the retry cap shed with a recorded cause and the
+/// exact attempt count; a partial failure rate still conserves kernels.
+#[test]
+fn launch_failures_retry_then_shed_at_the_attempt_cap() {
+    let fleet = FleetSpec::homogeneous(2);
+    let trace = Trace::poisson("mixed", 16, 400.0, 3);
+    let factory = sim_factory();
+
+    // p = 1.0: every attempt fails, so every kernel sheds after exactly
+    // max_attempts tries.
+    let always = FaultConfig {
+        plan: FaultPlan::parse("launchfail:1.0:7").unwrap(),
+        retry: RetryPolicy::new(2, 0),
+    };
+    let r = run_faulty(&fleet, &trace, "jsq", &always, factory.as_ref());
+    assert_conserved(&r, 16);
+    assert!(r.kernels.is_empty(), "p=1.0 launch failure completed a kernel");
+    assert_eq!(r.shed.len(), 16);
+    for s in &r.shed {
+        assert_eq!(s.attempts, 2, "kernel {} shed after {} attempts", s.id, s.attempts);
+        assert!(s.cause.contains("retry cap"), "cause: {}", s.cause);
+    }
+    assert_eq!(r.n_launch_failures, 32, "16 kernels x 2 attempts");
+
+    // A moderate failure rate with the default retry budget: failures
+    // happen, retries absorb most of them, nothing is lost either way.
+    let partial = FaultConfig {
+        plan: FaultPlan::parse("launchfail:0.3:7").unwrap(),
+        retry: RetryPolicy::default(),
+    };
+    let r = run_faulty(&fleet, &trace, "jsq", &partial, factory.as_ref());
+    assert_conserved(&r, 16);
+    assert!(r.n_launch_failures > 0, "p=0.3 over 16 kernels drew no failures");
+    assert!(!r.kernels.is_empty(), "p=0.3 completed nothing");
+}
+
+/// A slowed device degrades to FIFO ordering (counted, not hidden) and
+/// still serves everything.
+#[test]
+fn slowdown_devices_degrade_to_fifo_and_still_serve() {
+    let fleet = FleetSpec::homogeneous(2);
+    let trace = Trace::poisson("mixed", 32, 400.0, 11);
+    let faults = FaultConfig {
+        plan: FaultPlan::parse("slowdown:1@0:3.0").unwrap(),
+        retry: RetryPolicy::default(),
+    };
+    let factory = sim_factory();
+    let r = run_faulty(&fleet, &trace, "roundrobin", &faults, factory.as_ref());
+    assert_conserved(&r, 32);
+    assert!(r.shed.is_empty());
+    assert!(
+        r.n_degraded_decisions > 0,
+        "round-robin sends half the windows to the slowed device; those must degrade"
+    );
+}
+
+/// Generated plans are deterministic per seed, valid for their fleet,
+/// and round-trip through the CSV serialization.
+#[test]
+fn generated_plans_are_deterministic_valid_and_round_trip() {
+    let a = FaultPlan::generate(42, 4, 500.0, 6);
+    let b = FaultPlan::generate(42, 4, 500.0, 6);
+    assert_eq!(a.name(), b.name());
+    assert!(!a.is_empty());
+    assert!(a.validate_for(4).is_ok());
+    let reparsed = FaultPlan::parse(&a.to_csv()).unwrap();
+    assert_eq!(reparsed.name(), a.name());
+    // A different seed draws a different plan (at 6 faults the
+    // collision odds are negligible).
+    let c = FaultPlan::generate(43, 4, 500.0, 6);
+    assert_ne!(a.name(), c.name());
+}
+
+/// Closed-loop sources must not deadlock when their outstanding kernel
+/// is shed: the shed path feeds completions back, so think-time clients
+/// keep issuing and the run terminates with everything accounted for.
+#[test]
+fn closed_loop_sources_survive_sheds_without_deadlock() {
+    let gpu = GpuSpec::gtx580();
+    let family = scenario_by_id("mixed").unwrap();
+    let fleet = FleetSpec::homogeneous(2);
+    let faults = FaultConfig {
+        plan: FaultPlan::parse("launchfail:1.0:5").unwrap(),
+        retry: RetryPolicy::new(2, 1),
+    };
+    let factory = sim_factory();
+    let reorderer = OnlineReorderer::fifo();
+    let r = simulate_fleet_with_faults(
+        &fleet,
+        Box::new(ClosedLoopSource::new(family, &gpu, 16, 4, 2.0, 3)),
+        parse_route_policy("jsq").unwrap(),
+        &|| parse_window_policy("linger:6:25").unwrap(),
+        &reorderer,
+        factory.as_ref(),
+        &OnlineOpts::default(),
+        &faults,
+    );
+    assert_eq!(
+        r.kernels.len() + r.shed.len(),
+        16,
+        "closed loop stalled: {} completed + {} shed of 16",
+        r.kernels.len(),
+        r.shed.len()
+    );
+}

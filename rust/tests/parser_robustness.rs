@@ -1,0 +1,175 @@
+//! Hostile-input pins for every string boundary the CLI exposes.
+//!
+//! Each registry parser (`FleetSpec`, `Trace`, window / route / search
+//! strategy spellings, arrival processes, fault plans) must turn
+//! malformed input into an actionable `Err` — echoing the offending
+//! input or naming the violated rule, never panicking, never guessing.
+//! These are table tests: add a row when a fuzzer or an incident finds
+//! a new way to mistype a spec.
+
+use kreorder::fault::FaultPlan;
+use kreorder::fleet::{parse_route_policy, FleetSpec};
+use kreorder::online::{parse_window_policy, ArrivalSpec, Trace};
+use kreorder::search::parse_strategy;
+
+/// Every parser error must be loud enough to act on: non-empty, and
+/// carrying either the offending input or a description of valid forms.
+fn assert_actionable(msg: &str, input: &str, parser: &str) {
+    assert!(!msg.is_empty(), "{parser}: empty error for `{input}`");
+    assert!(
+        msg.len() > 20,
+        "{parser}: error for `{input}` too terse to act on: {msg}"
+    );
+}
+
+#[test]
+fn fleet_specs_reject_hostile_input() {
+    let hostile = [
+        "",
+        " ",
+        "0",
+        "-3",
+        "abc",
+        "1,",
+        ",1",
+        "1,,1",
+        "1,-2",
+        "1,0",
+        "1,nan",
+        "1,inf",
+        "0x2",
+        "2x0",
+        "2x",
+        "x2",
+        "1;2",
+        "1e309",
+        "🚀",
+    ];
+    for s in hostile {
+        let err = FleetSpec::parse(s).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(&format!("`{s}`")), "input not echoed: {msg}");
+        assert_actionable(&msg, s, "FleetSpec");
+    }
+}
+
+#[test]
+fn traces_reject_hostile_input() {
+    let hostile: [(&str, &str); 9] = [
+        ("", "empty trace"),
+        ("not a trace", "missing `# kreorder-trace v1` header"),
+        ("# kreorder-trace v2 family=a n=0 seed=0\nat_ms\n", "header"),
+        ("# kreorder-trace v1 family=a seed=0\nat_ms\n", "n="),
+        ("# kreorder-trace v1 family=a n=x seed=0\nat_ms\n", "n="),
+        ("# kreorder-trace v1 family=a n=0 seed=0 bogus=1\nat_ms\n", "bogus"),
+        ("# kreorder-trace v1 family=a n=0 seed=0\n", "at_ms"),
+        ("# kreorder-trace v1 family=a n=1 seed=0\nat_ms\nnope\n", "nope"),
+        ("# kreorder-trace v1 family=a n=2 seed=0\nat_ms\n5.0\n1.0\n", "non-decreasing"),
+    ];
+    for (text, needle) in hostile {
+        let err = Trace::parse(text).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(needle), "expected `{needle}` in: {msg}");
+        assert_actionable(&msg, text, "Trace");
+    }
+    // Count mismatch between the header and the rows is caught too.
+    let err = Trace::parse("# kreorder-trace v1 family=a n=3 seed=0\nat_ms\n1.0\n").unwrap_err();
+    assert!(err.to_string().contains("n=3"), "{err}");
+}
+
+#[test]
+fn window_policies_reject_hostile_input() {
+    let hostile = [
+        "", "zzz", "fixed", "fixed:x", "fixed:-1", "linger", "linger:8", "linger:8:x",
+        "linger:8:-5", "linger:8:inf", "adaptive:4", "fixed:4:extra", "linger:8:50:9",
+    ];
+    for s in hostile {
+        let err = parse_window_policy(s).unwrap_err();
+        assert_actionable(&err.to_string(), s, "window");
+    }
+}
+
+#[test]
+fn route_policies_reject_hostile_input() {
+    let hostile = [
+        "", "zzz", "p2c", "p2c:x", "p2c:-1", "jsq:extra", "lrw:7", "affinity:0",
+        "circuit:", "circuit:zzz", "circuit:p2c", "circuit:circuit:", "roundrobin:1",
+    ];
+    for s in hostile {
+        let err = parse_route_policy(s).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(&format!("`{s}`")), "input not echoed: {msg}");
+        assert_actionable(&msg, s, "route");
+    }
+    // The circuit wrapper nests — the valid nested spellings stay valid.
+    assert!(parse_route_policy("circuit:p2c:7").is_ok());
+    assert!(parse_route_policy("circuit:jsq").is_ok());
+}
+
+#[test]
+fn search_strategies_reject_hostile_input() {
+    let hostile = ["", "zzz", "bnb:7", "exact:1", "local:x", "anneal:-1", "local:1:2"];
+    for s in hostile {
+        let err = parse_strategy(s).unwrap_err();
+        assert_actionable(&err.to_string(), s, "strategy");
+    }
+}
+
+#[test]
+fn arrival_specs_reject_hostile_input() {
+    let hostile = [
+        "",
+        "zzz",
+        "poisson",
+        "poisson:80",
+        "poisson:x:1",
+        "poisson:-80:1",
+        "poisson:inf:1",
+        "poisson:80:x",
+        "bursty:0:1",
+        "closed:4",
+        "closed:0:5:1",
+        "closed:4:-1:1",
+        "closed:4:5:1:9",
+    ];
+    for s in hostile {
+        let err = ArrivalSpec::parse(s).unwrap_err();
+        assert_actionable(&err.to_string(), s, "arrivals");
+    }
+}
+
+#[test]
+fn fault_plans_reject_hostile_input() {
+    let hostile: [(&str, &str); 14] = [
+        ("crash", "missing `:`"),
+        ("crash:0", "expected `<dev>@<t>`"),
+        ("crash:x@5", "device must be"),
+        ("crash:0@oops", "time must be"),
+        ("crash:0@-5", ">= 0"),
+        ("crash:0@10:recover@5", "after the crash"),
+        ("crash:0@10:revive@20", "recover@"),
+        ("slowdown:1@5", "factor"),
+        ("slowdown:1@5:0", "> 0"),
+        ("slowdown:1@5:x", "factor must be"),
+        ("launchfail:0.5", "launchfail:<p>:<seed>"),
+        ("launchfail:2:1", "[0, 1]"),
+        ("launchfail:0.1:1;launchfail:0.2:2", "at most one"),
+        ("meteor:1@2", "unknown clause"),
+    ];
+    for (s, needle) in hostile {
+        let err = FaultPlan::parse(s).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(needle), "expected `{needle}` in: {msg}");
+        // Every fault error ends with the valid-clause cheat sheet.
+        assert!(msg.contains("valid clauses"), "{msg}");
+        assert_actionable(&msg, s, "fault plan");
+    }
+    // Device bounds are a separate, also-actionable check.
+    let plan = FaultPlan::parse("crash:7@5").unwrap();
+    let err = plan.validate_for(4).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("device 7"), "{msg}");
+    assert!(msg.contains("4-device"), "{msg}");
+    // Comments and blank clauses are tolerated, not errors.
+    assert!(FaultPlan::parse("# a comment\n\ncrash:0@5;").is_ok());
+}
