@@ -15,6 +15,14 @@
 //!    evaluation of the same seeded strategy produce bit-identical
 //!    outcomes (best, order, trajectory) while the throughput section
 //!    below records their evals/s ratio.
+//! 4. **DAG exactness** — every searcher handed a DAG workload returns
+//!    the bit-identical optimum (value and tie-broken order) of the
+//!    exhaustive sweep over topological orders only, for every DAG
+//!    family at n ≤ 8 on both backends; past the exact cover (n = 12)
+//!    the anytime DAG path stays feasible and deterministic per seed.
+//!    Per-family linear-extension counts, the n!-shrink factor, the
+//!    topological sweep rate and bnb evals land in the `dag` section of
+//!    the JSON.
 //!
 //! The **anytime throughput** section measures order evaluations per
 //! second for three paths: the prefix-reuse cursor, full prepared
@@ -46,13 +54,13 @@ mod harness;
 
 use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
 use kreorder::gpu::GpuSpec;
-use kreorder::perm::{sweep_stats_with, SweepStats};
+use kreorder::perm::{sweep_dag_with, sweep_stats_with, SweepStats};
 use kreorder::search::{
     BranchAndBound, LocalSearch, SearchBudget, SearchOutcome, SearchStrategy, SimulatedAnnealing,
 };
 use kreorder::sched::reorder;
 use kreorder::util::SplitMix64;
-use kreorder::workloads::{all_scenarios, scenario_by_id};
+use kreorder::workloads::{all_dag_scenarios, all_scenarios, scenario_by_id};
 use std::time::Instant;
 
 const GATE_BUDGET: u64 = 10_000;
@@ -136,10 +144,124 @@ fn main() {
         }
     }
 
+    // ---- DAG gates: topological-order search vs the constrained sweep --
+    // Every searcher, handed a DAG workload, must land on the bit-identical
+    // optimum (value AND tie-broken order) of the exhaustive sweep over
+    // topological orders only — on every DAG family, both backends. The
+    // anytime strategies route through their exact cover here (extension
+    // count within budget), so this also pins that routing.
+    harness::section("DAG search vs constrained exhaustive sweep (bitwise optima)");
+    let sim = factory("sim");
+    struct DagRow {
+        scenario: &'static str,
+        n: usize,
+        extensions: u128,
+        shrink: f64,
+        topo_perms_per_s: f64,
+        bnb_evals: u64,
+    }
+    let mut dag_rows: Vec<DagRow> = Vec::new();
+    let mut dag_exact_ok = true;
+    let dag_sizes: &[usize] = if quick { &[6, 8] } else { &[6, 7, 8] };
+    for sc in all_dag_scenarios() {
+        for &n in dag_sizes {
+            let w = sc.workload(&gpu, n, 11);
+            let graph = w.dep_graph().expect("registry DAG families are valid");
+            let ext = graph.linear_extension_count().expect("n <= 8 fits the extension DP");
+            let factorial: f64 = (1..=n).map(|i| i as f64).product();
+            let mut sim_topo_pps = 0.0;
+            let mut sim_bnb_evals = 0;
+            for backend in ["sim", "analytic"] {
+                let f = factory(backend);
+                let t0 = Instant::now();
+                let sw = sweep_dag_with(&gpu, &w.kernels, &graph, f.as_ref());
+                let topo_pps = sw.n_perms as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+                let strategies: [Box<dyn SearchStrategy>; 3] = [
+                    Box::new(BranchAndBound::new()),
+                    Box::new(SimulatedAnnealing::new(7)),
+                    Box::new(LocalSearch::new(7)),
+                ];
+                for s in strategies {
+                    let name = s.name();
+                    let out = s.search_dag(&gpu, &w, f.as_ref(), &SearchBudget::unlimited());
+                    let bits_match = out.best_ms.to_bits() == sw.best_ms.to_bits()
+                        && out.best_order == sw.best_order
+                        && out.complete;
+                    println!(
+                        "  {:<10} n={n} {:<8} {:<8} sweep {:>10.4} ms ({:>5} topo orders) | \
+                         search {:>10.4} ms in {:>6} evals {}",
+                        sc.id,
+                        backend,
+                        name,
+                        sw.best_ms,
+                        sw.n_perms,
+                        out.best_ms,
+                        out.evals,
+                        if bits_match { "OK" } else { "MISMATCH" }
+                    );
+                    if !bits_match {
+                        dag_exact_ok = false;
+                        failures.push(format!(
+                            "DAG mismatch: {} n={n} {backend} {name}: sweep ({}, {:?}) vs \
+                             search ({}, {:?}, complete={})",
+                            sc.id, sw.best_ms, sw.best_order, out.best_ms, out.best_order,
+                            out.complete
+                        ));
+                    }
+                    if backend == "sim" && name == "bnb" {
+                        sim_bnb_evals = out.evals;
+                    }
+                }
+                if backend == "sim" {
+                    sim_topo_pps = topo_pps;
+                }
+            }
+            dag_rows.push(DagRow {
+                scenario: sc.id,
+                n,
+                extensions: ext,
+                shrink: factorial / ext as f64,
+                topo_perms_per_s: sim_topo_pps,
+                bnb_evals: sim_bnb_evals,
+            });
+        }
+    }
+
+    // Past the exact cover (n = 12 > DAG_EXACT_MAX_N), the anytime DAG
+    // path proper must stay feasible and deterministic per seed.
+    harness::section("anytime DAG feasibility + determinism at n=12 (4k-eval budget)");
+    let mut dag_anytime_ok = true;
+    for sc in all_dag_scenarios() {
+        let w = sc.workload(&gpu, 12, 31);
+        let graph = w.dep_graph().expect("registry DAG families are valid");
+        let strategies: [Box<dyn SearchStrategy>; 2] = [
+            Box::new(SimulatedAnnealing::new(7)),
+            Box::new(LocalSearch::new(7)),
+        ];
+        for s in strategies {
+            let budget = SearchBudget::evals(4_000);
+            let a = s.search_dag(&gpu, &w, sim.as_ref(), &budget);
+            let b = s.search_dag(&gpu, &w, sim.as_ref(), &budget);
+            let topo = graph.is_topological(&a.best_order);
+            let det = a.best_ms.to_bits() == b.best_ms.to_bits() && a.best_order == b.best_order;
+            println!(
+                "  {:<10} {:<10} best {:>10.4} ms in {:>5} evals  topological={topo} \
+                 deterministic={det}",
+                sc.id, a.strategy, a.best_ms, a.evals
+            );
+            if !topo || !det {
+                dag_anytime_ok = false;
+                failures.push(format!(
+                    "DAG anytime violation: {} {}: topological={topo} deterministic={det}",
+                    sc.id, a.strategy
+                ));
+            }
+        }
+    }
+
     // ---- gate 2: anytime quality at the 10k-eval budget, n = 10 -------
     harness::section("anytime strategies vs n=10 sweep distribution (10k-eval budget)");
     let mut anytime_ok = true;
-    let sim = factory("sim");
     for sc in all_scenarios() {
         let ks = sc.workload(&gpu, 10, 23);
         let stats = sweep_stats_with(&gpu, &ks, sim.as_ref(), 4096);
@@ -323,8 +445,25 @@ fn main() {
     let mut json = String::from("{\n  \"bench\": \"search_quality\",\n  \"gpu\": \"gtx580\",\n");
     json.push_str(&format!(
         "  \"gates\": {{\"bnb_bitwise_ok\": {bnb_ok}, \"anytime_p90_ok\": {anytime_ok}, \
-         \"cursor_identical_ok\": {cursor_ok}}},\n"
+         \"cursor_identical_ok\": {cursor_ok}, \"dag_bitwise_ok\": {dag_exact_ok}, \
+         \"dag_anytime_ok\": {dag_anytime_ok}}},\n"
     ));
+    json.push_str("  \"dag\": [\n");
+    for (i, r) in dag_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"n\": {}, \"extensions\": {}, \
+             \"shrink_vs_factorial\": {:.2}, \"topo_sweep_perms_per_s\": {:.1}, \
+             \"bnb_evals\": {}}}{}\n",
+            r.scenario,
+            r.n,
+            r.extensions,
+            r.shrink,
+            r.topo_perms_per_s,
+            r.bnb_evals,
+            if i + 1 == dag_rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"anytime_throughput\": [\n");
     for (i, r) in thr_rows.iter().enumerate() {
         json.push_str(&format!(

@@ -304,18 +304,24 @@ impl FaultPlan {
         plan
     }
 
-    /// Check every device index against a fleet of `n_devices`.
+    /// Check every device index against a fleet of `n_devices`. The
+    /// error echoes the *specific offending clause* (not the whole plan)
+    /// and names the device index and the fleet size in one sentence, so
+    /// a multi-clause plan points straight at the line to fix.
     pub fn validate_for(&self, n_devices: usize) -> Result<(), FaultParseError> {
         let bad = self
             .crashes
             .iter()
-            .map(|c| c.device)
-            .chain(self.slowdowns.iter().map(|s| s.device))
-            .find(|&d| d >= n_devices);
+            .map(|c| (c.device, crash_clause(c)))
+            .chain(self.slowdowns.iter().map(|s| (s.device, slowdown_clause(s))))
+            .find(|(d, _)| *d >= n_devices);
         match bad {
-            Some(d) => Err(FaultParseError {
-                input: self.name(),
-                reason: format!("device {d} does not exist in a {n_devices}-device fleet"),
+            Some((d, clause)) => Err(FaultParseError {
+                input: clause,
+                reason: format!(
+                    "device {d} does not exist in this {n_devices}-device fleet \
+                     (valid device indices are 0..{n_devices})"
+                ),
             }),
             None => Ok(()),
         }
@@ -325,13 +331,10 @@ impl FaultPlan {
     pub fn name(&self) -> String {
         let mut clauses: Vec<String> = Vec::new();
         for c in &self.crashes {
-            clauses.push(match c.recover_at_ms {
-                Some(r) => format!("crash:{}@{}:recover@{}", c.device, c.at_ms, r),
-                None => format!("crash:{}@{}", c.device, c.at_ms),
-            });
+            clauses.push(crash_clause(c));
         }
         for s in &self.slowdowns {
-            clauses.push(format!("slowdown:{}@{}:{}", s.device, s.at_ms, s.factor));
+            clauses.push(slowdown_clause(s));
         }
         if let Some(lf) = self.launch_failures {
             clauses.push(format!("launchfail:{}:{}", lf.p, lf.seed));
@@ -396,6 +399,20 @@ impl FaultPlan {
         });
         events
     }
+}
+
+/// Canonical spelling of one crash clause (shared by [`FaultPlan::name`]
+/// and the clause-echoing validation errors).
+fn crash_clause(c: &Crash) -> String {
+    match c.recover_at_ms {
+        Some(r) => format!("crash:{}@{}:recover@{}", c.device, c.at_ms, r),
+        None => format!("crash:{}@{}", c.device, c.at_ms),
+    }
+}
+
+/// Canonical spelling of one slowdown clause.
+fn slowdown_clause(s: &Slowdown) -> String {
+    format!("slowdown:{}@{}:{}", s.device, s.at_ms, s.factor)
 }
 
 /// Per-kernel retry with seeded exponential backoff + jitter. Attempt
@@ -637,6 +654,16 @@ mod tests {
         let err = p.validate_for(2).unwrap_err();
         assert!(err.to_string().contains("device 3"), "{err}");
         assert!(err.to_string().contains("2-device"), "{err}");
+        assert!(err.to_string().contains("`crash:3@10`"), "{err}");
+        // A multi-clause plan echoes only the offending clause.
+        let p = FaultPlan::parse("crash:0@5;slowdown:6@10:2;launchfail:0.1:1").unwrap();
+        let err = p.validate_for(4).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("`slowdown:6@10:2`"), "{msg}");
+        assert!(!msg.contains("crash:0@5"), "{msg}");
+        assert!(msg.contains("device 6"), "{msg}");
+        assert!(msg.contains("4-device"), "{msg}");
+        assert!(msg.contains("0..4"), "{msg}");
     }
 
     #[test]

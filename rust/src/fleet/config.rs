@@ -1,0 +1,230 @@
+//! [`FleetSimConfig`] — the builder form of the fleet-simulation entry
+//! point.
+//!
+//! [`simulate_fleet_with_faults`](crate::fleet::simulate_fleet_with_faults)
+//! grew to eight positional arguments, five of which almost every caller
+//! sets to the same defaults. This builder owns every piece, defaults
+//! the optional ones (round-robin routing, `fixed:8` windows, FIFO
+//! reordering, the simulator backend, default [`OnlineOpts`], no
+//! faults), and runs the *same* engine — a [`FleetSimConfig::run`] with
+//! every setter spelled out is argument-for-argument the positional
+//! call, so reports are bit-identical between the two forms.
+//!
+//! ```
+//! use kreorder::fleet::{FleetSimConfig, FleetSpec};
+//! use kreorder::online::{ReplaySource, Trace};
+//! use kreorder::gpu::GpuSpec;
+//!
+//! let gpu = GpuSpec::gtx580();
+//! let trace = Trace::poisson("skewed", 16, 300.0, 3);
+//! let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+//! let report = FleetSimConfig::new(FleetSpec::homogeneous(2), source)
+//!     .route_named("jsq")
+//!     .unwrap()
+//!     .window_named("linger:6:30")
+//!     .unwrap()
+//!     .run();
+//! assert_eq!(report.kernels.len(), 16);
+//! ```
+
+use crate::exec::{ExecutionBackend, SimulatorBackend};
+use crate::fault::{FaultConfig, FaultPlan, RetryPolicy};
+use crate::fleet::{
+    parse_route_policy, simulate_fleet_with_faults, FleetReport, FleetSpec, RoutePolicy,
+};
+use crate::online::{
+    parse_window_policy, ArrivalSource, OnlineOpts, OnlineReorderer, WindowPolicy,
+};
+use crate::registry::ParseError;
+
+/// Owned configuration for one fleet simulation; see the module docs.
+/// Build with [`FleetSimConfig::new`] (the two pieces with no sensible
+/// default: the fleet and the arrival stream), override the rest with
+/// the setters, and [`run`](FleetSimConfig::run).
+pub struct FleetSimConfig {
+    fleet: FleetSpec,
+    source: Box<dyn ArrivalSource>,
+    route: Box<dyn RoutePolicy>,
+    make_window: Box<dyn Fn() -> Box<dyn WindowPolicy>>,
+    reorderer: OnlineReorderer,
+    make_backend: Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync>,
+    opts: OnlineOpts,
+    faults: FaultConfig,
+}
+
+impl FleetSimConfig {
+    /// A config with the given fleet and arrival stream and every other
+    /// piece at its default: `roundrobin` routing, `fixed:8` windows,
+    /// FIFO reordering, the simulator backend, default [`OnlineOpts`],
+    /// no faults.
+    pub fn new(fleet: FleetSpec, source: Box<dyn ArrivalSource>) -> FleetSimConfig {
+        FleetSimConfig {
+            fleet,
+            source,
+            route: parse_route_policy("roundrobin").expect("roundrobin is registered"),
+            make_window: Box::new(|| {
+                parse_window_policy("fixed:8").expect("fixed:8 is a valid window spelling")
+            }),
+            reorderer: OnlineReorderer::fifo(),
+            make_backend: Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>),
+            opts: OnlineOpts::default(),
+            faults: FaultConfig::default(),
+        }
+    }
+
+    /// Set the route policy.
+    pub fn route(mut self, route: Box<dyn RoutePolicy>) -> Self {
+        self.route = route;
+        self
+    }
+
+    /// Set the route policy by registry spelling (`"jsq"`, `"lrw"`,
+    /// `"p2c:<seed>"`, …).
+    pub fn route_named(self, spelling: &str) -> Result<Self, ParseError> {
+        let route = crate::registry::parse_route(spelling)?;
+        Ok(self.route(route))
+    }
+
+    /// Set the per-device window-policy factory (each device gets its
+    /// own instance, so stateful policies do not share state).
+    pub fn window(mut self, make_window: Box<dyn Fn() -> Box<dyn WindowPolicy>>) -> Self {
+        self.make_window = make_window;
+        self
+    }
+
+    /// Set the window policy by registry spelling (`"fixed:<k>"`,
+    /// `"linger:<k>:<ms>"`, `"adaptive:<k>:<ms>"`).
+    pub fn window_named(self, spelling: &str) -> Result<Self, ParseError> {
+        // Validate once at configuration time; the factory re-parses the
+        // canonical spelling per device.
+        let canonical = crate::registry::parse_window(spelling)?.name();
+        Ok(self.window(Box::new(move || {
+            parse_window_policy(&canonical).expect("canonical window names reparse")
+        })))
+    }
+
+    /// Set the per-window reorder decision.
+    pub fn reorderer(mut self, reorderer: OnlineReorderer) -> Self {
+        self.reorderer = reorderer;
+        self
+    }
+
+    /// Set the execution-backend factory (each device gets its own).
+    pub fn backend(
+        mut self,
+        make_backend: Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync>,
+    ) -> Self {
+        self.make_backend = make_backend;
+        self
+    }
+
+    /// Set the engine options (decision-cost model).
+    pub fn opts(mut self, opts: OnlineOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Set the full fault configuration (plan + retry policy).
+    pub fn faults(mut self, faults: FaultConfig) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Set just the fault plan, keeping the default retry policy.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.faults.plan = plan;
+        self
+    }
+
+    /// Set just the retry policy.
+    pub fn retry(mut self, retry: RetryPolicy) -> Self {
+        self.faults.retry = retry;
+        self
+    }
+
+    /// Run the simulation — exactly
+    /// [`simulate_fleet_with_faults`](crate::fleet::simulate_fleet_with_faults)
+    /// with this config's pieces in positional order, so the two forms
+    /// produce bit-identical reports.
+    pub fn run(self) -> FleetReport {
+        simulate_fleet_with_faults(
+            &self.fleet,
+            self.source,
+            self.route,
+            self.make_window.as_ref(),
+            &self.reorderer,
+            self.make_backend.as_ref(),
+            &self.opts,
+            &self.faults,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuSpec;
+    use crate::online::{ReplaySource, Trace};
+
+    fn source(n: usize, seed: u64) -> Box<dyn ArrivalSource> {
+        let gpu = GpuSpec::gtx580();
+        let trace = Trace::poisson("skewed", n, 400.0, seed);
+        Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap())
+    }
+
+    #[test]
+    fn defaults_run_and_conserve_kernels() {
+        let r = FleetSimConfig::new(FleetSpec::homogeneous(2), source(20, 5)).run();
+        assert_eq!(r.kernels.len(), 20);
+        assert_eq!(r.route, "roundrobin");
+        assert_eq!(r.window, "fixed:8");
+    }
+
+    #[test]
+    fn builder_run_bit_matches_the_positional_call() {
+        let fleet = FleetSpec::parse("1,0.5").unwrap();
+        let reorderer = OnlineReorderer::search("local:0", 200).unwrap();
+        let faults = FaultConfig {
+            plan: FaultPlan::parse("slowdown:1@50:2").unwrap(),
+            retry: RetryPolicy::new(3, 1),
+        };
+        let built = FleetSimConfig::new(fleet.clone(), source(18, 9))
+            .route_named("jsq")
+            .unwrap()
+            .window_named("linger:6:30")
+            .unwrap()
+            .reorderer(reorderer.clone())
+            .opts(OnlineOpts::default())
+            .faults(faults.clone())
+            .run();
+        let positional = simulate_fleet_with_faults(
+            &fleet,
+            source(18, 9),
+            parse_route_policy("jsq").unwrap(),
+            &|| parse_window_policy("linger:6:30").unwrap(),
+            &reorderer,
+            &|| Box::new(crate::exec::SimulatorBackend::new()) as Box<dyn ExecutionBackend>,
+            &OnlineOpts::default(),
+            &faults,
+        );
+        assert_eq!(built.kernels.len(), positional.kernels.len());
+        assert_eq!(built.span_ms.to_bits(), positional.span_ms.to_bits());
+        for (a, b) in built.kernels.iter().zip(positional.kernels.iter()) {
+            assert_eq!(a.finish_ms.to_bits(), b.finish_ms.to_bits());
+            assert_eq!(a.device, b.device);
+        }
+    }
+
+    #[test]
+    fn bad_spellings_surface_the_uniform_error() {
+        let err = FleetSimConfig::new(FleetSpec::homogeneous(1), source(4, 1))
+            .route_named("blorp")
+            .unwrap_err();
+        assert_eq!(err.kind, "route");
+        assert!(err.to_string().contains("blorp"), "{err}");
+        let err = FleetSimConfig::new(FleetSpec::homogeneous(1), source(4, 1))
+            .window_named("blorp")
+            .unwrap_err();
+        assert_eq!(err.kind, "window");
+    }
+}

@@ -239,6 +239,12 @@ pub fn simulate_fleet(
 
 /// [`simulate_fleet`] with a [`FaultConfig`] threaded through the loop.
 ///
+/// **Prefer [`crate::fleet::FleetSimConfig`]** for new call sites: the
+/// builder names each of these eight positional arguments, defaults the
+/// common ones, and runs this exact function — bit-identical reports.
+/// The positional form stays for existing callers and for the builder
+/// itself; it is not going away, but it is no longer the front door.
+///
 /// The no-kernel-lost invariant (`tests/fault_recovery.rs`): every
 /// arrival ends as exactly one of a completed kernel record, or a
 /// [`ShedRecord`] with a cause (retry cap exhausted, or stranded on a

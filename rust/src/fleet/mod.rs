@@ -20,6 +20,10 @@
 //!   ([`crate::coordinator::CoordinatorBuilder::route_policy`]).
 //! * [`FleetSpec`] — the devices, with heterogeneity as per-device
 //!   speed factors (`--devices 1,1,0.5`).
+//! * [`FleetSimConfig`] — the preferred builder form of the simulation
+//!   entry point: owns every piece, defaults the common ones, and runs
+//!   the same engine bit-identically. The eight-positional-argument
+//!   [`simulate_fleet_with_faults`] stays as the thin underlying call.
 //! * [`simulate_fleet`] — the deterministic discrete-event loop over D
 //!   devices (fault < routing decision < completion < batch start <
 //!   arrival < retry < recheck at equal times); bit-identical replay
@@ -40,12 +44,14 @@
 //! `benches/fault_tolerance.rs` gates the recovery story (health-aware
 //! rerouting beats health-blind routing under a 1-of-4 crash plan).
 
+pub mod config;
 pub mod engine;
 pub mod oracle;
 pub mod report;
 pub mod route;
 pub mod spec;
 
+pub use config::FleetSimConfig;
 pub use engine::{simulate_fleet, simulate_fleet_with_faults};
 pub use oracle::fleet_lower_bound;
 pub use report::{p99_speedup, FleetBatchRecord, FleetKernelRecord, FleetReport, ShedRecord};

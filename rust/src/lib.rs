@@ -103,6 +103,42 @@
 //!   below and `src/search/README.md` for the full online-vs-offline
 //!   decision guide).
 //!
+//! ## The dependency model: DAG workloads
+//!
+//! The paper's sweep assumes the kernels are mutually *independent* —
+//! any of the `n!` launch orders is legal. Real inference and training
+//! graphs are not: a kernel may consume another's output, so only the
+//! *linear extensions* of a precedence DAG are launchable. The
+//! [`workloads::Workload`] type carries kernels plus optional
+//! `(pred, succ)` edges (builder spellings
+//! [`workloads::Workload::with_dep`] / `with_chain`, CSV round-trip via
+//! [`workloads::parse_deps`] / `deps_to_csv`), validated into a
+//! [`workloads::DepGraph`] — cycles, self-loops and out-of-range edges
+//! are rejected with actionable errors. Every layer above understands
+//! it:
+//!
+//! * [`perm::sweep_dag`] / [`perm::sweep_stats_dag_with`] enumerate
+//!   **only topological orders** (the same lexicographic prefix tree,
+//!   skipping infeasible prefixes) — bit-identical to filtering the
+//!   naive sweep, and often *far* smaller: a chain has one extension,
+//!   not `n!`.
+//! * Every [`search::SearchStrategy`] has a
+//!   [`search::SearchStrategy::search_dag`] entry point:
+//!   branch-and-bound prunes to topological prefixes with its symmetry
+//!   collapse refined by dependency signature, and the anytime
+//!   strategies propose feasibility-checked moves (infeasible proposals
+//!   are charged but never simulated) — all bit-identical to the
+//!   constrained sweep where exhaustion is covered, and bit-identical
+//!   to their independent-workload behavior when `deps` is empty.
+//! * The online layer takes a within-window dependency template
+//!   ([`online::OnlineReorderer::with_deps`]); template edges point
+//!   forward in arrival order so FIFO stays feasible and the never-
+//!   worse-than-FIFO guard is unchanged.
+//! * DAG-shaped scenario families ([`workloads::DAG_SCENARIOS`]:
+//!   `chain`, `fanout`, `fanin`, `layered`, `mlinfer`) mirror the
+//!   independent families for benches and the CLI (`--deps`, DAG
+//!   spellings in `kreorder search`).
+//!
 //! ## Online: when ordering competes with time
 //!
 //! Everything above assumes the batch is in hand. The [`online`] module
@@ -193,6 +229,27 @@
 //!   responses, panic message surfaced in
 //!   [`coordinator::ServiceStats`]), and its queue re-routes to live
 //!   workers instead of poisoning shutdown.
+//!
+//! ## Migration: the fleet entry point and the unified registries
+//!
+//! Two API consolidations, both backward compatible:
+//!
+//! * [`fleet::FleetSimConfig`] is the **preferred** way to run a fleet
+//!   simulation. The positional
+//!   [`fleet::simulate_fleet_with_faults`] (eight arguments) and its
+//!   [`fleet::simulate_fleet`] / [`online::simulate_online`] thin
+//!   wrappers keep working unchanged — the builder calls the same
+//!   engine argument-for-argument, so reports are bit-identical — but
+//!   new call sites should use the builder: defaults for the five
+//!   pieces almost everyone leaves alone, named setters for the rest,
+//!   and uniform [`registry::ParseError`]s from the `*_named` setters.
+//! * [`registry`] is the uniform front door over the six string
+//!   registries (policy / strategy / route / window / arrivals /
+//!   fault-plan): one [`registry::ParseError`] carrying the kind, the
+//!   echoed input and that kind's cheat sheet, plus
+//!   [`registry::kinds`] / [`registry::list`] backing the
+//!   `kreorder list [--kind <k>]` subcommand. The per-subsystem
+//!   parsers and their typed errors remain the sources of truth.
 //!
 //! CI enforces the quality contract (`benches/search_quality.rs`,
 //! smoke-run per push): branch-and-bound must bit-match the sweep on
@@ -322,6 +379,7 @@ pub mod metrics;
 pub mod online;
 pub mod perm;
 pub mod profile;
+pub mod registry;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;

@@ -60,6 +60,7 @@ fn run(args: &[String]) -> Result<()> {
         "fleet" => cmd_fleet(rest),
         "fault" => cmd_fault(rest),
         "ablate" => cmd_ablate(rest),
+        "list" => cmd_list(rest),
         "policies" => cmd_policies(rest),
         "artifacts" => cmd_artifacts(rest),
         "help" | "--help" | "-h" => {
@@ -82,9 +83,13 @@ COMMANDS:
   fig1 [--out-dir DIR] [--bins N]      reproduce Fig. 1 for EpBsEsSw-8
   sweep --exp ID [--backend B]         permutation-space stats for one experiment
   search (--exp ID | --synthetic N | --scenario FAMILY:N) [--seed S]
-         [--strategy STRAT] [--budget EVALS] [--backend B]
+         [--deps SPEC-OR-FILE] [--strategy STRAT] [--budget EVALS] [--backend B]
          [--trajectory] [--compare-sweep] [--compare-eval] [--list]
-                                       launch-order search beyond the factorial wall
+                                       launch-order search beyond the factorial wall;
+                                       FAMILY may be a DAG family (chain, fanout, fanin,
+                                       layered, mlinfer) and --deps adds precedence
+                                       edges (`0->2;1->2` or a kreorder-deps CSV file):
+                                       search is then over topological orders only
                                        (--compare-eval re-runs on the full-evaluation /
                                        no-symmetry reference path: prints both evals/s
                                        and verifies bit-identical incumbents)
@@ -94,8 +99,8 @@ COMMANDS:
         [--artifacts DIR] [--sim-only] [--backend B]
                                        run the launch coordinator service
   serve --arrivals PROC [--count N] [--scenario FAMILY] [--window WP]
-        [--strategy S|fifo] [--budget EVALS] [--decision-cost MS]
-        [--slo MS] [--oracle] [--record FILE] [--backend B]
+        [--strategy S|fifo] [--budget EVALS] [--deps SPEC-OR-FILE]
+        [--decision-cost MS] [--slo MS] [--oracle] [--record FILE] [--backend B]
                                        ONLINE mode: deterministic virtual-clock run of
                                        the streaming scheduler (arrivals PROC = e.g.
                                        poisson:<rate>:<seed>; window WP = e.g.
@@ -119,6 +124,10 @@ COMMANDS:
                                        launch failures with retry + backoff
                                        (see `kreorder fault --list-faults`)
   ablate [--exp ID] [--backend B]      score-component ablation
+  list [--kind K]                      list every string registry (policy, strategy,
+                                       route, window, arrivals, fault-plan) or one kind;
+                                       consolidates the per-command --list flags, which
+                                       remain as aliases
   policies                             list the launch-policy registry
   artifacts [--dir DIR]                list AOT artifacts + measured profiles
 
@@ -310,7 +319,10 @@ fn cmd_search(args: &[String]) -> Result<()> {
     use kreorder::search::{
         parse_strategy, parse_strategy_reference, strategy_help_table, SearchBudget,
     };
-    use kreorder::workloads::{all_scenarios, scenario_by_id};
+    use kreorder::workloads::{
+        all_dag_scenarios, all_scenarios, dag_scenario_by_id, parse_deps, scenario_by_id,
+        Workload,
+    };
 
     if flag(args, "--list") {
         println!("search strategies:");
@@ -319,33 +331,56 @@ fn cmd_search(args: &[String]) -> Result<()> {
         for sc in all_scenarios() {
             println!("  {:<14} {}", sc.id, sc.description);
         }
+        println!("\ndependency (DAG) scenario families (--scenario FAMILY:N):");
+        for sc in all_dag_scenarios() {
+            println!("  {:<14} {}", sc.id, sc.description);
+        }
         return Ok(());
     }
 
     let gpu = GpuSpec::gtx580();
     let seed: u64 = opt(args, "--seed").map_or(0, |s| s.parse().unwrap_or(0));
-    let kernels = if let Some(id) = opt(args, "--exp") {
-        by_id(id)
-            .with_context(|| format!("unknown experiment `{id}`"))?
-            .kernels
+    let mut workload: Workload = if let Some(id) = opt(args, "--exp") {
+        Workload::independent(
+            by_id(id)
+                .with_context(|| format!("unknown experiment `{id}`"))?
+                .kernels,
+        )
     } else if let Some(n) = opt(args, "--synthetic") {
         let n: usize = n.parse().context("bad --synthetic")?;
-        synthetic_workload(&gpu, n, seed)
+        Workload::independent(synthetic_workload(&gpu, n, seed))
     } else if let Some(spec) = opt(args, "--scenario") {
         let (family, n) = spec
             .split_once(':')
-            .context("--scenario takes FAMILY:N, e.g. skewed:16")?;
-        let sc = scenario_by_id(family).with_context(|| {
-            format!("unknown scenario family `{family}` (see `kreorder search --list`)")
-        })?;
-        sc.workload(&gpu, n.parse().context("bad scenario size")?, seed)
+            .context("--scenario takes FAMILY:N, e.g. skewed:16 or chain:16")?;
+        let n: usize = n.parse().context("bad scenario size")?;
+        if let Some(sc) = scenario_by_id(family) {
+            Workload::independent(sc.workload(&gpu, n, seed))
+        } else if let Some(sc) = dag_scenario_by_id(family) {
+            sc.workload(&gpu, n, seed)
+        } else {
+            bail!("unknown scenario family `{family}` (see `kreorder search --list`)");
+        }
     } else {
         bail!("need --exp ID, --synthetic N or --scenario FAMILY:N (or --list)");
     };
-    if kernels.is_empty() {
+    if let Some(spec) = opt(args, "--deps") {
+        // `--deps` takes an inline spec (`0->2;1->2`) or a kreorder-deps
+        // CSV file; edges add to whatever the scenario already carries.
+        let text = if std::path::Path::new(spec).is_file() {
+            std::fs::read_to_string(spec).with_context(|| format!("reading deps {spec}"))?
+        } else {
+            spec.to_string()
+        };
+        workload
+            .deps
+            .extend(parse_deps(&text).map_err(anyhow::Error::from)?);
+    }
+    if workload.kernels.is_empty() {
         bail!("empty workload: need at least one kernel to search");
     }
-    sim::validate_workload(&gpu, &kernels).map_err(|e| anyhow::anyhow!("{e}"))?;
+    sim::validate_workload(&gpu, &workload.kernels).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let graph = workload.dep_graph().map_err(anyhow::Error::from)?;
 
     let strategy_name = opt(args, "--strategy").unwrap_or("bnb");
     let strategy = parse_strategy(strategy_name).map_err(anyhow::Error::from)?;
@@ -358,17 +393,30 @@ fn cmd_search(args: &[String]) -> Result<()> {
     };
     let make_backend = model_backend_factory(args)?;
 
-    let n = kernels.len();
-    eprintln!(
-        "searching {n} kernels ({} orders) with {}…",
-        if n <= 20 {
-            format!("{:.3e}", (1..=n).map(|i| i as f64).product::<f64>())
-        } else {
-            "≫ 10^18".into()
-        },
-        strategy.name()
-    );
-    let out = strategy.search(&gpu, &kernels, make_backend.as_ref(), &budget);
+    let n = workload.n();
+    let order_count = if graph.has_deps() {
+        match graph.linear_extension_count() {
+            Some(ext) => format!(
+                "{ext} topological orders of {} total",
+                if n <= 20 {
+                    format!("{:.3e}", (1..=n).map(|i| i as f64).product::<f64>())
+                } else {
+                    "≫ 10^18".into()
+                }
+            ),
+            None => "topological orders only".into(),
+        }
+    } else if n <= 20 {
+        format!("{:.3e} orders", (1..=n).map(|i| i as f64).product::<f64>())
+    } else {
+        "≫ 10^18 orders".into()
+    };
+    eprintln!("searching {n} kernels ({order_count}) with {}…", strategy.name());
+    let out = if graph.has_deps() {
+        strategy.search_dag(&gpu, &workload, make_backend.as_ref(), &budget)
+    } else {
+        strategy.search(&gpu, &workload.kernels, make_backend.as_ref(), &budget)
+    };
 
     println!("strategy   : {}", out.strategy);
     println!("best       : {:.4} ms", out.best_ms);
@@ -393,7 +441,12 @@ fn cmd_search(args: &[String]) -> Result<()> {
         }
     }
 
-    if flag(args, "--compare-eval") {
+    if flag(args, "--compare-eval") && graph.has_deps() {
+        eprintln!(
+            "note: --compare-eval skipped (the reference configurations exercise the \
+             unconstrained evaluation paths; use --compare-sweep to cross-check a DAG run)"
+        );
+    } else if flag(args, "--compare-eval") {
         // Field-debugging aid for the fast evaluation paths: re-run the
         // same strategy in its reference configuration (anytime: full
         // per-candidate evaluation instead of the prefix-reuse cursor;
@@ -414,7 +467,7 @@ fn cmd_search(args: &[String]) -> Result<()> {
             "full (non-incremental) evaluation"
         };
         eprintln!("re-running with {what}…");
-        let full = reference.search(&gpu, &kernels, make_backend.as_ref(), &budget);
+        let full = reference.search(&gpu, &workload.kernels, make_backend.as_ref(), &budget);
         let rate = |evals: u64, wall_ms: f64| evals as f64 / (wall_ms / 1e3).max(1e-9);
         println!(
             "eval rate  : {:.0} evals/s fast vs {:.0} evals/s reference ({:.2}x, {} vs {} evals)",
@@ -441,12 +494,56 @@ fn cmd_search(args: &[String]) -> Result<()> {
     }
 
     if flag(args, "--compare-sweep") {
-        if n > 11 {
+        if graph.has_deps() {
+            // The DAG sweep wall is the linear-extension count, not n!:
+            // a 20-kernel chain has exactly one order, a wide antichain
+            // explodes. Guard on the actual count.
+            const DAG_SWEEP_WALL: u128 = 5_000_000;
+            match graph.linear_extension_count() {
+                Some(ext) if ext <= DAG_SWEEP_WALL => {
+                    eprintln!("sweeping all {ext} topological orders for comparison…");
+                    let sw = kreorder::perm::sweep_dag_with(
+                        &gpu,
+                        &workload.kernels,
+                        &graph,
+                        make_backend.as_ref(),
+                    );
+                    println!(
+                        "sweep      : best {:.4} ms over {} topological orders",
+                        sw.best_ms, sw.n_perms
+                    );
+                    println!(
+                        "gap        : {:+.4}% vs constrained-sweep optimum",
+                        (out.best_ms - sw.best_ms) / sw.best_ms * 100.0
+                    );
+                    if out.complete
+                        && (out.best_ms.to_bits() != sw.best_ms.to_bits()
+                            || out.best_order != sw.best_order)
+                    {
+                        bail!(
+                            "complete DAG search drifted from the constrained sweep: \
+                             ({}, {:?}) vs ({}, {:?})",
+                            out.best_ms,
+                            out.best_order,
+                            sw.best_ms,
+                            sw.best_order
+                        );
+                    }
+                }
+                _ => eprintln!(
+                    "note: --compare-sweep skipped (too many topological orders to enumerate)"
+                ),
+            }
+        } else if n > 11 {
             eprintln!("note: --compare-sweep skipped (n = {n} > 11 is past the sweep wall)");
         } else {
             eprintln!("sweeping all orders for comparison…");
-            let stats =
-                kreorder::perm::sweep_stats_with(&gpu, &kernels, make_backend.as_ref(), 4096);
+            let stats = kreorder::perm::sweep_stats_with(
+                &gpu,
+                &workload.kernels,
+                make_backend.as_ref(),
+                4096,
+            );
             println!("sweep      : best {:.4} ms, worst {:.4} ms", stats.best_ms, stats.worst_ms);
             println!(
                 "percentile : {:.2}% of all {} orders (histogram resolution)",
@@ -692,11 +789,23 @@ fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
     };
 
     let window = parse_window_policy(window_spec).map_err(anyhow::Error::from)?;
-    let reorderer = if strategy.eq_ignore_ascii_case("fifo") {
+    let mut reorderer = if strategy.eq_ignore_ascii_case("fifo") {
         OnlineReorderer::fifo()
     } else {
         OnlineReorderer::search(strategy, budget).map_err(anyhow::Error::from)?
     };
+    if let Some(spec) = opt(args, "--deps") {
+        // A within-window dependency template: inline (`0->2;1->2`) or a
+        // kreorder-deps CSV file. Positions index arrival order inside
+        // each window; edges must point forward so FIFO stays feasible.
+        let text = if std::path::Path::new(spec).is_file() {
+            std::fs::read_to_string(spec).with_context(|| format!("reading deps {spec}"))?
+        } else {
+            spec.to_string()
+        };
+        let edges = kreorder::workloads::parse_deps(&text).map_err(anyhow::Error::from)?;
+        reorderer = reorderer.with_deps(&edges).map_err(anyhow::Error::from)?;
+    }
     let make_backend = model_backend_factory(args)?;
     let opts = OnlineOpts {
         decision_ms_per_eval: decision_cost,
@@ -1192,6 +1301,43 @@ fn cmd_ablate(args: &[String]) -> Result<()> {
             cells.push(format!("{t:.2}"));
         }
         println!("| {} | {} |", e.name, cells.join(" | "));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// list
+// ---------------------------------------------------------------------------
+
+/// `list [--kind K]`: the unified registry listing — every string
+/// registry's cheat sheet from one place (`kreorder::registry`). The
+/// older scattered flags (`search --list`, `serve --list-online`,
+/// `fleet --list-routes`, `fault --list-faults`) stay as aliases.
+fn cmd_list(args: &[String]) -> Result<()> {
+    use kreorder::registry::{kinds, list};
+    if let Some(kind) = opt(args, "--kind") {
+        let table = list(kind).with_context(|| {
+            format!(
+                "unknown registry kind `{kind}` — valid kinds: {}",
+                kinds().join(", ")
+            )
+        })?;
+        println!("{kind}:");
+        print!("{table}");
+        return Ok(());
+    }
+    for &kind in kinds() {
+        println!("{kind}:");
+        print!("{}", list(kind).expect("every registered kind lists"));
+        println!();
+    }
+    println!("scenario families (--scenario FAMILY:N):");
+    for sc in kreorder::workloads::all_scenarios() {
+        println!("  {:<14} {}", sc.id, sc.description);
+    }
+    println!("\ndependency (DAG) scenario families (--scenario FAMILY:N):");
+    for sc in kreorder::workloads::all_dag_scenarios() {
+        println!("  {:<14} {}", sc.id, sc.description);
     }
     Ok(())
 }

@@ -20,7 +20,10 @@
 //!   covers `n!`), any registered anytime [`crate::search::SearchStrategy`]
 //!   beyond, always under a per-decision [`crate::search::SearchBudget`]
 //!   so scheduling overhead is bounded — and never worse than the FIFO
-//!   arrival order (a final guarded comparison);
+//!   arrival order (a final guarded comparison). A within-window
+//!   dependency template ([`OnlineReorderer::with_deps`]) constrains
+//!   every decision to topological orders; template edges point forward
+//!   in arrival order, so FIFO stays feasible and the guard unchanged;
 //! * [`simulate_online`] — the deterministic virtual-clock event loop
 //!   (no wall sleeping; bit-identical per-kernel timestamps per seed);
 //! * [`report`](self::report) — per-kernel queue-wait / service /
@@ -88,8 +91,9 @@ pub use window::{
 
 use crate::exec::ExecutionBackend;
 use crate::gpu::{GpuSpec, KernelProfile};
-use crate::perm::sweep_with;
+use crate::perm::{sweep_dag_with, sweep_with};
 use crate::search::{exact_tree_evals, improves, parse_strategy, SearchBudget};
+use crate::workloads::{DepGraph, Workload, MAX_DAG_KERNELS};
 use std::fmt;
 
 /// Largest window the [`OnlineReorderer`] will solve exhaustively even
@@ -127,6 +131,14 @@ pub struct ReorderDecision {
 #[derive(Debug, Clone)]
 pub struct OnlineReorderer {
     mode: ReorderMode,
+    /// Within-window dependency template: edge `(pred, succ)` constrains
+    /// every window to launch batch position `pred` before `succ`.
+    /// Validated `pred < succ` at construction, so the FIFO arrival
+    /// order (the identity permutation) is a topological order of every
+    /// window the template induces — the FIFO fallback and the FIFO
+    /// guard below stay feasible unchanged. Edges whose `succ` does not
+    /// fit a given window are ignored for that window.
+    deps: Vec<(usize, usize)>,
 }
 
 #[derive(Debug, Clone)]
@@ -156,6 +168,7 @@ impl OnlineReorderer {
     pub fn fifo() -> Self {
         OnlineReorderer {
             mode: ReorderMode::Fifo,
+            deps: Vec::new(),
         }
     }
 
@@ -183,17 +196,83 @@ impl OnlineReorderer {
                 strategy: parsed.name(),
                 budget_evals,
             },
+            deps: Vec::new(),
         })
     }
 
-    /// Display spelling (`"fifo"` or `"search:<strategy>:<budget>"`).
+    /// Attach a within-window dependency template: every decided window
+    /// must launch batch position `pred` before `succ` for each edge
+    /// `(pred, succ)`. Edges must satisfy `pred < succ` — dependencies
+    /// that point *backwards* in arrival order would make the FIFO
+    /// fallback infeasible (a window cannot launch a successor that
+    /// arrived before its predecessor and still serve arrival order),
+    /// so they are rejected here rather than silently dropped. An empty
+    /// template leaves every decision bit-identical to the undecorated
+    /// reorderer.
+    pub fn with_deps(mut self, edges: &[(usize, usize)]) -> Result<Self, ReordererParseError> {
+        for &(pred, succ) in edges {
+            if pred >= succ {
+                return Err(ReordererParseError {
+                    input: format!("{pred}->{succ}"),
+                    reason: format!(
+                        "window dependency edges must point forward in arrival order \
+                         (pred < succ); `{pred}->{succ}` would make the FIFO arrival \
+                         order infeasible"
+                    ),
+                });
+            }
+            if succ >= MAX_DAG_KERNELS {
+                return Err(ReordererParseError {
+                    input: format!("{pred}->{succ}"),
+                    reason: format!(
+                        "window dependency edge `{pred}->{succ}` references batch \
+                         position {succ}, but the dependency model caps windows at \
+                         {MAX_DAG_KERNELS} kernels (positions 0..{MAX_DAG_KERNELS})"
+                    ),
+                });
+            }
+        }
+        self.deps = edges.to_vec();
+        Ok(self)
+    }
+
+    /// Build the dependency graph the template induces on a window of
+    /// `n` kernels: edges whose successor fits the window, validated.
+    /// Returns `None` when no edge applies (the plain, dependency-free
+    /// decision path must run — bit-identical to an empty template).
+    fn window_graph(&self, n: usize) -> Option<(Vec<(usize, usize)>, DepGraph)> {
+        if self.deps.is_empty() || n < 2 {
+            return None;
+        }
+        let edges: Vec<(usize, usize)> = self
+            .deps
+            .iter()
+            .copied()
+            .filter(|&(_, succ)| succ < n)
+            .collect();
+        if edges.is_empty() {
+            return None;
+        }
+        let graph = DepGraph::build(n, &edges)
+            .expect("pred < succ edges within the window are always acyclic");
+        Some((edges, graph))
+    }
+
+    /// Display spelling (`"fifo"` or `"search:<strategy>:<budget>"`,
+    /// with a `+deps:<edges>` suffix when a dependency template is
+    /// attached).
     pub fn name(&self) -> String {
-        match &self.mode {
-            ReorderMode::Fifo => "fifo".into(),
+        let base = match &self.mode {
+            ReorderMode::Fifo => "fifo".to_string(),
             ReorderMode::Search {
                 strategy,
                 budget_evals,
             } => format!("search:{strategy}:{budget_evals}"),
+        };
+        if self.deps.is_empty() {
+            base
+        } else {
+            format!("{base}+deps:{}", self.deps.len())
         }
     }
 
@@ -225,6 +304,22 @@ impl OnlineReorderer {
                 evals: 0,
                 degraded: false,
             };
+        }
+
+        // A dependency template that applies to this window constrains
+        // the decision to topological orders. Empty / inapplicable
+        // templates fall through to the plain path below unchanged.
+        if let Some((edges, graph)) = self.window_graph(n) {
+            return self.decide_dag(
+                gpu,
+                kernels,
+                edges,
+                &graph,
+                strategy,
+                budget_evals,
+                make_backend,
+                fifo,
+            );
         }
 
         // Tiny windows, fully covered budget: exhaustive sweep. Exactly
@@ -281,6 +376,88 @@ impl OnlineReorderer {
         } else {
             // Budget spent, search did not beat arrival order: serve
             // FIFO and let the report count the degraded decision.
+            ReorderDecision {
+                order: fifo,
+                evals,
+                degraded: true,
+            }
+        }
+    }
+
+    /// Dependency-constrained twin of the tail of [`decide`](Self::decide):
+    /// exhaustive over the window's *linear extensions* when the budget
+    /// provably covers them, dependency-aware anytime search beyond. The
+    /// FIFO guard is unchanged — arrival order is a topological order of
+    /// every template-induced window (edges point forward by
+    /// construction), so falling back to it never violates a dependency.
+    #[allow(clippy::too_many_arguments)]
+    fn decide_dag(
+        &self,
+        gpu: &GpuSpec,
+        kernels: &[KernelProfile],
+        edges: Vec<(usize, usize)>,
+        graph: &DepGraph,
+        strategy: &str,
+        budget_evals: u64,
+        make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+        fifo: Vec<usize>,
+    ) -> ReorderDecision {
+        let n = kernels.len();
+
+        // Covered exact path: the extension count plays the role n!
+        // plays in the unconstrained branch — the sweep enumerates only
+        // topological orders, so that is the exact evaluation bill.
+        if n <= ONLINE_EXACT_MAX_N {
+            if let Some(ext) = graph.linear_extension_count() {
+                if ext <= budget_evals as u128 {
+                    let sw = sweep_dag_with(gpu, kernels, graph, make_backend);
+                    let evals = sw.n_perms as u64;
+                    let order = if sw.best_order.len() == n {
+                        sw.best_order
+                    } else {
+                        fifo
+                    };
+                    return ReorderDecision {
+                        order,
+                        evals,
+                        degraded: false,
+                    };
+                }
+            }
+        }
+
+        // Anytime dependency-aware search under the per-decision budget…
+        let parsed = parse_strategy(strategy).expect("validated at construction");
+        let workload = Workload::new(kernels.to_vec(), edges);
+        let out = parsed.search_dag(
+            gpu,
+            &workload,
+            make_backend,
+            &SearchBudget::evals(budget_evals),
+        );
+        let mut evals = out.evals;
+        if out.best_order.len() != n || !graph.is_topological(&out.best_order) {
+            // No full feasible order out of the strategy: degraded FIFO
+            // fallback (always feasible — see above).
+            return ReorderDecision {
+                order: fifo,
+                evals,
+                degraded: true,
+            };
+        }
+        // …with the same FIFO guard as the unconstrained path.
+        let mut backend = make_backend();
+        let mut prepared = backend.prepare(gpu, kernels);
+        let t_cand = prepared.execute_order(&out.best_order);
+        let t_fifo = prepared.execute_order(&fifo);
+        evals += 2;
+        if improves(t_cand, &out.best_order, t_fifo, &fifo) {
+            ReorderDecision {
+                order: out.best_order,
+                evals,
+                degraded: false,
+            }
+        } else {
             ReorderDecision {
                 order: fifo,
                 evals,
@@ -369,6 +546,87 @@ mod tests {
     fn name_spells_the_config() {
         let r = OnlineReorderer::search("sa:7", 512).unwrap();
         assert_eq!(r.name(), "search:anneal:7:512");
+    }
+
+    #[test]
+    fn deps_template_rejects_backward_and_oversized_edges() {
+        let err = OnlineReorderer::search("local:0", 100)
+            .unwrap()
+            .with_deps(&[(3, 1)])
+            .unwrap_err();
+        assert!(err.to_string().contains("3->1"), "{err}");
+        assert!(err.to_string().contains("FIFO"), "{err}");
+        let err = OnlineReorderer::fifo().with_deps(&[(0, 64)]).unwrap_err();
+        assert!(err.to_string().contains("0->64"), "{err}");
+        assert!(err.to_string().contains("64"), "{err}");
+    }
+
+    #[test]
+    fn empty_deps_template_is_bit_identical() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("mixed").unwrap().workload(&gpu, 7, 3);
+        let plain = OnlineReorderer::search("anneal:5", 300).unwrap();
+        let templated = plain.clone().with_deps(&[]).unwrap();
+        let a = plain.decide(&gpu, &ks, sim().as_ref());
+        let b = templated.decide(&gpu, &ks, sim().as_ref());
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.degraded, b.degraded);
+        assert_eq!(plain.name(), templated.name());
+    }
+
+    #[test]
+    fn template_edges_outside_the_window_are_ignored() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("uniform").unwrap().workload(&gpu, 4, 2);
+        let plain = OnlineReorderer::search("local:1", 256).unwrap();
+        let templated = plain.clone().with_deps(&[(4, 9)]).unwrap();
+        let a = plain.decide(&gpu, &ks, sim().as_ref());
+        let b = templated.decide(&gpu, &ks, sim().as_ref());
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn deps_template_exact_path_matches_constrained_sweep() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("skewed").unwrap().workload(&gpu, 5, 9);
+        let edges = [(0, 2), (1, 2), (2, 4)];
+        let r = OnlineReorderer::search("local:0", 256)
+            .unwrap()
+            .with_deps(&edges)
+            .unwrap();
+        let d = r.decide(&gpu, &ks, sim().as_ref());
+        let graph = crate::workloads::DepGraph::build(5, &edges).unwrap();
+        let sw = crate::perm::sweep_dag_with(&gpu, &ks, &graph, sim().as_ref());
+        assert_eq!(d.evals, sw.n_perms as u64);
+        assert_eq!(d.order, sw.best_order);
+        assert!(graph.is_topological(&d.order));
+        assert!(!d.degraded);
+        assert!(d.evals < 120, "constrained sweep must visit fewer than 5! orders");
+    }
+
+    #[test]
+    fn deps_template_anytime_is_topological_deterministic_and_guarded() {
+        let gpu = GpuSpec::gtx580();
+        let ks = scenario_by_id("mixed").unwrap().workload(&gpu, 9, 6);
+        let edges = [(0, 3), (1, 3), (3, 7), (2, 8)];
+        let graph = crate::workloads::DepGraph::build(9, &edges).unwrap();
+        let r = OnlineReorderer::search("anneal:4", 200)
+            .unwrap()
+            .with_deps(&edges)
+            .unwrap();
+        let a = r.decide(&gpu, &ks, sim().as_ref());
+        let b = r.decide(&gpu, &ks, sim().as_ref());
+        assert_eq!(a.order, b.order, "DAG decisions must be deterministic");
+        assert_eq!(a.evals, b.evals);
+        assert!(graph.is_topological(&a.order));
+        let fifo: Vec<usize> = (0..9).collect();
+        assert!(
+            makespan(&gpu, &ks, &a.order) <= makespan(&gpu, &ks, &fifo) + 1e-9,
+            "guarded decision lost to FIFO"
+        );
+        assert_eq!(r.name(), "search:anneal:4:200+deps:4");
     }
 
     #[test]

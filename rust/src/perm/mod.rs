@@ -42,6 +42,21 @@
 //! bit-identical ties, so only one canonical order per orbit is
 //! evaluated and folded in with its orbit's multiplicity — `n!/∏ m_c!`
 //! evaluations for the same reported distribution.
+//!
+//! # Dependency-constrained sweeps
+//!
+//! Workloads with precedence edges ([`crate::workloads::Workload`])
+//! admit only **topological orders** of their
+//! [`crate::workloads::DepGraph`]. [`sweep_dag_with`] /
+//! [`sweep_stats_dag_with`] enumerate exactly that constrained space:
+//! the same lexicographic prefix tree, but a node expands kernel `k`
+//! only when [`crate::workloads::DepGraph::is_free`] says every
+//! predecessor is already placed — an infeasible prefix prunes its
+//! entire subtree for free. Results are bit-identical to filtering the
+//! naive full sweep down to topological orders (pinned in tests),
+//! `n_perms` equals the graph's linear-extension count, and a graph
+//! with no edges delegates to the unconstrained hot path so
+//! independent workloads are bit-identical to the pre-DAG sweep.
 
 mod heap;
 
@@ -50,6 +65,7 @@ pub use heap::for_each_permutation;
 use crate::exec::{ExecutionBackend, PreparedWorkload, SimulatorBackend};
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::util::{default_threads, parallel_map};
+use crate::workloads::DepGraph;
 use std::sync::OnceLock;
 
 /// Distribution of simulated makespans across all launch-order
@@ -234,6 +250,12 @@ pub fn sweep_with_mode(
         p
     });
 
+    merge_partials(partials)
+}
+
+/// Fold per-worker [`Partial`] accumulators into one [`SweepResult`],
+/// applying the lexicographic tie-break across workers.
+fn merge_partials(partials: Vec<Partial>) -> SweepResult {
     let mut result = SweepResult::empty();
     for p in partials {
         result.n_perms += p.times.len();
@@ -724,6 +746,251 @@ fn sym_checkpointed_dfs(
                 order.push(k);
                 prepared.checkpoint_push(k);
                 sym_checkpointed_dfs(prepared, used, order, n, class_of, rec);
+                prepared.checkpoint_pop();
+                order.pop();
+                used[k] = false;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dependency-constrained sweeps (DAG workloads)
+// ---------------------------------------------------------------------------
+
+/// Exhaustively evaluate every **topological order** of `kernels` under
+/// `graph` on the fluid simulator. See [`sweep_dag_with`].
+pub fn sweep_dag(gpu: &GpuSpec, kernels: &[KernelProfile], graph: &DepGraph) -> SweepResult {
+    sweep_dag_with(gpu, kernels, graph, &|| Box::new(SimulatorBackend::new()))
+}
+
+/// [`sweep_with`] restricted to the topological orders of `graph`: the
+/// same prepared + checkpointed lexicographic prefix tree, but a node
+/// expands kernel `k` only when every predecessor is already placed
+/// ([`DepGraph::is_free`]), so infeasible prefixes prune their whole
+/// subtree. `n_perms` equals [`DepGraph::linear_extension_count`];
+/// best/worst use the same lexicographic tie-break as the plain sweep,
+/// so the result is bit-identical to filtering the naive full sweep
+/// down to topological orders (pinned in tests). A graph with no edges
+/// delegates to [`sweep_with`] unchanged.
+pub fn sweep_dag_with(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    graph: &DepGraph,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+) -> SweepResult {
+    let n = kernels.len();
+    assert!(n >= 1, "empty workload");
+    assert_eq!(graph.n(), n, "dependency graph sized for a different workload");
+    if !graph.has_deps() {
+        // No edges: the constrained space is all n! orders — take the
+        // unconstrained hot path, bit-identical to the pre-DAG sweep.
+        return sweep_with(gpu, kernels, make_backend);
+    }
+
+    let prefixes = dag_position_prefixes(n, graph);
+    let partials: Vec<Partial> = parallel_map(prefixes.len(), default_threads(), |pi| {
+        let mut backend = make_backend();
+        let mut p = Partial::new();
+        dag_enumerate_task(
+            gpu,
+            kernels,
+            backend.as_mut(),
+            &prefixes[pi],
+            graph,
+            &mut |t, order| p.record(t, order),
+        );
+        p
+    });
+
+    merge_partials(partials)
+}
+
+/// [`sweep_stats_with`] restricted to the topological orders of `graph`
+/// — the constant-memory spelling of [`sweep_dag_with`], with exact
+/// best/worst and a histogram for percentile ranks. The histogram
+/// reference order is [`DepGraph::first_topological_order`] (exactly
+/// the identity when no deps exist, so the edge-free delegation to
+/// [`sweep_stats_with`] uses the same reference).
+pub fn sweep_stats_dag_with(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    graph: &DepGraph,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    n_bins: usize,
+) -> SweepStats {
+    let n = kernels.len();
+    assert!(n >= 1, "empty workload");
+    assert_eq!(graph.n(), n, "dependency graph sized for a different workload");
+    if !graph.has_deps() {
+        return sweep_stats_with(gpu, kernels, make_backend, n_bins);
+    }
+
+    // Range reference: one evaluation of the lexicographically smallest
+    // topological order (the DAG analogue of the identity order).
+    let reference_order = graph.first_topological_order();
+    let mut b0 = make_backend();
+    let reference = b0.prepare(gpu, kernels).execute_order(&reference_order);
+    let (lo, hi) = if reference.is_finite() && reference > 0.0 {
+        (reference / 4.0, reference * 4.0)
+    } else {
+        (0.0, 1.0)
+    };
+
+    let prefixes = dag_position_prefixes(n, graph);
+    let partials: Vec<SweepStats> = parallel_map(prefixes.len(), default_threads(), |pi| {
+        let mut backend = make_backend();
+        let mut stats = SweepStats::new(lo, hi, n_bins);
+        dag_enumerate_task(
+            gpu,
+            kernels,
+            backend.as_mut(),
+            &prefixes[pi],
+            graph,
+            &mut |t, order| stats.record(t, order),
+        );
+        stats
+    });
+
+    let mut result = SweepStats::new(lo, hi, n_bins);
+    for p in &partials {
+        result.merge(p);
+    }
+    result
+}
+
+/// [`position_prefixes`] filtered to dependency-feasible prefixes —
+/// the parallelization units of the constrained sweeps. The first two
+/// positions of any topological order form such a prefix, so at least
+/// one survives for every validated DAG.
+fn dag_position_prefixes(n: usize, graph: &DepGraph) -> Vec<Vec<usize>> {
+    let mut prefixes = position_prefixes(n);
+    prefixes.retain(|p| {
+        let mut used = 0u64;
+        p.iter().all(|&k| {
+            let free = graph.is_free(k, used);
+            used |= 1 << k;
+            free
+        })
+    });
+    prefixes
+}
+
+/// Evaluate every topological order starting with `prefix` (itself
+/// feasible), feeding `(makespan, order)` pairs to `rec` — the
+/// dependency-constrained sibling of [`enumerate_task`]. Uses the
+/// checkpointed prefix tree when the backend supports it, filtered
+/// flat enumeration otherwise.
+fn dag_enumerate_task(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    backend: &mut dyn ExecutionBackend,
+    prefix: &[usize],
+    graph: &DepGraph,
+    rec: &mut dyn FnMut(f64, &[usize]),
+) {
+    let n = kernels.len();
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    order.extend_from_slice(prefix);
+
+    let mut prepared = backend.prepare(gpu, kernels);
+    if prepared.supports_checkpoints() {
+        for &k in prefix {
+            prepared.checkpoint_push(k);
+        }
+        let mut used = vec![false; n];
+        let mut used_mask = 0u64;
+        for &k in prefix {
+            used[k] = true;
+            used_mask |= 1 << k;
+        }
+        dag_checkpointed_dfs(prepared.as_mut(), &mut used, used_mask, &mut order, n, graph, rec);
+        for _ in prefix {
+            prepared.checkpoint_pop();
+        }
+    } else {
+        let mut rest: Vec<usize> = (0..n).filter(|i| !prefix.contains(i)).collect();
+        if rest.is_empty() {
+            let t = prepared.execute_order(&order);
+            rec(t, &order);
+            return;
+        }
+        let plen = prefix.len();
+        for_each_permutation(&mut rest, &mut |suffix| {
+            order.truncate(plen);
+            order.extend_from_slice(suffix);
+            if graph.is_topological(&order) {
+                let t = prepared.execute_order(&order);
+                rec(t, &order);
+            }
+        });
+    }
+}
+
+/// [`checkpointed_dfs`] restricted to topological orders: each node
+/// expands only dependency-free kernels. The last two positions are
+/// completed from the parent checkpoint as in the unconstrained DFS;
+/// there, only the first of the pair needs a feasibility check — the
+/// lone kernel left after it has every possible predecessor placed.
+fn dag_checkpointed_dfs(
+    prepared: &mut dyn PreparedWorkload,
+    used: &mut [bool],
+    used_mask: u64,
+    order: &mut Vec<usize>,
+    n: usize,
+    graph: &DepGraph,
+    rec: &mut dyn FnMut(f64, &[usize]),
+) {
+    match n - order.len() {
+        0 => {
+            let t = prepared.execute_suffix(&[]);
+            rec(t, order);
+        }
+        1 => {
+            // The lone remaining kernel is always free: everything that
+            // could precede it is already placed.
+            let k = used.iter().position(|u| !u).expect("one kernel left");
+            order.push(k);
+            let t = prepared.execute_suffix(&order[n - 1..]);
+            rec(t, order);
+            order.pop();
+        }
+        2 => {
+            let a = used.iter().position(|u| !u).expect("two kernels left");
+            let b = used[a + 1..]
+                .iter()
+                .position(|u| !u)
+                .map(|i| a + 1 + i)
+                .expect("two kernels left");
+            for (x, y) in [(a, b), (b, a)] {
+                if !graph.is_free(x, used_mask) {
+                    continue; // y -> x edge: only (y, x) is feasible
+                }
+                order.push(x);
+                order.push(y);
+                let t = prepared.execute_suffix(&order[n - 2..]);
+                rec(t, order);
+                order.pop();
+                order.pop();
+            }
+        }
+        _ => {
+            for k in 0..n {
+                if used[k] || !graph.is_free(k, used_mask) {
+                    continue;
+                }
+                used[k] = true;
+                order.push(k);
+                prepared.checkpoint_push(k);
+                dag_checkpointed_dfs(
+                    prepared,
+                    used,
+                    used_mask | (1 << k),
+                    order,
+                    n,
+                    graph,
+                    rec,
+                );
                 prepared.checkpoint_pop();
                 order.pop();
                 used[k] = false;
@@ -1240,6 +1507,127 @@ mod tests {
         let plain = sweep_stats(&gpu, &distinct);
         assert_eq!(sym.n_perms, plain.n_perms);
         assert_eq!(sym.best_ms.to_bits(), plain.best_ms.to_bits());
+    }
+
+    #[test]
+    fn dag_sweep_matches_filtered_naive_golden() {
+        // The constrained prefix tree must be bit-identical — best/worst
+        // makespans, orders (lexicographic tie-break) and the full
+        // distribution — to filtering a naive flat sweep down to
+        // topological orders.
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..5)
+            .map(|i| kernel(16, 4 + (i % 3) * 10, ((i % 2) as u32) * 16384, 1.0 + 2.0 * i as f64, 400.0))
+            .collect();
+        let graph = DepGraph::build(5, &[(0, 2), (1, 2), (3, 4)]).unwrap();
+
+        let mut golden = Partial::new();
+        let mut n_topo = 0usize;
+        let mut backend = SimulatorBackend::new();
+        let mut prepared = backend.prepare(&gpu, &ks);
+        let mut perm: Vec<usize> = (0..5).collect();
+        for_each_permutation(&mut perm, &mut |order| {
+            if graph.is_topological(order) {
+                golden.record(prepared.execute_order(order), order);
+                n_topo += 1;
+            }
+        });
+        drop(prepared);
+
+        let r = sweep_dag(&gpu, &ks, &graph);
+        assert_eq!(r.n_perms, n_topo);
+        assert_eq!(n_topo as u128, graph.linear_extension_count().unwrap());
+        assert_eq!(r.best_ms.to_bits(), golden.best_ms.to_bits());
+        assert_eq!(r.best_order, golden.best_order);
+        assert_eq!(r.worst_ms.to_bits(), golden.worst_ms.to_bits());
+        assert_eq!(r.worst_order, golden.worst_order);
+        // Same multiset of makespans (enumeration order may differ).
+        let mut a = r.times.clone();
+        let mut b = golden.times.clone();
+        a.sort_unstable_by(f64::total_cmp);
+        b.sort_unstable_by(f64::total_cmp);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn dag_sweep_empty_graph_bit_identical_to_plain_sweep() {
+        // Acceptance criterion: independent workloads (no deps) behave
+        // exactly as before the DAG layer existed.
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..4)
+            .map(|i| kernel(16, 4 + i * 8, 0, 1.0 + 3.0 * i as f64, 400.0))
+            .collect();
+        let graph = DepGraph::empty(4);
+        let dag = sweep_dag(&gpu, &ks, &graph);
+        let plain = sweep(&gpu, &ks);
+        assert_eq!(dag.n_perms, plain.n_perms);
+        assert_eq!(dag.best_ms.to_bits(), plain.best_ms.to_bits());
+        assert_eq!(dag.best_order, plain.best_order);
+        assert_eq!(dag.worst_ms.to_bits(), plain.worst_ms.to_bits());
+        assert_eq!(dag.worst_order, plain.worst_order);
+        for (x, y) in dag.times.iter().zip(&plain.times) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let s_dag = sweep_stats_dag_with(
+            &gpu,
+            &ks,
+            &graph,
+            &|| Box::new(SimulatorBackend::new()),
+            4096,
+        );
+        let s_plain = sweep_stats(&gpu, &ks);
+        assert_eq!(s_dag.n_perms, s_plain.n_perms);
+        assert_eq!(s_dag.best_ms.to_bits(), s_plain.best_ms.to_bits());
+        assert_eq!(s_dag.best_order, s_plain.best_order);
+    }
+
+    #[test]
+    fn dag_sweep_chain_and_two_chain_counts() {
+        // Chain: exactly one feasible order — the chain itself. Two
+        // independent 2-chains: C(4,2) = 6 interleavings.
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..4)
+            .map(|i| kernel(16, 4 + i * 8, 0, 2.0 + i as f64, 500.0))
+            .collect();
+        let chain = DepGraph::build(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        let r = sweep_dag(&gpu, &ks, &chain);
+        assert_eq!(r.n_perms, 1);
+        assert_eq!(r.best_order, vec![0, 1, 2, 3]);
+        assert_eq!(r.worst_order, vec![0, 1, 2, 3]);
+        assert_eq!(r.best_ms.to_bits(), r.worst_ms.to_bits());
+
+        let two = DepGraph::build(4, &[(0, 1), (2, 3)]).unwrap();
+        let r = sweep_dag(&gpu, &ks, &two);
+        assert_eq!(r.n_perms, 6);
+        assert!(two.is_topological(&r.best_order));
+        assert!(two.is_topological(&r.worst_order));
+    }
+
+    #[test]
+    fn dag_sweep_stats_matches_dag_sweep_on_both_backends() {
+        let gpu = GpuSpec::gtx580();
+        let ks: Vec<_> = (0..5)
+            .map(|i| kernel(16, 4 + (i % 3) * 10, ((i % 2) as u32) * 16384, 1.0 + 2.0 * i as f64, 400.0))
+            .collect();
+        let graph = DepGraph::build(5, &[(0, 2), (1, 2), (3, 4)]).unwrap();
+        let factories: [&(dyn Fn() -> Box<dyn ExecutionBackend> + Sync); 2] = [
+            &|| Box::new(SimulatorBackend::new()),
+            &|| Box::new(AnalyticBackend::new()),
+        ];
+        for factory in factories {
+            let full = sweep_dag_with(&gpu, &ks, &graph, factory);
+            let stats = sweep_stats_dag_with(&gpu, &ks, &graph, factory, 4096);
+            assert_eq!(stats.n_perms, full.n_perms);
+            assert_eq!(stats.best_ms.to_bits(), full.best_ms.to_bits());
+            assert_eq!(stats.best_order, full.best_order);
+            assert_eq!(stats.worst_ms.to_bits(), full.worst_ms.to_bits());
+            assert_eq!(stats.worst_order, full.worst_order);
+            let mean_full: f64 = full.times.iter().sum::<f64>() / full.times.len() as f64;
+            assert!((stats.mean_ms() - mean_full).abs() < 1e-9 * mean_full);
+        }
     }
 
     #[test]

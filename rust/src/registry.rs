@@ -1,0 +1,199 @@
+//! **The unified string-registry front door** — one module that knows
+//! every name-to-object spelling the crate accepts.
+//!
+//! Six subsystems grew six string registries, each with its own parse
+//! function, error type and help table: launch policies
+//! ([`crate::sched::registry`]), search strategies
+//! ([`crate::search::parse_strategy`]), route policies
+//! ([`crate::fleet::parse_route_policy`]), window policies
+//! ([`crate::online::parse_window_policy`]), arrival processes
+//! ([`crate::online::ArrivalSpec::parse`]) and fault plans
+//! ([`crate::fault::FaultPlan::parse`]). They all still exist and are
+//! still the single sources of truth for their spellings — this module
+//! adds the *uniform* view on top:
+//!
+//! * [`parse_policy`] / [`parse_strategy`] / [`parse_route`] /
+//!   [`parse_window`] / [`parse_arrivals`] / [`parse_fault_plan`] —
+//!   thin wrappers that convert every subsystem's error into one
+//!   [`ParseError`] carrying the registry kind, the echoed input, the
+//!   subsystem's own diagnostic, **and** that kind's cheat sheet of
+//!   valid spellings — so a CLI boundary gets a helpful failure without
+//!   knowing which subsystem it was parsing for.
+//! * [`kinds`] / [`list`] — enumerate the registries and render any
+//!   kind's help table; `kreorder list [--kind <k>]` is a direct
+//!   dispatch to these two functions (replacing the scattered
+//!   `--list` / `--list-routes` / `--list-online` / `--list-faults`
+//!   flags, which remain as aliases).
+//!
+//! Code that wants the typed error (to match on its fields) should keep
+//! calling the subsystem parser directly; these wrappers are for
+//! boundaries where every failure is reported the same way.
+
+use crate::fault::FaultPlan;
+use crate::fleet::{parse_route_policy, RoutePolicy};
+use crate::online::{parse_window_policy, ArrivalSpec, WindowPolicy};
+use crate::sched::LaunchPolicy;
+use crate::search::SearchStrategy;
+use std::fmt;
+
+/// Every registry kind, in the order `kreorder list` prints them. The
+/// strings are the `--kind` spellings.
+pub const KINDS: &[&str] = &[
+    "policy",
+    "strategy",
+    "route",
+    "window",
+    "arrivals",
+    "fault-plan",
+];
+
+/// The registry kinds, for iteration ([`KINDS`] behind a function so
+/// callers do not depend on the constant's type).
+pub fn kinds() -> &'static [&'static str] {
+    KINDS
+}
+
+/// Render one kind's cheat sheet of valid spellings (one per line,
+/// indented — the same tables the subsystems print). `None` for an
+/// unknown kind; [`KINDS`] lists the valid ones.
+pub fn list(kind: &str) -> Option<String> {
+    match kind {
+        "policy" => Some(crate::sched::registry::help_table()),
+        "strategy" => Some(crate::search::strategy_help_table()),
+        "route" => Some(crate::fleet::route_policy_help_table()),
+        "window" => Some(crate::online::window_policy_help_table()),
+        "arrivals" => Some(crate::online::arrival_help_table()),
+        "fault-plan" => Some(crate::fault::fault_plan_help_table()),
+        _ => None,
+    }
+}
+
+/// Uniform parse failure for every registry kind: which registry, the
+/// echoed input, the subsystem's own diagnostic, and the kind's valid
+/// spellings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// Which registry rejected the spelling (a [`KINDS`] entry).
+    pub kind: &'static str,
+    /// The rejected input, verbatim.
+    pub input: String,
+    /// The subsystem parser's own diagnostic (already echoes the input).
+    pub detail: String,
+}
+
+impl ParseError {
+    fn new(kind: &'static str, input: &str, detail: impl fmt::Display) -> ParseError {
+        ParseError {
+            kind,
+            input: input.to_string(),
+            detail: detail.to_string(),
+        }
+    }
+
+    /// The cheat sheet of valid spellings for this error's kind.
+    pub fn cheatsheet(&self) -> String {
+        list(self.kind).unwrap_or_default()
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invalid {} spelling `{}`: {}\nvalid {} spellings:\n{}",
+            self.kind,
+            self.input,
+            self.detail,
+            self.kind,
+            self.cheatsheet()
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// [`crate::sched::registry::parse`] with the uniform error.
+pub fn parse_policy(s: &str) -> Result<Box<dyn LaunchPolicy>, ParseError> {
+    crate::sched::registry::parse(s).map_err(|e| ParseError::new("policy", s, e))
+}
+
+/// [`crate::search::parse_strategy`] with the uniform error.
+pub fn parse_strategy(s: &str) -> Result<Box<dyn SearchStrategy>, ParseError> {
+    crate::search::parse_strategy(s).map_err(|e| ParseError::new("strategy", s, e))
+}
+
+/// [`crate::fleet::parse_route_policy`] with the uniform error.
+pub fn parse_route(s: &str) -> Result<Box<dyn RoutePolicy>, ParseError> {
+    parse_route_policy(s).map_err(|e| ParseError::new("route", s, e))
+}
+
+/// [`crate::online::parse_window_policy`] with the uniform error.
+pub fn parse_window(s: &str) -> Result<Box<dyn WindowPolicy>, ParseError> {
+    parse_window_policy(s).map_err(|e| ParseError::new("window", s, e))
+}
+
+/// [`crate::online::ArrivalSpec::parse`] with the uniform error.
+pub fn parse_arrivals(s: &str) -> Result<ArrivalSpec, ParseError> {
+    ArrivalSpec::parse(s).map_err(|e| ParseError::new("arrivals", s, e))
+}
+
+/// [`crate::fault::FaultPlan::parse`] with the uniform error.
+pub fn parse_fault_plan(s: &str) -> Result<FaultPlan, ParseError> {
+    FaultPlan::parse(s).map_err(|e| ParseError::new("fault-plan", s, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_lists_a_nonempty_cheatsheet() {
+        for &k in kinds() {
+            let table = list(k).unwrap_or_else(|| panic!("kind {k} missing from list()"));
+            assert!(!table.trim().is_empty(), "{k}");
+        }
+        assert!(list("nope").is_none());
+    }
+
+    #[test]
+    fn wrappers_accept_what_the_subsystems_accept() {
+        assert!(parse_policy("algorithm1").is_ok());
+        assert!(parse_strategy("anneal:7").is_ok());
+        assert!(parse_route("jsq").is_ok());
+        assert!(parse_window("linger:8:50").is_ok());
+        assert!(parse_arrivals("poisson:80:1").is_ok());
+        assert!(parse_fault_plan("crash:0@50:recover@200").is_ok());
+    }
+
+    #[test]
+    fn uniform_errors_echo_input_kind_detail_and_cheatsheet() {
+        let cases: [(&str, ParseError); 6] = [
+            ("policy", parse_policy("blorp").unwrap_err()),
+            ("strategy", parse_strategy("blorp").unwrap_err()),
+            ("route", parse_route("blorp").unwrap_err()),
+            ("window", parse_window("blorp").unwrap_err()),
+            ("arrivals", parse_arrivals("blorp:1:2").unwrap_err()),
+            ("fault-plan", parse_fault_plan("blorp:1@2").unwrap_err()),
+        ];
+        for (kind, err) in cases {
+            assert_eq!(err.kind, kind);
+            let msg = err.to_string();
+            assert!(msg.contains("blorp"), "{kind}: {msg}");
+            assert!(msg.contains(&format!("invalid {kind} spelling")), "{msg}");
+            assert!(msg.contains(&format!("valid {kind} spellings")), "{msg}");
+            assert!(!err.cheatsheet().trim().is_empty(), "{kind}");
+            // The cheat sheet is multi-line (a real table, not a stub).
+            assert!(err.cheatsheet().lines().count() >= 3, "{kind}");
+        }
+    }
+
+    #[test]
+    fn cheatsheets_name_representative_spellings() {
+        assert!(list("policy").unwrap().contains("algorithm1"));
+        assert!(list("strategy").unwrap().contains("anneal"));
+        assert!(list("route").unwrap().contains("jsq"));
+        assert!(list("window").unwrap().contains("linger"));
+        assert!(list("arrivals").unwrap().contains("poisson"));
+        assert!(list("fault-plan").unwrap().contains("crash"));
+    }
+}

@@ -34,6 +34,7 @@ use crate::exec::PrefixCursor;
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::sched::reorder;
 use crate::util::SplitMix64;
+use crate::workloads::Workload;
 use std::time::Instant;
 
 /// Shift the element at position `i` to position `j` in place — the
@@ -213,6 +214,136 @@ impl SearchStrategy for SimulatedAnnealing {
             &mut evals,
             &mut |e, t, o| inc.offer(e, t, o),
         );
+
+        SearchOutcome {
+            strategy: self.name(),
+            best_ms: inc.best_ms,
+            best_order: inc.best_order,
+            evals,
+            complete: false,
+            trajectory: inc.trajectory,
+            pruned_subtrees: 0,
+            wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+
+    /// Dependency-aware annealing. Small constrained spaces (n ≤ 8 with
+    /// the budget covering every linear extension, or unlimited) are
+    /// answered **exactly** via the constrained sweep — bit-identical
+    /// to [`crate::perm::sweep_dag_with`], which is what the
+    /// `benches/search_quality.rs` DAG gate holds this strategy to.
+    /// Beyond that the annealing loop runs with **feasibility-rejecting
+    /// moves**: the usual seeded swap/shift proposals, but a candidate
+    /// that is not a topological order is rejected *without simulation*.
+    /// Every proposal (evaluated or rejected) charges one budget unit —
+    /// a chain-like DAG rejects almost everything, and charging
+    /// proposals keeps the loop finite and the trajectory a pure
+    /// function of `(seed, budget)`. Warm start and acceptance are
+    /// otherwise unchanged; the warm start is Algorithm 1's order
+    /// repaired to feasibility, and [`PrefixCursor`] anchoring still
+    /// applies (a rejected move touches no cursor state).
+    fn search_dag(
+        &self,
+        gpu: &GpuSpec,
+        workload: &Workload,
+        make_backend: &BackendFactory,
+        budget: &SearchBudget,
+    ) -> SearchOutcome {
+        let graph = super::dag_graph_or_panic(workload);
+        if !graph.has_deps() {
+            return self.search(gpu, &workload.kernels, make_backend, budget);
+        }
+        if super::dag_exact_covered(&graph, budget) {
+            return super::exact_dag_outcome(
+                self.name(),
+                gpu,
+                &workload.kernels,
+                &graph,
+                make_backend,
+            );
+        }
+        let kernels = &workload.kernels;
+        let t_start = Instant::now();
+        let n = kernels.len();
+        let max_evals = budget.max_evals.unwrap_or(DEFAULT_ANYTIME_EVALS).max(1);
+        let deadline = budget.max_wall.map(|d| t_start + d);
+
+        let mut backend = make_backend();
+        let prepared = backend.prepare(gpu, kernels);
+        let mut cursor = if self.incremental {
+            PrefixCursor::new(prepared)
+        } else {
+            PrefixCursor::new_full(prepared)
+        };
+
+        let mut cur = graph.repair(&reorder(gpu, kernels).order);
+        let t_warm = cursor.eval(&cur);
+        let mut evals = 1u64;
+        let mut inc = Incumbent::new();
+        inc.offer(evals, t_warm, &cur);
+
+        if t_warm.is_nan() || n < 2 {
+            return SearchOutcome {
+                strategy: self.name(),
+                best_ms: t_warm,
+                best_order: cur,
+                evals,
+                complete: false,
+                trajectory: inc.trajectory,
+                pruned_subtrees: 0,
+                wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            };
+        }
+
+        let mut cand = cur.clone();
+        let mut rng = SplitMix64::new(self.seed);
+        let mut t_cur = t_warm;
+        let temp_hi = (0.10 * t_warm).max(f64::MIN_POSITIVE);
+        let temp_lo = (1e-4 * t_warm).max(f64::MIN_POSITIVE);
+
+        while evals < max_evals {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    break;
+                }
+            }
+            cand.copy_from_slice(&cur);
+            let anchor;
+            if rng.below(2) == 0 {
+                let i = rng.below(n);
+                let mut j = rng.below(n - 1);
+                if j >= i {
+                    j += 1;
+                }
+                cand.swap(i, j);
+                anchor = i.min(j);
+            } else {
+                let i = rng.below(n);
+                let j = rng.below(n);
+                apply_shift(&mut cand, i, j);
+                anchor = i.min(j);
+            }
+            evals += 1;
+            if !graph.is_topological(&cand) {
+                continue; // rejected unsimulated; the proposal is charged
+            }
+            let t = cursor.eval_anchored(&cand, anchor);
+            inc.offer(evals, t, &cand);
+
+            let progress = evals as f64 / max_evals as f64;
+            let temp = temp_hi * (temp_lo / temp_hi).powf(progress);
+            let accept = if t.is_nan() {
+                false
+            } else if t <= t_cur {
+                true
+            } else {
+                rng.next_f64() < ((t_cur - t) / temp).exp()
+            };
+            if accept {
+                std::mem::swap(&mut cur, &mut cand);
+                t_cur = t;
+            }
+        }
 
         SearchOutcome {
             strategy: self.name(),

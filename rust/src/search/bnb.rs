@@ -49,6 +49,19 @@
 //! The warm start is Algorithm 1's order: the paper shows it lands above
 //! the 90th percentile, so the very first bound checks already prune
 //! against a near-optimal incumbent.
+//!
+//! # Dependency-aware search
+//!
+//! [`SearchStrategy::search_dag`] restricts the same tree to
+//! topological orders of the workload's precedence DAG: infeasible
+//! kernels are skipped per node ([`crate::workloads::DepGraph::is_free`]
+//! — an entire subtree gone before any bound is computed), the symmetry
+//! collapse merges only kernels with identical dependency *signatures*
+//! (pred/succ masks) on top of model identity, and the warm start is
+//! repaired to feasibility. `suffix_lower_bound` stays admissible
+//! unchanged: a bound over all completions lower-bounds the topological
+//! subset. Unbudgeted results are bit-identical to
+//! [`crate::perm::sweep_dag_with`].
 
 use super::{improves, BackendFactory, IncumbentSample, SearchBudget, SearchOutcome, SearchStrategy};
 use crate::exec::PreparedWorkload;
@@ -56,6 +69,7 @@ use crate::gpu::{equivalence_classes, GpuSpec, KernelProfile};
 use crate::perm::{canonical_prefix, class_blocked, position_prefixes};
 use crate::sched::reorder;
 use crate::util::{default_threads, parallel_map};
+use crate::workloads::{DepGraph, Workload};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
@@ -308,6 +322,293 @@ impl SearchStrategy for BranchAndBound {
             trajectory,
             pruned_subtrees: pruned,
             wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+
+    /// Dependency-aware exact search: the same bounded DFS, but a node
+    /// expands kernel `k` only when every predecessor is already placed
+    /// ([`DepGraph::is_free`]) — infeasible prefixes prune whole
+    /// subtrees before any bound is computed — and the symmetry
+    /// collapse merges only kernels with identical **dependency
+    /// signatures** on top of model identity (an edge between two
+    /// kernels forces different signatures, so merged kernels are never
+    /// precedence-related and within-class reorderings of a topological
+    /// order stay topological). The warm start is Algorithm 1's order
+    /// repaired into a topological order ([`DepGraph::repair`] — the
+    /// identity repair when no deps exist). Runs as one sequential task
+    /// (the constrained tree is already small), so even budgeted runs
+    /// are bit-reproducible; unbudgeted results are bit-identical to
+    /// [`crate::perm::sweep_dag_with`], lexicographic tie-break
+    /// included.
+    fn search_dag(
+        &self,
+        gpu: &GpuSpec,
+        workload: &Workload,
+        make_backend: &BackendFactory,
+        budget: &SearchBudget,
+    ) -> SearchOutcome {
+        let graph = super::dag_graph_or_panic(workload);
+        if !graph.has_deps() {
+            return self.search(gpu, &workload.kernels, make_backend, budget);
+        }
+        let kernels = &workload.kernels;
+        let t_start = Instant::now();
+        let n = kernels.len();
+        assert!(n >= 1, "empty workload");
+
+        // Warm start: Algorithm 1's order, repaired to feasibility.
+        let seed_order = graph.repair(&reorder(gpu, kernels).order);
+        let seed_ms = {
+            let mut b = make_backend();
+            b.prepare(gpu, kernels).execute_order(&seed_order)
+        };
+        let mut trajectory = vec![IncumbentSample {
+            eval: 1,
+            best_ms: seed_ms,
+        }];
+        if seed_ms.is_nan() {
+            return SearchOutcome {
+                strategy: self.name(),
+                best_ms: f64::NAN,
+                best_order: seed_order,
+                evals: 1,
+                complete: false,
+                trajectory,
+                pruned_subtrees: 0,
+                wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            };
+        }
+
+        let incumbent = SharedIncumbent::new(seed_ms);
+        let limits = Limits {
+            evals: AtomicU64::new(1), // the warm start spent one
+            max_evals: budget.max_evals.unwrap_or(u64::MAX),
+            deadline: budget.max_wall.map(|d| t_start + d),
+        };
+        let class_of = if self.symmetry {
+            Some(dag_refined_classes(kernels, &graph))
+        } else {
+            None
+        };
+        let classes = class_of.as_deref();
+
+        let mut backend = make_backend();
+        let mut p = Partial::new();
+        dag_bnb_task(
+            gpu,
+            kernels,
+            backend.as_mut(),
+            &graph,
+            classes,
+            &incumbent,
+            &limits,
+            &mut p,
+        );
+
+        let mut best_ms = seed_ms;
+        let mut best_order = seed_order;
+        let evals = 1 + p.evals;
+        if improves(p.best_ms, &p.best_order, best_ms, &best_order) {
+            best_ms = p.best_ms;
+            best_order = p.best_order;
+        }
+        if best_ms < trajectory[0].best_ms {
+            trajectory.push(IncumbentSample { eval: evals, best_ms });
+        }
+        SearchOutcome {
+            strategy: self.name(),
+            best_ms,
+            best_order,
+            evals,
+            complete: !p.stopped,
+            trajectory,
+            pruned_subtrees: p.pruned,
+            wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}
+
+/// Model equivalence classes refined by dependency signature:
+/// `class_of[k]` is the smallest index that is model-identical to `k`
+/// *and* shares its (pred, succ) masks. Signature-equal kernels are
+/// never precedence-related (an edge would put each in the other's
+/// mask), so exchanging them inside a topological order yields another
+/// topological order with a bit-identical makespan — the collapse
+/// stays exact under dependencies.
+fn dag_refined_classes(kernels: &[KernelProfile], graph: &DepGraph) -> Vec<usize> {
+    let model = equivalence_classes(kernels);
+    let n = kernels.len();
+    let mut out = vec![0usize; n];
+    for k in 0..n {
+        out[k] = (0..k)
+            .find(|&j| model[j] == model[k] && graph.signature(j) == graph.signature(k))
+            .unwrap_or(k);
+    }
+    out
+}
+
+/// Solve the whole dependency-constrained tree as one sequential task.
+#[allow(clippy::too_many_arguments)]
+fn dag_bnb_task(
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    backend: &mut dyn crate::exec::ExecutionBackend,
+    graph: &DepGraph,
+    classes: Option<&[usize]>,
+    incumbent: &SharedIncumbent,
+    limits: &Limits,
+    out: &mut Partial,
+) {
+    let n = kernels.len();
+    let mut prepared = backend.prepare(gpu, kernels);
+
+    if !prepared.supports_checkpoints() {
+        // No checkpoints ⇒ no bounds: flat enumeration filtered down to
+        // canonical topological orders.
+        let mut rest: Vec<usize> = (0..n).collect();
+        crate::perm::for_each_permutation(&mut rest, &mut |perm| {
+            if out.stopped || !graph.is_topological(perm) {
+                return;
+            }
+            if classes.is_some_and(|cls| !canonical_prefix(perm, cls)) {
+                return;
+            }
+            if !limits.claim() {
+                out.stopped = true;
+                return;
+            }
+            let t = prepared.execute_order(perm);
+            out.record(t, perm, incumbent);
+        });
+        return;
+    }
+
+    let mut used = vec![false; n];
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    let mut remaining_buf: Vec<usize> = Vec::with_capacity(n);
+    dag_dfs(
+        prepared.as_mut(),
+        &mut used,
+        0u64,
+        &mut order,
+        &mut remaining_buf,
+        n,
+        graph,
+        classes,
+        incumbent,
+        limits,
+        out,
+    );
+}
+
+/// [`dfs`] restricted to topological orders: each node expands only
+/// dependency-free kernels (their subtrees are pruned before any bound
+/// is computed) and applies the signature-refined symmetry skip.
+#[allow(clippy::too_many_arguments)]
+fn dag_dfs(
+    prepared: &mut dyn PreparedWorkload,
+    used: &mut [bool],
+    used_mask: u64,
+    order: &mut Vec<usize>,
+    remaining_buf: &mut Vec<usize>,
+    n: usize,
+    graph: &DepGraph,
+    classes: Option<&[usize]>,
+    incumbent: &SharedIncumbent,
+    limits: &Limits,
+    out: &mut Partial,
+) {
+    if out.stopped {
+        return;
+    }
+    match n - order.len() {
+        0 => {
+            if !limits.claim() {
+                out.stopped = true;
+                return;
+            }
+            let t = prepared.execute_suffix(&[]);
+            out.record(t, order, incumbent);
+        }
+        1 => {
+            // The lone remaining kernel is always free.
+            if !limits.claim() {
+                out.stopped = true;
+                return;
+            }
+            let k = used.iter().position(|u| !u).expect("one kernel left");
+            order.push(k);
+            let t = prepared.execute_suffix(&order[n - 1..]);
+            out.record(t, order, incumbent);
+            order.pop();
+        }
+        2 => {
+            let a = used.iter().position(|u| !u).expect("two kernels left");
+            let b = used[a + 1..]
+                .iter()
+                .position(|u| !u)
+                .map(|i| a + 1 + i)
+                .expect("two kernels left");
+            let twins = classes.is_some_and(|cls| cls[a] == cls[b]);
+            for (x, y) in [(a, b), (b, a)] {
+                if twins && x == b {
+                    continue; // out-of-order twin of (a, b)
+                }
+                // Only the first of the pair needs a feasibility check:
+                // the kernel placed last has every predecessor placed.
+                if !graph.is_free(x, used_mask) {
+                    continue;
+                }
+                if !limits.claim() {
+                    out.stopped = true;
+                    return;
+                }
+                order.push(x);
+                order.push(y);
+                let t = prepared.execute_suffix(&order[n - 2..]);
+                out.record(t, order, incumbent);
+                order.pop();
+                order.pop();
+            }
+        }
+        _ => {
+            remaining_buf.clear();
+            remaining_buf.extend((0..n).filter(|&k| !used[k]));
+            let lb = prepared.suffix_lower_bound(remaining_buf);
+            if lb > incumbent.get() * (1.0 + PRUNE_MARGIN) {
+                out.pruned += 1;
+                return;
+            }
+            for k in 0..n {
+                if used[k]
+                    || !graph.is_free(k, used_mask)
+                    || symmetry_skipped(k, used, classes)
+                {
+                    continue;
+                }
+                used[k] = true;
+                order.push(k);
+                prepared.checkpoint_push(k);
+                dag_dfs(
+                    prepared,
+                    used,
+                    used_mask | (1 << k),
+                    order,
+                    remaining_buf,
+                    n,
+                    graph,
+                    classes,
+                    incumbent,
+                    limits,
+                    out,
+                );
+                prepared.checkpoint_pop();
+                order.pop();
+                used[k] = false;
+                if out.stopped {
+                    return;
+                }
+            }
         }
     }
 }

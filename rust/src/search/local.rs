@@ -34,6 +34,7 @@ use crate::exec::PrefixCursor;
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::sched::reorder;
 use crate::util::SplitMix64;
+use crate::workloads::{DepGraph, Workload};
 use std::time::Instant;
 
 /// Anytime insertion/swap local-search strategy (registry spelling
@@ -142,6 +143,83 @@ impl LocalSearch {
         }
         (t_cur, false)
     }
+
+    /// [`LocalSearch::descend_on`] with feasibility-rejecting moves: a
+    /// candidate that is not a topological order of `graph` is rejected
+    /// without simulation, but the proposal still charges one budget
+    /// unit (keeps the descent finite on chain-like DAGs and the
+    /// trajectory a pure function of `(seed, budget)`).
+    #[allow(clippy::too_many_arguments)]
+    fn dag_descend_on(
+        &self,
+        cursor: &mut PrefixCursor<'_>,
+        graph: &DepGraph,
+        cur: &mut Vec<usize>,
+        cand: &mut Vec<usize>,
+        t_cur: f64,
+        max_evals: u64,
+        deadline: Option<Instant>,
+        evals: &mut u64,
+        offer: &mut dyn FnMut(u64, f64, &[usize]),
+    ) -> (f64, bool) {
+        let n = cur.len();
+        debug_assert!(n >= 2);
+        let out_of_time = || deadline.is_some_and(|d| Instant::now() >= d);
+        let mut t_cur = t_cur;
+        let mut improved = true;
+        while improved {
+            improved = false;
+            'swaps: for i in 0..n - 1 {
+                for j in i + 1..n {
+                    if *evals >= max_evals || out_of_time() {
+                        return (t_cur, true);
+                    }
+                    cand.copy_from_slice(cur);
+                    cand.swap(i, j);
+                    *evals += 1;
+                    if !graph.is_topological(cand) {
+                        continue;
+                    }
+                    let t = cursor.eval_anchored(cand, i);
+                    offer(*evals, t, cand);
+                    if t < t_cur {
+                        cur.copy_from_slice(cand);
+                        t_cur = t;
+                        improved = true;
+                        break 'swaps;
+                    }
+                }
+            }
+            if improved {
+                continue;
+            }
+            'shifts: for i in 0..n {
+                for j in 0..n {
+                    if i == j {
+                        continue;
+                    }
+                    if *evals >= max_evals || out_of_time() {
+                        return (t_cur, true);
+                    }
+                    cand.copy_from_slice(cur);
+                    apply_shift(cand, i, j);
+                    *evals += 1;
+                    if !graph.is_topological(cand) {
+                        continue;
+                    }
+                    let t = cursor.eval_anchored(cand, i.min(j));
+                    offer(*evals, t, cand);
+                    if t < t_cur {
+                        cur.copy_from_slice(cand);
+                        t_cur = t;
+                        improved = true;
+                        break 'shifts;
+                    }
+                }
+            }
+        }
+        (t_cur, false)
+    }
 }
 
 impl SearchStrategy for LocalSearch {
@@ -210,6 +288,110 @@ impl SearchStrategy for LocalSearch {
             }
             // Local optimum: seeded restart.
             rng.shuffle(&mut cur);
+            t_cur = cursor.eval(&cur);
+            evals += 1;
+            inc.offer(evals, t_cur, &cur);
+        }
+
+        SearchOutcome {
+            strategy: self.name(),
+            best_ms: inc.best_ms,
+            best_order: inc.best_order,
+            evals,
+            complete: false,
+            trajectory: inc.trajectory,
+            pruned_subtrees: 0,
+            wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+
+    /// Dependency-aware local search. Small constrained spaces (n ≤ 8
+    /// with the budget covering every linear extension, or unlimited)
+    /// are answered **exactly** via the constrained sweep —
+    /// bit-identical to [`crate::perm::sweep_dag_with`], which is what
+    /// the `benches/search_quality.rs` DAG gate holds this strategy to.
+    /// Beyond that: first-improvement descent with
+    /// feasibility-rejecting moves ([`LocalSearch::dag_descend_on`]),
+    /// warm-started from Algorithm 1's order repaired to feasibility;
+    /// seeded restarts shuffle and then repair
+    /// ([`DepGraph::repair`]), so every restart is a topological order
+    /// and the whole run stays deterministic per `(seed, budget)`.
+    fn search_dag(
+        &self,
+        gpu: &GpuSpec,
+        workload: &Workload,
+        make_backend: &BackendFactory,
+        budget: &SearchBudget,
+    ) -> SearchOutcome {
+        let graph = super::dag_graph_or_panic(workload);
+        if !graph.has_deps() {
+            return self.search(gpu, &workload.kernels, make_backend, budget);
+        }
+        if super::dag_exact_covered(&graph, budget) {
+            return super::exact_dag_outcome(
+                self.name(),
+                gpu,
+                &workload.kernels,
+                &graph,
+                make_backend,
+            );
+        }
+        let kernels = &workload.kernels;
+        let t_start = Instant::now();
+        let n = kernels.len();
+        let max_evals = budget.max_evals.unwrap_or(DEFAULT_ANYTIME_EVALS).max(1);
+        let deadline = budget.max_wall.map(|d| t_start + d);
+        let out_of_time = || deadline.is_some_and(|d| Instant::now() >= d);
+
+        let mut backend = make_backend();
+        let prepared = backend.prepare(gpu, kernels);
+        let mut cursor = if self.incremental {
+            PrefixCursor::new(prepared)
+        } else {
+            PrefixCursor::new_full(prepared)
+        };
+        let mut rng = SplitMix64::new(self.seed);
+
+        let mut cur = graph.repair(&reorder(gpu, kernels).order);
+        let mut t_cur = cursor.eval(&cur);
+        let mut evals = 1u64;
+        let mut inc = Incumbent::new();
+        inc.offer(evals, t_cur, &cur);
+
+        if t_cur.is_nan() || n < 2 {
+            return SearchOutcome {
+                strategy: self.name(),
+                best_ms: t_cur,
+                best_order: cur,
+                evals,
+                complete: false,
+                trajectory: inc.trajectory,
+                pruned_subtrees: 0,
+                wall_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            };
+        }
+
+        let mut cand = cur.clone();
+        while evals < max_evals && !out_of_time() {
+            let (t, stopped) = self.dag_descend_on(
+                &mut cursor,
+                &graph,
+                &mut cur,
+                &mut cand,
+                t_cur,
+                max_evals,
+                deadline,
+                &mut evals,
+                &mut |e, t, o| inc.offer(e, t, o),
+            );
+            t_cur = t;
+            if stopped || evals >= max_evals {
+                break;
+            }
+            // Local optimum: seeded restart, repaired to feasibility.
+            rng.shuffle(&mut cur);
+            let repaired = graph.repair(&cur);
+            cur.copy_from_slice(&repaired);
             t_cur = cursor.eval(&cur);
             evals += 1;
             inc.offer(evals, t_cur, &cur);

@@ -64,6 +64,7 @@ pub use local::LocalSearch;
 use crate::exec::{ExecutionBackend, SimulatorBackend};
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::sched::LaunchPolicy;
+use crate::workloads::{DepGraph, Workload};
 use std::time::Duration;
 
 /// Backend factory shared by search strategies (one backend per worker,
@@ -144,8 +145,10 @@ pub struct SearchOutcome {
     /// Order evaluations actually spent.
     pub evals: u64,
     /// `true` iff the result is *provably optimal* (branch-and-bound ran
-    /// to completion without exhausting its budget). Anytime strategies
-    /// always report `false`.
+    /// to completion without exhausting its budget, or a DAG search
+    /// exhaustively enumerated the constrained space). Anytime
+    /// strategies report `false` except on that small-`n` DAG exact
+    /// path.
     pub complete: bool,
     /// Incumbent improvements in evaluation order. Deterministic for the
     /// seeded anytime strategies under an evaluation budget; for the
@@ -177,6 +180,93 @@ pub trait SearchStrategy: Send + Sync {
         make_backend: &BackendFactory,
         budget: &SearchBudget,
     ) -> SearchOutcome;
+
+    /// Search a **dependency-aware** workload: only topological orders
+    /// of `workload`'s precedence DAG are evaluated or returned. A
+    /// workload without edges must behave bit-identically to
+    /// [`SearchStrategy::search`] (the default and every built-in
+    /// strategy delegate). For constrained workloads the default runs
+    /// the exhaustive constrained sweep
+    /// ([`crate::perm::sweep_dag_with`]) — exact, but priced at the
+    /// graph's full linear-extension count; the built-in strategies
+    /// override it with their own dependency-aware search.
+    ///
+    /// # Panics
+    /// On a malformed dependency list — validate with
+    /// [`crate::workloads::validate_dag_workload`] first.
+    fn search_dag(
+        &self,
+        gpu: &GpuSpec,
+        workload: &Workload,
+        make_backend: &BackendFactory,
+        budget: &SearchBudget,
+    ) -> SearchOutcome {
+        let graph = dag_graph_or_panic(workload);
+        if !graph.has_deps() {
+            return self.search(gpu, &workload.kernels, make_backend, budget);
+        }
+        let _ = budget; // exhaustive: exactness over budget adherence
+        exact_dag_outcome(self.name(), gpu, &workload.kernels, &graph, make_backend)
+    }
+}
+
+/// Compile a workload's dependency list, panicking with the actionable
+/// [`crate::workloads::DagError`] message on malformed input — the
+/// shared entry guard of every [`SearchStrategy::search_dag`].
+pub(crate) fn dag_graph_or_panic(workload: &Workload) -> DepGraph {
+    workload
+        .dep_graph()
+        .unwrap_or_else(|e| panic!("invalid dependency workload: {e}"))
+}
+
+/// Largest `n` for which an anytime strategy's [`SearchStrategy::search_dag`]
+/// may run the exact constrained sweep instead of sampling moves. Mirrors
+/// [`crate::online::OnlineReorderer`]'s exact-vs-anytime cut (8! = 40 320
+/// evaluations worst case, and DAG constraints only shrink that).
+pub(crate) const DAG_EXACT_MAX_N: usize = 8;
+
+/// Should an anytime strategy answer a DAG search exactly? Yes when the
+/// workload is small (`n` ≤ [`DAG_EXACT_MAX_N`]) and the evaluation
+/// budget provably covers the whole constrained space (an unlimited
+/// budget always does). This is what pins the anytime strategies
+/// bit-identical to the filtered exhaustive sweep at small `n`
+/// (`benches/search_quality.rs` gates it on every DAG family).
+pub(crate) fn dag_exact_covered(graph: &DepGraph, budget: &SearchBudget) -> bool {
+    if graph.n() > DAG_EXACT_MAX_N {
+        return false;
+    }
+    match (budget.max_evals, graph.linear_extension_count()) {
+        (None, Some(_)) => true,
+        (Some(cap), Some(ext)) => ext <= cap as u128,
+        _ => false,
+    }
+}
+
+/// Run the exhaustive constrained sweep and wrap it as a provably
+/// complete [`SearchOutcome`] — best makespan *and* order bit-identical
+/// to [`crate::perm::sweep_dag_with`] (same lexicographic tie-break).
+pub(crate) fn exact_dag_outcome(
+    strategy: String,
+    gpu: &GpuSpec,
+    kernels: &[KernelProfile],
+    graph: &DepGraph,
+    make_backend: &BackendFactory,
+) -> SearchOutcome {
+    let t0 = std::time::Instant::now();
+    let r = crate::perm::sweep_dag_with(gpu, kernels, graph, make_backend);
+    SearchOutcome {
+        strategy,
+        best_ms: r.best_ms,
+        best_order: r.best_order.clone(),
+        evals: r.n_perms as u64,
+        complete: true,
+        trajectory: vec![IncumbentSample {
+            eval: r.n_perms as u64,
+            best_ms: r.best_ms,
+        }],
+        pruned_subtrees: 0,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
 }
 
 /// The sweep's exact incumbent predicate — a strictly better makespan,
@@ -577,6 +667,80 @@ mod tests {
         let small = scenario_by_id("uniform").unwrap().workload(&gpu, 5, 1);
         let p = SearchPolicy::with("local:0", 50);
         assert_eq!(p.order(&gpu, &small), p.order(&gpu, &small));
+    }
+
+    #[test]
+    fn search_dag_empty_deps_matches_plain_search() {
+        // Acceptance criterion: a workload without edges must behave
+        // bit-identically to the pre-DAG search on every strategy.
+        let gpu = crate::gpu::GpuSpec::gtx580();
+        let ks = scenario_by_id("uniform").unwrap().workload(&gpu, 6, 3);
+        let w = Workload::independent(ks.clone());
+        let factory: &BackendFactory = &|| Box::new(SimulatorBackend::new());
+        let budget = SearchBudget::evals(500);
+        for s in all_strategies() {
+            let a = s.search_dag(&gpu, &w, factory, &budget);
+            let b = s.search(&gpu, &ks, factory, &budget);
+            assert_eq!(a.best_ms.to_bits(), b.best_ms.to_bits(), "{}", s.name());
+            assert_eq!(a.best_order, b.best_order, "{}", s.name());
+            assert_eq!(a.evals, b.evals, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn search_dag_exact_matches_constrained_sweep_on_all_strategies() {
+        // Unbudgeted DAG search — exact bnb and the anytime strategies'
+        // small-n exact path alike — must be bit-identical to the
+        // filtered exhaustive sweep, lexicographic tie-break included.
+        let gpu = crate::gpu::GpuSpec::gtx580();
+        let w = crate::workloads::dag_scenario_by_id("layered")
+            .unwrap()
+            .workload(&gpu, 6, 5);
+        let graph = w.dep_graph().unwrap();
+        assert!(graph.has_deps());
+        let factory: &BackendFactory = &|| Box::new(SimulatorBackend::new());
+        let sweep = crate::perm::sweep_dag_with(&gpu, &w.kernels, &graph, factory);
+        for s in all_strategies() {
+            let out = s.search_dag(&gpu, &w, factory, &SearchBudget::unlimited());
+            assert_eq!(out.best_ms.to_bits(), sweep.best_ms.to_bits(), "{}", s.name());
+            assert_eq!(out.best_order, sweep.best_order, "{}", s.name());
+            assert!(out.complete, "{}", s.name());
+            assert!(graph.is_topological(&out.best_order), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn budgeted_dag_search_is_deterministic_and_feasible() {
+        // Past the exact cut (n > 8), anytime DAG search runs the
+        // feasibility-rejecting move loops: two runs must agree exactly,
+        // every returned order must be topological, and the proposal
+        // budget must be respected. Budgeted DAG bnb is sequential, so
+        // it is deterministic too.
+        let gpu = crate::gpu::GpuSpec::gtx580();
+        let w = crate::workloads::dag_scenario_by_id("layered")
+            .unwrap()
+            .workload(&gpu, 10, 2);
+        let graph = w.dep_graph().unwrap();
+        let factory: &BackendFactory = &|| Box::new(SimulatorBackend::new());
+        for spell in ["anneal:7", "local:3"] {
+            let s = parse_strategy(spell).unwrap();
+            let budget = SearchBudget::evals(400);
+            let a = s.search_dag(&gpu, &w, factory, &budget);
+            let b = s.search_dag(&gpu, &w, factory, &budget);
+            assert_eq!(a.best_ms.to_bits(), b.best_ms.to_bits(), "{spell}");
+            assert_eq!(a.best_order, b.best_order, "{spell}");
+            assert_eq!(a.evals, b.evals, "{spell}");
+            assert!(a.evals <= 400, "{spell}: {}", a.evals);
+            assert!(graph.is_topological(&a.best_order), "{spell}");
+        }
+        let s = parse_strategy("bnb").unwrap();
+        let budget = SearchBudget::evals(50);
+        let a = s.search_dag(&gpu, &w, factory, &budget);
+        let b = s.search_dag(&gpu, &w, factory, &budget);
+        assert_eq!(a.best_ms.to_bits(), b.best_ms.to_bits());
+        assert_eq!(a.best_order, b.best_order);
+        assert!(!a.complete);
+        assert!(graph.is_topological(&a.best_order));
     }
 
     #[test]

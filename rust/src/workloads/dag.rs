@@ -1,0 +1,539 @@
+//! Dependency-aware workloads: kernels plus precedence edges.
+//!
+//! Everything before this module assumed independent kernels — any of the
+//! `n!` launch orders was admissible. Real workloads are kernel *graphs*
+//! (ACS, GOLDYLOC in PAPERS.md): a kernel may consume another's output,
+//! so only **topological orders** of the precedence DAG may be launched.
+//! [`Workload`] carries the kernels and the edge list; [`DepGraph`] is
+//! the validated, bitmask-compiled form every searcher consumes:
+//!
+//! * `pred_masks[k]` — the set of kernels that must finish before `k`
+//!   launches, as a `u64` bitmask (hence the 64-kernel ceiling, far above
+//!   the `n ≤ 12` sweep wall and any search workload to date).
+//! * [`DepGraph::is_free`] answers prefix feasibility in one AND: kernel
+//!   `k` may extend a prefix iff `pred_masks[k] & !used == 0`. Infeasible
+//!   prefixes prune their entire subtree of the lexicographic sweep tree
+//!   for free.
+//! * [`DepGraph::linear_extension_count`] prices the constrained space —
+//!   the DAG analogue of `n!` — via the standard subset DP, so benches
+//!   can report how much the deps shrink the search.
+//!
+//! Construction is builder-style ([`Workload::with_dep`] /
+//! [`Workload::with_chain`]), validation is explicit
+//! ([`Workload::dep_graph`] rejects out-of-range edges, self-loops and
+//! cycles with actionable errors), and the edge list round-trips through
+//! the `kreorder-deps` CSV format ([`deps_to_csv`] / [`parse_deps`], also
+//! the CLI's inline `0->2;1->2` spelling).
+
+use crate::gpu::{GpuSpec, KernelProfile};
+use crate::sim::{validate_workload, SimError};
+
+/// Hard ceiling on dependency-aware workload size: predecessor sets are
+/// `u64` bitmasks. Independent workloads (no deps) are not affected.
+pub const MAX_DAG_KERNELS: usize = 64;
+
+/// A batch of kernels plus optional precedence edges `(pred, succ)`:
+/// `pred` must finish before `succ` may launch. An empty `deps` list is
+/// the classic independent-kernel workload — every consumer treats it
+/// bit-identically to the pre-DAG code paths.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub kernels: Vec<KernelProfile>,
+    pub deps: Vec<(usize, usize)>,
+}
+
+impl Workload {
+    /// An independent-kernel workload (no precedence edges).
+    pub fn independent(kernels: Vec<KernelProfile>) -> Self {
+        Workload {
+            kernels,
+            deps: Vec::new(),
+        }
+    }
+
+    /// A workload with an explicit edge list (validated lazily by
+    /// [`Workload::dep_graph`]).
+    pub fn new(kernels: Vec<KernelProfile>, deps: Vec<(usize, usize)>) -> Self {
+        Workload { kernels, deps }
+    }
+
+    /// Builder: add one precedence edge `pred -> succ`.
+    pub fn with_dep(mut self, pred: usize, succ: usize) -> Self {
+        self.deps.push((pred, succ));
+        self
+    }
+
+    /// Builder: add a chain `ks[0] -> ks[1] -> …` of precedence edges.
+    pub fn with_chain(mut self, ks: &[usize]) -> Self {
+        for w in ks.windows(2) {
+            self.deps.push((w[0], w[1]));
+        }
+        self
+    }
+
+    /// Number of kernels.
+    pub fn n(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Whether any precedence edges are present.
+    pub fn has_deps(&self) -> bool {
+        !self.deps.is_empty()
+    }
+
+    /// Compile and validate the precedence edges into a [`DepGraph`].
+    /// Rejects out-of-range endpoints, self-loops, cycles, and workloads
+    /// past the 64-kernel bitmask ceiling.
+    pub fn dep_graph(&self) -> Result<DepGraph, DagError> {
+        DepGraph::build(self.kernels.len(), &self.deps)
+    }
+
+    /// The dependency edges in the `kreorder-deps` CSV format (round-trips
+    /// through [`parse_deps`]).
+    pub fn deps_to_csv(&self) -> String {
+        deps_to_csv(&self.deps)
+    }
+}
+
+/// Validate a dependency-aware workload end to end: every kernel must be
+/// simulable ([`crate::sim::validate_workload`]) and the edges must form
+/// a DAG over the kernel indices. Returns the compiled [`DepGraph`].
+pub fn validate_dag_workload(gpu: &GpuSpec, w: &Workload) -> Result<DepGraph, DagWorkloadError> {
+    validate_workload(gpu, &w.kernels).map_err(DagWorkloadError::Kernels)?;
+    w.dep_graph().map_err(DagWorkloadError::Deps)
+}
+
+/// Either half of [`validate_dag_workload`] can fail.
+#[derive(Debug, Clone)]
+pub enum DagWorkloadError {
+    Kernels(SimError),
+    Deps(DagError),
+}
+
+impl std::fmt::Display for DagWorkloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DagWorkloadError::Kernels(e) => write!(f, "{e}"),
+            DagWorkloadError::Deps(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for DagWorkloadError {}
+
+/// Validated, bitmask-compiled precedence constraints over `n` kernels.
+/// The searchers' single source of feasibility truth: a launch order is
+/// admissible iff it is a topological order of this graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DepGraph {
+    n: usize,
+    /// `pred_masks[k]`: bitmask of kernels that must precede `k`.
+    pred_masks: Vec<u64>,
+    /// `succ_masks[k]`: bitmask of kernels that `k` must precede.
+    succ_masks: Vec<u64>,
+}
+
+impl DepGraph {
+    /// The unconstrained graph over `n` kernels (every order feasible).
+    pub fn empty(n: usize) -> Self {
+        DepGraph {
+            n,
+            pred_masks: vec![0; n],
+            succ_masks: vec![0; n],
+        }
+    }
+
+    /// Compile `deps` over `n` kernels, rejecting malformed input with an
+    /// actionable error. Duplicate edges are tolerated (masks dedup).
+    pub fn build(n: usize, deps: &[(usize, usize)]) -> Result<Self, DagError> {
+        if !deps.is_empty() && n > MAX_DAG_KERNELS {
+            return Err(DagError::TooManyKernels { n });
+        }
+        let mut g = DepGraph::empty(n);
+        for &(pred, succ) in deps {
+            if pred >= n || succ >= n {
+                return Err(DagError::EdgeOutOfRange { pred, succ, n });
+            }
+            if pred == succ {
+                return Err(DagError::SelfLoop { kernel: pred });
+            }
+            g.pred_masks[succ] |= 1 << pred;
+            g.succ_masks[pred] |= 1 << succ;
+        }
+        // Kahn's algorithm: repeatedly place free kernels; anything left
+        // over participates in (or depends on) a cycle.
+        let mut used = 0u64;
+        let mut placed = 0usize;
+        loop {
+            let mut progressed = false;
+            for k in 0..n {
+                if used & (1 << k) == 0 && g.pred_masks[k] & !used == 0 {
+                    used |= 1 << k;
+                    placed += 1;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        if placed != n {
+            let stuck: Vec<usize> = (0..n).filter(|k| used & (1 << k) == 0).collect();
+            return Err(DagError::Cycle { stuck });
+        }
+        Ok(g)
+    }
+
+    /// Number of kernels the graph constrains.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Whether any edge exists (`false` ⇒ every order is feasible and
+    /// every consumer takes its pre-DAG fast path).
+    pub fn has_deps(&self) -> bool {
+        self.pred_masks.iter().any(|&m| m != 0)
+    }
+
+    /// Predecessor bitmask of kernel `k`.
+    pub fn pred_mask(&self, k: usize) -> u64 {
+        self.pred_masks[k]
+    }
+
+    /// Successor bitmask of kernel `k`.
+    pub fn succ_mask(&self, k: usize) -> u64 {
+        self.succ_masks[k]
+    }
+
+    /// The dependency signature of kernel `k` — two kernels are
+    /// interchangeable under the precedence constraints iff their
+    /// signatures match (and an edge between them forces a mismatch, so
+    /// signature-equal kernels are never related).
+    pub fn signature(&self, k: usize) -> (u64, u64) {
+        (self.pred_masks[k], self.succ_masks[k])
+    }
+
+    /// Prefix feasibility in one AND: may `k` extend a prefix whose
+    /// placed kernels are `used` (bitmask)?
+    #[inline]
+    pub fn is_free(&self, k: usize, used: u64) -> bool {
+        self.pred_masks[k] & !used == 0
+    }
+
+    /// Is `order` a topological order (a permutation of `0..n` where
+    /// every kernel follows all of its predecessors)?
+    pub fn is_topological(&self, order: &[usize]) -> bool {
+        if order.len() != self.n {
+            return false;
+        }
+        let mut used = 0u64;
+        for &k in order {
+            if k >= self.n || used & (1 << k) != 0 || !self.is_free(k, used) {
+                return false;
+            }
+            used |= 1 << k;
+        }
+        true
+    }
+
+    /// Greedy **stable topological repair** of a suggested order: place,
+    /// at each step, the earliest not-yet-placed kernel of `suggestion`
+    /// whose predecessors are all placed. For an empty graph this returns
+    /// `suggestion` verbatim; for `suggestion == 0..n` it returns the
+    /// lexicographically smallest topological order. Deterministic; the
+    /// DAG-aware searchers use it to make the Algorithm-1 warm start and
+    /// restart shuffles feasible without changing them when no deps exist.
+    pub fn repair(&self, suggestion: &[usize]) -> Vec<usize> {
+        debug_assert_eq!(suggestion.len(), self.n);
+        let mut used = 0u64;
+        let mut out = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let k = suggestion
+                .iter()
+                .copied()
+                .find(|&k| used & (1 << k) == 0 && self.is_free(k, used))
+                .expect("a validated DAG always has a free kernel");
+            used |= 1 << k;
+            out.push(k);
+        }
+        out
+    }
+
+    /// The lexicographically smallest topological order — the DAG
+    /// analogue of the identity order (and exactly the identity when no
+    /// deps exist). Reference order for histograms and FIFO baselines.
+    pub fn first_topological_order(&self) -> Vec<usize> {
+        let identity: Vec<usize> = (0..self.n).collect();
+        self.repair(&identity)
+    }
+
+    /// Number of topological orders (linear extensions) — the DAG
+    /// analogue of `n!` — by the standard subset DP. `None` past n = 20,
+    /// where the `2^n` table stops being reasonable (every exhaustive
+    /// consumer is long past its wall there anyway).
+    pub fn linear_extension_count(&self) -> Option<u128> {
+        let n = self.n;
+        if n > 20 {
+            return None;
+        }
+        if n == 0 {
+            return Some(1);
+        }
+        let mut dp = vec![0u128; 1usize << n];
+        dp[0] = 1;
+        for mask in 0..(1usize << n) {
+            if dp[mask] == 0 {
+                continue;
+            }
+            for k in 0..n {
+                let bit = 1u64 << k;
+                if mask as u64 & bit == 0 && self.is_free(k, mask as u64) {
+                    dp[mask | bit as usize] += dp[mask];
+                }
+            }
+        }
+        Some(dp[(1usize << n) - 1])
+    }
+}
+
+/// Malformed precedence edges, with enough context to fix them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DagError {
+    /// An edge endpoint is not a kernel index of this workload.
+    EdgeOutOfRange { pred: usize, succ: usize, n: usize },
+    /// An edge `k -> k`.
+    SelfLoop { kernel: usize },
+    /// The edges admit no topological order; `stuck` lists every kernel
+    /// that participates in (or depends on) a cycle.
+    Cycle { stuck: Vec<usize> },
+    /// More kernels than the u64 predecessor bitmasks can address.
+    TooManyKernels { n: usize },
+}
+
+impl std::fmt::Display for DagError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DagError::EdgeOutOfRange { pred, succ, n } => write!(
+                f,
+                "dependency edge `{pred}->{succ}` is out of range for a {n}-kernel workload — \
+                 kernel indices run 0..={}",
+                n.saturating_sub(1)
+            ),
+            DagError::SelfLoop { kernel } => write!(
+                f,
+                "dependency edge `{kernel}->{kernel}` is a self-loop — a kernel cannot precede \
+                 itself"
+            ),
+            DagError::Cycle { stuck } => write!(
+                f,
+                "dependency edges form a cycle through kernels {stuck:?} — precedence must be a \
+                 DAG (no topological order exists); remove one edge of the cycle"
+            ),
+            DagError::TooManyKernels { n } => write!(
+                f,
+                "{n} kernels exceed the {MAX_DAG_KERNELS}-kernel dependency ceiling (predecessor \
+                 sets are u64 bitmasks) — split the workload or drop the deps"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DagError {}
+
+/// A dependency spelling that did not parse; `Display` echoes the
+/// offending clause and lists the valid forms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DepsParseError {
+    pub input: String,
+    pub reason: String,
+}
+
+impl std::fmt::Display for DepsParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "invalid dependency clause `{}`: {} — valid clauses: `<pred>-><succ>` or \
+             `<pred>,<succ>` (kernel indices), joined with `;` or newlines; `#` comments and \
+             blank clauses are skipped",
+            self.input, self.reason
+        )
+    }
+}
+
+impl std::error::Error for DepsParseError {}
+
+/// Parse a dependency edge list. Accepts the CLI's inline spelling
+/// (`0->2;1->2`) and the `kreorder-deps` CSV format emitted by
+/// [`deps_to_csv`] (one `pred,succ` row per line, `#` comments); the two
+/// may be mixed. Range/cycle checking happens later, against a concrete
+/// workload, in [`DepGraph::build`].
+pub fn parse_deps(text: &str) -> Result<Vec<(usize, usize)>, DepsParseError> {
+    let mut out = Vec::new();
+    for raw in text.split(['\n', ';']) {
+        let clause = raw.trim();
+        if clause.is_empty() || clause.starts_with('#') || clause == "pred,succ" {
+            continue;
+        }
+        let (a, b) = clause
+            .split_once("->")
+            .or_else(|| clause.split_once(','))
+            .ok_or_else(|| DepsParseError {
+                input: clause.to_string(),
+                reason: "expected `<pred>-><succ>` or `<pred>,<succ>`".to_string(),
+            })?;
+        let parse_idx = |s: &str, side: &str| -> Result<usize, DepsParseError> {
+            s.trim().parse().map_err(|_| DepsParseError {
+                input: clause.to_string(),
+                reason: format!("{side} kernel index `{}` must be a non-negative integer", s.trim()),
+            })
+        };
+        out.push((parse_idx(a, "pred")?, parse_idx(b, "succ")?));
+    }
+    Ok(out)
+}
+
+/// The `kreorder-deps` CSV format: header, then one `pred,succ` row per
+/// edge. Round-trips through [`parse_deps`].
+pub fn deps_to_csv(deps: &[(usize, usize)]) -> String {
+    let mut s = String::from("# kreorder-deps v1\npred,succ\n");
+    for &(p, q) in deps {
+        s.push_str(&format!("{p},{q}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_masks() {
+        let w = Workload::independent(Vec::new())
+            .with_dep(0, 2)
+            .with_chain(&[1, 2, 3]);
+        assert_eq!(w.deps, vec![(0, 2), (1, 2), (2, 3)]);
+        let g = DepGraph::build(4, &w.deps).unwrap();
+        assert!(g.has_deps());
+        assert_eq!(g.pred_mask(2), 0b0011);
+        assert_eq!(g.succ_mask(2), 0b1000);
+        assert_eq!(g.signature(0), (0, 0b0100));
+    }
+
+    #[test]
+    fn build_rejects_malformed_edges() {
+        let e = DepGraph::build(3, &[(0, 3)]).unwrap_err();
+        assert!(matches!(e, DagError::EdgeOutOfRange { pred: 0, succ: 3, n: 3 }));
+        let msg = e.to_string();
+        assert!(msg.contains("`0->3`") && msg.contains("3-kernel"), "{msg}");
+
+        let e = DepGraph::build(3, &[(1, 1)]).unwrap_err();
+        assert!(matches!(e, DagError::SelfLoop { kernel: 1 }));
+        assert!(e.to_string().contains("`1->1`"), "{e}");
+
+        let e = DepGraph::build(3, &[(0, 1), (1, 2), (2, 0)]).unwrap_err();
+        match &e {
+            DagError::Cycle { stuck } => assert_eq!(stuck, &vec![0, 1, 2]),
+            other => panic!("expected cycle, got {other:?}"),
+        }
+        assert!(e.to_string().contains("cycle"), "{e}");
+
+        let e = DepGraph::build(65, &[(0, 64)]).unwrap_err();
+        assert!(matches!(e, DagError::TooManyKernels { n: 65 }));
+        // No deps: large n stays fine (independent workloads unaffected).
+        assert!(DepGraph::build(65, &[]).is_ok());
+    }
+
+    #[test]
+    fn cycle_report_excludes_unrelated_kernels() {
+        // 3 -> 4 is fine; 0/1 cycle, 2 depends on the cycle.
+        let e = DepGraph::build(5, &[(0, 1), (1, 0), (1, 2), (3, 4)]).unwrap_err();
+        match e {
+            DagError::Cycle { stuck } => assert_eq!(stuck, vec![0, 1, 2]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn feasibility_and_topological_checks() {
+        let g = DepGraph::build(3, &[(0, 1), (0, 2)]).unwrap();
+        assert!(g.is_free(0, 0));
+        assert!(!g.is_free(1, 0));
+        assert!(g.is_free(1, 0b001));
+        assert!(g.is_topological(&[0, 1, 2]));
+        assert!(g.is_topological(&[0, 2, 1]));
+        assert!(!g.is_topological(&[1, 0, 2]));
+        assert!(!g.is_topological(&[0, 1])); // wrong length
+        assert!(!g.is_topological(&[0, 1, 1])); // not a permutation
+    }
+
+    #[test]
+    fn repair_is_stable_and_identity_when_unconstrained() {
+        let g = DepGraph::empty(4);
+        assert_eq!(g.repair(&[2, 0, 3, 1]), vec![2, 0, 3, 1]);
+
+        let g = DepGraph::build(4, &[(3, 0)]).unwrap();
+        // 0 is blocked until 3 is placed; everything else keeps its slot.
+        assert_eq!(g.repair(&[0, 1, 3, 2]), vec![1, 3, 0, 2]);
+        assert_eq!(g.first_topological_order(), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn linear_extension_counts_on_hand_computed_dags() {
+        // Chain: exactly one order.
+        let chain = DepGraph::build(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]).unwrap();
+        assert_eq!(chain.linear_extension_count(), Some(1));
+        // Antichain: all n! orders.
+        let anti = DepGraph::empty(5);
+        assert_eq!(anti.linear_extension_count(), Some(120));
+        // Fan-out from 0: root first, then any order of the rest.
+        let fan = DepGraph::build(4, &[(0, 1), (0, 2), (0, 3)]).unwrap();
+        assert_eq!(fan.linear_extension_count(), Some(6));
+        // Two independent 2-chains: C(4,2) = 6 interleavings.
+        let two = DepGraph::build(4, &[(0, 1), (2, 3)]).unwrap();
+        assert_eq!(two.linear_extension_count(), Some(6));
+        // Past the DP wall: priced as unknown, not wrong.
+        assert_eq!(DepGraph::empty(21).linear_extension_count(), None);
+        assert_eq!(DepGraph::empty(0).linear_extension_count(), Some(1));
+    }
+
+    #[test]
+    fn deps_csv_round_trips() {
+        let deps = vec![(0, 2), (1, 2), (2, 3)];
+        let csv = deps_to_csv(&deps);
+        assert!(csv.starts_with("# kreorder-deps v1"));
+        assert_eq!(parse_deps(&csv).unwrap(), deps);
+        // Inline CLI spelling parses to the same edges.
+        assert_eq!(parse_deps("0->2; 1->2;2->3").unwrap(), deps);
+        // Mixed separators and comments are fine.
+        assert_eq!(parse_deps("# c\n0,2\n1->2;\n\n2,3").unwrap(), deps);
+    }
+
+    #[test]
+    fn deps_parse_rejects_hostile_input() {
+        for (s, needle) in [
+            ("0", "expected"),
+            ("a->1", "pred kernel index"),
+            ("1->b", "succ kernel index"),
+            ("0->-1", "succ kernel index"),
+            ("->", "pred kernel index"),
+            ("0->1->2", "succ kernel index"),
+        ] {
+            let err = parse_deps(s).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(needle), "`{s}`: expected `{needle}` in: {msg}");
+            assert!(msg.contains("valid clauses"), "{msg}");
+            assert!(msg.contains(&format!("`{}`", s.trim())), "input not echoed: {msg}");
+        }
+    }
+
+    #[test]
+    fn validate_dag_workload_checks_both_halves() {
+        let gpu = GpuSpec::gtx580();
+        let ks = crate::workloads::synthetic_workload(&gpu, 3, 7);
+        let ok = Workload::new(ks.clone(), vec![(0, 1)]);
+        assert!(validate_dag_workload(&gpu, &ok).is_ok());
+        let cyclic = Workload::new(ks, vec![(0, 1), (1, 0)]);
+        let err = validate_dag_workload(&gpu, &cyclic).unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+}

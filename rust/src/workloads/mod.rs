@@ -16,16 +16,24 @@
 //!   Table-3 comparison columns are scale-free.
 
 mod apps;
+pub mod dag;
 mod experiments;
 mod scenarios;
 mod synthetic;
 
 pub use apps::{blackscholes, electrostatics, ep, smith_waterman};
+pub use dag::{
+    deps_to_csv, parse_deps, validate_dag_workload, DagError, DagWorkloadError, DepGraph,
+    DepsParseError, Workload, MAX_DAG_KERNELS,
+};
 pub use experiments::{
     all_experiments, bs_6_blk, by_id, ep_6_grid, ep_6_shm, epbs_6, epbs_6_shm, epbsessw_8,
     Experiment,
 };
-pub use scenarios::{all_scenarios, scenario_by_id, scenario_ids, Scenario, SCENARIOS};
+pub use scenarios::{
+    all_dag_scenarios, all_scenarios, dag_scenario_by_id, dag_scenario_ids, scenario_by_id,
+    scenario_ids, DagScenario, Scenario, DAG_SCENARIOS, SCENARIOS,
+};
 pub use synthetic::synthetic_workload;
 
 #[cfg(test)]

@@ -18,6 +18,7 @@
 //! seed)` always produces the identical workload, so search results and
 //! bench gates are reproducible.
 
+use super::dag::Workload;
 use super::synthetic_workload;
 use crate::gpu::{AppKind, GpuSpec, KernelProfile};
 use crate::util::SplitMix64;
@@ -81,6 +82,152 @@ pub fn scenario_ids() -> Vec<&'static str> {
 /// Look a family up by its `id` spelling.
 pub fn scenario_by_id(id: &str) -> Option<&'static Scenario> {
     SCENARIOS.iter().find(|s| s.id.eq_ignore_ascii_case(id))
+}
+
+/// One named **dependency-aware** workload family: kernels plus a
+/// precedence DAG. Every generator emits edges only from lower to higher
+/// kernel index, so the arrival (identity) order of a DAG batch is a
+/// valid topological order *by construction* — the invariant the online
+/// FIFO guard rests on.
+pub struct DagScenario {
+    /// Stable spelling used by the CLI and benches (e.g. `"chain"`).
+    pub id: &'static str,
+    pub description: &'static str,
+    gen: fn(&GpuSpec, usize, u64) -> Workload,
+}
+
+impl DagScenario {
+    /// Generate this family's `n`-kernel DAG workload. Deterministic per
+    /// `(n, seed)`.
+    pub fn workload(&self, gpu: &GpuSpec, n: usize, seed: u64) -> Workload {
+        (self.gen)(gpu, n, seed)
+    }
+}
+
+/// The DAG scenario registry.
+pub static DAG_SCENARIOS: &[DagScenario] = &[
+    DagScenario {
+        id: "chain",
+        description: "total order 0 -> 1 -> … (one linear extension: search is a no-op)",
+        gen: gen_dag_chain,
+    },
+    DagScenario {
+        id: "fanout",
+        description: "kernel 0 fans out to every other kernel ((n-1)! extensions)",
+        gen: gen_dag_fanout,
+    },
+    DagScenario {
+        id: "fanin",
+        description: "every kernel feeds a final reduction kernel ((n-1)! extensions)",
+        gen: gen_dag_fanin,
+    },
+    DagScenario {
+        id: "layered",
+        description: "random layered DAG: seeded layers, each node fed from the previous layer",
+        gen: gen_dag_layered,
+    },
+    DagScenario {
+        id: "mlinfer",
+        description: "ML-inference shape: stem, two parallel branch chains, joining head",
+        gen: gen_dag_mlinfer,
+    },
+];
+
+/// All registered DAG scenario families.
+pub fn all_dag_scenarios() -> &'static [DagScenario] {
+    DAG_SCENARIOS
+}
+
+/// The registered DAG family ids, in registry order.
+pub fn dag_scenario_ids() -> Vec<&'static str> {
+    DAG_SCENARIOS.iter().map(|s| s.id).collect()
+}
+
+/// Look a DAG family up by its `id` spelling.
+pub fn dag_scenario_by_id(id: &str) -> Option<&'static DagScenario> {
+    DAG_SCENARIOS.iter().find(|s| s.id.eq_ignore_ascii_case(id))
+}
+
+fn gen_dag_chain(gpu: &GpuSpec, n: usize, seed: u64) -> Workload {
+    let mut w = Workload::independent(gen_mixed(gpu, n, seed ^ 0xDA60_0001));
+    for i in 1..n {
+        w.deps.push((i - 1, i));
+    }
+    w
+}
+
+fn gen_dag_fanout(gpu: &GpuSpec, n: usize, seed: u64) -> Workload {
+    let mut w = Workload::independent(gen_skewed(gpu, n, seed ^ 0xDA60_0002));
+    for i in 1..n {
+        w.deps.push((0, i));
+    }
+    w
+}
+
+fn gen_dag_fanin(gpu: &GpuSpec, n: usize, seed: u64) -> Workload {
+    let mut w = Workload::independent(gen_small_large(gpu, n, seed ^ 0xDA60_0003));
+    for i in 0..n.saturating_sub(1) {
+        w.deps.push((i, n - 1));
+    }
+    w
+}
+
+fn gen_dag_layered(gpu: &GpuSpec, n: usize, seed: u64) -> Workload {
+    let mut w = Workload::independent(gen_uniform(gpu, n, seed ^ 0xDA60_0004));
+    let mut rng = SplitMix64::new(seed ^ 0xDA60_0004);
+    // Seeded layer sizes of 1–3; layers are assigned in index order, so
+    // every edge runs lower -> higher index.
+    let mut layers: Vec<(usize, usize)> = Vec::new(); // [start, end)
+    let mut start = 0;
+    while start < n {
+        let size = (1 + rng.below(3)).min(n - start);
+        layers.push((start, start + size));
+        start += size;
+    }
+    for pair in layers.windows(2) {
+        let ((ps, pe), (cs, ce)) = (pair[0], pair[1]);
+        for succ in cs..ce {
+            // Each node draws a nonempty subset of the previous layer:
+            // one guaranteed feeder plus coin-flip extras.
+            let forced = ps + rng.below(pe - ps);
+            for pred in ps..pe {
+                if pred == forced || rng.next_f64() < 0.5 {
+                    w.deps.push((pred, succ));
+                }
+            }
+        }
+    }
+    w
+}
+
+fn gen_dag_mlinfer(gpu: &GpuSpec, n: usize, seed: u64) -> Workload {
+    // Stem (0) -> two parallel branch chains -> joining head (n-1): the
+    // classic two-tower inference graph. Degenerate sizes collapse
+    // gracefully (n=1: no edges; n=2: stem -> head; n=3: one branch).
+    let mut w = Workload::independent(gen_complementary(gpu, n, seed ^ 0xDA60_0005));
+    if n < 2 {
+        return w;
+    }
+    if n == 2 {
+        w.deps.push((0, 1));
+        return w;
+    }
+    let join = n - 1;
+    let mid = n - 2; // kernels 1..=mid are branch bodies
+    let a_len = (mid + 1) / 2; // MSRV 1.70: no usize::div_ceil yet
+    let branch_a: Vec<usize> = (1..=a_len).collect();
+    let branch_b: Vec<usize> = (a_len + 1..=mid).collect();
+    for branch in [&branch_a, &branch_b] {
+        if branch.is_empty() {
+            continue;
+        }
+        w.deps.push((0, branch[0]));
+        for pair in branch.windows(2) {
+            w.deps.push((pair[0], pair[1]));
+        }
+        w.deps.push((branch[branch.len() - 1], join));
+    }
+    w
 }
 
 fn gen_uniform(gpu: &GpuSpec, n: usize, seed: u64) -> Vec<KernelProfile> {
@@ -309,6 +456,78 @@ mod tests {
                 assert_eq!(k.shmem_per_block, 0, "{}", k.name);
             }
         }
+    }
+
+    #[test]
+    fn every_dag_family_is_acyclic_with_topological_arrival_order() {
+        let gpu = GpuSpec::gtx580();
+        for sc in all_dag_scenarios() {
+            for n in [1usize, 2, 3, 6, 8, 12] {
+                for seed in 0..6u64 {
+                    let w = sc.workload(&gpu, n, seed);
+                    assert_eq!(w.n(), n, "{} n={n} seed={seed}", sc.id);
+                    let g = crate::workloads::validate_dag_workload(&gpu, &w)
+                        .unwrap_or_else(|e| panic!("{} n={n} seed={seed}: {e}", sc.id));
+                    // Edges only run lower -> higher index, so arrival
+                    // order is topological by construction.
+                    for &(p, q) in &w.deps {
+                        assert!(p < q, "{} n={n} seed={seed}: edge {p}->{q}", sc.id);
+                    }
+                    let identity: Vec<usize> = (0..n).collect();
+                    assert!(g.is_topological(&identity), "{} n={n} seed={seed}", sc.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dag_families_are_deterministic_per_seed() {
+        let gpu = GpuSpec::gtx580();
+        for sc in all_dag_scenarios() {
+            let (a, b) = (sc.workload(&gpu, 8, 5), sc.workload(&gpu, 8, 5));
+            assert_eq!(a.kernels, b.kernels, "{}", sc.id);
+            assert_eq!(a.deps, b.deps, "{}", sc.id);
+        }
+    }
+
+    #[test]
+    fn dag_family_shapes_pin_extension_counts() {
+        let gpu = GpuSpec::gtx580();
+        let count = |id: &str, n: usize| {
+            dag_scenario_by_id(id)
+                .unwrap()
+                .workload(&gpu, n, 3)
+                .dep_graph()
+                .unwrap()
+                .linear_extension_count()
+                .unwrap()
+        };
+        assert_eq!(count("chain", 8), 1);
+        assert_eq!(count("fanout", 8), 5040); // (n-1)!
+        assert_eq!(count("fanin", 8), 5040);
+        // mlinfer at n=8: two 3-chains between stem and join interleave
+        // in C(6,3) ways.
+        assert_eq!(count("mlinfer", 8), 20);
+        // Layered is seeded but always strictly below the factorial.
+        let layered = count("layered", 8);
+        assert!(layered >= 1 && layered < 40320, "layered: {layered}");
+    }
+
+    #[test]
+    fn dag_ids_unique_resolvable_and_disjoint_from_plain_families() {
+        let mut ids = dag_scenario_ids();
+        for id in &ids {
+            assert!(dag_scenario_by_id(id).is_some());
+            assert!(dag_scenario_by_id(&id.to_uppercase()).is_some(), "{id}");
+            assert!(
+                scenario_by_id(id).is_none(),
+                "{id} shadows a plain scenario family"
+            );
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), DAG_SCENARIOS.len());
+        assert!(dag_scenario_by_id("nonsense").is_none());
     }
 
     #[test]

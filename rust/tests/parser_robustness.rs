@@ -11,6 +11,7 @@ use kreorder::fault::FaultPlan;
 use kreorder::fleet::{parse_route_policy, FleetSpec};
 use kreorder::online::{parse_window_policy, ArrivalSpec, Trace};
 use kreorder::search::parse_strategy;
+use kreorder::workloads::{parse_deps, DepGraph};
 
 /// Every parser error must be loud enough to act on: non-empty, and
 /// carrying either the offending input or a description of valid forms.
@@ -172,4 +173,94 @@ fn fault_plans_reject_hostile_input() {
     assert!(msg.contains("4-device"), "{msg}");
     // Comments and blank clauses are tolerated, not errors.
     assert!(FaultPlan::parse("# a comment\n\ncrash:0@5;").is_ok());
+}
+
+/// Out-of-range fault devices are reported against the exact offending
+/// clause, with the device index, the fleet size, and the valid range
+/// all in the same sentence.
+#[test]
+fn fault_device_bounds_echo_the_offending_clause() {
+    let plan = FaultPlan::parse("crash:0@5;slowdown:6@10:2;launchfail:0.1:1").unwrap();
+    let msg = plan.validate_for(4).unwrap_err().to_string();
+    assert!(msg.contains("`slowdown:6@10:2`"), "clause not echoed: {msg}");
+    assert!(!msg.contains("crash:0@5"), "innocent clause blamed: {msg}");
+    assert!(msg.contains("device 6"), "{msg}");
+    assert!(msg.contains("4-device"), "{msg}");
+    assert!(msg.contains("0..4"), "{msg}");
+    assert_actionable(&msg, "slowdown:6@10:2", "fault device bounds");
+}
+
+#[test]
+fn dependency_specs_reject_hostile_input() {
+    let hostile = [
+        "nonsense",
+        "->",
+        "0->",
+        "->1",
+        "0->x",
+        "x->1",
+        "0->-1",
+        "0->1->2",
+        "0,1,2",
+        "0 1",
+        "0->1;zzz",
+        "0.5->1",
+    ];
+    for s in hostile {
+        let err = parse_deps(s).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("valid clauses"), "{msg}");
+        assert_actionable(&msg, s, "deps");
+    }
+    // Comments, blank clauses, the CSV header, and mixed separators are
+    // tolerated, not errors.
+    assert_eq!(
+        parse_deps("# kreorder-deps v1\npred,succ\n0,2\n1->2; \n").unwrap(),
+        vec![(0, 2), (1, 2)]
+    );
+}
+
+/// Structural DAG violations (range, self-loops, cycles, the bitmask
+/// cap) are caught at graph build time with actionable errors.
+#[test]
+fn dep_graphs_reject_invalid_structure() {
+    let cases: [(usize, &[(usize, usize)], &str); 4] = [
+        (3, &[(0, 5)], "out of range"),
+        (3, &[(1, 1)], "itself"),
+        (3, &[(0, 1), (1, 2), (2, 0)], "cycle"),
+        (65, &[(0, 1)], "64"),
+    ];
+    for (n, deps, needle) in cases {
+        let msg = DepGraph::build(n, deps).unwrap_err().to_string();
+        assert!(msg.contains(needle), "expected `{needle}` in: {msg}");
+        assert_actionable(&msg, needle, "DepGraph");
+    }
+}
+
+/// The unified registry front door wraps every subsystem parser with one
+/// error shape: kind + echoed input + the kind's cheat sheet.
+#[test]
+fn unified_registry_errors_are_uniform() {
+    use kreorder::registry;
+    let errs = [
+        registry::parse_policy("blorp").unwrap_err(),
+        registry::parse_strategy("blorp").unwrap_err(),
+        registry::parse_route("blorp").unwrap_err(),
+        registry::parse_window("blorp").unwrap_err(),
+        registry::parse_arrivals("blorp").unwrap_err(),
+        registry::parse_fault_plan("blorp").unwrap_err(),
+    ];
+    for err in errs {
+        let msg = err.to_string();
+        assert!(msg.contains("`blorp`"), "input not echoed: {msg}");
+        assert!(
+            msg.contains(&format!("invalid {} spelling", err.kind)),
+            "{msg}"
+        );
+        assert!(
+            msg.contains(&format!("valid {} spellings", err.kind)),
+            "{msg}"
+        );
+        assert_actionable(&msg, "blorp", err.kind);
+    }
 }

@@ -380,6 +380,92 @@ fn prop_pack_rounds_partitions() {
     }
 }
 
+/// Every registered DAG scenario family generates a valid DAG at every
+/// size: edges in range, acyclic (the builder's Kahn check passes), and
+/// the arrival (identity) order is topological — the invariant the
+/// online layer's FIFO guard rests on.
+#[test]
+fn prop_dag_scenarios_are_acyclic_with_topological_arrival_order() {
+    use kreorder::workloads::all_dag_scenarios;
+    for seed in 0..CASES / 3 {
+        let g = gpu();
+        for sc in all_dag_scenarios() {
+            for n in 1..=9usize {
+                let w = sc.workload(&g, n, seed);
+                assert_eq!(w.n(), n, "seed {seed} family {} n={n}", sc.id);
+                let graph = w
+                    .dep_graph()
+                    .unwrap_or_else(|e| panic!("seed {seed} family {} n={n}: {e}", sc.id));
+                for &(p, s) in &w.deps {
+                    assert!(
+                        p < s,
+                        "seed {seed} family {} n={n}: edge {p}->{s} points backward",
+                        sc.id
+                    );
+                }
+                let identity: Vec<usize> = (0..n).collect();
+                assert!(
+                    graph.is_topological(&identity),
+                    "seed {seed} family {} n={n}: arrival order not topological",
+                    sc.id
+                );
+            }
+        }
+    }
+}
+
+/// The constrained sweep enumerates exactly the linear extensions of the
+/// dependency graph: its order count equals the subset-DP count for
+/// random forward-edge DAGs, collapses to 1 on a chain, and recovers n!
+/// on the antichain (no edges).
+#[test]
+fn prop_constrained_sweep_counts_linear_extensions() {
+    use kreorder::perm::sweep_dag;
+    use kreorder::workloads::{DepGraph, Workload};
+    for seed in 0..CASES / 5 {
+        let g = gpu();
+        let mut rng = SplitMix64::new(seed ^ 0xDA6);
+        let n = 2 + (seed % 6) as usize; // 2..=7 kernels
+        let ks = synthetic_workload(&g, n, seed);
+
+        // Random forward-edge DAG: each (i, j), i < j, independently.
+        let mut deps = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.below(3) == 0 {
+                    deps.push((i, j));
+                }
+            }
+        }
+        let graph = DepGraph::build(n, &deps).expect("forward edges are acyclic");
+        let ext = graph.linear_extension_count().expect("n <= 7");
+        let sw = sweep_dag(&g, &ks, &graph);
+        assert_eq!(
+            sw.n_perms as u128, ext,
+            "seed {seed} n={n} deps {deps:?}: sweep count != extension count"
+        );
+        assert!(
+            graph.is_topological(&sw.best_order),
+            "seed {seed}: best order infeasible"
+        );
+
+        // Chain: exactly one topological order, the chain itself.
+        let chain = Workload::independent(ks.clone()).with_chain(&(0..n).collect::<Vec<_>>());
+        let chain_graph = chain.dep_graph().unwrap();
+        assert_eq!(chain_graph.linear_extension_count(), Some(1), "seed {seed}");
+        let sw_chain = sweep_dag(&g, &ks, &chain_graph);
+        assert_eq!(sw_chain.n_perms, 1, "seed {seed}");
+        assert_eq!(sw_chain.best_order, (0..n).collect::<Vec<_>>(), "seed {seed}");
+
+        // Antichain: every permutation, n! of them.
+        let free = DepGraph::empty(n);
+        let factorial: u128 = (1..=n as u128).product();
+        assert_eq!(free.linear_extension_count(), Some(factorial), "seed {seed}");
+        let sw_free = sweep_dag(&g, &ks, &free);
+        assert_eq!(sw_free.n_perms as u128, factorial, "seed {seed}");
+    }
+}
+
 /// Dispatch is head-of-line in kernel-launch order: a kernel's first
 /// block is never placed before an earlier kernel's first block.
 #[test]
