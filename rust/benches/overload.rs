@@ -1,0 +1,315 @@
+//! Bench + CI gate: **overload protection** — admission control and the
+//! graceful-degradation ladder under sustained overload, on the virtual
+//! clock.
+//!
+//! For each gated scenario family the bench:
+//!
+//! 1. calibrates the 2-device fleet's summed FIFO window capacity (the
+//!    `benches/fleet_routing.rs` normalization) and measures the
+//!    critical-load (`1.0x`, ungated) p99 sojourn — the deadline SLO is
+//!    derived from it (`max(2 * p99_critical, 60 ms)`), so the gate
+//!    self-calibrates instead of hard-coding a latency;
+//! 2. drives Poisson arrivals at **1.5x and 3x** capacity — past what
+//!    any reordering can absorb — and replays the **identical** trace
+//!    through four admission policies: `none` (the pathology row),
+//!    `bound:32` (hard occupancy cap), `deadline:<slo>` (shed on
+//!    predicted-SLO-violation, priced by the backend's admissible
+//!    suffix bound) and `codel:<target>:<interval>` (informational);
+//! 3. scores each run by **admitted p99** (completed sojourns), goodput
+//!    (completed kernels per second of span) and the conservation
+//!    ledger (`completed + shed == arrivals`; under admission, shed =
+//!    rejected since no faults run here).
+//!
+//! **Hard gates** (non-zero exit, CI runs `--quick` per push):
+//!
+//! * conservation — every run, every policy: nothing lost, nothing
+//!   double-counted; `none` sheds exactly zero;
+//! * the SLO holds under shed — `deadline:<slo>`'s admitted p99 stays
+//!   ≤ the SLO at both overloads **while** goodput stays ≥ half the
+//!   fleet's calibrated capacity (no passing the latency gate by
+//!   shedding everything);
+//! * the pathology is real — at 3x, ungated `none`'s p99 must exceed
+//!   `bound:32`'s admitted p99 (unbounded queue growth vs a bounded
+//!   queue), otherwise the overload regime is miscalibrated.
+//!
+//! Everything is virtual-time: `BENCH_overload.json` is machine-
+//! independent, so regressions are scheduling changes, never noise.
+
+#[path = "harness/mod.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use kreorder::fleet::{FleetReport, FleetSimConfig, FleetSpec, ShedCause};
+use kreorder::gpu::GpuSpec;
+use kreorder::online::{
+    fifo_window_capacity_per_s, OnlineReorderer, ReplaySource, Trace,
+};
+use kreorder::workloads::scenario_by_id;
+
+const SEED: u64 = 31;
+const WINDOW_CAP: usize = 8;
+const WINDOW_SPEC: &str = "linger:8:40";
+const SEARCH_BUDGET: u64 = 300;
+/// Two identical devices (overload is about load, not heterogeneity).
+const FLEET: &str = "2";
+/// Offered load relative to summed FIFO capacity, per regime.
+const OVERLOADS: [f64; 2] = [1.5, 3.0];
+/// Hard occupancy cap for the `bound` rows (~4 windows across 2 devices).
+const BOUND_Q: usize = 32;
+/// Goodput floor for the deadline gate, as a fraction of capacity.
+const GOODPUT_FLOOR_FRAC: f64 = 0.5;
+/// Families the SLO and pathology gates are enforced on.
+const GATED_FAMILIES: [&str; 2] = ["skewed", "mixed"];
+
+struct Row {
+    family: &'static str,
+    overload: f64,
+    admission: String,
+    arrivals: String,
+    n: usize,
+    completed: usize,
+    rejected: usize,
+    admitted_p99_ms: f64,
+    goodput_per_s: f64,
+    completion_rate: f64,
+    degraded_decisions: u64,
+    span_ms: f64,
+}
+
+fn run_trace(fleet: &FleetSpec, trace: &Trace, admission: &str) -> FleetReport {
+    let gpu = GpuSpec::gtx580();
+    let source = Box::new(
+        ReplaySource::from_trace(trace, &gpu)
+            .expect("registry family")
+            .named(trace.family.clone()),
+    );
+    FleetSimConfig::new(fleet.clone(), source)
+        .route_named("jsq")
+        .expect("bench route spelling")
+        .window_named(WINDOW_SPEC)
+        .expect("bench window spelling")
+        .reorderer(OnlineReorderer::search("local:0", SEARCH_BUDGET).expect("spelling"))
+        .admission_named(admission)
+        .expect("bench admission spelling")
+        .run()
+}
+
+/// Completed kernels per second of span (0 when the span is empty).
+fn goodput(r: &FleetReport) -> f64 {
+    if r.span_ms <= 0.0 {
+        0.0
+    } else {
+        r.kernels.len() as f64 / (r.span_ms / 1e3)
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let gpu = GpuSpec::gtx580();
+    let count: usize = if quick { 96 } else { 160 };
+    let fleet = FleetSpec::parse(FLEET).expect("bench fleet spelling");
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    // (family, slo_ms, deadline 3x goodput fraction) for the baseline.
+    let mut slo_rows: Vec<(&str, f64, f64)> = Vec::new();
+
+    harness::section(&format!(
+        "overload protection: admission at {OVERLOADS:?}x capacity ({WINDOW_SPEC}, budget \
+         {SEARCH_BUDGET}, n={count})"
+    ));
+    for family in GATED_FAMILIES {
+        let sc = scenario_by_id(family).expect("registry family");
+        let pool = sc.workload(&gpu, count, SEED);
+        let cal_factory: Box<dyn Fn() -> Box<dyn kreorder::exec::ExecutionBackend> + Sync> =
+            Box::new(|| {
+                Box::new(kreorder::exec::SimulatorBackend::new())
+                    as Box<dyn kreorder::exec::ExecutionBackend>
+            });
+        let capacity: f64 = fleet
+            .devices
+            .iter()
+            .map(|g| fifo_window_capacity_per_s(g, &pool, WINDOW_CAP, cal_factory.as_ref()))
+            .sum();
+
+        // SLO calibration: the ungated critical-load p99.
+        let critical = run_trace(&fleet, &Trace::poisson(family, count, capacity, SEED), "none");
+        let p99_critical = critical.sojourn_stats().p99_ms;
+        let slo_ms = (2.0 * p99_critical).max(60.0);
+        let bound_spec = format!("bound:{BOUND_Q}");
+        let deadline_spec = format!("deadline:{slo_ms:.3}");
+        let codel_spec = format!("codel:{:.3}:{:.3}", slo_ms / 4.0, slo_ms);
+        println!(
+            "  {family:<10} capacity {capacity:.1}/s | critical p99 {p99_critical:.2} ms | \
+             SLO {slo_ms:.1} ms"
+        );
+
+        let mut goodput_3x_frac = f64::NAN;
+        for overload in OVERLOADS {
+            let rate = overload * capacity;
+            let arrivals = format!("poisson:{rate:.3}:{SEED}");
+            let trace = Trace::poisson(family, count, rate, SEED);
+            let mut none_p99 = f64::NAN;
+            let mut bound_p99 = f64::NAN;
+            for admission in [
+                "none",
+                bound_spec.as_str(),
+                deadline_spec.as_str(),
+                codel_spec.as_str(),
+            ] {
+                let r = run_trace(&fleet, &trace, admission);
+                // Conservation, the ledger gate: arrivals are either
+                // completed or shed (here: rejected), exactly once.
+                if r.kernels.len() + r.shed.len() != count {
+                    failures.push(format!(
+                        "{family}/{overload}x/{admission}: {} completed + {} shed != {count} \
+                         arrivals",
+                        r.kernels.len(),
+                        r.shed.len()
+                    ));
+                }
+                let rejected = r
+                    .shed
+                    .iter()
+                    .filter(|s| matches!(s.cause, ShedCause::Rejected { .. }))
+                    .count();
+                if rejected != r.shed.len() {
+                    failures.push(format!(
+                        "{family}/{overload}x/{admission}: {} shed records are not rejections \
+                         (no faults ran)",
+                        r.shed.len() - rejected
+                    ));
+                }
+                let p99 = r.sojourn_stats().p99_ms;
+                let gput = goodput(&r);
+                println!(
+                    "  {:<10} {:>4.1}x {:<18} admitted-p99 {:>10.2} ms | rejected {:>3} | \
+                     goodput {:>7.1}/s | completion {:.4}",
+                    family,
+                    overload,
+                    admission,
+                    p99,
+                    rejected,
+                    gput,
+                    r.completion_rate(),
+                );
+                if admission == "none" {
+                    none_p99 = p99;
+                    if !r.shed.is_empty() {
+                        failures.push(format!(
+                            "{family}/{overload}x: admission=none shed {} kernels",
+                            r.shed.len()
+                        ));
+                    }
+                } else if admission.starts_with("bound:") {
+                    bound_p99 = p99;
+                }
+                if admission == deadline_spec.as_str() {
+                    // The SLO gate: shed keeps the admitted tail inside
+                    // the SLO, and the shedding is not a cop-out.
+                    if !(p99 <= slo_ms) {
+                        failures.push(format!(
+                            "{family}/{overload}x: deadline admitted p99 {p99:.2} ms exceeds \
+                             the {slo_ms:.2} ms SLO"
+                        ));
+                    }
+                    let floor = GOODPUT_FLOOR_FRAC * capacity;
+                    if !(gput >= floor) {
+                        failures.push(format!(
+                            "{family}/{overload}x: deadline goodput {gput:.1}/s below the \
+                             {floor:.1}/s floor (capacity {capacity:.1}/s)"
+                        ));
+                    }
+                    if overload == OVERLOADS[1] {
+                        goodput_3x_frac = gput / capacity;
+                    }
+                }
+                rows.push(Row {
+                    family,
+                    overload,
+                    admission: admission.to_string(),
+                    arrivals: arrivals.clone(),
+                    n: count,
+                    completed: r.kernels.len(),
+                    rejected,
+                    admitted_p99_ms: p99,
+                    goodput_per_s: gput,
+                    completion_rate: r.completion_rate(),
+                    degraded_decisions: r.n_degraded_decisions,
+                    span_ms: r.span_ms,
+                });
+            }
+            // The pathology gate: at deep overload an unbounded queue
+            // must visibly hurt — otherwise the regime is miscalibrated
+            // and every other gate here is vacuous.
+            if overload == OVERLOADS[1] && !(none_p99 > bound_p99) {
+                failures.push(format!(
+                    "{family}/{overload}x: ungated p99 {none_p99:.2} ms does not exceed \
+                     bound:{BOUND_Q} admitted p99 {bound_p99:.2} ms — overload miscalibrated"
+                ));
+            }
+        }
+        slo_rows.push((family, slo_ms, goodput_3x_frac));
+    }
+
+    let gate_ok = failures.is_empty();
+
+    // ---- machine-readable record --------------------------------------
+    let mut json = String::from("{\n  \"bench\": \"overload\",\n  \"gpu\": \"gtx580\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+    json.push_str(&format!(
+        "  \"config\": {{\"fleet\": \"{FLEET}\", \"window\": \"{WINDOW_SPEC}\", \"strategy\": \
+         \"search:local:0:{SEARCH_BUDGET}\", \"overloads\": [{}, {}], \"bound_q\": {BOUND_Q}, \
+         \"goodput_floor_frac\": {GOODPUT_FLOOR_FRAC}, \"seed\": {SEED}}},\n",
+        OVERLOADS[0], OVERLOADS[1]
+    ));
+    json.push_str(&format!(
+        "  \"gates\": {{\"conservation_ok\": {gate_ok}, \"deadline_slo_ok\": {gate_ok}, \
+         \"bound_beats_none_ok\": {gate_ok}}},\n"
+    ));
+    json.push_str("  \"slo\": {\n");
+    for (i, (family, slo, frac)) in slo_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{family}\": {{\"slo_ms\": {slo:.4}, \"deadline_goodput_frac_3x\": \
+             {frac:.4}}}{}\n",
+            if i + 1 == slo_rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  },\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"family\": \"{}\", \"overload\": {}, \"admission\": \"{}\", \"arrivals\": \
+             \"{}\", \"n\": {},\n     \"completed\": {}, \"rejected\": {}, \
+             \"admitted_p99_ms\": {:.6}, \"goodput_per_s\": {:.6},\n     \"completion_rate\": \
+             {:.6}, \"degraded_decisions\": {}, \"span_ms\": {:.6}}}{}\n",
+            r.family,
+            r.overload,
+            r.admission,
+            r.arrivals,
+            r.n,
+            r.completed,
+            r.rejected,
+            r.admitted_p99_ms,
+            r.goodput_per_s,
+            r.completion_rate,
+            r.degraded_decisions,
+            r.span_ms,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = "BENCH_overload.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    if !failures.is_empty() {
+        eprintln!("\noverload protection gates FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("\nall overload protection gates passed");
+}

@@ -1,0 +1,448 @@
+//! **Admission control** — overload protection at the front door.
+//!
+//! Reordering assumes every submitted kernel eventually runs. Under
+//! sustained offered load above capacity that assumption fails in the
+//! worst possible way: queues grow without bound, every sojourn tends to
+//! infinity, and the reorder decisions themselves become the bottleneck.
+//! This module is the *last* rung of the explicit degradation ladder
+//!
+//! 1. **budgeted reorder** — the normal mode;
+//! 2. **FIFO passthrough** — a decision that cannot beat FIFO in budget
+//!    serves arrival order (counted as `n_degraded_decisions`);
+//! 3. **admission shed** — an arrival that would violate the service's
+//!    stability or latency contract is *rejected at the door*, recorded
+//!    as a first-class [`crate::fleet::ShedRecord`] with a
+//!    [`crate::fleet::ShedCause::Rejected`] cause, and its closed-loop
+//!    source notified so clients never starve.
+//!
+//! An [`AdmissionPolicy`] inspects an [`AdmissionState`] snapshot at
+//! each arrival and answers admit/reject. The registry spellings:
+//!
+//! | spelling | behavior |
+//! |---|---|
+//! | `none` | admit everything (the default; a strict engine no-op) |
+//! | `bound:<q>` | hard cap: reject while ≥ q kernels are in the system |
+//! | `deadline:<slo_ms>` | reject when the priced backlog says the SLO would be violated |
+//! | `codel:<target_ms>:<interval_ms>` | CoDel-style: drop when queue delay stays above target for a full interval |
+//!
+//! `deadline` prices the backlog through the backend's admissible
+//! [`crate::exec::PreparedWorkload::suffix_lower_bound`] — the same
+//! pricing seam `lrw` routing uses. Because the bound is admissible
+//! (never overestimates) the policy admits while the *priced* backlog
+//! stays within **half** the SLO; the factor-two headroom covers bound
+//! slack, the admitted kernel's own service time and the simulator's
+//! per-block jitter, so admitted kernels meet the full SLO in practice
+//! (HARD-gated in `benches/overload.rs`). `codel` needs no pricing: it
+//! watches the realized queue delay (the age of the oldest waiting
+//! kernel) and, per CoDel, only drops once the delay has stayed above
+//! `target_ms` for a continuous `interval_ms`, so bursts ride through
+//! and only *standing* queues shed.
+//!
+//! The same trait gates all three execution layers: the online engine
+//! ([`crate::online::simulate_online_with_admission`]), the fleet
+//! engine ([`crate::fleet::simulate_fleet_with_admission`]) and the
+//! live thread coordinator
+//! ([`crate::coordinator::CoordinatorBuilder::admission`], where
+//! [`crate::coordinator::Coordinator::try_submit`] returns an explicit
+//! backpressure error instead of queueing unboundedly; the live path
+//! cannot price backlogs, so `deadline` degrades to admit-all there —
+//! the same fallback `lrw` routing takes).
+
+use std::fmt;
+
+/// What the gatekeeper sees at one arrival: a snapshot of system
+/// occupancy at the arrival's virtual (or wall) time.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionState {
+    /// The arrival's timestamp (virtual ms in the engines, ms since
+    /// service start in the coordinator).
+    pub now_ms: f64,
+    /// Kernels currently in the system and not yet completed (pending
+    /// windows + queued batches + in flight).
+    pub queue_depth: usize,
+    /// Age of the oldest kernel still waiting for service (0 when the
+    /// system is empty) — the realized queue-delay signal CoDel watches.
+    pub oldest_wait_ms: f64,
+    /// Admissible lower bound on this arrival's sojourn (residual busy
+    /// time + `suffix_lower_bound` of the backlog; the online path
+    /// includes the arrival itself, the fleet path prices the best
+    /// currently-up device). `NaN` when the caller did not price — engines
+    /// only pay for pricing when [`AdmissionPolicy::needs_pricing`] says
+    /// so, and the live coordinator never can.
+    pub predicted_sojourn_ms: f64,
+}
+
+/// A policy deciding, per arrival, whether the kernel enters the system
+/// at all. Implementations may be stateful (CoDel is); the engines call
+/// [`admit`](AdmissionPolicy::admit) exactly once per arrival, in
+/// arrival order, so state advances deterministically on the virtual
+/// clock.
+pub trait AdmissionPolicy: Send {
+    /// Canonical registry spelling (reparsing it yields an equivalent
+    /// policy).
+    fn name(&self) -> String;
+
+    /// Whether [`AdmissionState::predicted_sojourn_ms`] must be priced
+    /// before calling [`admit`](AdmissionPolicy::admit). Pricing walks
+    /// the backlog through the backend's admissible bound — engines
+    /// skip that cost for policies that never read it.
+    fn needs_pricing(&self) -> bool {
+        false
+    }
+
+    /// `true` only for [`NoAdmission`]: engines skip the entire gate
+    /// (no state snapshot, no pricing), which is what makes
+    /// `admission=none` a strict, bit-identical no-op.
+    fn is_noop(&self) -> bool {
+        false
+    }
+
+    /// Admit (`true`) or reject (`false`) the arrival `state` describes.
+    fn admit(&mut self, state: &AdmissionState) -> bool;
+}
+
+/// `none`: admit everything. [`AdmissionPolicy::is_noop`] lets the
+/// engines bypass the gate entirely, so runs under `none` are
+/// bit-identical to the pre-admission engines (pinned in
+/// `tests/overload_protection.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoAdmission;
+
+impl AdmissionPolicy for NoAdmission {
+    fn name(&self) -> String {
+        "none".into()
+    }
+    fn is_noop(&self) -> bool {
+        true
+    }
+    fn admit(&mut self, _state: &AdmissionState) -> bool {
+        true
+    }
+}
+
+/// `bound:<q>`: a hard cap on system occupancy — reject while `q` or
+/// more kernels are already in the system. The classic bounded-queue
+/// backpressure: keeps memory and worst-case queue delay finite at the
+/// price of shedding indiscriminately under overload.
+#[derive(Debug, Clone, Copy)]
+pub struct BoundAdmission {
+    cap: usize,
+}
+
+impl BoundAdmission {
+    /// Cap is clamped to ≥ 1 (a zero cap would reject every kernel of
+    /// an empty system).
+    pub fn new(cap: usize) -> BoundAdmission {
+        BoundAdmission { cap: cap.max(1) }
+    }
+}
+
+impl AdmissionPolicy for BoundAdmission {
+    fn name(&self) -> String {
+        format!("bound:{}", self.cap)
+    }
+    fn admit(&mut self, state: &AdmissionState) -> bool {
+        state.queue_depth < self.cap
+    }
+}
+
+/// `deadline:<slo_ms>`: shed on predicted SLO violation. Admits while
+/// the arrival's priced sojourn lower bound stays within *half* the
+/// SLO; see the module docs for why the headroom factor exists. An
+/// unpriced snapshot (`NaN`) admits — the policy degrades to `none`
+/// rather than shedding blind.
+#[derive(Debug, Clone, Copy)]
+pub struct DeadlineAdmission {
+    slo_ms: f64,
+}
+
+/// The admissible-bound headroom `deadline` keeps between its priced
+/// admit threshold and the SLO it protects (threshold = SLO /
+/// `DEADLINE_HEADROOM`).
+pub const DEADLINE_HEADROOM: f64 = 2.0;
+
+impl DeadlineAdmission {
+    pub fn new(slo_ms: f64) -> DeadlineAdmission {
+        DeadlineAdmission { slo_ms }
+    }
+}
+
+impl AdmissionPolicy for DeadlineAdmission {
+    fn name(&self) -> String {
+        format!("deadline:{}", self.slo_ms)
+    }
+    fn needs_pricing(&self) -> bool {
+        true
+    }
+    fn admit(&mut self, state: &AdmissionState) -> bool {
+        // NaN comparison is false on both sides: an unpriced snapshot
+        // admits.
+        !(state.predicted_sojourn_ms > self.slo_ms / DEADLINE_HEADROOM)
+    }
+}
+
+/// `codel:<target_ms>:<interval_ms>`: CoDel-style sojourn-based
+/// dropping on the realized queue delay. While the oldest waiting
+/// kernel is younger than `target_ms` everything is admitted and the
+/// above-target timer resets; once the delay has stayed above target
+/// for a continuous `interval_ms`, one arrival is dropped and the
+/// timer restarts. Bursts shorter than the interval ride through
+/// untouched; standing queues shed at a bounded, deterministic rate.
+#[derive(Debug, Clone, Copy)]
+pub struct CoDelAdmission {
+    target_ms: f64,
+    interval_ms: f64,
+    /// When the queue delay last rose above target (`None` while below).
+    above_since_ms: Option<f64>,
+}
+
+impl CoDelAdmission {
+    pub fn new(target_ms: f64, interval_ms: f64) -> CoDelAdmission {
+        CoDelAdmission {
+            target_ms,
+            interval_ms,
+            above_since_ms: None,
+        }
+    }
+}
+
+impl AdmissionPolicy for CoDelAdmission {
+    fn name(&self) -> String {
+        format!("codel:{}:{}", self.target_ms, self.interval_ms)
+    }
+    fn admit(&mut self, state: &AdmissionState) -> bool {
+        if state.oldest_wait_ms <= self.target_ms {
+            self.above_since_ms = None;
+            return true;
+        }
+        match self.above_since_ms {
+            None => {
+                self.above_since_ms = Some(state.now_ms);
+                true
+            }
+            Some(t0) if state.now_ms - t0 >= self.interval_ms => {
+                // Drop one and restart the interval from now.
+                self.above_since_ms = Some(state.now_ms);
+                false
+            }
+            Some(_) => true,
+        }
+    }
+}
+
+/// Rejected admission spelling; lists the valid forms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdmissionParseError {
+    pub input: String,
+}
+
+impl fmt::Display for AdmissionParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown admission policy `{}` — valid policies: none, bound:<q>, \
+             deadline:<slo_ms>, codel:<target_ms>:<interval_ms> \
+             (q ≥ 1; all times finite and > 0)",
+            self.input
+        )
+    }
+}
+
+impl std::error::Error for AdmissionParseError {}
+
+/// Parse an admission-policy spelling (see the module table). Times
+/// must be finite and strictly positive; the bound cap at least 1;
+/// trailing garbage is rejected.
+pub fn parse_admission_policy(
+    spec: &str,
+) -> Result<Box<dyn AdmissionPolicy>, AdmissionParseError> {
+    let err = || AdmissionParseError {
+        input: spec.to_string(),
+    };
+    let lower = spec.trim().to_ascii_lowercase();
+    let mut parts = lower.split(':');
+    let head = parts.next().unwrap_or("");
+
+    // Positive-finite millisecond argument.
+    let ms = |s: Option<&str>| -> Result<f64, AdmissionParseError> {
+        let v: f64 = s.ok_or_else(err)?.parse().map_err(|_| err())?;
+        if v.is_finite() && v > 0.0 {
+            Ok(v)
+        } else {
+            Err(err())
+        }
+    };
+
+    let policy: Box<dyn AdmissionPolicy> = match head {
+        "none" => Box::new(NoAdmission),
+        "bound" => {
+            let q: usize = parts.next().ok_or_else(err)?.parse().map_err(|_| err())?;
+            if q == 0 {
+                return Err(err());
+            }
+            Box::new(BoundAdmission::new(q))
+        }
+        "deadline" => Box::new(DeadlineAdmission::new(ms(parts.next())?)),
+        "codel" => {
+            let target = ms(parts.next())?;
+            let interval = ms(parts.next())?;
+            Box::new(CoDelAdmission::new(target, interval))
+        }
+        _ => return Err(err()),
+    };
+    if parts.next().is_some() {
+        return Err(err());
+    }
+    Ok(policy)
+}
+
+/// One line per registered admission spelling, for `kreorder list
+/// --kind admission` and the shared registry cheat sheet.
+pub fn admission_help_table() -> String {
+    let rows: [(&str, &str); 4] = [
+        ("none", "admit everything (default; strict engine no-op)"),
+        (
+            "bound:<q>",
+            "hard occupancy cap: reject while >= q kernels are in the system",
+        ),
+        (
+            "deadline:<slo_ms>",
+            "shed on predicted SLO violation (admissible suffix-bound pricing, 2x headroom)",
+        ),
+        (
+            "codel:<target_ms>:<interval_ms>",
+            "CoDel: drop once queue delay stays above target for a full interval",
+        ),
+    ];
+    let mut s = String::new();
+    for (name, desc) in rows {
+        s.push_str(&format!("  {name:<32} {desc}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(depth: usize, oldest: f64, predicted: f64, now: f64) -> AdmissionState {
+        AdmissionState {
+            now_ms: now,
+            queue_depth: depth,
+            oldest_wait_ms: oldest,
+            predicted_sojourn_ms: predicted,
+        }
+    }
+
+    #[test]
+    fn none_admits_everything_and_is_the_noop() {
+        let mut p = parse_admission_policy("none").unwrap();
+        assert!(p.is_noop());
+        assert!(!p.needs_pricing());
+        assert!(p.admit(&state(1_000_000, 1e9, 1e9, 0.0)));
+        assert_eq!(p.name(), "none");
+    }
+
+    #[test]
+    fn bound_caps_occupancy() {
+        let mut p = parse_admission_policy("bound:4").unwrap();
+        assert!(!p.is_noop());
+        assert!(p.admit(&state(0, 0.0, f64::NAN, 0.0)));
+        assert!(p.admit(&state(3, 0.0, f64::NAN, 0.0)));
+        assert!(!p.admit(&state(4, 0.0, f64::NAN, 0.0)));
+        assert!(!p.admit(&state(400, 0.0, f64::NAN, 0.0)));
+        assert_eq!(p.name(), "bound:4");
+    }
+
+    #[test]
+    fn deadline_prices_against_half_the_slo_and_admits_unpriced() {
+        let mut p = parse_admission_policy("deadline:100").unwrap();
+        assert!(p.needs_pricing());
+        assert!(p.admit(&state(0, 0.0, 49.0, 0.0)));
+        assert!(p.admit(&state(0, 0.0, 50.0, 0.0)));
+        assert!(!p.admit(&state(0, 0.0, 50.1, 0.0)));
+        // Unpriced (NaN) snapshots admit: degrade to none, never shed blind.
+        assert!(p.admit(&state(0, 0.0, f64::NAN, 0.0)));
+        assert_eq!(p.name(), "deadline:100");
+    }
+
+    #[test]
+    fn codel_drops_only_standing_queues() {
+        let mut p = parse_admission_policy("codel:5:20").unwrap();
+        // Below target: admit, timer clear.
+        assert!(p.admit(&state(1, 3.0, f64::NAN, 0.0)));
+        // Above target starts the timer but still admits…
+        assert!(p.admit(&state(4, 8.0, f64::NAN, 10.0)));
+        assert!(p.admit(&state(4, 9.0, f64::NAN, 25.0)));
+        // …a full interval above target drops exactly one…
+        assert!(!p.admit(&state(4, 9.0, f64::NAN, 30.0)));
+        // …and the interval restarts (not an immediate second drop).
+        assert!(p.admit(&state(4, 9.0, f64::NAN, 31.0)));
+        // Dropping below target resets the state machine entirely.
+        assert!(p.admit(&state(0, 1.0, f64::NAN, 40.0)));
+        assert!(p.admit(&state(4, 9.0, f64::NAN, 60.0)));
+        assert!(p.admit(&state(4, 9.0, f64::NAN, 79.0)));
+        assert!(!p.admit(&state(4, 9.0, f64::NAN, 80.0)));
+    }
+
+    #[test]
+    fn burst_shorter_than_interval_rides_through() {
+        let mut p = CoDelAdmission::new(5.0, 100.0);
+        for t in 0..50 {
+            assert!(p.admit(&state(10, 50.0, f64::NAN, t as f64)), "t={t}");
+        }
+        // Queue drains before the interval elapses: nothing was dropped.
+        assert!(p.admit(&state(0, 0.0, f64::NAN, 50.0)));
+    }
+
+    #[test]
+    fn canonical_names_reparse() {
+        for spec in ["none", "bound:64", "deadline:50", "codel:5:100"] {
+            let p = parse_admission_policy(spec).unwrap();
+            let q = parse_admission_policy(&p.name()).unwrap();
+            assert_eq!(p.name(), q.name());
+        }
+    }
+
+    #[test]
+    fn hostile_spellings_are_rejected_with_the_echoed_input() {
+        for bad in [
+            "",
+            "zzz",
+            "bound",
+            "bound:",
+            "bound:0",
+            "bound:-3",
+            "bound:x",
+            "bound:4:9",
+            "deadline",
+            "deadline:",
+            "deadline:-5",
+            "deadline:0",
+            "deadline:nan",
+            "deadline:inf",
+            "deadline:50:9",
+            "codel",
+            "codel:5",
+            "codel:0:5",
+            "codel:5:0",
+            "codel:-1:5",
+            "codel:5:nan",
+            "codel:5:5:9",
+            "none:1",
+        ] {
+            let e = parse_admission_policy(bad).unwrap_err();
+            assert!(e.to_string().contains(bad), "`{bad}`: {e}");
+            assert!(e.to_string().contains("valid policies"), "{e}");
+        }
+    }
+
+    #[test]
+    fn help_table_names_every_spelling() {
+        let t = admission_help_table();
+        for name in ["none", "bound", "deadline", "codel"] {
+            assert!(t.contains(name), "{t}");
+        }
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,205 @@
+//! Lock-free batched submission queue for the thread coordinator.
+//!
+//! Producers (`Coordinator::submit` / `try_submit`) push from any
+//! thread without taking a lock; the dispatcher drains with a single
+//! atomic swap per wake-up. The shape is the classic multi-producer
+//! Treiber stack with a *pop-all* consumer: push is one CAS loop on the
+//! head pointer, and because the consumer takes the whole chain at once
+//! (swap to null, then reverse for FIFO order) there is no ABA hazard —
+//! a popped node is never re-linked. The queue's depth feeds the
+//! admission policies ([`crate::admission::AdmissionPolicy`]), which is
+//! why it is tracked explicitly instead of recomputed.
+//!
+//! Only `std::sync::atomic` is used — no external queue crate — and the
+//! implementation is small enough to audit: two atomics, one CAS loop,
+//! one swap.
+
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+struct Node<T> {
+    value: T,
+    next: *mut Node<T>,
+}
+
+/// A multi-producer / single-swap-consumer intrusive queue. `push` is
+/// lock-free from any number of threads; `pop_all` takes everything in
+/// one atomic swap and returns it oldest-first.
+pub struct IngestQueue<T> {
+    head: AtomicPtr<Node<T>>,
+    depth: AtomicUsize,
+}
+
+impl<T> IngestQueue<T> {
+    pub fn new() -> IngestQueue<T> {
+        IngestQueue {
+            head: AtomicPtr::new(ptr::null_mut()),
+            depth: AtomicUsize::new(0),
+        }
+    }
+
+    /// Push one entry (lock-free; never blocks, never fails). Returns
+    /// the queue depth *including* this entry, so callers can feed
+    /// admission decisions without a second load.
+    pub fn push(&self, value: T) -> usize {
+        let node = Box::into_raw(Box::new(Node {
+            value,
+            next: ptr::null_mut(),
+        }));
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            // The node is not yet shared: plain write through the raw
+            // pointer is sound until the CAS publishes it.
+            unsafe { (*node).next = head };
+            if self
+                .head
+                .compare_exchange_weak(head, node, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return self.depth.fetch_add(1, Ordering::AcqRel) + 1;
+            }
+        }
+    }
+
+    /// Take everything currently queued, oldest-first. One atomic swap;
+    /// entries pushed concurrently with the swap land in the next call.
+    pub fn pop_all(&self) -> Vec<T> {
+        let mut head = self.head.swap(ptr::null_mut(), Ordering::AcqRel);
+        if head.is_null() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        while !head.is_null() {
+            // Each node was published exactly once by `push` and the
+            // swap made this chain exclusively ours.
+            let node = unsafe { Box::from_raw(head) };
+            head = node.next;
+            out.push(node.value);
+        }
+        self.depth.fetch_sub(out.len(), Ordering::AcqRel);
+        // The stack yields newest-first; callers want submission order.
+        out.reverse();
+        out
+    }
+
+    /// Current queue depth. Exact when quiescent; under concurrent
+    /// pushes it can transiently lag by the number of in-flight
+    /// producers (the admission policies treat it as a load signal, not
+    /// an accounting ledger).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Acquire).is_null()
+    }
+}
+
+impl<T> Default for IngestQueue<T> {
+    fn default() -> Self {
+        IngestQueue::new()
+    }
+}
+
+impl<T> Drop for IngestQueue<T> {
+    fn drop(&mut self) {
+        // Free any nodes still queued (their values drop normally).
+        drop(self.pop_all());
+    }
+}
+
+// The raw head pointer is the only reason these are not derived. All
+// shared mutation goes through the atomics above, and values cross
+// threads exactly once (producer → consumer), so `T: Send` suffices.
+unsafe impl<T: Send> Send for IngestQueue<T> {}
+unsafe impl<T: Send> Sync for IngestQueue<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn pop_all_returns_submission_order() {
+        let q = IngestQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.push(1), 1);
+        assert_eq!(q.push(2), 2);
+        assert_eq!(q.push(3), 3);
+        assert_eq!(q.depth(), 3);
+        assert_eq!(q.pop_all(), vec![1, 2, 3]);
+        assert_eq!(q.depth(), 0);
+        assert!(q.is_empty());
+        assert!(q.pop_all().is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_and_pop_preserve_order_within_batches() {
+        let q = IngestQueue::new();
+        q.push("a");
+        q.push("b");
+        assert_eq!(q.pop_all(), vec!["a", "b"]);
+        q.push("c");
+        assert_eq!(q.pop_all(), vec!["c"]);
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing() {
+        const PRODUCERS: usize = 4;
+        const PER: usize = 500;
+        let q = Arc::new(IngestQueue::new());
+        let handles: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        q.push(p * PER + i);
+                    }
+                })
+            })
+            .collect();
+        let mut seen = Vec::new();
+        // Drain concurrently with the producers, then once after join.
+        for _ in 0..50 {
+            seen.extend(q.pop_all());
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        seen.extend(q.pop_all());
+        assert_eq!(seen.len(), PRODUCERS * PER, "no entry may be lost or duplicated");
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), PRODUCERS * PER);
+        assert_eq!(q.depth(), 0);
+        // Per-producer FIFO: each producer's own entries drain in its
+        // push order (pop_all reverses the stack correctly).
+        let q2 = IngestQueue::new();
+        for i in 0..100 {
+            q2.push(i);
+        }
+        let drained = q2.pop_all();
+        assert!(drained.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn dropping_a_nonempty_queue_frees_its_nodes() {
+        // Values with Drop still queued at teardown must drop exactly
+        // once (Miri/asan would flag the leak or double-free).
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Counted;
+        impl Drop for Counted {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        {
+            let q = IngestQueue::new();
+            q.push(Counted);
+            q.push(Counted);
+            q.push(Counted);
+        }
+        assert_eq!(DROPS.load(Ordering::SeqCst), 3);
+    }
+}

@@ -19,11 +19,17 @@
 //!   sequence, so the service produces real numerics end to end (Python
 //!   never runs on this path).
 //!
-//! Threading: a dispatcher thread owns batching and feeds per-device
-//! worker threads over MPSC channels; each worker builds its backend on
-//! its own thread via the configured factory (the PJRT C handles are not
-//! `Send`). Responses travel over per-request channels. This is the
-//! std-library analogue of the usual tokio actor shape.
+//! Threading: submitters push into a lock-free [`IngestQueue`] (one CAS
+//! per submission, drained with one atomic swap) and ring a dispatcher
+//! thread that owns batching and feeds per-device worker threads over
+//! MPSC channels; each worker builds its backend on its own thread via
+//! the configured factory (the PJRT C handles are not `Send`).
+//! Responses travel over per-request channels. This is the std-library
+//! analogue of the usual tokio actor shape. Overload protection is
+//! opt-in: [`Coordinator::try_submit`] applies the configured
+//! [`crate::admission::AdmissionPolicy`] to the live in-flight depth
+//! and returns an explicit [`BackpressureError`] instead of queueing
+//! unboundedly (rejections land in [`ServiceStats::n_rejected`]).
 //!
 //! *When* a window closes is decided by a pluggable
 //! [`crate::online::WindowPolicy`] (shared with the online streaming
@@ -47,12 +53,14 @@
 //! ```
 
 mod clock;
+mod ingest;
 mod service;
 mod stats;
 
 pub use clock::{BatchClock, ManualClock, SystemClock};
+pub use ingest::IngestQueue;
 pub use service::{
-    BackendFactory, BatchReport, Coordinator, CoordinatorBuilder, LaunchHandle, LaunchRequest,
-    LaunchResponse,
+    BackendFactory, BackpressureError, BatchReport, Coordinator, CoordinatorBuilder, LaunchHandle,
+    LaunchRequest, LaunchResponse,
 };
 pub use stats::{LATENCY_SAMPLE_CAP, ServiceStats};

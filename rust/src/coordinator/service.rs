@@ -4,12 +4,33 @@
 //! Thread shape:
 //!
 //! ```text
-//! submitters --MPSC--> dispatcher (batching via WindowPolicy + BatchClock)
+//! submitters --lock-free ingest, MPSC doorbell--> dispatcher
+//!                          |  (batching via WindowPolicy + BatchClock)
 //!                          |  RoutePolicy over live per-device queue depths
 //!                          +--> device worker 0 (own ExecutionBackend)
 //!                          +--> device worker 1
 //!                          +--> …
 //! ```
+//!
+//! Submissions land in a lock-free [`IngestQueue`] (push is one CAS, no
+//! lock shared with other submitters) and ring the dispatcher with a
+//! doorbell message. The dispatcher drains the queue with a single
+//! atomic swap per wake-up but feeds entries into the reorder window
+//! **one at a time**, re-running the window decision between entries —
+//! so batching decisions are byte-for-byte what they were when requests
+//! traveled through the channel directly (the frozen-clock determinism
+//! tests pin this).
+//!
+//! Overload protection: [`Coordinator::try_submit`] consults the
+//! configured [`crate::admission::AdmissionPolicy`]
+//! ([`CoordinatorBuilder::admission`]) against the live in-flight depth
+//! and returns an explicit [`BackpressureError`] instead of queueing
+//! unboundedly; [`Coordinator::submit`] never rejects. On the live path
+//! only the depth signal is available (sojourn prediction needs the
+//! virtual-clock engines), so `bound:<q>` is the load-bearing policy
+//! here and `deadline`/`codel` degrade to admitting — the documented
+//! last rung of the degradation ladder (reorder → FIFO → shed) stays
+//! honest: rejections are counted in [`ServiceStats::n_rejected`].
 //!
 //! The dispatcher owns batching only; each *device worker* owns a backend
 //! instance built on its own thread by the configured factory (the PJRT
@@ -38,19 +59,23 @@
 //! instead observe a disconnect error from their handle.
 
 use super::clock::{BatchClock, SystemClock};
+use super::ingest::IngestQueue;
 use super::stats::ServiceStats;
+use crate::admission::{AdmissionPolicy, AdmissionState, NoAdmission};
 use crate::exec::{ExecutionBackend, SimulatorBackend};
 use crate::fleet::{
     parse_route_policy, DeviceLoad, FleetView, Health, RoundRobin, RouteParseError, RoutePolicy,
 };
 use crate::gpu::{GpuSpec, KernelProfile};
 use crate::online::{LingerWindow, WindowDecision, WindowPolicy, WindowState};
+use crate::registry::ParseError;
 use crate::sched::{registry, Algorithm1Policy, LaunchPolicy, PolicyParseError};
 use crate::sim;
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -160,6 +185,7 @@ pub struct CoordinatorBuilder {
     window_policy: Option<Box<dyn WindowPolicy>>,
     route: Box<dyn RoutePolicy>,
     clock: Arc<dyn BatchClock>,
+    admission: Box<dyn AdmissionPolicy>,
 }
 
 impl Default for CoordinatorBuilder {
@@ -174,6 +200,7 @@ impl Default for CoordinatorBuilder {
             window_policy: None,
             route: Box::new(RoundRobin::default()),
             clock: Arc::new(SystemClock),
+            admission: Box::new(NoAdmission),
         }
     }
 }
@@ -308,14 +335,43 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Admission policy consulted by [`Coordinator::try_submit`]
+    /// (default [`NoAdmission`], which admits everything). The live
+    /// path exposes only the in-flight depth to the policy —
+    /// `bound:<q>` is the load-bearing spelling here; `deadline` and
+    /// `codel` degrade to admitting (their signals need the
+    /// virtual-clock engines).
+    pub fn admission(mut self, admission: Box<dyn AdmissionPolicy>) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    /// Admission policy by registry spelling (`"none"`, `"bound:<q>"`,
+    /// `"deadline:<slo_ms>"`, `"codel:<target_ms>:<interval_ms>"`).
+    pub fn admission_named(self, name: &str) -> Result<Self, ParseError> {
+        let a = crate::registry::parse_admission(name)?;
+        Ok(self.admission(a))
+    }
+
     /// Start the service.
-    pub fn start(self) -> Coordinator {
+    pub fn start(mut self) -> Coordinator {
         let (tx, rx) = channel::<Msg>();
         let clock = Arc::clone(&self.clock);
-        let dispatcher = std::thread::spawn(move || dispatcher_loop(self, rx));
+        let t0 = clock.now();
+        let ingest: Arc<IngestQueue<Submission>> = Arc::new(IngestQueue::new());
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let admission = std::mem::replace(&mut self.admission, Box::new(NoAdmission));
+        let d_ingest = Arc::clone(&ingest);
+        let d_in_flight = Arc::clone(&in_flight);
+        let dispatcher = std::thread::spawn(move || dispatcher_loop(self, rx, d_ingest, d_in_flight));
         Coordinator {
             tx,
             clock,
+            t0,
+            ingest,
+            admission: Mutex::new(admission),
+            in_flight,
+            rejected: AtomicU64::new(0),
             dispatcher: Some(dispatcher),
         }
     }
@@ -325,18 +381,55 @@ impl CoordinatorBuilder {
 // Service
 // ---------------------------------------------------------------------------
 
+/// One queued submission: the request, its reply channel, and the
+/// batch-clock submission timestamp.
+type Submission = (LaunchRequest, Sender<LaunchResponse>, Instant);
+
 enum Msg {
-    Launch(LaunchRequest, Sender<LaunchResponse>, Instant),
+    /// Doorbell: the ingest queue has (or had) new entries.
+    Ingest,
     /// Close the current batch immediately.
     Flush,
     Shutdown,
 }
+
+/// Explicit backpressure: the admission policy refused the launch.
+/// Carries the policy's canonical spelling and the in-flight depth it
+/// judged, so callers can log, retry later, or shed load themselves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackpressureError {
+    /// Canonical spelling of the policy that rejected (e.g. `bound:8`).
+    pub policy: String,
+    /// Requests submitted but not yet answered at decision time.
+    pub depth: usize,
+}
+
+impl fmt::Display for BackpressureError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "admission policy `{}` rejected the launch ({} requests in flight)",
+            self.policy, self.depth
+        )
+    }
+}
+
+impl std::error::Error for BackpressureError {}
 
 /// The coordinator service. See module docs; construct with
 /// [`CoordinatorBuilder`].
 pub struct Coordinator {
     tx: Sender<Msg>,
     clock: Arc<dyn BatchClock>,
+    /// Service birth per the batch clock (admission `now_ms` origin).
+    t0: Instant,
+    ingest: Arc<IngestQueue<Submission>>,
+    admission: Mutex<Box<dyn AdmissionPolicy>>,
+    /// Requests submitted (past admission) and not yet answered.
+    in_flight: Arc<AtomicUsize>,
+    /// Requests refused by `try_submit`; folded into
+    /// [`ServiceStats::n_rejected`] at shutdown.
+    rejected: AtomicU64,
     dispatcher: Option<JoinHandle<(Vec<BatchReport>, ServiceStats)>>,
 }
 
@@ -346,12 +439,53 @@ impl Coordinator {
         CoordinatorBuilder::new()
     }
 
-    /// Submit a launch; returns a handle resolving to its response.
+    /// Submit a launch unconditionally; returns a handle resolving to
+    /// its response. The push is lock-free; the doorbell send only
+    /// wakes the dispatcher.
     pub fn submit(&self, req: LaunchRequest) -> LaunchHandle {
         let (tx, rx) = channel();
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.ingest.push((req, tx, self.clock.now()));
         // Dispatcher outlives all submissions (it only exits on Shutdown).
-        let _ = self.tx.send(Msg::Launch(req, tx, self.clock.now()));
+        let _ = self.tx.send(Msg::Ingest);
         LaunchHandle { rx }
+    }
+
+    /// Submit a launch through the admission gate: the configured
+    /// policy sees the live in-flight depth and either admits (the
+    /// request proceeds exactly as [`Coordinator::submit`]) or refuses
+    /// with an explicit [`BackpressureError`] — the caller is never
+    /// blocked and the queue never grows past what the policy allows.
+    ///
+    /// Only the depth signal exists on the live path:
+    /// `oldest_wait_ms` is 0 and `predicted_sojourn_ms` is NaN, so
+    /// `deadline`/`codel` degrade to admitting while `bound:<q>`
+    /// enforces a hard occupancy cap. Refusals are counted in
+    /// [`ServiceStats::n_rejected`].
+    pub fn try_submit(&self, req: LaunchRequest) -> Result<LaunchHandle, BackpressureError> {
+        let depth = self.in_flight.load(Ordering::Acquire);
+        // A poisoned lock means a panicked submitter, not corrupt
+        // policy state (admit() has no invariants to break mid-call).
+        let mut policy = self.admission.lock().unwrap_or_else(|e| e.into_inner());
+        let admit = policy.is_noop() || {
+            let now_ms =
+                self.clock.now().saturating_duration_since(self.t0).as_secs_f64() * 1e3;
+            policy.admit(&AdmissionState {
+                now_ms,
+                queue_depth: depth,
+                oldest_wait_ms: 0.0,
+                predicted_sojourn_ms: f64::NAN,
+            })
+        };
+        if !admit {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(BackpressureError {
+                policy: policy.name(),
+                depth,
+            });
+        }
+        drop(policy);
+        Ok(self.submit(req))
     }
 
     /// Force the current batch to close regardless of the window.
@@ -367,14 +501,18 @@ impl Coordinator {
     /// panic recorded in the stats.
     pub fn shutdown(mut self) -> (Vec<BatchReport>, ServiceStats) {
         let _ = self.tx.send(Msg::Shutdown);
-        match self.dispatcher.take().expect("shutdown called once").join() {
-            Ok(out) => out,
-            Err(payload) => {
-                let mut stats = ServiceStats::default();
-                stats.record_panic(format!("dispatcher panicked: {}", panic_message(&payload)));
-                (Vec::new(), stats)
-            }
-        }
+        let (reports, mut stats) =
+            match self.dispatcher.take().expect("shutdown called once").join() {
+                Ok(out) => out,
+                Err(payload) => {
+                    let mut stats = ServiceStats::default();
+                    stats
+                        .record_panic(format!("dispatcher panicked: {}", panic_message(&payload)));
+                    (Vec::new(), stats)
+                }
+            };
+        stats.n_rejected += self.rejected.load(Ordering::Relaxed);
+        (reports, stats)
     }
 }
 
@@ -412,12 +550,15 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// Batching loop: fills reorder windows per the window policy and
-/// routes complete batches across the device workers per the configured
-/// [`RoutePolicy`].
+/// Batching loop: drains the lock-free ingest queue, fills reorder
+/// windows per the window policy (one entry at a time, re-deciding
+/// between entries), and routes complete batches across the device
+/// workers per the configured [`RoutePolicy`].
 fn dispatcher_loop(
     cfg: CoordinatorBuilder,
     rx: Receiver<Msg>,
+    ingest: Arc<IngestQueue<Submission>>,
+    in_flight: Arc<AtomicUsize>,
 ) -> (Vec<BatchReport>, ServiceStats) {
     // Spawn the device workers first; each builds its backend on its own
     // thread via the factory. The shared counters track batches handed
@@ -435,9 +576,10 @@ fn dispatcher_loop(
         let factory = Arc::clone(&cfg.backend);
         let clock = Arc::clone(&cfg.clock);
         let depths = Arc::clone(&depths);
+        let in_flight = Arc::clone(&in_flight);
         worker_txs.push(btx);
         worker_handles.push(std::thread::spawn(move || {
-            device_loop(device, gpu, policy, factory, clock, depths, brx)
+            device_loop(device, gpu, policy, factory, clock, depths, in_flight, brx)
         }));
     }
 
@@ -527,6 +669,12 @@ fn dispatcher_loop(
 
     let mut batch: Vec<Pending> = Vec::new();
     let mut oldest_ms = 0.0f64;
+    // Entries already swapped out of the ingest queue but not yet fed
+    // to the window. Feeding one per iteration (instead of dumping a
+    // whole drain into the batch) keeps the window policy's view
+    // identical to the one-message-at-a-time channel era: it re-decides
+    // between every pair of entries.
+    let mut inbox: std::collections::VecDeque<Pending> = std::collections::VecDeque::new();
     'outer: loop {
         // Let the window policy look at the open window first.
         let now = now_ms(&clock);
@@ -558,8 +706,33 @@ fn dispatcher_loop(
             }
         }
 
-        // Wait for the next message, bounded by the policy's recheck
-        // deadline when it gave one.
+        // Refill the inbox from the lock-free queue (one swap drains
+        // everything pushed so far), then feed exactly one entry into
+        // the window and loop back to re-decide.
+        if inbox.is_empty() {
+            for (r, tx, t) in ingest.pop_all() {
+                inbox.push_back(Pending {
+                    req: r,
+                    reply: tx,
+                    submitted: t,
+                    dispatched: t,
+                });
+            }
+        }
+        if let Some(p) = inbox.pop_front() {
+            if batch.is_empty() {
+                // The linger deadline anchors at the request's
+                // *submission* time, not its dequeue time, so ingest
+                // backlog counts against the latency bound (consistent
+                // with queue_ms).
+                oldest_ms = p.submitted.saturating_duration_since(t0).as_secs_f64() * 1e3;
+            }
+            batch.push(p);
+            continue;
+        }
+
+        // Inbox and ingest both empty: block on the doorbell, bounded
+        // by the policy's recheck deadline when it gave one.
         let msg = match recheck {
             None => match rx.recv() {
                 Ok(m) => m,
@@ -579,21 +752,8 @@ fn dispatcher_loop(
             }
         };
         match msg {
-            Msg::Launch(r, tx, t) => {
-                if batch.is_empty() {
-                    // The linger deadline anchors at the request's
-                    // *submission* time, not its dequeue time, so
-                    // channel backlog counts against the latency bound
-                    // (consistent with queue_ms).
-                    oldest_ms = t.saturating_duration_since(t0).as_secs_f64() * 1e3;
-                }
-                batch.push(Pending {
-                    req: r,
-                    reply: tx,
-                    submitted: t,
-                    dispatched: t,
-                });
-            }
+            // Woken: the next iteration's refill picks the entries up.
+            Msg::Ingest => {}
             Msg::Flush => {
                 if !batch.is_empty() {
                     dispatch(std::mem::take(&mut batch), batch_id);
@@ -604,19 +764,18 @@ fn dispatcher_loop(
         }
     }
 
-    // Drain: requests still in the channel at shutdown were submitted
-    // before it (same-sender ordering), so they are completed rather
+    // Drain: requests still in the inbox or the ingest queue at
+    // shutdown were submitted before it, so they are completed rather
     // than dropped. Custom window policies drain in `window`-sized
     // chunks.
-    while let Ok(msg) = rx.try_recv() {
-        if let Msg::Launch(r, tx, t) = msg {
-            batch.push(Pending {
-                req: r,
-                reply: tx,
-                submitted: t,
-                dispatched: t,
-            });
-        }
+    batch.extend(inbox);
+    for (r, tx, t) in ingest.pop_all() {
+        batch.push(Pending {
+            req: r,
+            reply: tx,
+            submitted: t,
+            dispatched: t,
+        });
     }
     while !batch.is_empty() {
         let rest = batch.split_off(cfg.window.min(batch.len()));
@@ -653,7 +812,9 @@ fn dispatcher_loop(
 /// One device worker: owns its backend (plus a simulator for the
 /// FIFO-vs-policy comparison) and processes batches until the queue
 /// closes, decrementing its shared depth counter as each batch
-/// finishes (the dispatcher's occupancy signal).
+/// finishes (the dispatcher's occupancy signal) and the service-wide
+/// in-flight counter as each request is answered (the admission gate's
+/// depth signal).
 #[allow(clippy::too_many_arguments)]
 fn device_loop(
     device: usize,
@@ -662,6 +823,7 @@ fn device_loop(
     factory: BackendFactory,
     clock: Arc<dyn BatchClock>,
     depths: Arc<Vec<AtomicUsize>>,
+    in_flight: Arc<AtomicUsize>,
     rx: Receiver<Batch>,
 ) -> (Vec<BatchReport>, ServiceStats) {
     // Backend construction failure (e.g. PJRT client unavailable) is not
@@ -691,6 +853,7 @@ fn device_loop(
             .iter()
             .map(|p| (p.req.id, p.reply.clone()))
             .collect();
+        let fallback_len = fallback.len();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             process_batch(
                 device,
@@ -738,6 +901,9 @@ fn device_loop(
             compare = SimulatorBackend::new();
         }
         depths[device].fetch_sub(1, Ordering::Relaxed);
+        // Every request in the batch has been answered (normally or via
+        // the panic sentinel): they are no longer in flight.
+        in_flight.fetch_sub(fallback_len, Ordering::AcqRel);
     }
     (reports, stats)
 }
@@ -1064,6 +1230,68 @@ mod tests {
     fn drop_without_shutdown_does_not_hang() {
         let c = sim_only(2);
         drop(c);
+    }
+
+    #[test]
+    fn try_submit_applies_backpressure_under_a_bound() {
+        // Frozen clock + never-expiring linger: admitted requests sit
+        // in the open window, so the in-flight depth each try_submit
+        // observes is fully deterministic (the depth increments
+        // synchronously on the submitter thread).
+        let c = CoordinatorBuilder::new()
+            .window(100)
+            .linger(Duration::from_secs(3600))
+            .clock(Arc::new(ManualClock::new()))
+            .admission_named("bound:2")
+            .unwrap()
+            .start();
+        let req = |id| LaunchRequest {
+            id,
+            profile: profile("k", 8, 2.0),
+            seed: 0,
+        };
+        let h0 = c.try_submit(req(0)).expect("first launch admitted");
+        let h1 = c.try_submit(req(1)).expect("second launch admitted");
+        let err = c.try_submit(req(2)).unwrap_err();
+        assert_eq!(err.policy, "bound:2");
+        assert_eq!(err.depth, 2);
+        assert!(err.to_string().contains("bound:2"), "{err}");
+        // Plain submit bypasses the gate (backpressure is opt-in).
+        let h3 = c.submit(req(3));
+        c.flush();
+        for h in [h0, h1, h3] {
+            h.wait_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let (reports, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 3);
+        assert_eq!(stats.n_rejected, 1);
+        assert_eq!(reports.iter().map(|r| r.n).sum::<usize>(), 3);
+        assert!(stats.summary().contains("1 rejected"), "{}", stats.summary());
+        assert!(CoordinatorBuilder::new().admission_named("blorp").is_err());
+    }
+
+    #[test]
+    fn try_submit_with_default_admission_never_rejects() {
+        // NoAdmission short-circuits (is_noop): the gate adds no lock
+        // contention and every launch is admitted.
+        let c = sim_only(4);
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                c.try_submit(LaunchRequest {
+                    id: i,
+                    profile: profile("k", 8, 2.0),
+                    seed: 0,
+                })
+                .expect("none admits everything")
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let (_, stats) = c.shutdown();
+        assert_eq!(stats.n_responses, 8);
+        assert_eq!(stats.n_rejected, 0);
+        assert!(!stats.summary().contains("rejected"));
     }
 
     #[test]

@@ -49,6 +49,11 @@ pub struct ServiceStats {
     pub total_exec_wall_ms: f64,
     /// Responses carrying a failed-execution sentinel.
     pub n_failures: usize,
+    /// Launches refused by the admission gate
+    /// ([`super::Coordinator::try_submit`] backpressure) — the last
+    /// rung of the degradation ladder. Folded in at shutdown; always 0
+    /// inside a single worker's stats.
+    pub n_rejected: u64,
     /// Panics caught inside device workers (or at worker join). Each
     /// one failed only its own in-flight batch — the service kept
     /// serving and `shutdown` completed normally.
@@ -130,6 +135,7 @@ impl ServiceStats {
         self.n_unsimulated += other.n_unsimulated;
         self.total_exec_wall_ms += other.total_exec_wall_ms;
         self.n_failures += other.n_failures;
+        self.n_rejected += other.n_rejected;
         self.n_worker_panics += other.n_worker_panics;
         self.panic_messages.extend(other.panic_messages.iter().cloned());
     }
@@ -218,6 +224,9 @@ impl ServiceStats {
             self.total_exec_wall_ms,
             self.n_failures,
         );
+        if self.n_rejected > 0 {
+            s.push_str(&format!(" | {} rejected (backpressure)", self.n_rejected));
+        }
         if self.n_worker_panics > 0 {
             s.push_str(&format!(
                 " | {} worker panics (last: {})",
@@ -328,10 +337,14 @@ mod tests {
         let mut a = ServiceStats::default();
         a.record_response(&resp(10.0, 1.0));
         a.record_batch(&batch(0, 1, 100.0, 50.0, 5.0));
+        a.n_rejected = 2;
         let mut b = ServiceStats::default();
         b.record_response(&resp(40.0, f64::NEG_INFINITY));
         b.record_batch(&batch(1, 1, 300.0, 150.0, 7.0));
+        b.n_rejected = 3;
         a.merge(&b);
+        assert_eq!(a.n_rejected, 5);
+        assert!(a.summary().contains("5 rejected"));
         assert_eq!(a.n_responses, 2);
         assert_eq!(a.n_batches, 2);
         assert_eq!(a.max_latency_ms, 40.0);

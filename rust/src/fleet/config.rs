@@ -1,14 +1,15 @@
 //! [`FleetSimConfig`] — the builder form of the fleet-simulation entry
 //! point.
 //!
-//! [`simulate_fleet_with_faults`](crate::fleet::simulate_fleet_with_faults)
-//! grew to eight positional arguments, five of which almost every caller
+//! [`simulate_fleet_with_admission`](crate::fleet::simulate_fleet_with_admission)
+//! grew to nine positional arguments, six of which almost every caller
 //! sets to the same defaults. This builder owns every piece, defaults
 //! the optional ones (round-robin routing, `fixed:8` windows, FIFO
 //! reordering, the simulator backend, default [`OnlineOpts`], no
-//! faults), and runs the *same* engine — a [`FleetSimConfig::run`] with
-//! every setter spelled out is argument-for-argument the positional
-//! call, so reports are bit-identical between the two forms.
+//! faults, no admission gate), and runs the *same* engine — a
+//! [`FleetSimConfig::run`] with every setter spelled out is
+//! argument-for-argument the positional call, so reports are
+//! bit-identical between the two forms.
 //!
 //! ```
 //! use kreorder::fleet::{FleetSimConfig, FleetSpec};
@@ -27,10 +28,11 @@
 //! assert_eq!(report.kernels.len(), 16);
 //! ```
 
+use crate::admission::{AdmissionPolicy, NoAdmission};
 use crate::exec::{ExecutionBackend, SimulatorBackend};
 use crate::fault::{FaultConfig, FaultPlan, RetryPolicy};
 use crate::fleet::{
-    parse_route_policy, simulate_fleet_with_faults, FleetReport, FleetSpec, RoutePolicy,
+    parse_route_policy, simulate_fleet_with_admission, FleetReport, FleetSpec, RoutePolicy,
 };
 use crate::online::{
     parse_window_policy, ArrivalSource, OnlineOpts, OnlineReorderer, WindowPolicy,
@@ -50,13 +52,14 @@ pub struct FleetSimConfig {
     make_backend: Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync>,
     opts: OnlineOpts,
     faults: FaultConfig,
+    admission: Box<dyn AdmissionPolicy>,
 }
 
 impl FleetSimConfig {
     /// A config with the given fleet and arrival stream and every other
     /// piece at its default: `roundrobin` routing, `fixed:8` windows,
     /// FIFO reordering, the simulator backend, default [`OnlineOpts`],
-    /// no faults.
+    /// no faults, no admission gate.
     pub fn new(fleet: FleetSpec, source: Box<dyn ArrivalSource>) -> FleetSimConfig {
         FleetSimConfig {
             fleet,
@@ -69,6 +72,7 @@ impl FleetSimConfig {
             make_backend: Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>),
             opts: OnlineOpts::default(),
             faults: FaultConfig::default(),
+            admission: Box::new(NoAdmission),
         }
     }
 
@@ -142,20 +146,49 @@ impl FleetSimConfig {
         self
     }
 
+    /// Set the admission policy gating arrivals (default
+    /// [`NoAdmission`], a strict engine no-op).
+    pub fn admission(mut self, admission: Box<dyn AdmissionPolicy>) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    /// Set the admission policy by registry spelling (`"none"`,
+    /// `"bound:<q>"`, `"deadline:<slo_ms>"`,
+    /// `"codel:<target_ms>:<interval_ms>"`).
+    pub fn admission_named(self, spelling: &str) -> Result<Self, ParseError> {
+        let admission = crate::registry::parse_admission(spelling)?;
+        Ok(self.admission(admission))
+    }
+
     /// Run the simulation — exactly
-    /// [`simulate_fleet_with_faults`](crate::fleet::simulate_fleet_with_faults)
+    /// [`simulate_fleet_with_admission`](crate::fleet::simulate_fleet_with_admission)
     /// with this config's pieces in positional order, so the two forms
-    /// produce bit-identical reports.
+    /// produce bit-identical reports (and, under the default
+    /// [`NoAdmission`], bit-identical to
+    /// [`simulate_fleet_with_faults`](crate::fleet::simulate_fleet_with_faults)).
     pub fn run(self) -> FleetReport {
-        simulate_fleet_with_faults(
-            &self.fleet,
-            self.source,
-            self.route,
-            self.make_window.as_ref(),
-            &self.reorderer,
-            self.make_backend.as_ref(),
-            &self.opts,
-            &self.faults,
+        let FleetSimConfig {
+            fleet,
+            source,
+            route,
+            make_window,
+            reorderer,
+            make_backend,
+            opts,
+            faults,
+            mut admission,
+        } = self;
+        simulate_fleet_with_admission(
+            &fleet,
+            source,
+            route,
+            make_window.as_ref(),
+            &reorderer,
+            make_backend.as_ref(),
+            &opts,
+            &faults,
+            admission.as_mut(),
         )
     }
 }
@@ -226,5 +259,23 @@ mod tests {
             .window_named("blorp")
             .unwrap_err();
         assert_eq!(err.kind, "window");
+        let err = FleetSimConfig::new(FleetSpec::homogeneous(1), source(4, 1))
+            .admission_named("blorp")
+            .unwrap_err();
+        assert_eq!(err.kind, "admission");
+    }
+
+    #[test]
+    fn admission_named_gates_arrivals_and_conserves() {
+        let r = FleetSimConfig::new(FleetSpec::homogeneous(1), source(30, 5))
+            .admission_named("bound:2")
+            .unwrap()
+            .run();
+        assert_eq!(r.admission, "bound:2");
+        assert_eq!(r.kernels.len() + r.shed.len(), 30);
+        // The default config is ungated.
+        let ungated = FleetSimConfig::new(FleetSpec::homogeneous(1), source(30, 5)).run();
+        assert_eq!(ungated.admission, "none");
+        assert!(ungated.shed.is_empty());
     }
 }

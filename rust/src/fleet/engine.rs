@@ -32,7 +32,9 @@
 //! 3. **completion** — a kernel's model finish time passed;
 //! 4. **batch start** — a device is free and a closed window's decision
 //!    overhead has elapsed (device ties break toward the lowest index);
-//! 5. **arrival** — the source's next kernel enters the router;
+//! 5. **arrival** — the source's next kernel enters the router (under
+//!    [`simulate_fleet_with_admission`] this is where the admission
+//!    gate admits or sheds it, before any routing state is touched);
 //! 6. **retry** — a failed launch's backoff elapsed; the kernel
 //!    re-enters the router;
 //! 7. **recheck** — some device's [`WindowPolicy`] `Wait` deadline
@@ -46,9 +48,10 @@
 //! order — reorder effort is wasted on a device that is already late —
 //! and the report counts every such degraded decision.
 
-use super::report::{FleetBatchRecord, FleetKernelRecord, FleetReport, ShedRecord};
+use super::report::{FleetBatchRecord, FleetKernelRecord, FleetReport, ShedCause, ShedRecord};
 use super::route::{DeviceLoad, FleetView, Health, RoutePolicy};
 use super::spec::FleetSpec;
+use crate::admission::{AdmissionPolicy, AdmissionState, NoAdmission};
 use crate::exec::ExecutionBackend;
 use crate::fault::{FaultAction, FaultConfig, FaultPlan};
 use crate::gpu::{GpuSpec, KernelProfile};
@@ -240,10 +243,10 @@ pub fn simulate_fleet(
 /// [`simulate_fleet`] with a [`FaultConfig`] threaded through the loop.
 ///
 /// **Prefer [`crate::fleet::FleetSimConfig`]** for new call sites: the
-/// builder names each of these eight positional arguments, defaults the
-/// common ones, and runs this exact function — bit-identical reports.
-/// The positional form stays for existing callers and for the builder
-/// itself; it is not going away, but it is no longer the front door.
+/// builder names each positional argument, defaults the common ones,
+/// and runs this exact engine — bit-identical reports. The positional
+/// form stays for existing callers and for the builder itself; it is
+/// not going away, but it is no longer the front door.
 ///
 /// The no-kernel-lost invariant (`tests/fault_recovery.rs`): every
 /// arrival ends as exactly one of a completed kernel record, or a
@@ -260,6 +263,46 @@ pub fn simulate_fleet(
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_fleet_with_faults(
     fleet: &FleetSpec,
+    source: Box<dyn ArrivalSource>,
+    route: Box<dyn RoutePolicy>,
+    make_window: &dyn Fn() -> Box<dyn WindowPolicy>,
+    reorderer: &OnlineReorderer,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    opts: &OnlineOpts,
+    faults: &FaultConfig,
+) -> FleetReport {
+    let mut none = NoAdmission;
+    simulate_fleet_with_admission(
+        fleet,
+        source,
+        route,
+        make_window,
+        reorderer,
+        make_backend,
+        opts,
+        faults,
+        &mut none,
+    )
+}
+
+/// [`simulate_fleet_with_faults`] with an [`AdmissionPolicy`] gating
+/// arrivals at the virtual clock. A rejected arrival never reaches the
+/// router: it becomes a first-class [`ShedRecord`] with a
+/// [`ShedCause::Rejected`] cause and its source is notified
+/// (`on_completion`) so closed-loop clients never starve. Retries and
+/// crash orphans were already admitted and are **not** re-gated. The
+/// extended conservation invariant (`tests/overload_protection.rs`) is
+/// `kernels.len() + shed.len() == arrivals`.
+///
+/// When the policy [`is_noop`](AdmissionPolicy::is_noop) (the `none`
+/// spelling) the entire gate is skipped — no occupancy snapshot, no
+/// backlog pricing, no float arithmetic — so `none` runs are
+/// **bit-identical** to [`simulate_fleet_with_faults`]. `deadline`
+/// pricing reuses the same admissible `price_backlog` seam as `lrw`
+/// routing, taken over the best currently-up device.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet_with_admission(
+    fleet: &FleetSpec,
     mut source: Box<dyn ArrivalSource>,
     mut route: Box<dyn RoutePolicy>,
     make_window: &dyn Fn() -> Box<dyn WindowPolicy>,
@@ -267,6 +310,7 @@ pub fn simulate_fleet_with_faults(
     make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
     opts: &OnlineOpts,
     faults: &FaultConfig,
+    admission: &mut dyn AdmissionPolicy,
 ) -> FleetReport {
     assert!(!fleet.devices.is_empty(), "simulate_fleet needs at least one device");
     faults
@@ -296,6 +340,9 @@ pub fn simulate_fleet_with_faults(
     let window_name = devs[0].window.name();
     let backend_name = devs[0].backend.name().to_string();
     let needs_pricing = route.needs_pricing();
+    let admission_name = admission.name();
+    let gate_active = !admission.is_noop();
+    let admission_pricing = gate_active && admission.needs_pricing();
     let decision_ms_per_eval = if opts.decision_ms_per_eval.is_finite() {
         opts.decision_ms_per_eval.max(0.0)
     } else {
@@ -474,7 +521,7 @@ pub fn simulate_fleet_with_faults(
                                     id: o.id,
                                     arrival_ms: o.arrival_ms,
                                     attempts: attempts.get(&o.id).copied().unwrap_or(1),
-                                    cause: format!("stranded on crashed device {d}"),
+                                    cause: ShedCause::Stranded { device: d },
                                 });
                                 // The kernel left the system: closed-loop
                                 // sources must not wait for it forever.
@@ -591,9 +638,7 @@ pub fn simulate_fleet_with_faults(
                                         id: a.id,
                                         arrival_ms: a.at_ms,
                                         attempts: *attempt,
-                                        cause: format!(
-                                            "launch failed {attempt} times (retry cap)"
-                                        ),
+                                        cause: ShedCause::RetryCap { attempts: *attempt },
                                     });
                                     source.on_completion(now, a.id);
                                 } else {
@@ -693,7 +738,66 @@ pub fn simulate_fleet_with_faults(
                     }
                     EV_ARRIVAL => {
                         let a = source.pop(now);
-                        to_route.push_back((now, a));
+                        // Admission gate: skipped entirely under `none`
+                        // (bit-identity), priced only when the policy
+                        // asks for it. Only fresh arrivals are gated —
+                        // retries and crash orphans were admitted once.
+                        let admit = if gate_active {
+                            let depth = to_route.len()
+                                + devs.iter().map(|d| d.outstanding).sum::<usize>();
+                            let mut oldest = f64::INFINITY;
+                            if let Some((_, front)) = to_route.front() {
+                                oldest = oldest.min(front.at_ms);
+                            }
+                            for dev in &devs {
+                                for m in &dev.pending {
+                                    oldest = oldest.min(m.arrival_ms);
+                                }
+                                for b in &dev.queue {
+                                    for m in &b.members {
+                                        oldest = oldest.min(m.arrival_ms);
+                                    }
+                                }
+                            }
+                            let oldest_wait_ms = if oldest.is_finite() {
+                                (now - oldest).max(0.0)
+                            } else {
+                                0.0
+                            };
+                            let predicted_sojourn_ms = if admission_pricing {
+                                // Admissible: the arrival waits at least
+                                // the best up device's priced backlog.
+                                devs.iter_mut()
+                                    .filter(|d| d.health != Health::Down)
+                                    .map(|d| price_backlog(d, now))
+                                    .fold(f64::INFINITY, f64::min)
+                            } else {
+                                f64::NAN
+                            };
+                            admission.admit(&AdmissionState {
+                                now_ms: now,
+                                queue_depth: depth,
+                                oldest_wait_ms,
+                                predicted_sojourn_ms,
+                            })
+                        } else {
+                            true
+                        };
+                        if admit {
+                            to_route.push_back((now, a));
+                        } else {
+                            shed.push(ShedRecord {
+                                id: a.id,
+                                arrival_ms: a.at_ms,
+                                attempts: 0,
+                                cause: ShedCause::Rejected {
+                                    policy: admission_name.clone(),
+                                },
+                            });
+                            // The kernel left the system: closed-loop
+                            // sources must not wait for it forever.
+                            source.on_completion(now, a.id);
+                        }
                     }
                     EV_RETRY => {
                         let Reverse((_, id)) = retry_q.pop().expect("peeked");
@@ -715,6 +819,7 @@ pub fn simulate_fleet_with_faults(
         window: window_name,
         reorderer: reorderer.name(),
         backend: backend_name,
+        admission: admission_name,
         kernels,
         batches,
         span_ms,
@@ -920,8 +1025,49 @@ mod tests {
         // are shed at drain, with a cause — the conservation invariant.
         assert_eq!(r.kernels.len() + r.shed.len(), 24);
         assert!(!r.shed.is_empty());
-        assert!(r.shed.iter().all(|s| s.cause.contains("crashed device 0")), "{:?}", r.shed);
+        assert!(
+            r.shed
+                .iter()
+                .all(|s| s.cause.to_string().contains("crashed device 0")),
+            "{:?}",
+            r.shed
+        );
         assert!(r.kernels.iter().all(|k| k.device == 1 || k.finish_ms <= 5.0 + 1e-9));
+    }
+
+    #[test]
+    fn admission_gate_sheds_with_rejected_cause_and_conserves() {
+        let gpu = GpuSpec::gtx580();
+        let fleet = FleetSpec::homogeneous(2);
+        let trace = Trace::poisson("uniform", 40, 3000.0, 7);
+        let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+        let mut adm = crate::admission::parse_admission_policy("bound:4").unwrap();
+        let r = simulate_fleet_with_admission(
+            &fleet,
+            source,
+            parse_route_policy("jsq").unwrap(),
+            &|| parse_window_policy("linger:6:30").unwrap(),
+            &OnlineReorderer::fifo(),
+            sim().as_ref(),
+            &OnlineOpts::default(),
+            &FaultConfig::default(),
+            adm.as_mut(),
+        );
+        assert_eq!(r.kernels.len() + r.shed.len(), 40);
+        assert!(!r.shed.is_empty(), "a 4-deep bound under burst load must shed");
+        assert!(r
+            .shed
+            .iter()
+            .all(|s| matches!(s.cause, ShedCause::Rejected { .. }) && s.attempts == 0));
+        assert_eq!(r.admission, "bound:4");
+        let mut ids: Vec<u64> = r
+            .kernels
+            .iter()
+            .map(|k| k.id)
+            .chain(r.shed.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
     }
 
     #[test]

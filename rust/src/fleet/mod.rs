@@ -22,8 +22,9 @@
 //!   speed factors (`--devices 1,1,0.5`).
 //! * [`FleetSimConfig`] — the preferred builder form of the simulation
 //!   entry point: owns every piece, defaults the common ones, and runs
-//!   the same engine bit-identically. The eight-positional-argument
-//!   [`simulate_fleet_with_faults`] stays as the thin underlying call.
+//!   the same engine bit-identically. The positional
+//!   [`simulate_fleet_with_admission`] stays as the thin underlying
+//!   call.
 //! * [`simulate_fleet`] — the deterministic discrete-event loop over D
 //!   devices (fault < routing decision < completion < batch start <
 //!   arrival < retry < recheck at equal times); bit-identical replay
@@ -32,6 +33,12 @@
 //!   orphan a device's backlog back to the router, [`Health`] lets the
 //!   load-aware policies route around dead devices, failed launches
 //!   retry with seeded backoff and are shed past the cap — never lost.
+//!   [`simulate_fleet_with_admission`] puts an
+//!   [`crate::admission::AdmissionPolicy`] gate in front of the router:
+//!   under overload, arrivals the policy rejects become first-class
+//!   [`ShedRecord`]s with a [`ShedCause::Rejected`] cause — the last
+//!   rung of the degradation ladder (reorder → FIFO → shed) — and
+//!   `admission=none` is a strict bit-identical no-op.
 //! * [`FleetReport`] — per-kernel timestamps with device provenance,
 //!   per-device utilization/imbalance, fleet percentile rollups, and
 //!   the fault ledger ([`ShedRecord`], reroute/degradation counters).
@@ -52,9 +59,11 @@ pub mod route;
 pub mod spec;
 
 pub use config::FleetSimConfig;
-pub use engine::{simulate_fleet, simulate_fleet_with_faults};
+pub use engine::{simulate_fleet, simulate_fleet_with_admission, simulate_fleet_with_faults};
 pub use oracle::fleet_lower_bound;
-pub use report::{p99_speedup, FleetBatchRecord, FleetKernelRecord, FleetReport, ShedRecord};
+pub use report::{
+    p99_speedup, FleetBatchRecord, FleetKernelRecord, FleetReport, ShedCause, ShedRecord,
+};
 pub use route::{
     parse_route_policy, route_policy_help_table, Affinity, Circuit, DeviceLoad, FleetView, Health,
     Jsq, Lrw, P2c, RoundRobin, RouteParseError, RoutePolicy,

@@ -5,6 +5,10 @@
 
 use crate::metrics::mean;
 use crate::online::report::LatencyStats;
+// Shed reporting is unified with the online engine: one `ShedCause`
+// enum (Display + stable CSV spelling) serves both paths, so
+// `--record` traces round-trip shed/rejected rows identically.
+pub use crate::online::report::{ShedCause, ShedRecord};
 
 /// One kernel's complete fleet timeline: arrive → route → window close
 /// → batch start → finish, all in virtual ms, plus where it ran.
@@ -40,21 +44,6 @@ pub struct FleetBatchRecord {
     pub order: Vec<usize>,
 }
 
-/// A kernel that left the system unserved — retry cap exhausted, or
-/// stranded on a crashed device at drain. Always carries a cause: the
-/// no-kernel-lost invariant (`tests/fault_recovery.rs`) is that every
-/// arrival is a kernel record or a shed record, never neither.
-#[derive(Debug, Clone, PartialEq)]
-pub struct ShedRecord {
-    pub id: u64,
-    pub arrival_ms: f64,
-    /// Launch attempts spent before shedding (1 when launch never failed
-    /// — e.g. stranded on a dead device).
-    pub attempts: u32,
-    /// Human-readable reason the kernel was shed.
-    pub cause: String,
-}
-
 /// Everything [`crate::fleet::simulate_fleet`] measured, kernels sorted
 /// by id.
 #[derive(Debug, Clone)]
@@ -64,6 +53,9 @@ pub struct FleetReport {
     pub window: String,
     pub reorderer: String,
     pub backend: String,
+    /// Admission-policy spelling that gated arrivals (`"none"` when the
+    /// run was ungated).
+    pub admission: String,
     pub kernels: Vec<FleetKernelRecord>,
     pub batches: Vec<FleetBatchRecord>,
     /// Latest finish time across the fleet (0 for an empty run).
@@ -81,7 +73,8 @@ pub struct FleetReport {
     pub n_launch_failures: u64,
     /// Fault events the plan injected (crash/recover/slowdown).
     pub n_fault_events: usize,
-    /// Kernels shed with a cause (sorted by id). Empty without faults.
+    /// Kernels shed with a cause (sorted by id) — faults *or* admission
+    /// rejections. Empty without faults under `admission=none`.
     pub shed: Vec<ShedRecord>,
 }
 
@@ -292,6 +285,7 @@ mod tests {
             window: "fixed:1".into(),
             reorderer: "fifo".into(),
             backend: "sim".into(),
+            admission: "none".into(),
             kernels,
             batches: Vec::new(),
             span_ms: span,
@@ -353,7 +347,7 @@ mod tests {
             id: 9,
             arrival_ms: 3.0,
             attempts: 4,
-            cause: "launch failed 4 times (retry cap)".into(),
+            cause: ShedCause::RetryCap { attempts: 4 },
         });
         let s = faulty.summary();
         assert!(s.contains("faults"), "{s}");

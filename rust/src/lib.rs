@@ -230,6 +230,40 @@
 //!   [`coordinator::ServiceStats`]), and its queue re-routes to live
 //!   workers instead of poisoning shutdown.
 //!
+//! ## Overload protection: admission control and the degradation ladder
+//!
+//! Fault tolerance handles a *broken* fleet; the [`admission`] module
+//! handles a *drowning* one — offered load beyond what reordering can
+//! absorb. Degradation is an explicit three-rung ladder, each rung
+//! counted, never silent:
+//!
+//! 1. **budgeted reorder** — the normal regime: windows close, search
+//!    runs under its budget;
+//! 2. **FIFO passthrough** — decisions that cannot beat FIFO in budget
+//!    fall back and are counted (`n_degraded_decisions`);
+//! 3. **admission shed** — an [`admission::AdmissionPolicy`] gate in
+//!    front of the queue refuses arrivals outright: `bound:<q>` (hard
+//!    occupancy cap), `deadline:<slo_ms>` (shed when the admissible
+//!    [`exec::PreparedWorkload::suffix_lower_bound`]-priced sojourn
+//!    predicts an SLO violation), `codel:<target>:<interval>` (CoDel:
+//!    drop only *standing* queues). Rejections are first-class
+//!    [`online::ShedRecord`]s with [`online::ShedCause::Rejected`]
+//!    (closed-loop sources are notified, so they never starve), and
+//!    `admitted + rejected + shed == arrivals` holds everywhere
+//!    (`tests/overload_protection.rs`).
+//!
+//! All three layers share the gate: [`online::simulate_online_with_admission`]
+//! and [`fleet::simulate_fleet_with_admission`] gate arrivals at the
+//! virtual clock (with `admission=none` a strict bit-identical no-op),
+//! and the live [`coordinator`] ingests submissions through a lock-free
+//! [`coordinator::IngestQueue`] whose in-flight depth feeds
+//! [`coordinator::Coordinator::try_submit`] — explicit
+//! [`coordinator::BackpressureError`]s instead of unbounded queueing.
+//! `benches/overload.rs` drives 1.5x and 3x overload and hard-gates
+//! conservation, deadline-admitted p99 ≤ SLO at sustained goodput, and
+//! the `none`-vs-`bound` queue-growth pathology into
+//! `BENCH_overload.json`.
+//!
 //! ## Migration: the fleet entry point and the unified registries
 //!
 //! Two API consolidations, both backward compatible:
@@ -243,9 +277,9 @@
 //!   new call sites should use the builder: defaults for the five
 //!   pieces almost everyone leaves alone, named setters for the rest,
 //!   and uniform [`registry::ParseError`]s from the `*_named` setters.
-//! * [`registry`] is the uniform front door over the six string
+//! * [`registry`] is the uniform front door over the seven string
 //!   registries (policy / strategy / route / window / arrivals /
-//!   fault-plan): one [`registry::ParseError`] carrying the kind, the
+//!   fault-plan / admission): one [`registry::ParseError`] carrying the kind, the
 //!   echoed input and that kind's cheat sheet, plus
 //!   [`registry::kinds`] / [`registry::list`] backing the
 //!   `kreorder list [--kind <k>]` subcommand. The per-subsystem
@@ -276,6 +310,7 @@
 //! | [`online`] | streaming scheduler: arrival processes, [`online::WindowPolicy`], virtual-clock engine, latency SLOs |
 //! | [`fleet`] | multi-device dispatch: [`fleet::RoutePolicy`] registry, heterogeneous [`fleet::FleetSpec`], fleet-scale virtual-clock engine |
 //! | [`fault`] | deterministic fault injection: [`fault::FaultPlan`] (crash / slowdown / launch-failure scripts), seeded [`fault::RetryPolicy`], recovery accounting |
+//! | [`admission`] | overload protection: [`admission::AdmissionPolicy`] registry (`bound` / `deadline` / `codel`), shed accounting, coordinator backpressure |
 //! | [`profile`] | artifact profile loading (the "CUDA profiler" stand-in) |
 //! | `runtime` | PJRT execution of AOT-compiled HLO kernels (feature `pjrt`) |
 //! | [`coordinator`] | [`coordinator::CoordinatorBuilder`]: batching + reordering + multi-device dispatch |
@@ -370,6 +405,7 @@
 //! assert_eq!(report.outcomes.len(), kernels.len());
 //! ```
 
+pub mod admission;
 pub mod coordinator;
 pub mod exec;
 pub mod fault;

@@ -100,15 +100,19 @@ COMMANDS:
                                        run the launch coordinator service
   serve --arrivals PROC [--count N] [--scenario FAMILY] [--window WP]
         [--strategy S|fifo] [--budget EVALS] [--deps SPEC-OR-FILE]
-        [--decision-cost MS] [--slo MS] [--oracle] [--record FILE] [--backend B]
+        [--decision-cost MS] [--slo MS] [--admission P] [--oracle]
+        [--record FILE] [--backend B]
                                        ONLINE mode: deterministic virtual-clock run of
                                        the streaming scheduler (arrivals PROC = e.g.
                                        poisson:<rate>:<seed>; window WP = e.g.
-                                       linger:8:50; see `kreorder serve --list-online`)
+                                       linger:8:50; see `kreorder serve --list-online`;
+                                       admission P = none|bound:<q>|deadline:<slo_ms>|
+                                       codel:<target_ms>:<interval_ms> sheds arrivals
+                                       at the door under overload)
   fleet [--devices SPEC] [--route POLICY] [--count N] [--scenario FAMILY]
         [--arrivals PROC] [--window WP] [--strategy S|fifo] [--budget EVALS]
-        [--decision-cost MS] [--backend B] [--record FILE] [--replay FILE]
-        [--compare-roundrobin] [--oracle]
+        [--decision-cost MS] [--admission P] [--backend B] [--record FILE]
+        [--replay FILE] [--compare-roundrobin] [--oracle]
                                        multi-device online scheduling: arrivals routed
                                        over a (possibly heterogeneous) fleet, each
                                        device its own reorder window (--devices SPEC =
@@ -117,7 +121,7 @@ COMMANDS:
   fault (--plan SPEC-OR-FILE | --gen-faults N) [--fault-seed S] [--horizon MS]
         [--retries N] [--devices SPEC] [--route POLICY] [--count N]
         [--scenario FAMILY] [--arrivals PROC] [--window WP] [--strategy S|fifo]
-        [--budget EVALS] [--decision-cost MS] [--backend B]
+        [--budget EVALS] [--decision-cost MS] [--admission P] [--backend B]
         [--compare-nofault] [--list-faults]
                                        fleet run under a deterministic fault plan:
                                        device crashes/recoveries, slowdowns, seeded
@@ -125,7 +129,8 @@ COMMANDS:
                                        (see `kreorder fault --list-faults`)
   ablate [--exp ID] [--backend B]      score-component ablation
   list [--kind K]                      list every string registry (policy, strategy,
-                                       route, window, arrivals, fault-plan) or one kind;
+                                       route, window, arrivals, fault-plan, admission)
+                                       or one kind;
                                        consolidates the per-command --list flags, which
                                        remain as aliases
   policies                             list the launch-policy registry
@@ -138,6 +143,7 @@ STRATEGIES & SCENARIOS: `kreorder search --list`
 ARRIVALS & WINDOW POLICIES: `kreorder serve --list-online`
 ROUTE POLICIES & DEVICE SPECS: `kreorder fleet --list-routes`
 FAULT PLANS: `kreorder fault --list-faults`
+ADMISSION POLICIES: `kreorder list --kind admission`
 BACKENDS: sim (fluid simulator, default), analytic (round model){}",
         if cfg!(feature = "pjrt") {
             ", pjrt (serve only)"
@@ -738,8 +744,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 /// policy): two runs print bit-identical latency numbers.
 fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
     use kreorder::online::{
-        offline_oracle, parse_window_policy, simulate_online, ArrivalSource, ArrivalSpec,
-        ClosedLoopSource, OnlineOpts, OnlineReorderer, ReplaySource, Trace,
+        offline_oracle, parse_window_policy, shed_csv, simulate_online_with_admission,
+        ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts, OnlineReorderer, ReplaySource,
+        Trace,
     };
     use kreorder::workloads::scenario_by_id;
 
@@ -752,6 +759,12 @@ fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
     let decision_cost: f64 =
         opt(args, "--decision-cost").map_or(0.0, |s| s.parse().unwrap_or(0.0));
     let slo_ms: Option<f64> = opt(args, "--slo").and_then(|s| s.parse().ok());
+    // Overload protection at the door. `none` (the default) is a strict
+    // no-op: the run bit-matches the ungated engine.
+    let mut admission = kreorder::registry::parse_admission(
+        opt(args, "--admission").unwrap_or("none"),
+    )
+    .map_err(anyhow::Error::from)?;
 
     let spec = ArrivalSpec::parse(arrivals).map_err(anyhow::Error::from)?;
     let family = scenario_by_id(family_name)
@@ -812,16 +825,29 @@ fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
     };
 
     println!(
-        "online: arrivals={} scenario={} window={} reorderer={} backend={} decision-cost={}",
+        "online: arrivals={} scenario={} window={} reorderer={} backend={} decision-cost={} \
+         admission={}",
         spec.name(),
         family.id,
         window.name(),
         reorderer.name(),
         opt(args, "--backend").unwrap_or("sim"),
-        decision_cost
+        decision_cost,
+        admission.name(),
     );
-    let report = simulate_online(&gpu, source, window, &reorderer, make_backend.as_ref(), &opts);
+    let report = simulate_online_with_admission(
+        &gpu,
+        source,
+        window,
+        &reorderer,
+        make_backend.as_ref(),
+        &opts,
+        admission.as_mut(),
+    );
     println!("{}", report.summary());
+    for s in &report.shed {
+        println!("  shed kernel {} (arrived {:.2} ms): {}", s.id, s.arrival_ms, s.cause);
+    }
 
     // Distribution panel at histogram resolution.
     let hist = report.sojourn_histogram(64);
@@ -868,7 +894,15 @@ fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
         let recorded = match trace {
             Some(t) => t,
             None => {
-                let times: Vec<f64> = report.kernels.iter().map(|k| k.arrival_ms).collect();
+                // Shed arrivals are arrivals too: the replayed schedule
+                // must offer the same load the closed loop realized.
+                let mut times: Vec<f64> = report
+                    .kernels
+                    .iter()
+                    .map(|k| k.arrival_ms)
+                    .chain(report.shed.iter().map(|s| s.arrival_ms))
+                    .collect();
+                times.sort_by(|a, b| a.total_cmp(b));
                 Trace {
                     family: family.id.to_string(),
                     n: times.len(),
@@ -878,7 +912,12 @@ fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
                 }
             }
         };
-        std::fs::write(path, recorded.to_csv())?;
+        // The shed ledger rides along as `#` comment rows (ignored by
+        // `Trace::parse`), so a recorded overload run keeps its full
+        // conservation story on disk.
+        let mut csv = recorded.to_csv();
+        csv.push_str(&shed_csv(&report.shed));
+        std::fs::write(path, csv)?;
         eprintln!("recorded trace -> {path} (replay with --arrivals replay:{path})");
     }
     Ok(())
@@ -910,12 +949,13 @@ fn load_fleet_trace(
 /// (arrival seed, route policy, window policy, strategy seed): two runs
 /// print bit-identical numbers.
 fn cmd_fleet(args: &[String]) -> Result<()> {
+    use kreorder::fault::FaultConfig;
     use kreorder::fleet::{
         fleet_lower_bound, p99_speedup, parse_route_policy, route_policy_help_table,
-        simulate_fleet, FleetSpec,
+        simulate_fleet_with_admission, FleetSpec,
     };
     use kreorder::online::{
-        parse_window_policy, ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts,
+        parse_window_policy, shed_csv, ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts,
         OnlineReorderer, ReplaySource, Trace,
     };
     use kreorder::workloads::scenario_by_id;
@@ -941,6 +981,11 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
     let budget: u64 = opt(args, "--budget").map_or(256, |s| s.parse().unwrap_or(256));
     let decision_cost: f64 =
         opt(args, "--decision-cost").map_or(0.0, |s| s.parse().unwrap_or(0.0));
+    // Overload protection at the door; re-parsed per run because the
+    // policy is stateful (CoDel) and the baseline must start fresh.
+    let admission_spec = opt(args, "--admission").unwrap_or("none");
+    let make_admission = || kreorder::registry::parse_admission(admission_spec);
+    make_admission().map_err(anyhow::Error::from)?;
 
     let family = scenario_by_id(family_name)
         .with_context(|| format!("unknown scenario family `{family_name}`"))?;
@@ -998,15 +1043,17 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
     };
 
     println!(
-        "fleet: devices={} route={} window={} reorderer={} backend={} decision-cost={}",
+        "fleet: devices={} route={} window={} reorderer={} backend={} decision-cost={} \
+         admission={}",
         fleet.name(),
         route_spec,
         window_spec,
         reorderer.name(),
         opt(args, "--backend").unwrap_or("sim"),
-        decision_cost
+        decision_cost,
+        admission_spec,
     );
-    let report = simulate_fleet(
+    let report = simulate_fleet_with_admission(
         &fleet,
         make_source()?,
         parse_route_policy(route_spec).map_err(anyhow::Error::from)?,
@@ -1014,8 +1061,13 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
         &reorderer,
         make_backend.as_ref(),
         &opts,
+        &FaultConfig::default(),
+        make_admission().expect("validated above").as_mut(),
     );
     println!("{}", report.summary());
+    for s in &report.shed {
+        println!("  shed kernel {} (arrived {:.2} ms): {}", s.id, s.arrival_ms, s.cause);
+    }
 
     if flag(args, "--oracle") {
         // The clairvoyant fleet baseline: every kernel at t=0, perfectly
@@ -1035,7 +1087,7 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
     }
 
     if flag(args, "--compare-roundrobin") {
-        let rr = simulate_fleet(
+        let rr = simulate_fleet_with_admission(
             &fleet,
             make_source()?,
             parse_route_policy("roundrobin").map_err(anyhow::Error::from)?,
@@ -1043,6 +1095,8 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
             &reorderer,
             make_backend.as_ref(),
             &opts,
+            &FaultConfig::default(),
+            make_admission().expect("validated above").as_mut(),
         );
         println!(
             "  roundrobin baseline: p99 {:.2} ms vs routed p99 {:.2} ms | speedup {:.3}x",
@@ -1057,16 +1111,31 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
         // size so replay onto a smaller fleet is rejected.
         let recorded = match &trace {
             Some(t) => t.clone(),
-            None => Trace {
-                family: family.id.to_string(),
-                n: report.kernels.len(),
-                seed: closed.map(|(_, _, s)| s).unwrap_or(0),
-                devices: 1,
-                times_ms: report.kernels.iter().map(|k| k.arrival_ms).collect(),
-            },
+            None => {
+                // Shed arrivals are arrivals too: replay must offer the
+                // same load the closed loop realized.
+                let mut times: Vec<f64> = report
+                    .kernels
+                    .iter()
+                    .map(|k| k.arrival_ms)
+                    .chain(report.shed.iter().map(|s| s.arrival_ms))
+                    .collect();
+                times.sort_by(|a, b| a.total_cmp(b));
+                Trace {
+                    family: family.id.to_string(),
+                    n: times.len(),
+                    seed: closed.map(|(_, _, s)| s).unwrap_or(0),
+                    devices: 1,
+                    times_ms: times,
+                }
+            }
         }
         .with_devices(fleet.len());
-        std::fs::write(path, recorded.to_csv())?;
+        // Keep the shed ledger with the schedule (comment rows are
+        // ignored on replay).
+        let mut csv = recorded.to_csv();
+        csv.push_str(&shed_csv(&report.shed));
+        std::fs::write(path, csv)?;
         eprintln!("recorded fleet trace -> {path} (replay with --replay {path})");
     }
     Ok(())
@@ -1083,9 +1152,7 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
 /// runs print bit-identical numbers, including the fault ledger.
 fn cmd_fault(args: &[String]) -> Result<()> {
     use kreorder::fault::{fault_plan_help_table, FaultConfig, FaultPlan, RetryPolicy};
-    use kreorder::fleet::{
-        parse_route_policy, simulate_fleet, simulate_fleet_with_faults, FleetSpec,
-    };
+    use kreorder::fleet::{parse_route_policy, simulate_fleet_with_admission, FleetSpec};
     use kreorder::online::{
         parse_window_policy, ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts,
         OnlineReorderer, ReplaySource, Trace,
@@ -1100,6 +1167,7 @@ fn cmd_fault(args: &[String]) -> Result<()> {
         println!("--gen-faults N draws a plan from the seeded generator instead.");
         println!("\nroute policies (--route): see `kreorder fleet --list-routes`");
         println!("window policies (--window): see `kreorder serve --list-online`");
+        println!("admission policies (--admission): see `kreorder list --kind admission`");
         return Ok(());
     }
 
@@ -1140,6 +1208,14 @@ fn cmd_fault(args: &[String]) -> Result<()> {
     let budget: u64 = opt(args, "--budget").map_or(256, |s| s.parse().unwrap_or(256));
     let decision_cost: f64 =
         opt(args, "--decision-cost").map_or(0.0, |s| s.parse().unwrap_or(0.0));
+    // Overload protection composes with faults: admission sheds at the
+    // door, faults shed in flight, and every arrival still lands in
+    // exactly one ledger. Re-parsed per run (CoDel is stateful) so
+    // `--compare-nofault` holds admission constant and varies only the
+    // fault plan.
+    let admission_spec = opt(args, "--admission").unwrap_or("none");
+    let make_admission = || kreorder::registry::parse_admission(admission_spec);
+    make_admission().map_err(anyhow::Error::from)?;
 
     let family = scenario_by_id(family_name)
         .with_context(|| format!("unknown scenario family `{family_name}`"))?;
@@ -1187,7 +1263,8 @@ fn cmd_fault(args: &[String]) -> Result<()> {
     };
 
     println!(
-        "fault: devices={} route={} plan={} retries={} window={} reorderer={} backend={}",
+        "fault: devices={} route={} plan={} retries={} window={} reorderer={} backend={} \
+         admission={}",
         fleet.name(),
         route_spec,
         faults.plan.name(),
@@ -1195,8 +1272,9 @@ fn cmd_fault(args: &[String]) -> Result<()> {
         window_spec,
         reorderer.name(),
         opt(args, "--backend").unwrap_or("sim"),
+        admission_spec,
     );
-    let report = simulate_fleet_with_faults(
+    let report = simulate_fleet_with_admission(
         &fleet,
         make_source()?,
         parse_route_policy(route_spec).map_err(anyhow::Error::from)?,
@@ -1205,6 +1283,7 @@ fn cmd_fault(args: &[String]) -> Result<()> {
         make_backend.as_ref(),
         &opts,
         &faults,
+        make_admission().expect("validated above").as_mut(),
     );
     println!("{}", report.summary());
     for s in &report.shed {
@@ -1215,9 +1294,10 @@ fn cmd_fault(args: &[String]) -> Result<()> {
     }
 
     if flag(args, "--compare-nofault") {
-        // The identical arrival schedule through the identical router,
-        // with the fault plan removed: isolates what the faults cost.
-        let clean = simulate_fleet(
+        // The identical arrival schedule through the identical router
+        // and admission gate, with the fault plan removed: isolates
+        // what the faults cost.
+        let clean = simulate_fleet_with_admission(
             &fleet,
             make_source()?,
             parse_route_policy(route_spec).map_err(anyhow::Error::from)?,
@@ -1225,16 +1305,19 @@ fn cmd_fault(args: &[String]) -> Result<()> {
             &reorderer,
             make_backend.as_ref(),
             &opts,
+            &FaultConfig::default(),
+            make_admission().expect("validated above").as_mut(),
         );
         let faulted_p99 = report.sojourn_stats().p99_ms;
         let clean_p99 = clean.sojourn_stats().p99_ms;
         println!(
             "  no-fault baseline: p99 {:.2} ms vs faulted p99 {:.2} ms | \
-             degradation {:.3}x | completion rate {:.4} vs 1.0000",
+             degradation {:.3}x | completion rate {:.4} vs {:.4}",
             clean_p99,
             faulted_p99,
             faulted_p99 / clean_p99.max(f64::MIN_POSITIVE),
             report.completion_rate(),
+            clean.completion_rate(),
         );
     }
     Ok(())

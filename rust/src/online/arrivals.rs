@@ -214,7 +214,11 @@ impl Trace {
         let mut prev = 0.0f64;
         for line in lines {
             let line = line.trim();
-            if line.is_empty() {
+            // Tolerate `#`-prefixed annotation rows after the header —
+            // `--record` appends `# shed …` rows (see
+            // [`crate::online::shed_csv`]) so a recorded overload run
+            // still replays through the arrival rows alone.
+            if line.is_empty() || line.starts_with('#') {
                 continue;
             }
             let t: f64 = line
@@ -600,6 +604,20 @@ mod tests {
         assert_eq!(parsed.n, t.n);
         assert_eq!(parsed.seed, t.seed);
         assert_eq!(parsed.times_ms.len(), t.times_ms.len());
+        for (a, b) in parsed.times_ms.iter().zip(&t.times_ms) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn trace_parse_skips_comment_rows_after_the_header() {
+        // `--record` appends `# shed …` annotation rows; replay must
+        // read the arrival rows straight past them.
+        let t = Trace::poisson("uniform", 3, 200.0, 5);
+        let mut csv = t.to_csv();
+        csv.push_str("# shed 7 1.00000000000000000e2 0 rejected:bound:4\n");
+        let parsed = Trace::parse(&csv).unwrap();
+        assert_eq!(parsed.times_ms.len(), 3);
         for (a, b) in parsed.times_ms.iter().zip(&t.times_ms) {
             assert_eq!(a.to_bits(), b.to_bits());
         }

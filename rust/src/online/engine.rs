@@ -25,9 +25,10 @@
 //! timing model the offline layers use, now coupled to a clock.
 
 use super::arrivals::ArrivalSource;
-use super::report::{BatchRecord, KernelRecord, OnlineReport};
+use super::report::{BatchRecord, KernelRecord, OnlineReport, ShedCause, ShedRecord};
 use super::window::{WindowDecision, WindowPolicy, WindowState};
 use super::OnlineReorderer;
+use crate::admission::{AdmissionPolicy, AdmissionState, NoAdmission};
 use crate::exec::ExecutionBackend;
 use crate::gpu::{GpuSpec, KernelProfile};
 use std::cmp::Reverse;
@@ -91,16 +92,45 @@ const EV_RECHECK: u8 = 3;
 
 /// Run the online scheduler over one arrival stream. See the module docs
 /// for the event model; the returned [`OnlineReport`] carries every
-/// per-kernel timestamp.
+/// per-kernel timestamp. Equivalent to
+/// [`simulate_online_with_admission`] under the `none` policy
+/// (bit-identical — pinned in `tests/overload_protection.rs`).
 pub fn simulate_online(
+    gpu: &GpuSpec,
+    source: Box<dyn ArrivalSource>,
+    window: Box<dyn WindowPolicy>,
+    reorderer: &OnlineReorderer,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    opts: &OnlineOpts,
+) -> OnlineReport {
+    let mut none = NoAdmission;
+    simulate_online_with_admission(gpu, source, window, reorderer, make_backend, opts, &mut none)
+}
+
+/// [`simulate_online`] with an [`AdmissionPolicy`] gating arrivals at
+/// the virtual clock. A rejected arrival never enters the open window:
+/// it becomes a first-class [`ShedRecord`] with a
+/// [`ShedCause::Rejected`] cause and its source is notified
+/// (`on_completion`) so closed-loop clients never starve. The extended
+/// conservation invariant is `kernels.len() + shed.len() == arrivals`.
+///
+/// When the policy [`is_noop`](AdmissionPolicy::is_noop) (the `none`
+/// spelling) the entire gate is skipped — no occupancy snapshot, no
+/// backlog pricing, no float arithmetic — so `none` runs are
+/// **bit-identical** to [`simulate_online`].
+pub fn simulate_online_with_admission(
     gpu: &GpuSpec,
     mut source: Box<dyn ArrivalSource>,
     mut window: Box<dyn WindowPolicy>,
     reorderer: &OnlineReorderer,
     make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
     opts: &OnlineOpts,
+    admission: &mut dyn AdmissionPolicy,
 ) -> OnlineReport {
     let mut backend = make_backend();
+    let admission_name = admission.name();
+    let gate_active = !admission.is_noop();
+    let admission_pricing = gate_active && admission.needs_pricing();
     let source_name = source.name();
     let window_name = window.name();
     // A negative decision cost would move batch-ready times before their
@@ -126,6 +156,7 @@ pub fn simulate_online(
     let mut n_unsimulable = 0usize;
     let mut n_degraded_decisions = 0u64;
     let mut n_shed_kernels = 0usize;
+    let mut shed: Vec<ShedRecord> = Vec::new();
 
     loop {
         // Ask the policy about the open window. Closing never advances
@@ -239,11 +270,77 @@ pub fn simulate_online(
                         }
                         EV_ARRIVAL => {
                             let a = source.pop(now);
-                            pending.push(Open {
-                                id: a.id,
-                                arrival_ms: a.at_ms,
-                                profile: a.profile,
-                            });
+                            // Admission gate: skipped entirely under
+                            // `none` (bit-identity), priced only when
+                            // the policy asks for it.
+                            let admit = if gate_active {
+                                let queued: usize =
+                                    queue.iter().map(|b| b.members.len()).sum();
+                                let depth = pending.len() + queued + completions.len();
+                                let mut oldest = f64::INFINITY;
+                                for m in &pending {
+                                    oldest = oldest.min(m.arrival_ms);
+                                }
+                                for b in &queue {
+                                    for m in &b.members {
+                                        oldest = oldest.min(m.arrival_ms);
+                                    }
+                                }
+                                let oldest_wait_ms = if oldest.is_finite() {
+                                    (now - oldest).max(0.0)
+                                } else {
+                                    0.0
+                                };
+                                let predicted_sojourn_ms = if admission_pricing {
+                                    // Admissible lower bound on this
+                                    // arrival's sojourn: residual busy
+                                    // time + the backend's suffix bound
+                                    // over the backlog plus the arrival
+                                    // itself (mirrors the fleet engine's
+                                    // `price_backlog`).
+                                    let residual = (device_free_at - now).max(0.0);
+                                    let mut profiles: Vec<KernelProfile> =
+                                        pending.iter().map(|m| m.profile.clone()).collect();
+                                    for b in &queue {
+                                        profiles
+                                            .extend(b.members.iter().map(|m| m.profile.clone()));
+                                    }
+                                    profiles.push(a.profile.clone());
+                                    let all: Vec<usize> = (0..profiles.len()).collect();
+                                    let mut prepared = backend.prepare(gpu, &profiles);
+                                    let lb = prepared.suffix_lower_bound(&all);
+                                    residual + if lb.is_finite() { lb.max(0.0) } else { 0.0 }
+                                } else {
+                                    f64::NAN
+                                };
+                                admission.admit(&AdmissionState {
+                                    now_ms: now,
+                                    queue_depth: depth,
+                                    oldest_wait_ms,
+                                    predicted_sojourn_ms,
+                                })
+                            } else {
+                                true
+                            };
+                            if admit {
+                                pending.push(Open {
+                                    id: a.id,
+                                    arrival_ms: a.at_ms,
+                                    profile: a.profile,
+                                });
+                            } else {
+                                shed.push(ShedRecord {
+                                    id: a.id,
+                                    arrival_ms: a.at_ms,
+                                    attempts: 0,
+                                    cause: ShedCause::Rejected {
+                                        policy: admission_name.clone(),
+                                    },
+                                });
+                                // The kernel left the system: closed-loop
+                                // sources must not wait for it forever.
+                                source.on_completion(now, a.id);
+                            }
                         }
                         _ => {} // EV_RECHECK: the policy re-decides above
                     }
@@ -274,11 +371,13 @@ pub fn simulate_online(
 
     let span_ms = kernels.iter().map(|k| k.finish_ms).fold(0.0, f64::max);
     kernels.sort_by_key(|k| k.id);
+    shed.sort_by_key(|s| s.id);
     OnlineReport {
         source: source_name,
         window: window_name,
         reorderer: reorderer.name(),
         backend: backend.name().to_string(),
+        admission: admission_name,
         kernels,
         batches,
         span_ms,
@@ -287,6 +386,7 @@ pub fn simulate_online(
         n_unsimulable,
         n_degraded_decisions,
         n_shed_kernels,
+        shed,
     }
 }
 
@@ -418,6 +518,63 @@ mod tests {
         let last_arrival = r.kernels.iter().map(|k| k.arrival_ms).fold(0.0, f64::max);
         let first_finish = r.kernels.iter().map(|k| k.finish_ms).fold(f64::INFINITY, f64::min);
         assert!(last_arrival > first_finish);
+    }
+
+    #[test]
+    fn bound_admission_sheds_overload_and_conserves_arrivals() {
+        let gpu = GpuSpec::gtx580();
+        let trace = Trace::poisson("uniform", 24, 2000.0, 7);
+        let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+        let w = parse_window_policy("linger:6:30").unwrap();
+        let mut adm = crate::admission::parse_admission_policy("bound:2").unwrap();
+        let r = simulate_online_with_admission(
+            &gpu,
+            source,
+            w,
+            &OnlineReorderer::fifo(),
+            sim().as_ref(),
+            &OnlineOpts::default(),
+            adm.as_mut(),
+        );
+        // Conservation: every arrival is served or shed, never neither.
+        assert_eq!(r.kernels.len() + r.shed.len(), 24);
+        assert!(!r.shed.is_empty(), "a 2-deep bound under burst load must shed");
+        let mut ids: Vec<u64> = r
+            .kernels
+            .iter()
+            .map(|k| k.id)
+            .chain(r.shed.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<_>>());
+        assert_eq!(r.admission, "bound:2");
+        for s in &r.shed {
+            assert_eq!(s.attempts, 0);
+            assert!(s.cause.to_string().contains("bound:2"), "{:?}", s.cause);
+        }
+    }
+
+    #[test]
+    fn closed_loop_sources_survive_admission_rejections() {
+        // A rejected kernel must still notify its closed-loop client,
+        // or the client would wait forever and the run would wedge.
+        let gpu = GpuSpec::gtx580();
+        let fam = scenario_by_id("uniform").unwrap();
+        let source = Box::new(crate::online::ClosedLoopSource::new(fam, &gpu, 12, 3, 1.0, 9));
+        let w = parse_window_policy("fixed:1").unwrap();
+        let mut adm = crate::admission::parse_admission_policy("bound:1").unwrap();
+        let r = simulate_online_with_admission(
+            &gpu,
+            source,
+            w,
+            &OnlineReorderer::fifo(),
+            sim().as_ref(),
+            &OnlineOpts::default(),
+            adm.as_mut(),
+        );
+        // All 12 issued submissions are accounted for.
+        assert_eq!(r.kernels.len() + r.shed.len(), 12);
+        assert!(!r.kernels.is_empty());
     }
 
     #[test]

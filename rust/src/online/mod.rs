@@ -79,11 +79,13 @@ pub use arrivals::{
     arrival_help_table, Arrival, ArrivalParseError, ArrivalSource, ArrivalSpec, ClosedLoopSource,
     ReplaySource, Trace, TraceParseError,
 };
-pub use engine::{simulate_online, OnlineOpts};
+pub use engine::{simulate_online, simulate_online_with_admission, OnlineOpts};
 pub use oracle::{
     fifo_window_capacity_per_s, offline_oracle, OracleOutcome, ORACLE_EXACT_MAX_N,
 };
-pub use report::{BatchRecord, KernelRecord, LatencyStats, OnlineReport};
+pub use report::{
+    shed_csv, BatchRecord, KernelRecord, LatencyStats, OnlineReport, ShedCause, ShedRecord,
+};
 pub use window::{
     parse_window_policy, window_policy_help_table, AdaptiveWindow, FixedWindow, LingerWindow,
     WindowDecision, WindowParseError, WindowPolicy, WindowState,

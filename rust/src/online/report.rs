@@ -16,6 +16,96 @@
 //! exposes the full distribution through [`crate::metrics::Histogram`].
 
 use crate::metrics::{mean, percentile, Histogram};
+use std::fmt;
+
+/// Why a kernel left the system unserved. One enum serves both the
+/// online and fleet engines so `--record` traces round-trip
+/// shed/rejected rows identically on both paths: [`fmt::Display`] is
+/// the human spelling the CLI prints, [`ShedCause::to_csv`] /
+/// [`ShedCause::parse_csv`] the stable machine spelling embedded in
+/// recorded traces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShedCause {
+    /// Stranded on a crashed device at drain (fleet engine).
+    Stranded { device: usize },
+    /// Launch retry cap exhausted under a `launchfail` process.
+    RetryCap { attempts: u32 },
+    /// Rejected at the door by an admission policy (never entered the
+    /// system; the last rung of the degradation ladder).
+    Rejected { policy: String },
+}
+
+impl ShedCause {
+    /// Stable machine spelling for recorded traces
+    /// (`stranded:<dev>` | `retry-cap:<attempts>` | `rejected:<policy>`).
+    pub fn to_csv(&self) -> String {
+        match self {
+            ShedCause::Stranded { device } => format!("stranded:{device}"),
+            ShedCause::RetryCap { attempts } => format!("retry-cap:{attempts}"),
+            ShedCause::Rejected { policy } => format!("rejected:{policy}"),
+        }
+    }
+
+    /// Inverse of [`to_csv`](ShedCause::to_csv).
+    pub fn parse_csv(s: &str) -> Option<ShedCause> {
+        let (head, rest) = s.split_once(':')?;
+        match head {
+            "stranded" => Some(ShedCause::Stranded { device: rest.parse().ok()? }),
+            "retry-cap" => Some(ShedCause::RetryCap { attempts: rest.parse().ok()? }),
+            "rejected" => Some(ShedCause::Rejected { policy: rest.to_string() }),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ShedCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShedCause::Stranded { device } => {
+                write!(f, "stranded on crashed device {device}")
+            }
+            ShedCause::RetryCap { attempts } => {
+                write!(f, "launch failed {attempts} times (retry cap)")
+            }
+            ShedCause::Rejected { policy } => {
+                write!(f, "rejected by admission policy `{policy}`")
+            }
+        }
+    }
+}
+
+/// A kernel that left the system unserved — rejected by admission,
+/// retry cap exhausted, or stranded on a crashed device at drain.
+/// Always carries a cause: the no-kernel-lost invariant
+/// (`tests/fault_recovery.rs`, `tests/overload_protection.rs`) is that
+/// every arrival is a kernel record or a shed record, never neither.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub arrival_ms: f64,
+    /// Launch attempts spent before shedding (1 when launch never failed
+    /// — e.g. stranded on a dead device; 0 when rejected at the door).
+    pub attempts: u32,
+    /// Why the kernel was shed.
+    pub cause: ShedCause,
+}
+
+/// Render shed records as `# shed` comment rows for `--record` traces
+/// (ignored by [`crate::online::Trace::parse`], stable across both the
+/// online and fleet paths). Empty string when nothing was shed.
+pub fn shed_csv(shed: &[ShedRecord]) -> String {
+    let mut s = String::new();
+    for r in shed {
+        s.push_str(&format!(
+            "# shed {} {:.17e} {} {}\n",
+            r.id,
+            r.arrival_ms,
+            r.attempts,
+            r.cause.to_csv()
+        ));
+    }
+    s
+}
 
 /// The four timestamps of one kernel's passage through the system.
 #[derive(Debug, Clone, PartialEq)]
@@ -95,6 +185,9 @@ pub struct OnlineReport {
     pub window: String,
     pub reorderer: String,
     pub backend: String,
+    /// Admission-policy spelling that gated arrivals (`"none"` when the
+    /// run was ungated).
+    pub admission: String,
     /// One record per kernel, sorted by arrival id.
     pub kernels: Vec<KernelRecord>,
     /// One record per dispatched window, in dispatch order.
@@ -116,6 +209,10 @@ pub struct OnlineReport {
     /// time): the single-device shed counter, surfaced by the CLI
     /// summary so degradation is visible from `kreorder serve`.
     pub n_shed_kernels: usize,
+    /// Arrivals the admission policy rejected at the door (sorted by
+    /// id). Empty under `admission=none`. The extended conservation
+    /// invariant is `kernels.len() + shed.len() == arrivals`.
+    pub shed: Vec<ShedRecord>,
 }
 
 impl OnlineReport {
@@ -179,6 +276,17 @@ impl OnlineReport {
         }
     }
 
+    /// Fraction of arrivals that were admitted and completed (1.0 when
+    /// nothing was rejected).
+    pub fn completion_rate(&self) -> f64 {
+        let total = self.kernels.len() + self.shed.len();
+        if total > 0 {
+            self.kernels.len() as f64 / total as f64
+        } else {
+            1.0
+        }
+    }
+
     /// Fraction of kernels whose sojourn met the SLO (1.0 for an empty
     /// run: no kernel violated it).
     pub fn slo_attainment(&self, slo_ms: f64) -> f64 {
@@ -216,6 +324,14 @@ impl OnlineReport {
                 self.n_degraded_decisions
             ));
         }
+        if !self.shed.is_empty() {
+            s.push_str(&format!(
+                "\n  admission: {} arrivals rejected ({}), completion rate {:.4}",
+                self.shed.len(),
+                self.admission,
+                self.completion_rate(),
+            ));
+        }
         if self.n_unsimulable > 0 {
             s.push_str(&format!(
                 "\n  WARNING: {} unsimulable batches, {} kernels shed (zero service)",
@@ -249,6 +365,7 @@ mod tests {
             window: "fixed:4".into(),
             reorderer: "fifo".into(),
             backend: "sim".into(),
+            admission: "none".into(),
             batches: vec![BatchRecord {
                 id: 0,
                 n: kernels.len(),
@@ -266,6 +383,7 @@ mod tests {
             n_unsimulable: 0,
             n_degraded_decisions: 0,
             n_shed_kernels: 0,
+            shed: Vec::new(),
         }
     }
 
@@ -358,5 +476,76 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("degraded: 3 decisions fell back to FIFO"), "{s}");
         assert!(s.contains("2 kernels shed"), "{s}");
+    }
+
+    #[test]
+    fn summary_surfaces_admission_rejections() {
+        let mut r = report(vec![record(0, 0.0, 0.0, 10.0)]);
+        assert!(!r.summary().contains("admission"), "{}", r.summary());
+        r.admission = "bound:4".into();
+        r.shed.push(ShedRecord {
+            id: 1,
+            arrival_ms: 2.0,
+            attempts: 0,
+            cause: ShedCause::Rejected { policy: "bound:4".into() },
+        });
+        let s = r.summary();
+        assert!(s.contains("1 arrivals rejected (bound:4)"), "{s}");
+        assert!((r.completion_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_cause_display_keeps_the_legacy_spellings() {
+        assert_eq!(
+            ShedCause::Stranded { device: 0 }.to_string(),
+            "stranded on crashed device 0"
+        );
+        assert_eq!(
+            ShedCause::RetryCap { attempts: 4 }.to_string(),
+            "launch failed 4 times (retry cap)"
+        );
+        assert_eq!(
+            ShedCause::Rejected { policy: "deadline:50".into() }.to_string(),
+            "rejected by admission policy `deadline:50`"
+        );
+    }
+
+    #[test]
+    fn shed_cause_csv_round_trips() {
+        for cause in [
+            ShedCause::Stranded { device: 3 },
+            ShedCause::RetryCap { attempts: 7 },
+            ShedCause::Rejected { policy: "codel:5:100".into() },
+        ] {
+            let csv = cause.to_csv();
+            assert_eq!(ShedCause::parse_csv(&csv), Some(cause.clone()), "{csv}");
+        }
+        assert_eq!(ShedCause::parse_csv("bogus:1"), None);
+        assert_eq!(ShedCause::parse_csv("stranded"), None);
+        assert_eq!(ShedCause::parse_csv("stranded:x"), None);
+    }
+
+    #[test]
+    fn shed_csv_rows_are_comments_with_the_stable_cause() {
+        let rows = shed_csv(&[
+            ShedRecord {
+                id: 4,
+                arrival_ms: 1.5,
+                attempts: 0,
+                cause: ShedCause::Rejected { policy: "bound:8".into() },
+            },
+            ShedRecord {
+                id: 9,
+                arrival_ms: 3.0,
+                attempts: 4,
+                cause: ShedCause::RetryCap { attempts: 4 },
+            },
+        ]);
+        for line in rows.lines() {
+            assert!(line.starts_with("# shed "), "{line}");
+        }
+        assert!(rows.contains("rejected:bound:8"), "{rows}");
+        assert!(rows.contains("retry-cap:4"), "{rows}");
+        assert!(shed_csv(&[]).is_empty());
     }
 }

@@ -1,19 +1,21 @@
 //! **The unified string-registry front door** — one module that knows
 //! every name-to-object spelling the crate accepts.
 //!
-//! Six subsystems grew six string registries, each with its own parse
-//! function, error type and help table: launch policies
+//! Seven subsystems grew seven string registries, each with its own
+//! parse function, error type and help table: launch policies
 //! ([`crate::sched::registry`]), search strategies
 //! ([`crate::search::parse_strategy`]), route policies
 //! ([`crate::fleet::parse_route_policy`]), window policies
 //! ([`crate::online::parse_window_policy`]), arrival processes
-//! ([`crate::online::ArrivalSpec::parse`]) and fault plans
-//! ([`crate::fault::FaultPlan::parse`]). They all still exist and are
-//! still the single sources of truth for their spellings — this module
-//! adds the *uniform* view on top:
+//! ([`crate::online::ArrivalSpec::parse`]), fault plans
+//! ([`crate::fault::FaultPlan::parse`]) and admission policies
+//! ([`crate::admission::parse_admission_policy`]). They all still exist
+//! and are still the single sources of truth for their spellings — this
+//! module adds the *uniform* view on top:
 //!
 //! * [`parse_policy`] / [`parse_strategy`] / [`parse_route`] /
-//!   [`parse_window`] / [`parse_arrivals`] / [`parse_fault_plan`] —
+//!   [`parse_window`] / [`parse_arrivals`] / [`parse_fault_plan`] /
+//!   [`parse_admission`] —
 //!   thin wrappers that convert every subsystem's error into one
 //!   [`ParseError`] carrying the registry kind, the echoed input, the
 //!   subsystem's own diagnostic, **and** that kind's cheat sheet of
@@ -29,6 +31,7 @@
 //! calling the subsystem parser directly; these wrappers are for
 //! boundaries where every failure is reported the same way.
 
+use crate::admission::{parse_admission_policy, AdmissionPolicy};
 use crate::fault::FaultPlan;
 use crate::fleet::{parse_route_policy, RoutePolicy};
 use crate::online::{parse_window_policy, ArrivalSpec, WindowPolicy};
@@ -45,6 +48,7 @@ pub const KINDS: &[&str] = &[
     "window",
     "arrivals",
     "fault-plan",
+    "admission",
 ];
 
 /// The registry kinds, for iteration ([`KINDS`] behind a function so
@@ -64,6 +68,7 @@ pub fn list(kind: &str) -> Option<String> {
         "window" => Some(crate::online::window_policy_help_table()),
         "arrivals" => Some(crate::online::arrival_help_table()),
         "fault-plan" => Some(crate::fault::fault_plan_help_table()),
+        "admission" => Some(crate::admission::admission_help_table()),
         _ => None,
     }
 }
@@ -142,6 +147,11 @@ pub fn parse_fault_plan(s: &str) -> Result<FaultPlan, ParseError> {
     FaultPlan::parse(s).map_err(|e| ParseError::new("fault-plan", s, e))
 }
 
+/// [`crate::admission::parse_admission_policy`] with the uniform error.
+pub fn parse_admission(s: &str) -> Result<Box<dyn AdmissionPolicy>, ParseError> {
+    parse_admission_policy(s).map_err(|e| ParseError::new("admission", s, e))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,17 +173,19 @@ mod tests {
         assert!(parse_window("linger:8:50").is_ok());
         assert!(parse_arrivals("poisson:80:1").is_ok());
         assert!(parse_fault_plan("crash:0@50:recover@200").is_ok());
+        assert!(parse_admission("deadline:50").is_ok());
     }
 
     #[test]
     fn uniform_errors_echo_input_kind_detail_and_cheatsheet() {
-        let cases: [(&str, ParseError); 6] = [
+        let cases: [(&str, ParseError); 7] = [
             ("policy", parse_policy("blorp").unwrap_err()),
             ("strategy", parse_strategy("blorp").unwrap_err()),
             ("route", parse_route("blorp").unwrap_err()),
             ("window", parse_window("blorp").unwrap_err()),
             ("arrivals", parse_arrivals("blorp:1:2").unwrap_err()),
             ("fault-plan", parse_fault_plan("blorp:1@2").unwrap_err()),
+            ("admission", parse_admission("blorp").unwrap_err()),
         ];
         for (kind, err) in cases {
             assert_eq!(err.kind, kind);
@@ -195,5 +207,6 @@ mod tests {
         assert!(list("window").unwrap().contains("linger"));
         assert!(list("arrivals").unwrap().contains("poisson"));
         assert!(list("fault-plan").unwrap().contains("crash"));
+        assert!(list("admission").unwrap().contains("deadline"));
     }
 }

@@ -14,6 +14,7 @@ use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
 use kreorder::fault::{FaultConfig, FaultPlan, RetryPolicy};
 use kreorder::fleet::{
     parse_route_policy, simulate_fleet, simulate_fleet_with_faults, FleetReport, FleetSpec,
+    ShedCause,
 };
 use kreorder::gpu::GpuSpec;
 use kreorder::online::{
@@ -107,7 +108,19 @@ fn no_kernel_is_lost_under_any_plan_on_either_backend() {
             assert_eq!(a.n_launch_failures, b.n_launch_failures);
             assert_eq!(a.n_degraded_decisions, b.n_degraded_decisions);
             for s in &a.shed {
-                assert!(!s.cause.is_empty(), "shed kernel {} has no cause", s.id);
+                // The cause is a typed enum now, so "has a cause" is
+                // structural; pin that its rendering stays actionable.
+                assert!(
+                    !s.cause.to_string().is_empty(),
+                    "shed kernel {} has a blank cause",
+                    s.id
+                );
+                // No admission gate runs here: faults are the only shedder.
+                assert!(
+                    !matches!(s.cause, ShedCause::Rejected { .. }),
+                    "fault run shed kernel {} with an admission cause",
+                    s.id
+                );
             }
         }
     }
@@ -266,7 +279,12 @@ fn launch_failures_retry_then_shed_at_the_attempt_cap() {
     assert_eq!(r.shed.len(), 16);
     for s in &r.shed {
         assert_eq!(s.attempts, 2, "kernel {} shed after {} attempts", s.id, s.attempts);
-        assert!(s.cause.contains("retry cap"), "cause: {}", s.cause);
+        assert!(
+            matches!(s.cause, ShedCause::RetryCap { attempts: 2 }),
+            "cause: {}",
+            s.cause
+        );
+        assert!(s.cause.to_string().contains("retry cap"), "cause: {}", s.cause);
     }
     assert_eq!(r.n_launch_failures, 32, "16 kernels x 2 attempts");
 

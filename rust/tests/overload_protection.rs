@@ -1,0 +1,278 @@
+//! Overload-protection invariants, property-sweep style.
+//!
+//! Two contracts, pinned across random overload traces, every admission
+//! policy kind, both model backends and both virtual-clock engines:
+//!
+//! 1. **Conservation** — every arrival is accounted exactly once:
+//!    `completed + shed == arrivals`, the completed and shed id sets
+//!    partition the arrival ids, and every shed record carries the
+//!    [`ShedCause::Rejected`] cause with `attempts == 0` (no faults run
+//!    here, so admission is the only shedder).
+//! 2. **`admission=none` is a strict no-op** — bit-identical reports to
+//!    the ungated engines, and a bound the trace can never reach
+//!    (`bound:1000000`) is *also* bit-identical: the gate observes the
+//!    queue, it never perturbs it.
+//!
+//! The "proptest" here is the crate's own seeded [`SplitMix64`] driving
+//! case generation — deterministic, dependency-free, and every failure
+//! message carries the case's full coordinates for replay.
+
+use kreorder::admission::{parse_admission_policy, NoAdmission};
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::fleet::{FleetSimConfig, FleetSpec};
+use kreorder::gpu::GpuSpec;
+use kreorder::online::{
+    parse_window_policy, simulate_online, simulate_online_with_admission, OnlineOpts,
+    OnlineReorderer, ReplaySource, ShedCause, Trace,
+};
+use kreorder::util::SplitMix64;
+
+const FAMILIES: [&str; 3] = ["uniform", "skewed", "mixed"];
+const POLICIES: [&str; 6] = [
+    "none",
+    "bound:1",
+    "bound:4",
+    "deadline:25",
+    "deadline:250",
+    "codel:10:80",
+];
+
+fn factory(analytic: bool) -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    if analytic {
+        Box::new(|| Box::new(AnalyticBackend::new()) as Box<dyn ExecutionBackend>)
+    } else {
+        Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>)
+    }
+}
+
+fn source(trace: &Trace) -> Box<ReplaySource> {
+    let gpu = GpuSpec::gtx580();
+    Box::new(ReplaySource::from_trace(trace, &gpu).expect("registry family"))
+}
+
+/// Assert the (completed, shed) id sets partition `0..count` and every
+/// shed record is a zero-attempt rejection.
+fn assert_conservation(
+    label: &str,
+    count: usize,
+    completed: impl Iterator<Item = u64>,
+    shed: &[kreorder::online::ShedRecord],
+) {
+    let mut ids: Vec<u64> = completed.chain(shed.iter().map(|s| s.id)).collect();
+    assert_eq!(ids.len(), count, "{label}: completed + shed != arrivals");
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), count, "{label}: duplicate ids across completed/shed");
+    assert_eq!(ids.first().copied(), Some(0).filter(|_| count > 0), "{label}");
+    for s in shed {
+        assert_eq!(s.attempts, 0, "{label}: rejected arrivals never attempted");
+        assert!(
+            matches!(s.cause, ShedCause::Rejected { .. }),
+            "{label}: unexpected shed cause {}",
+            s.cause
+        );
+    }
+}
+
+#[test]
+fn online_random_overload_conserves_across_policies_and_backends() {
+    let gpu = GpuSpec::gtx580();
+    let mut rng = SplitMix64::new(0xC0DE_2024);
+    for case in 0..24 {
+        let family = FAMILIES[(rng.next_u64() % FAMILIES.len() as u64) as usize];
+        let count = 12 + (rng.next_u64() % 28) as usize;
+        // Rates spanning mild to absurd overload for these tiny pools.
+        let rate = 200.0 + rng.next_f64() * 3800.0;
+        let seed = rng.next_u64();
+        let policy = POLICIES[(rng.next_u64() % POLICIES.len() as u64) as usize];
+        let analytic = rng.next_u64() % 2 == 0;
+        let label = format!(
+            "case {case}: {family} n={count} rate={rate:.1} seed={seed} {policy} analytic={analytic}"
+        );
+
+        let trace = Trace::poisson(family, count, rate, seed);
+        let mut admission = parse_admission_policy(policy).expect("sweep spelling");
+        let r = simulate_online_with_admission(
+            &gpu,
+            source(&trace),
+            parse_window_policy("linger:6:30").unwrap(),
+            &OnlineReorderer::fifo(),
+            factory(analytic).as_ref(),
+            &OnlineOpts::default(),
+            admission.as_mut(),
+        );
+        assert_eq!(r.admission, admission.name(), "{label}");
+        assert_conservation(&label, count, r.kernels.iter().map(|k| k.id), &r.shed);
+        if policy == "none" {
+            assert!(r.shed.is_empty(), "{label}: none must never shed");
+        }
+    }
+}
+
+#[test]
+fn fleet_random_overload_conserves_across_policies_and_backends() {
+    let mut rng = SplitMix64::new(0xF1EE_7001);
+    for case in 0..12 {
+        let devices = 1 + (rng.next_u64() % 3) as usize;
+        let family = FAMILIES[(rng.next_u64() % FAMILIES.len() as u64) as usize];
+        let count = 12 + (rng.next_u64() % 24) as usize;
+        let rate = 300.0 + rng.next_f64() * 3000.0;
+        let seed = rng.next_u64();
+        let policy = POLICIES[(rng.next_u64() % POLICIES.len() as u64) as usize];
+        let analytic = rng.next_u64() % 2 == 0;
+        let label = format!(
+            "case {case}: {devices}dev {family} n={count} rate={rate:.1} seed={seed} {policy} \
+             analytic={analytic}"
+        );
+
+        let trace = Trace::poisson(family, count, rate, seed);
+        let r = FleetSimConfig::new(FleetSpec::homogeneous(devices), source(&trace))
+            .route_named("jsq")
+            .unwrap()
+            .window_named("linger:6:30")
+            .unwrap()
+            .backend(factory(analytic))
+            .admission_named(policy)
+            .unwrap()
+            .run();
+        assert_conservation(&label, count, r.kernels.iter().map(|k| k.id), &r.shed);
+        if policy == "none" {
+            assert!(r.shed.is_empty(), "{label}: none must never shed");
+        }
+    }
+}
+
+#[test]
+fn admission_none_is_bit_identical_to_the_ungated_online_engine() {
+    let gpu = GpuSpec::gtx580();
+    for analytic in [false, true] {
+        let trace = Trace::poisson("mixed", 24, 900.0, 11);
+        let window = || parse_window_policy("linger:6:30").unwrap();
+        let reorderer = OnlineReorderer::search("local:0", 150).unwrap();
+        let base = simulate_online(
+            &gpu,
+            source(&trace),
+            window(),
+            &reorderer,
+            factory(analytic).as_ref(),
+            &OnlineOpts::default(),
+        );
+        let mut none = NoAdmission;
+        let gated = simulate_online_with_admission(
+            &gpu,
+            source(&trace),
+            window(),
+            &reorderer,
+            factory(analytic).as_ref(),
+            &OnlineOpts::default(),
+            &mut none,
+        );
+        // An unreachable bound runs the gate arithmetic on every
+        // arrival yet must not perturb a single bit: the gate observes.
+        let mut big = parse_admission_policy("bound:1000000").unwrap();
+        let bounded = simulate_online_with_admission(
+            &gpu,
+            source(&trace),
+            window(),
+            &reorderer,
+            factory(analytic).as_ref(),
+            &OnlineOpts::default(),
+            big.as_mut(),
+        );
+        for other in [&gated, &bounded] {
+            assert!(other.shed.is_empty(), "analytic={analytic}");
+            assert_eq!(base.kernels.len(), other.kernels.len());
+            assert_eq!(base.span_ms.to_bits(), other.span_ms.to_bits(), "analytic={analytic}");
+            for (a, b) in base.kernels.iter().zip(other.kernels.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.finish_ms.to_bits(), b.finish_ms.to_bits(), "analytic={analytic}");
+                assert_eq!(a.start_ms.to_bits(), b.start_ms.to_bits());
+                assert_eq!(a.batch, b.batch);
+                assert_eq!(a.position, b.position);
+            }
+        }
+        assert_eq!(gated.admission, "none");
+        assert_eq!(bounded.admission, "bound:1000000");
+    }
+}
+
+#[test]
+fn admission_none_is_bit_identical_to_the_ungated_fleet_engine() {
+    for analytic in [false, true] {
+        let trace = Trace::poisson("skewed", 30, 1200.0, 17);
+        let run = |admission: Option<&str>| {
+            let cfg = FleetSimConfig::new(FleetSpec::parse("1,0.5").unwrap(), source(&trace))
+                .route_named("jsq")
+                .unwrap()
+                .window_named("linger:6:30")
+                .unwrap()
+                .backend(factory(analytic));
+            match admission {
+                Some(a) => cfg.admission_named(a).unwrap().run(),
+                None => cfg.run(),
+            }
+        };
+        let base = run(None);
+        let gated = run(Some("none"));
+        let bounded = run(Some("bound:1000000"));
+        for other in [&gated, &bounded] {
+            assert!(other.shed.is_empty(), "analytic={analytic}");
+            assert_eq!(base.kernels.len(), other.kernels.len());
+            assert_eq!(base.span_ms.to_bits(), other.span_ms.to_bits(), "analytic={analytic}");
+            for (a, b) in base.kernels.iter().zip(other.kernels.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.device, b.device, "analytic={analytic}");
+                assert_eq!(a.finish_ms.to_bits(), b.finish_ms.to_bits(), "analytic={analytic}");
+                assert_eq!(a.route_ms.to_bits(), b.route_ms.to_bits());
+            }
+        }
+        assert_eq!(base.admission, "none");
+        assert_eq!(bounded.admission, "bound:1000000");
+    }
+}
+
+#[test]
+fn a_hard_bound_actually_bounds_the_standing_queue() {
+    // Deep overload with bound:1: at most one kernel is ever in the
+    // system, so every completed sojourn is one batch's worth — orders
+    // of magnitude below the ungated tail — and most arrivals bounce.
+    let gpu = GpuSpec::gtx580();
+    let trace = Trace::poisson("uniform", 40, 4000.0, 23);
+    let mut one = parse_admission_policy("bound:1").unwrap();
+    let r = simulate_online_with_admission(
+        &gpu,
+        source(&trace),
+        parse_window_policy("fixed:1").unwrap(),
+        &OnlineReorderer::fifo(),
+        factory(false).as_ref(),
+        &OnlineOpts::default(),
+        one.as_mut(),
+    );
+    assert_eq!(r.kernels.len() + r.shed.len(), 40);
+    assert!(!r.shed.is_empty(), "bound:1 under 40 near-simultaneous arrivals must shed");
+    assert!(!r.kernels.is_empty(), "the first arrival is always admitted");
+    // With occupancy capped at 1 and fixed:1 windows, no admitted
+    // kernel ever waits behind another admitted kernel's batch.
+    let max_sojourn = r
+        .kernels
+        .iter()
+        .map(|k| k.finish_ms - k.arrival_ms)
+        .fold(0.0f64, f64::max);
+    let ungated = simulate_online(
+        &gpu,
+        source(&trace),
+        parse_window_policy("fixed:1").unwrap(),
+        &OnlineReorderer::fifo(),
+        factory(false).as_ref(),
+        &OnlineOpts::default(),
+    );
+    let ungated_max = ungated
+        .kernels
+        .iter()
+        .map(|k| k.finish_ms - k.arrival_ms)
+        .fold(0.0f64, f64::max);
+    assert!(
+        max_sojourn < ungated_max,
+        "bounded max sojourn {max_sojourn} ms should sit far below ungated {ungated_max} ms"
+    );
+}

@@ -7,6 +7,7 @@
 //! These are table tests: add a row when a fuzzer or an incident finds
 //! a new way to mistype a spec.
 
+use kreorder::admission::parse_admission_policy;
 use kreorder::fault::FaultPlan;
 use kreorder::fleet::{parse_route_policy, FleetSpec};
 use kreorder::online::{parse_window_policy, ArrivalSpec, Trace};
@@ -140,6 +141,47 @@ fn arrival_specs_reject_hostile_input() {
 }
 
 #[test]
+fn admission_policies_reject_hostile_input() {
+    let hostile = [
+        "",
+        " ",
+        "zzz",
+        "none:1",
+        "bound",
+        "bound:",
+        "bound:0",
+        "bound:-1",
+        "bound:x",
+        "bound:1.5",
+        "bound:4:9",
+        "deadline",
+        "deadline:",
+        "deadline:0",
+        "deadline:-5",
+        "deadline:nan",
+        "deadline:inf",
+        "deadline:25:7",
+        "codel",
+        "codel:5",
+        "codel:0:80",
+        "codel:5:0",
+        "codel:x:80",
+        "codel:5:80:1",
+        "🚀",
+    ];
+    for s in hostile {
+        let err = parse_admission_policy(s).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(&format!("`{s}`")), "input not echoed: {msg}");
+        assert_actionable(&msg, s, "admission");
+    }
+    // The valid spellings stay valid, and round-trip their names.
+    for s in ["none", "bound:4", "deadline:25", "codel:10:80"] {
+        assert_eq!(parse_admission_policy(s).unwrap().name(), s);
+    }
+}
+
+#[test]
 fn fault_plans_reject_hostile_input() {
     let hostile: [(&str, &str); 14] = [
         ("crash", "missing `:`"),
@@ -249,6 +291,7 @@ fn unified_registry_errors_are_uniform() {
         registry::parse_window("blorp").unwrap_err(),
         registry::parse_arrivals("blorp").unwrap_err(),
         registry::parse_fault_plan("blorp").unwrap_err(),
+        registry::parse_admission("blorp").unwrap_err(),
     ];
     for err in errs {
         let msg = err.to_string();
