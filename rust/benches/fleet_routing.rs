@@ -28,16 +28,26 @@
 //! Everything is virtual-time: the numbers in `BENCH_fleet.json` are
 //! machine-independent (bit-stable f64 arithmetic), so regressions are
 //! real scheduling changes, never runner noise.
+//!
+//! As a side artifact the bench records one round-robin run on the
+//! homogeneous D=4 fleet through the `obs` tracing layer and writes both
+//! `TRACE_fleet.jsonl` (typed event stream) and `TRACE_fleet.chrome.json`
+//! (Chrome/Perfetto timeline); CI uploads both so every push ships an
+//! inspectable trace (`kreorder trace inspect TRACE_fleet.jsonl`).
 
 #[path = "harness/mod.rs"]
 #[allow(dead_code)]
 mod harness;
 
+use kreorder::admission::NoAdmission;
 use kreorder::exec::{ExecutionBackend, SimulatorBackend};
+use kreorder::fault::FaultConfig;
 use kreorder::fleet::{
-    fleet_lower_bound, parse_route_policy, simulate_fleet, FleetReport, FleetSpec,
+    fleet_lower_bound, parse_route_policy, simulate_fleet, simulate_fleet_traced, FleetReport,
+    FleetSpec,
 };
 use kreorder::gpu::GpuSpec;
+use kreorder::obs::{export, RingSink};
 use kreorder::online::{
     fifo_window_capacity_per_s, parse_window_policy, OnlineOpts, OnlineReorderer, ReplaySource,
     Trace,
@@ -103,6 +113,58 @@ fn run_trace(
         factory.as_ref(),
         &OnlineOpts::default(),
     )
+}
+
+/// CI trace artifact: one traced round-robin run on the homogeneous D=4
+/// fleet, exported both as a JSONL event stream and as a Chrome/Perfetto
+/// timeline. Deterministic per (seed, config), so the uploaded artifact
+/// only changes when scheduling behavior does.
+fn emit_trace_artifacts(gpu: &GpuSpec, reorderer: &OnlineReorderer) {
+    let fleet = FleetSpec::parse("4").expect("bench fleet spelling");
+    let sc = scenario_by_id("skewed").expect("registry family");
+    let pool = sc.workload(gpu, 96, SEED);
+    let cal_factory = sim_factory();
+    let capacity: f64 = fleet
+        .devices
+        .iter()
+        .map(|g| fifo_window_capacity_per_s(g, &pool, WINDOW_CAP, cal_factory.as_ref()))
+        .sum();
+    let trace = Trace::poisson("skewed", 96, OVERLOAD * capacity, SEED);
+    let source = Box::new(
+        ReplaySource::from_trace(&trace, gpu)
+            .expect("registry family")
+            .named(trace.family.clone()),
+    );
+    let factory = sim_factory();
+    let mut ring = RingSink::new(1 << 20);
+    let mut admission = NoAdmission;
+    let report = simulate_fleet_traced(
+        &fleet,
+        source,
+        parse_route_policy("roundrobin").expect("registered route"),
+        &|| parse_window_policy(WINDOW_SPEC).expect("gate window spelling"),
+        reorderer,
+        factory.as_ref(),
+        &OnlineOpts::default(),
+        &FaultConfig::default(),
+        &mut admission,
+        &mut ring,
+    );
+    let events = ring.snapshot();
+    println!(
+        "  traced roundrobin fleet=4 skewed: {} kernels, {} events",
+        report.kernels.len(),
+        events.len()
+    );
+    for (path, body) in [
+        ("TRACE_fleet.jsonl", export::jsonl(&events)),
+        ("TRACE_fleet.chrome.json", export::chrome_trace_json(&events)),
+    ] {
+        match std::fs::write(path, &body) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
 }
 
 fn main() {
@@ -247,6 +309,9 @@ fn main() {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
+
+    harness::section("trace artifact (obs tracing layer, roundrobin on fleet=4)");
+    emit_trace_artifacts(&gpu, &reorderer);
 
     if !failures.is_empty() {
         eprintln!("\nfleet routing gates FAILED:");

@@ -22,7 +22,9 @@
 //!    the anytime DAG path stays feasible and deterministic per seed.
 //!    Per-family linear-extension counts, the n!-shrink factor, the
 //!    topological sweep rate and bnb evals land in the `dag` section of
-//!    the JSON.
+//!    the JSON, alongside n = 11–12 histogram percentiles (p50/p90)
+//!    from the constant-memory `sweep_stats_dag` spelling for every
+//!    family whose extension count fits the sweep cap.
 //!
 //! The **anytime throughput** section measures order evaluations per
 //! second for three paths: the prefix-reuse cursor, full prepared
@@ -54,7 +56,7 @@ mod harness;
 
 use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
 use kreorder::gpu::GpuSpec;
-use kreorder::perm::{sweep_dag_with, sweep_stats_with, SweepStats};
+use kreorder::perm::{sweep_dag_with, sweep_stats_dag_with, sweep_stats_with, SweepStats};
 use kreorder::search::{
     BranchAndBound, LocalSearch, SearchBudget, SearchOutcome, SearchStrategy, SimulatedAnnealing,
 };
@@ -158,7 +160,9 @@ fn main() {
         extensions: u128,
         shrink: f64,
         topo_perms_per_s: f64,
-        bnb_evals: u64,
+        bnb_evals: Option<u64>,
+        p50_ms: Option<f64>,
+        p90_ms: Option<f64>,
     }
     let mut dag_rows: Vec<DagRow> = Vec::new();
     let mut dag_exact_ok = true;
@@ -222,7 +226,61 @@ fn main() {
                 extensions: ext,
                 shrink: factorial / ext as f64,
                 topo_perms_per_s: sim_topo_pps,
-                bnb_evals: sim_bnb_evals,
+                bnb_evals: Some(sim_bnb_evals),
+                p50_ms: None,
+                p90_ms: None,
+            });
+        }
+    }
+
+    // ---- DAG histogram percentiles at n = 11–12 (constant-memory) -----
+    // The streaming `sweep_stats_dag` spelling makes percentile panels
+    // affordable past the full-vector wall, but the wall is the
+    // linear-extension count, not n (a chain has one order, a fan-out
+    // explodes) — guard on the actual count and say so when a family
+    // is skipped.
+    harness::section("DAG sweep histograms at n=11-12 (sweep_stats_dag percentiles)");
+    let stat_cap: u128 = if quick { 200_000 } else { 2_000_000 };
+    for sc in all_dag_scenarios() {
+        for n in [11usize, 12] {
+            let w = sc.workload(&gpu, n, 11);
+            let graph = w.dep_graph().expect("registry DAG families are valid");
+            let ext = match graph.linear_extension_count() {
+                Some(e) if e <= stat_cap => e,
+                Some(e) => {
+                    println!(
+                        "  {:<10} n={n} skipped: {e} topological orders > cap {stat_cap}",
+                        sc.id
+                    );
+                    continue;
+                }
+                None => {
+                    println!(
+                        "  {:<10} n={n} skipped: extension count overflows the DP",
+                        sc.id
+                    );
+                    continue;
+                }
+            };
+            let factorial: f64 = (1..=n).map(|i| i as f64).product();
+            let t0 = Instant::now();
+            let stats = sweep_stats_dag_with(&gpu, &w.kernels, &graph, sim.as_ref(), 4096);
+            let pps = stats.n_perms as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+            let (p50, p90) = (stats.quantile_ms(0.5), stats.quantile_ms(0.9));
+            println!(
+                "  {:<10} n={n} {:>8} topo orders  best {:>10.4} ms  p50 {:>10.4}  \
+                 p90 {:>10.4}  worst {:>10.4}",
+                sc.id, stats.n_perms, stats.best_ms, p50, p90, stats.worst_ms
+            );
+            dag_rows.push(DagRow {
+                scenario: sc.id,
+                n,
+                extensions: ext,
+                shrink: factorial / ext as f64,
+                topo_perms_per_s: pps,
+                bnb_evals: None,
+                p50_ms: Some(p50),
+                p90_ms: Some(p90),
             });
         }
     }
@@ -453,13 +511,15 @@ fn main() {
         json.push_str(&format!(
             "    {{\"scenario\": \"{}\", \"n\": {}, \"extensions\": {}, \
              \"shrink_vs_factorial\": {:.2}, \"topo_sweep_perms_per_s\": {:.1}, \
-             \"bnb_evals\": {}}}{}\n",
+             \"bnb_evals\": {}, \"p50_ms\": {}, \"p90_ms\": {}}}{}\n",
             r.scenario,
             r.n,
             r.extensions,
             r.shrink,
             r.topo_perms_per_s,
-            r.bnb_evals,
+            r.bnb_evals.map_or("null".to_string(), |v| v.to_string()),
+            r.p50_ms.map_or("null".to_string(), |v| format!("{v:.4}")),
+            r.p90_ms.map_or("null".to_string(), |v| format!("{v:.4}")),
             if i + 1 == dag_rows.len() { "" } else { "," }
         ));
     }

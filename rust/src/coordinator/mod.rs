@@ -38,7 +38,10 @@
 //! through an injectable [`BatchClock`] — a [`ManualClock`] makes
 //! batching and latency accounting fully deterministic for tests.
 //! [`ServiceStats`] records per-request sojourn and queue-wait samples
-//! with exact p50/p95/p99.
+//! with exact p50/p95/p99. A [`crate::obs::TraceSink`] attached via
+//! [`CoordinatorBuilder::trace_sink`] observes the live path with
+//! wall-clock stamps: route decisions, per-device batch spans, and
+//! worker panics become typed [`crate::obs::TraceEvent`]s.
 //!
 //! Construct with [`CoordinatorBuilder`]:
 //!

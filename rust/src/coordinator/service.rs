@@ -67,6 +67,7 @@ use crate::fleet::{
     parse_route_policy, DeviceLoad, FleetView, Health, RoundRobin, RouteParseError, RoutePolicy,
 };
 use crate::gpu::{GpuSpec, KernelProfile};
+use crate::obs::{TraceEvent, TraceSink};
 use crate::online::{LingerWindow, WindowDecision, WindowPolicy, WindowState};
 use crate::registry::ParseError;
 use crate::sched::{registry, Algorithm1Policy, LaunchPolicy, PolicyParseError};
@@ -83,6 +84,11 @@ use std::time::{Duration, Instant};
 /// Called on the worker's own thread, so the backend itself need not be
 /// `Send`.
 pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn ExecutionBackend>> + Send + Sync>;
+
+/// Shared handle to the service's optional trace sink: the dispatcher
+/// and every device worker record through the same mutex. `None` means
+/// untraced — no lock exists, the live path pays nothing.
+type SharedTraceSink = Arc<Mutex<Box<dyn TraceSink>>>;
 
 /// One kernel-launch request.
 #[derive(Debug, Clone)]
@@ -186,6 +192,7 @@ pub struct CoordinatorBuilder {
     route: Box<dyn RoutePolicy>,
     clock: Arc<dyn BatchClock>,
     admission: Box<dyn AdmissionPolicy>,
+    trace: Option<SharedTraceSink>,
 }
 
 impl Default for CoordinatorBuilder {
@@ -201,6 +208,7 @@ impl Default for CoordinatorBuilder {
             route: Box::new(RoundRobin::default()),
             clock: Arc::new(SystemClock),
             admission: Box::new(NoAdmission),
+            trace: None,
         }
     }
 }
@@ -351,6 +359,31 @@ impl CoordinatorBuilder {
     pub fn admission_named(self, name: &str) -> Result<Self, ParseError> {
         let a = crate::registry::parse_admission(name)?;
         Ok(self.admission(a))
+    }
+
+    /// Attach a [`TraceSink`] observing the live path, stamped with the
+    /// **wall clock** (milliseconds since service start per the batch
+    /// clock, so a [`super::ManualClock`] freezes the stamps too):
+    /// [`TraceEvent::RouteDecision`] per dispatched batch,
+    /// [`TraceEvent::BatchStart`]/[`TraceEvent::BatchFinish`] spans from
+    /// the device workers, and [`TraceEvent::WorkerPanic`] at the
+    /// per-batch panic guard. A no-op sink (the `none` spelling) is
+    /// dropped at build time, so the untraced service carries no mutex
+    /// and records nothing. To inspect events after `shutdown`, keep a
+    /// clone of the handle and use [`CoordinatorBuilder::trace_sink_shared`].
+    pub fn trace_sink(mut self, sink: Box<dyn TraceSink>) -> Self {
+        if sink.is_noop() {
+            self.trace = None;
+            return self;
+        }
+        self.trace_sink_shared(Arc::new(Mutex::new(sink)))
+    }
+
+    /// [`CoordinatorBuilder::trace_sink`] from an already-shared handle;
+    /// the caller's clone still sees every event after `shutdown`.
+    pub fn trace_sink_shared(mut self, sink: Arc<Mutex<Box<dyn TraceSink>>>) -> Self {
+        self.trace = Some(sink);
+        self
     }
 
     /// Start the service.
@@ -566,6 +599,7 @@ fn dispatcher_loop(
     // the route policy and the window policy read.
     let depths: Arc<Vec<AtomicUsize>> =
         Arc::new((0..cfg.devices).map(|_| AtomicUsize::new(0)).collect());
+    let t0 = cfg.clock.now();
     let mut worker_txs: Vec<Sender<Batch>> = Vec::with_capacity(cfg.devices);
     let mut worker_handles: Vec<JoinHandle<(Vec<BatchReport>, ServiceStats)>> =
         Vec::with_capacity(cfg.devices);
@@ -577,14 +611,15 @@ fn dispatcher_loop(
         let clock = Arc::clone(&cfg.clock);
         let depths = Arc::clone(&depths);
         let in_flight = Arc::clone(&in_flight);
+        let trace = cfg.trace.clone();
         worker_txs.push(btx);
         worker_handles.push(std::thread::spawn(move || {
-            device_loop(device, gpu, policy, factory, clock, depths, in_flight, brx)
+            device_loop(device, gpu, policy, factory, clock, t0, depths, in_flight, trace, brx)
         }));
     }
 
     let clock = cfg.clock;
-    let t0 = clock.now();
+    let trace = cfg.trace;
     let now_ms = |c: &Arc<dyn BatchClock>| {
         c.now().saturating_duration_since(t0).as_secs_f64() * 1e3
     };
@@ -640,6 +675,17 @@ fn dispatcher_loop(
         let mut device = route
             .route(&batch[0].req.profile, &view)
             .min(worker_txs.len() - 1);
+        if let Some(tr) = &trace {
+            let mut sink = tr.lock().unwrap_or_else(|e| e.into_inner());
+            sink.record(TraceEvent::RouteDecision {
+                t_ms: now,
+                id: batch[0].req.id,
+                device,
+                policy: route.name(),
+                outstanding: loads.iter().map(|l| l.outstanding).collect(),
+                free_at_ms: loads.iter().map(|l| l.free_at_ms).collect(),
+            });
+        }
         depths[device].fetch_add(1, Ordering::Relaxed);
         let mut batch = Batch { id, pending: batch };
         loop {
@@ -822,8 +868,10 @@ fn device_loop(
     policy: Arc<dyn LaunchPolicy>,
     factory: BackendFactory,
     clock: Arc<dyn BatchClock>,
+    t0: Instant,
     depths: Arc<Vec<AtomicUsize>>,
     in_flight: Arc<AtomicUsize>,
+    trace: Option<SharedTraceSink>,
     rx: Receiver<Batch>,
 ) -> (Vec<BatchReport>, ServiceStats) {
     // Backend construction failure (e.g. PJRT client unavailable) is not
@@ -862,15 +910,25 @@ fn device_loop(
                 backend.as_deref_mut(),
                 &mut compare,
                 clock.as_ref(),
+                t0,
                 batch,
                 &mut reports,
                 &mut stats,
+                trace.as_ref(),
             );
         }));
         if let Err(payload) = outcome {
             let msg = panic_message(payload.as_ref());
             eprintln!("device {device}: panic while serving batch {batch_id}: {msg}");
             stats.record_panic(format!("device {device}, batch {batch_id}: {msg}"));
+            if let Some(tr) = &trace {
+                let t_ms = clock.now().saturating_duration_since(t0).as_secs_f64() * 1e3;
+                tr.lock().unwrap_or_else(|e| e.into_inner()).record(TraceEvent::WorkerPanic {
+                    t_ms,
+                    device,
+                    message: msg.clone(),
+                });
+            }
             // Answer the batch's handles with the failure sentinel. If
             // the panic struck after some responses were already sent,
             // the duplicate is harmless: each handle resolves to the
@@ -916,9 +974,11 @@ fn process_batch(
     backend: Option<&mut dyn ExecutionBackend>,
     compare: &mut SimulatorBackend,
     clock: &dyn BatchClock,
+    t0: Instant,
     batch: Batch,
     reports: &mut Vec<BatchReport>,
     stats: &mut ServiceStats,
+    trace: Option<&SharedTraceSink>,
 ) {
     let Batch { id: batch_id, pending } = batch;
     if pending.is_empty() {
@@ -947,6 +1007,21 @@ fn process_batch(
         (f64::NAN, f64::NAN)
     };
 
+    // The live span is wall-clock bracketed: start stamped here, finish
+    // after the payloads return (contrast the virtual-clock engines,
+    // which future-stamp the finish at start time).
+    let mut span_start_ms = 0.0f64;
+    if let Some(tr) = trace {
+        span_start_ms = clock.now().saturating_duration_since(t0).as_secs_f64() * 1e3;
+        tr.lock().unwrap_or_else(|e| e.into_inner()).record(TraceEvent::BatchStart {
+            t_ms: span_start_ms,
+            device,
+            batch: batch_id,
+            n: pending.len(),
+            order: order.clone(),
+        });
+    }
+
     // Execute payloads in the reordered sequence through the backend.
     let (backend_name, exec_wall_ms, outcome_of) = match backend {
         Some(b) => {
@@ -966,6 +1041,15 @@ fn process_batch(
     };
 
     let done = clock.now();
+    if let Some(tr) = trace {
+        let t_ms = done.saturating_duration_since(t0).as_secs_f64() * 1e3;
+        tr.lock().unwrap_or_else(|e| e.into_inner()).record(TraceEvent::BatchFinish {
+            t_ms,
+            device,
+            batch: batch_id,
+            makespan_ms: (t_ms - span_start_ms).max(0.0),
+        });
+    }
     for (position, &bi) in order.iter().enumerate() {
         let p = &pending[bi];
         let (checksum, wall) = outcome_of[bi];
@@ -1440,6 +1524,61 @@ mod tests {
         // Only the surviving batches produced reports.
         assert_eq!(reports.len(), 2);
         assert!(reports.iter().all(|r| r.n == 1));
+    }
+
+    #[test]
+    fn trace_sink_records_live_route_and_batch_spans() {
+        /// Appends into a shared vec the test can read after shutdown
+        /// (the service owns its `Box<dyn TraceSink>`, so a concrete
+        /// ring's snapshot would be unreachable behind the trait).
+        struct VecSink(Arc<Mutex<Vec<TraceEvent>>>);
+        impl TraceSink for VecSink {
+            fn name(&self) -> String {
+                "vec".into()
+            }
+            fn record(&mut self, ev: TraceEvent) {
+                self.0.lock().unwrap().push(ev);
+            }
+        }
+
+        let events: Arc<Mutex<Vec<TraceEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let c = CoordinatorBuilder::new()
+            .window(2)
+            .linger(Duration::from_millis(5))
+            .trace_sink(Box::new(VecSink(Arc::clone(&events))))
+            .start();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                c.submit(LaunchRequest {
+                    id: i,
+                    profile: profile("k", 8, 2.0),
+                    seed: 0,
+                })
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        c.shutdown();
+        let evs = events.lock().unwrap();
+        let starts = evs.iter().filter(|e| matches!(e, TraceEvent::BatchStart { .. })).count();
+        let finishes =
+            evs.iter().filter(|e| matches!(e, TraceEvent::BatchFinish { .. })).count();
+        let routes =
+            evs.iter().filter(|e| matches!(e, TraceEvent::RouteDecision { .. })).count();
+        assert!(starts >= 1, "served batches must leave spans");
+        assert_eq!(starts, finishes, "every live span is bracketed");
+        assert_eq!(routes, starts, "one route decision per dispatched batch");
+        for e in evs.iter() {
+            if let Some(t) = e.t_ms() {
+                assert!(t.is_finite() && t >= 0.0, "{e:?}");
+            }
+        }
+        // The no-op sink is dropped at build time: no mutex, no events.
+        let c2 = CoordinatorBuilder::new()
+            .trace_sink(Box::new(crate::obs::NoTrace))
+            .start();
+        c2.shutdown();
     }
 
     #[test]

@@ -55,6 +55,7 @@ use crate::admission::{AdmissionPolicy, AdmissionState, NoAdmission};
 use crate::exec::ExecutionBackend;
 use crate::fault::{FaultAction, FaultConfig, FaultPlan};
 use crate::gpu::{GpuSpec, KernelProfile};
+use crate::obs::{NoTrace, TraceEvent, TraceSink};
 use crate::online::arrivals::{Arrival, ArrivalSource};
 use crate::online::window::{WindowDecision, WindowPolicy, WindowState};
 use crate::online::{OnlineOpts, OnlineReorderer, ReorderDecision};
@@ -136,13 +137,21 @@ const EV_RECHECK: u8 = 6;
 /// Close device `dev`'s open window at `now`: reorder within the
 /// per-decision budget and queue the batch behind the device. Returns
 /// `(evaluations spent, decision was a degraded FIFO fallback)`.
+///
+/// When `traced`, emits a [`TraceEvent::ReorderDecision`] pricing the
+/// chosen order against FIFO on a *fresh* backend — pure observation,
+/// the device's own backend state is never touched.
+#[allow(clippy::too_many_arguments)]
 fn close_window(
     dev: &mut Dev,
+    device: usize,
     now: f64,
     batch_id: u64,
     decision_ms_per_eval: f64,
     reorderer: &OnlineReorderer,
     make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    traced: bool,
+    sink: &mut dyn TraceSink,
 ) -> (u64, bool) {
     let members = std::mem::take(&mut dev.pending);
     let (decision, degraded) = if dev.health == Health::Degraded {
@@ -160,6 +169,25 @@ fn close_window(
         let degraded = d.degraded;
         (d, degraded)
     };
+    if traced && !members.is_empty() {
+        let profiles: Vec<KernelProfile> = members.iter().map(|m| m.profile.clone()).collect();
+        let mut fresh = make_backend();
+        let mut prepared = fresh.prepare(&dev.gpu, &profiles);
+        let chosen_ms = prepared.execute_order(&decision.order);
+        let identity: Vec<usize> = (0..profiles.len()).collect();
+        let fifo_ms = prepared.execute_order(&identity);
+        sink.record(TraceEvent::ReorderDecision {
+            t_ms: now,
+            device,
+            batch: batch_id,
+            n: profiles.len(),
+            strategy: reorderer.name(),
+            evals: decision.evals,
+            degraded: decision.degraded,
+            chosen_ms,
+            fifo_ms,
+        });
+    }
     let evals = decision.evals;
     dev.queue.push_back(Closed {
         batch: batch_id,
@@ -303,6 +331,52 @@ pub fn simulate_fleet_with_faults(
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_fleet_with_admission(
     fleet: &FleetSpec,
+    source: Box<dyn ArrivalSource>,
+    route: Box<dyn RoutePolicy>,
+    make_window: &dyn Fn() -> Box<dyn WindowPolicy>,
+    reorderer: &OnlineReorderer,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    opts: &OnlineOpts,
+    faults: &FaultConfig,
+    admission: &mut dyn AdmissionPolicy,
+) -> FleetReport {
+    let mut sink = NoTrace;
+    simulate_fleet_traced(
+        fleet,
+        source,
+        route,
+        make_window,
+        reorderer,
+        make_backend,
+        opts,
+        faults,
+        admission,
+        &mut sink,
+    )
+}
+
+/// [`simulate_fleet_with_admission`] with a [`TraceSink`] observing
+/// every decision the loop makes: arrivals, admission verdicts, window
+/// decides, reorder decisions (chosen vs FIFO makespan, priced on a
+/// fresh backend), route decisions with their load snapshots, batch
+/// spans, fault-plan firings, retry/backoff and every shed with its
+/// cause.
+///
+/// The sink **observes, never perturbs** — the same discipline as
+/// `admission=none`. With [`NoTrace`] (`is_noop`) no event is even
+/// constructed, so untraced entry points are bit-identical and
+/// allocation-free versus the pre-trace engine: this *is* the only
+/// engine, and the untraced entry points delegate here
+/// (`tests/trace_observability.rs` pins both properties).
+///
+/// [`TraceEvent::BatchFinish`] is emitted at batch *start* time stamped
+/// with the future finish time (the virtual-clock engine already knows
+/// the makespan then), so the stream is not globally monotone in
+/// `t_ms`; [`crate::obs::export::chrome_trace_json`] reconstructs
+/// per-device spans post hoc and clips them at device crashes.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet_traced(
+    fleet: &FleetSpec,
     mut source: Box<dyn ArrivalSource>,
     mut route: Box<dyn RoutePolicy>,
     make_window: &dyn Fn() -> Box<dyn WindowPolicy>,
@@ -311,7 +385,9 @@ pub fn simulate_fleet_with_admission(
     opts: &OnlineOpts,
     faults: &FaultConfig,
     admission: &mut dyn AdmissionPolicy,
+    sink: &mut dyn TraceSink,
 ) -> FleetReport {
+    let traced = !sink.is_noop();
     assert!(!fleet.devices.is_empty(), "simulate_fleet needs at least one device");
     faults
         .plan
@@ -400,7 +476,17 @@ pub fn simulate_fleet_with_admission(
                 device_free_at_ms: dev.free_at,
                 queued_batches: dev.queue.len(),
             };
-            match dev.window.decide(&state) {
+            let decision = dev.window.decide(&state);
+            if traced {
+                sink.record(TraceEvent::WindowDecide {
+                    t_ms: now,
+                    device: d,
+                    n_pending: state.n_pending,
+                    queued_batches: state.queued_batches,
+                    close: matches!(decision, WindowDecision::Close),
+                });
+            }
+            match decision {
                 WindowDecision::Close => {
                     close_dev = Some(d);
                     break;
@@ -417,11 +503,14 @@ pub fn simulate_fleet_with_admission(
         if let Some(d) = close_dev {
             let (evals, degraded) = close_window(
                 &mut devs[d],
+                d,
                 now,
                 next_batch,
                 decision_ms_per_eval,
                 reorderer,
                 make_backend,
+                traced,
+                sink,
             );
             decision_evals += evals;
             if degraded {
@@ -486,11 +575,14 @@ pub fn simulate_fleet_with_admission(
                     Some(d) => {
                         let (evals, degraded) = close_window(
                             &mut devs[d],
+                            d,
                             now,
                             next_batch,
                             decision_ms_per_eval,
                             reorderer,
                             make_backend,
+                            traced,
+                            sink,
                         );
                         decision_evals += evals;
                         if degraded {
@@ -517,11 +609,19 @@ pub fn simulate_fleet_with_admission(
                             for o in orphans {
                                 stranded = true;
                                 dev.outstanding -= 1;
+                                let cause = ShedCause::Stranded { device: d };
+                                if traced {
+                                    sink.record(TraceEvent::Shed {
+                                        t_ms: now,
+                                        id: o.id,
+                                        cause: cause.to_csv(),
+                                    });
+                                }
                                 shed.push(ShedRecord {
                                     id: o.id,
                                     arrival_ms: o.arrival_ms,
                                     attempts: attempts.get(&o.id).copied().unwrap_or(1),
-                                    cause: ShedCause::Stranded { device: d },
+                                    cause,
                                 });
                                 // The kernel left the system: closed-loop
                                 // sources must not wait for it forever.
@@ -543,6 +643,14 @@ pub fn simulate_fleet_with_admission(
                         let ev = &timeline[fault_idx];
                         fault_idx += 1;
                         let d = ev.device;
+                        if traced {
+                            let action = match ev.action {
+                                FaultAction::Down => "down".to_string(),
+                                FaultAction::Recover => "recover".to_string(),
+                                FaultAction::Slow(factor) => format!("slow:{factor}"),
+                            };
+                            sink.record(TraceEvent::Fault { t_ms: now, device: d, action });
+                        }
                         match ev.action {
                             FaultAction::Down => {
                                 if devs[d].health != Health::Down {
@@ -627,22 +735,55 @@ pub fn simulate_fleet_with_admission(
                         device_loads(&mut devs, now, needs_pricing, &mut loads);
                         let view = FleetView { now_ms: now, devices: &loads };
                         let d = route.route(&a.profile, &view).min(devs.len() - 1);
+                        if traced {
+                            sink.record(TraceEvent::RouteDecision {
+                                t_ms: now,
+                                id: a.id,
+                                device: d,
+                                policy: route_name.clone(),
+                                outstanding: loads.iter().map(|l| l.outstanding).collect(),
+                                free_at_ms: loads.iter().map(|l| l.free_at_ms).collect(),
+                            });
+                        }
                         if let Some(lf) = launchfail {
                             let attempt = attempts.entry(a.id).or_insert(0);
                             *attempt += 1;
                             if lf.fails(a.id, *attempt) {
                                 n_launch_failures += 1;
                                 route.on_outcome(d, false, now);
+                                if traced {
+                                    sink.record(TraceEvent::Fault {
+                                        t_ms: now,
+                                        device: d,
+                                        action: "launchfail".to_string(),
+                                    });
+                                }
                                 if *attempt >= retry.max_attempts {
+                                    let cause = ShedCause::RetryCap { attempts: *attempt };
+                                    if traced {
+                                        sink.record(TraceEvent::Shed {
+                                            t_ms: now,
+                                            id: a.id,
+                                            cause: cause.to_csv(),
+                                        });
+                                    }
                                     shed.push(ShedRecord {
                                         id: a.id,
                                         arrival_ms: a.at_ms,
                                         attempts: *attempt,
-                                        cause: ShedCause::RetryCap { attempts: *attempt },
+                                        cause,
                                     });
                                     source.on_completion(now, a.id);
                                 } else {
                                     let back = retry.backoff_ms(a.id, *attempt);
+                                    if traced {
+                                        sink.record(TraceEvent::Retry {
+                                            t_ms: now,
+                                            id: a.id,
+                                            attempt: *attempt,
+                                            backoff_ms: back,
+                                        });
+                                    }
                                     retry_q.push(Reverse((EventTime(now + back), a.id)));
                                     parked.insert(a.id, a);
                                 }
@@ -695,6 +836,23 @@ pub fn simulate_fleet_with_admission(
                         }
                         dev.free_at = now + makespan;
                         dev.busy_ms += makespan;
+                        if traced {
+                            sink.record(TraceEvent::BatchStart {
+                                t_ms: now,
+                                device: d,
+                                batch,
+                                n: members.len(),
+                                order: order.clone(),
+                            });
+                            // Future-stamped: the virtual clock already
+                            // knows when this batch finishes.
+                            sink.record(TraceEvent::BatchFinish {
+                                t_ms: now + makespan,
+                                device: d,
+                                batch,
+                                makespan_ms: makespan,
+                            });
+                        }
                         let n_members = members.len();
                         let mut finish_dt = vec![0.0f64; n_members];
                         for o in &report.outcomes {
@@ -738,6 +896,9 @@ pub fn simulate_fleet_with_admission(
                     }
                     EV_ARRIVAL => {
                         let a = source.pop(now);
+                        if traced {
+                            sink.record(TraceEvent::Arrival { t_ms: now, id: a.id });
+                        }
                         // Admission gate: skipped entirely under `none`
                         // (bit-identity), priced only when the policy
                         // asks for it. Only fresh arrivals are gated —
@@ -774,25 +935,44 @@ pub fn simulate_fleet_with_admission(
                             } else {
                                 f64::NAN
                             };
-                            admission.admit(&AdmissionState {
+                            let ok = admission.admit(&AdmissionState {
                                 now_ms: now,
                                 queue_depth: depth,
                                 oldest_wait_ms,
                                 predicted_sojourn_ms,
-                            })
+                            });
+                            if traced {
+                                sink.record(TraceEvent::Admission {
+                                    t_ms: now,
+                                    id: a.id,
+                                    policy: admission_name.clone(),
+                                    admitted: ok,
+                                    queue_depth: depth,
+                                    predicted_sojourn_ms,
+                                });
+                            }
+                            ok
                         } else {
                             true
                         };
                         if admit {
                             to_route.push_back((now, a));
                         } else {
+                            let cause = ShedCause::Rejected {
+                                policy: admission_name.clone(),
+                            };
+                            if traced {
+                                sink.record(TraceEvent::Shed {
+                                    t_ms: now,
+                                    id: a.id,
+                                    cause: cause.to_csv(),
+                                });
+                            }
                             shed.push(ShedRecord {
                                 id: a.id,
                                 arrival_ms: a.at_ms,
                                 attempts: 0,
-                                cause: ShedCause::Rejected {
-                                    policy: admission_name.clone(),
-                                },
+                                cause,
                             });
                             // The kernel left the system: closed-loop
                             // sources must not wait for it forever.

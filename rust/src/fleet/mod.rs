@@ -39,6 +39,10 @@
 //!   [`ShedRecord`]s with a [`ShedCause::Rejected`] cause — the last
 //!   rung of the degradation ladder (reorder → FIFO → shed) — and
 //!   `admission=none` is a strict bit-identical no-op.
+//!   [`simulate_fleet_traced`] is the full engine with a
+//!   [`crate::obs::TraceSink`] observing every decision as a typed
+//!   [`crate::obs::TraceEvent`] stream; every other entry point
+//!   delegates to it with the no-op sink.
 //! * [`FleetReport`] — per-kernel timestamps with device provenance,
 //!   per-device utilization/imbalance, fleet percentile rollups, and
 //!   the fault ledger ([`ShedRecord`], reroute/degradation counters).
@@ -59,7 +63,10 @@ pub mod route;
 pub mod spec;
 
 pub use config::FleetSimConfig;
-pub use engine::{simulate_fleet, simulate_fleet_with_admission, simulate_fleet_with_faults};
+pub use engine::{
+    simulate_fleet, simulate_fleet_traced, simulate_fleet_with_admission,
+    simulate_fleet_with_faults,
+};
 pub use oracle::fleet_lower_bound;
 pub use report::{
     p99_speedup, FleetBatchRecord, FleetKernelRecord, FleetReport, ShedCause, ShedRecord,

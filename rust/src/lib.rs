@@ -277,13 +277,43 @@
 //!   new call sites should use the builder: defaults for the five
 //!   pieces almost everyone leaves alone, named setters for the rest,
 //!   and uniform [`registry::ParseError`]s from the `*_named` setters.
-//! * [`registry`] is the uniform front door over the seven string
+//! * [`registry`] is the uniform front door over the eight string
 //!   registries (policy / strategy / route / window / arrivals /
-//!   fault-plan / admission): one [`registry::ParseError`] carrying the kind, the
+//!   fault-plan / admission / trace): one [`registry::ParseError`] carrying the kind, the
 //!   echoed input and that kind's cheat sheet, plus
 //!   [`registry::kinds`] / [`registry::list`] backing the
 //!   `kreorder list [--kind <k>]` subcommand. The per-subsystem
 //!   parsers and their typed errors remain the sources of truth.
+//!
+//! ## Observability: typed trace events across every layer
+//!
+//! Reports say *what* happened; the [`obs`] subsystem records *why*.
+//! Every execution layer — the online engine
+//! ([`online::simulate_online_traced`]), the fleet engine with its
+//! fault/admission variants ([`fleet::simulate_fleet_traced`]), and the
+//! live thread coordinator
+//! ([`coordinator::CoordinatorBuilder::trace_sink`], wall-clock
+//! stamped) — emits typed [`obs::TraceEvent`]s at each decision point:
+//! arrival, admission verdict (with the priced bound), window
+//! close/wait (with occupancy), reorder decision (strategy, evals,
+//! FIFO-guard outcome, chosen-vs-FIFO makespan), route choice (with the
+//! per-device load snapshot), batch start/finish, fault, retry, shed
+//! and worker panic; anytime-search incumbent trajectories down-sample
+//! into the same stream ([`obs::trajectory_events`]). A
+//! [`obs::TraceSink`] receives them — `none` (strict no-op), `ring:<cap>`
+//! (bounded in-memory) or `jsonl:<path>` — the eighth [`registry`]
+//! kind. The safety contract mirrors `admission=none`: under the
+//! [`obs::NoTrace`] sink every engine is **bit-identical and
+//! allocation-free** versus the untraced entry points (which literally
+//! delegate through the traced ones), and under `ring`/`jsonl` the
+//! event stream itself is bit-deterministic per (seed, config) — pinned
+//! by `tests/trace_observability.rs`. [`obs::export`] renders streams
+//! as Chrome trace-event JSON (per-device lanes, crash-clipped batch
+//! spans; loads in `chrome://tracing` / Perfetto, structurally checked
+//! by [`obs::export::validate_chrome_trace`]) and folds them into a
+//! deterministic [`obs::Counters`] snapshot; the CLI surfaces both as
+//! `--trace FILE[:SINK]` on `serve` / `fleet` / `fault` / `search` and
+//! `kreorder trace inspect FILE`.
 //!
 //! CI enforces the quality contract (`benches/search_quality.rs`,
 //! smoke-run per push): branch-and-bound must bit-match the sweep on
@@ -311,6 +341,7 @@
 //! | [`fleet`] | multi-device dispatch: [`fleet::RoutePolicy`] registry, heterogeneous [`fleet::FleetSpec`], fleet-scale virtual-clock engine |
 //! | [`fault`] | deterministic fault injection: [`fault::FaultPlan`] (crash / slowdown / launch-failure scripts), seeded [`fault::RetryPolicy`], recovery accounting |
 //! | [`admission`] | overload protection: [`admission::AdmissionPolicy`] registry (`bound` / `deadline` / `codel`), shed accounting, coordinator backpressure |
+//! | [`obs`] | structured tracing: [`obs::TraceSink`] registry (`none` / `ring` / `jsonl`), typed [`obs::TraceEvent`]s, Chrome trace export + [`obs::Counters`] |
 //! | [`profile`] | artifact profile loading (the "CUDA profiler" stand-in) |
 //! | `runtime` | PJRT execution of AOT-compiled HLO kernels (feature `pjrt`) |
 //! | [`coordinator`] | [`coordinator::CoordinatorBuilder`]: batching + reordering + multi-device dispatch |
@@ -412,6 +443,7 @@ pub mod fault;
 pub mod fleet;
 pub mod gpu;
 pub mod metrics;
+pub mod obs;
 pub mod online;
 pub mod perm;
 pub mod profile;

@@ -11,6 +11,8 @@
 //! * `fleet`   — multi-device online scheduling: routed arrivals over a GPU fleet.
 //! * `fault`   — fleet run under a deterministic fault plan (crashes, stragglers,
 //!   launch failures) with seeded retry and health-aware rerouting.
+//! * `trace`   — inspect a recorded `--trace` artifact (JSONL event stream or
+//!   Chrome trace-event JSON).
 //! * `ablate`  — score-component ablation across experiments.
 //! * `policies`— list the launch-policy registry.
 //! * `artifacts` — list AOT artifacts and their measured profiles.
@@ -24,6 +26,7 @@ use kreorder::coordinator::{CoordinatorBuilder, LaunchRequest};
 use kreorder::exec::{self, ExecutionBackend};
 use kreorder::gpu::GpuSpec;
 use kreorder::metrics::{ExperimentRow, Histogram, Table3};
+use kreorder::obs::TraceSink;
 use kreorder::perm::sweep_with;
 use kreorder::profile::ArtifactStore;
 use kreorder::sched::{registry, reorder, reorder_with, ScoreConfig};
@@ -59,6 +62,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "fleet" => cmd_fleet(rest),
         "fault" => cmd_fault(rest),
+        "trace" => cmd_trace(rest),
         "ablate" => cmd_ablate(rest),
         "list" => cmd_list(rest),
         "policies" => cmd_policies(rest),
@@ -84,7 +88,8 @@ COMMANDS:
   sweep --exp ID [--backend B]         permutation-space stats for one experiment
   search (--exp ID | --synthetic N | --scenario FAMILY:N) [--seed S]
          [--deps SPEC-OR-FILE] [--strategy STRAT] [--budget EVALS] [--backend B]
-         [--trajectory] [--compare-sweep] [--compare-eval] [--list]
+         [--trajectory] [--trace FILE[:FMT]] [--trace-sample K]
+         [--compare-sweep] [--compare-eval] [--list]
                                        launch-order search beyond the factorial wall;
                                        FAMILY may be a DAG family (chain, fanout, fanin,
                                        layered, mlinfer) and --deps adds precedence
@@ -101,7 +106,7 @@ COMMANDS:
   serve --arrivals PROC [--count N] [--scenario FAMILY] [--window WP]
         [--strategy S|fifo] [--budget EVALS] [--deps SPEC-OR-FILE]
         [--decision-cost MS] [--slo MS] [--admission P] [--oracle]
-        [--record FILE] [--backend B]
+        [--record FILE] [--trace FILE[:FMT]] [--backend B]
                                        ONLINE mode: deterministic virtual-clock run of
                                        the streaming scheduler (arrivals PROC = e.g.
                                        poisson:<rate>:<seed>; window WP = e.g.
@@ -112,7 +117,7 @@ COMMANDS:
   fleet [--devices SPEC] [--route POLICY] [--count N] [--scenario FAMILY]
         [--arrivals PROC] [--window WP] [--strategy S|fifo] [--budget EVALS]
         [--decision-cost MS] [--admission P] [--backend B] [--record FILE]
-        [--replay FILE] [--compare-roundrobin] [--oracle]
+        [--replay FILE] [--trace FILE[:FMT]] [--compare-roundrobin] [--oracle]
                                        multi-device online scheduling: arrivals routed
                                        over a (possibly heterogeneous) fleet, each
                                        device its own reorder window (--devices SPEC =
@@ -122,15 +127,19 @@ COMMANDS:
         [--retries N] [--devices SPEC] [--route POLICY] [--count N]
         [--scenario FAMILY] [--arrivals PROC] [--window WP] [--strategy S|fifo]
         [--budget EVALS] [--decision-cost MS] [--admission P] [--backend B]
-        [--compare-nofault] [--list-faults]
+        [--trace FILE[:FMT]] [--compare-nofault] [--list-faults]
                                        fleet run under a deterministic fault plan:
                                        device crashes/recoveries, slowdowns, seeded
                                        launch failures with retry + backoff
                                        (see `kreorder fault --list-faults`)
+  trace inspect FILE                   summarize a recorded trace artifact: JSONL
+                                       event streams fold into the counters snapshot,
+                                       Chrome trace-event JSON is validated and its
+                                       lane/span summary printed
   ablate [--exp ID] [--backend B]      score-component ablation
   list [--kind K]                      list every string registry (policy, strategy,
-                                       route, window, arrivals, fault-plan, admission)
-                                       or one kind;
+                                       route, window, arrivals, fault-plan, admission,
+                                       trace) or one kind;
                                        consolidates the per-command --list flags, which
                                        remain as aliases
   policies                             list the launch-policy registry
@@ -144,6 +153,8 @@ ARRIVALS & WINDOW POLICIES: `kreorder serve --list-online`
 ROUTE POLICIES & DEVICE SPECS: `kreorder fleet --list-routes`
 FAULT PLANS: `kreorder fault --list-faults`
 ADMISSION POLICIES: `kreorder list --kind admission`
+TRACE SINKS: `kreorder list --kind trace`; --trace FILE writes a JSONL event
+          stream, --trace FILE:chrome a Chrome/Perfetto timeline JSON
 BACKENDS: sim (fluid simulator, default), analytic (round model){}",
         if cfg!(feature = "pjrt") {
             ", pjrt (serve only)"
@@ -182,6 +193,86 @@ fn model_backend_factory(
     Ok(Box::new(move || {
         exec::parse_model_backend(&name).expect("spelling validated above")
     }))
+}
+
+// ---------------------------------------------------------------------------
+// tracing (--trace FILE[:FMT])
+// ---------------------------------------------------------------------------
+
+/// Events a `--trace FILE:chrome` run can hold before the ring drops
+/// the oldest; generous next to any CLI-sized run.
+const TRACE_RING_CAP: usize = 1 << 20;
+
+/// The recording half of `--trace FILE[:FMT]`. `FILE:chrome` records
+/// into a large ring and exports Chrome trace-event JSON after the run
+/// (load in chrome://tracing or Perfetto); `FILE:jsonl` — or a bare
+/// FILE — streams one JSON event per line, summarized later by
+/// `kreorder trace inspect FILE`.
+enum TraceOut {
+    Jsonl {
+        path: String,
+        sink: kreorder::obs::JsonlSink,
+    },
+    Chrome {
+        path: String,
+        ring: kreorder::obs::RingSink,
+    },
+}
+
+impl TraceOut {
+    /// Parse `--trace` from the arg list; `None` means untraced — the
+    /// engines then run the strict no-op sink and stay bit-identical
+    /// with the pre-tracing behavior.
+    fn from_args(args: &[String]) -> Option<TraceOut> {
+        let spec = opt(args, "--trace")?;
+        // Only a literal `:chrome` / `:jsonl` suffix selects a format;
+        // any other colon stays part of the path.
+        let (path, chrome) = match spec.rsplit_once(':') {
+            Some((p, "chrome")) if !p.is_empty() => (p, true),
+            Some((p, "jsonl")) if !p.is_empty() => (p, false),
+            _ => (spec, false),
+        };
+        Some(if chrome {
+            TraceOut::Chrome {
+                path: path.to_string(),
+                ring: kreorder::obs::RingSink::new(TRACE_RING_CAP),
+            }
+        } else {
+            TraceOut::Jsonl {
+                path: path.to_string(),
+                sink: kreorder::obs::JsonlSink::new(path),
+            }
+        })
+    }
+
+    /// The sink to hand the engine.
+    fn sink(&mut self) -> &mut dyn TraceSink {
+        match self {
+            TraceOut::Jsonl { sink, .. } => sink,
+            TraceOut::Chrome { ring, .. } => ring,
+        }
+    }
+
+    /// Write the artifact after the run.
+    fn finish(self) -> Result<()> {
+        match self {
+            TraceOut::Jsonl { path, mut sink } => {
+                sink.flush().with_context(|| format!("writing trace {path}"))?;
+                eprintln!(
+                    "wrote trace -> {path} (inspect with `kreorder trace inspect {path}`)"
+                );
+            }
+            TraceOut::Chrome { path, ring } => {
+                let json = kreorder::obs::export::chrome_trace_json(&ring.snapshot());
+                std::fs::write(&path, json)
+                    .with_context(|| format!("writing trace {path}"))?;
+                eprintln!(
+                    "wrote Chrome trace -> {path} (load in chrome://tracing or Perfetto)"
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -445,6 +536,16 @@ fn cmd_search(args: &[String]) -> Result<()> {
         for s in &out.trajectory {
             println!("  {:>10} {:.4}", s.eval, s.best_ms);
         }
+    }
+    if let Some(mut t) = TraceOut::from_args(args) {
+        // Decision-level search introspection: the incumbent trajectory
+        // as typed events, down-sampled by --trace-sample (every k-th
+        // improvement plus always the final incumbent).
+        let sample: u64 = opt(args, "--trace-sample").map_or(1, |s| s.parse().unwrap_or(1));
+        for ev in kreorder::obs::trajectory_events(&out, sample) {
+            t.sink().record(ev);
+        }
+        t.finish()?;
     }
 
     if flag(args, "--compare-eval") && graph.has_deps() {
@@ -744,9 +845,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 /// policy): two runs print bit-identical latency numbers.
 fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
     use kreorder::online::{
-        offline_oracle, parse_window_policy, shed_csv, simulate_online_with_admission,
-        ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts, OnlineReorderer, ReplaySource,
-        Trace,
+        offline_oracle, parse_window_policy, shed_csv, simulate_online_traced, ArrivalSource,
+        ArrivalSpec, ClosedLoopSource, OnlineOpts, OnlineReorderer, ReplaySource, Trace,
     };
     use kreorder::workloads::scenario_by_id;
 
@@ -835,7 +935,9 @@ fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
         decision_cost,
         admission.name(),
     );
-    let report = simulate_online_with_admission(
+    let mut tracer = TraceOut::from_args(args);
+    let mut untraced = kreorder::obs::NoTrace;
+    let report = simulate_online_traced(
         &gpu,
         source,
         window,
@@ -843,7 +945,14 @@ fn cmd_serve_online(args: &[String], arrivals: &str) -> Result<()> {
         make_backend.as_ref(),
         &opts,
         admission.as_mut(),
+        match tracer.as_mut() {
+            Some(t) => t.sink(),
+            None => &mut untraced,
+        },
     );
+    if let Some(t) = tracer {
+        t.finish()?;
+    }
     println!("{}", report.summary());
     for s in &report.shed {
         println!("  shed kernel {} (arrived {:.2} ms): {}", s.id, s.arrival_ms, s.cause);
@@ -952,7 +1061,7 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
     use kreorder::fault::FaultConfig;
     use kreorder::fleet::{
         fleet_lower_bound, p99_speedup, parse_route_policy, route_policy_help_table,
-        simulate_fleet_with_admission, FleetSpec,
+        simulate_fleet_traced, simulate_fleet_with_admission, FleetSpec,
     };
     use kreorder::online::{
         parse_window_policy, shed_csv, ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts,
@@ -1053,7 +1162,9 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
         decision_cost,
         admission_spec,
     );
-    let report = simulate_fleet_with_admission(
+    let mut tracer = TraceOut::from_args(args);
+    let mut untraced = kreorder::obs::NoTrace;
+    let report = simulate_fleet_traced(
         &fleet,
         make_source()?,
         parse_route_policy(route_spec).map_err(anyhow::Error::from)?,
@@ -1063,7 +1174,14 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
         &opts,
         &FaultConfig::default(),
         make_admission().expect("validated above").as_mut(),
+        match tracer.as_mut() {
+            Some(t) => t.sink(),
+            None => &mut untraced,
+        },
     );
+    if let Some(t) = tracer {
+        t.finish()?;
+    }
     println!("{}", report.summary());
     for s in &report.shed {
         println!("  shed kernel {} (arrived {:.2} ms): {}", s.id, s.arrival_ms, s.cause);
@@ -1152,7 +1270,9 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
 /// runs print bit-identical numbers, including the fault ledger.
 fn cmd_fault(args: &[String]) -> Result<()> {
     use kreorder::fault::{fault_plan_help_table, FaultConfig, FaultPlan, RetryPolicy};
-    use kreorder::fleet::{parse_route_policy, simulate_fleet_with_admission, FleetSpec};
+    use kreorder::fleet::{
+        parse_route_policy, simulate_fleet_traced, simulate_fleet_with_admission, FleetSpec,
+    };
     use kreorder::online::{
         parse_window_policy, ArrivalSource, ArrivalSpec, ClosedLoopSource, OnlineOpts,
         OnlineReorderer, ReplaySource, Trace,
@@ -1274,7 +1394,9 @@ fn cmd_fault(args: &[String]) -> Result<()> {
         opt(args, "--backend").unwrap_or("sim"),
         admission_spec,
     );
-    let report = simulate_fleet_with_admission(
+    let mut tracer = TraceOut::from_args(args);
+    let mut untraced = kreorder::obs::NoTrace;
+    let report = simulate_fleet_traced(
         &fleet,
         make_source()?,
         parse_route_policy(route_spec).map_err(anyhow::Error::from)?,
@@ -1284,7 +1406,14 @@ fn cmd_fault(args: &[String]) -> Result<()> {
         &opts,
         &faults,
         make_admission().expect("validated above").as_mut(),
+        match tracer.as_mut() {
+            Some(t) => t.sink(),
+            None => &mut untraced,
+        },
     );
+    if let Some(t) = tracer {
+        t.finish()?;
+    }
     println!("{}", report.summary());
     for s in &report.shed {
         println!(
@@ -1319,6 +1448,50 @@ fn cmd_fault(args: &[String]) -> Result<()> {
             report.completion_rate(),
             clean.completion_rate(),
         );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// trace
+// ---------------------------------------------------------------------------
+
+/// `trace inspect FILE`: summarize a recorded trace artifact. JSONL
+/// event streams (from `--trace FILE`) fold into the deterministic
+/// counters snapshot; Chrome trace-event JSON (from `--trace
+/// FILE:chrome`) runs the structural validator and prints the
+/// lane/span summary.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    use kreorder::obs::export::{events_from_jsonl, validate_chrome_trace};
+    use kreorder::obs::Counters;
+
+    match args.first().map(|s| s.as_str()) {
+        Some("inspect") => {}
+        Some(other) => {
+            bail!("unknown trace subcommand `{other}` (try `kreorder trace inspect FILE`)")
+        }
+        None => bail!("usage: kreorder trace inspect FILE"),
+    }
+    let path = args
+        .get(1)
+        .map(|s| s.as_str())
+        .context("usage: kreorder trace inspect FILE")?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    if text.trim_start().starts_with('{') {
+        let s = validate_chrome_trace(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!("{path}: valid Chrome trace-event JSON");
+        println!(
+            "  {} events | {} batch spans | {} device lanes | last timestamp {:.3} ms",
+            s.n_events,
+            s.n_spans,
+            s.n_lanes,
+            s.max_ts_us / 1e3
+        );
+    } else {
+        let events = events_from_jsonl(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!("{path}: {} events", events.len());
+        print!("{}", Counters::from_events(&events).render());
     }
     Ok(())
 }

@@ -57,13 +57,22 @@ impl Histogram {
     /// p-th percentile (0–100) read off the binned distribution:
     /// linear interpolation within the bin where the cumulative count
     /// crosses the rank, so the answer is exact to bin resolution
-    /// (±half a bin width). Returns 0 for an empty histogram. Used by
-    /// the online latency reports for distribution summaries where the
-    /// raw samples have been discarded.
+    /// (±half a bin width). Two documented edge cases: an **empty**
+    /// histogram returns `0.0` (there is no distribution to read), and
+    /// a **zero-width** one — a single sample, or all samples equal —
+    /// returns `min` exactly for every `p`. Used by the online latency
+    /// reports for distribution summaries where the raw samples have
+    /// been discarded.
     pub fn percentile(&self, p: f64) -> f64 {
         let total = self.total();
         if total == 0 {
             return 0.0;
+        }
+        if self.max == self.min {
+            // Every percentile of a zero-width span is that value;
+            // skip the interpolation so the answer is exact rather
+            // than `min + frac · 0`.
+            return self.min;
         }
         let p = p.clamp(0.0, 100.0);
         let rank = p / 100.0 * total as f64;
@@ -152,6 +161,22 @@ mod tests {
         let h = Histogram::build(&[5.0; 9], 4);
         // All mass in one zero-width bin.
         assert_eq!(h.percentile(50.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample_at_every_p() {
+        let h = Histogram::build(&[3.0], 4);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 3.0, "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentile_empty_is_zero_at_every_p() {
+        let h = Histogram::build(&[], 4);
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(h.percentile(p), 0.0, "p{p}");
+        }
     }
 
     #[test]

@@ -1,0 +1,680 @@
+//! Turning recorded [`TraceEvent`] streams into artifacts: JSON-lines
+//! round-tripping, Chrome trace-event JSON for `chrome://tracing` /
+//! Perfetto, and a minimal validator for the exported form.
+//!
+//! Everything here is pure string work over an already-recorded stream
+//! — no I/O, no clocks — so exports are bit-deterministic functions of
+//! the events, which are themselves bit-deterministic per (seed,
+//! config). Numbers are written with Rust's shortest round-trip `f64`
+//! formatting, so `to_jsonl_line` → [`parse_jsonl_line`] is exact
+//! (non-finite values serialize as `null` and parse back as `NaN`).
+//!
+//! The Chrome export reconstructs **spans** from the stream rather than
+//! translating events one-for-one: each device is a lane (`tid` =
+//! device index), each batch a `B`/`E` span, and a crash (`down` fault)
+//! on a device *clips* any span still running there to the crash time —
+//! otherwise an orphaned batch's recorded finish could land after a
+//! post-recovery batch had already started, breaking the per-lane
+//! timestamp monotonicity that timeline viewers (and
+//! [`validate_chrome_trace`]) require. Instant events (faults, sheds,
+//! retries, rejected admissions, panics) ride a dedicated control lane
+//! (`tid` = device count).
+
+use super::TraceEvent;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Escape a string for embedding in a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Shortest round-trip JSON number (`null` for non-finite values).
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+fn usizes(xs: &[usize]) -> String {
+    let body: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", body.join(","))
+}
+
+fn f64s(xs: &[f64]) -> String {
+    let body: Vec<String> = xs.iter().map(|x| num(*x)).collect();
+    format!("[{}]", body.join(","))
+}
+
+/// Serialize one event as a single JSON object line — the `jsonl` sink
+/// format. Field order is fixed, so identical events yield identical
+/// bytes (the replay-artifact contract).
+pub fn to_jsonl_line(ev: &TraceEvent) -> String {
+    match ev {
+        TraceEvent::Arrival { t_ms, id } => {
+            format!(r#"{{"type":"arrival","t_ms":{},"id":{id}}}"#, num(*t_ms))
+        }
+        TraceEvent::Admission { t_ms, id, policy, admitted, queue_depth, predicted_sojourn_ms } => {
+            format!(
+                r#"{{"type":"admission","t_ms":{},"id":{id},"policy":"{}","admitted":{admitted},"queue_depth":{queue_depth},"predicted_sojourn_ms":{}}}"#,
+                num(*t_ms),
+                esc(policy),
+                num(*predicted_sojourn_ms)
+            )
+        }
+        TraceEvent::WindowDecide { t_ms, device, n_pending, queued_batches, close } => {
+            format!(
+                r#"{{"type":"window","t_ms":{},"device":{device},"n_pending":{n_pending},"queued_batches":{queued_batches},"close":{close}}}"#,
+                num(*t_ms)
+            )
+        }
+        TraceEvent::ReorderDecision {
+            t_ms,
+            device,
+            batch,
+            n,
+            strategy,
+            evals,
+            degraded,
+            chosen_ms,
+            fifo_ms,
+        } => {
+            format!(
+                r#"{{"type":"reorder","t_ms":{},"device":{device},"batch":{batch},"n":{n},"strategy":"{}","evals":{evals},"degraded":{degraded},"chosen_ms":{},"fifo_ms":{}}}"#,
+                num(*t_ms),
+                esc(strategy),
+                num(*chosen_ms),
+                num(*fifo_ms)
+            )
+        }
+        TraceEvent::RouteDecision { t_ms, id, device, policy, outstanding, free_at_ms } => {
+            format!(
+                r#"{{"type":"route","t_ms":{},"id":{id},"device":{device},"policy":"{}","outstanding":{},"free_at_ms":{}}}"#,
+                num(*t_ms),
+                esc(policy),
+                usizes(outstanding),
+                f64s(free_at_ms)
+            )
+        }
+        TraceEvent::BatchStart { t_ms, device, batch, n, order } => {
+            format!(
+                r#"{{"type":"batch-start","t_ms":{},"device":{device},"batch":{batch},"n":{n},"order":{}}}"#,
+                num(*t_ms),
+                usizes(order)
+            )
+        }
+        TraceEvent::BatchFinish { t_ms, device, batch, makespan_ms } => {
+            format!(
+                r#"{{"type":"batch-finish","t_ms":{},"device":{device},"batch":{batch},"makespan_ms":{}}}"#,
+                num(*t_ms),
+                num(*makespan_ms)
+            )
+        }
+        TraceEvent::Fault { t_ms, device, action } => {
+            format!(
+                r#"{{"type":"fault","t_ms":{},"device":{device},"action":"{}"}}"#,
+                num(*t_ms),
+                esc(action)
+            )
+        }
+        TraceEvent::Retry { t_ms, id, attempt, backoff_ms } => {
+            format!(
+                r#"{{"type":"retry","t_ms":{},"id":{id},"attempt":{attempt},"backoff_ms":{}}}"#,
+                num(*t_ms),
+                num(*backoff_ms)
+            )
+        }
+        TraceEvent::Shed { t_ms, id, cause } => {
+            format!(
+                r#"{{"type":"shed","t_ms":{},"id":{id},"cause":"{}"}}"#,
+                num(*t_ms),
+                esc(cause)
+            )
+        }
+        TraceEvent::WorkerPanic { t_ms, device, message } => {
+            format!(
+                r#"{{"type":"panic","t_ms":{},"device":{device},"message":"{}"}}"#,
+                num(*t_ms),
+                esc(message)
+            )
+        }
+        TraceEvent::Incumbent { eval, best_ms, strategy } => {
+            format!(
+                r#"{{"type":"incumbent","eval":{eval},"best_ms":{},"strategy":"{}"}}"#,
+                num(*best_ms),
+                esc(strategy)
+            )
+        }
+    }
+}
+
+/// Parse one JSON line back into its event — the exact inverse of
+/// [`to_jsonl_line`] (`null` numbers become `NaN`). Errors name the
+/// missing or mistyped field.
+pub fn parse_jsonl_line(line: &str) -> Result<TraceEvent, String> {
+    let o = Json::parse(line).map_err(|e| format!("trace line is not JSON: {e}"))?;
+    let ty = o
+        .get("type")
+        .and_then(|j| j.as_str())
+        .ok_or_else(|| "trace line has no `type` field".to_string())?
+        .to_string();
+    let f = |k: &str| -> Result<f64, String> {
+        match o.get(k) {
+            Some(Json::Null) => Ok(f64::NAN),
+            Some(j) => j.as_f64().ok_or_else(|| format!("field `{k}` is not a number")),
+            None => Err(format!("missing field `{k}` on `{ty}`")),
+        }
+    };
+    let u = |k: &str| -> Result<u64, String> { Ok(f(k)? as u64) };
+    let us = |k: &str| -> Result<usize, String> { Ok(f(k)? as usize) };
+    let s = |k: &str| -> Result<String, String> {
+        o.get(k)
+            .and_then(|j| j.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing string field `{k}` on `{ty}`"))
+    };
+    let b = |k: &str| -> Result<bool, String> {
+        match o.get(k) {
+            Some(Json::Bool(v)) => Ok(*v),
+            _ => Err(format!("missing bool field `{k}` on `{ty}`")),
+        }
+    };
+    let arr = |k: &str| -> Result<&[Json], String> {
+        o.get(k)
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| format!("missing array field `{k}` on `{ty}`"))
+    };
+    Ok(match ty.as_str() {
+        "arrival" => TraceEvent::Arrival { t_ms: f("t_ms")?, id: u("id")? },
+        "admission" => TraceEvent::Admission {
+            t_ms: f("t_ms")?,
+            id: u("id")?,
+            policy: s("policy")?,
+            admitted: b("admitted")?,
+            queue_depth: us("queue_depth")?,
+            predicted_sojourn_ms: f("predicted_sojourn_ms")?,
+        },
+        "window" => TraceEvent::WindowDecide {
+            t_ms: f("t_ms")?,
+            device: us("device")?,
+            n_pending: us("n_pending")?,
+            queued_batches: us("queued_batches")?,
+            close: b("close")?,
+        },
+        "reorder" => TraceEvent::ReorderDecision {
+            t_ms: f("t_ms")?,
+            device: us("device")?,
+            batch: u("batch")?,
+            n: us("n")?,
+            strategy: s("strategy")?,
+            evals: u("evals")?,
+            degraded: b("degraded")?,
+            chosen_ms: f("chosen_ms")?,
+            fifo_ms: f("fifo_ms")?,
+        },
+        "route" => TraceEvent::RouteDecision {
+            t_ms: f("t_ms")?,
+            id: u("id")?,
+            device: us("device")?,
+            policy: s("policy")?,
+            outstanding: arr("outstanding")?
+                .iter()
+                .map(|j| j.as_f64().map(|v| v as usize))
+                .collect::<Option<Vec<usize>>>()
+                .ok_or("non-numeric entry in `outstanding`")?,
+            free_at_ms: arr("free_at_ms")?
+                .iter()
+                .map(|j| match j {
+                    Json::Null => Some(f64::NAN),
+                    j => j.as_f64(),
+                })
+                .collect::<Option<Vec<f64>>>()
+                .ok_or("non-numeric entry in `free_at_ms`")?,
+        },
+        "batch-start" => TraceEvent::BatchStart {
+            t_ms: f("t_ms")?,
+            device: us("device")?,
+            batch: u("batch")?,
+            n: us("n")?,
+            order: arr("order")?
+                .iter()
+                .map(|j| j.as_f64().map(|v| v as usize))
+                .collect::<Option<Vec<usize>>>()
+                .ok_or("non-numeric entry in `order`")?,
+        },
+        "batch-finish" => TraceEvent::BatchFinish {
+            t_ms: f("t_ms")?,
+            device: us("device")?,
+            batch: u("batch")?,
+            makespan_ms: f("makespan_ms")?,
+        },
+        "fault" => TraceEvent::Fault {
+            t_ms: f("t_ms")?,
+            device: us("device")?,
+            action: s("action")?,
+        },
+        "retry" => TraceEvent::Retry {
+            t_ms: f("t_ms")?,
+            id: u("id")?,
+            attempt: u("attempt")? as u32,
+            backoff_ms: f("backoff_ms")?,
+        },
+        "shed" => TraceEvent::Shed { t_ms: f("t_ms")?, id: u("id")?, cause: s("cause")? },
+        "panic" => TraceEvent::WorkerPanic {
+            t_ms: f("t_ms")?,
+            device: us("device")?,
+            message: s("message")?,
+        },
+        "incumbent" => TraceEvent::Incumbent {
+            eval: u("eval")?,
+            best_ms: f("best_ms")?,
+            strategy: s("strategy")?,
+        },
+        other => return Err(format!("unknown trace event type `{other}`")),
+    })
+}
+
+/// Serialize a whole stream as JSON lines (one event per line, trailing
+/// newline).
+pub fn jsonl(events: &[TraceEvent]) -> String {
+    let mut s = String::new();
+    for ev in events {
+        s.push_str(&to_jsonl_line(ev));
+        s.push('\n');
+    }
+    s
+}
+
+/// Parse a JSON-lines stream back into events (blank lines tolerated).
+/// Errors carry the 1-based line number of the offending line.
+pub fn events_from_jsonl(text: &str) -> Result<Vec<TraceEvent>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(parse_jsonl_line(line).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// Render an event stream as Chrome trace-event JSON (the
+/// `{"traceEvents":[…]}` object form; loads in `chrome://tracing` and
+/// Perfetto). One lane per device carries the reconstructed batch
+/// spans; lane `D` (one past the last device) carries instant markers
+/// for faults, sheds, retries, rejected admissions and panics.
+/// Timestamps are microseconds (`t_ms × 1000`). Crash clipping and
+/// determinism are documented at the module level; the output always
+/// passes [`validate_chrome_trace`].
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    // Lane count: one per device mentioned anywhere, minimum one.
+    let mut n_devices = 1usize;
+    for ev in events {
+        let d = match ev {
+            TraceEvent::WindowDecide { device, .. }
+            | TraceEvent::ReorderDecision { device, .. }
+            | TraceEvent::RouteDecision { device, .. }
+            | TraceEvent::BatchStart { device, .. }
+            | TraceEvent::BatchFinish { device, .. }
+            | TraceEvent::Fault { device, .. }
+            | TraceEvent::WorkerPanic { device, .. } => Some(*device),
+            _ => None,
+        };
+        if let Some(d) = d {
+            n_devices = n_devices.max(d + 1);
+        }
+    }
+
+    // Reconstruct batch spans and collect per-device crash times.
+    struct Span {
+        start_ms: f64,
+        end_ms: Option<f64>,
+        batch: u64,
+        n: usize,
+        order: Vec<usize>,
+    }
+    let mut spans: Vec<Vec<Span>> = (0..n_devices).map(|_| Vec::new()).collect();
+    let mut open: BTreeMap<(usize, u64), usize> = BTreeMap::new();
+    let mut downs: Vec<Vec<f64>> = (0..n_devices).map(|_| Vec::new()).collect();
+    let mut last_t = 0.0f64;
+    for ev in events {
+        if let Some(t) = ev.t_ms() {
+            last_t = last_t.max(t);
+        }
+        match ev {
+            TraceEvent::BatchStart { t_ms, device, batch, n, order } => {
+                open.insert((*device, *batch), spans[*device].len());
+                spans[*device].push(Span {
+                    start_ms: *t_ms,
+                    end_ms: None,
+                    batch: *batch,
+                    n: *n,
+                    order: order.clone(),
+                });
+            }
+            TraceEvent::BatchFinish { t_ms, device, batch, .. } => {
+                // A finish whose start was evicted from a ring is dropped:
+                // a span needs both ends.
+                if let Some(i) = open.remove(&(*device, *batch)) {
+                    spans[*device][i].end_ms = Some(*t_ms);
+                }
+            }
+            TraceEvent::Fault { t_ms, device, action } if action == "down" => {
+                downs[*device].push(*t_ms);
+            }
+            _ => {}
+        }
+    }
+    // Clip: a `down` fault interrupts any span still running on its
+    // device — the span ends at the crash, keeping lanes monotone even
+    // though the orphaned finish (if any) was stamped later.
+    for (d, dev_spans) in spans.iter_mut().enumerate() {
+        for sp in dev_spans.iter_mut() {
+            let crash = downs[d].iter().copied().find(|&t| t >= sp.start_ms);
+            sp.end_ms = match (sp.end_ms, crash) {
+                (Some(e), Some(c)) if c < e => Some(c),
+                (Some(e), _) => Some(e),
+                (None, Some(c)) => Some(c),
+                (None, None) => Some(last_t.max(sp.start_ms)),
+            };
+        }
+        dev_spans.sort_by(|a, b| a.start_ms.total_cmp(&b.start_ms));
+    }
+
+    let mut lines: Vec<String> = Vec::new();
+    // Lane names first (metadata events carry no timestamp).
+    for d in 0..n_devices {
+        lines.push(format!(
+            r#"{{"name":"thread_name","ph":"M","pid":0,"tid":{d},"args":{{"name":"device {d}"}}}}"#
+        ));
+    }
+    lines.push(format!(
+        r#"{{"name":"thread_name","ph":"M","pid":0,"tid":{n_devices},"args":{{"name":"control"}}}}"#
+    ));
+    // Batch spans, per device ascending, in start order.
+    for (d, dev_spans) in spans.iter().enumerate() {
+        for sp in dev_spans {
+            let end = sp.end_ms.unwrap_or(sp.start_ms);
+            lines.push(format!(
+                r#"{{"name":"batch {} (n={})","cat":"batch","ph":"B","pid":0,"tid":{d},"ts":{},"args":{{"order":{}}}}}"#,
+                sp.batch,
+                sp.n,
+                num(sp.start_ms * 1e3),
+                usizes(&sp.order)
+            ));
+            lines.push(format!(
+                r#"{{"name":"batch {} (n={})","cat":"batch","ph":"E","pid":0,"tid":{d},"ts":{}}}"#,
+                sp.batch,
+                sp.n,
+                num(end.max(sp.start_ms) * 1e3)
+            ));
+        }
+    }
+    // Control-lane instants, in stream (clock) order.
+    for ev in events {
+        let (t, name, extra) = match ev {
+            TraceEvent::Fault { t_ms, device, action } => {
+                (*t_ms, format!("fault: {}", esc(action)), format!(r#""device":{device}"#))
+            }
+            TraceEvent::Shed { t_ms, id, cause } => {
+                (*t_ms, format!("shed: {}", esc(cause)), format!(r#""id":{id}"#))
+            }
+            TraceEvent::Retry { t_ms, id, attempt, .. } => {
+                (*t_ms, format!("retry #{attempt}"), format!(r#""id":{id}"#))
+            }
+            TraceEvent::Admission { t_ms, id, policy, admitted: false, .. } => {
+                (*t_ms, format!("rejected: {}", esc(policy)), format!(r#""id":{id}"#))
+            }
+            TraceEvent::WorkerPanic { t_ms, device, .. } => {
+                (*t_ms, "panic".to_string(), format!(r#""device":{device}"#))
+            }
+            _ => continue,
+        };
+        lines.push(format!(
+            r#"{{"name":"{name}","cat":"control","ph":"i","s":"t","pid":0,"tid":{n_devices},"ts":{},"args":{{{extra}}}}}"#,
+            num(t * 1e3)
+        ));
+    }
+    format!("{{\"traceEvents\":[\n{}\n]}}\n", lines.join(",\n"))
+}
+
+/// What [`validate_chrome_trace`] measured while checking.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChromeSummary {
+    /// Total events (including metadata).
+    pub n_events: usize,
+    /// Completed `B`/`E` spans.
+    pub n_spans: usize,
+    /// Distinct `(pid, tid)` lanes carrying timestamped events.
+    pub n_lanes: usize,
+    /// Largest timestamp seen, in microseconds.
+    pub max_ts_us: f64,
+}
+
+/// Minimal structural validator for Chrome trace-event JSON: the
+/// top-level object must carry a `traceEvents` array; every non-metadata
+/// event needs `ph`/`pid`/`tid`/`ts`; `B`/`E` must balance per lane and
+/// timestamps must be monotone non-decreasing per lane (what timeline
+/// viewers actually require). Returns a [`ChromeSummary`] on success.
+pub fn validate_chrome_trace(text: &str) -> Result<ChromeSummary, String> {
+    let root = Json::parse(text).map_err(|e| format!("not JSON: {e}"))?;
+    let events = root
+        .get("traceEvents")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| "missing top-level `traceEvents` array".to_string())?;
+    let mut depth: BTreeMap<(i64, i64), usize> = BTreeMap::new();
+    let mut last_ts: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let mut n_spans = 0usize;
+    let mut max_ts = 0.0f64;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| format!("event {i}: missing `ph`"))?;
+        if ph == "M" {
+            continue;
+        }
+        let lane_of = |k: &str| -> Result<i64, String> {
+            e.get(k)
+                .and_then(|j| j.as_f64())
+                .map(|v| v as i64)
+                .ok_or_else(|| format!("event {i}: missing `{k}`"))
+        };
+        let lane = (lane_of("pid")?, lane_of("tid")?);
+        let ts = e
+            .get("ts")
+            .and_then(|j| j.as_f64())
+            .ok_or_else(|| format!("event {i}: missing `ts`"))?;
+        if let Some(&prev) = last_ts.get(&lane) {
+            if ts < prev {
+                return Err(format!(
+                    "event {i}: timestamp {ts} goes backwards on lane {lane:?} (last {prev})"
+                ));
+            }
+        }
+        last_ts.insert(lane, ts);
+        max_ts = max_ts.max(ts);
+        match ph {
+            "B" => *depth.entry(lane).or_insert(0) += 1,
+            "E" => {
+                let d = depth.entry(lane).or_insert(0);
+                if *d == 0 {
+                    return Err(format!("event {i}: `E` with no open span on lane {lane:?}"));
+                }
+                *d -= 1;
+                n_spans += 1;
+            }
+            _ => {}
+        }
+    }
+    for (lane, d) in &depth {
+        if *d != 0 {
+            return Err(format!("{d} unclosed span(s) on lane {lane:?}"));
+        }
+    }
+    Ok(ChromeSummary {
+        n_events: events.len(),
+        n_spans,
+        n_lanes: last_ts.len(),
+        max_ts_us: max_ts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Arrival { t_ms: 0.5, id: 0 },
+            TraceEvent::Admission {
+                t_ms: 0.5,
+                id: 0,
+                policy: "bound:4".into(),
+                admitted: true,
+                queue_depth: 1,
+                predicted_sojourn_ms: f64::NAN,
+            },
+            TraceEvent::WindowDecide {
+                t_ms: 1.0,
+                device: 0,
+                n_pending: 2,
+                queued_batches: 0,
+                close: true,
+            },
+            TraceEvent::ReorderDecision {
+                t_ms: 1.0,
+                device: 0,
+                batch: 0,
+                n: 2,
+                strategy: "local:64".into(),
+                evals: 64,
+                degraded: false,
+                chosen_ms: 9.25,
+                fifo_ms: 10.5,
+            },
+            TraceEvent::RouteDecision {
+                t_ms: 1.5,
+                id: 1,
+                device: 1,
+                policy: "jsq".into(),
+                outstanding: vec![2, 0],
+                free_at_ms: vec![10.0, 0.0],
+            },
+            TraceEvent::BatchStart { t_ms: 2.0, device: 0, batch: 0, n: 2, order: vec![1, 0] },
+            TraceEvent::BatchFinish { t_ms: 11.25, device: 0, batch: 0, makespan_ms: 9.25 },
+            TraceEvent::Fault { t_ms: 12.0, device: 1, action: "down".into() },
+            TraceEvent::Retry { t_ms: 12.5, id: 3, attempt: 2, backoff_ms: 4.0 },
+            TraceEvent::Shed { t_ms: 13.0, id: 3, cause: "retry-cap:4".into() },
+            TraceEvent::WorkerPanic { t_ms: 14.0, device: 0, message: "boom \"quoted\"".into() },
+            TraceEvent::Incumbent { eval: 128, best_ms: 9.25, strategy: "anneal:2000:17".into() },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_variant() {
+        for ev in sample_events() {
+            let line = to_jsonl_line(&ev);
+            let back = parse_jsonl_line(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            // NaN != NaN, so compare through a second serialization.
+            assert_eq!(line, to_jsonl_line(&back), "{line}");
+        }
+        let text = jsonl(&sample_events());
+        let back = events_from_jsonl(&text).unwrap();
+        assert_eq!(back.len(), sample_events().len());
+        assert_eq!(jsonl(&back), text);
+    }
+
+    #[test]
+    fn jsonl_rejects_hostile_lines_with_line_numbers() {
+        for bad in ["not json", "{}", r#"{"type":"zzz"}"#, r#"{"type":"arrival"}"#] {
+            assert!(parse_jsonl_line(bad).is_err(), "{bad}");
+        }
+        let err = events_from_jsonl("{\"type\":\"arrival\",\"t_ms\":0,\"id\":0}\nnope\n")
+            .unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+    }
+
+    #[test]
+    fn chrome_export_validates_and_builds_device_lanes() {
+        let json = chrome_trace_json(&sample_events());
+        let summary = validate_chrome_trace(&json).unwrap();
+        assert_eq!(summary.n_spans, 1);
+        // Lanes: device 0 (span) + control (instants). Device 1 had no
+        // timestamped span events, so it contributes only metadata.
+        assert!(summary.n_lanes >= 2, "{summary:?}");
+        assert!(json.contains(r#""name":"device 0""#), "{json}");
+        assert!(json.contains(r#""name":"device 1""#), "{json}");
+        assert!(json.contains(r#""name":"control""#), "{json}");
+        assert!(json.contains(r#""name":"fault: down""#), "{json}");
+        // µs conversion: batch start at 2 ms → ts 2000.
+        assert!(json.contains(r#""ph":"B","pid":0,"tid":0,"ts":2000"#), "{json}");
+    }
+
+    #[test]
+    fn chrome_export_clips_spans_at_device_crashes() {
+        // Batch starts at 10 on device 0, its finish would land at 30,
+        // but the device goes down at 15 and a post-recovery batch runs
+        // 20→25. Unclipped, lane 0 would go 10,30,20,25 — backwards.
+        let events = vec![
+            TraceEvent::BatchStart { t_ms: 10.0, device: 0, batch: 0, n: 1, order: vec![0] },
+            TraceEvent::Fault { t_ms: 15.0, device: 0, action: "down".into() },
+            TraceEvent::Fault { t_ms: 18.0, device: 0, action: "recover".into() },
+            TraceEvent::BatchStart { t_ms: 20.0, device: 0, batch: 1, n: 1, order: vec![0] },
+            TraceEvent::BatchFinish { t_ms: 25.0, device: 0, batch: 1, makespan_ms: 5.0 },
+            TraceEvent::BatchFinish { t_ms: 30.0, device: 0, batch: 0, makespan_ms: 20.0 },
+        ];
+        let json = chrome_trace_json(&events);
+        let summary = validate_chrome_trace(&json).unwrap();
+        assert_eq!(summary.n_spans, 2);
+        // The orphaned span ends at the crash (15 ms → 15000 µs).
+        assert!(json.contains(r#""ph":"E","pid":0,"tid":0,"ts":15000"#), "{json}");
+    }
+
+    #[test]
+    fn chrome_export_of_an_empty_stream_still_validates() {
+        let json = chrome_trace_json(&[]);
+        let summary = validate_chrome_trace(&json).unwrap();
+        assert_eq!(summary.n_spans, 0);
+        assert_eq!(summary.n_lanes, 0);
+    }
+
+    #[test]
+    fn validator_rejects_broken_traces() {
+        for (text, needle) in [
+            ("nope", "not JSON"),
+            ("{}", "traceEvents"),
+            (r#"{"traceEvents":[{"pid":0}]}"#, "missing `ph`"),
+            (r#"{"traceEvents":[{"ph":"B","pid":0,"tid":0}]}"#, "missing `ts`"),
+            (
+                r#"{"traceEvents":[{"ph":"E","pid":0,"tid":0,"ts":1}]}"#,
+                "no open span",
+            ),
+            (
+                r#"{"traceEvents":[{"ph":"B","pid":0,"tid":0,"ts":1}]}"#,
+                "unclosed",
+            ),
+            (
+                r#"{"traceEvents":[{"ph":"i","s":"t","pid":0,"tid":0,"ts":5},{"ph":"i","s":"t","pid":0,"tid":0,"ts":4}]}"#,
+                "backwards",
+            ),
+        ] {
+            let err = validate_chrome_trace(text).unwrap_err();
+            assert!(err.contains(needle), "`{needle}` not in: {err}");
+        }
+    }
+}

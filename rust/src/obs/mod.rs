@@ -1,0 +1,663 @@
+//! **Observability** — structured tracing threaded through every
+//! execution layer.
+//!
+//! End-of-run aggregates (`OnlineReport`, `FleetReport`, `BENCH_*.json`)
+//! say *what* happened; this module records *why*: every window-close
+//! verdict, admission decision, reorder outcome (incumbent vs FIFO),
+//! route choice (with the per-device load snapshot it saw), batch
+//! start/finish, fault, retry, shed and worker panic becomes a typed
+//! [`TraceEvent`] on the run's virtual clock (wall clock in the live
+//! coordinator). A [`TraceSink`] receives them; the registry spellings
+//! (the eighth [`crate::registry`] kind):
+//!
+//! | spelling | behavior |
+//! |---|---|
+//! | `none` | strict no-op: the engines skip event construction entirely |
+//! | `ring:<cap>` | bounded in-memory recorder keeping the last `cap` events |
+//! | `jsonl:<path>` | buffer JSON lines in memory; write `<path>` on [`TraceSink::flush`] |
+//!
+//! The contract that makes tracing safe to leave wired in everywhere is
+//! the same discipline `admission=none` established: **the sink
+//! observes, never perturbs**. With [`NoTrace`] every engine is
+//! bit-identical (timestamps and reports) *and allocation-free* versus
+//! the untraced entry points — all event construction sits behind one
+//! `if !sink.is_noop()` branch per site, and the public untraced
+//! functions literally delegate to the traced ones with a [`NoTrace`]
+//! sink (pinned in `tests/trace_observability.rs`). With `ring`/`jsonl`
+//! the event stream is bit-deterministic per (seed, config), so traces
+//! are replay artifacts, not approximations.
+//!
+//! [`export`] turns recorded streams into artifacts: JSON-lines
+//! round-tripping, Chrome trace-event JSON (one lane per device; loads
+//! in `chrome://tracing` and Perfetto) and a deterministic
+//! [`Counters`] snapshot. The CLI surfaces all of it as
+//! `--trace FILE[:SINK]` on `serve`/`fleet`/`fault`/`search` and
+//! `kreorder trace inspect FILE`.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+pub mod export;
+
+/// One observed decision or state transition, stamped with the run's
+/// virtual-clock time (`t_ms`; milliseconds since wall-clock service
+/// start in the live coordinator). Every variant carries its
+/// device/kernel provenance so a stream can be sliced per lane.
+///
+/// The serialized spelling (one JSON object per event) is
+/// [`export::to_jsonl_line`]; it round-trips through
+/// [`export::parse_jsonl_line`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A kernel arrived (was submitted).
+    Arrival { t_ms: f64, id: u64 },
+    /// An admission policy ruled on an arrival. `predicted_sojourn_ms`
+    /// is the priced bound the policy saw (`NaN` when unpriced).
+    Admission {
+        t_ms: f64,
+        id: u64,
+        policy: String,
+        admitted: bool,
+        queue_depth: usize,
+        predicted_sojourn_ms: f64,
+    },
+    /// A window policy ruled Close (`close = true`) or Wait, seeing
+    /// `n_pending` open kernels and `queued_batches` closed-but-unstarted
+    /// batches on `device`.
+    WindowDecide {
+        t_ms: f64,
+        device: usize,
+        n_pending: usize,
+        queued_batches: usize,
+        close: bool,
+    },
+    /// A reorder decision for a closing batch: the strategy spelling,
+    /// evaluations spent, whether the FIFO guard degraded the decision,
+    /// and the modeled makespans of the chosen order vs FIFO arrival
+    /// order (recomputed on a fresh backend — observation only).
+    ReorderDecision {
+        t_ms: f64,
+        device: usize,
+        batch: u64,
+        n: usize,
+        strategy: String,
+        evals: u64,
+        degraded: bool,
+        chosen_ms: f64,
+        fifo_ms: f64,
+    },
+    /// A routing policy placed kernel `id` on `device`, seeing the
+    /// per-device load snapshot (`outstanding` kernels and `free_at_ms`)
+    /// it decided against.
+    RouteDecision {
+        t_ms: f64,
+        id: u64,
+        device: usize,
+        policy: String,
+        outstanding: Vec<usize>,
+        free_at_ms: Vec<f64>,
+    },
+    /// A batch began service on `device` in launch order `order`
+    /// (positions into the batch).
+    BatchStart {
+        t_ms: f64,
+        device: usize,
+        batch: u64,
+        n: usize,
+        order: Vec<usize>,
+    },
+    /// A batch completed service.
+    BatchFinish { t_ms: f64, device: usize, batch: u64, makespan_ms: f64 },
+    /// A fault-plan action fired on `device` (`"down"`, `"recover"`,
+    /// `"slow:<factor>"`) or a launch failure was injected
+    /// (`"launchfail"`).
+    Fault { t_ms: f64, device: usize, action: String },
+    /// A failed launch was parked for its `attempt`-th retry after
+    /// `backoff_ms` of exponential backoff.
+    Retry { t_ms: f64, id: u64, attempt: u32, backoff_ms: f64 },
+    /// A kernel left the system unserved; `cause` is the stable
+    /// [`crate::fleet::ShedCause::to_csv`] spelling.
+    Shed { t_ms: f64, id: u64, cause: String },
+    /// A coordinator device worker caught a panic (live path only).
+    WorkerPanic { t_ms: f64, device: usize, message: String },
+    /// An anytime-search incumbent improved: `best_ms` at evaluation
+    /// `eval` under `strategy`. Emitted from recorded trajectories by
+    /// [`trajectory_events`]; carries no clock (search is offline).
+    Incumbent { eval: u64, best_ms: f64, strategy: String },
+}
+
+impl TraceEvent {
+    /// Stable machine spelling of the variant, used as the `"type"`
+    /// field of the JSON-lines form.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Arrival { .. } => "arrival",
+            TraceEvent::Admission { .. } => "admission",
+            TraceEvent::WindowDecide { .. } => "window",
+            TraceEvent::ReorderDecision { .. } => "reorder",
+            TraceEvent::RouteDecision { .. } => "route",
+            TraceEvent::BatchStart { .. } => "batch-start",
+            TraceEvent::BatchFinish { .. } => "batch-finish",
+            TraceEvent::Fault { .. } => "fault",
+            TraceEvent::Retry { .. } => "retry",
+            TraceEvent::Shed { .. } => "shed",
+            TraceEvent::WorkerPanic { .. } => "panic",
+            TraceEvent::Incumbent { .. } => "incumbent",
+        }
+    }
+
+    /// The event's clock stamp (`None` for [`TraceEvent::Incumbent`],
+    /// which is indexed by evaluation count, not time).
+    pub fn t_ms(&self) -> Option<f64> {
+        match self {
+            TraceEvent::Arrival { t_ms, .. }
+            | TraceEvent::Admission { t_ms, .. }
+            | TraceEvent::WindowDecide { t_ms, .. }
+            | TraceEvent::ReorderDecision { t_ms, .. }
+            | TraceEvent::RouteDecision { t_ms, .. }
+            | TraceEvent::BatchStart { t_ms, .. }
+            | TraceEvent::BatchFinish { t_ms, .. }
+            | TraceEvent::Fault { t_ms, .. }
+            | TraceEvent::Retry { t_ms, .. }
+            | TraceEvent::Shed { t_ms, .. }
+            | TraceEvent::WorkerPanic { t_ms, .. } => Some(*t_ms),
+            TraceEvent::Incumbent { .. } => None,
+        }
+    }
+}
+
+/// Receiver side of the tracing seam. Implementations must be cheap to
+/// call on the engines' hot paths and must never influence what the
+/// engines do: `record` has no return value the caller could branch on.
+///
+/// Engines check [`is_noop`](TraceSink::is_noop) **once** and skip all
+/// event construction when it holds — that branch is what makes
+/// `trace=none` allocation-free, not any property of [`NoTrace`]
+/// itself.
+pub trait TraceSink: Send {
+    /// Canonical registry spelling (reparsing it yields an equivalent
+    /// sink).
+    fn name(&self) -> String;
+
+    /// `true` only for [`NoTrace`]: callers skip event construction
+    /// entirely, which is what pins traced engines bit-identical and
+    /// allocation-free to the untraced ones under `none`.
+    fn is_noop(&self) -> bool {
+        false
+    }
+
+    /// Record one event. Must not fail and must not observe-then-act:
+    /// sinks never feed back into the run.
+    fn record(&mut self, ev: TraceEvent);
+
+    /// Commit buffered output (the `jsonl` sink writes its file here;
+    /// in-memory sinks are a no-op). Callers flush once, after the run.
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// `none`: the strict no-op sink. See [`TraceSink::is_noop`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoTrace;
+
+impl TraceSink for NoTrace {
+    fn name(&self) -> String {
+        "none".into()
+    }
+    fn is_noop(&self) -> bool {
+        true
+    }
+    fn record(&mut self, _ev: TraceEvent) {}
+}
+
+/// `ring:<cap>`: bounded in-memory recorder keeping the most recent
+/// `cap` events. The CLI's `--trace FILE:chrome` path records into a
+/// large ring and exports after the run.
+#[derive(Debug, Clone)]
+pub struct RingSink {
+    cap: usize,
+    buf: VecDeque<TraceEvent>,
+}
+
+impl RingSink {
+    /// `cap` is clamped to ≥ 1 (a zero-capacity recorder records
+    /// nothing and would silently violate the replay contract).
+    pub fn new(cap: usize) -> RingSink {
+        RingSink { cap: cap.max(1), buf: VecDeque::new() }
+    }
+
+    /// The retained events, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.buf.iter().cloned().collect()
+    }
+
+    /// Number of retained events (≤ cap).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been recorded (or everything was evicted).
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl TraceSink for RingSink {
+    fn name(&self) -> String {
+        format!("ring:{}", self.cap)
+    }
+    fn record(&mut self, ev: TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(ev);
+    }
+}
+
+/// `jsonl:<path>`: serialize each event to one JSON line
+/// ([`export::to_jsonl_line`]) in memory, and write the whole file on
+/// [`TraceSink::flush`]. Parsing the spelling never touches the
+/// filesystem — hostile-input tables parse arbitrary spellings — and
+/// neither does recording; only an explicit flush creates `<path>`.
+#[derive(Debug, Clone)]
+pub struct JsonlSink {
+    path: String,
+    lines: Vec<String>,
+}
+
+impl JsonlSink {
+    pub fn new(path: &str) -> JsonlSink {
+        JsonlSink { path: path.to_string(), lines: Vec::new() }
+    }
+
+    /// The serialized lines buffered so far (no trailing newline per
+    /// entry), for tests and in-process inspection.
+    pub fn lines(&self) -> &[String] {
+        &self.lines
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn name(&self) -> String {
+        format!("jsonl:{}", self.path)
+    }
+    fn record(&mut self, ev: TraceEvent) {
+        self.lines.push(export::to_jsonl_line(&ev));
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        let mut text = String::new();
+        for line in &self.lines {
+            text.push_str(line);
+            text.push('\n');
+        }
+        std::fs::write(&self.path, text)
+    }
+}
+
+/// Rejected trace-sink spelling; lists the valid forms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceParseError {
+    pub input: String,
+}
+
+impl fmt::Display for TraceParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown trace sink `{}` — valid sinks: none, ring:<cap>, \
+             jsonl:<path> (cap ≥ 1; path non-empty; parsing never touches \
+             the filesystem)",
+            self.input
+        )
+    }
+}
+
+impl std::error::Error for TraceParseError {}
+
+/// Parse a trace-sink spelling (see the module table). `ring` caps must
+/// be ≥ 1 with no trailing garbage; `jsonl` paths are everything after
+/// the first `:` and may themselves contain colons. Parsing never
+/// creates or opens files.
+pub fn parse_trace_sink(spec: &str) -> Result<Box<dyn TraceSink>, TraceParseError> {
+    let err = || TraceParseError { input: spec.to_string() };
+    let trimmed = spec.trim();
+    if trimmed == "none" {
+        return Ok(Box::new(NoTrace));
+    }
+    if let Some(rest) = trimmed.strip_prefix("ring:") {
+        let cap: usize = rest.parse().map_err(|_| err())?;
+        if cap == 0 {
+            return Err(err());
+        }
+        return Ok(Box::new(RingSink::new(cap)));
+    }
+    if let Some(path) = trimmed.strip_prefix("jsonl:") {
+        if path.is_empty() {
+            return Err(err());
+        }
+        return Ok(Box::new(JsonlSink::new(path)));
+    }
+    Err(err())
+}
+
+/// One line per registered trace-sink spelling, for `kreorder list
+/// --kind trace` and the shared registry cheat sheet.
+pub fn trace_help_table() -> String {
+    let rows: [(&str, &str); 3] = [
+        ("none", "strict no-op (default; engines bit-identical and allocation-free)"),
+        ("ring:<cap>", "bounded in-memory recorder keeping the last <cap> events"),
+        (
+            "jsonl:<path>",
+            "buffer one JSON line per event; write <path> on flush after the run",
+        ),
+    ];
+    let mut s = String::new();
+    for (name, desc) in rows {
+        s.push_str(&format!("  {name:<32} {desc}\n"));
+    }
+    s
+}
+
+/// Down-sample a recorded anytime-search trajectory into
+/// [`TraceEvent::Incumbent`] events: every `sample`-th improvement
+/// (`sample` clamped to ≥ 1) plus always the final incumbent, so the
+/// converged value is never sampled away. Deterministic: a pure
+/// function of the outcome.
+pub fn trajectory_events(out: &crate::search::SearchOutcome, sample: u64) -> Vec<TraceEvent> {
+    let step = sample.max(1) as usize;
+    let last = out.trajectory.len().wrapping_sub(1);
+    out.trajectory
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % step == 0 || *i == last)
+        .map(|(_, s)| TraceEvent::Incumbent {
+            eval: s.eval,
+            best_ms: s.best_ms,
+            strategy: out.strategy.clone(),
+        })
+        .collect()
+}
+
+/// Deterministic counters/gauges snapshot derived from an event stream
+/// — the `kreorder trace inspect` summary. All maps are
+/// [`std::collections::BTreeMap`] so rendering order is stable.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Counters {
+    /// Total events in the stream.
+    pub n_events: usize,
+    /// [`TraceEvent::Arrival`] count.
+    pub arrivals: u64,
+    /// Admission verdicts that admitted / rejected.
+    pub admitted: u64,
+    pub rejected: u64,
+    /// Batches started / finished.
+    pub batches_started: u64,
+    pub batches_finished: u64,
+    /// Kernels launched (sum of started-batch sizes).
+    pub kernels_launched: u64,
+    /// Kernels shed, keyed by stable cause spelling.
+    pub sheds_by_cause: std::collections::BTreeMap<String, u64>,
+    /// Queue depth at end of stream: arrivals − launched − shed
+    /// (negative only on truncated ring streams).
+    pub final_queue_depth: i64,
+    /// Kernels in flight (started, not yet finished) at end of stream,
+    /// and the high-water mark over the stream.
+    pub final_in_flight: usize,
+    pub max_in_flight: usize,
+    /// Fault actions, retries and worker panics observed.
+    pub faults: u64,
+    pub retries: u64,
+    pub panics: u64,
+    /// Reorder-decision evaluations spent, and that spend as a rate
+    /// over the stream's virtual span.
+    pub reorder_evals: u64,
+    pub evals_per_s: f64,
+    /// Stream span: max minus min clock stamp (0 for ≤ 1 stamped
+    /// events).
+    pub span_ms: f64,
+}
+
+impl Counters {
+    /// Fold an event stream into the snapshot. Pure and deterministic:
+    /// identical streams yield identical (bit-equal) snapshots.
+    pub fn from_events(events: &[TraceEvent]) -> Counters {
+        let mut c = Counters { n_events: events.len(), ..Counters::default() };
+        let mut launched: i64 = 0;
+        let mut shed_total: i64 = 0;
+        let mut in_flight_sizes: std::collections::BTreeMap<(usize, u64), usize> =
+            std::collections::BTreeMap::new();
+        let mut in_flight: usize = 0;
+        let (mut t_lo, mut t_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for ev in events {
+            if let Some(t) = ev.t_ms() {
+                t_lo = t_lo.min(t);
+                t_hi = t_hi.max(t);
+            }
+            match ev {
+                TraceEvent::Arrival { .. } => c.arrivals += 1,
+                TraceEvent::Admission { admitted, .. } => {
+                    if *admitted {
+                        c.admitted += 1;
+                    } else {
+                        c.rejected += 1;
+                    }
+                }
+                TraceEvent::ReorderDecision { evals, .. } => c.reorder_evals += *evals,
+                TraceEvent::BatchStart { device, batch, n, .. } => {
+                    c.batches_started += 1;
+                    c.kernels_launched += *n as u64;
+                    launched += *n as i64;
+                    in_flight_sizes.insert((*device, *batch), *n);
+                    in_flight += *n;
+                    c.max_in_flight = c.max_in_flight.max(in_flight);
+                }
+                TraceEvent::BatchFinish { device, batch, .. } => {
+                    c.batches_finished += 1;
+                    let n = in_flight_sizes.remove(&(*device, *batch)).unwrap_or(0);
+                    in_flight = in_flight.saturating_sub(n);
+                }
+                TraceEvent::Shed { cause, .. } => {
+                    shed_total += 1;
+                    *c.sheds_by_cause.entry(cause.clone()).or_insert(0) += 1;
+                }
+                TraceEvent::Fault { .. } => c.faults += 1,
+                TraceEvent::Retry { .. } => c.retries += 1,
+                TraceEvent::WorkerPanic { .. } => c.panics += 1,
+                TraceEvent::WindowDecide { .. }
+                | TraceEvent::RouteDecision { .. }
+                | TraceEvent::Incumbent { .. } => {}
+            }
+        }
+        c.final_queue_depth = c.arrivals as i64 - launched - shed_total;
+        c.final_in_flight = in_flight;
+        c.span_ms = if t_hi > t_lo { t_hi - t_lo } else { 0.0 };
+        c.evals_per_s = if c.span_ms > 0.0 {
+            c.reorder_evals as f64 / (c.span_ms / 1e3)
+        } else {
+            0.0
+        };
+        c
+    }
+
+    /// Multi-line human rendering with deterministic ordering.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{} events over {:.2} ms | {} arrivals | {} batches started, {} finished | \
+             {} kernels launched\n",
+            self.n_events,
+            self.span_ms,
+            self.arrivals,
+            self.batches_started,
+            self.batches_finished,
+            self.kernels_launched,
+        );
+        s.push_str(&format!(
+            "  queue depth (final) {:>6} | in flight (final/max) {}/{}\n",
+            self.final_queue_depth, self.final_in_flight, self.max_in_flight,
+        ));
+        s.push_str(&format!(
+            "  admission: {} admitted, {} rejected | faults {} | retries {} | panics {}\n",
+            self.admitted, self.rejected, self.faults, self.retries, self.panics,
+        ));
+        s.push_str(&format!(
+            "  reorder evals {} ({:.1} evals/s over the span)",
+            self.reorder_evals, self.evals_per_s,
+        ));
+        if !self.sheds_by_cause.is_empty() {
+            let total: u64 = self.sheds_by_cause.values().sum();
+            s.push_str(&format!("\n  sheds: {total} total"));
+            for (cause, n) in &self.sheds_by_cause {
+                s.push_str(&format!("\n    {cause:<24} {n}"));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev_arrival(t: f64, id: u64) -> TraceEvent {
+        TraceEvent::Arrival { t_ms: t, id }
+    }
+
+    #[test]
+    fn none_is_the_noop_and_names_itself() {
+        let mut s = parse_trace_sink("none").unwrap();
+        assert!(s.is_noop());
+        assert_eq!(s.name(), "none");
+        s.record(ev_arrival(0.0, 0));
+        assert!(s.flush().is_ok());
+    }
+
+    #[test]
+    fn ring_keeps_the_most_recent_cap_events() {
+        let mut r = RingSink::new(3);
+        assert!(!r.is_noop());
+        for i in 0..5 {
+            r.record(ev_arrival(i as f64, i));
+        }
+        assert_eq!(r.len(), 3);
+        let ids: Vec<u64> = r
+            .snapshot()
+            .iter()
+            .map(|e| match e {
+                TraceEvent::Arrival { id, .. } => *id,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+        assert_eq!(r.name(), "ring:3");
+        // Zero caps clamp rather than silently recording nothing.
+        assert_eq!(RingSink::new(0).name(), "ring:1");
+    }
+
+    #[test]
+    fn jsonl_buffers_in_memory_until_flush() {
+        let mut s = JsonlSink::new("/nonexistent-dir/never-created.jsonl");
+        s.record(ev_arrival(1.5, 7));
+        assert_eq!(s.lines().len(), 1);
+        assert!(s.lines()[0].contains("\"arrival\""));
+        // The path was never touched by parsing or recording; only
+        // flush would, and this one fails loudly instead of silently.
+        assert!(s.flush().is_err());
+    }
+
+    #[test]
+    fn hostile_spellings_are_rejected_with_the_echoed_input() {
+        for bad in [
+            "", " ", "zzz", "none:1", "ring", "ring:", "ring:0", "ring:x", "ring:-1",
+            "ring:4:9", "jsonl", "jsonl:", "🚀",
+        ] {
+            let e = parse_trace_sink(bad).unwrap_err();
+            assert!(e.to_string().contains(bad), "`{bad}`: {e}");
+            assert!(e.to_string().contains("valid sinks"), "{e}");
+        }
+    }
+
+    #[test]
+    fn canonical_names_reparse() {
+        for spec in ["none", "ring:256", "jsonl:/tmp/x.jsonl"] {
+            let s = parse_trace_sink(spec).unwrap();
+            assert_eq!(s.name(), spec);
+            assert_eq!(parse_trace_sink(&s.name()).unwrap().name(), spec);
+        }
+        // jsonl paths may contain further colons.
+        assert_eq!(
+            parse_trace_sink("jsonl:a:b.jsonl").unwrap().name(),
+            "jsonl:a:b.jsonl"
+        );
+    }
+
+    #[test]
+    fn help_table_names_every_spelling() {
+        let t = trace_help_table();
+        for name in ["none", "ring", "jsonl"] {
+            assert!(t.contains(name), "{t}");
+        }
+        assert_eq!(t.lines().count(), 3);
+    }
+
+    #[test]
+    fn counters_fold_a_stream_deterministically() {
+        let events = vec![
+            ev_arrival(0.0, 0),
+            ev_arrival(1.0, 1),
+            ev_arrival(2.0, 2),
+            TraceEvent::Admission {
+                t_ms: 2.0,
+                id: 2,
+                policy: "bound:1".into(),
+                admitted: false,
+                queue_depth: 2,
+                predicted_sojourn_ms: f64::NAN,
+            },
+            TraceEvent::Shed { t_ms: 2.0, id: 2, cause: "rejected:bound:1".into() },
+            TraceEvent::ReorderDecision {
+                t_ms: 3.0,
+                device: 0,
+                batch: 0,
+                n: 2,
+                strategy: "local:64".into(),
+                evals: 64,
+                degraded: false,
+                chosen_ms: 9.0,
+                fifo_ms: 10.0,
+            },
+            TraceEvent::BatchStart {
+                t_ms: 3.0,
+                device: 0,
+                batch: 0,
+                n: 2,
+                order: vec![1, 0],
+            },
+            TraceEvent::BatchFinish { t_ms: 12.0, device: 0, batch: 0, makespan_ms: 9.0 },
+        ];
+        let c = Counters::from_events(&events);
+        assert_eq!(c.n_events, 8);
+        assert_eq!(c.arrivals, 3);
+        assert_eq!(c.rejected, 1);
+        assert_eq!(c.kernels_launched, 2);
+        assert_eq!(c.final_queue_depth, 0);
+        assert_eq!(c.max_in_flight, 2);
+        assert_eq!(c.final_in_flight, 0);
+        assert_eq!(c.sheds_by_cause.get("rejected:bound:1"), Some(&1));
+        assert_eq!(c.reorder_evals, 64);
+        assert_eq!(c.span_ms, 12.0);
+        assert!((c.evals_per_s - 64.0 / 0.012).abs() < 1e-9);
+        assert_eq!(c, Counters::from_events(&events));
+        let r = c.render();
+        assert!(r.contains("3 arrivals"), "{r}");
+        assert!(r.contains("rejected:bound:1"), "{r}");
+    }
+
+    #[test]
+    fn empty_stream_counters_are_all_zero() {
+        let c = Counters::from_events(&[]);
+        assert_eq!(c, Counters::default());
+        assert_eq!(c.span_ms, 0.0);
+        assert_eq!(c.evals_per_s, 0.0);
+    }
+}

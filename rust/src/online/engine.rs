@@ -31,6 +31,7 @@ use super::OnlineReorderer;
 use crate::admission::{AdmissionPolicy, AdmissionState, NoAdmission};
 use crate::exec::ExecutionBackend;
 use crate::gpu::{GpuSpec, KernelProfile};
+use crate::obs::{NoTrace, TraceEvent, TraceSink};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -117,8 +118,47 @@ pub fn simulate_online(
 /// When the policy [`is_noop`](AdmissionPolicy::is_noop) (the `none`
 /// spelling) the entire gate is skipped — no occupancy snapshot, no
 /// backlog pricing, no float arithmetic — so `none` runs are
-/// **bit-identical** to [`simulate_online`].
+/// **bit-identical** to [`simulate_online`]. Equivalent to
+/// [`simulate_online_traced`] under the [`NoTrace`] sink.
 pub fn simulate_online_with_admission(
+    gpu: &GpuSpec,
+    source: Box<dyn ArrivalSource>,
+    window: Box<dyn WindowPolicy>,
+    reorderer: &OnlineReorderer,
+    make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
+    opts: &OnlineOpts,
+    admission: &mut dyn AdmissionPolicy,
+) -> OnlineReport {
+    let mut sink = NoTrace;
+    simulate_online_traced(
+        gpu,
+        source,
+        window,
+        reorderer,
+        make_backend,
+        opts,
+        admission,
+        &mut sink,
+    )
+}
+
+/// [`simulate_online_with_admission`] with a [`TraceSink`] observing
+/// every decision point: arrival, admission verdict, window close/wait,
+/// reorder decision (with chosen-vs-FIFO makespans recomputed on a
+/// fresh backend), batch start/finish and shed. The sink **observes,
+/// never perturbs**: all event construction sits behind one
+/// `!sink.is_noop()` branch, so runs under [`NoTrace`] are bit-identical
+/// and allocation-free versus the untraced entry points (which delegate
+/// here — pinned in `tests/trace_observability.rs`), and recorded
+/// streams are bit-deterministic per (seed, config).
+///
+/// [`TraceEvent::BatchFinish`] is emitted when the batch *starts* (the
+/// virtual-clock engine knows the makespan then) and stamped with the
+/// future finish time, so a stream's finish stamps can interleave with
+/// later-emitted, earlier-stamped events; consumers that need per-lane
+/// monotonicity reconstruct spans ([`crate::obs::export`]).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_online_traced(
     gpu: &GpuSpec,
     mut source: Box<dyn ArrivalSource>,
     mut window: Box<dyn WindowPolicy>,
@@ -126,7 +166,9 @@ pub fn simulate_online_with_admission(
     make_backend: &(dyn Fn() -> Box<dyn ExecutionBackend> + Sync),
     opts: &OnlineOpts,
     admission: &mut dyn AdmissionPolicy,
+    sink: &mut dyn TraceSink,
 ) -> OnlineReport {
+    let traced = !sink.is_noop();
     let mut backend = make_backend();
     let admission_name = admission.name();
     let gate_active = !admission.is_noop();
@@ -181,6 +223,15 @@ pub fn simulate_online_with_admission(
                     );
                     recheck_at = recheck_at_ms;
                 }
+            }
+            if traced {
+                sink.record(TraceEvent::WindowDecide {
+                    t_ms: now,
+                    device: 0,
+                    n_pending: pending.len(),
+                    queued_batches: queue.len(),
+                    close: close_now,
+                });
             }
         }
 
@@ -242,6 +293,21 @@ pub fn simulate_online_with_admission(
                             };
                             device_free_at = now + makespan;
                             device_busy_ms += makespan;
+                            if traced {
+                                sink.record(TraceEvent::BatchStart {
+                                    t_ms: now,
+                                    device: 0,
+                                    batch: b.batch,
+                                    n: b.members.len(),
+                                    order: b.order.clone(),
+                                });
+                                sink.record(TraceEvent::BatchFinish {
+                                    t_ms: now + makespan,
+                                    device: 0,
+                                    batch: b.batch,
+                                    makespan_ms: makespan,
+                                });
+                            }
                             for o in &report.outcomes {
                                 let m = &b.members[o.index];
                                 let dt = if o.finish_ms.is_nan() { 0.0 } else { o.finish_ms };
@@ -270,6 +336,9 @@ pub fn simulate_online_with_admission(
                         }
                         EV_ARRIVAL => {
                             let a = source.pop(now);
+                            if traced {
+                                sink.record(TraceEvent::Arrival { t_ms: now, id: a.id });
+                            }
                             // Admission gate: skipped entirely under
                             // `none` (bit-identity), priced only when
                             // the policy asks for it.
@@ -313,12 +382,23 @@ pub fn simulate_online_with_admission(
                                 } else {
                                     f64::NAN
                                 };
-                                admission.admit(&AdmissionState {
+                                let ok = admission.admit(&AdmissionState {
                                     now_ms: now,
                                     queue_depth: depth,
                                     oldest_wait_ms,
                                     predicted_sojourn_ms,
-                                })
+                                });
+                                if traced {
+                                    sink.record(TraceEvent::Admission {
+                                        t_ms: now,
+                                        id: a.id,
+                                        policy: admission_name.clone(),
+                                        admitted: ok,
+                                        queue_depth: depth,
+                                        predicted_sojourn_ms,
+                                    });
+                                }
+                                ok
                             } else {
                                 true
                             };
@@ -329,13 +409,21 @@ pub fn simulate_online_with_admission(
                                     profile: a.profile,
                                 });
                             } else {
+                                let cause = ShedCause::Rejected {
+                                    policy: admission_name.clone(),
+                                };
+                                if traced {
+                                    sink.record(TraceEvent::Shed {
+                                        t_ms: now,
+                                        id: a.id,
+                                        cause: cause.to_csv(),
+                                    });
+                                }
                                 shed.push(ShedRecord {
                                     id: a.id,
                                     arrival_ms: a.at_ms,
                                     attempts: 0,
-                                    cause: ShedCause::Rejected {
-                                        policy: admission_name.clone(),
-                                    },
+                                    cause,
                                 });
                                 // The kernel left the system: closed-loop
                                 // sources must not wait for it forever.
@@ -357,6 +445,26 @@ pub fn simulate_online_with_admission(
         decision_evals += decision.evals;
         if decision.degraded {
             n_degraded_decisions += 1;
+        }
+        if traced && !profiles.is_empty() {
+            // Price the chosen order and FIFO on a *fresh* backend:
+            // observation only, nothing the engine later uses.
+            let mut fresh = make_backend();
+            let mut prepared = fresh.prepare(gpu, &profiles);
+            let chosen_ms = prepared.execute_order(&decision.order);
+            let identity: Vec<usize> = (0..profiles.len()).collect();
+            let fifo_ms = prepared.execute_order(&identity);
+            sink.record(TraceEvent::ReorderDecision {
+                t_ms: now,
+                device: 0,
+                batch: next_batch,
+                n: profiles.len(),
+                strategy: reorderer.name(),
+                evals: decision.evals,
+                degraded: decision.degraded,
+                chosen_ms,
+                fifo_ms,
+            });
         }
         queue.push_back(Closed {
             batch: next_batch,

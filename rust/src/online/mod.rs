@@ -79,7 +79,9 @@ pub use arrivals::{
     arrival_help_table, Arrival, ArrivalParseError, ArrivalSource, ArrivalSpec, ClosedLoopSource,
     ReplaySource, Trace, TraceParseError,
 };
-pub use engine::{simulate_online, simulate_online_with_admission, OnlineOpts};
+pub use engine::{
+    simulate_online, simulate_online_traced, simulate_online_with_admission, OnlineOpts,
+};
 pub use oracle::{
     fifo_window_capacity_per_s, offline_oracle, OracleOutcome, ORACLE_EXACT_MAX_N,
 };

@@ -806,6 +806,13 @@ pub fn sweep_dag_with(
     merge_partials(partials)
 }
 
+/// Streaming-statistics sweep over the topological orders of `graph` on
+/// the fluid simulator with the default 4096-bin histogram. See
+/// [`sweep_stats_dag_with`].
+pub fn sweep_stats_dag(gpu: &GpuSpec, kernels: &[KernelProfile], graph: &DepGraph) -> SweepStats {
+    sweep_stats_dag_with(gpu, kernels, graph, &|| Box::new(SimulatorBackend::new()), 4096)
+}
+
 /// [`sweep_stats_with`] restricted to the topological orders of `graph`
 /// — the constant-memory spelling of [`sweep_dag_with`], with exact
 /// best/worst and a histogram for percentile ranks. The histogram

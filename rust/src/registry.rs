@@ -1,21 +1,22 @@
 //! **The unified string-registry front door** — one module that knows
 //! every name-to-object spelling the crate accepts.
 //!
-//! Seven subsystems grew seven string registries, each with its own
+//! Eight subsystems grew eight string registries, each with its own
 //! parse function, error type and help table: launch policies
 //! ([`crate::sched::registry`]), search strategies
 //! ([`crate::search::parse_strategy`]), route policies
 //! ([`crate::fleet::parse_route_policy`]), window policies
 //! ([`crate::online::parse_window_policy`]), arrival processes
 //! ([`crate::online::ArrivalSpec::parse`]), fault plans
-//! ([`crate::fault::FaultPlan::parse`]) and admission policies
-//! ([`crate::admission::parse_admission_policy`]). They all still exist
+//! ([`crate::fault::FaultPlan::parse`]), admission policies
+//! ([`crate::admission::parse_admission_policy`]) and trace sinks
+//! ([`crate::obs::parse_trace_sink`]). They all still exist
 //! and are still the single sources of truth for their spellings — this
 //! module adds the *uniform* view on top:
 //!
 //! * [`parse_policy`] / [`parse_strategy`] / [`parse_route`] /
 //!   [`parse_window`] / [`parse_arrivals`] / [`parse_fault_plan`] /
-//!   [`parse_admission`] —
+//!   [`parse_admission`] / [`parse_trace`] —
 //!   thin wrappers that convert every subsystem's error into one
 //!   [`ParseError`] carrying the registry kind, the echoed input, the
 //!   subsystem's own diagnostic, **and** that kind's cheat sheet of
@@ -34,6 +35,7 @@
 use crate::admission::{parse_admission_policy, AdmissionPolicy};
 use crate::fault::FaultPlan;
 use crate::fleet::{parse_route_policy, RoutePolicy};
+use crate::obs::{parse_trace_sink, TraceSink};
 use crate::online::{parse_window_policy, ArrivalSpec, WindowPolicy};
 use crate::sched::LaunchPolicy;
 use crate::search::SearchStrategy;
@@ -49,6 +51,7 @@ pub const KINDS: &[&str] = &[
     "arrivals",
     "fault-plan",
     "admission",
+    "trace",
 ];
 
 /// The registry kinds, for iteration ([`KINDS`] behind a function so
@@ -69,6 +72,7 @@ pub fn list(kind: &str) -> Option<String> {
         "arrivals" => Some(crate::online::arrival_help_table()),
         "fault-plan" => Some(crate::fault::fault_plan_help_table()),
         "admission" => Some(crate::admission::admission_help_table()),
+        "trace" => Some(crate::obs::trace_help_table()),
         _ => None,
     }
 }
@@ -152,6 +156,11 @@ pub fn parse_admission(s: &str) -> Result<Box<dyn AdmissionPolicy>, ParseError> 
     parse_admission_policy(s).map_err(|e| ParseError::new("admission", s, e))
 }
 
+/// [`crate::obs::parse_trace_sink`] with the uniform error.
+pub fn parse_trace(s: &str) -> Result<Box<dyn TraceSink>, ParseError> {
+    parse_trace_sink(s).map_err(|e| ParseError::new("trace", s, e))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,11 +183,12 @@ mod tests {
         assert!(parse_arrivals("poisson:80:1").is_ok());
         assert!(parse_fault_plan("crash:0@50:recover@200").is_ok());
         assert!(parse_admission("deadline:50").is_ok());
+        assert!(parse_trace("ring:256").is_ok());
     }
 
     #[test]
     fn uniform_errors_echo_input_kind_detail_and_cheatsheet() {
-        let cases: [(&str, ParseError); 7] = [
+        let cases: [(&str, ParseError); 8] = [
             ("policy", parse_policy("blorp").unwrap_err()),
             ("strategy", parse_strategy("blorp").unwrap_err()),
             ("route", parse_route("blorp").unwrap_err()),
@@ -186,6 +196,7 @@ mod tests {
             ("arrivals", parse_arrivals("blorp:1:2").unwrap_err()),
             ("fault-plan", parse_fault_plan("blorp:1@2").unwrap_err()),
             ("admission", parse_admission("blorp").unwrap_err()),
+            ("trace", parse_trace("blorp").unwrap_err()),
         ];
         for (kind, err) in cases {
             assert_eq!(err.kind, kind);
@@ -208,5 +219,6 @@ mod tests {
         assert!(list("arrivals").unwrap().contains("poisson"));
         assert!(list("fault-plan").unwrap().contains("crash"));
         assert!(list("admission").unwrap().contains("deadline"));
+        assert!(list("trace").unwrap().contains("jsonl"));
     }
 }

@@ -1,7 +1,7 @@
 //! Hostile-input pins for every string boundary the CLI exposes.
 //!
 //! Each registry parser (`FleetSpec`, `Trace`, window / route / search
-//! strategy spellings, arrival processes, fault plans) must turn
+//! strategy spellings, arrival processes, fault plans, trace sinks) must turn
 //! malformed input into an actionable `Err` — echoing the offending
 //! input or naming the violated rule, never panicking, never guessing.
 //! These are table tests: add a row when a fuzzer or an incident finds
@@ -10,6 +10,7 @@
 use kreorder::admission::parse_admission_policy;
 use kreorder::fault::FaultPlan;
 use kreorder::fleet::{parse_route_policy, FleetSpec};
+use kreorder::obs::parse_trace_sink;
 use kreorder::online::{parse_window_policy, ArrivalSpec, Trace};
 use kreorder::search::parse_strategy;
 use kreorder::workloads::{parse_deps, DepGraph};
@@ -182,6 +183,26 @@ fn admission_policies_reject_hostile_input() {
 }
 
 #[test]
+fn trace_sinks_reject_hostile_input() {
+    let hostile = [
+        "", " ", "zzz", "none:1", "ring", "ring:", "ring:0", "ring:x", "ring:-1", "ring:4:9",
+        "jsonl", "jsonl:", "🚀",
+    ];
+    for s in hostile {
+        let err = parse_trace_sink(s).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(&format!("`{s}`")), "input not echoed: {msg}");
+        assert!(msg.contains("valid sinks"), "{msg}");
+        assert_actionable(&msg, s, "trace sink");
+    }
+    // The valid spellings stay valid, and round-trip their names. The
+    // jsonl path is everything after the first `:`, colons included.
+    for s in ["none", "ring:64", "jsonl:/tmp/x.jsonl", "jsonl:a:b.jsonl"] {
+        assert_eq!(parse_trace_sink(s).unwrap().name(), s);
+    }
+}
+
+#[test]
 fn fault_plans_reject_hostile_input() {
     let hostile: [(&str, &str); 14] = [
         ("crash", "missing `:`"),
@@ -292,6 +313,7 @@ fn unified_registry_errors_are_uniform() {
         registry::parse_arrivals("blorp").unwrap_err(),
         registry::parse_fault_plan("blorp").unwrap_err(),
         registry::parse_admission("blorp").unwrap_err(),
+        registry::parse_trace("blorp").unwrap_err(),
     ];
     for err in errs {
         let msg = err.to_string();

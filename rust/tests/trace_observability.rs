@@ -1,0 +1,190 @@
+//! Acceptance pins for the observability layer (`kreorder::obs`):
+//!
+//! 1. **None-sink bit-identity + allocation parity** — each virtual-clock
+//!    engine handed the strict no-op sink produces a bit-identical report
+//!    and the exact same number of heap allocations as its untraced entry
+//!    point, on both model backends: the sink observes, never perturbs.
+//! 2. **Stream determinism** — `ring` and `jsonl` sinks capture
+//!    bit-identical event streams across two runs of the same
+//!    (seed, config), and the two sinks agree on the serialized stream.
+//! 3. **Export round-trips** — the JSONL stream reparses to the identical
+//!    event vector, and the Chrome trace-event JSON for a D=4 fleet run
+//!    passes the structural validator with one batch-span lane per
+//!    device.
+//!
+//! A counting global allocator wraps the system allocator; this file
+//! holds a single `#[test]` (its own test binary) so no concurrent test
+//! pollutes the counter.
+
+use kreorder::admission::NoAdmission;
+use kreorder::exec::{AnalyticBackend, ExecutionBackend, SimulatorBackend};
+use kreorder::fault::FaultConfig;
+use kreorder::fleet::{parse_route_policy, simulate_fleet_traced, FleetSpec};
+use kreorder::gpu::GpuSpec;
+use kreorder::obs::{export, JsonlSink, NoTrace, RingSink, TraceSink};
+use kreorder::online::{
+    parse_window_policy, simulate_online, simulate_online_traced, OnlineOpts, OnlineReorderer,
+    ReplaySource, Trace,
+};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn factory(backend: &str) -> Box<dyn Fn() -> Box<dyn ExecutionBackend> + Sync> {
+    match backend {
+        "sim" => Box::new(|| Box::new(SimulatorBackend::new()) as Box<dyn ExecutionBackend>),
+        "analytic" => Box::new(|| Box::new(AnalyticBackend::new()) as Box<dyn ExecutionBackend>),
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+/// One deterministic online run through the public untraced entry point.
+/// Returns the full report, serialized — `Debug` covers every field, so
+/// string equality pins bit-identity.
+fn online_untraced(backend: &str) -> String {
+    let gpu = GpuSpec::gtx580();
+    let trace = Trace::poisson("mixed", 32, 600.0, 7);
+    let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+    let window = parse_window_policy("linger:6:30").unwrap();
+    let reorderer = OnlineReorderer::search("local:0", 200).unwrap();
+    let f = factory(backend);
+    let opts = OnlineOpts::default();
+    let report = simulate_online(&gpu, source, window, &reorderer, f.as_ref(), &opts);
+    format!("{report:?}")
+}
+
+/// The identical run through the traced entry point with a caller-chosen
+/// sink.
+fn online_traced(backend: &str, sink: &mut dyn TraceSink) -> String {
+    let gpu = GpuSpec::gtx580();
+    let trace = Trace::poisson("mixed", 32, 600.0, 7);
+    let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+    let window = parse_window_policy("linger:6:30").unwrap();
+    let reorderer = OnlineReorderer::search("local:0", 200).unwrap();
+    let f = factory(backend);
+    let mut admission = NoAdmission;
+    let report = simulate_online_traced(
+        &gpu,
+        source,
+        window,
+        &reorderer,
+        f.as_ref(),
+        &OnlineOpts::default(),
+        &mut admission,
+        sink,
+    );
+    format!("{report:?}")
+}
+
+/// One deterministic D=4 fleet run with the given sink. Round-robin
+/// routing guarantees every device executes batches, so the Chrome
+/// export carries one batch-span lane per device.
+fn fleet_traced(sink: &mut dyn TraceSink) -> String {
+    let gpu = GpuSpec::gtx580();
+    let fleet = FleetSpec::parse("4").unwrap();
+    let trace = Trace::poisson("mixed", 48, 800.0, 13);
+    let source = Box::new(ReplaySource::from_trace(&trace, &gpu).unwrap());
+    let f = factory("sim");
+    let mut admission = NoAdmission;
+    let report = simulate_fleet_traced(
+        &fleet,
+        source,
+        parse_route_policy("roundrobin").unwrap(),
+        &|| parse_window_policy("linger:4:20").unwrap(),
+        &OnlineReorderer::search("local:0", 200).unwrap(),
+        f.as_ref(),
+        &OnlineOpts::default(),
+        &FaultConfig::default(),
+        &mut admission,
+        sink,
+    );
+    format!("{report:?}")
+}
+
+/// Allocation calls performed by `f`, plus its result.
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    let r = f();
+    let after = ALLOC_CALLS.load(Ordering::Relaxed);
+    (after - before, r)
+}
+
+#[test]
+fn tracing_observes_never_perturbs() {
+    // ---- 1. none-sink bit-identity + allocation parity ----------------
+    // The untraced entry points delegate to the traced engines with the
+    // no-op sink, so the two calls must match bit for bit AND allocation
+    // for allocation — any event construction hoisted out of the
+    // `if traced` guard shows up here as an allocation-count drift.
+    for backend in ["sim", "analytic"] {
+        // Warm-up absorbs one-time lazy initialization.
+        let _ = online_untraced(backend);
+        let (untraced_allocs, untraced_report) = count_allocs(|| online_untraced(backend));
+        let mut none = NoTrace;
+        let (none_allocs, none_report) = count_allocs(|| online_traced(backend, &mut none));
+        assert_eq!(
+            untraced_report, none_report,
+            "{backend}: none-sink run drifted from the untraced engine"
+        );
+        assert_eq!(
+            untraced_allocs, none_allocs,
+            "{backend}: none-sink run allocated differently from the untraced engine"
+        );
+    }
+
+    // ---- 2. ring/jsonl stream determinism per (seed, config) ----------
+    let mut ring_a = RingSink::new(100_000);
+    let report_a = fleet_traced(&mut ring_a);
+    let mut ring_b = RingSink::new(100_000);
+    let report_b = fleet_traced(&mut ring_b);
+    assert_eq!(report_a, report_b, "traced fleet runs must be bit-identical");
+    let events = ring_a.snapshot();
+    assert!(!events.is_empty(), "a traced fleet run must record events");
+    assert_eq!(events, ring_b.snapshot(), "ring streams drifted across runs");
+
+    let mut jsonl_a = JsonlSink::new("never-flushed-a.jsonl");
+    let _ = fleet_traced(&mut jsonl_a);
+    let mut jsonl_b = JsonlSink::new("never-flushed-b.jsonl");
+    let _ = fleet_traced(&mut jsonl_b);
+    assert_eq!(jsonl_a.lines(), jsonl_b.lines(), "jsonl streams drifted across runs");
+    // The two sink kinds agree on the serialized stream.
+    let ring_serialized = export::jsonl(&events);
+    let jsonl_serialized: String = jsonl_a.lines().iter().map(|l| format!("{l}\n")).collect();
+    assert_eq!(ring_serialized, jsonl_serialized, "ring and jsonl disagree on the stream");
+
+    // ---- 3. export round-trips ----------------------------------------
+    let reparsed = export::events_from_jsonl(&ring_serialized).unwrap();
+    assert_eq!(reparsed, events, "JSONL round-trip must be lossless");
+
+    let chrome = export::chrome_trace_json(&events);
+    let summary = export::validate_chrome_trace(&chrome).expect("exported trace must validate");
+    assert!(summary.n_spans > 0, "a fleet run must export batch spans");
+    assert_eq!(
+        summary.n_lanes, 4,
+        "round-robin over D=4 must put batch spans on every device lane"
+    );
+    assert!(summary.n_events >= 2 * summary.n_spans, "spans are B/E pairs");
+    assert!(summary.max_ts_us >= 0.0);
+}
